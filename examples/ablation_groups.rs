@@ -1,0 +1,46 @@
+//! Ablation example: sweep the GuidedQuant group count g and watch the
+//! layer-wise objective (Eq. 7) and perplexity respond — the interactive
+//! version of the Table 13 bench, on the tiny preset.
+//!
+//!   cargo run --release --example ablation_groups
+
+use guidedquant::cfg::{PipelineConfig, QuantConfig, QuantMethod};
+use guidedquant::coordinator::Pipeline;
+use guidedquant::data::Split;
+use guidedquant::report::{f, Table};
+
+fn main() -> anyhow::Result<()> {
+    let pipeline = Pipeline::new(PipelineConfig {
+        model: "tiny".into(),
+        out_dir: "target/ablation_example".into(),
+        train_steps: 100,
+        calib_batches: 6,
+        eval_batches: 8,
+        ..Default::default()
+    })?;
+    let mut ps = pipeline.init_params();
+    println!("training tiny for {} steps ...", pipeline.cfg.train_steps);
+    pipeline.train(&mut ps, pipeline.cfg.train_steps, 0)?;
+    let stats = pipeline.calib(&ps, true)?;
+    let fp = pipeline.perplexity(&ps, Split::Eval, "fwd_loss")?;
+
+    let mut table = Table::new(
+        &format!("GuidedQuant group sweep (tiny, LNQ 2-bit; fp32 ppl {fp:.3})"),
+        &["groups", "ppl_eval", "Δ vs layer-wise"],
+    );
+    let mut base = None;
+    for g in [0usize, 1, 2, 4] {
+        let layers =
+            pipeline.quantize(&ps, &stats, &QuantConfig::with(QuantMethod::Lnq, 2, g))?;
+        let qps = pipeline.apply_quantized(&ps, &layers);
+        let ppl = pipeline.perplexity(&qps, Split::Eval, "fwd_loss")?;
+        if g == 0 {
+            base = Some(ppl);
+        }
+        let delta = base.map(|b| ppl - b).unwrap_or(0.0);
+        let label = if g == 0 { "layer-wise (no GQ)".to_string() } else { format!("g={g}") };
+        table.row(vec![label, f(ppl, 3), f(delta, 3)]);
+    }
+    table.print();
+    Ok(())
+}

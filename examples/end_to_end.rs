@@ -1,0 +1,107 @@
+//! End-to-end driver (the repository's headline validation run):
+//!
+//!   1. trains a MiniLlama from scratch on the synthetic corpus — every
+//!      Adam step executes the AOT `train_step` HLO artifact from Rust,
+//!      and the loss curve is logged;
+//!   2. collects calibration statistics (grouped Fisher Hessians via the
+//!      L1 Pallas xtsx kernel inside `calib_stats`);
+//!   3. quantizes the model at 2 bits with SqueezeLLM, LNQ, LNQ+GuidedQuant
+//!      on the (layer, group) worker pool;
+//!   4. evaluates perplexity through the shared `fwd_loss` artifact;
+//!   5. serves batched requests from the quantized model and reports
+//!      throughput/latency.
+//!
+//!   cargo run --release --example end_to_end [-- --model small --steps 200]
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use guidedquant::cfg::{PipelineConfig, QuantConfig, QuantMethod};
+use guidedquant::cli::Args;
+use guidedquant::coordinator::Pipeline;
+use guidedquant::data::Split;
+use guidedquant::report::{f, Table};
+use guidedquant::serve::{build_serving_model, generate_batch, ServeFormat};
+use guidedquant::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let model = args.get_or("model", "small").to_string();
+    let steps = args.get_usize("steps", if model == "tiny" { 150 } else { 250 })?;
+
+    let cfg = PipelineConfig {
+        model: model.clone(),
+        out_dir: "target/e2e".into(),
+        train_steps: steps,
+        calib_batches: 8,
+        eval_batches: 12,
+        ..Default::default()
+    };
+    let pipeline = Pipeline::new(cfg)?;
+
+    // ---- 1. train -----------------------------------------------------
+    println!("== phase 1: training ({model}, {steps} steps via train_step artifact) ==");
+    let mut ps = pipeline.init_params();
+    let losses = pipeline.train(&mut ps, steps, (steps / 20).max(1))?;
+    println!("loss curve (every {} steps):", (steps / 16).max(1));
+    for (i, l) in losses.iter().enumerate().step_by((steps / 16).max(1)) {
+        println!("  step {i:4}: {l:.4}");
+    }
+
+    // ---- 2. calibration -------------------------------------------------
+    println!("\n== phase 2: calibration statistics (Pallas xtsx inside calib_stats) ==");
+    let stats = pipeline.calib(&ps, true)?;
+    println!(
+        "accumulated {} batches, {} layers, cache {}",
+        stats.batches,
+        stats.layers.len(),
+        guidedquant::util::human_bytes(stats.storage_bytes() as u64)
+    );
+
+    // ---- 3+4. quantize + evaluate ----------------------------------------
+    println!("\n== phase 3/4: quantize (2-bit) + evaluate ==");
+    let fp_eval = pipeline.perplexity(&ps, Split::Eval, "fwd_loss")?;
+    let fp_shift = pipeline.perplexity(&ps, Split::EvalShift, "fwd_loss")?;
+    let mut table = Table::new(
+        "end-to-end results (2-bit weight-only scalar)",
+        &["method", "avg_bits", "ppl_eval", "ppl_shift"],
+    );
+    table.row(vec!["original(fp32)".into(), "32".into(), f(fp_eval, 3), f(fp_shift, 3)]);
+    for (name, method, groups) in [
+        ("squeezellm", QuantMethod::SqueezeLlm, 0usize),
+        ("lnq", QuantMethod::Lnq, 0),
+        ("lnq+gquant", QuantMethod::Lnq, 4),
+    ] {
+        let layers = pipeline.quantize(&ps, &stats, &QuantConfig::with(method, 2, groups))?;
+        let qps = pipeline.apply_quantized(&ps, &layers);
+        table.row(vec![
+            name.into(),
+            f(pipeline.avg_bits(&ps, &layers), 2),
+            f(pipeline.perplexity(&qps, Split::Eval, "fwd_loss")?, 3),
+            f(pipeline.perplexity(&qps, Split::EvalShift, "fwd_loss")?, 3),
+        ]);
+    }
+    table.print();
+    table.save_csv("end_to_end").ok();
+
+    // ---- 5. serve ---------------------------------------------------------
+    println!("\n== phase 5: serving (non-uniform LUT format, 4-bit) ==");
+    let serving = build_serving_model(&ps, Some(&stats), ServeFormat::NonUniformScalar, 4)?;
+    let mut rng = Rng::new(1);
+    let prompts: Vec<Vec<u32>> = (0..4)
+        .map(|_| (0..16).map(|_| rng.below(serving.cfg.vocab) as u32).collect())
+        .collect();
+    let (outs, sstats) = generate_batch(&serving, &prompts, 32, pipeline.cfg.workers);
+    println!(
+        "served {} requests x 32 tokens: {:.1} tok/s (p50 {:.2} ms, p99 {:.2} ms), weights {}",
+        outs.len(),
+        sstats.tok_per_sec,
+        sstats.p50_ms,
+        sstats.p99_ms,
+        guidedquant::util::human_bytes(sstats.weight_bytes as u64)
+    );
+    println!("\nall five phases complete.");
+    for (k, v) in pipeline.metrics.snapshot() {
+        println!("  {k}: {v:.2}");
+    }
+    Ok(())
+}

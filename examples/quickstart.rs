@@ -1,0 +1,67 @@
+//! Quickstart: quantize one synthetic linear layer with every scalar
+//! method and print the layer-wise objective values — a 30-second tour of
+//! the library's core API (no artifacts needed).
+//!
+//!   cargo run --release --example quickstart
+
+use guidedquant::quant::gptq::Gptq;
+use guidedquant::quant::grid::rtn_quantize;
+use guidedquant::quant::guided::guided_quantize;
+use guidedquant::quant::lnq::Lnq;
+use guidedquant::quant::objective::proxy_loss;
+use guidedquant::quant::squeezellm::{squeezellm_quantize, SqueezeLlm};
+use guidedquant::quant::LayerQuantizer;
+use guidedquant::tensor::ops::matmul_tn;
+use guidedquant::tensor::Mat;
+use guidedquant::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(0);
+    let (n, d_in, d_out, bits) = (512usize, 64usize, 32usize, 2u32);
+
+    // A synthetic "layer": correlated activations + weights, like a real
+    // transformer linear sees.
+    let x = Mat::randn(n, d_in, 1.0, &mut rng);
+    let h = matmul_tn(&x, &x); // layer-wise Hessian H = X^T X
+    let w = Mat::randn(d_in, d_out, 1.0, &mut rng);
+
+    // Simulated end-loss output gradients -> per-group saliency Hessians
+    // (in the full pipeline these come from the calib_stats artifact).
+    let g = 4usize;
+    let mut guided_hs = Vec::new();
+    for k in 0..g {
+        let mut xs = x.clone();
+        for i in 0..n {
+            let sal = (1.0 + (i % (k + 2)) as f32).sqrt();
+            for v in xs.row_mut(i) {
+                *v *= sal;
+            }
+        }
+        guided_hs.push(matmul_tn(&xs, &xs));
+    }
+
+    println!("quantizing a {d_in}x{d_out} layer at {bits} bits\n");
+    println!("{:<28}{:>16}", "method", "objective Δ");
+
+    let report = |name: &str, w_hat: &Mat| {
+        println!("{name:<28}{:>16.2}", proxy_loss(&h, &w, w_hat));
+    };
+
+    report("rtn", &rtn_quantize(&w, bits).w_hat);
+    let sens = Mat::from_fn(d_in, d_out, |_, _| 1.0);
+    report(
+        "squeezellm (kmeans)",
+        &squeezellm_quantize(&w, &sens, &SqueezeLlm::new(bits))?.w_hat,
+    );
+    report("gptq (uniform)", &Gptq::new(bits).quantize(&h, &w)?.w_hat);
+    let lnq = Lnq::new(bits);
+    report("lnq", &lnq.quantize(&h, &w)?.w_hat);
+    report(
+        "lnq + guidedquant (g=4)",
+        &guided_quantize(&lnq, &guided_hs, &w)?.w_hat,
+    );
+
+    println!("\nlower is better; LNQ(+GQ) should win. Next: `make artifacts`");
+    println!("then `cargo run --release --example end_to_end` for the full pipeline.");
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Serving example: quantize a model into every serving format and serve a
+//! batch of requests from each, printing a latency/throughput comparison —
+//! the interactive version of the Table 2 bench.
+//!
+//!   cargo run --release --example serve_quantized [-- --model tiny --bits 4]
+
+use guidedquant::cfg::PipelineConfig;
+use guidedquant::cli::Args;
+use guidedquant::coordinator::Pipeline;
+use guidedquant::report::{f, Table};
+use guidedquant::serve::{build_serving_model, generate_batch, ServeFormat};
+use guidedquant::util::{human_bytes, Rng};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let model = args.get_or("model", "tiny").to_string();
+    let bits = args.get_usize("bits", 4)? as u32;
+    let requests = args.get_usize("requests", 6)?;
+    let gen_tokens = args.get_usize("gen-tokens", 32)?;
+
+    let pipeline = Pipeline::new(PipelineConfig {
+        model: model.clone(),
+        out_dir: "target/serve_example".into(),
+        train_steps: 60,
+        ..Default::default()
+    })?;
+    let mut ps = pipeline.init_params();
+    println!("training {model} briefly so generations aren't pure noise ...");
+    pipeline.train(&mut ps, pipeline.cfg.train_steps, 0)?;
+
+    let mut rng = Rng::new(3);
+    let prompts: Vec<Vec<u32>> = (0..requests)
+        .map(|_| (0..12).map(|_| rng.below(ps.cfg.vocab) as u32).collect())
+        .collect();
+
+    let mut table = Table::new(
+        &format!("serving formats ({model}, {bits}-bit, {requests} reqs × {gen_tokens} tok)"),
+        &["format", "tok/s", "p50_ms", "p99_ms", "weights", "kv"],
+    );
+    for format in [
+        ServeFormat::Fp32,
+        ServeFormat::UniformScalar,
+        ServeFormat::NonUniformScalar,
+        ServeFormat::Vector,
+        ServeFormat::Trellis,
+    ] {
+        let m = build_serving_model(&ps, None, format, bits)?;
+        let (_, stats) = generate_batch(&m, &prompts, gen_tokens, pipeline.cfg.workers);
+        table.row(vec![
+            format.name().into(),
+            f(stats.tok_per_sec, 1),
+            f(stats.p50_ms, 3),
+            f(stats.p99_ms, 3),
+            human_bytes(stats.weight_bytes as u64),
+            human_bytes(stats.kv_bytes as u64),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,250 @@
+"""AOT pipeline: lower every L2 graph to HLO *text* artifacts + manifest.
+
+HLO text (NOT lowered.compiler_ir("hlo") protos / .serialize()) is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects (proto.id() <= INT_MAX);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py and its README.
+
+Artifacts per model preset (default `small`), under artifacts/<model>/:
+  fwd_loss.hlo.txt          (params..., tokens) -> (loss_sum,)
+  fwd_loss_qa4kv4.hlo.txt   idem, activations+KV fake-quant W?A4KV4
+  fwd_loss_qa4kv16.hlo.txt  idem, W?A4KV16
+  train_step.hlo.txt        (params..., m..., v..., step, tokens) -> (loss, ...)
+  calib_stats.hlo.txt       (params..., tokens) -> (loss, [hs, diagf] per linear)
+  xtsx_demo.hlo.txt         (x, s) -> (hs,)              [L1 Pallas kernel]
+  lut_matmul_demo.hlo.txt   (x, codes, codebook) -> (y,) [L1 Pallas kernel]
+  manifest.txt              shapes + arg order, parsed by rust/src/runtime/
+
+Usage: cd python && python -m compile.aot --out ../artifacts [--model small]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .config import BATCHES, DEFAULT_GROUPS, PRESETS
+from .kernels.lut_matmul import lut_matmul
+from .kernels.xtsx import xtsx
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+class ManifestWriter:
+    """Line-based manifest (simple to parse from Rust without serde)."""
+
+    def __init__(self):
+        self.lines = []
+
+    def kv(self, key, *vals):
+        self.lines.append(" ".join([key, *map(str, vals)]))
+
+    def artifact(self, name, inputs, outputs):
+        self.kv("artifact", name)
+        for nm, dt, shape in inputs:
+            self.kv("  in", nm, dt, *shape)
+        for nm, dt, shape in outputs:
+            self.kv("  out", nm, dt, *shape)
+
+    def write(self, path):
+        with open(path, "w") as f:
+            f.write("\n".join(self.lines) + "\n")
+
+
+def lower_and_write(fn, arg_specs, out_path):
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def build(model_name: str, out_dir: str, groups: int, lr: float, verbose: bool = True):
+    cfg = PRESETS[model_name]
+    bc = BATCHES[model_name]
+    mdir = os.path.join(out_dir, model_name)
+    os.makedirs(mdir, exist_ok=True)
+
+    pspecs = cfg.param_specs()
+    param_args = [spec(s) for _, s in pspecs]
+    tok = spec((bc.batch, bc.seq), jnp.int32)
+
+    man = ManifestWriter()
+    man.kv("model", cfg.name)
+    man.kv("vocab", cfg.vocab)
+    man.kv("d_model", cfg.d_model)
+    man.kv("n_layers", cfg.n_layers)
+    man.kv("n_heads", cfg.n_heads)
+    man.kv("d_ff", cfg.d_ff)
+    man.kv("batch", bc.batch)
+    man.kv("seq", bc.seq)
+    man.kv("groups", groups)
+    man.kv("grad_scale", M.GRAD_SCALE)
+    man.kv("lr", lr)
+    for name, shape in pspecs:
+        man.kv("param", name, *shape)
+    for name, d_in, d_out in cfg.linear_specs():
+        man.kv("linear", name, d_in, d_out)
+
+    def log(name, nbytes):
+        if verbose:
+            print(f"  [{model_name}] {name}: {nbytes} chars")
+
+    # --- fwd_loss -----------------------------------------------------------
+    n = lower_and_write(
+        lambda *a: M.fwd_loss(cfg, list(a[:-1]), a[-1]),
+        [*param_args, tok],
+        os.path.join(mdir, "fwd_loss.hlo.txt"),
+    )
+    man.artifact(
+        "fwd_loss",
+        [("params", "f32", ("...",)), ("tokens", "i32", (bc.batch, bc.seq))],
+        [("loss_sum", "f32", ())],
+    )
+    log("fwd_loss", n)
+
+    # --- fwd_loss_qa variants ------------------------------------------------
+    for a_bits, kv_bits in [(4, 4), (4, 16), (8, 8)]:
+        nm = f"fwd_loss_qa{a_bits}kv{kv_bits}"
+        n = lower_and_write(
+            lambda *a, ab=a_bits, kb=kv_bits: M.fwd_loss_qa(cfg, ab, kb, list(a[:-1]), a[-1]),
+            [*param_args, tok],
+            os.path.join(mdir, nm + ".hlo.txt"),
+        )
+        man.artifact(
+            nm,
+            [("params", "f32", ("...",)), ("tokens", "i32", (bc.batch, bc.seq))],
+            [("loss_sum", "f32", ())],
+        )
+        log(nm, n)
+
+    # --- train_step -----------------------------------------------------------
+    sstep = spec((), jnp.float32)
+    n = lower_and_write(
+        lambda *a: M.train_step(
+            cfg,
+            lr,
+            list(a[: len(param_args)]),
+            list(a[len(param_args) : 2 * len(param_args)]),
+            list(a[2 * len(param_args) : 3 * len(param_args)]),
+            a[-2],
+            a[-1],
+        ),
+        [*param_args, *param_args, *param_args, sstep, tok],
+        os.path.join(mdir, "train_step.hlo.txt"),
+    )
+    man.artifact(
+        "train_step",
+        [
+            ("params", "f32", ("...",)),
+            ("m", "f32", ("...",)),
+            ("v", "f32", ("...",)),
+            ("step", "f32", ()),
+            ("tokens", "i32", (bc.batch, bc.seq)),
+        ],
+        [("loss", "f32", ()), ("params_m_v_step", "f32", ("...",))],
+    )
+    log("train_step", n)
+
+    # --- calib_stats ------------------------------------------------------------
+    n = lower_and_write(
+        lambda *a: M.calib_stats(cfg, groups, list(a[:-1]), a[-1]),
+        [*param_args, tok],
+        os.path.join(mdir, "calib_stats.hlo.txt"),
+    )
+    outs = [("loss_sum", "f32", ())]
+    for name, d_in, d_out in cfg.linear_specs():
+        outs.append((f"hs.{name}", "f32", (groups + 1, d_in, d_in)))
+        outs.append((f"diagf.{name}", "f32", (d_in, d_out)))
+    man.artifact(
+        "calib_stats",
+        [("params", "f32", ("...",)), ("tokens", "i32", (bc.batch, bc.seq))],
+        outs,
+    )
+    log("calib_stats", n)
+
+    # --- grad_taps (Fisher-structure analysis, Figs 3/4) ---------------------
+    n = lower_and_write(
+        lambda *a: M.grad_taps(cfg, list(a[:-1]), a[-1]),
+        [*param_args, tok],
+        os.path.join(mdir, "grad_taps.hlo.txt"),
+    )
+    outs = [("loss_sum", "f32", ())]
+    for name, d_in, d_out in cfg.linear_specs():
+        outs.append((f"x.{name}", "f32", (bc.tokens, d_in)))
+        outs.append((f"g.{name}", "f32", (bc.tokens, d_out)))
+    man.artifact(
+        "grad_taps",
+        [("params", "f32", ("...",)), ("tokens", "i32", (bc.batch, bc.seq))],
+        outs,
+    )
+    log("grad_taps", n)
+
+    # --- L1 kernel demo artifacts -------------------------------------------
+    nrows = bc.tokens
+    d = cfg.d_model
+    n = lower_and_write(
+        lambda x, s: (xtsx(x, s),),
+        [spec((nrows, d)), spec((groups + 1, nrows))],
+        os.path.join(mdir, "xtsx_demo.hlo.txt"),
+    )
+    man.artifact(
+        "xtsx_demo",
+        [("x", "f32", (nrows, d)), ("s", "f32", (groups + 1, nrows))],
+        [("hs", "f32", (groups + 1, d, d))],
+    )
+    log("xtsx_demo", n)
+
+    m_cb = 16  # 4-bit LUT
+    n = lower_and_write(
+        lambda x, c, cb: (lut_matmul(x, c, cb),),
+        [spec((nrows, d)), spec((d, d), jnp.int32), spec((d, m_cb))],
+        os.path.join(mdir, "lut_matmul_demo.hlo.txt"),
+    )
+    man.artifact(
+        "lut_matmul_demo",
+        [
+            ("x", "f32", (nrows, d)),
+            ("codes", "i32", (d, d)),
+            ("codebook", "f32", (d, m_cb)),
+        ],
+        [("y", "f32", (nrows, d))],
+    )
+    log("lut_matmul_demo", n)
+
+    man.write(os.path.join(mdir, "manifest.txt"))
+    if verbose:
+        print(f"  [{model_name}] manifest + {cfg.n_params()} params")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--model", default="all", choices=["all", *PRESETS])
+    ap.add_argument("--groups", type=int, default=DEFAULT_GROUPS)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+    models = list(PRESETS) if args.model == "all" else [args.model]
+    for mn in models:
+        print(f"lowering artifacts for model preset '{mn}' ...")
+        build(mn, args.out, args.groups, args.lr)
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Model/config presets shared by the L2 model, the AOT pipeline and tests.
+
+The Rust side (rust/src/cfg/presets.rs) mirrors these numbers exactly; the
+artifact manifest (artifacts/<model>/manifest.txt) is the source of truth the
+runtime checks against at load time.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_specs(self):
+        """(name, shape) for every parameter, in the canonical flat order.
+
+        Linear weights are stored as [d_in, d_out] (``Z = X @ W``), matching
+        the paper's notation and the Rust param store.
+        """
+        d, ff, v = self.d_model, self.d_ff, self.vocab
+        specs = [("tok_emb", (v, d))]
+        for l in range(self.n_layers):
+            p = f"layers.{l}."
+            specs += [
+                (p + "attn_norm", (d,)),
+                (p + "wq", (d, d)),
+                (p + "wk", (d, d)),
+                (p + "wv", (d, d)),
+                (p + "wo", (d, d)),
+                (p + "mlp_norm", (d,)),
+                (p + "wgate", (d, ff)),
+                (p + "wup", (d, ff)),
+                (p + "wdown", (ff, d)),
+            ]
+        specs += [("final_norm", (d,)), ("head", (d, v))]
+        return specs
+
+    def linear_specs(self):
+        """(name, d_in, d_out) for every *quantizable* linear, flat order.
+
+        These are the layers GuidedQuant operates on (7 per block, matching
+        Llama's q/k/v/o/gate/up/down). Embedding/head stay fp.
+        """
+        d, ff = self.d_model, self.d_ff
+        out = []
+        for l in range(self.n_layers):
+            p = f"layers.{l}."
+            out += [
+                (p + "wq", d, d),
+                (p + "wk", d, d),
+                (p + "wv", d, d),
+                (p + "wo", d, d),
+                (p + "wgate", d, ff),
+                (p + "wup", d, ff),
+                (p + "wdown", ff, d),
+            ]
+        return out
+
+    def n_params(self) -> int:
+        import math
+
+        return sum(math.prod(s) for _, s in self.param_specs())
+
+
+@dataclass(frozen=True)
+class BatchConfig:
+    batch: int
+    seq: int
+
+    @property
+    def tokens(self) -> int:
+        return self.batch * self.seq
+
+
+# Paper-analog family (Llama-2-7B/13B/70B -> tiny/small/base); see DESIGN.md §2.
+PRESETS = {
+    "tiny": ModelConfig("tiny", vocab=512, d_model=128, n_layers=2, n_heads=4, d_ff=256),
+    "small": ModelConfig("small", vocab=2048, d_model=256, n_layers=4, n_heads=8, d_ff=512),
+    "base": ModelConfig("base", vocab=4096, d_model=512, n_layers=6, n_heads=8, d_ff=1024),
+}
+
+BATCHES = {
+    "tiny": BatchConfig(batch=2, seq=64),
+    "small": BatchConfig(batch=4, seq=128),
+    "base": BatchConfig(batch=2, seq=128),
+}
+
+# Number of saliency groups g baked into the calib_stats artifact (paper: g=4
+# for 7B/13B). The artifact emits g+1 Gram matrices per linear: index 0 is the
+# unweighted H = X^T X (layer-wise objective), 1..g are the GuidedQuant H̄_k.
+DEFAULT_GROUPS = 4
+
+# Paper §3.2: gradients are scaled by a large constant before squaring to
+# avoid underflow; we keep their value.
+GRAD_SCALE = 1.0e3

@@ -1,0 +1,68 @@
+"""Pallas kernel: fused LUT dequant-matmul y = x @ dequant(codes, codebook).
+
+The serving hot path for non-uniform scalar quantization (paper Table 2,
+Any-Precision-LLM kernel analog). The CUDA version stages the per-channel
+look-up table in shared memory; the TPU rethink keeps the codebook block
+resident in VMEM, gathers the decoded weight tile with take_along_axis, and
+issues one MXU matmul per output-channel tile:
+
+  grid = (d_out // block_o,)
+  per program: x (n × d_in) resident, codes tile (d_in × block_o),
+  codebook tile (block_o × m); decode then (n × d_in) @ (d_in × block_o).
+
+VMEM at the `small` preset (n=512, d_in=512, block_o=128, m=16):
+x 1 MiB + decoded tile 0.25 MiB + codes tile 0.25 MiB — comfortable.
+
+interpret=True only on this CPU image (Mosaic custom-calls cannot run here).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, codes_ref, cb_ref, o_ref):
+    x = x_ref[...]            # (n, d_in)
+    codes = codes_ref[...]    # (d_in, block_o)
+    cb = cb_ref[...]          # (block_o, m)
+    # Decode: w[i, j] = cb[j, codes[i, j]]  -> gather along the m axis.
+    w = jnp.take_along_axis(cb, codes.T, axis=1).T  # (d_in, block_o)
+    o_ref[...] = jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_o", "interpret"))
+def lut_matmul(
+    x: jnp.ndarray,
+    codes: jnp.ndarray,
+    codebook: jnp.ndarray,
+    *,
+    block_o: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """x: (n, d_in) f32, codes: (d_in, d_out) int32, codebook: (d_out, m) f32.
+
+    Returns (n, d_out) f32; d_out must be divisible by block_o.
+    """
+    n, d_in = x.shape
+    d_in2, d_out = codes.shape
+    if d_in2 != d_in:
+        raise ValueError(f"codes d_in {d_in2} != x d_in {d_in}")
+    m = codebook.shape[1]
+    block_o = min(block_o, d_out)
+    if d_out % block_o != 0:
+        raise ValueError(f"d_out={d_out} not divisible by block_o={block_o}")
+    grid = (d_out // block_o,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, d_in), lambda j: (0, 0)),
+            pl.BlockSpec((d_in, block_o), lambda j: (0, j)),
+            pl.BlockSpec((block_o, m), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, block_o), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, d_out), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), codes.astype(jnp.int32), codebook.astype(jnp.float32))

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every Pallas kernel in this package has a reference implementation here;
+pytest (python/tests/test_kernels.py) asserts allclose between the two across
+a hypothesis-driven sweep of shapes, and the AOT pipeline's kernel-demo
+artifacts are validated against these before being written.
+"""
+
+import jax.numpy as jnp
+
+
+def xtsx_ref(x: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """Grouped weighted Gram matrices: out[g] = X^T · Diag(s[g]) · X.
+
+    x: (n, d_in) activations, s: (G, n) non-negative per-sample weights.
+    Returns (G, d_in, d_in). This is GuidedQuant's H̄_k (Algorithm 1, line 4)
+    with s[k] the group-averaged squared output gradients; s = 1 gives the
+    plain layer-wise Hessian H = X^T X.
+    """
+    x = x.astype(jnp.float32)
+    s = s.astype(jnp.float32)
+    return jnp.einsum("ni,gn,nj->gij", x, s, x, precision="highest")
+
+
+def dequant_ref(codes: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """Decode a LUT-coded weight matrix: W[i, j] = codebook[j, codes[i, j]]."""
+    # codebook: (d_out, m); codes: (d_in, d_out) -> gather along m per column.
+    gathered = jnp.take_along_axis(codebook, codes.T, axis=1)  # (d_out, d_in)
+    return gathered.T.astype(jnp.float32)
+
+
+def lut_matmul_ref(x: jnp.ndarray, codes: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """Non-uniform-scalar (LUT) dequant-matmul: y = x @ dequant(codes, codebook).
+
+    x: (n, d_in) f32, codes: (d_in, d_out) int32 in [0, m),
+    codebook: (d_out, m) f32 per-output-channel codebooks.
+    Returns (n, d_out) f32.
+    """
+    return jnp.matmul(x.astype(jnp.float32), dequant_ref(codes, codebook), precision="highest")
+
+
+def diag_fisher_ref(x: jnp.ndarray, grad_z: jnp.ndarray) -> jnp.ndarray:
+    """SqueezeLLM-style diagonal Fisher of one linear layer's weights.
+
+    F_diag[k, j] = sum_i (g[i, j] * x[i, k])^2 = (x^2)^T @ (g^2).
+    x: (n, d_in), grad_z: (n, d_out) -> (d_in, d_out).
+    """
+    x2 = jnp.square(x.astype(jnp.float32))
+    g2 = jnp.square(grad_z.astype(jnp.float32))
+    return jnp.matmul(x2.T, g2, precision="highest")
+
+
+def group_saliency_ref(grad_z: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """Group-averaged squared output gradients s_k (Algorithm 1, line 2).
+
+    grad_z: (n, d_out); channels are split into `groups` consecutive,
+    equally-sized groups (d_out % groups == 0). Returns (groups, n).
+    """
+    n, d_out = grad_z.shape
+    g2 = jnp.square(grad_z.astype(jnp.float32))
+    g2 = g2.reshape(n, groups, d_out // groups)
+    return jnp.mean(g2, axis=2).T

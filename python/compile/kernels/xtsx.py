@@ -1,0 +1,66 @@
+"""Pallas kernel: grouped weighted Gram accumulation H̄_k = X^T·Diag(s_k)·X.
+
+This is GuidedQuant's compute hot spot (Algorithm 1, line 4): for every
+linear layer the calibration pass reduces n activation rows into g+1 small
+(d_in × d_in) Gram matrices. On the authors' GPUs this is a batched cuBLAS
+GEMM; the TPU rethink (DESIGN.md §Hardware-Adaptation) tiles for VMEM:
+
+  grid = (G, n // block_n)   # group-major, row-blocks innermost
+  each program holds one (block_n × d_in) X tile, the (1 × block_n) weight
+  slice and the full (d_in × d_in) f32 accumulator in VMEM, and feeds the
+  MXU with a single (d_in × block_n) @ (block_n × d_in) block product.
+
+VMEM budget at the paper-analog `small` preset (worst d_in = 512):
+512·512·4B accumulator (1 MiB) + 256·512·4B tile (0.5 MiB) — far inside the
+~16 MiB envelope; at real-LLM d_in the accumulator would be tiled 512² too.
+
+MUST be lowered with interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, o_ref):
+    # Zero the accumulator when entering a fresh group (innermost dim restarts).
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # (block_n, d_in)
+    s = s_ref[...]  # (1, block_n)
+    # Weighted block product on the MXU: (d_in, bn) @ (bn, d_in).
+    xw = x * s[0][:, None]
+    o_ref[...] += jnp.dot(x.T, xw, preferred_element_type=jnp.float32)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def xtsx(x: jnp.ndarray, s: jnp.ndarray, *, block_n: int = 256, interpret: bool = True) -> jnp.ndarray:
+    """out[g] = X^T·Diag(s[g])·X via a Pallas grid over (groups, row blocks).
+
+    x: (n, d_in) f32, s: (G, n) f32; n must be divisible by block_n.
+    Returns (G, d_in, d_in) f32.
+    """
+    n, d_in = x.shape
+    g = s.shape[0]
+    if s.shape[1] != n:
+        raise ValueError(f"s rows {s.shape} do not match x rows {n}")
+    block_n = min(block_n, n)
+    if n % block_n != 0:
+        raise ValueError(f"n={n} not divisible by block_n={block_n}")
+    grid = (g, n // block_n)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d_in), lambda gi, j: (j, 0)),
+            pl.BlockSpec((1, block_n), lambda gi, j: (gi, j)),
+        ],
+        out_specs=pl.BlockSpec((1, d_in, d_in), lambda gi, j: (gi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, d_in, d_in), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), s.astype(jnp.float32))

@@ -1,0 +1,297 @@
+"""L2: MiniLlama — the paper-analog transformer, in JAX (build-time only).
+
+A Llama-style decoder (RMSNorm, RoPE, SwiGLU MLP, untied head) whose seven
+per-block linears (q/k/v/o/gate/up/down) are the quantization targets, exactly
+mirroring the layers GuidedQuant operates on in Llama-2.
+
+Everything here is lowered once by aot.py into HLO-text artifacts:
+  * fwd_loss      — summed next-token cross-entropy (perplexity eval path)
+  * fwd_loss_qa   — same with activation + KV-cache fake-quant (W&A eval)
+  * train_step    — one Adam step (the Rust coordinator drives training)
+  * calib_stats   — loss gradients tapped at every linear output, reduced to
+                    GuidedQuant saliencies, grouped Hessians (via the Pallas
+                    xtsx kernel) and the SqueezeLLM diagonal Fisher.
+
+Parameters flow as a flat list of arrays in the canonical order of
+config.ModelConfig.param_specs(); the Rust runtime feeds the same order.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .config import GRAD_SCALE, ModelConfig
+from .kernels.ref import diag_fisher_ref, group_saliency_ref
+from .kernels.xtsx import xtsx
+
+LINEARS_PER_BLOCK = 7  # q, k, v, o, gate, up, down
+
+# ---------------------------------------------------------------------------
+# Parameter handling
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Flat list of f32 arrays in param_specs() order (scaled normal init)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            params.append(jax.random.normal(sub, shape, jnp.float32) * (fan_in**-0.5))
+    return params
+
+
+def unflatten(cfg: ModelConfig, flat):
+    """Flat param list -> dict keyed by param name."""
+    names = [n for n, _ in cfg.param_specs()]
+    assert len(names) == len(flat), (len(names), len(flat))
+    return dict(zip(names, flat))
+
+
+# ---------------------------------------------------------------------------
+# Model pieces
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, gamma, eps=1e-5):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gamma
+
+
+def rope(x, theta: float):
+    """Rotary embedding over (B, S, H, hd) with pairwise (even, odd) rotation."""
+    b, s, h, hd = x.shape
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs[None, :]  # (S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos[None, :, None, :]
+    sin = sin[None, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _fake_quant_sym(x, bits: int):
+    """Per-token (last-axis) symmetric uniform fake-quant, round-to-nearest."""
+    if bits >= 16:
+        return x
+    qmax = 2.0 ** (bits - 1) - 1.0
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    return jnp.round(x / scale).clip(-qmax - 1, qmax) * scale
+
+
+def forward(cfg: ModelConfig, params, tokens, taps=None, a_bits: int = 16, kv_bits: int = 16):
+    """Logits + (layer inputs X, linear outputs Z) for every linear.
+
+    tokens: (B, S) int32. `taps` is an optional list of zero arrays (one per
+    linear, shape (B, S, d_out)) added to each linear output; differentiating
+    w.r.t. them yields the end-loss output gradients ∂ℓ/∂Z (paper Eq. 4).
+    a_bits / kv_bits < 16 enable the activation / KV fake-quant used by the
+    weight-and-activation eval artifact (QuaRot/SpinQuant setting).
+
+    Returns (logits, xs, zs) with xs[i] the input activations of linear i.
+    """
+    p = unflatten(cfg, params)
+    b, s = tokens.shape
+    h = cfg.n_heads
+    hd = cfg.head_dim
+
+    def aq(x):
+        return _fake_quant_sym(x, a_bits)
+
+    xs, zs = [], []
+    ti = 0
+
+    def linear(x_in, w, record_x):
+        nonlocal ti
+        z = jnp.matmul(aq(x_in), w)
+        if taps is not None:
+            z = z + taps[ti]
+        xs.append(record_x)
+        zs.append(z)
+        ti += 1
+        return z
+
+    x = p["tok_emb"][tokens]  # (B, S, d)
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    neg = jnp.finfo(jnp.float32).min
+    for l in range(cfg.n_layers):
+        pre = f"layers.{l}."
+        hpre = rmsnorm(x, p[pre + "attn_norm"])
+        q = linear(hpre, p[pre + "wq"], hpre)
+        k = linear(hpre, p[pre + "wk"], hpre)
+        v = linear(hpre, p[pre + "wv"], hpre)
+        q = rope(q.reshape(b, s, h, hd), cfg.rope_theta)
+        k = rope(k.reshape(b, s, h, hd), cfg.rope_theta)
+        v = v.reshape(b, s, h, hd)
+        if kv_bits < 16:
+            k = _fake_quant_sym(k, kv_bits)
+            v = _fake_quant_sym(v, kv_bits)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+        att = jnp.where(mask[None, None] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, cfg.d_model)
+        o = linear(ctx, p[pre + "wo"], ctx)
+        x = x + o
+        hpre2 = rmsnorm(x, p[pre + "mlp_norm"])
+        g = linear(hpre2, p[pre + "wgate"], hpre2)
+        u = linear(hpre2, p[pre + "wup"], hpre2)
+        act = jax.nn.silu(g) * u
+        dwn = linear(act, p[pre + "wdown"], act)
+        x = x + dwn
+    x = rmsnorm(x, p["final_norm"])
+    logits = jnp.matmul(aq(x), p["head"])
+    return logits, xs, zs
+
+
+def loss_sum(cfg: ModelConfig, params, tokens, taps=None, a_bits: int = 16, kv_bits: int = 16):
+    """Summed next-token cross-entropy over B×(S−1) positions."""
+    logits, _, _ = forward(cfg, params, tokens, taps, a_bits, kv_bits)
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll)
+
+
+def fwd_loss(cfg: ModelConfig, params, tokens):
+    return (loss_sum(cfg, params, tokens),)
+
+
+def fwd_loss_qa(cfg: ModelConfig, a_bits: int, kv_bits: int, params, tokens):
+    """W&A eval path: activations/KV fake-quantized in-graph (weights are
+    fake-quantized on the Rust side before being fed)."""
+    return (loss_sum(cfg, params, tokens, a_bits=a_bits, kv_bits=kv_bits),)
+
+
+# ---------------------------------------------------------------------------
+# Training (driven from Rust through the train_step artifact)
+# ---------------------------------------------------------------------------
+
+
+def train_step(cfg: ModelConfig, lr: float, params, m, v, step, tokens):
+    """One Adam step on mean CE. Returns (loss, params', m', v', step+1)."""
+    b, s = tokens.shape
+    ntok = b * (s - 1)
+
+    def mean_loss(ps):
+        return loss_sum(cfg, ps, tokens) / float(ntok)
+
+    loss, grads = jax.value_and_grad(mean_loss)(params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    step = step + 1.0
+    bc1 = 1.0 - b1**step
+    bc2 = 1.0 - b2**step
+    new_p, new_m, new_v = [], [], []
+    for pi, mi, vi, gi in zip(params, m, v, grads):
+        mi = b1 * mi + (1.0 - b1) * gi
+        vi = b2 * vi + (1.0 - b2) * jnp.square(gi)
+        upd = (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+        new_p.append(pi - lr * upd)
+        new_m.append(mi)
+        new_v.append(vi)
+    return (loss, *new_p, *new_m, *new_v, step)
+
+
+# ---------------------------------------------------------------------------
+# Calibration statistics (GuidedQuant Algorithm 1, lines 2 & 4)
+# ---------------------------------------------------------------------------
+
+
+def calib_stats(cfg: ModelConfig, groups: int, params, tokens, *, use_pallas: bool = True):
+    """Per-linear quantization statistics for one calibration batch.
+
+    For every quantizable linear (7 per block, flat order):
+      hs    — (groups+1, d_in, d_in): index 0 is H = X^T X (layer-wise
+              objective), 1..g are GuidedQuant's group-averaged H̄_k built
+              from GRAD_SCALE-scaled end-loss output gradients.
+      diagf — (d_in, d_out): SqueezeLLM diagonal Fisher of the weights.
+
+    Returns (loss_sum, hs_0, diagf_0, hs_1, diagf_1, ...). The Rust driver
+    accumulates these over calibration batches.
+    """
+    n_lin = cfg.n_layers * LINEARS_PER_BLOCK
+    b, s = tokens.shape
+    specs = cfg.linear_specs()
+    taps = [jnp.zeros((b, s, d_out), jnp.float32) for _, _, d_out in specs]
+
+    def tapped_loss(tps):
+        logits, xs, _ = forward(cfg, params, tokens, tps)
+        logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+        tgt = tokens[:, 1:]
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        return jnp.sum(nll) / float(b * (s - 1)), xs
+
+    loss, pullback, xs = jax.vjp(tapped_loss, taps, has_aux=True)
+    grads = pullback(jnp.float32(1.0))[0]
+
+    outs = [loss * float(b * (s - 1))]
+    for i in range(n_lin):
+        _, d_in, d_out = specs[i]
+        x = xs[i].reshape(b * s, d_in)
+        gz = grads[i].reshape(b * s, d_out) * GRAD_SCALE
+        sal = group_saliency_ref(gz, groups)           # (g, n)
+        ones = jnp.ones((1, b * s), jnp.float32)
+        sall = jnp.concatenate([ones, sal], axis=0)    # (g+1, n)
+        if use_pallas:
+            hs = xtsx(x, sall)                         # L1 Pallas kernel
+        else:
+            from .kernels.ref import xtsx_ref
+
+            hs = xtsx_ref(x, sall)
+        outs.append(hs)
+        outs.append(diag_fisher_ref(x, gz))
+    return tuple(outs)
+
+
+def grad_taps(cfg: ModelConfig, params, tokens):
+    """Raw per-linear activations X and end-loss output gradients ∂ℓ/∂Z
+    (GRAD_SCALE-scaled), flattened over the batch. Powers the Figure 3/4
+    Fisher-structure analysis and the Rust cross-validation of calib_stats.
+
+    Returns (loss_sum, x_0, g_0, x_1, g_1, ...).
+    """
+    b, s = tokens.shape
+    specs = cfg.linear_specs()
+    taps = [jnp.zeros((b, s, d_out), jnp.float32) for _, _, d_out in specs]
+
+    def tapped_loss(tps):
+        logits, xs, _ = forward(cfg, params, tokens, tps)
+        logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+        tgt = tokens[:, 1:]
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        return jnp.sum(nll) / float(b * (s - 1)), xs
+
+    loss, pullback, xs = jax.vjp(tapped_loss, taps, has_aux=True)
+    grads = pullback(jnp.float32(1.0))[0]
+    outs = [loss * float(b * (s - 1))]
+    for i, (_, d_in, d_out) in enumerate(specs):
+        outs.append(xs[i].reshape(b * s, d_in))
+        outs.append(grads[i].reshape(b * s, d_out) * GRAD_SCALE)
+    return tuple(outs)
+
+
+# ---------------------------------------------------------------------------
+# Jit wrappers used by aot.py and tests
+# ---------------------------------------------------------------------------
+
+
+def jit_fwd_loss(cfg):
+    return jax.jit(functools.partial(fwd_loss, cfg))
+
+
+def jit_fwd_loss_qa(cfg, a_bits, kv_bits):
+    return jax.jit(functools.partial(fwd_loss_qa, cfg, a_bits, kv_bits))
+
+
+def jit_train_step(cfg, lr):
+    return jax.jit(functools.partial(train_step, cfg, lr))
+
+
+def jit_calib_stats(cfg, groups, use_pallas=True):
+    return jax.jit(functools.partial(calib_stats, cfg, groups, use_pallas=use_pallas))

@@ -1,0 +1,154 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; numpy.testing pins tolerances. These tests
+are the correctness signal for everything the artifacts compute.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.lut_matmul import lut_matmul
+from compile.kernels.xtsx import xtsx
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rnd(rng, *shape):
+    return np.asarray(rng.standard_normal(shape), np.float32)
+
+
+# ---------------------------------------------------------------------------
+# xtsx — grouped weighted Gram
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_blocks=st.integers(1, 4),
+    block_n=st.sampled_from([8, 16, 32]),
+    d_in=st.sampled_from([4, 8, 24, 64]),
+    g=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_xtsx_matches_ref(n_blocks, block_n, d_in, g, seed):
+    rng = np.random.default_rng(seed)
+    n = n_blocks * block_n
+    x = rnd(rng, n, d_in)
+    s = np.abs(rnd(rng, g, n))
+    got = np.asarray(xtsx(jnp.asarray(x), jnp.asarray(s), block_n=block_n))
+    want = np.asarray(ref.xtsx_ref(jnp.asarray(x), jnp.asarray(s)))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_xtsx_identity_weights_is_gram():
+    rng = np.random.default_rng(0)
+    x = rnd(rng, 64, 16)
+    s = np.ones((1, 64), np.float32)
+    got = np.asarray(xtsx(jnp.asarray(x), jnp.asarray(s), block_n=32))[0]
+    np.testing.assert_allclose(got, x.T @ x, rtol=1e-4, atol=1e-4)
+
+
+def test_xtsx_output_is_symmetric_psd():
+    rng = np.random.default_rng(1)
+    x = rnd(rng, 128, 32)
+    s = np.abs(rnd(rng, 3, 128))
+    hs = np.asarray(xtsx(jnp.asarray(x), jnp.asarray(s), block_n=64))
+    for h in hs:
+        np.testing.assert_allclose(h, h.T, rtol=1e-5, atol=1e-5)
+        evals = np.linalg.eigvalsh(h.astype(np.float64))
+        assert evals.min() > -1e-3 * max(1.0, evals.max())
+
+
+def test_xtsx_bf16_inputs_upcast():
+    rng = np.random.default_rng(2)
+    x = rnd(rng, 32, 8)
+    s = np.abs(rnd(rng, 2, 32))
+    got = np.asarray(xtsx(jnp.asarray(x, jnp.bfloat16), jnp.asarray(s), block_n=16))
+    want = np.asarray(ref.xtsx_ref(jnp.asarray(x, jnp.bfloat16).astype(jnp.float32), jnp.asarray(s)))
+    assert got.dtype == np.float32
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_xtsx_rejects_bad_shapes():
+    x = jnp.zeros((10, 4))
+    with pytest.raises(ValueError):
+        xtsx(x, jnp.zeros((1, 11)))
+    with pytest.raises(ValueError):
+        xtsx(x, jnp.zeros((1, 10)), block_n=3)
+
+
+# ---------------------------------------------------------------------------
+# lut_matmul — fused dequant matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([1, 4, 16]),
+    d_in=st.sampled_from([8, 32]),
+    o_blocks=st.integers(1, 3),
+    block_o=st.sampled_from([8, 16]),
+    bits=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lut_matmul_matches_ref(n, d_in, o_blocks, block_o, bits, seed):
+    rng = np.random.default_rng(seed)
+    d_out = o_blocks * block_o
+    m = 2**bits
+    x = rnd(rng, n, d_in)
+    codes = rng.integers(0, m, (d_in, d_out)).astype(np.int32)
+    cb = rnd(rng, d_out, m)
+    got = np.asarray(lut_matmul(jnp.asarray(x), jnp.asarray(codes), jnp.asarray(cb), block_o=block_o))
+    want = np.asarray(ref.lut_matmul_ref(jnp.asarray(x), jnp.asarray(codes), jnp.asarray(cb)))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_lut_matmul_equals_dense_matmul_after_decode():
+    rng = np.random.default_rng(3)
+    x = rnd(rng, 8, 16)
+    codes = rng.integers(0, 4, (16, 32)).astype(np.int32)
+    cb = rnd(rng, 32, 4)
+    w = np.asarray(ref.dequant_ref(jnp.asarray(codes), jnp.asarray(cb)))
+    got = np.asarray(lut_matmul(jnp.asarray(x), jnp.asarray(codes), jnp.asarray(cb), block_o=16))
+    np.testing.assert_allclose(got, x @ w, rtol=1e-5, atol=1e-5)
+
+
+def test_dequant_ref_gathers_per_output_channel():
+    codes = jnp.asarray([[0, 1], [1, 0]], jnp.int32)  # (d_in=2, d_out=2)
+    cb = jnp.asarray([[10.0, 11.0], [20.0, 21.0]])  # (d_out=2, m=2)
+    w = np.asarray(ref.dequant_ref(codes, cb))
+    np.testing.assert_allclose(w, [[10.0, 21.0], [11.0, 20.0]])
+
+
+# ---------------------------------------------------------------------------
+# saliency / diag-Fisher reductions used by calib_stats
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([4, 32]),
+    g=st.sampled_from([1, 2, 4]),
+    per=st.sampled_from([1, 3, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_group_saliency_matches_loop(n, g, per, seed):
+    rng = np.random.default_rng(seed)
+    gz = rnd(rng, n, g * per)
+    got = np.asarray(ref.group_saliency_ref(jnp.asarray(gz), g))
+    want = np.stack([np.mean(gz[:, k * per : (k + 1) * per] ** 2, axis=1) for k in range(g)])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_diag_fisher_matches_loop():
+    rng = np.random.default_rng(4)
+    x, gz = rnd(rng, 16, 6), rnd(rng, 16, 3)
+    got = np.asarray(ref.diag_fisher_ref(jnp.asarray(x), jnp.asarray(gz)))
+    want = np.zeros((6, 3), np.float32)
+    for i in range(16):
+        want += np.square(np.outer(x[i], gz[i]))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

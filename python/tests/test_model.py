@@ -1,0 +1,190 @@
+"""L2 model invariants: shapes, causality, loss behaviour, calib statistics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.config import GRAD_SCALE, PRESETS
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = PRESETS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.integers(0, CFG.vocab, (2, 32)), jnp.int32)
+
+
+def test_param_specs_cover_init(params):
+    specs = CFG.param_specs()
+    assert len(specs) == len(params)
+    for (name, shape), p in zip(specs, params):
+        assert tuple(p.shape) == tuple(shape), name
+
+
+def test_linear_specs_count():
+    assert len(CFG.linear_specs()) == CFG.n_layers * M.LINEARS_PER_BLOCK
+
+
+def test_forward_shapes(params, tokens):
+    logits, xs, zs = M.forward(CFG, params, tokens)
+    b, s = tokens.shape
+    assert logits.shape == (b, s, CFG.vocab)
+    specs = CFG.linear_specs()
+    assert len(xs) == len(zs) == len(specs)
+    for (name, d_in, d_out), x, z in zip(specs, xs, zs):
+        assert x.shape == (b, s, d_in), name
+        assert z.shape == (b, s, d_out), name
+
+
+def test_forward_is_causal(params, tokens):
+    """Changing a future token must not change past logits."""
+    logits, _, _ = M.forward(CFG, params, tokens)
+    toks2 = tokens.at[:, -1].set((tokens[:, -1] + 1) % CFG.vocab)
+    logits2, _, _ = M.forward(CFG, params, toks2)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, :-1]), np.asarray(logits2[:, :-1]), rtol=1e-5, atol=1e-5
+    )
+    assert not np.allclose(np.asarray(logits[:, -1]), np.asarray(logits2[:, -1]))
+
+
+def test_initial_loss_near_uniform(params, tokens):
+    b, s = tokens.shape
+    loss = float(M.fwd_loss(CFG, params, tokens)[0]) / (b * (s - 1))
+    assert abs(loss - np.log(CFG.vocab)) < 1.5
+
+
+def test_taps_zero_do_not_change_loss(params, tokens):
+    b, s = tokens.shape
+    taps = [jnp.zeros((b, s, d_out), jnp.float32) for _, _, d_out in CFG.linear_specs()]
+    l0 = float(M.loss_sum(CFG, params, tokens))
+    l1 = float(M.loss_sum(CFG, params, tokens, taps))
+    assert l0 == pytest.approx(l1, rel=1e-6)
+
+
+def test_train_step_decreases_loss(params, tokens):
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    ts = M.jit_train_step(CFG, 1e-3)
+    out = ts(params, m, v, jnp.float32(0), tokens)
+    l0 = float(out[0])
+    np_ = len(params)
+    p1 = list(out[1 : 1 + np_])
+    m1 = list(out[1 + np_ : 1 + 2 * np_])
+    v1 = list(out[1 + 2 * np_ : 1 + 3 * np_])
+    for _ in range(5):
+        out = ts(p1, m1, v1, out[-1], tokens)
+        p1 = list(out[1 : 1 + np_])
+        m1 = list(out[1 + np_ : 1 + 2 * np_])
+        v1 = list(out[1 + 2 * np_ : 1 + 3 * np_])
+    assert float(out[0]) < l0
+
+
+def test_fake_quant_roundtrip_high_bits_is_identity():
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((4, 8)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(M._fake_quant_sym(x, 16)), np.asarray(x))
+    got8 = np.asarray(M._fake_quant_sym(x, 8))
+    assert np.max(np.abs(got8 - np.asarray(x))) < 0.05
+
+
+def test_fake_quant_reduces_levels():
+    x = jnp.asarray(np.linspace(-1, 1, 101), jnp.float32).reshape(1, -1)
+    got = np.asarray(M._fake_quant_sym(x, 3))
+    assert len(np.unique(got)) <= 8
+
+
+def test_qa_loss_degrades_gracefully(params, tokens):
+    b, s = tokens.shape
+    l16 = float(M.fwd_loss(CFG, params, tokens)[0])
+    l8 = float(M.fwd_loss_qa(CFG, 8, 8, params, tokens)[0])
+    l4 = float(M.fwd_loss_qa(CFG, 4, 4, params, tokens)[0])
+    assert abs(l8 - l16) / l16 < 0.05
+    assert l4 == pytest.approx(l16, rel=0.6)
+
+
+class TestCalibStats:
+    @pytest.fixture(scope="class")
+    def stats(self, params, tokens):
+        return M.jit_calib_stats(CFG, 2)(params, tokens)
+
+    def test_output_count(self, stats):
+        assert len(stats) == 1 + 2 * len(CFG.linear_specs())
+
+    def test_loss_matches_fwd(self, stats, params, tokens):
+        assert float(stats[0]) == pytest.approx(float(M.fwd_loss(CFG, params, tokens)[0]), rel=1e-5)
+
+    def test_h0_is_plain_gram(self, stats, params, tokens):
+        _, xs, _ = M.forward(CFG, params, tokens)
+        for i, (name, d_in, _) in enumerate(CFG.linear_specs()):
+            x = np.asarray(xs[i]).reshape(-1, d_in)
+            h0 = np.asarray(stats[1 + 2 * i][0])
+            np.testing.assert_allclose(h0, x.T @ x, rtol=2e-4, atol=2e-4, err_msg=name)
+
+    def test_guided_hessians_match_manual_grads(self, stats, params, tokens):
+        """H̄_k from the artifact graph == manual jax.grad computation."""
+        b, s = tokens.shape
+        specs = CFG.linear_specs()
+        taps = [jnp.zeros((b, s, d_out), jnp.float32) for _, _, d_out in specs]
+
+        def tl(tps):
+            return M.loss_sum(CFG, params, tokens, tps) / (b * (s - 1))
+
+        grads = jax.grad(tl)(taps)
+        for i, (name, d_in, d_out) in enumerate(specs[:3]):
+            gz = np.asarray(grads[i]).reshape(-1, d_out) * GRAD_SCALE
+            _, xs, _ = M.forward(CFG, params, tokens)
+            x = np.asarray(xs[i]).reshape(-1, d_in)
+            sal = np.asarray(ref.group_saliency_ref(jnp.asarray(gz), 2))
+            for k in range(2):
+                want = (x * sal[k][:, None]).T @ x
+                got = np.asarray(stats[1 + 2 * i][1 + k])
+                np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3, err_msg=f"{name} g{k}")
+
+    def test_diagf_nonnegative(self, stats):
+        for i in range(len(CFG.linear_specs())):
+            assert float(np.asarray(stats[2 + 2 * i]).min()) >= 0.0
+
+    def test_pallas_and_ref_paths_agree(self, params, tokens):
+        a = M.jit_calib_stats(CFG, 2, use_pallas=True)(params, tokens)
+        b_ = M.jit_calib_stats(CFG, 2, use_pallas=False)(params, tokens)
+        for i in (1, 3, 5):
+            np.testing.assert_allclose(np.asarray(a[i]), np.asarray(b_[i]), rtol=2e-4, atol=2e-4)
+
+
+class TestGradTaps:
+    def test_output_structure_and_x_matches_forward(self, params, tokens):
+        outs = M.grad_taps(CFG, params, tokens)
+        specs = CFG.linear_specs()
+        assert len(outs) == 1 + 2 * len(specs)
+        logits, xs, _ = M.forward(CFG, params, tokens)
+        b, s = tokens.shape
+        for i, (name, d_in, d_out) in enumerate(specs):
+            x = np.asarray(outs[1 + 2 * i])
+            g = np.asarray(outs[2 + 2 * i])
+            assert x.shape == (b * s, d_in), name
+            assert g.shape == (b * s, d_out), name
+            np.testing.assert_allclose(
+                x, np.asarray(xs[i]).reshape(b * s, d_in), rtol=1e-5, atol=1e-5
+            )
+
+    def test_grads_consistent_with_calib_saliency(self, params, tokens):
+        """Group-averaging grad_taps' G² must reproduce calib_stats' H̄."""
+        outs = M.grad_taps(CFG, params, tokens)
+        stats = M.jit_calib_stats(CFG, 2)(params, tokens)
+        i = 0  # first linear
+        x = np.asarray(outs[1])
+        g = np.asarray(outs[2])
+        sal = np.asarray(ref.group_saliency_ref(jnp.asarray(g), 2))
+        want = (x * sal[0][:, None]).T @ x
+        got = np.asarray(stats[1][1])
+        np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)

@@ -1,0 +1,72 @@
+//! Shared setup for the paper-table benches: a trained checkpoint and
+//! calibration statistics, cached under target/benchres/cache so every
+//! bench binary reuses them instead of retraining.
+
+#![allow(dead_code)]
+
+use guidedquant::cfg::{preset, PipelineConfig};
+use guidedquant::coordinator::{Pipeline, QuantizedLayer};
+use guidedquant::data::Split;
+use guidedquant::fisher::CalibStats;
+use guidedquant::model::ParamStore;
+
+pub struct Setup {
+    pub pipeline: Pipeline,
+    pub ps: ParamStore,
+    pub stats: CalibStats,
+}
+
+/// Default bench model; override with GQ_BENCH_MODEL=small|base.
+pub fn bench_model() -> String {
+    std::env::var("GQ_BENCH_MODEL").unwrap_or_else(|_| "tiny".to_string())
+}
+
+fn train_steps(model: &str) -> usize {
+    match model {
+        "tiny" => 600,
+        "small" => 500,
+        _ => 150,
+    }
+}
+
+/// Build (or load cached) trained params + calib stats for `model`.
+pub fn setup(model: &str) -> Setup {
+    let cache_dir = std::path::PathBuf::from("target/benchres/cache");
+    std::fs::create_dir_all(&cache_dir).unwrap();
+    let cfg = PipelineConfig {
+        model: model.to_string(),
+        out_dir: cache_dir.to_str().unwrap().to_string(),
+        train_steps: train_steps(model),
+        calib_batches: if model == "tiny" { 6 } else { 8 },
+        eval_batches: if model == "tiny" { 8 } else { 12 },
+        ..Default::default()
+    };
+    let pipeline = Pipeline::new(cfg).expect("artifacts missing — run `make artifacts`");
+    let ckpt = cache_dir.join(format!("trained_{model}.gqtb"));
+    let (model_cfg, _) = preset(model);
+    let ps = if ckpt.exists() {
+        ParamStore::load(&model_cfg, &ckpt).unwrap()
+    } else {
+        let mut ps = pipeline.init_params();
+        eprintln!("[bench-setup] training {model} for {} steps ...", pipeline.cfg.train_steps);
+        pipeline.train(&mut ps, pipeline.cfg.train_steps, 50).unwrap();
+        ps.save(&ckpt).unwrap();
+        ps
+    };
+    let stats = pipeline.calib(&ps, false).unwrap();
+    Setup { pipeline, ps, stats }
+}
+
+impl Setup {
+    pub fn ppl(&self, ps: &ParamStore, artifact: &str) -> f64 {
+        self.pipeline.perplexity(ps, Split::Eval, artifact).unwrap()
+    }
+
+    pub fn ppl_shift(&self, ps: &ParamStore) -> f64 {
+        self.pipeline.perplexity(ps, Split::EvalShift, "fwd_loss").unwrap()
+    }
+
+    pub fn apply(&self, layers: &[QuantizedLayer]) -> ParamStore {
+        self.pipeline.apply_quantized(&self.ps, layers)
+    }
+}

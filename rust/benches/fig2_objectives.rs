@@ -1,0 +1,36 @@
+//! Paper Figure 2 — non-uniform scalar quantization under three objectives:
+//! layer-wise output error (LNQ), weighted k-means (SqueezeLLM), and the
+//! approximated GuidedQuant objective (LNQ + GQ), across bit-widths.
+
+#[path = "common.rs"]
+mod common;
+
+use guidedquant::cfg::{QuantConfig, QuantMethod};
+use guidedquant::report::{f, Table};
+
+fn main() {
+    let model = common::bench_model();
+    let s = common::setup(&model);
+    let fp = s.ppl(&s.ps, "fwd_loss");
+    let mut table = Table::new(
+        &format!("Figure 2 analog — objective comparison ({model}); fp32 ppl {fp:.3}"),
+        &["bits", "weighted_kmeans(SqLLM)", "layer_wise(LNQ)", "guidedquant(LNQ+GQ)"],
+    );
+    for bits in [2u32, 3, 4] {
+        let ppl_of = |method: QuantMethod, groups: usize| -> f64 {
+            let layers = s
+                .pipeline
+                .quantize(&s.ps, &s.stats, &QuantConfig::with(method, bits, groups))
+                .unwrap();
+            s.ppl(&s.apply(&layers), "fwd_loss")
+        };
+        table.row(vec![
+            bits.to_string(),
+            f(ppl_of(QuantMethod::SqueezeLlm, 0), 3),
+            f(ppl_of(QuantMethod::Lnq, 0), 3),
+            f(ppl_of(QuantMethod::Lnq, 4), 3),
+        ]);
+    }
+    table.print();
+    table.save_csv("fig2_objectives").unwrap();
+}

@@ -1,0 +1,57 @@
+//! Paper Figures 3 & 4 + Appendix D.11 — Fisher-structure analysis.
+//!
+//! Pulls raw activations X and end-loss output gradients G from the
+//! grad_taps artifact, builds the exact two-channel Fisher submatrix per
+//! linear, and compares the WoodFisher-style B×B block-diagonal cut against
+//! the GuidedQuant group-average at equal storage. Prints, per layer:
+//! the within-channel block mass fraction (the "prominent block-diagonal
+//! structure") and both approximation errors.
+
+#[path = "common.rs"]
+mod common;
+
+use guidedquant::data::{Batcher, Split};
+use guidedquant::fisher::structure::{
+    block_diag_approx, block_mass_fraction, guided_approx_two_channel, rel_error,
+    two_channel_fisher,
+};
+use guidedquant::report::{f, Table};
+use guidedquant::runtime::Value;
+
+fn main() {
+    let model = common::bench_model();
+    let s = common::setup(&model);
+    let rt = &s.pipeline.rt;
+    let bc = rt.manifest.batch;
+    let artifact = rt.artifact("grad_taps").unwrap();
+    let mut batcher = Batcher::new(&s.pipeline.corpus, Split::Calib, bc, 1);
+    let toks = batcher.next_batch().unwrap();
+    let mut args = rt.param_args(&s.ps);
+    args.push(Value::tokens(bc.batch, bc.seq, &toks));
+    let outs = artifact.execute(&args).unwrap();
+
+    let specs = s.ps.cfg.linear_specs();
+    let mut table = Table::new(
+        &format!("Figures 3/4 analog — Fisher structure ({model}, first block)"),
+        &["layer", "block_mass", "err_woodfisher", "err_guidedquant"],
+    );
+    // First transformer block's 7 linears (as in the paper's figures).
+    for (li, spec) in specs.iter().take(7).enumerate() {
+        let x = outs[1 + 2 * li].clone().into_mat().unwrap();
+        let g = outs[2 + 2 * li].clone().into_mat().unwrap();
+        let fisher = two_channel_fisher(&x, &g, 0, 1);
+        let d = spec.d_in;
+        // Equal storage: guided stores one d×d shared block; WoodFisher gets
+        // B = d/2 so 4 blocks of (d/2)² = d² entries too.
+        let wf = block_diag_approx(&fisher, d / 2);
+        let gq = guided_approx_two_channel(&fisher);
+        table.row(vec![
+            spec.name.clone(),
+            f(block_mass_fraction(&fisher, d), 3),
+            f(rel_error(&fisher, &wf), 4),
+            f(rel_error(&fisher, &gq), 4),
+        ]);
+    }
+    table.print();
+    table.save_csv("fig34_fisher").unwrap();
+}

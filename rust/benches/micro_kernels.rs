@@ -1,0 +1,76 @@
+//! Micro-benchmarks of the hot paths: serving-format matvec kernels
+//! (the Table 2 inner loop), the native matmul, and the L1 xtsx Pallas
+//! kernel executed through its demo artifact vs a native Rust reduction.
+
+#[path = "common.rs"]
+mod common;
+
+use guidedquant::bench::bench;
+use guidedquant::quant::grid::{round_all, rtn_quantize, UniformGrid};
+use guidedquant::quant::formats::{LutLinear, UniformScalarLinear};
+use guidedquant::model::forward::LinearOp;
+use guidedquant::runtime::Value;
+use guidedquant::tensor::ops::{matmul, matmul_tn};
+use guidedquant::tensor::Mat;
+use guidedquant::util::Rng;
+
+fn main() {
+    let fast = guidedquant::bench::fast_mode();
+    let d = if fast { 128 } else { 512 };
+    let mut rng = Rng::new(0);
+    let w = Mat::randn(d, d, 1.0, &mut rng);
+    let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+    let mut out = vec![0.0f32; d];
+
+    println!("-- serving matvec kernels ({d}x{d}) --");
+    let reps = if fast { 20 } else { 200 };
+    bench("matvec fp32", 3, reps, || w.matvec(&x, &mut out));
+    let grid = UniformGrid::fit(&w, 4);
+    let (_, codes) = round_all(&w, &grid);
+    let uni = UniformScalarLinear::new(&codes, &grid, d, d);
+    bench("matvec uniform-4bit", 3, reps, || uni.matvec(&x, &mut out));
+    let res = rtn_quantize(&w, 4);
+    let lut = LutLinear::new(&res.codes.unwrap(), res.codebooks.unwrap(), 4, d, d);
+    bench("matvec lut-4bit", 3, reps, || lut.matvec(&x, &mut out));
+
+    println!("-- matmul --");
+    let a = Mat::randn(d, d, 1.0, &mut rng);
+    let b = Mat::randn(d, d, 1.0, &mut rng);
+    let r = bench("matmul dxd", 1, if fast { 3 } else { 10 }, || matmul(&a, &b));
+    let flops = 2.0 * (d as f64).powi(3);
+    println!("   ≈ {:.2} GFLOP/s", flops / r.mean_secs / 1e9);
+
+    // L1 kernel: artifact (Pallas xtsx lowered through interpret) vs native.
+    let model = common::bench_model();
+    let s = common::setup(&model);
+    let rt = &s.pipeline.rt;
+    let bc = rt.manifest.batch;
+    let n = bc.tokens();
+    let dm = s.ps.cfg.d_model;
+    let g = rt.manifest.groups + 1;
+    let xmat = Mat::randn(n, dm, 1.0, &mut rng);
+    let smat = Mat::from_fn(g, n, |_, _| rng.f32() + 0.1);
+    if let Ok(artifact) = rt.artifact("xtsx_demo") {
+        println!("-- L1 xtsx kernel ({n}x{dm}, g={g}) --");
+        bench("xtsx artifact (Pallas interpret)", 1, if fast { 2 } else { 5 }, || {
+            artifact
+                .execute(&[Value::from_mat(&xmat), Value::from_mat(&smat)])
+                .unwrap()
+        });
+        bench("xtsx native rust", 1, if fast { 2 } else { 5 }, || {
+            // out[k] = X^T diag(s_k) X via scaled-copy + matmul_tn.
+            (0..g)
+                .map(|k| {
+                    let mut xs = xmat.clone();
+                    for i in 0..n {
+                        let sv = smat.at(k, i);
+                        for v in xs.row_mut(i) {
+                            *v *= sv;
+                        }
+                    }
+                    matmul_tn(&xmat, &xs)
+                })
+                .collect::<Vec<_>>()
+        });
+    }
+}

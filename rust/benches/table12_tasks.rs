@@ -1,0 +1,49 @@
+//! Paper Table 12 — downstream-task accuracy of quantized models
+//! (zero-shot average + few-shot analog): next-token accuracy and
+//! multiple-choice accuracy on the synthetic language.
+
+#[path = "common.rs"]
+mod common;
+
+use guidedquant::cfg::{QuantConfig, QuantMethod};
+use guidedquant::data::Split;
+use guidedquant::eval::{multiple_choice_accuracy, next_token_accuracy};
+use guidedquant::model::NativeModel;
+use guidedquant::report::{f, Table};
+
+fn main() {
+    let model = common::bench_model();
+    let s = common::setup(&model);
+    let corpus = &s.pipeline.corpus;
+    let fast = guidedquant::bench::fast_mode();
+    let (nt_n, mc_n) = if fast { (40, 12) } else { (160, 48) };
+
+    let mut table = Table::new(
+        &format!("Table 12 analog — downstream tasks ({model})"),
+        &["method", "bits", "next_token_acc", "multi_choice_acc"],
+    );
+    let mut eval_row = |name: &str, ps: &guidedquant::model::ParamStore, bits: &str| {
+        let m = NativeModel::from_params(ps);
+        let nt = next_token_accuracy(&m, corpus, Split::Eval, nt_n);
+        let mc = multiple_choice_accuracy(&m, corpus, Split::Eval, mc_n, 4, 9);
+        table.row(vec![name.into(), bits.into(), f(nt, 3), f(mc, 3)]);
+    };
+    eval_row("original", &s.ps, "32");
+    for bits in [2u32, 3] {
+        for (name, method, groups) in [
+            ("squeezellm", QuantMethod::SqueezeLlm, 0usize),
+            ("gptvq1d", QuantMethod::Gptvq1d, 0),
+            ("lnq", QuantMethod::Lnq, 0),
+            ("lnq+gquant", QuantMethod::Lnq, 4),
+        ] {
+            let layers = s
+                .pipeline
+                .quantize(&s.ps, &s.stats, &QuantConfig::with(method, bits, groups))
+                .unwrap();
+            let qps = s.apply(&layers);
+            eval_row(name, &qps, &bits.to_string());
+        }
+    }
+    table.print();
+    table.save_csv("table12_tasks").unwrap();
+}

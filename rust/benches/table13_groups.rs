@@ -1,0 +1,36 @@
+//! Paper Table 13 — the number-of-groups g ablation: g = 0 means the plain
+//! layer-wise objective; g ∈ {1, 2, 4} are GuidedQuant variants (the
+//! artifact caches g = 4; smaller g re-average the cached blocks).
+
+#[path = "common.rs"]
+mod common;
+
+use guidedquant::cfg::{QuantConfig, QuantMethod};
+use guidedquant::report::{f, Table};
+
+fn main() {
+    let model = common::bench_model();
+    let s = common::setup(&model);
+    let mut table = Table::new(
+        &format!("Table 13 analog — group-count ablation ({model})"),
+        &["bits", "g", "ppl_eval", "ppl_shift"],
+    );
+    for bits in [2u32, 3] {
+        for g in [0usize, 1, 2, 4] {
+            let layers = s
+                .pipeline
+                .quantize(&s.ps, &s.stats, &QuantConfig::with(QuantMethod::Lnq, bits, g))
+                .unwrap();
+            let qps = s.apply(&layers);
+            let label = if g == 0 { "- (layer-wise)".to_string() } else { g.to_string() };
+            table.row(vec![
+                bits.to_string(),
+                label,
+                f(s.ppl(&qps, "fwd_loss"), 3),
+                f(s.ppl_shift(&qps), 3),
+            ]);
+        }
+    }
+    table.print();
+    table.save_csv("table13_groups").unwrap();
+}

@@ -1,0 +1,59 @@
+//! Paper Table 15 — post-PTQ end-to-end fine-tuning (PV-tuning-lite
+//! cascade; see quant::finetune for the substitution note). Rows:
+//! SqueezeLLM and LNQ+GQ at 2/3 bits, before and after fine-tuning.
+
+#[path = "common.rs"]
+mod common;
+
+use guidedquant::cfg::{QuantConfig, QuantMethod};
+use guidedquant::data::Split;
+use guidedquant::quant::cd::CdConfig;
+use guidedquant::quant::finetune::{cascade_finetune, TunableLayer};
+use guidedquant::report::{f, Table};
+
+fn main() {
+    let model = common::bench_model();
+    let s = common::setup(&model);
+    let tune_tokens = s.pipeline.corpus.tokens(Split::Train, 256);
+
+    let mut table = Table::new(
+        &format!("Table 15 analog — end-to-end fine-tuning after PTQ ({model})"),
+        &["method", "bits", "ppl_before_ft", "ppl_after_ft"],
+    );
+    for bits in [2u32, 3] {
+        for (name, method, groups) in [
+            ("squeezellm", QuantMethod::SqueezeLlm, 0usize),
+            ("lnq+gquant", QuantMethod::Lnq, 4),
+        ] {
+            let layers = s
+                .pipeline
+                .quantize(&s.ps, &s.stats, &QuantConfig::with(method, bits, groups))
+                .unwrap();
+            let qps = s.apply(&layers);
+            let before = s.ppl(&qps, "fwd_loss");
+            // Build tunable layers (codes + codebooks required).
+            let mut tunable: Vec<TunableLayer> = layers
+                .iter()
+                .filter_map(|l| {
+                    Some(TunableLayer {
+                        name: l.name.clone(),
+                        codes: l.result.codes.clone()?,
+                        codebooks: l.result.codebooks.clone()?,
+                        d_in: l.result.w_hat.rows,
+                    })
+                })
+                .collect();
+            let after = if tunable.len() == layers.len() {
+                let tuned =
+                    cascade_finetune(&s.ps, &mut tunable, &tune_tokens, 1, CdConfig::default())
+                        .unwrap();
+                s.ppl(&tuned, "fwd_loss")
+            } else {
+                f64::NAN
+            };
+            table.row(vec![name.into(), bits.to_string(), f(before, 3), f(after, 3)]);
+        }
+    }
+    table.print();
+    table.save_csv("table15_finetune").unwrap();
+}

@@ -1,0 +1,40 @@
+//! Paper Table 17 — dense-and-sparse decomposition: keep 0.45% of weights
+//! in full precision. Rows: SqueezeLLM / LNQ / LNQ+GQ, all with the same
+//! sparse overlay fraction, at 2/3/4 bits.
+
+#[path = "common.rs"]
+mod common;
+
+use guidedquant::cfg::{QuantConfig, QuantMethod};
+use guidedquant::report::{f, Table};
+
+fn main() {
+    let model = common::bench_model();
+    let s = common::setup(&model);
+    let frac = 0.0045f32;
+    let mut table = Table::new(
+        &format!("Table 17 analog — dense-and-sparse ({model}, {:.2}% fp)", frac * 100.0),
+        &["method", "bits", "sparse", "avg_bits", "ppl_eval"],
+    );
+    for bits in [2u32, 3, 4] {
+        for (name, method, groups) in
+            [("lnq", QuantMethod::Lnq, 0usize), ("lnq+gquant", QuantMethod::Lnq, 4)]
+        {
+            for sparse in [0.0f32, frac] {
+                let mut qcfg = QuantConfig::with(method, bits, groups);
+                qcfg.sparse_frac = sparse;
+                let layers = s.pipeline.quantize(&s.ps, &s.stats, &qcfg).unwrap();
+                let qps = s.apply(&layers);
+                table.row(vec![
+                    name.into(),
+                    bits.to_string(),
+                    if sparse > 0.0 { "0.45%".into() } else { "-".to_string() },
+                    f(s.pipeline.avg_bits(&s.ps, &layers), 2),
+                    f(s.ppl(&qps, "fwd_loss"), 3),
+                ]);
+            }
+        }
+    }
+    table.print();
+    table.save_csv("table17_sparse").unwrap();
+}

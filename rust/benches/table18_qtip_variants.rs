@@ -1,0 +1,36 @@
+//! Paper Table 18 — trellis generator variants (1MAD / 3INST / HYB),
+//! each with and without GuidedQuant, at 2/3/4 bits.
+
+#[path = "common.rs"]
+mod common;
+
+use guidedquant::cfg::{QuantConfig, QuantMethod, TrellisVariant};
+use guidedquant::report::{f, Table};
+
+fn main() {
+    let model = common::bench_model();
+    let s = common::setup(&model);
+    let fp = s.ppl(&s.ps, "fwd_loss");
+    let mut table = Table::new(
+        &format!("Table 18 analog — QTIP variants ({model}); fp32 ppl {fp:.3}"),
+        &["variant", "method", "bits", "ppl_eval"],
+    );
+    for variant in [TrellisVariant::OneMad, TrellisVariant::ThreeInst, TrellisVariant::Hyb] {
+        for bits in [2u32, 3, 4] {
+            for (suffix, groups) in [("qtip", 0usize), ("qtip+gq", 4)] {
+                let mut qcfg = QuantConfig::with(QuantMethod::Trellis, bits, groups);
+                qcfg.trellis_variant = variant;
+                let layers = s.pipeline.quantize(&s.ps, &s.stats, &qcfg).unwrap();
+                let qps = s.apply(&layers);
+                table.row(vec![
+                    variant.name().into(),
+                    suffix.into(),
+                    bits.to_string(),
+                    f(s.ppl(&qps, "fwd_loss"), 3),
+                ]);
+            }
+        }
+    }
+    table.print();
+    table.save_csv("table18_qtip_variants").unwrap();
+}

@@ -1,0 +1,55 @@
+//! Paper Table 1 — the headline summary: one representative row per
+//! quantization family at the most extreme setting (2 bits / W4A4KV4),
+//! each with and without GuidedQuant.
+
+#[path = "common.rs"]
+mod common;
+
+use guidedquant::cfg::{QuantConfig, QuantMethod};
+use guidedquant::report::{f, Table};
+
+fn main() {
+    let model = common::bench_model();
+    let s = common::setup(&model);
+    let fp = s.ppl(&s.ps, "fwd_loss");
+    let mut table = Table::new(
+        &format!("Table 1 analog — headline ({model})"),
+        &["type", "method", "bits", "ppl"],
+    );
+    table.row(vec!["-".into(), "original(fp32)".into(), "32".into(), f(fp, 3)]);
+
+    let mut scalar = |name: &str, method: QuantMethod, groups: usize| {
+        let layers = s
+            .pipeline
+            .quantize(&s.ps, &s.stats, &QuantConfig::with(method, 2, groups))
+            .unwrap();
+        let ppl = s.ppl(&s.apply(&layers), "fwd_loss");
+        table.row(vec!["weight-only scalar".into(), name.into(), "2".into(), f(ppl, 3)]);
+    };
+    scalar("squeezellm", QuantMethod::SqueezeLlm, 0);
+    scalar("lnq", QuantMethod::Lnq, 0);
+    scalar("lnq+gquant", QuantMethod::Lnq, 4);
+
+    for (name, groups) in [("qtip(trellis)", 0usize), ("qtip+gquant", 4)] {
+        let layers = s
+            .pipeline
+            .quantize(&s.ps, &s.stats, &QuantConfig::with(QuantMethod::Trellis, 2, groups))
+            .unwrap();
+        let ppl = s.ppl(&s.apply(&layers), "fwd_loss");
+        table.row(vec!["weight-only vector".into(), name.into(), "2".into(), f(ppl, 3)]);
+    }
+
+    // W&A row: GPTQ W4 through the A4KV4 artifact, ± GQ.
+    let fp_qa = s.ppl(&s.ps, "fwd_loss_qa4kv4");
+    table.row(vec!["weight+activation".into(), "fp-w/A4KV4".into(), "W32A4KV4".into(), f(fp_qa, 3)]);
+    for (name, groups) in [("gptq/A4KV4", 0usize), ("gptq+gquant/A4KV4", 4)] {
+        let layers = s
+            .pipeline
+            .quantize(&s.ps, &s.stats, &QuantConfig::with(QuantMethod::Gptq, 4, groups))
+            .unwrap();
+        let ppl = s.ppl(&s.apply(&layers), "fwd_loss_qa4kv4");
+        table.row(vec!["weight+activation".into(), name.into(), "W4A4KV4".into(), f(ppl, 3)]);
+    }
+    table.print();
+    table.save_csv("table1_headline").unwrap();
+}

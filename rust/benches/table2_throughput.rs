@@ -1,0 +1,56 @@
+//! Paper Table 2 (+7, +11) — end-to-end decode throughput by serving
+//! format and bit-width. Reproduction target: uniform ≈ non-uniform scalar,
+//! both faster than vector/trellis (decode overhead), all faster than fp32
+//! at low bits on the memory-bound decode path.
+
+#[path = "common.rs"]
+mod common;
+
+use guidedquant::report::{f, Table};
+use guidedquant::serve::{build_serving_model, generate_batch, ServeFormat};
+use guidedquant::util::human_bytes;
+use guidedquant::util::Rng;
+
+fn main() {
+    let model = common::bench_model();
+    let s = common::setup(&model);
+    let fast = guidedquant::bench::fast_mode();
+    let (requests, gen_tokens, prompt_len) = if fast { (2, 8, 4) } else { (4, 48, 16) };
+    let workers = s.pipeline.cfg.workers;
+
+    let mut table = Table::new(
+        &format!("Table 2 analog — decode throughput ({model}, {requests} reqs × {gen_tokens} tokens)"),
+        &["format", "bits", "tok/s", "p50_ms", "p99_ms", "weights"],
+    );
+
+    let mut rng = Rng::new(11);
+    let vocab = s.ps.cfg.vocab;
+    let prompts: Vec<Vec<u32>> = (0..requests)
+        .map(|_| (0..prompt_len).map(|_| rng.below(vocab) as u32).collect())
+        .collect();
+
+    let mut run = |format: ServeFormat, bits: u32| {
+        let m = build_serving_model(&s.ps, Some(&s.stats), format, bits).unwrap();
+        // Warm once, then measure.
+        let _ = generate_batch(&m, &prompts[..1.min(prompts.len())], 2, workers);
+        let (_, stats) = generate_batch(&m, &prompts, gen_tokens, workers);
+        table.row(vec![
+            format.name().into(),
+            if format == ServeFormat::Fp32 { "32".into() } else { bits.to_string() },
+            f(stats.tok_per_sec, 1),
+            f(stats.p50_ms, 3),
+            f(stats.p99_ms, 3),
+            human_bytes(stats.weight_bytes as u64),
+        ]);
+    };
+
+    run(ServeFormat::Fp32, 16);
+    for bits in [2u32, 3, 4] {
+        run(ServeFormat::UniformScalar, bits);
+        run(ServeFormat::NonUniformScalar, bits);
+        run(ServeFormat::Vector, bits);
+        run(ServeFormat::Trellis, bits);
+    }
+    table.print();
+    table.save_csv("table2_throughput").unwrap();
+}

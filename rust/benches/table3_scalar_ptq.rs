@@ -1,0 +1,50 @@
+//! Paper Table 3 — weight-only scalar PTQ without end-to-end fine-tuning.
+//!
+//! Rows: GPTQ (uniform), SqueezeLLM, GPTVQ 1D, LNQ, LNQ + GuidedQuant;
+//! columns: bits ∈ {2, 3, 4} × {eval (Wiki2 analog), shift (C4 analog)}.
+//! The reproduction target is the *ordering* (LNQ+GQ ≤ LNQ ≤ GPTVQ1D /
+//! SqueezeLLM, with the largest wins at 2 bits), not absolute perplexity.
+//! Table 10 (Llama-3 analog) is this bench with GQ_BENCH_MODEL=base.
+
+#[path = "common.rs"]
+mod common;
+
+use guidedquant::cfg::{QuantConfig, QuantMethod};
+use guidedquant::report::{f, Table};
+
+fn main() {
+    let model = common::bench_model();
+    let s = common::setup(&model);
+    let fp = s.ppl(&s.ps, "fwd_loss");
+    let fp_shift = s.ppl_shift(&s.ps);
+
+    let mut table = Table::new(
+        &format!("Table 3 analog — weight-only scalar PTQ ({model}); fp32 ppl {fp:.3}/{fp_shift:.3}"),
+        &["method", "bits", "avg_bits", "ppl_eval", "ppl_shift"],
+    );
+    for bits in [2u32, 3, 4] {
+        let rows: Vec<(&str, QuantConfig)> = vec![
+            ("gptq", QuantConfig::with(QuantMethod::Gptq, bits, 0)),
+            ("squeezellm", QuantConfig::with(QuantMethod::SqueezeLlm, bits, 0)),
+            ("gptvq1d", QuantConfig::with(QuantMethod::Gptvq1d, bits, 0)),
+            ("lnq", QuantConfig::with(QuantMethod::Lnq, bits, 0)),
+            ("lnq+gquant", QuantConfig::with(QuantMethod::Lnq, bits, 4)),
+        ];
+        for (name, qcfg) in rows {
+            let layers = s.pipeline.quantize(&s.ps, &s.stats, &qcfg).unwrap();
+            let qps = s.apply(&layers);
+            let ppl = s.ppl(&qps, "fwd_loss");
+            let shift = s.ppl_shift(&qps);
+            let avg_bits = s.pipeline.avg_bits(&s.ps, &layers);
+            table.row(vec![
+                name.into(),
+                bits.to_string(),
+                f(avg_bits, 2),
+                f(ppl, 3),
+                f(shift, 3),
+            ]);
+        }
+    }
+    table.print();
+    table.save_csv("table3_scalar_ptq").unwrap();
+}

@@ -1,0 +1,39 @@
+//! Paper Table 4 — weight-only vector PTQ: GPTVQ 2D, trellis (QTIP analog)
+//! and trellis + GuidedQuant across bits. Target shape: trellis+GQ ≤
+//! trellis, and vector methods competitive with scalar at equal bits.
+
+#[path = "common.rs"]
+mod common;
+
+use guidedquant::cfg::{QuantConfig, QuantMethod};
+use guidedquant::report::{f, Table};
+
+fn main() {
+    let model = common::bench_model();
+    let s = common::setup(&model);
+    let fp = s.ppl(&s.ps, "fwd_loss");
+    let mut table = Table::new(
+        &format!("Table 4 analog — weight-only vector PTQ ({model}); fp32 ppl {fp:.3}"),
+        &["method", "bits", "avg_bits", "ppl_eval", "ppl_shift"],
+    );
+    for bits in [2u32, 3, 4] {
+        let mut rows: Vec<(&str, QuantConfig)> = vec![
+            ("gptvq2d", QuantConfig::with(QuantMethod::Gptvq2d, bits, 0)),
+            ("qtip(trellis)", QuantConfig::with(QuantMethod::Trellis, bits, 0)),
+            ("qtip+gquant", QuantConfig::with(QuantMethod::Trellis, bits, 4)),
+        ];
+        for (name, qcfg) in rows.drain(..) {
+            let layers = s.pipeline.quantize(&s.ps, &s.stats, &qcfg).unwrap();
+            let qps = s.apply(&layers);
+            table.row(vec![
+                name.into(),
+                bits.to_string(),
+                f(s.pipeline.avg_bits(&s.ps, &layers), 2),
+                f(s.ppl(&qps, "fwd_loss"), 3),
+                f(s.ppl_shift(&qps), 3),
+            ]);
+        }
+    }
+    table.print();
+    table.save_csv("table4_vector_ptq").unwrap();
+}

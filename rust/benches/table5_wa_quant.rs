@@ -1,0 +1,58 @@
+//! Paper Table 5 (+ Table 16) — weight-and-activation quantization.
+//!
+//! Rows: QuaRot-like (plain Hadamard rotation), SpinQuant-like (searched
+//! rotation), each ± GuidedQuant on the GPTQ W-step; settings W4A4KV4,
+//! W4A4KV16 (Table 5) and W2/W3 A4KV4 (Table 16). All evaluated through
+//! the fwd_loss_qa* artifacts (activations + KV fake-quant in-graph).
+
+#[path = "common.rs"]
+mod common;
+
+use guidedquant::cfg::{QuantConfig, QuantMethod};
+use guidedquant::data::{Batcher, Split};
+use guidedquant::fisher::collect_stats;
+use guidedquant::quant::spinquant::spinquant_rotate;
+use guidedquant::report::{f, Table};
+use guidedquant::util::Rng;
+
+fn main() {
+    let model = common::bench_model();
+    let s = common::setup(&model);
+    let corpus = &s.pipeline.corpus;
+    let sample_tokens = corpus.tokens(Split::Calib, 192);
+
+    let fp16 = s.ppl(&s.ps, "fwd_loss");
+    let mut table = Table::new(
+        &format!("Table 5/16 analog — W&A quantization ({model}); fp ppl {fp16:.3}"),
+        &["method", "setting", "ppl_qa"],
+    );
+
+    // Two rotation flavors: QuaRot (plain Hadamard, 1 candidate) vs
+    // SpinQuant-lite (best of 6 candidates by outlier score).
+    for (flavor, candidates) in [("quarot", 1usize), ("spinquant", 6)] {
+        let mut rotated = s.ps.clone();
+        let mut rng = Rng::new(42);
+        let (_r, before, after) =
+            spinquant_rotate(&mut rotated, &sample_tokens, candidates, &mut rng);
+        eprintln!("[{flavor}] outlier score {before:.2} -> {after:.2}");
+        // Hessians must come from the rotated model.
+        let mut batcher = Batcher::new(corpus, Split::Calib, s.pipeline.rt.manifest.batch, 4);
+        let stats = collect_stats(&s.pipeline.rt, &rotated, &mut batcher, 4).unwrap();
+        for (wbits, artifact, setting) in [
+            (4u32, "fwd_loss_qa4kv4", "W4A4KV4"),
+            (4, "fwd_loss_qa4kv16", "W4A4KV16"),
+            (3, "fwd_loss_qa4kv4", "W3A4KV4"),
+            (2, "fwd_loss_qa4kv4", "W2A4KV4"),
+        ] {
+            for (suffix, groups) in [("", 0usize), ("+gquant", 4)] {
+                let qcfg = QuantConfig::with(QuantMethod::Gptq, wbits, groups);
+                let layers = s.pipeline.quantize(&rotated, &stats, &qcfg).unwrap();
+                let qps = s.pipeline.apply_quantized(&rotated, &layers);
+                let ppl = s.ppl(&qps, artifact);
+                table.row(vec![format!("{flavor}{suffix}"), setting.into(), f(ppl, 3)]);
+            }
+        }
+    }
+    table.print();
+    table.save_csv("table5_wa_quant").unwrap();
+}

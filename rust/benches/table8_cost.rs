@@ -1,0 +1,57 @@
+//! Paper Tables 8 & 9 — cost accounting: wall-clock of the quantization
+//! phase per method/bits/groups, plus Hessian-caching time and cache size
+//! (our single-node CPU analog of their GPU-hours and disk GiB).
+
+#[path = "common.rs"]
+mod common;
+
+use guidedquant::cfg::{QuantConfig, QuantMethod};
+use guidedquant::report::{f, Table};
+use guidedquant::util::human_bytes;
+
+fn main() {
+    let model = common::bench_model();
+    let s = common::setup(&model);
+
+    // Table 9 analog: Hessian caching cost (recompute once, timed).
+    let t = std::time::Instant::now();
+    let stats = s.pipeline.calib(&s.ps, true).unwrap();
+    let calib_secs = t.elapsed().as_secs_f64();
+    let cache_bytes = s.pipeline.metrics.get("hessian_cache_bytes") as u64;
+    println!(
+        "Table 9 analog: hessian caching {calib_secs:.2}s over {} batches, cache {} (g={})",
+        stats.batches,
+        human_bytes(cache_bytes),
+        stats.groups
+    );
+
+    // Table 8 analog: quantization wall-time per method × bits × g.
+    let mut table = Table::new(
+        &format!("Table 8 analog — quantization cost ({model})"),
+        &["method", "bits", "groups", "secs"],
+    );
+    for bits in [2u32, 4] {
+        for (name, method, groups) in [
+            ("lnq", QuantMethod::Lnq, 0usize),
+            ("lnq+gq(g=1)", QuantMethod::Lnq, 1),
+            ("lnq+gq(g=2)", QuantMethod::Lnq, 2),
+            ("lnq+gq(g=4)", QuantMethod::Lnq, 4),
+            ("qtip", QuantMethod::Trellis, 0),
+            ("qtip+gq(g=4)", QuantMethod::Trellis, 4),
+        ] {
+            let t = std::time::Instant::now();
+            let _ = s
+                .pipeline
+                .quantize(&s.ps, &stats, &QuantConfig::with(method, bits, groups))
+                .unwrap();
+            table.row(vec![
+                name.into(),
+                bits.to_string(),
+                groups.to_string(),
+                f(t.elapsed().as_secs_f64(), 2),
+            ]);
+        }
+    }
+    table.print();
+    table.save_csv("table8_cost").unwrap();
+}

@@ -1,0 +1,77 @@
+//! Micro-bench harness (criterion is unavailable offline): warmup + timed
+//! repetitions with mean/stddev reporting, used by `rust/benches/*.rs`
+//! (`harness = false` targets run by `cargo bench`).
+
+use crate::util::{mean, stddev};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_secs: f64,
+    pub std_secs: f64,
+    pub reps: usize,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self, units: f64) -> f64 {
+        units / self.mean_secs.max(1e-12)
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} {:>10.3} ms ± {:>7.3} ms  (n={})",
+            self.name,
+            self.mean_secs * 1e3,
+            self.std_secs * 1e3,
+            self.reps
+        )
+    }
+}
+
+/// Time `f` with `warmup` + `reps` runs; prints and returns the result.
+pub fn bench<T>(name: &str, warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t = std::time::Instant::now();
+        std::hint::black_box(f());
+        times.push(t.elapsed().as_secs_f64());
+    }
+    let res = BenchResult {
+        name: name.to_string(),
+        mean_secs: mean(&times),
+        std_secs: stddev(&times),
+        reps: times.len(),
+    };
+    println!("{res}");
+    res
+}
+
+/// Scale down bench workloads under `GQ_BENCH_FAST=1` (CI smoke runs).
+pub fn fast_mode() -> bool {
+    std::env::var("GQ_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_positive_time() {
+        let r = bench("noop-ish", 1, 3, || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.mean_secs >= 0.0);
+        assert_eq!(r.reps, 3);
+        assert!(r.per_sec(1000.0) > 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Configuration system: model presets (mirroring python/compile/config.py),
+//! quantization + pipeline configs, and a minimal TOML-subset parser so
+//! deployments can be driven from files without serde.
+
+pub mod presets;
+pub mod quant_cfg;
+pub mod toml;
+
+pub use presets::{preset, BatchConfig, LinearSpec, ModelConfig, ParamSpec, PRESET_NAMES};
+pub use quant_cfg::{PipelineConfig, QuantConfig, QuantMethod, TrellisVariant};
+pub use toml::TomlDoc;

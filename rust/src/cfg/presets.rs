@@ -1,0 +1,194 @@
+//! Model-family presets. These mirror `python/compile/config.py` exactly;
+//! the artifact manifest is cross-checked against them at load time
+//! (`runtime::manifest`), so a drift between the two fails fast.
+
+/// One named parameter tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize, // 1 for vectors (norm scales)
+}
+
+/// One quantizable linear layer (7 per transformer block, Llama layout).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinearSpec {
+    pub name: String,
+    pub d_in: usize,
+    pub d_out: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub rope_theta: f32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchConfig {
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl BatchConfig {
+    pub fn tokens(&self) -> usize {
+        self.batch * self.seq
+    }
+}
+
+pub const PRESET_NAMES: [&str; 3] = ["tiny", "small", "base"];
+
+/// Look up a preset by name (panics on unknown name — callers validate).
+pub fn preset(name: &str) -> (ModelConfig, BatchConfig) {
+    match name {
+        "tiny" => (
+            ModelConfig {
+                name: "tiny".into(),
+                vocab: 512,
+                d_model: 128,
+                n_layers: 2,
+                n_heads: 4,
+                d_ff: 256,
+                rope_theta: 10000.0,
+            },
+            BatchConfig { batch: 2, seq: 64 },
+        ),
+        "small" => (
+            ModelConfig {
+                name: "small".into(),
+                vocab: 2048,
+                d_model: 256,
+                n_layers: 4,
+                n_heads: 8,
+                d_ff: 512,
+                rope_theta: 10000.0,
+            },
+            BatchConfig { batch: 4, seq: 128 },
+        ),
+        "base" => (
+            ModelConfig {
+                name: "base".into(),
+                vocab: 4096,
+                d_model: 512,
+                n_layers: 6,
+                n_heads: 8,
+                d_ff: 1024,
+                rope_theta: 10000.0,
+            },
+            BatchConfig { batch: 2, seq: 128 },
+        ),
+        other => panic!("unknown model preset `{other}` (expected one of {PRESET_NAMES:?})"),
+    }
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Canonical flat parameter order — must match python param_specs().
+    pub fn param_specs(&self) -> Vec<ParamSpec> {
+        let (d, ff, v) = (self.d_model, self.d_ff, self.vocab);
+        let mut out = vec![ParamSpec { name: "tok_emb".into(), rows: v, cols: d }];
+        for l in 0..self.n_layers {
+            let p = format!("layers.{l}.");
+            let mut push = |suffix: &str, rows: usize, cols: usize| {
+                out.push(ParamSpec { name: format!("{p}{suffix}"), rows, cols })
+            };
+            push("attn_norm", d, 1);
+            push("wq", d, d);
+            push("wk", d, d);
+            push("wv", d, d);
+            push("wo", d, d);
+            push("mlp_norm", d, 1);
+            push("wgate", d, ff);
+            push("wup", d, ff);
+            push("wdown", ff, d);
+        }
+        out.push(ParamSpec { name: "final_norm".into(), rows: d, cols: 1 });
+        out.push(ParamSpec { name: "head".into(), rows: d, cols: v });
+        out
+    }
+
+    /// The quantizable linears, flat order — must match python linear_specs().
+    pub fn linear_specs(&self) -> Vec<LinearSpec> {
+        let (d, ff) = (self.d_model, self.d_ff);
+        let mut out = Vec::new();
+        for l in 0..self.n_layers {
+            let p = format!("layers.{l}.");
+            let mut push = |suffix: &str, d_in: usize, d_out: usize| {
+                out.push(LinearSpec { name: format!("{p}{suffix}"), d_in, d_out })
+            };
+            push("wq", d, d);
+            push("wk", d, d);
+            push("wv", d, d);
+            push("wo", d, d);
+            push("wgate", d, ff);
+            push("wup", d, ff);
+            push("wdown", ff, d);
+        }
+        out
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_specs().iter().map(|p| p.rows * p.cols).sum()
+    }
+
+    /// Total quantizable weight count (the denominator for avg-bits math).
+    pub fn n_linear_params(&self) -> usize {
+        self.linear_specs().iter().map(|l| l.d_in * l.d_out).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for name in PRESET_NAMES {
+            let (m, b) = preset(name);
+            assert_eq!(m.name, name);
+            assert!(b.tokens() > 0);
+            assert_eq!(m.d_model % m.n_heads, 0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown model preset")]
+    fn unknown_preset_panics() {
+        preset("llama-2-7b");
+    }
+
+    #[test]
+    fn param_specs_match_python_counts() {
+        let (m, _) = preset("tiny");
+        // 1 (emb) + 9 per layer * 2 + 2 (final_norm, head)
+        assert_eq!(m.param_specs().len(), 1 + 9 * 2 + 2);
+        assert_eq!(m.linear_specs().len(), 7 * 2);
+    }
+
+    #[test]
+    fn small_param_count_is_llama_like() {
+        let (m, _) = preset("small");
+        let n = m.n_params();
+        // ~3.7M for the small preset (see DESIGN.md §2).
+        assert!((3_000_000..8_000_000).contains(&n), "{n}");
+        assert!(m.n_linear_params() < n);
+    }
+
+    #[test]
+    fn linear_specs_shapes() {
+        let (m, _) = preset("tiny");
+        let ls = m.linear_specs();
+        assert_eq!(ls[0].name, "layers.0.wq");
+        assert_eq!((ls[0].d_in, ls[0].d_out), (128, 128));
+        let down = ls.iter().find(|l| l.name == "layers.1.wdown").unwrap();
+        assert_eq!((down.d_in, down.d_out), (256, 128));
+    }
+}

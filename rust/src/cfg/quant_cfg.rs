@@ -1,0 +1,268 @@
+//! Quantization + pipeline configuration.
+
+use super::toml::TomlDoc;
+use anyhow::{bail, Result};
+
+/// Which quantization algorithm to run (the paper's methods + baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QuantMethod {
+    /// Round-to-nearest uniform scalar (sanity baseline).
+    Rtn,
+    /// GPTQ (Frantar et al., 2023) with a uniform grid.
+    Gptq,
+    /// SqueezeLLM (Kim et al., 2024): diag-Fisher weighted k-means.
+    SqueezeLlm,
+    /// GPTVQ 1D (van Baalen et al., 2024): GD codebook + GPTQ assignments.
+    Gptvq1d,
+    /// GPTVQ 2D vector variant.
+    Gptvq2d,
+    /// LNQ (this paper, Algorithm 2).
+    Lnq,
+    /// QTIP-style trellis vector quantization.
+    Trellis,
+}
+
+impl QuantMethod {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "rtn" => Self::Rtn,
+            "gptq" => Self::Gptq,
+            "squeezellm" => Self::SqueezeLlm,
+            "gptvq1d" => Self::Gptvq1d,
+            "gptvq2d" => Self::Gptvq2d,
+            "lnq" => Self::Lnq,
+            "trellis" | "qtip" => Self::Trellis,
+            other => bail!("unknown quant method `{other}`"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Rtn => "rtn",
+            Self::Gptq => "gptq",
+            Self::SqueezeLlm => "squeezellm",
+            Self::Gptvq1d => "gptvq1d",
+            Self::Gptvq2d => "gptvq2d",
+            Self::Lnq => "lnq",
+            Self::Trellis => "trellis",
+        }
+    }
+}
+
+/// Full quantization configuration for one run.
+#[derive(Debug, Clone)]
+pub struct QuantConfig {
+    pub method: QuantMethod,
+    /// Target bit-width b (codebook size m = 2^b for scalar LUT methods).
+    pub bits: u32,
+    /// GuidedQuant: number of saliency groups g; 0 disables GuidedQuant
+    /// (plain layer-wise Hessian H = X^T X is used instead).
+    pub groups: usize,
+    /// LNQ alternating iterations T (paper: 2 for 7B/13B, 1 for 70B).
+    pub lnq_iters: usize,
+    /// CD cycles K (paper: 4).
+    pub cd_cycles: usize,
+    /// Lazy-batch block size b for CD/GPTQ (paper: 128; scaled down here).
+    pub cd_block: usize,
+    /// Dense-and-sparse: fraction of weights kept fp (paper: 0.45% = 0.0045).
+    pub sparse_frac: f32,
+    /// Vector quantization dimension (GPTVQ 2D / trellis).
+    pub vq_dim: usize,
+    /// Trellis variant: "1mad" | "3inst" | "hyb".
+    pub trellis_variant: TrellisVariant,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrellisVariant {
+    OneMad,
+    ThreeInst,
+    Hyb,
+}
+
+impl TrellisVariant {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "1mad" => Self::OneMad,
+            "3inst" => Self::ThreeInst,
+            "hyb" => Self::Hyb,
+            other => bail!("unknown trellis variant `{other}`"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::OneMad => "1mad",
+            Self::ThreeInst => "3inst",
+            Self::Hyb => "hyb",
+        }
+    }
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig {
+            method: QuantMethod::Lnq,
+            bits: 4,
+            groups: 4,
+            lnq_iters: 2,
+            cd_cycles: 4,
+            cd_block: 32,
+            sparse_frac: 0.0,
+            vq_dim: 2,
+            trellis_variant: TrellisVariant::Hyb,
+            seed: 0,
+        }
+    }
+}
+
+impl QuantConfig {
+    pub fn with(method: QuantMethod, bits: u32, groups: usize) -> Self {
+        QuantConfig { method, bits, groups, ..Default::default() }
+    }
+
+    /// Codebook size for scalar LUT methods.
+    pub fn codebook_size(&self) -> usize {
+        1usize << self.bits
+    }
+
+    pub fn from_toml(doc: &TomlDoc, section: &str) -> Result<Self> {
+        let mut c = QuantConfig::default();
+        if let Some(v) = doc.get_str(section, "method") {
+            c.method = QuantMethod::parse(v)?;
+        }
+        if let Some(v) = doc.get_int(section, "bits") {
+            c.bits = v as u32;
+        }
+        if let Some(v) = doc.get_int(section, "groups") {
+            c.groups = v as usize;
+        }
+        if let Some(v) = doc.get_int(section, "lnq_iters") {
+            c.lnq_iters = v as usize;
+        }
+        if let Some(v) = doc.get_int(section, "cd_cycles") {
+            c.cd_cycles = v as usize;
+        }
+        if let Some(v) = doc.get_float(section, "sparse_frac") {
+            c.sparse_frac = v as f32;
+        }
+        if let Some(v) = doc.get_int(section, "vq_dim") {
+            c.vq_dim = v as usize;
+        }
+        if let Some(v) = doc.get_str(section, "trellis_variant") {
+            c.trellis_variant = TrellisVariant::parse(v)?;
+        }
+        if let Some(v) = doc.get_int(section, "seed") {
+            c.seed = v as u64;
+        }
+        Ok(c)
+    }
+}
+
+/// End-to-end pipeline configuration (`gq pipeline`).
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub model: String,
+    pub artifacts_dir: String,
+    pub out_dir: String,
+    /// Training steps driven through the train_step artifact.
+    pub train_steps: usize,
+    /// Calibration batches for Hessian/saliency accumulation.
+    pub calib_batches: usize,
+    /// Evaluation batches for perplexity.
+    pub eval_batches: usize,
+    /// Worker threads for the (layer, group) quantization job queue.
+    pub workers: usize,
+    pub quant: QuantConfig,
+    pub seed: u64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            model: "small".into(),
+            artifacts_dir: "artifacts".into(),
+            out_dir: "target/gq".into(),
+            train_steps: 200,
+            calib_batches: 8,
+            eval_batches: 16,
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            quant: QuantConfig::default(),
+            seed: 0,
+        }
+    }
+}
+
+impl PipelineConfig {
+    pub fn from_toml(doc: &TomlDoc) -> Result<Self> {
+        let mut c = PipelineConfig::default();
+        let s = "pipeline";
+        if let Some(v) = doc.get_str(s, "model") {
+            c.model = v.to_string();
+        }
+        if let Some(v) = doc.get_str(s, "artifacts_dir") {
+            c.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = doc.get_str(s, "out_dir") {
+            c.out_dir = v.to_string();
+        }
+        if let Some(v) = doc.get_int(s, "train_steps") {
+            c.train_steps = v as usize;
+        }
+        if let Some(v) = doc.get_int(s, "calib_batches") {
+            c.calib_batches = v as usize;
+        }
+        if let Some(v) = doc.get_int(s, "eval_batches") {
+            c.eval_batches = v as usize;
+        }
+        if let Some(v) = doc.get_int(s, "workers") {
+            c.workers = v as usize;
+        }
+        if let Some(v) = doc.get_int(s, "seed") {
+            c.seed = v as u64;
+        }
+        c.quant = QuantConfig::from_toml(doc, "quant")?;
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_round_trip() {
+        for m in [
+            QuantMethod::Rtn,
+            QuantMethod::Gptq,
+            QuantMethod::SqueezeLlm,
+            QuantMethod::Gptvq1d,
+            QuantMethod::Gptvq2d,
+            QuantMethod::Lnq,
+            QuantMethod::Trellis,
+        ] {
+            assert_eq!(QuantMethod::parse(m.name()).unwrap(), m);
+        }
+        assert!(QuantMethod::parse("awq").is_err());
+    }
+
+    #[test]
+    fn codebook_size_follows_bits() {
+        let c = QuantConfig::with(QuantMethod::Lnq, 3, 4);
+        assert_eq!(c.codebook_size(), 8);
+    }
+
+    #[test]
+    fn from_toml_overrides_defaults() {
+        let doc = TomlDoc::parse(
+            "[pipeline]\nmodel = \"tiny\"\ntrain_steps = 7\n[quant]\nmethod = \"gptq\"\nbits = 2\nsparse_frac = 0.0045\n",
+        )
+        .unwrap();
+        let c = PipelineConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.model, "tiny");
+        assert_eq!(c.train_steps, 7);
+        assert_eq!(c.quant.method, QuantMethod::Gptq);
+        assert_eq!(c.quant.bits, 2);
+        assert!((c.quant.sparse_frac - 0.0045).abs() < 1e-9);
+    }
+}

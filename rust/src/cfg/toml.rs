@@ -1,0 +1,168 @@
+//! Minimal TOML-subset parser (sections, string/int/float/bool scalars,
+//! `#` comments). Enough to drive deployment configs without serde.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+/// Parsed document: (section, key) -> value. Keys outside any section live
+/// under the empty section "".
+#[derive(Debug, Default, Clone)]
+pub struct TomlDoc {
+    values: BTreeMap<(String, String), TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let Some(name) = name.strip_suffix(']') else {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                };
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                bail!("line {}: expected `key = value`", lineno + 1);
+            };
+            let key = line[..eq].trim().to_string();
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            doc.values.insert((section.clone(), key), val);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<TomlDoc> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.values.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key) {
+            Some(TomlValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key) {
+            Some(TomlValue::Int(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key) {
+            Some(TomlValue::Float(v)) => Some(*v),
+            Some(TomlValue::Int(v)) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key) {
+            Some(TomlValue::Bool(v)) => Some(*v),
+            _ => None,
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect `#` inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(raw: &str) -> Result<TomlValue, String> {
+    if raw.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let Some(inner) = stripped.strip_suffix('"') else {
+            return Err("unterminated string".into());
+        };
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match raw {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(v) = raw.parse::<i64>() {
+        return Ok(TomlValue::Int(v));
+    }
+    if let Ok(v) = raw.parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    Err(format!("cannot parse value `{raw}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = TomlDoc::parse(
+            "top = 1\n[pipeline]\nmodel = \"small\" # comment\nsteps = 200\nlr = 1e-3\nfast = true\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_int("", "top"), Some(1));
+        assert_eq!(doc.get_str("pipeline", "model"), Some("small"));
+        assert_eq!(doc.get_int("pipeline", "steps"), Some(200));
+        assert!((doc.get_float("pipeline", "lr").unwrap() - 1e-3).abs() < 1e-12);
+        assert_eq!(doc.get_bool("pipeline", "fast"), Some(true));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = TomlDoc::parse("x = 2").unwrap();
+        assert_eq!(doc.get_float("", "x"), Some(2.0));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = TomlDoc::parse("s = \"a#b\"").unwrap();
+        assert_eq!(doc.get_str("", "s"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        let err = TomlDoc::parse("ok = 1\nbroken").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(TomlDoc::parse("[unterminated\n").is_err());
+        assert!(TomlDoc::parse("x = @@\n").is_err());
+    }
+
+    #[test]
+    fn missing_keys_are_none() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert!(doc.get("a", "b").is_none());
+        assert!(doc.get_str("", "x").is_none());
+    }
+}

@@ -1,0 +1,124 @@
+//! Hand-rolled CLI argument parser for the `gq` launcher (clap is not
+//! available offline). Supports `--flag value`, `--flag=value`, boolean
+//! `--flag`, and positional arguments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some(eq) = name.find('=') {
+                    out.flags.insert(name[..eq].to_string(), name[eq + 1..].to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let val = iter.next().unwrap();
+                    out.flags.insert(name.to_string(), val);
+                } else {
+                    out.bools.push(name.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name}: expected integer, got `{v}`")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name}: expected integer, got `{v}`")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name}: expected float, got `{v}`")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name) || self.flags.contains_key(name)
+    }
+
+    /// True only for value-less boolean switches.
+    pub fn switch(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["pipeline", "--model", "small", "--bits=2", "--verbose"]);
+        assert_eq!(a.positional, vec!["pipeline"]);
+        assert_eq!(a.get("model"), Some("small"));
+        assert_eq!(a.get("bits"), Some("2"));
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("model"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["--steps", "10", "--lr", "0.5"]);
+        assert_eq!(a.get_usize("steps", 1).unwrap(), 10);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!((a.get_f64("lr", 0.0).unwrap() - 0.5).abs() < 1e-12);
+        assert!(a.get_usize("lr", 0).is_err());
+    }
+
+    #[test]
+    fn boolean_flag_before_flagged_value() {
+        let a = parse(&["--check", "--model", "tiny"]);
+        assert!(a.switch("check") || a.get("check") == Some("--model"));
+        // `--check` is followed by another flag, so it's a switch:
+        assert!(a.switch("check"));
+        assert_eq!(a.get("model"), Some("tiny"));
+    }
+
+    #[test]
+    fn trailing_boolean() {
+        let a = parse(&["--fast"]);
+        assert!(a.switch("fast"));
+    }
+}

@@ -1,0 +1,69 @@
+//! Phase metrics: wall-time and byte counters surfaced in the pipeline
+//! report (the Table 8/9 cost-accounting analogs).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<BTreeMap<String, f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, key: &str, value: f64) {
+        *self.inner.lock().unwrap().entry(key.to_string()).or_default() += value;
+    }
+
+    pub fn set(&self, key: &str, value: f64) {
+        self.inner.lock().unwrap().insert(key.to_string(), value);
+    }
+
+    pub fn get(&self, key: &str) -> f64 {
+        self.inner.lock().unwrap().get(key).copied().unwrap_or(0.0)
+    }
+
+    /// Time a closure and accumulate under `key` (seconds).
+    pub fn time<T>(&self, key: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(key, t.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, f64> {
+        self.inner.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.add("x", 1.5);
+        m.add("x", 0.5);
+        m.set("y", 7.0);
+        assert_eq!(m.get("x"), 2.0);
+        assert_eq!(m.get("y"), 7.0);
+        assert_eq!(m.get("missing"), 0.0);
+    }
+
+    #[test]
+    fn time_records_positive() {
+        let m = Metrics::new();
+        let v = m.time("t", || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(m.get("t") >= 0.004);
+        assert!(m.snapshot().contains_key("t"));
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 coordinator: the quantization pipeline orchestrator.
+//!
+//! Phases (each driven from Rust, Python never on the path):
+//!   train → calib-stats (Hessian cache) → quantize (parallel
+//!   (layer, group) jobs) → eval → serve.
+//!
+//! The worker pool is a std::thread job queue (no tokio offline); metrics
+//! are collected per phase and surfaced in the pipeline report (Tables 8/9
+//! analogs).
+
+pub mod metrics;
+pub mod pipeline;
+pub mod pool;
+
+pub use metrics::Metrics;
+pub use pipeline::{Pipeline, PipelineReport, QuantizedLayer};
+pub use pool::run_jobs;

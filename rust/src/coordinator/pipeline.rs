@@ -1,0 +1,438 @@
+//! The end-to-end pipeline: train → calib-stats → quantize → eval.
+//!
+//! Everything executes from Rust: training steps and calibration
+//! forward/backward run through AOT HLO artifacts on PJRT; the quantization
+//! solvers run natively on the worker pool, one job per (layer, group) —
+//! the "embarrassingly parallel" structure the paper exploits (App. B.1).
+
+use anyhow::{Context, Result};
+
+use crate::cfg::{preset, PipelineConfig, QuantConfig, QuantMethod};
+use crate::data::{Batcher, Corpus, CorpusConfig, Split};
+use crate::fisher::{collect_stats, CalibStats, HessianCache};
+use crate::model::ParamStore;
+use crate::quant::cd::{CdConfig, CdStrategy};
+use crate::quant::gptq::Gptq;
+use crate::quant::gptvq::{Gptvq1d, GptvqVq};
+use crate::quant::grid::rtn_quantize;
+use crate::quant::guided::group_ranges;
+use crate::quant::lnq::Lnq;
+use crate::quant::sparse::{split_outliers, SparseOverlay};
+use crate::quant::squeezellm::{squeezellm_quantize, SqueezeLlm};
+use crate::quant::trellis::Trellis;
+use crate::quant::{LayerQuantizer, QuantResult};
+use crate::runtime::{Runtime, Value};
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+use super::metrics::Metrics;
+use super::pool::run_jobs;
+
+/// One quantized linear (decoded weights + coding metadata).
+pub struct QuantizedLayer {
+    pub name: String,
+    pub result: QuantResult,
+}
+
+pub struct Pipeline {
+    pub cfg: PipelineConfig,
+    pub rt: Runtime,
+    pub corpus: Corpus,
+    pub metrics: Metrics,
+    pub cache: HessianCache,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct PipelineReport {
+    pub train_losses: Vec<f32>,
+    pub calib_mean_loss: f64,
+    pub ppl_fp_eval: f64,
+    pub ppl_fp_shift: f64,
+    pub ppl_q_eval: f64,
+    pub ppl_q_shift: f64,
+    pub avg_bits: f64,
+    pub hessian_bytes: u64,
+    pub phase_seconds: std::collections::BTreeMap<String, f64>,
+}
+
+impl Pipeline {
+    pub fn new(cfg: PipelineConfig) -> Result<Pipeline> {
+        let rt = Runtime::load_model(&cfg.artifacts_dir, &cfg.model)?;
+        let corpus = Corpus::new(CorpusConfig::for_vocab(rt.manifest.model.vocab, cfg.seed));
+        let cache = HessianCache::new(std::path::Path::new(&cfg.out_dir).join("hessians"));
+        Ok(Pipeline { cfg, rt, corpus, metrics: Metrics::new(), cache })
+    }
+
+    pub fn init_params(&self) -> ParamStore {
+        let (model_cfg, _) = preset(&self.cfg.model);
+        ParamStore::init(&model_cfg, &mut Rng::new(self.cfg.seed ^ 0x1a17))
+    }
+
+    fn values_to_params(&self, ps: &ParamStore, vals: &[Value]) -> Result<Vec<Mat>> {
+        let specs = ps.cfg.param_specs();
+        anyhow::ensure!(vals.len() == specs.len(), "param value count mismatch");
+        specs
+            .iter()
+            .zip(vals)
+            .map(|(spec, v)| {
+                let data = v.as_f32()?.to_vec();
+                anyhow::ensure!(
+                    data.len() == spec.rows * spec.cols,
+                    "param {} size mismatch",
+                    spec.name
+                );
+                Ok(Mat::from_vec(spec.rows, spec.cols, data))
+            })
+            .collect()
+    }
+
+    /// Drive Adam training through the train_step artifact; returns the
+    /// loss curve (the end-to-end driver logs this).
+    pub fn train(&self, ps: &mut ParamStore, steps: usize, log_every: usize) -> Result<Vec<f32>> {
+        let artifact = self.rt.artifact("train_step")?;
+        let bc = self.rt.manifest.batch;
+        let mut batcher = Batcher::new(&self.corpus, Split::Train, bc, steps);
+        let n_p = ps.cfg.param_specs().len();
+        let mut m: Vec<Value> = ps
+            .cfg
+            .param_specs()
+            .iter()
+            .map(|s| {
+                if s.cols == 1 && s.name.ends_with("norm") {
+                    Value::F32(vec![0.0; s.rows], vec![s.rows])
+                } else {
+                    Value::F32(vec![0.0; s.rows * s.cols], vec![s.rows, s.cols])
+                }
+            })
+            .collect();
+        let mut v = m.clone();
+        let mut step = Value::Scalar(0.0);
+        let mut losses = Vec::with_capacity(steps);
+        for it in 0..steps {
+            let Some(toks) = batcher.next_batch() else {
+                break;
+            };
+            let mut args = self.rt.param_args(ps);
+            args.extend(m.iter().cloned());
+            args.extend(v.iter().cloned());
+            args.push(step.clone());
+            args.push(Value::tokens(bc.batch, bc.seq, &toks));
+            let outs = artifact.execute(&args)?;
+            anyhow::ensure!(outs.len() == 1 + 3 * n_p + 1, "train_step output arity");
+            let loss = outs[0].scalar_f32()?;
+            losses.push(loss);
+            let new_params = self.values_to_params(ps, &outs[1..1 + n_p])?;
+            ps.set_flat(new_params);
+            m = outs[1 + n_p..1 + 2 * n_p].to_vec();
+            v = outs[1 + 2 * n_p..1 + 3 * n_p].to_vec();
+            step = Value::Scalar(outs[1 + 3 * n_p].scalar_f32()?);
+            if log_every > 0 && (it % log_every == 0 || it + 1 == steps) {
+                crate::log_info!("train", "step {it:4}  loss {loss:.4}");
+            }
+        }
+        Ok(losses)
+    }
+
+    /// Calibration statistics, via the disk cache when available.
+    pub fn calib(&self, ps: &ParamStore, force: bool) -> Result<CalibStats> {
+        let key = format!("{}_{}", self.cfg.model, self.cfg.seed);
+        if !force && self.cache.exists(&key) {
+            crate::log_info!("calib", "loading Hessian cache for {key}");
+            return self.cache.load(&key);
+        }
+        let bc = self.rt.manifest.batch;
+        let mut batcher =
+            Batcher::new(&self.corpus, Split::Calib, bc, self.cfg.calib_batches);
+        let stats = self.metrics.time("calib_secs", || {
+            collect_stats(&self.rt, ps, &mut batcher, self.cfg.calib_batches)
+        })?;
+        let bytes = self.cache.save(&key, &stats)?;
+        self.metrics.set("hessian_cache_bytes", bytes as f64);
+        crate::log_info!(
+            "calib",
+            "{} batches, mean loss {:.4}, cache {}",
+            stats.batches,
+            stats.mean_loss(),
+            crate::util::human_bytes(bytes)
+        );
+        Ok(stats)
+    }
+
+    /// Quantize every linear with the configured method. Jobs are
+    /// (layer, group)-granular and run on the worker pool.
+    pub fn quantize(
+        &self,
+        ps: &ParamStore,
+        stats: &CalibStats,
+        qcfg: &QuantConfig,
+    ) -> Result<Vec<QuantizedLayer>> {
+        let specs = ps.cfg.linear_specs();
+        self.metrics.time("quantize_secs", || {
+            // Methods that ignore H quantize per linear in one job.
+            match qcfg.method {
+                QuantMethod::Rtn => {
+                    let jobs: Vec<_> = specs
+                        .iter()
+                        .map(|spec| {
+                            let w = ps.get(&spec.name).clone();
+                            let bits = qcfg.bits;
+                            let name = spec.name.clone();
+                            move || QuantizedLayer { name, result: rtn_quantize(&w, bits) }
+                        })
+                        .collect();
+                    return Ok(run_jobs(jobs, self.cfg.workers));
+                }
+                QuantMethod::SqueezeLlm => {
+                    let sq = SqueezeLlm { bits: qcfg.bits, iters: 50, seed: qcfg.seed };
+                    let jobs: Vec<_> = specs
+                        .iter()
+                        .map(|spec| {
+                            let w = ps.get(&spec.name).clone();
+                            let diagf = stats
+                                .layer(&spec.name)
+                                .map(|l| l.diagf.clone())
+                                .unwrap_or_else(|| Mat::from_fn(w.rows, w.cols, |_, _| 1.0));
+                            let sq = sq.clone();
+                            let name = spec.name.clone();
+                            move || QuantizedLayer {
+                                name,
+                                result: squeezellm_quantize(&w, &diagf, &sq).expect("squeezellm"),
+                            }
+                        })
+                        .collect();
+                    return Ok(run_jobs(jobs, self.cfg.workers));
+                }
+                _ => {}
+            }
+
+            // Layer-wise output-based methods: (layer, group) jobs.
+            let g = if qcfg.groups == 0 { 1 } else { qcfg.groups.min(stats.groups) };
+            struct GroupJobOut {
+                li: usize,
+                #[allow(dead_code)]
+                k: usize,
+                lo: usize,
+                hi: usize,
+                res: QuantResult,
+            }
+            let mut jobs: Vec<Box<dyn FnOnce() -> Result<GroupJobOut> + Send>> = Vec::new();
+            for (li, spec) in specs.iter().enumerate() {
+                let layer_stats = stats
+                    .layer(&spec.name)
+                    .with_context(|| format!("no calib stats for {}", spec.name))?;
+                let hessians: Vec<Mat> = if qcfg.groups == 0 {
+                    vec![layer_stats.plain_hessian().clone()]
+                } else {
+                    layer_stats.guided_hessians(g)
+                };
+                let w = ps.get(&spec.name);
+                for (k, &(lo, hi)) in group_ranges(spec.d_out, hessians.len()).iter().enumerate() {
+                    let h = hessians[k].clone();
+                    let wg = w.slice_cols(lo, hi);
+                    let qcfg = qcfg.clone();
+                    jobs.push(Box::new(move || {
+                        let q = build_quantizer(&qcfg)?;
+                        let (dense, overlay) = if qcfg.sparse_frac > 0.0 {
+                            split_outliers(&wg, None, qcfg.sparse_frac)
+                        } else {
+                            (wg.clone(), SparseOverlay::default())
+                        };
+                        let mut res = q.quantize(&h, &dense)?;
+                        if !overlay.is_empty() {
+                            overlay.apply(&mut res.w_hat);
+                            res.avg_bits +=
+                                overlay.len() as f64 * 48.0 / (wg.rows * wg.cols) as f64;
+                        }
+                        Ok(GroupJobOut { li, k: k + 1, lo, hi, res })
+                    }));
+                }
+            }
+            let outs = run_jobs(jobs, self.cfg.workers);
+            // Assemble per linear.
+            let mut per_linear: Vec<Option<QuantizedLayer>> = specs
+                .iter()
+                .map(|s| {
+                    Some(QuantizedLayer {
+                        name: s.name.clone(),
+                        result: QuantResult {
+                            w_hat: Mat::zeros(s.d_in, s.d_out),
+                            codes: None,
+                            codebooks: None,
+                            avg_bits: 0.0,
+                        },
+                    })
+                })
+                .collect();
+            let mut any_missing_codes = vec![false; specs.len()];
+            for out in outs {
+                let GroupJobOut { li, k: _, lo, hi, res } = out?;
+                let spec = &specs[li];
+                let slot = per_linear[li].as_mut().unwrap();
+                slot.result.w_hat.paste_cols(lo, &res.w_hat);
+                slot.result.avg_bits += res.avg_bits * (hi - lo) as f64 / spec.d_out as f64;
+                match (res.codes, res.codebooks) {
+                    // Only scalar-coded results (one code per weight) are
+                    // reassembled; VQ/trellis codes use different layouts
+                    // and are served through their own builders instead.
+                    (Some(gc), Some(gcb))
+                        if !any_missing_codes[li] && gc.len() == spec.d_in * (hi - lo) =>
+                    {
+                        let codes = slot
+                            .result
+                            .codes
+                            .get_or_insert_with(|| vec![0u16; spec.d_in * spec.d_out]);
+                        for i in 0..spec.d_in {
+                            for (jj, j) in (lo..hi).enumerate() {
+                                codes[i * spec.d_out + j] = gc[i * (hi - lo) + jj];
+                            }
+                        }
+                        let cbs = slot
+                            .result
+                            .codebooks
+                            .get_or_insert_with(|| Mat::zeros(spec.d_out, gcb.cols));
+                        if cbs.cols == gcb.cols {
+                            for (jj, j) in (lo..hi).enumerate() {
+                                cbs.row_mut(j).copy_from_slice(gcb.row(jj));
+                            }
+                        } else {
+                            any_missing_codes[li] = true;
+                        }
+                    }
+                    _ => any_missing_codes[li] = true,
+                }
+            }
+            let mut result = Vec::with_capacity(specs.len());
+            for (li, slot) in per_linear.into_iter().enumerate() {
+                let mut ql = slot.unwrap();
+                if any_missing_codes[li] {
+                    ql.result.codes = None;
+                    ql.result.codebooks = None;
+                }
+                result.push(ql);
+            }
+            Ok(result)
+        })
+    }
+
+    /// Install quantized weights into a copy of the parameter store.
+    pub fn apply_quantized(&self, ps: &ParamStore, layers: &[QuantizedLayer]) -> ParamStore {
+        let mut out = ps.clone();
+        for l in layers {
+            out.set(&l.name, l.result.w_hat.clone());
+        }
+        out
+    }
+
+    /// Weighted average bits across quantized layers.
+    pub fn avg_bits(&self, ps: &ParamStore, layers: &[QuantizedLayer]) -> f64 {
+        let mut bits = 0.0f64;
+        let mut weight = 0.0f64;
+        for l in layers {
+            let n = (l.result.w_hat.rows * l.result.w_hat.cols) as f64;
+            bits += l.result.avg_bits * n;
+            weight += n;
+        }
+        let _ = ps;
+        bits / weight.max(1.0)
+    }
+
+    /// Perplexity on a split through the given fwd artifact
+    /// ("fwd_loss" or a fwd_loss_qa* W&A variant).
+    pub fn perplexity(&self, ps: &ParamStore, split: Split, artifact: &str) -> Result<f64> {
+        crate::eval::perplexity(&self.rt, ps, &self.corpus, split, self.cfg.eval_batches, artifact)
+    }
+
+    /// Full pipeline run (the end-to-end driver).
+    pub fn run(&self) -> Result<PipelineReport> {
+        let mut report = PipelineReport::default();
+        let mut ps = self.init_params();
+        report.train_losses = self.metrics.time("train_secs", || {
+            self.train(&mut ps, self.cfg.train_steps, self.cfg.train_steps.max(10) / 10)
+        })?;
+        let stats = self.calib(&ps, false)?;
+        report.calib_mean_loss = stats.mean_loss();
+        report.hessian_bytes = self.metrics.get("hessian_cache_bytes") as u64;
+        report.ppl_fp_eval =
+            self.metrics.time("eval_secs", || self.perplexity(&ps, Split::Eval, "fwd_loss"))?;
+        report.ppl_fp_shift = self.perplexity(&ps, Split::EvalShift, "fwd_loss")?;
+        let layers = self.quantize(&ps, &stats, &self.cfg.quant)?;
+        report.avg_bits = self.avg_bits(&ps, &layers);
+        let qps = self.apply_quantized(&ps, &layers);
+        report.ppl_q_eval = self.perplexity(&qps, Split::Eval, "fwd_loss")?;
+        report.ppl_q_shift = self.perplexity(&qps, Split::EvalShift, "fwd_loss")?;
+        report.phase_seconds = self.metrics.snapshot();
+        Ok(report)
+    }
+}
+
+/// Build the configured layer-wise quantizer.
+pub fn build_quantizer(qcfg: &QuantConfig) -> Result<Box<dyn LayerQuantizer>> {
+    let cd = CdConfig {
+        cycles: qcfg.cd_cycles,
+        strategy: CdStrategy::Lazy { block: qcfg.cd_block },
+    };
+    Ok(match qcfg.method {
+        QuantMethod::Gptq => Box::new(Gptq { bits: qcfg.bits, block: qcfg.cd_block }),
+        QuantMethod::Lnq => Box::new(Lnq {
+            bits: qcfg.bits,
+            t_iters: qcfg.lnq_iters,
+            cd,
+            sensitivity: None,
+            seed: qcfg.seed,
+        }),
+        QuantMethod::Gptvq1d => Box::new(Gptvq1d { bits: qcfg.bits, t_iters: 2, gd_steps: 8, seed: qcfg.seed }),
+        QuantMethod::Gptvq2d => Box::new(GptvqVq { bits: qcfg.bits, dim: qcfg.vq_dim, seed: qcfg.seed }),
+        QuantMethod::Trellis => {
+            let mut t = Trellis::new(qcfg.bits, qcfg.trellis_variant);
+            t.seed = qcfg.seed;
+            Box::new(t)
+        }
+        QuantMethod::Rtn | QuantMethod::SqueezeLlm => {
+            anyhow::bail!("{:?} is not a layer-wise output-based method", qcfg.method)
+        }
+    })
+}
+
+impl PipelineReport {
+    pub fn print(&self) {
+        println!("== pipeline report ==");
+        if let (Some(first), Some(last)) = (self.train_losses.first(), self.train_losses.last()) {
+            println!(
+                "train: {} steps, loss {first:.3} -> {last:.3}",
+                self.train_losses.len()
+            );
+        }
+        println!("calib mean loss: {:.4}", self.calib_mean_loss);
+        println!(
+            "ppl fp:    eval {:.3}  shift {:.3}",
+            self.ppl_fp_eval, self.ppl_fp_shift
+        );
+        println!(
+            "ppl quant: eval {:.3}  shift {:.3}  (avg bits {:.2})",
+            self.ppl_q_eval, self.ppl_q_shift, self.avg_bits
+        );
+        for (k, v) in &self.phase_seconds {
+            println!("  {k}: {v:.2}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_quantizer_dispatch() {
+        for method in [
+            QuantMethod::Gptq,
+            QuantMethod::Lnq,
+            QuantMethod::Gptvq1d,
+            QuantMethod::Gptvq2d,
+            QuantMethod::Trellis,
+        ] {
+            let q = build_quantizer(&QuantConfig::with(method, 2, 2)).unwrap();
+            assert!(!q.name().is_empty());
+        }
+        assert!(build_quantizer(&QuantConfig::with(QuantMethod::Rtn, 2, 2)).is_err());
+    }
+}

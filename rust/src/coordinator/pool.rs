@@ -1,0 +1,83 @@
+//! Worker pool: run an ordered list of independent jobs across threads.
+//!
+//! Jobs are claimed from a shared atomic cursor (work stealing without
+//! queues); results land in their original slots, so output order is
+//! deterministic regardless of scheduling. Panics in jobs propagate.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `jobs` on up to `workers` threads, preserving result order.
+pub fn run_jobs<T, F>(jobs: Vec<F>, workers: usize) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return jobs.into_iter().map(|j| j()).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let jobs: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let job = jobs[i].lock().unwrap().take().expect("job taken twice");
+                let out = job();
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|r| r.into_inner().unwrap().expect("job did not complete"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let jobs: Vec<_> = (0..50).map(|i| move || i * 2).collect();
+        let out = run_jobs(jobs, 8);
+        assert_eq!(out, (0..50).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_and_empty() {
+        let out: Vec<i32> = run_jobs(Vec::<fn() -> i32>::new(), 4);
+        assert!(out.is_empty());
+        let jobs: Vec<_> = (0..3).map(|i| move || i).collect();
+        assert_eq!(run_jobs(jobs, 1), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn actually_parallel() {
+        // With 4 workers, 4 sleeping jobs should finish in ~1 sleep.
+        let t = std::time::Instant::now();
+        let jobs: Vec<_> = (0..4)
+            .map(|_| move || std::thread::sleep(std::time::Duration::from_millis(50)))
+            .collect();
+        run_jobs(jobs, 4);
+        assert!(t.elapsed().as_millis() < 180, "{:?}", t.elapsed());
+    }
+
+    #[test]
+    #[should_panic]
+    fn job_panic_propagates() {
+        let jobs: Vec<Box<dyn FnOnce() -> i32 + Send>> =
+            vec![Box::new(|| 1), Box::new(|| panic!("boom"))];
+        run_jobs(jobs, 2);
+    }
+}

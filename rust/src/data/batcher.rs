@@ -1,0 +1,89 @@
+//! Turns token streams into fixed-shape (batch, seq) i32 batches matching
+//! the artifact input signatures.
+
+use super::corpus::{Corpus, Split};
+use crate::cfg::BatchConfig;
+
+/// Deterministic batch iterator over a split.
+pub struct Batcher<'a> {
+    corpus: &'a Corpus,
+    split: Split,
+    bc: BatchConfig,
+    cursor: usize,
+    stream: Vec<u32>,
+}
+
+impl<'a> Batcher<'a> {
+    /// Pre-generates enough tokens for `n_batches` batches.
+    pub fn new(corpus: &'a Corpus, split: Split, bc: BatchConfig, n_batches: usize) -> Self {
+        let need = bc.tokens() * n_batches;
+        Batcher { corpus, split, bc, cursor: 0, stream: corpus.tokens(split, need) }
+    }
+
+    /// Next (batch*seq) i32 tokens in row-major (batch, seq) order, or None
+    /// when the pre-generated stream is exhausted.
+    pub fn next_batch(&mut self) -> Option<Vec<i32>> {
+        let need = self.bc.tokens();
+        if self.cursor + need > self.stream.len() {
+            return None;
+        }
+        let out = self.stream[self.cursor..self.cursor + need]
+            .iter()
+            .map(|&t| t as i32)
+            .collect();
+        self.cursor += need;
+        Some(out)
+    }
+
+    pub fn batch_config(&self) -> BatchConfig {
+        self.bc
+    }
+
+    pub fn split(&self) -> Split {
+        self.split
+    }
+
+    /// Restart from the beginning of the pre-generated stream.
+    pub fn reset(&mut self) {
+        self.cursor = 0;
+    }
+
+    pub fn remaining(&self) -> usize {
+        (self.stream.len() - self.cursor) / self.bc.tokens()
+    }
+
+    pub fn corpus(&self) -> &Corpus {
+        self.corpus
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusConfig;
+
+    #[test]
+    fn yields_exact_batches_then_none() {
+        let corpus = Corpus::new(CorpusConfig::for_vocab(128, 1));
+        let bc = BatchConfig { batch: 2, seq: 16 };
+        let mut b = Batcher::new(&corpus, Split::Train, bc, 3);
+        assert_eq!(b.remaining(), 3);
+        for _ in 0..3 {
+            let batch = b.next_batch().unwrap();
+            assert_eq!(batch.len(), 32);
+            assert!(batch.iter().all(|&t| (0..128).contains(&t)));
+        }
+        assert!(b.next_batch().is_none());
+        b.reset();
+        assert_eq!(b.remaining(), 3);
+    }
+
+    #[test]
+    fn batches_are_deterministic() {
+        let corpus = Corpus::new(CorpusConfig::for_vocab(128, 1));
+        let bc = BatchConfig { batch: 2, seq: 8 };
+        let mut b1 = Batcher::new(&corpus, Split::Calib, bc, 2);
+        let mut b2 = Batcher::new(&corpus, Split::Calib, bc, 2);
+        assert_eq!(b1.next_batch(), b2.next_batch());
+    }
+}

@@ -1,0 +1,14 @@
+//! Synthetic corpus substrate (RedPajama / WikiText2 / C4 stand-in).
+//!
+//! A seeded hidden-state Markov "language" with Zipfian token marginals:
+//! structured enough for the MiniLlama models to learn real conditional
+//! statistics (so the post-training "converged model" assumption behind the
+//! Fisher approximation holds), deterministic so the Python build path and
+//! Rust runtime never need to share data files. A temperature knob produces
+//! the C4-analog out-of-calibration-distribution eval split (DESIGN.md §2).
+
+pub mod batcher;
+pub mod corpus;
+
+pub use batcher::Batcher;
+pub use corpus::{Corpus, CorpusConfig, Split};

@@ -1,0 +1,9 @@
+//! Evaluation: perplexity through the shared fwd artifacts (identical eval
+//! path for every method — the paper's Wiki2/C4 columns) and synthetic
+//! downstream tasks (the Table 12 zero-shot analog).
+
+pub mod ppl;
+pub mod tasks;
+
+pub use ppl::perplexity;
+pub use tasks::{multiple_choice_accuracy, next_token_accuracy};

@@ -1,0 +1,74 @@
+//! Perplexity evaluation via the fwd_loss / fwd_loss_qa* artifacts.
+//!
+//! All quantization methods are judged through the *same* compiled graph
+//! with their (de)quantized weights as inputs, so no method gets a
+//! different numeric path (the paper's evaluation discipline).
+
+use anyhow::Result;
+
+use crate::data::{Batcher, Corpus, Split};
+use crate::model::ParamStore;
+use crate::runtime::{Runtime, Value};
+
+/// Perplexity over `n_batches` of `split`, through `artifact`
+/// ("fwd_loss", "fwd_loss_qa4kv4", ...). Returns exp(mean NLL per token).
+pub fn perplexity(
+    rt: &Runtime,
+    ps: &ParamStore,
+    corpus: &Corpus,
+    split: Split,
+    n_batches: usize,
+    artifact: &str,
+) -> Result<f64> {
+    let art = rt.artifact(artifact)?;
+    let bc = rt.manifest.batch;
+    let mut batcher = Batcher::new(corpus, split, bc, n_batches);
+    let param_args = rt.param_args(ps);
+    let mut loss_sum = 0.0f64;
+    let mut tokens = 0usize;
+    while let Some(toks) = batcher.next_batch() {
+        let mut args = param_args.clone();
+        args.push(Value::tokens(bc.batch, bc.seq, &toks));
+        let outs = art.execute(&args)?;
+        loss_sum += outs[0].scalar_f32()? as f64;
+        tokens += bc.batch * (bc.seq - 1);
+    }
+    anyhow::ensure!(tokens > 0, "no eval batches");
+    Ok((loss_sum / tokens as f64).exp())
+}
+
+/// Native-forward perplexity (no artifacts; used by serving-side checks and
+/// fine-tuning evaluation on arbitrary token streams).
+pub fn perplexity_native(model: &crate::model::NativeModel, tokens: &[u32], chunk: usize) -> f64 {
+    let mut loss = 0.0f64;
+    let mut count = 0usize;
+    for win in tokens.chunks(chunk) {
+        if win.len() < 2 {
+            continue;
+        }
+        loss += model.loss_sum(win);
+        count += win.len() - 1;
+    }
+    (loss / count.max(1) as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::preset;
+    use crate::data::CorpusConfig;
+    use crate::model::NativeModel;
+    use crate::util::Rng;
+
+    #[test]
+    fn native_ppl_near_vocab_for_untrained() {
+        let (cfg, _) = preset("tiny");
+        let ps = ParamStore::init(&cfg, &mut Rng::new(0));
+        let model = NativeModel::from_params(&ps);
+        let corpus = Corpus::new(CorpusConfig::for_vocab(cfg.vocab, 0));
+        let toks = corpus.tokens(Split::Eval, 96);
+        let ppl = perplexity_native(&model, &toks, 48);
+        // Untrained model ≈ uniform ≈ vocab-size perplexity.
+        assert!(ppl > 100.0 && ppl < 5.0 * cfg.vocab as f64, "{ppl}");
+    }
+}

@@ -1,0 +1,146 @@
+//! Hessian disk cache (paper Table 9's "Hessian caching" phase).
+//!
+//! Calibration statistics are expensive to produce (forward+backward over
+//! the calibration set) but reusable across bit-widths and configurations —
+//! the paper amortizes them the same way. Stored via the GQTB tensor
+//! container, one file per model, with an index entry per (layer, matrix).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::io::TensorFile;
+use crate::tensor::Mat;
+
+use super::stats::{CalibStats, LayerStats};
+
+pub struct HessianCache {
+    pub dir: PathBuf,
+}
+
+impl HessianCache {
+    pub fn new(dir: impl AsRef<Path>) -> Self {
+        HessianCache { dir: dir.as_ref().to_path_buf() }
+    }
+
+    fn path(&self, model: &str) -> PathBuf {
+        self.dir.join(format!("hessians_{model}.gqtb"))
+    }
+
+    pub fn exists(&self, model: &str) -> bool {
+        self.path(model).exists()
+    }
+
+    pub fn save(&self, model: &str, stats: &CalibStats) -> Result<u64> {
+        let mut tf = TensorFile::new();
+        tf.insert(
+            "__meta",
+            Mat::from_vec(
+                1,
+                4,
+                vec![
+                    stats.groups as f32,
+                    stats.batches as f32,
+                    stats.tokens as f32,
+                    stats.loss_sum as f32,
+                ],
+            ),
+        );
+        for layer in &stats.layers {
+            for (k, h) in layer.hs.iter().enumerate() {
+                tf.insert(format!("hs.{}.{k}", layer.name), h.clone());
+            }
+            tf.insert(format!("diagf.{}", layer.name), layer.diagf.clone());
+        }
+        let path = self.path(model);
+        tf.save(&path)?;
+        Ok(std::fs::metadata(&path)?.len())
+    }
+
+    pub fn load(&self, model: &str) -> Result<CalibStats> {
+        let path = self.path(model);
+        let tf = TensorFile::load(&path).with_context(|| format!("hessian cache {path:?}"))?;
+        let meta = tf.get("__meta").context("cache missing __meta")?;
+        let groups = meta.data[0] as usize;
+        let batches = meta.data[1] as usize;
+        let tokens = meta.data[2] as usize;
+        let loss_sum = meta.data[3] as f64;
+        // Reconstruct layers from the key space.
+        let mut names: Vec<String> = tf
+            .entries
+            .keys()
+            .filter_map(|k| k.strip_prefix("diagf.").map(|s| s.to_string()))
+            .collect();
+        if names.is_empty() {
+            bail!("cache {path:?} holds no layers");
+        }
+        // Preserve layer order (layers.N.kind sorts badly at N >= 10).
+        names.sort_by_key(|n| {
+            let layer: usize = n
+                .strip_prefix("layers.")
+                .and_then(|r| r.split('.').next())
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(usize::MAX);
+            let kind = ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"]
+                .iter()
+                .position(|k| n.ends_with(k))
+                .unwrap_or(99);
+            layer * 16 + kind
+        });
+        let mut layers = Vec::new();
+        for name in names {
+            let mut hs = Vec::new();
+            for k in 0..=groups {
+                let h = tf
+                    .get(&format!("hs.{name}.{k}"))
+                    .with_context(|| format!("cache missing hs.{name}.{k}"))?;
+                hs.push(h.clone());
+            }
+            let diagf = tf.get(&format!("diagf.{name}")).unwrap().clone();
+            layers.push(LayerStats { name, hs, diagf });
+        }
+        Ok(CalibStats { groups, batches, tokens, loss_sum, layers })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample_stats() -> CalibStats {
+        let mut rng = Rng::new(0);
+        let layers = (0..3)
+            .map(|l| LayerStats {
+                name: format!("layers.{l}.wq"),
+                hs: (0..3).map(|_| Mat::randn(4, 4, 1.0, &mut rng)).collect(),
+                diagf: Mat::randn(4, 6, 1.0, &mut rng),
+            })
+            .collect();
+        CalibStats { groups: 2, batches: 5, tokens: 640, loss_sum: 123.5, layers }
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let dir = std::env::temp_dir().join(format!("gq_hcache_{}", std::process::id()));
+        let cache = HessianCache::new(&dir);
+        let stats = sample_stats();
+        let bytes = cache.save("testmodel", &stats).unwrap();
+        assert!(bytes > 0);
+        assert!(cache.exists("testmodel"));
+        let back = cache.load("testmodel").unwrap();
+        assert_eq!(back.groups, 2);
+        assert_eq!(back.batches, 5);
+        assert_eq!(back.layers.len(), 3);
+        assert_eq!(back.layers[0].name, "layers.0.wq");
+        assert_eq!(back.layers[1].hs[1], stats.layers[1].hs[1]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_cache_is_error() {
+        let cache = HessianCache::new("/nonexistent_dir_gq");
+        assert!(!cache.exists("m"));
+        assert!(cache.load("m").is_err());
+    }
+}

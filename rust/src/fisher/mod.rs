@@ -1,0 +1,11 @@
+//! Calibration statistics: drives the `calib_stats` artifact over batches,
+//! accumulates GuidedQuant's grouped Hessians H̄_k + SqueezeLLM diagonal
+//! Fisher, persists them in the Hessian disk cache, and implements the
+//! Fisher-structure analysis behind Figures 3/4.
+
+pub mod cache;
+pub mod stats;
+pub mod structure;
+
+pub use cache::HessianCache;
+pub use stats::{collect_stats, CalibStats, LayerStats};

@@ -1,0 +1,197 @@
+//! Accumulation of calibration statistics across batches (Algorithm 1,
+//! lines 2–4, with the heavy lifting inside the calib_stats artifact whose
+//! Hessian reduction is the L1 Pallas xtsx kernel).
+
+use anyhow::{bail, Result};
+
+use crate::data::Batcher;
+use crate::model::ParamStore;
+use crate::runtime::{Runtime, Value};
+use crate::tensor::Mat;
+
+/// Per-linear accumulated statistics.
+#[derive(Debug, Clone)]
+pub struct LayerStats {
+    pub name: String,
+    /// hs[0] = plain H = Σ X^T X; hs[1..=g] = GuidedQuant H̄_k sums.
+    pub hs: Vec<Mat>,
+    /// SqueezeLLM diagonal Fisher sum (d_in × d_out).
+    pub diagf: Mat,
+}
+
+impl LayerStats {
+    /// Hessians for a guided run with `g` groups (g ≤ available groups):
+    /// re-averages the stored group Hessians into `g` groups.
+    pub fn guided_hessians(&self, g: usize) -> Vec<Mat> {
+        let have = self.hs.len() - 1;
+        assert!(g >= 1 && g <= have, "requested g={g}, cached g={have}");
+        if g == have {
+            return self.hs[1..].to_vec();
+        }
+        // Merge consecutive cached groups (equal-sized channel ranges merge
+        // exactly because saliencies are averaged over equal channel sets).
+        let per = have / g;
+        let mut out = Vec::with_capacity(g);
+        for k in 0..g {
+            let mut acc = self.hs[1 + k * per].clone();
+            for t in 1..per {
+                acc.axpy(&self.hs[1 + k * per + t], 1.0);
+            }
+            acc.scale(1.0 / per as f32);
+            out.push(acc);
+        }
+        out
+    }
+
+    /// The plain layer-wise Hessian H = X^T X (objective of Eq. 1).
+    pub fn plain_hessian(&self) -> &Mat {
+        &self.hs[0]
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.hs.iter().map(|h| h.data.len() * 4).sum::<usize>() + self.diagf.data.len() * 4
+    }
+}
+
+/// Full calibration statistics for a model.
+#[derive(Debug, Clone)]
+pub struct CalibStats {
+    pub groups: usize,
+    pub batches: usize,
+    pub tokens: usize,
+    pub loss_sum: f64,
+    pub layers: Vec<LayerStats>,
+}
+
+impl CalibStats {
+    pub fn layer(&self, name: &str) -> Option<&LayerStats> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.storage_bytes()).sum()
+    }
+
+    /// Mean calibration loss per token (sanity signal for the pipeline).
+    pub fn mean_loss(&self) -> f64 {
+        self.loss_sum / self.tokens.max(1) as f64
+    }
+}
+
+/// Run the calib_stats artifact over `n_batches` and accumulate.
+pub fn collect_stats(
+    rt: &Runtime,
+    ps: &ParamStore,
+    batcher: &mut Batcher,
+    n_batches: usize,
+) -> Result<CalibStats> {
+    let artifact = rt.artifact("calib_stats")?;
+    let bc = rt.manifest.batch;
+    let groups = rt.manifest.groups;
+    let lspecs = ps.cfg.linear_specs();
+    let n_lin = lspecs.len();
+    let param_args = rt.param_args(ps);
+
+    let mut layers: Vec<LayerStats> = lspecs
+        .iter()
+        .map(|s| LayerStats {
+            name: s.name.clone(),
+            hs: (0..=groups).map(|_| Mat::zeros(s.d_in, s.d_in)).collect(),
+            diagf: Mat::zeros(s.d_in, s.d_out),
+        })
+        .collect();
+    let mut loss_sum = 0.0f64;
+    let mut batches = 0usize;
+
+    for _ in 0..n_batches {
+        let Some(toks) = batcher.next_batch() else {
+            break;
+        };
+        let mut args = param_args.clone();
+        args.push(Value::tokens(bc.batch, bc.seq, &toks));
+        let outs = artifact.execute(&args)?;
+        if outs.len() != 1 + 2 * n_lin {
+            bail!("calib_stats returned {} outputs, expected {}", outs.len(), 1 + 2 * n_lin);
+        }
+        loss_sum += outs[0].scalar_f32()? as f64;
+        for (li, spec) in lspecs.iter().enumerate() {
+            // hs value: (groups+1, d_in, d_in)
+            let hs_val = &outs[1 + 2 * li];
+            let dims = hs_val.dims().to_vec();
+            if dims != [groups + 1, spec.d_in, spec.d_in] {
+                bail!("{}: hs dims {dims:?}", spec.name);
+            }
+            let data = hs_val.as_f32()?;
+            let block = spec.d_in * spec.d_in;
+            for k in 0..=groups {
+                let dst = &mut layers[li].hs[k];
+                for (d, &s) in dst.data.iter_mut().zip(&data[k * block..(k + 1) * block]) {
+                    *d += s;
+                }
+            }
+            let df = &outs[2 + 2 * li];
+            let df_data = df.as_f32()?;
+            for (d, &s) in layers[li].diagf.data.iter_mut().zip(df_data) {
+                *d += s;
+            }
+        }
+        batches += 1;
+    }
+    anyhow::ensure!(batches > 0, "no calibration batches were available");
+    Ok(CalibStats {
+        groups,
+        batches,
+        tokens: batches * bc.tokens(),
+        loss_sum,
+        layers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_stats(g: usize, d: usize) -> LayerStats {
+        LayerStats {
+            name: "l".into(),
+            hs: (0..=g).map(|k| Mat::from_fn(d, d, |i, j| (k * 100 + i * d + j) as f32)).collect(),
+            diagf: Mat::zeros(d, d),
+        }
+    }
+
+    #[test]
+    fn guided_hessians_full_group_passthrough() {
+        let ls = fake_stats(4, 3);
+        let hs = ls.guided_hessians(4);
+        assert_eq!(hs.len(), 4);
+        assert_eq!(hs[0], ls.hs[1]);
+        assert_eq!(hs[3], ls.hs[4]);
+    }
+
+    #[test]
+    fn guided_hessians_merge_averages() {
+        let ls = fake_stats(4, 2);
+        let hs = ls.guided_hessians(2);
+        assert_eq!(hs.len(), 2);
+        // Group 0 = mean of cached groups 1, 2.
+        for i in 0..2 {
+            for j in 0..2 {
+                let want = 0.5 * (ls.hs[1].at(i, j) + ls.hs[2].at(i, j));
+                assert!((hs[0].at(i, j) - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "requested g=8")]
+    fn guided_hessians_rejects_upscaling() {
+        fake_stats(4, 2).guided_hessians(8);
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let ls = fake_stats(2, 4);
+        // 3 Hessians of 16 floats + diagf 16 floats = 64 floats = 256 B.
+        assert_eq!(ls.storage_bytes(), 256);
+    }
+}

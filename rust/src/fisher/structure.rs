@@ -1,0 +1,211 @@
+//! Fisher-structure analysis (paper Figures 3/4 and Appendix D.11).
+//!
+//! From raw per-linear activations X and output gradients G (the grad_taps
+//! artifact), we build the *exact* per-channel Fisher blocks
+//!   F_j = X^T·Diag(g_j²)·X
+//! and compare two equal-storage approximations of the full (within-two-
+//! channels) Fisher submatrix:
+//!   * WoodFisher-style: keep B×B blocks along the diagonal, zero the rest,
+//!   * GuidedQuant: replace each channel's block with the group-average.
+//! The bench prints relative Frobenius errors — the quantitative version of
+//! the figures' visual comparison.
+
+use crate::tensor::Mat;
+
+/// Exact channel Fisher block F_j = X^T Diag(g[:, j]^2) X.
+pub fn channel_fisher(x: &Mat, g: &Mat, j: usize) -> Mat {
+    assert_eq!(x.rows, g.rows);
+    let d = x.cols;
+    let mut out = Mat::zeros(d, d);
+    for i in 0..x.rows {
+        let w = g.at(i, j) * g.at(i, j);
+        if w == 0.0 {
+            continue;
+        }
+        let row = x.row(i);
+        for a in 0..d {
+            let wa = w * row[a];
+            if wa == 0.0 {
+                continue;
+            }
+            let dst = &mut out.data[a * d..(a + 1) * d];
+            for (o, &xb) in dst.iter_mut().zip(row) {
+                *o += wa * xb;
+            }
+        }
+    }
+    out
+}
+
+/// The 2-channel Fisher submatrix [[F_1, C], [C^T, F_2]] where
+/// C = X^T Diag(g_1 g_2) X (the cross-channel interaction the figures show
+/// is weak relative to the within-channel blocks).
+pub fn two_channel_fisher(x: &Mat, g: &Mat, j1: usize, j2: usize) -> Mat {
+    let d = x.cols;
+    let f1 = channel_fisher(x, g, j1);
+    let f2 = channel_fisher(x, g, j2);
+    let mut cross = Mat::zeros(d, d);
+    for i in 0..x.rows {
+        let w = g.at(i, j1) * g.at(i, j2);
+        if w == 0.0 {
+            continue;
+        }
+        let row = x.row(i);
+        for a in 0..d {
+            let wa = w * row[a];
+            let dst = &mut cross.data[a * d..(a + 1) * d];
+            for (o, &xb) in dst.iter_mut().zip(row) {
+                *o += wa * xb;
+            }
+        }
+    }
+    let n = 2 * d;
+    let mut out = Mat::zeros(n, n);
+    for i in 0..d {
+        for j in 0..d {
+            *out.at_mut(i, j) = f1.at(i, j);
+            *out.at_mut(d + i, d + j) = f2.at(i, j);
+            *out.at_mut(i, d + j) = cross.at(i, j);
+            *out.at_mut(d + i, j) = cross.at(j, i);
+        }
+    }
+    out
+}
+
+/// WoodFisher-style approximation: zero everything outside B×B diagonal
+/// blocks.
+pub fn block_diag_approx(f: &Mat, b: usize) -> Mat {
+    assert_eq!(f.rows, f.cols);
+    let mut out = Mat::zeros(f.rows, f.cols);
+    let b = b.max(1);
+    for i in 0..f.rows {
+        let blk = i / b;
+        for j in (blk * b)..((blk + 1) * b).min(f.cols) {
+            *out.at_mut(i, j) = f.at(i, j);
+        }
+    }
+    out
+}
+
+/// GuidedQuant approximation of the 2-channel Fisher: both channels share
+/// the averaged block (they belong to the same group), cross terms dropped.
+pub fn guided_approx_two_channel(f: &Mat) -> Mat {
+    let d = f.rows / 2;
+    let mut avg = Mat::zeros(d, d);
+    for i in 0..d {
+        for j in 0..d {
+            *avg.at_mut(i, j) = 0.5 * (f.at(i, j) + f.at(d + i, d + j));
+        }
+    }
+    let mut out = Mat::zeros(f.rows, f.cols);
+    for i in 0..d {
+        for j in 0..d {
+            *out.at_mut(i, j) = avg.at(i, j);
+            *out.at_mut(d + i, d + j) = avg.at(i, j);
+        }
+    }
+    out
+}
+
+/// Relative Frobenius approximation error ‖F − F̂‖ / ‖F‖.
+pub fn rel_error(f: &Mat, approx: &Mat) -> f64 {
+    let num = f.sub(approx).frob_norm_sq().sqrt();
+    let den = f.frob_norm_sq().sqrt().max(1e-30);
+    num / den
+}
+
+/// Fraction of the Fisher mass carried by the within-channel diagonal
+/// blocks (the figures' "prominent block-diagonal structure").
+pub fn block_mass_fraction(f: &Mat, d: usize) -> f64 {
+    let mut inside = 0.0f64;
+    let total = f.frob_norm_sq();
+    for bi in 0..(f.rows / d) {
+        for i in 0..d {
+            for j in 0..d {
+                let v = f.at(bi * d + i, bi * d + j) as f64;
+                inside += v * v;
+            }
+        }
+    }
+    inside / total.max(1e-30)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn xg(rng: &mut Rng, n: usize, d: usize, c: usize) -> (Mat, Mat) {
+        (Mat::randn(n, d, 1.0, rng), Mat::randn(n, c, 0.5, rng))
+    }
+
+    #[test]
+    fn channel_fisher_matches_outer_product_sum() {
+        let mut rng = Rng::new(0);
+        let (x, g) = xg(&mut rng, 12, 4, 2);
+        let f = channel_fisher(&x, &g, 1);
+        // Manual: Σ_i (g_i1 x_i)(g_i1 x_i)^T
+        let mut want = Mat::zeros(4, 4);
+        for i in 0..12 {
+            for a in 0..4 {
+                for b in 0..4 {
+                    *want.at_mut(a, b) +=
+                        g.at(i, 1) * x.at(i, a) * g.at(i, 1) * x.at(i, b);
+                }
+            }
+        }
+        crate::testing::assert_close(&f.data, &want.data, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn two_channel_fisher_is_symmetric_psd_structured() {
+        let mut rng = Rng::new(1);
+        let (x, g) = xg(&mut rng, 24, 6, 3);
+        let f = two_channel_fisher(&x, &g, 0, 2);
+        assert_eq!(f.rows, 12);
+        for i in 0..12 {
+            for j in 0..12 {
+                assert!((f.at(i, j) - f.at(j, i)).abs() < 1e-3, "asym at ({i},{j})");
+            }
+        }
+        // Diagonal blocks match channel_fisher.
+        let f0 = channel_fisher(&x, &g, 0);
+        assert!((f.at(0, 0) - f0.at(0, 0)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn block_diag_keeps_only_blocks() {
+        let f = Mat::from_fn(4, 4, |i, j| (i * 4 + j + 1) as f32);
+        let a = block_diag_approx(&f, 2);
+        assert_eq!(a.at(0, 1), f.at(0, 1));
+        assert_eq!(a.at(0, 2), 0.0);
+        assert_eq!(a.at(2, 3), f.at(2, 3));
+        assert_eq!(a.at(3, 0), 0.0);
+    }
+
+    #[test]
+    fn guided_beats_small_block_woodfisher_on_blocky_fisher() {
+        // When the true Fisher is strongly within-channel-block structured
+        // (as the paper's figures show), the guided approximation at equal
+        // storage beats a tiny-B WoodFisher cut.
+        let mut rng = Rng::new(2);
+        let (x, g) = xg(&mut rng, 64, 8, 2);
+        let f = two_channel_fisher(&x, &g, 0, 1);
+        let guided = guided_approx_two_channel(&f);
+        // Equal storage: guided stores d*d floats (one shared block);
+        // WoodFisher with B = d/2 stores 4 * (d/2)^2 = d^2 as well.
+        let wf = block_diag_approx(&f, 4);
+        let eg = rel_error(&f, &guided);
+        let ew = rel_error(&f, &wf);
+        assert!(eg < ew, "guided {eg} !< woodfisher {ew}");
+    }
+
+    #[test]
+    fn block_mass_dominates_for_uncorrelated_grads() {
+        let mut rng = Rng::new(3);
+        let (x, g) = xg(&mut rng, 128, 6, 2);
+        let f = two_channel_fisher(&x, &g, 0, 1);
+        let frac = block_mass_fraction(&f, 6);
+        assert!(frac > 0.5, "block mass {frac}");
+    }
+}

@@ -1,0 +1,39 @@
+//! # GuidedQuant — Rust coordinator (L3)
+//!
+//! Reproduction of *GuidedQuant: Large Language Model Quantization via
+//! Exploiting End Loss Guidance* (ICML 2025) as a three-layer
+//! Rust + JAX + Pallas system. This crate is the runtime: it loads the
+//! AOT-compiled HLO artifacts produced by `python/compile/aot.py` (PJRT CPU
+//! via the `xla` crate), drives training + calibration, runs every
+//! quantization algorithm natively, and serves the quantized model.
+//! Python never executes on the request path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//! * substrates: [`util`], [`testing`], [`cli`], [`cfg`], [`tensor`],
+//!   [`linalg`], [`data`], [`model`]
+//! * runtime: [`runtime`] (PJRT artifact registry), [`fisher`] (calibration
+//!   statistics + Hessian cache)
+//! * the paper: [`quant`] (GuidedQuant, LNQ, CD, GPTQ, SqueezeLLM, GPTVQ,
+//!   VQ, trellis/QTIP, SpinQuant-style rotations, dense-and-sparse, formats)
+//! * system: [`coordinator`] (pipeline phases + worker pool), [`serve`]
+//!   (batched decode engine), [`eval`] (perplexity + tasks), [`report`],
+//!   [`bench`]
+
+pub mod bench;
+pub mod cfg;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod fisher;
+pub mod linalg;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};

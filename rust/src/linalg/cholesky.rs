@@ -1,0 +1,195 @@
+//! f64 Cholesky factorization H = L·L^T with forward/backward solves.
+//!
+//! Used by LNQ (Algorithm 2, line 1) and the GPTQ/LDLQ error-feedback
+//! ordering. Inputs are f32 `Mat`s (symmetric positive semi-definite Gram
+//! matrices); we factorize in f64 and auto-escalate the diagonal damping
+//! until the factorization succeeds, mirroring the paper's "add a small
+//! constant to the diagonal" guard.
+
+use crate::tensor::Mat;
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone)]
+pub struct Cholesky {
+    pub n: usize,
+    /// Lower-triangular factor, row-major f64, dense n×n (upper part zero).
+    pub l: Vec<f64>,
+    /// Damping that was actually applied to the diagonal.
+    pub damp: f64,
+}
+
+impl Cholesky {
+    /// Factor `h` (+ damp·mean(diag)·I), escalating damp ×10 up to 8 times.
+    pub fn factor(h: &Mat, base_damp: f64) -> Result<Cholesky> {
+        assert_eq!(h.rows, h.cols, "cholesky needs square input");
+        let n = h.rows;
+        let mean_diag: f64 = (0..n).map(|i| h.at(i, i) as f64).sum::<f64>() / n.max(1) as f64;
+        let scale = if mean_diag > 0.0 { mean_diag } else { 1.0 };
+        let mut damp = base_damp;
+        for _ in 0..9 {
+            if let Some(l) = try_factor(h, damp * scale) {
+                return Ok(Cholesky { n, l, damp: damp * scale });
+            }
+            damp = (damp * 10.0).max(1e-12);
+        }
+        bail!("cholesky failed even with damping {damp:e} (n={n})")
+    }
+
+    /// Solve L·y = b (forward substitution).
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        assert_eq!(b.len(), n);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            let row = &self.l[i * n..i * n + i];
+            for (j, lij) in row.iter().enumerate() {
+                s -= lij * y[j];
+            }
+            y[i] = s / self.l[i * n + i];
+        }
+        y
+    }
+
+    /// Solve L^T·x = y (backward substitution).
+    pub fn solve_upper(&self, y: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        assert_eq!(y.len(), n);
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for j in (i + 1)..n {
+                s -= self.l[j * n + i] * x[j];
+            }
+            x[i] = s / self.l[i * n + i];
+        }
+        x
+    }
+
+    /// Solve (L·L^T)·x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        self.solve_upper(&self.solve_lower(b))
+    }
+
+    /// The factor as an f32 Mat (lower triangular).
+    pub fn l_mat(&self) -> Mat {
+        let n = self.n;
+        Mat::from_fn(n, n, |i, j| self.l[i * n + j] as f32)
+    }
+
+    /// log(det(H)) = 2·Σ log(L_ii). Useful diagnostics for tests.
+    pub fn log_det(&self) -> f64 {
+        (0..self.n).map(|i| self.l[i * self.n + i].ln()).sum::<f64>() * 2.0
+    }
+}
+
+fn try_factor(h: &Mat, damp: f64) -> Option<Vec<f64>> {
+    let n = h.rows;
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = h.at(i, j) as f64;
+            if i == j {
+                s += damp;
+            }
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    return None;
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::matmul_tn;
+    use crate::testing;
+    use crate::util::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Mat {
+        // X^T X with more rows than cols is SPD almost surely.
+        let x = Mat::randn(n + 8, n, 1.0, rng);
+        matmul_tn(&x, &x)
+    }
+
+    #[test]
+    fn factor_reconstructs_spd() {
+        testing::check("cholesky-reconstruct", 15, |rng| {
+            let n = 2 + rng.below(24);
+            let h = random_spd(n, rng);
+            let ch = Cholesky::factor(&h, 1e-10).map_err(|e| e.to_string())?;
+            // L L^T ≈ H
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0f64;
+                    for k in 0..n {
+                        s += ch.l[i * n + k] * ch.l[j * n + k];
+                    }
+                    let want = h.at(i, j) as f64;
+                    let tol = 1e-3 * (1.0 + want.abs());
+                    testing::ensure(
+                        (s - want).abs() < tol,
+                        format!("({i},{j}): {s} vs {want}"),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn solve_matches_known_system() {
+        // H = [[4,2],[2,3]], b = [2, 5] -> x = [-0.5, 2]
+        let h = Mat::from_vec(2, 2, vec![4.0, 2.0, 2.0, 3.0]);
+        let ch = Cholesky::factor(&h, 0.0).unwrap();
+        let x = ch.solve(&[2.0, 5.0]);
+        assert!((x[0] + 0.5).abs() < 1e-9, "{x:?}");
+        assert!((x[1] - 2.0).abs() < 1e-9, "{x:?}");
+    }
+
+    #[test]
+    fn solve_inverts_multiplication_property() {
+        testing::check("cholesky-solve", 15, |rng| {
+            let n = 1 + rng.below(30);
+            let h = random_spd(n, rng);
+            let ch = Cholesky::factor(&h, 1e-10).map_err(|e| e.to_string())?;
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            // b = H x
+            let b: Vec<f64> = (0..n)
+                .map(|i| (0..n).map(|j| h.at(i, j) as f64 * x_true[j]).sum())
+                .collect();
+            let x = ch.solve(&b);
+            for i in 0..n {
+                testing::ensure(
+                    (x[i] - x_true[i]).abs() < 1e-3 * (1.0 + x_true[i].abs()),
+                    format!("x[{i}] {} vs {}", x[i], x_true[i]),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn damping_escalates_for_singular_input() {
+        // Rank-1 matrix: plain Cholesky fails, damped must succeed.
+        let h = Mat::from_fn(6, 6, |i, j| ((i + 1) * (j + 1)) as f32);
+        let ch = Cholesky::factor(&h, 1e-7).unwrap();
+        assert!(ch.damp > 0.0);
+    }
+
+    #[test]
+    fn rejects_nan() {
+        let mut h = Mat::eye(3);
+        h.data[4] = f32::NAN;
+        assert!(Cholesky::factor(&h, 1e-7).is_err());
+    }
+}

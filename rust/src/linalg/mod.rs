@@ -1,0 +1,13 @@
+//! Dense linear algebra for the quantization solvers: Cholesky, triangular
+//! solves, SPD solves and damped least squares. Factorizations run in f64
+//! for stability (the paper's LNQ codebook step inverts P^T·H·P which is
+//! often near-singular; we add λ=1e-7 damping exactly as §4.2 prescribes).
+
+pub mod cholesky;
+pub mod lstsq;
+
+pub use cholesky::Cholesky;
+pub use lstsq::{solve_damped_ls, spd_solve};
+
+/// Default diagonal damping from the paper (§4.2).
+pub const DEFAULT_DAMP: f64 = 1e-7;

@@ -1,0 +1,274 @@
+//! `gq` — the GuidedQuant launcher (L3 coordinator CLI).
+//!
+//! Subcommands:
+//!   pipeline  end-to-end: train → calib → quantize → eval (+ report)
+//!   train     train a model via the train_step artifact, save checkpoint
+//!   quantize  quantize a checkpoint with any method/bits/groups
+//!   eval      perplexity of a checkpoint through the fwd artifacts
+//!   serve     batched generation benchmark over a serving format
+//!   fisher    export Fisher-structure data (Figures 3/4) as CSV matrices
+//!   info      print model/artifact/manifest information
+//!
+//! Examples:
+//!   gq pipeline --model small --method lnq --bits 2 --groups 4
+//!   gq serve --model tiny --format nonuniform --bits 4 --requests 8
+//!   gq info --model small
+
+use anyhow::{bail, Context, Result};
+
+use guidedquant::cfg::{preset, PipelineConfig, QuantConfig, QuantMethod, TomlDoc};
+use guidedquant::cli::Args;
+use guidedquant::coordinator::Pipeline;
+use guidedquant::data::Split;
+use guidedquant::model::ParamStore;
+use guidedquant::serve::{build_serving_model, generate_batch, ServeFormat};
+use guidedquant::util::Rng;
+
+const USAGE: &str = "usage: gq <pipeline|train|quantize|eval|serve|fisher|info> [flags]
+  common flags: --model tiny|small|base  --artifacts DIR  --out DIR --config FILE
+  quant flags:  --method rtn|gptq|squeezellm|gptvq1d|gptvq2d|lnq|trellis
+                --bits N --groups G --sparse-frac F --seed S
+  pipeline:     --train-steps N --calib-batches N --eval-batches N --workers N
+  serve:        --format fp32|uniform|nonuniform|vector|trellis --requests N
+                --gen-tokens N --prompt-len N
+  train:        --steps N --save FILE
+  eval/quantize: --load FILE [--save FILE] --artifact fwd_loss|fwd_loss_qa4kv4|...";
+
+fn pipeline_config(args: &Args) -> Result<PipelineConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => PipelineConfig::from_toml(&TomlDoc::load(path)?)?,
+        None => PipelineConfig::default(),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    cfg.artifacts_dir = args.get_or("artifacts", &cfg.artifacts_dir).to_string();
+    cfg.out_dir = args.get_or("out", &cfg.out_dir).to_string();
+    cfg.train_steps = args.get_usize("train-steps", cfg.train_steps)?;
+    cfg.calib_batches = args.get_usize("calib-batches", cfg.calib_batches)?;
+    cfg.eval_batches = args.get_usize("eval-batches", cfg.eval_batches)?;
+    cfg.workers = args.get_usize("workers", cfg.workers)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.quant = quant_config(args, cfg.quant)?;
+    Ok(cfg)
+}
+
+fn quant_config(args: &Args, mut q: QuantConfig) -> Result<QuantConfig> {
+    if let Some(m) = args.get("method") {
+        q.method = QuantMethod::parse(m)?;
+    }
+    q.bits = args.get_usize("bits", q.bits as usize)? as u32;
+    q.groups = args.get_usize("groups", q.groups)?;
+    q.sparse_frac = args.get_f64("sparse-frac", q.sparse_frac as f64)? as f32;
+    q.seed = args.get_u64("seed", q.seed)?;
+    Ok(q)
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
+        eprintln!("{USAGE}");
+        bail!("missing subcommand");
+    };
+    match cmd {
+        "pipeline" => cmd_pipeline(&args),
+        "train" => cmd_train(&args),
+        "quantize" => cmd_quantize(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "fisher" => cmd_fisher(&args),
+        "info" => cmd_info(&args),
+        other => {
+            eprintln!("{USAGE}");
+            bail!("unknown subcommand `{other}`")
+        }
+    }
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let cfg = pipeline_config(args)?;
+    println!(
+        "pipeline: model={} method={} bits={} groups={} steps={}",
+        cfg.model,
+        cfg.quant.method.name(),
+        cfg.quant.bits,
+        cfg.quant.groups,
+        cfg.train_steps
+    );
+    let pipeline = Pipeline::new(cfg)?;
+    let report = pipeline.run()?;
+    report.print();
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = pipeline_config(args)?;
+    let steps = args.get_usize("steps", cfg.train_steps)?;
+    let pipeline = Pipeline::new(cfg)?;
+    let mut ps = pipeline.init_params();
+    let losses = pipeline.train(&mut ps, steps, (steps / 20).max(1))?;
+    if let Some(path) = args.get("save") {
+        ps.save(path)?;
+        println!("saved checkpoint to {path}");
+    }
+    println!(
+        "trained {} steps: loss {:.4} -> {:.4}",
+        losses.len(),
+        losses.first().copied().unwrap_or(0.0),
+        losses.last().copied().unwrap_or(0.0)
+    );
+    Ok(())
+}
+
+fn load_or_init(pipeline: &Pipeline, args: &Args) -> Result<ParamStore> {
+    match args.get("load") {
+        Some(path) => {
+            let (cfg, _) = preset(&pipeline.cfg.model);
+            ParamStore::load(&cfg, path).with_context(|| format!("loading checkpoint {path}"))
+        }
+        None => Ok(pipeline.init_params()),
+    }
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let cfg = pipeline_config(args)?;
+    let pipeline = Pipeline::new(cfg)?;
+    let ps = load_or_init(&pipeline, args)?;
+    let stats = pipeline.calib(&ps, args.switch("recalib"))?;
+    let layers = pipeline.quantize(&ps, &stats, &pipeline.cfg.quant)?;
+    let qps = pipeline.apply_quantized(&ps, &layers);
+    println!(
+        "quantized {} linears, avg bits {:.3}",
+        layers.len(),
+        pipeline.avg_bits(&ps, &layers)
+    );
+    if let Some(path) = args.get("save") {
+        qps.save(path)?;
+        println!("saved quantized checkpoint to {path}");
+    }
+    let ppl = pipeline.perplexity(&qps, Split::Eval, "fwd_loss")?;
+    println!("quantized ppl (eval split): {ppl:.3}");
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = pipeline_config(args)?;
+    let pipeline = Pipeline::new(cfg)?;
+    let ps = load_or_init(&pipeline, args)?;
+    let artifact = args.get_or("artifact", "fwd_loss");
+    let eval = pipeline.perplexity(&ps, Split::Eval, artifact)?;
+    let shift = pipeline.perplexity(&ps, Split::EvalShift, artifact)?;
+    println!("ppl[{artifact}]  eval {eval:.3}  shift {shift:.3}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = pipeline_config(args)?;
+    let format = match args.get_or("format", "nonuniform") {
+        "fp32" => ServeFormat::Fp32,
+        "uniform" => ServeFormat::UniformScalar,
+        "nonuniform" => ServeFormat::NonUniformScalar,
+        "vector" => ServeFormat::Vector,
+        "trellis" => ServeFormat::Trellis,
+        other => bail!("unknown serve format `{other}`"),
+    };
+    let bits = args.get_usize("bits", 4)? as u32;
+    let requests = args.get_usize("requests", 4)?;
+    let gen_tokens = args.get_usize("gen-tokens", 32)?;
+    let prompt_len = args.get_usize("prompt-len", 16)?;
+    let pipeline = Pipeline::new(cfg)?;
+    let ps = load_or_init(&pipeline, args)?;
+    println!("building {} serving model at {bits} bits ...", format.name());
+    let model = build_serving_model(&ps, None, format, bits)?;
+    let mut rng = Rng::new(7);
+    let prompts: Vec<Vec<u32>> = (0..requests)
+        .map(|_| (0..prompt_len).map(|_| rng.below(model.cfg.vocab) as u32).collect())
+        .collect();
+    let (_, stats) = generate_batch(&model, &prompts, gen_tokens, pipeline.cfg.workers);
+    println!(
+        "format={} bits={} requests={requests} gen={gen_tokens}: {:.1} tok/s  p50 {:.2} ms  p99 {:.2} ms  weights {}",
+        format.name(),
+        bits,
+        stats.tok_per_sec,
+        stats.p50_ms,
+        stats.p99_ms,
+        guidedquant::util::human_bytes(stats.weight_bytes as u64)
+    );
+    Ok(())
+}
+
+/// Export exact two-channel Fisher submatrices + approximations as dense
+/// CSV matrices (external plotting of Figures 3/4). One file per linear of
+/// the first block, under --out (default target/fisher).
+fn cmd_fisher(args: &Args) -> Result<()> {
+    use guidedquant::data::{Batcher, Split};
+    use guidedquant::fisher::structure as fs;
+    use guidedquant::runtime::Value;
+
+    let cfg = pipeline_config(args)?;
+    let out_dir = std::path::PathBuf::from(args.get_or("fisher-out", "target/fisher"));
+    std::fs::create_dir_all(&out_dir)?;
+    let pipeline = Pipeline::new(cfg)?;
+    let ps = load_or_init(&pipeline, args)?;
+    let rt = &pipeline.rt;
+    let bc = rt.manifest.batch;
+    let mut batcher = Batcher::new(&pipeline.corpus, Split::Calib, bc, 1);
+    let toks = batcher.next_batch().context("no calibration batch")?;
+    let mut a = rt.param_args(&ps);
+    a.push(Value::tokens(bc.batch, bc.seq, &toks));
+    let outs = rt.artifact("grad_taps")?.execute(&a)?;
+
+    let write_mat = |path: &std::path::Path, m: &guidedquant::tensor::Mat| -> Result<()> {
+        let mut text = String::new();
+        for i in 0..m.rows {
+            let row: Vec<String> = m.row(i).iter().map(|v| format!("{v:.6e}")).collect();
+            text.push_str(&row.join(","));
+            text.push('\n');
+        }
+        std::fs::write(path, text)?;
+        Ok(())
+    };
+
+    for (li, spec) in ps.cfg.linear_specs().iter().take(7).enumerate() {
+        let x = outs[1 + 2 * li].clone().into_mat()?;
+        let g = outs[2 + 2 * li].clone().into_mat()?;
+        let fisher = fs::two_channel_fisher(&x, &g, 0, 1);
+        let wf = fs::block_diag_approx(&fisher, spec.d_in / 2);
+        let gq = fs::guided_approx_two_channel(&fisher);
+        let base = spec.name.replace('.', "_");
+        write_mat(&out_dir.join(format!("{base}_exact.csv")), &fisher)?;
+        write_mat(&out_dir.join(format!("{base}_woodfisher.csv")), &wf)?;
+        write_mat(&out_dir.join(format!("{base}_guidedquant.csv")), &gq)?;
+        println!(
+            "{}: block mass {:.3}, err WF {:.4}, err GQ {:.4} -> {}/",
+            spec.name,
+            fs::block_mass_fraction(&fisher, spec.d_in),
+            fs::rel_error(&fisher, &wf),
+            fs::rel_error(&fisher, &gq),
+            out_dir.display()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = pipeline_config(args)?;
+    let pipeline = Pipeline::new(cfg)?;
+    let m = &pipeline.rt.manifest;
+    println!(
+        "model {} (vocab {}, d_model {}, layers {}, heads {}, d_ff {})",
+        m.model.name, m.model.vocab, m.model.d_model, m.model.n_layers, m.model.n_heads, m.model.d_ff
+    );
+    let (model_cfg, bc) = preset(&m.model.name);
+    println!(
+        "params: {} ({} quantizable linear weights)",
+        guidedquant::util::human_count(model_cfg.n_params() as u64),
+        guidedquant::util::human_count(model_cfg.n_linear_params() as u64)
+    );
+    println!("batch {}x{}, calib groups g={}", bc.batch, bc.seq, m.groups);
+    println!("artifacts:");
+    for a in &m.artifacts {
+        println!("  {} ({} inputs, {} outputs)", a.name, a.inputs.len(), a.outputs.len());
+    }
+    Ok(())
+}

@@ -1,0 +1,422 @@
+//! Native MiniLlama forward pass (f32 reference + incremental decode).
+//!
+//! Numerics mirror python/compile/model.py exactly (RMSNorm eps 1e-5,
+//! half-split RoPE, SwiGLU, causal softmax) so the native path can be
+//! cross-validated against the `fwd_loss` HLO artifact, and the serving
+//! engine can swap any linear for a quantized format via [`LinearOp`].
+
+use crate::cfg::ModelConfig;
+use crate::tensor::Mat;
+
+use super::params::ParamStore;
+
+/// A linear layer `z = x @ W` with `W: [d_in, d_out]`. Implemented by plain
+/// `Mat` (fp32) here and by every quantized serving format in
+/// `quant::formats` — the decode loop is format-agnostic.
+pub trait LinearOp: Send + Sync {
+    fn d_in(&self) -> usize;
+    fn d_out(&self) -> usize;
+    /// out += is NOT implied: `out` is overwritten.
+    fn matvec(&self, x: &[f32], out: &mut [f32]);
+    /// Bytes of weight storage (for the Table 2 bits/OOM accounting).
+    fn storage_bytes(&self) -> usize;
+}
+
+impl LinearOp for Mat {
+    fn d_in(&self) -> usize {
+        self.rows
+    }
+
+    fn d_out(&self) -> usize {
+        self.cols
+    }
+
+    fn matvec(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.rows);
+        debug_assert_eq!(out.len(), self.cols);
+        out.fill(0.0);
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = self.row(i);
+            for (o, w) in out.iter_mut().zip(row) {
+                *o += xi * w;
+            }
+        }
+    }
+
+    fn storage_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+pub struct Block {
+    pub attn_norm: Vec<f32>,
+    pub mlp_norm: Vec<f32>,
+    pub wq: Box<dyn LinearOp>,
+    pub wk: Box<dyn LinearOp>,
+    pub wv: Box<dyn LinearOp>,
+    pub wo: Box<dyn LinearOp>,
+    pub wgate: Box<dyn LinearOp>,
+    pub wup: Box<dyn LinearOp>,
+    pub wdown: Box<dyn LinearOp>,
+}
+
+pub struct NativeModel {
+    pub cfg: ModelConfig,
+    pub tok_emb: Mat,
+    pub head: Box<dyn LinearOp>,
+    pub final_norm: Vec<f32>,
+    pub blocks: Vec<Block>,
+}
+
+/// Growing per-sequence KV cache.
+pub struct DecodeState {
+    /// keys[block] : flat [pos][d_model] (heads contiguous within d_model).
+    keys: Vec<Vec<f32>>,
+    vals: Vec<Vec<f32>>,
+    pub pos: usize,
+}
+
+impl DecodeState {
+    pub fn new(n_layers: usize) -> Self {
+        DecodeState {
+            keys: vec![Vec::new(); n_layers],
+            vals: vec![Vec::new(); n_layers],
+            pos: 0,
+        }
+    }
+
+    pub fn kv_bytes(&self) -> usize {
+        self.keys.iter().chain(&self.vals).map(|v| v.len() * 4).sum()
+    }
+}
+
+fn rmsnorm(x: &[f32], gamma: &[f32], out: &mut [f32]) {
+    let ms = x.iter().map(|&v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + 1e-5).sqrt();
+    for ((o, &v), &g) in out.iter_mut().zip(x).zip(gamma) {
+        *o = v * inv * g;
+    }
+}
+
+/// In-place half-split RoPE on one head slice (matches python `rope`).
+fn rope_inplace(x: &mut [f32], pos: usize, theta: f32) {
+    let hd = x.len();
+    let half = hd / 2;
+    for i in 0..half {
+        let freq = theta.powf(-(i as f32) / half as f32);
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let (a, b) = (x[i], x[half + i]);
+        x[i] = a * cos - b * sin;
+        x[half + i] = a * sin + b * cos;
+    }
+}
+
+fn silu(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+impl NativeModel {
+    /// fp32 model straight from a parameter store.
+    pub fn from_params(ps: &ParamStore) -> Self {
+        let cfg = ps.cfg.clone();
+        let lin = |name: String| -> Box<dyn LinearOp> { Box::new(ps.get(&name).clone()) };
+        let blocks = (0..cfg.n_layers)
+            .map(|l| {
+                let p = format!("layers.{l}.");
+                Block {
+                    attn_norm: ps.get(&format!("{p}attn_norm")).data.clone(),
+                    mlp_norm: ps.get(&format!("{p}mlp_norm")).data.clone(),
+                    wq: lin(format!("{p}wq")),
+                    wk: lin(format!("{p}wk")),
+                    wv: lin(format!("{p}wv")),
+                    wo: lin(format!("{p}wo")),
+                    wgate: lin(format!("{p}wgate")),
+                    wup: lin(format!("{p}wup")),
+                    wdown: lin(format!("{p}wdown")),
+                }
+            })
+            .collect();
+        NativeModel {
+            tok_emb: ps.get("tok_emb").clone(),
+            head: Box::new(ps.get("head").clone()),
+            final_norm: ps.get("final_norm").data.clone(),
+            cfg,
+            blocks,
+        }
+    }
+
+    pub fn new_state(&self) -> DecodeState {
+        DecodeState::new(self.cfg.n_layers)
+    }
+
+    /// Total weight bytes across the seven quantizable linears (all blocks).
+    pub fn linear_storage_bytes(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|b| {
+                b.wq.storage_bytes()
+                    + b.wk.storage_bytes()
+                    + b.wv.storage_bytes()
+                    + b.wo.storage_bytes()
+                    + b.wgate.storage_bytes()
+                    + b.wup.storage_bytes()
+                    + b.wdown.storage_bytes()
+            })
+            .sum()
+    }
+
+    /// One decode step: append `token`, return next-token logits.
+    pub fn step(&self, state: &mut DecodeState, token: u32) -> Vec<f32> {
+        self.step_inner(state, token, None)
+    }
+
+    /// Decode step that also records the input activations of every linear
+    /// (7 per block, flat order) — used by the calibration cross-check and
+    /// the PV-tuning-lite cascade refit.
+    pub fn step_recorded(
+        &self,
+        state: &mut DecodeState,
+        token: u32,
+        rec: &mut Vec<Vec<f32>>,
+    ) -> Vec<f32> {
+        self.step_inner(state, token, Some(rec))
+    }
+
+    fn step_inner(
+        &self,
+        state: &mut DecodeState,
+        token: u32,
+        mut rec: Option<&mut Vec<Vec<f32>>>,
+    ) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let h = self.cfg.n_heads;
+        let hd = self.cfg.head_dim();
+        let theta = self.cfg.rope_theta;
+        let pos = state.pos;
+
+        let mut x = self.tok_emb.row(token as usize).to_vec();
+        let mut normed = vec![0.0f32; d];
+        let mut q = vec![0.0f32; d];
+        let mut k = vec![0.0f32; d];
+        let mut v = vec![0.0f32; d];
+        let mut ctx = vec![0.0f32; d];
+        let mut o = vec![0.0f32; d];
+        let ff = self.cfg.d_ff;
+        let mut gate = vec![0.0f32; ff];
+        let mut up = vec![0.0f32; ff];
+        let mut down = vec![0.0f32; d];
+
+        for (l, blk) in self.blocks.iter().enumerate() {
+            rmsnorm(&x, &blk.attn_norm, &mut normed);
+            if let Some(r) = rec.as_deref_mut() {
+                // wq/wk/wv share the same input.
+                r.push(normed.clone());
+                r.push(normed.clone());
+                r.push(normed.clone());
+            }
+            blk.wq.matvec(&normed, &mut q);
+            blk.wk.matvec(&normed, &mut k);
+            blk.wv.matvec(&normed, &mut v);
+            for head in 0..h {
+                rope_inplace(&mut q[head * hd..(head + 1) * hd], pos, theta);
+                rope_inplace(&mut k[head * hd..(head + 1) * hd], pos, theta);
+            }
+            state.keys[l].extend_from_slice(&k);
+            state.vals[l].extend_from_slice(&v);
+            let n_pos = pos + 1;
+            let scale = 1.0 / (hd as f32).sqrt();
+            ctx.fill(0.0);
+            for head in 0..h {
+                let qh = &q[head * hd..(head + 1) * hd];
+                // scores over all cached positions
+                let mut scores = Vec::with_capacity(n_pos);
+                let mut max_s = f32::NEG_INFINITY;
+                for p in 0..n_pos {
+                    let kh = &state.keys[l][p * d + head * hd..p * d + (head + 1) * hd];
+                    let s = crate::tensor::ops::dot(qh, kh) * scale;
+                    max_s = max_s.max(s);
+                    scores.push(s);
+                }
+                let mut denom = 0.0f32;
+                for s in scores.iter_mut() {
+                    *s = (*s - max_s).exp();
+                    denom += *s;
+                }
+                let ctx_h = &mut ctx[head * hd..(head + 1) * hd];
+                for p in 0..n_pos {
+                    let w = scores[p] / denom;
+                    let vh = &state.vals[l][p * d + head * hd..p * d + (head + 1) * hd];
+                    for (c, &vv) in ctx_h.iter_mut().zip(vh) {
+                        *c += w * vv;
+                    }
+                }
+            }
+            if let Some(r) = rec.as_deref_mut() {
+                r.push(ctx.clone());
+            }
+            blk.wo.matvec(&ctx, &mut o);
+            for (xv, &ov) in x.iter_mut().zip(&o) {
+                *xv += ov;
+            }
+            rmsnorm(&x, &blk.mlp_norm, &mut normed);
+            if let Some(r) = rec.as_deref_mut() {
+                r.push(normed.clone());
+                r.push(normed.clone());
+            }
+            blk.wgate.matvec(&normed, &mut gate);
+            blk.wup.matvec(&normed, &mut up);
+            for (g, &u) in gate.iter_mut().zip(&up) {
+                *g = silu(*g) * u;
+            }
+            if let Some(r) = rec.as_deref_mut() {
+                r.push(gate.clone());
+            }
+            blk.wdown.matvec(&gate, &mut down);
+            for (xv, &dv) in x.iter_mut().zip(&down) {
+                *xv += dv;
+            }
+        }
+        state.pos += 1;
+        rmsnorm(&x.clone(), &self.final_norm, &mut x);
+        let mut logits = vec![0.0f32; self.cfg.vocab];
+        self.head.matvec(&x, &mut logits);
+        logits
+    }
+
+    /// Input activations of every linear over a full sequence: one
+    /// (seq_len × d_in) matrix per linear, flat (layer, kind) order.
+    pub fn record_linear_inputs(&self, tokens: &[u32]) -> Vec<Mat> {
+        let n_lin = self.cfg.n_layers * 7;
+        let specs = self.cfg.linear_specs();
+        let mut state = self.new_state();
+        let mut mats: Vec<Mat> =
+            specs.iter().map(|s| Mat::zeros(tokens.len(), s.d_in)).collect();
+        for (t, &tok) in tokens.iter().enumerate() {
+            let mut rec = Vec::with_capacity(n_lin);
+            self.step_recorded(&mut state, tok, &mut rec);
+            assert_eq!(rec.len(), n_lin);
+            for (li, x) in rec.into_iter().enumerate() {
+                mats[li].row_mut(t).copy_from_slice(&x);
+            }
+        }
+        mats
+    }
+
+    /// Full-sequence logits (row t = logits after consuming tokens[..=t]).
+    pub fn forward_sequence(&self, tokens: &[u32]) -> Mat {
+        let mut state = self.new_state();
+        let mut out = Mat::zeros(tokens.len(), self.cfg.vocab);
+        for (t, &tok) in tokens.iter().enumerate() {
+            let logits = self.step(&mut state, tok);
+            out.row_mut(t).copy_from_slice(&logits);
+        }
+        out
+    }
+
+    /// Summed next-token cross-entropy over a sequence (matches fwd_loss
+    /// semantics for batch rows processed independently).
+    pub fn loss_sum(&self, tokens: &[u32]) -> f64 {
+        let logits = self.forward_sequence(tokens);
+        let mut total = 0.0f64;
+        for t in 0..tokens.len() - 1 {
+            let row = logits.row(t);
+            let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let lse = max as f64
+                + row
+                    .iter()
+                    .map(|&v| ((v - max) as f64).exp())
+                    .sum::<f64>()
+                    .ln();
+            total += lse - row[tokens[t + 1] as usize] as f64;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::preset;
+    use crate::util::Rng;
+
+    fn tiny_model() -> NativeModel {
+        let (cfg, _) = preset("tiny");
+        let ps = ParamStore::init(&cfg, &mut Rng::new(0));
+        NativeModel::from_params(&ps)
+    }
+
+    #[test]
+    fn step_produces_finite_logits() {
+        let m = tiny_model();
+        let mut st = m.new_state();
+        let logits = m.step(&mut st, 3);
+        assert_eq!(logits.len(), m.cfg.vocab);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert_eq!(st.pos, 1);
+    }
+
+    #[test]
+    fn decode_matches_fresh_replay() {
+        // Incremental decode over [a, b, c] must equal replaying the prefix.
+        let m = tiny_model();
+        let toks = [5u32, 9, 200, 43];
+        let full = m.forward_sequence(&toks);
+        let mut st = m.new_state();
+        for (t, &tok) in toks.iter().enumerate() {
+            let logits = m.step(&mut st, tok);
+            crate::testing::assert_close(&logits, full.row(t), 1e-5, 1e-5)
+                .unwrap_or_else(|e| panic!("pos {t}: {e}"));
+        }
+    }
+
+    #[test]
+    fn initial_loss_near_uniform() {
+        let m = tiny_model();
+        let mut rng = Rng::new(1);
+        let toks: Vec<u32> = (0..48).map(|_| rng.below(m.cfg.vocab) as u32).collect();
+        let per_tok = m.loss_sum(&toks) / (toks.len() - 1) as f64;
+        let uniform = (m.cfg.vocab as f64).ln();
+        assert!((per_tok - uniform).abs() < 1.5, "{per_tok} vs {uniform}");
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut rng = Rng::new(2);
+        let mut x: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
+        let before: f32 = x.iter().map(|v| v * v).sum();
+        rope_inplace(&mut x, 17, 10000.0);
+        let after: f32 = x.iter().map(|v| v * v).sum();
+        assert!((before - after).abs() < 1e-3 * before);
+    }
+
+    #[test]
+    fn rope_position_zero_is_identity() {
+        let mut x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let orig = x.clone();
+        rope_inplace(&mut x, 0, 10000.0);
+        crate::testing::assert_close(&x, &orig, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn kv_cache_grows_linearly() {
+        let m = tiny_model();
+        let mut st = m.new_state();
+        m.step(&mut st, 0);
+        let b1 = st.kv_bytes();
+        m.step(&mut st, 1);
+        assert_eq!(st.kv_bytes(), 2 * b1);
+    }
+
+    #[test]
+    fn storage_accounting_positive() {
+        let m = tiny_model();
+        assert!(m.linear_storage_bytes() > 0);
+        // fp32: 7 linears per block * d*d-ish * 4 bytes
+        let (cfg, _) = preset("tiny");
+        assert_eq!(m.linear_storage_bytes(), cfg.n_linear_params() * 4);
+    }
+}

@@ -1,0 +1,10 @@
+//! MiniLlama model substrate on the Rust side: the named parameter store
+//! (interchange with the HLO artifacts) and a native f32 reference forward
+//! (full-sequence and incremental-decode with KV cache). The native forward
+//! cross-validates the artifact path and powers the serving engine.
+
+pub mod forward;
+pub mod params;
+
+pub use forward::{DecodeState, NativeModel};
+pub use params::ParamStore;

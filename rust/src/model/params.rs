@@ -1,0 +1,168 @@
+//! Named parameter store in the canonical flat order shared with the
+//! artifacts (cfg::ModelConfig::param_specs == python param_specs).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::cfg::ModelConfig;
+use crate::tensor::io::TensorFile;
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+#[derive(Clone)]
+pub struct ParamStore {
+    pub cfg: ModelConfig,
+    mats: Vec<Mat>,
+    index: BTreeMap<String, usize>,
+}
+
+impl ParamStore {
+    /// Scaled-normal init matching the Python scheme (norm scales = 1,
+    /// weights ~ N(0, 1/fan_in)). Values differ from jax's PRNG — training
+    /// happens through the train_step artifact, so only shapes must agree.
+    pub fn init(cfg: &ModelConfig, rng: &mut Rng) -> Self {
+        let mut mats = Vec::new();
+        let mut index = BTreeMap::new();
+        for (i, spec) in cfg.param_specs().iter().enumerate() {
+            let m = if spec.name.ends_with("norm") {
+                Mat::from_vec(spec.rows, spec.cols, vec![1.0; spec.rows * spec.cols])
+            } else {
+                Mat::randn(spec.rows, spec.cols, (spec.rows as f32).powf(-0.5), rng)
+            };
+            index.insert(spec.name.clone(), i);
+            mats.push(m);
+        }
+        ParamStore { cfg: cfg.clone(), mats, index }
+    }
+
+    pub fn get(&self, name: &str) -> &Mat {
+        &self.mats[*self.index.get(name).unwrap_or_else(|| panic!("no param `{name}`"))]
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Mat {
+        let i = *self.index.get(name).unwrap_or_else(|| panic!("no param `{name}`"));
+        &mut self.mats[i]
+    }
+
+    pub fn set(&mut self, name: &str, m: Mat) {
+        let i = *self.index.get(name).unwrap_or_else(|| panic!("no param `{name}`"));
+        assert_eq!(
+            (self.mats[i].rows, self.mats[i].cols),
+            (m.rows, m.cols),
+            "shape mismatch for {name}"
+        );
+        self.mats[i] = m;
+    }
+
+    /// Flat views in artifact argument order.
+    pub fn flat(&self) -> &[Mat] {
+        &self.mats
+    }
+
+    /// Replace all tensors from a flat list (artifact outputs).
+    pub fn set_flat(&mut self, mats: Vec<Mat>) {
+        assert_eq!(mats.len(), self.mats.len());
+        for (old, new) in self.mats.iter().zip(&mats) {
+            assert_eq!((old.rows, old.cols), (new.rows, new.cols));
+        }
+        self.mats = mats;
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.index.keys().map(|k| k.as_str()).collect()
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let mut tf = TensorFile::new();
+        for (spec, m) in self.cfg.param_specs().iter().zip(&self.mats) {
+            tf.insert(spec.name.clone(), m.clone());
+        }
+        tf.save(path)
+    }
+
+    pub fn load(cfg: &ModelConfig, path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let tf = TensorFile::load(path)?;
+        let mut mats = Vec::new();
+        let mut index = BTreeMap::new();
+        for (i, spec) in cfg.param_specs().iter().enumerate() {
+            let Some(m) = tf.get(&spec.name) else {
+                bail!("missing param `{}` in checkpoint", spec.name);
+            };
+            if (m.rows, m.cols) != (spec.rows, spec.cols) {
+                bail!(
+                    "param `{}`: shape {}x{} != expected {}x{}",
+                    spec.name,
+                    m.rows,
+                    m.cols,
+                    spec.rows,
+                    spec.cols
+                );
+            }
+            index.insert(spec.name.clone(), i);
+            mats.push(m.clone());
+        }
+        Ok(ParamStore { cfg: cfg.clone(), mats, index })
+    }
+
+    /// Clone with one linear's weight replaced (quantized model assembly).
+    pub fn with_weight(&self, name: &str, w: Mat) -> ParamStore {
+        let mut out = self.clone();
+        out.set(name, w);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::preset;
+
+    #[test]
+    fn init_shapes_match_specs() {
+        let (cfg, _) = preset("tiny");
+        let ps = ParamStore::init(&cfg, &mut Rng::new(0));
+        for spec in cfg.param_specs() {
+            let m = ps.get(&spec.name);
+            assert_eq!((m.rows, m.cols), (spec.rows, spec.cols), "{}", spec.name);
+        }
+        assert_eq!(ps.flat().len(), cfg.param_specs().len());
+    }
+
+    #[test]
+    fn norm_params_init_to_one() {
+        let (cfg, _) = preset("tiny");
+        let ps = ParamStore::init(&cfg, &mut Rng::new(0));
+        assert!(ps.get("final_norm").data.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let (cfg, _) = preset("tiny");
+        let ps = ParamStore::init(&cfg, &mut Rng::new(3));
+        let path = std::env::temp_dir().join(format!("gq_params_{}.gqtb", std::process::id()));
+        ps.save(&path).unwrap();
+        let back = ParamStore::load(&cfg, &path).unwrap();
+        assert_eq!(back.get("layers.0.wq"), ps.get("layers.0.wq"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_wrong_config() {
+        let (tiny, _) = preset("tiny");
+        let (small, _) = preset("small");
+        let ps = ParamStore::init(&tiny, &mut Rng::new(0));
+        let path = std::env::temp_dir().join(format!("gq_params_bad_{}.gqtb", std::process::id()));
+        ps.save(&path).unwrap();
+        assert!(ParamStore::load(&small, &path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "no param")]
+    fn unknown_param_panics() {
+        let (cfg, _) = preset("tiny");
+        let ps = ParamStore::init(&cfg, &mut Rng::new(0));
+        ps.get("nonexistent");
+    }
+}

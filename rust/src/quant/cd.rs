@@ -1,0 +1,368 @@
+//! Cyclic coordinate descent on the layer-wise quadratic objective —
+//! Algorithms 3 (precomputation) and 4 (precomputation + lazy batch
+//! updates), plus the slower strategies of Appendix B.3 for the speedup
+//! ablation (`exhaustive` → `closed-form` → `precompute` → `lazy`).
+//!
+//! All four strategies compute the *same* iterates (coordinate order is
+//! fixed), so tests pin exact agreement; they differ only in how the
+//! correction term Σ_{k≠i} H_ik (Ŵ_k − W_k) is maintained.
+//!
+//! We maintain R = H·(Ŵ − W) (an equivalent reformulation of the paper's
+//! B = StrictUpper(H̃)(Ŵ−W) bookkeeping that is symmetric-safe):
+//!   target_i = W_i − R_i / H_ii + (Ŵ_i − W_i)
+//! which is exactly Eq. (12)'s closed form.
+
+use crate::tensor::{ops::matmul, Mat};
+
+use super::grid::ColGrid;
+
+/// Update-propagation strategy (Appendix B.3 ladder).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CdStrategy {
+    /// Evaluate the objective delta for every candidate code explicitly.
+    Exhaustive,
+    /// Closed-form target per coordinate, correction recomputed on demand.
+    ClosedForm,
+    /// Algorithm 3: maintain R incrementally (row updates after each step).
+    Precompute,
+    /// Algorithm 4: lazy batch updates with block size `b`.
+    Lazy { block: usize },
+}
+
+/// One CD pass configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct CdConfig {
+    pub cycles: usize,
+    pub strategy: CdStrategy,
+}
+
+impl Default for CdConfig {
+    fn default() -> Self {
+        CdConfig { cycles: 4, strategy: CdStrategy::Lazy { block: 32 } }
+    }
+}
+
+/// Run cyclic CD in place. `w_hat`/`codes` hold the current feasible iterate
+/// (every entry on the grid) and are updated to the improved iterate.
+pub fn cd_inplace(
+    h: &Mat,
+    w: &Mat,
+    w_hat: &mut Mat,
+    codes: &mut [u16],
+    grid: &dyn ColGrid,
+    cfg: CdConfig,
+) {
+    let d_in = w.rows;
+    let d_out = w.cols;
+    assert_eq!((h.rows, h.cols), (d_in, d_in));
+    assert_eq!((w_hat.rows, w_hat.cols), (d_in, d_out));
+    assert_eq!(codes.len(), d_in * d_out);
+
+    match cfg.strategy {
+        CdStrategy::Exhaustive => cd_exhaustive(h, w, w_hat, codes, grid, cfg.cycles),
+        CdStrategy::ClosedForm => cd_closed_form(h, w, w_hat, codes, grid, cfg.cycles),
+        CdStrategy::Precompute => cd_resident(h, w, w_hat, codes, grid, cfg.cycles, 1),
+        CdStrategy::Lazy { block } => {
+            cd_resident(h, w, w_hat, codes, grid, cfg.cycles, block.max(1))
+        }
+    }
+}
+
+/// Round row `i` given its correction row; returns true if anything changed.
+#[inline]
+fn round_row(
+    i: usize,
+    w: &Mat,
+    w_hat: &mut Mat,
+    codes: &mut [u16],
+    grid: &dyn ColGrid,
+    corr: &[f32], // Σ_{k≠i} H_ik (Ŵ_k − W_k), length d_out
+    h_ii: f32,
+    delta: &mut [f32],
+) -> bool {
+    let d_out = w.cols;
+    let hii = if h_ii.abs() < 1e-20 { 1e-20 } else { h_ii };
+    let mut changed = false;
+    for j in 0..d_out {
+        let target = w.at(i, j) - corr[j] / hii;
+        let (dec, code) = grid.round(j, target);
+        let old = w_hat.at(i, j);
+        delta[j] = dec - old;
+        if dec != old {
+            changed = true;
+            *w_hat.at_mut(i, j) = dec;
+            codes[i * d_out + j] = code;
+        }
+    }
+    changed
+}
+
+/// Strategy 1: per-coordinate, per-candidate objective evaluation.
+fn cd_exhaustive(
+    h: &Mat,
+    w: &Mat,
+    w_hat: &mut Mat,
+    codes: &mut [u16],
+    grid: &dyn ColGrid,
+    cycles: usize,
+) {
+    let d_in = w.rows;
+    let d_out = w.cols;
+    let m = grid.levels();
+    for _ in 0..cycles {
+        for i in 0..d_in {
+            let h_ii = h.at(i, i).max(1e-20);
+            for j in 0..d_out {
+                // corr = Σ_{k≠i} H_ik (Ŵ_kj − W_kj), recomputed per candidate
+                // set (the deliberately-naive baseline of Appendix B.3).
+                let mut corr = 0.0f32;
+                for k in 0..d_in {
+                    if k != i {
+                        corr += h.at(i, k) * (w_hat.at(k, j) - w.at(k, j));
+                    }
+                }
+                let mut best_q = codes[i * d_out + j];
+                let mut best_val = w_hat.at(i, j);
+                let mut best_obj = f32::INFINITY;
+                for q in 0..m {
+                    let c = grid.decode(j, q as u16);
+                    let d = c - w.at(i, j);
+                    // Δ objective as a function of this coordinate only:
+                    let obj = h_ii * d * d + 2.0 * d * corr;
+                    if obj < best_obj {
+                        best_obj = obj;
+                        best_q = q as u16;
+                        best_val = c;
+                    }
+                }
+                *w_hat.at_mut(i, j) = best_val;
+                codes[i * d_out + j] = best_q;
+            }
+        }
+    }
+}
+
+/// Strategy 2: closed-form target, correction recomputed per row.
+fn cd_closed_form(
+    h: &Mat,
+    w: &Mat,
+    w_hat: &mut Mat,
+    codes: &mut [u16],
+    grid: &dyn ColGrid,
+    cycles: usize,
+) {
+    let d_in = w.rows;
+    let d_out = w.cols;
+    let mut corr = vec![0.0f32; d_out];
+    let mut delta = vec![0.0f32; d_out];
+    for _ in 0..cycles {
+        for i in 0..d_in {
+            corr.fill(0.0);
+            for k in 0..d_in {
+                if k == i {
+                    continue;
+                }
+                let hik = h.at(i, k);
+                if hik == 0.0 {
+                    continue;
+                }
+                let wk = w_hat.row(k);
+                let wok = w.row(k);
+                for j in 0..d_out {
+                    corr[j] += hik * (wk[j] - wok[j]);
+                }
+            }
+            round_row(i, w, w_hat, codes, grid, &corr, h.at(i, i), &mut delta);
+        }
+    }
+}
+
+/// Strategies 3 & 4: R = H(Ŵ−W) resident; block = 1 gives Algorithm 3,
+/// block > 1 gives Algorithm 4's lazy batch updates.
+fn cd_resident(
+    h: &Mat,
+    w: &Mat,
+    w_hat: &mut Mat,
+    codes: &mut [u16],
+    grid: &dyn ColGrid,
+    cycles: usize,
+    block: usize,
+) {
+    let d_in = w.rows;
+    let d_out = w.cols;
+    let mut corr = vec![0.0f32; d_out];
+    let mut delta = vec![0.0f32; d_out];
+    for _ in 0..cycles {
+        // R = H (Ŵ − W), recomputed once per cycle.
+        let diff = w_hat.sub(w);
+        let mut r = matmul(h, &diff);
+        // Block-level delta accumulator for the deferred global update.
+        let mut block_delta = Mat::zeros(block, d_out);
+        let mut s = 0;
+        while s < d_in {
+            let e = (s + block).min(d_in);
+            for row in block_delta.data.iter_mut() {
+                *row = 0.0;
+            }
+            for i in s..e {
+                let h_ii = h.at(i, i);
+                // corr_j = R_ij − H_ii (Ŵ_ij − W_ij)  (exclude self term)
+                let r_row = r.row(i);
+                for j in 0..d_out {
+                    corr[j] = r_row[j] - h_ii * (w_hat.at(i, j) - w.at(i, j));
+                }
+                if round_row(i, w, w_hat, codes, grid, &corr, h_ii, &mut delta) {
+                    // Immediate propagation inside the block only.
+                    for k in (i + 1)..e {
+                        let hki = h.at(k, i);
+                        if hki == 0.0 {
+                            continue;
+                        }
+                        let rk = r.row_mut(k);
+                        for j in 0..d_out {
+                            rk[j] += hki * delta[j];
+                        }
+                    }
+                    let bd = block_delta.row_mut(i - s);
+                    for j in 0..d_out {
+                        bd[j] += delta[j];
+                    }
+                }
+            }
+            // Deferred global correction for the remaining rows:
+            // R[e.., :] += H[e.., s..e] @ Δ_block
+            for k in e..d_in {
+                let rk_ptr = k * d_out;
+                for (bi, i) in (s..e).enumerate() {
+                    let hki = h.at(k, i);
+                    if hki == 0.0 {
+                        continue;
+                    }
+                    let bd = block_delta.row(bi);
+                    let rk = &mut r.data[rk_ptr..rk_ptr + d_out];
+                    for j in 0..d_out {
+                        rk[j] += hki * bd[j];
+                    }
+                }
+            }
+            s = e;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::grid::{round_all, LutGrid, UniformGrid};
+    use crate::quant::objective::proxy_loss;
+    use crate::tensor::ops::matmul_tn;
+    use crate::testing;
+    use crate::util::Rng;
+
+    fn problem(rng: &mut Rng, d_in: usize, d_out: usize) -> (Mat, Mat) {
+        let x = Mat::randn(d_in + 16, d_in, 1.0, rng);
+        let h = matmul_tn(&x, &x);
+        let w = Mat::randn(d_in, d_out, 1.0, rng);
+        (h, w)
+    }
+
+    fn run(strategy: CdStrategy, h: &Mat, w: &Mat, grid: &UniformGrid, cycles: usize) -> (Mat, Vec<u16>) {
+        let (mut w_hat, mut codes) = round_all(w, grid);
+        cd_inplace(h, w, &mut w_hat, &mut codes, grid, CdConfig { cycles, strategy });
+        (w_hat, codes)
+    }
+
+    #[test]
+    fn all_strategies_agree_exactly() {
+        testing::check("cd-strategy-agreement", 8, |rng| {
+            let d_in = 6 + rng.below(18);
+            let d_out = 1 + rng.below(6);
+            let (h, w) = problem(rng, d_in, d_out);
+            let grid = UniformGrid::fit(&w, 2 + rng.below(2) as u32);
+            let base = run(CdStrategy::ClosedForm, &h, &w, &grid, 2);
+            for strat in [
+                CdStrategy::Exhaustive,
+                CdStrategy::Precompute,
+                CdStrategy::Lazy { block: 4 },
+                CdStrategy::Lazy { block: 7 },
+            ] {
+                let got = run(strat, &h, &w, &grid, 2);
+                testing::ensure(got.1 == base.1, format!("{strat:?} codes differ"))?;
+                testing::assert_close(&got.0.data, &base.0.data, 1e-6, 1e-6)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cd_monotonically_decreases_objective() {
+        testing::check("cd-descent", 10, |rng| {
+            let d_in = 10 + rng.below(14);
+            let d_out = 1 + rng.below(4);
+            let (h, w) = problem(rng, d_in, d_out);
+            let grid = UniformGrid::fit(&w, 2);
+            let (mut w_hat, mut codes) = round_all(&w, &grid);
+            let mut prev = proxy_loss(&h, &w, &w_hat);
+            for _ in 0..3 {
+                cd_inplace(
+                    &h,
+                    &w,
+                    &mut w_hat,
+                    &mut codes,
+                    &grid,
+                    CdConfig { cycles: 1, strategy: CdStrategy::Lazy { block: 8 } },
+                );
+                let cur = proxy_loss(&h, &w, &w_hat);
+                testing::ensure(
+                    cur <= prev + 1e-3 * (1.0 + prev.abs()),
+                    format!("objective rose: {prev} -> {cur}"),
+                )?;
+                prev = cur;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cd_improves_over_rtn() {
+        let mut rng = Rng::new(42);
+        let (h, w) = problem(&mut rng, 24, 8);
+        let grid = UniformGrid::fit(&w, 2);
+        let (rtn_hat, _) = round_all(&w, &grid);
+        let rtn_obj = proxy_loss(&h, &w, &rtn_hat);
+        let (cd_hat, _) = run(CdStrategy::Lazy { block: 8 }, &h, &w, &grid, 4);
+        let cd_obj = proxy_loss(&h, &w, &cd_hat);
+        assert!(cd_obj < rtn_obj, "cd {cd_obj} !< rtn {rtn_obj}");
+        // Typical gains are substantial at 2 bits:
+        assert!(cd_obj < 0.9 * rtn_obj, "cd {cd_obj} vs rtn {rtn_obj}");
+    }
+
+    #[test]
+    fn codes_stay_consistent_with_w_hat() {
+        let mut rng = Rng::new(7);
+        let (h, w) = problem(&mut rng, 16, 4);
+        let cb = Mat::from_fn(4, 4, |_, q| q as f32 - 1.5);
+        let grid = LutGrid::new(cb);
+        let (mut w_hat, mut codes) = round_all(&w, &grid);
+        cd_inplace(&h, &w, &mut w_hat, &mut codes, &grid, CdConfig::default());
+        for i in 0..16 {
+            for j in 0..4 {
+                assert_eq!(w_hat.at(i, j), grid.decode(j, codes[i * 4 + j]));
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_h_reduces_to_rtn() {
+        // With H = I there are no interactions: CD must keep the RTN result.
+        let mut rng = Rng::new(9);
+        let w = Mat::randn(12, 3, 1.0, &mut rng);
+        let h = Mat::eye(12);
+        let grid = UniformGrid::fit(&w, 3);
+        let (rtn_hat, rtn_codes) = round_all(&w, &grid);
+        let mut w_hat = rtn_hat.clone();
+        let mut codes = rtn_codes.clone();
+        cd_inplace(&h, &w, &mut w_hat, &mut codes, &grid, CdConfig::default());
+        assert_eq!(codes, rtn_codes);
+    }
+}

@@ -1,0 +1,137 @@
+//! PV-tuning-lite: post-PTQ refinement toward the end-to-end loss
+//! (paper Table 15 analog, substitution documented in DESIGN.md §2).
+//!
+//! Upstream PV-Tuning backpropagates through the quantized model to update
+//! codebook values (V-step) and occasionally assignments (P-step). Without
+//! a backward artifact for arbitrary quantized weights, we implement the
+//! cascade variant used by AQLM-style pipelines: layers are refit in order
+//! against activations recorded from the *quantized* model (so each layer
+//! compensates the error the earlier quantized layers introduced — the
+//! end-to-end signal), alternating the exact codebook LS step (V) and CD on
+//! assignments (P).
+
+use anyhow::Result;
+
+use crate::model::{NativeModel, ParamStore};
+use crate::tensor::ops::matmul_tn;
+use crate::tensor::Mat;
+
+use super::cd::{cd_inplace, CdConfig};
+use super::grid::LutGrid;
+use super::lnq::{codebook_ls_update, decode};
+
+/// One quantized linear's mutable code state.
+pub struct TunableLayer {
+    pub name: String,
+    pub codes: Vec<u16>,
+    pub codebooks: Mat,
+    pub d_in: usize,
+}
+
+/// Cascade fine-tune: for each layer (in forward order), recompute its
+/// input Gram matrix from the current quantized model, then refit codebook
+/// (exact LS) and assignments (CD). Returns the updated parameter store.
+///
+/// `base` holds the original fp weights for non-quantized params and the
+/// *target* weights W for each quantized layer.
+pub fn cascade_finetune(
+    base: &ParamStore,
+    layers: &mut [TunableLayer],
+    tokens: &[u32],
+    rounds: usize,
+    cd: CdConfig,
+) -> Result<ParamStore> {
+    let mut current = base.clone();
+    let specs = current.cfg.linear_specs();
+    // Install current quantized weights (validating names up front).
+    for layer in layers.iter() {
+        anyhow::ensure!(
+            specs.iter().any(|s| s.name == layer.name),
+            "unknown layer {}",
+            layer.name
+        );
+        current.set(&layer.name, decode(&layer.codes, &layer.codebooks, layer.d_in));
+    }
+    for _ in 0..rounds {
+        for li in 0..layers.len() {
+            // Record activations of the quantized-so-far model.
+            let model = NativeModel::from_params(&current);
+            let xs = model.record_linear_inputs(tokens);
+            // Find this layer's flat index by name.
+            let specs = current.cfg.linear_specs();
+            let idx = specs
+                .iter()
+                .position(|s| s.name == layers[li].name)
+                .ok_or_else(|| anyhow::anyhow!("unknown layer {}", layers[li].name))?;
+            let x = &xs[idx];
+            let h = matmul_tn(x, x);
+            let w_target = base.get(&layers[li].name).clone();
+            let layer = &mut layers[li];
+            // V-step: exact codebook LS refit against the fresh H.
+            codebook_ls_update(&h, &w_target, &layer.codes, &mut layer.codebooks)?;
+            // P-step: CD on assignments.
+            let mut w_hat = decode(&layer.codes, &layer.codebooks, layer.d_in);
+            let grid = LutGrid::new(layer.codebooks.clone());
+            cd_inplace(&h, &w_target, &mut w_hat, &mut layer.codes, &grid, cd);
+            codebook_ls_update(&h, &w_target, &layer.codes, &mut layer.codebooks)?;
+            let w_new = decode(&layer.codes, &layer.codebooks, layer.d_in);
+            current.set(&layer.name, w_new);
+        }
+    }
+    Ok(current)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::preset;
+    use crate::quant::lnq::{lnq_quantize, Lnq};
+    use crate::util::Rng;
+
+    #[test]
+    fn cascade_finetune_does_not_hurt_loss() {
+        let (cfg, _) = preset("tiny");
+        let mut rng = Rng::new(0);
+        let ps = ParamStore::init(&cfg, &mut rng);
+        let toks: Vec<u32> = (0..32).map(|_| rng.below(cfg.vocab) as u32).collect();
+
+        // Quantize the first two linears crudely at 2 bits.
+        let model = NativeModel::from_params(&ps);
+        let xs = model.record_linear_inputs(&toks);
+        let mut layers = Vec::new();
+        let mut quantized = ps.clone();
+        for (i, spec) in cfg.linear_specs().into_iter().take(2).enumerate() {
+            let h = matmul_tn(&xs[i], &xs[i]);
+            let w = ps.get(&spec.name).clone();
+            let res = lnq_quantize(&h, &w, &Lnq { t_iters: 1, ..Lnq::new(2) }).unwrap();
+            quantized.set(&spec.name, res.w_hat.clone());
+            layers.push(TunableLayer {
+                name: spec.name.clone(),
+                codes: res.codes.unwrap(),
+                codebooks: res.codebooks.unwrap(),
+                d_in: spec.d_in,
+            });
+        }
+        let before = NativeModel::from_params(&quantized).loss_sum(&toks);
+        let tuned = cascade_finetune(&ps, &mut layers, &toks, 1, CdConfig::default()).unwrap();
+        let after = NativeModel::from_params(&tuned).loss_sum(&toks);
+        // Fine-tuning on the same tokens should not make things worse
+        // (allow small slack for CD tie-breaking noise).
+        assert!(after <= before * 1.02, "finetune hurt: {before} -> {after}");
+    }
+
+    #[test]
+    fn unknown_layer_name_errors() {
+        let (cfg, _) = preset("tiny");
+        let mut rng = Rng::new(1);
+        let ps = ParamStore::init(&cfg, &mut rng);
+        let mut layers = vec![TunableLayer {
+            name: "layers.9.wq".into(),
+            codes: vec![0; 4],
+            codebooks: Mat::zeros(2, 2),
+            d_in: 2,
+        }];
+        let toks = [0u32, 1];
+        assert!(cascade_finetune(&ps, &mut layers, &toks, 1, CdConfig::default()).is_err());
+    }
+}

@@ -1,0 +1,385 @@
+//! Serving formats: fused dequant-matvec kernels implementing
+//! [`model::forward::LinearOp`] so the decode engine can serve any format.
+//!
+//! These are the CPU analogs of the paper's CUDA kernels (Table 2):
+//! * [`UniformScalarLinear`] — LUT-GEMM-style: packed codes + affine grid,
+//! * [`LutLinear`]           — Any-Precision-LLM-style: packed codes +
+//!                             per-channel codebook gather,
+//! * [`VqLinear`]            — vector codebook decode per dim-point,
+//! * [`TrellisLinear`]       — QTIP-style stateful decode (extra ALU work
+//!                             per weight → the paper's vector-quant decode
+//!                             overhead shows up honestly).
+
+use crate::model::forward::LinearOp;
+use crate::tensor::Mat;
+
+use super::grid::UniformGrid;
+use super::packing::PackedCodes;
+use super::trellis::{Generator, Trellis, TrellisCode};
+
+// ---------------------------------------------------------------------------
+// Uniform scalar
+// ---------------------------------------------------------------------------
+
+pub struct UniformScalarLinear {
+    pub d_in: usize,
+    pub d_out: usize,
+    pub codes: PackedCodes, // row-major d_in × d_out
+    pub scale: Vec<f32>,
+    pub zero: Vec<f32>,
+}
+
+impl UniformScalarLinear {
+    pub fn new(codes: &[u16], grid: &UniformGrid, d_in: usize, d_out: usize) -> Self {
+        assert_eq!(codes.len(), d_in * d_out);
+        UniformScalarLinear {
+            d_in,
+            d_out,
+            codes: PackedCodes::pack(codes, grid.bits),
+            scale: grid.scale.clone(),
+            zero: grid.zero.clone(),
+        }
+    }
+}
+
+impl LinearOp for UniformScalarLinear {
+    fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    fn matvec(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.d_in);
+        debug_assert_eq!(out.len(), self.d_out);
+        // out_j = scale_j · Σ_i x_i q_ij + zero_j · Σ_i x_i
+        out.fill(0.0);
+        let mut row = vec![0u16; self.d_out];
+        let mut xsum = 0.0f32;
+        for (i, &xi) in x.iter().enumerate() {
+            xsum += xi;
+            if xi == 0.0 {
+                continue;
+            }
+            self.codes.unpack_range(i * self.d_out, &mut row);
+            for (o, &q) in out.iter_mut().zip(&row) {
+                *o += xi * q as f32;
+            }
+        }
+        for j in 0..self.d_out {
+            out[j] = out[j] * self.scale[j] + xsum * self.zero[j];
+        }
+    }
+
+    fn storage_bytes(&self) -> usize {
+        self.codes.storage_bytes() + (self.scale.len() + self.zero.len()) * 2 // fp16 grid
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Non-uniform scalar (per-channel LUT)
+// ---------------------------------------------------------------------------
+
+pub struct LutLinear {
+    pub d_in: usize,
+    pub d_out: usize,
+    pub codes: PackedCodes, // row-major d_in × d_out
+    /// d_out × m, row-contiguous per channel.
+    pub codebooks: Mat,
+}
+
+impl LutLinear {
+    pub fn new(codes: &[u16], codebooks: Mat, bits: u32, d_in: usize, d_out: usize) -> Self {
+        assert_eq!(codes.len(), d_in * d_out);
+        assert_eq!(codebooks.rows, d_out);
+        LutLinear { d_in, d_out, codes: PackedCodes::pack(codes, bits), codebooks }
+    }
+}
+
+impl LinearOp for LutLinear {
+    fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    fn matvec(&self, x: &[f32], out: &mut [f32]) {
+        out.fill(0.0);
+        let m = self.codebooks.cols;
+        let cb = &self.codebooks.data;
+        let bits = self.codes.bits as usize;
+        if self.codes.rows_aligned(self.d_out) {
+            // Fused decode+FMA: walk packed words directly, no staging buffer.
+            let per_word = 32 / bits;
+            let mask = (1u32 << bits) - 1;
+            let words = self.codes.words();
+            let words_per_row = self.d_out / per_word;
+            for (i, &xi) in x.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let row_words = &words[i * words_per_row..(i + 1) * words_per_row];
+                let mut j = 0usize;
+                for &w in row_words {
+                    let mut word = w;
+                    for _ in 0..per_word {
+                        let q = (word & mask) as usize;
+                        word >>= bits;
+                        *unsafe { out.get_unchecked_mut(j) } +=
+                            xi * unsafe { *cb.get_unchecked(j * m + q) };
+                        j += 1;
+                    }
+                }
+            }
+            return;
+        }
+        let mut row = vec![0u16; self.d_out];
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            self.codes.unpack_range(i * self.d_out, &mut row);
+            for j in 0..self.d_out {
+                // gather: w_ij = cb[j][code]
+                *unsafe { out.get_unchecked_mut(j) } +=
+                    xi * unsafe { *cb.get_unchecked(j * m + row[j] as usize) };
+            }
+        }
+    }
+
+    fn storage_bytes(&self) -> usize {
+        self.codes.storage_bytes() + self.codebooks.data.len() * 2 // fp16 LUT
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vector quantization
+// ---------------------------------------------------------------------------
+
+pub struct VqLinear {
+    pub d_in: usize,
+    pub d_out: usize,
+    pub dim: usize,
+    /// codes: (d_in/dim) × d_out row-major per point.
+    pub codes: PackedCodes,
+    pub code_bits: u32,
+    /// d_out × (k·dim) centroid table.
+    pub codebooks: Mat,
+}
+
+impl VqLinear {
+    pub fn new(
+        codes: &[u16],
+        codebooks: Mat,
+        dim: usize,
+        code_bits: u32,
+        d_in: usize,
+        d_out: usize,
+    ) -> Self {
+        assert_eq!(codes.len(), (d_in / dim) * d_out);
+        VqLinear {
+            d_in,
+            d_out,
+            dim,
+            codes: PackedCodes::pack(codes, code_bits),
+            code_bits,
+            codebooks,
+        }
+    }
+}
+
+impl LinearOp for VqLinear {
+    fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    fn matvec(&self, x: &[f32], out: &mut [f32]) {
+        out.fill(0.0);
+        let dim = self.dim;
+        let n_pts = self.d_in / dim;
+        let cbw = self.codebooks.cols;
+        let mut row = vec![0u16; self.d_out];
+        for p in 0..n_pts {
+            let xs = &x[p * dim..(p + 1) * dim];
+            self.codes.unpack_range(p * self.d_out, &mut row);
+            for j in 0..self.d_out {
+                let c = row[j] as usize * dim;
+                let cent = &self.codebooks.data[j * cbw + c..j * cbw + c + dim];
+                let mut acc = 0.0f32;
+                for t in 0..dim {
+                    acc += xs[t] * cent[t];
+                }
+                out[j] += acc;
+            }
+        }
+    }
+
+    fn storage_bytes(&self) -> usize {
+        self.codes.storage_bytes() + self.codebooks.data.len() * 2
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trellis (QTIP-style stateful decode)
+// ---------------------------------------------------------------------------
+
+pub struct TrellisLinear {
+    pub d_in: usize,
+    pub d_out: usize,
+    pub cfg: Trellis,
+    pub gen: Generator,
+    /// Per-column packed symbols, column-major: column j occupies
+    /// [j*d_in, (j+1)*d_in).
+    pub symbols: PackedCodes,
+    pub initial_states: Vec<u32>,
+    pub scales: Vec<f32>,
+}
+
+impl TrellisLinear {
+    pub fn new(codes: &[TrellisCode], gen: Generator, cfg: Trellis, d_in: usize) -> Self {
+        let d_out = codes.len();
+        let mut flat = Vec::with_capacity(d_in * d_out);
+        for code in codes {
+            assert_eq!(code.symbols.len(), d_in);
+            flat.extend_from_slice(&code.symbols);
+        }
+        TrellisLinear {
+            d_in,
+            d_out,
+            symbols: PackedCodes::pack(&flat, cfg.bits),
+            initial_states: codes.iter().map(|c| c.initial_state).collect(),
+            scales: codes.iter().map(|c| c.scale).collect(),
+            gen,
+            cfg,
+        }
+    }
+}
+
+impl LinearOp for TrellisLinear {
+    fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    fn matvec(&self, x: &[f32], out: &mut [f32]) {
+        let mask = (1u32 << self.cfg.state_bits) - 1;
+        let bits = self.cfg.bits;
+        let mut syms = vec![0u16; self.d_in];
+        for j in 0..self.d_out {
+            let mut state = self.initial_states[j];
+            self.symbols.unpack_range(j * self.d_in, &mut syms);
+            let mut acc = 0.0f32;
+            for (i, &sym) in syms.iter().enumerate() {
+                state = ((state << bits) | sym as u32) & mask;
+                acc += x[i] * self.gen.value(state);
+            }
+            out[j] = acc * self.scales[j];
+        }
+    }
+
+    fn storage_bytes(&self) -> usize {
+        self.symbols.storage_bytes() + self.d_out * (2 + 4) // fp16 scale + init state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::grid::{round_all, rtn_quantize, UniformGrid};
+    use crate::quant::trellis::trellis_quantize;
+    use crate::tensor::ops::{matmul_tn, matvec};
+    use crate::testing;
+    use crate::util::Rng;
+
+    #[test]
+    fn uniform_format_matches_dense_dequant() {
+        let mut rng = Rng::new(0);
+        let w = Mat::randn(24, 10, 1.0, &mut rng);
+        let grid = UniformGrid::fit(&w, 3);
+        let (w_hat, codes) = round_all(&w, &grid);
+        let lin = UniformScalarLinear::new(&codes, &grid, 24, 10);
+        let x: Vec<f32> = (0..24).map(|_| rng.normal_f32()).collect();
+        let want = matvec(&w_hat.transpose(), &x);
+        let mut got = vec![0.0; 10];
+        lin.matvec(&x, &mut got);
+        testing::assert_close(&got, &want, 1e-4, 1e-4).unwrap();
+        assert!(lin.storage_bytes() < 24 * 10 * 4 / 2);
+    }
+
+    #[test]
+    fn lut_format_matches_dense_dequant() {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(16, 8, 1.0, &mut rng);
+        let res = rtn_quantize(&w, 4);
+        let lin = LutLinear::new(&res.codes.clone().unwrap(), res.codebooks.clone().unwrap(), 4, 16, 8);
+        let x: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+        let want = matvec(&res.w_hat.transpose(), &x);
+        let mut got = vec![0.0; 8];
+        lin.matvec(&x, &mut got);
+        testing::assert_close(&got, &want, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn vq_format_matches_dense_dequant() {
+        let mut rng = Rng::new(2);
+        let (d_in, d_out, dim, k) = (12, 6, 2, 4);
+        // Build a VQ-coded weight matrix directly.
+        let codebooks = Mat::randn(d_out, k * dim, 1.0, &mut rng);
+        let n_pts = d_in / dim;
+        let codes: Vec<u16> = (0..n_pts * d_out).map(|_| rng.below(k) as u16).collect();
+        let mut w_hat = Mat::zeros(d_in, d_out);
+        for p in 0..n_pts {
+            for j in 0..d_out {
+                let c = codes[p * d_out + j] as usize * dim;
+                for t in 0..dim {
+                    *w_hat.at_mut(p * dim + t, j) = codebooks.at(j, c + t);
+                }
+            }
+        }
+        let lin = VqLinear::new(&codes, codebooks, dim, 2, d_in, d_out);
+        let x: Vec<f32> = (0..d_in).map(|_| rng.normal_f32()).collect();
+        let want = matvec(&w_hat.transpose(), &x);
+        let mut got = vec![0.0; d_out];
+        lin.matvec(&x, &mut got);
+        testing::assert_close(&got, &want, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn trellis_format_matches_dense_dequant() {
+        let mut rng = Rng::new(3);
+        let x_cal = Mat::randn(64, 32, 1.0, &mut rng);
+        let h = matmul_tn(&x_cal, &x_cal);
+        let w = Mat::randn(32, 4, 1.0, &mut rng);
+        let cfg = Trellis::new(2, crate::cfg::TrellisVariant::Hyb);
+        let (qr, codes, gen) = trellis_quantize(&h, &w, &cfg).unwrap();
+        let lin = TrellisLinear::new(&codes, gen, cfg, 32);
+        let x: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
+        let want = matvec(&qr.w_hat.transpose(), &x);
+        let mut got = vec![0.0; 4];
+        lin.matvec(&x, &mut got);
+        testing::assert_close(&got, &want, 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn storage_ordering_uniform_vs_fp32() {
+        // 2-bit packed should be ~16x smaller than fp32.
+        let mut rng = Rng::new(4);
+        let w = Mat::randn(128, 64, 1.0, &mut rng);
+        let grid = UniformGrid::fit(&w, 2);
+        let (_, codes) = round_all(&w, &grid);
+        let lin = UniformScalarLinear::new(&codes, &grid, 128, 64);
+        let fp32 = 128 * 64 * 4;
+        assert!(lin.storage_bytes() * 10 < fp32, "{} vs {}", lin.storage_bytes(), fp32);
+    }
+}

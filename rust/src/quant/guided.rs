@@ -1,0 +1,186 @@
+//! GuidedQuant — the paper's Algorithm 1.
+//!
+//! Output channels of each layer are partitioned into g consecutive groups
+//! J_1..J_g; group k is quantized by any layer-wise method Q against the
+//! group-averaged Fisher Hessian H̄_k = X^T·Diag(s_k)·X (computed by the L1
+//! Pallas kernel inside the calib_stats artifact and accumulated by
+//! `fisher::`). With g = 0 (or hessians = [H]) this degrades to the plain
+//! layer-wise objective — the ablation axis of Figure 2 and Table 13.
+
+use anyhow::Result;
+
+use crate::tensor::Mat;
+
+use super::{LayerQuantizer, QuantResult};
+
+/// Consecutive-channel partition (Algorithm 1, line 1).
+pub fn group_ranges(d_out: usize, g: usize) -> Vec<(usize, usize)> {
+    assert!(g >= 1);
+    let g = g.min(d_out);
+    let base = d_out / g;
+    let rem = d_out % g;
+    let mut out = Vec::with_capacity(g);
+    let mut lo = 0;
+    for k in 0..g {
+        let sz = base + usize::from(k < rem);
+        out.push((lo, lo + sz));
+        lo += sz;
+    }
+    out
+}
+
+/// Apply Q per group with per-group Hessians; reassemble Ŵ/codes/codebooks.
+///
+/// `hessians` must have one Mat (d_in × d_in) per group; pass a single
+/// Hessian for the unguided baseline.
+pub fn guided_quantize(
+    q: &dyn LayerQuantizer,
+    hessians: &[Mat],
+    w: &Mat,
+) -> Result<QuantResult> {
+    let g = hessians.len();
+    anyhow::ensure!(g >= 1, "need at least one Hessian");
+    let ranges = group_ranges(w.cols, g);
+    let mut w_hat = Mat::zeros(w.rows, w.cols);
+    let mut codes: Option<Vec<u16>> = None;
+    let mut codebooks: Option<Mat> = None;
+    let mut bits_acc = 0.0f64;
+    for (k, &(lo, hi)) in ranges.iter().enumerate() {
+        let wg = w.slice_cols(lo, hi);
+        let res = q.quantize(&hessians[k], &wg)?;
+        anyhow::ensure!(
+            res.w_hat.rows == wg.rows && res.w_hat.cols == wg.cols,
+            "Q returned wrong shape for group {k}"
+        );
+        w_hat.paste_cols(lo, &res.w_hat);
+        bits_acc += res.avg_bits * (hi - lo) as f64;
+        match (res.codes, res.codebooks) {
+            (Some(gc), Some(gcb)) => {
+                let codes_slot = codes.get_or_insert_with(|| vec![0u16; w.rows * w.cols]);
+                for i in 0..w.rows {
+                    for (jj, j) in (lo..hi).enumerate() {
+                        codes_slot[i * w.cols + j] = gc[i * (hi - lo) + jj];
+                    }
+                }
+                let cb_slot = codebooks.get_or_insert_with(|| Mat::zeros(w.cols, gcb.cols));
+                anyhow::ensure!(cb_slot.cols == gcb.cols, "codebook width changed across groups");
+                for (jj, j) in (lo..hi).enumerate() {
+                    cb_slot.row_mut(j).copy_from_slice(gcb.row(jj));
+                }
+            }
+            _ => {
+                codes = None;
+                codebooks = None;
+            }
+        }
+    }
+    Ok(QuantResult { w_hat, codes, codebooks, avg_bits: bits_acc / w.cols as f64 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::gptq::Gptq;
+    use crate::quant::lnq::Lnq;
+    use crate::quant::objective::proxy_loss;
+    use crate::tensor::ops::matmul_tn;
+    use crate::util::Rng;
+
+    #[test]
+    fn ranges_partition_exactly() {
+        assert_eq!(group_ranges(10, 4), vec![(0, 3), (3, 6), (6, 8), (8, 10)]);
+        assert_eq!(group_ranges(8, 2), vec![(0, 4), (4, 8)]);
+        assert_eq!(group_ranges(3, 8), vec![(0, 1), (1, 2), (2, 3)]);
+        let r = group_ranges(257, 4);
+        assert_eq!(r.last().unwrap().1, 257);
+    }
+
+    /// Build a synthetic guided problem: activations X, per-sample saliency
+    /// per group -> H̄_k; weighted output error should drop vs unguided.
+    fn guided_problem(rng: &mut Rng, n: usize, d_in: usize, d_out: usize, g: usize) -> (Mat, Vec<Mat>, Mat, Mat) {
+        let x = Mat::randn(n, d_in, 1.0, rng);
+        let h = matmul_tn(&x, &x);
+        // Saliency: group k weights samples differently (simulating ∂ℓ/∂z).
+        let mut hs = Vec::new();
+        let mut sal = Mat::zeros(g, n);
+        for k in 0..g {
+            for i in 0..n {
+                let s = (0.1 + rng.f32() * 2.0) * if i % (k + 2) == 0 { 4.0 } else { 1.0 };
+                *sal.at_mut(k, i) = s;
+            }
+            // H̄_k = X^T diag(s_k) X
+            let mut xw = x.clone();
+            for i in 0..n {
+                let s = sal.at(k, i);
+                for v in xw.row_mut(i) {
+                    *v *= s.sqrt();
+                }
+            }
+            hs.push(matmul_tn(&xw, &xw));
+        }
+        let w = Mat::randn(d_in, d_out, 1.0, rng);
+        (h, hs, w, sal)
+    }
+
+    #[test]
+    fn guided_improves_weighted_objective() {
+        let mut rng = Rng::new(0);
+        let g = 2;
+        let (h, hs, w, _) = guided_problem(&mut rng, 48, 16, 8, g);
+        let q = Gptq::new(2);
+        let unguided = guided_quantize(&q, std::slice::from_ref(&h), &w).unwrap();
+        let guided = guided_quantize(&q, &hs, &w).unwrap();
+        // Evaluate both under the *guided* objective (Eq. 7):
+        let eval = |what: &Mat| -> f64 {
+            let ranges = group_ranges(w.cols, g);
+            ranges
+                .iter()
+                .enumerate()
+                .map(|(k, &(lo, hi))| {
+                    proxy_loss(&hs[k], &w.slice_cols(lo, hi), &what.slice_cols(lo, hi))
+                })
+                .sum()
+        };
+        let gu = eval(&guided.w_hat);
+        let un = eval(&unguided.w_hat);
+        assert!(gu <= un * 1.01, "guided {gu} !<= unguided {un}");
+    }
+
+    #[test]
+    fn single_group_equals_direct_call() {
+        let mut rng = Rng::new(1);
+        let (h, _, w, _) = guided_problem(&mut rng, 32, 12, 6, 1);
+        let q = Gptq::new(3);
+        let direct = q.quantize(&h, &w).unwrap();
+        let via = guided_quantize(&q, std::slice::from_ref(&h), &w).unwrap();
+        crate::testing::assert_close(&via.w_hat.data, &direct.w_hat.data, 1e-6, 1e-6).unwrap();
+        assert_eq!(via.codes, direct.codes);
+    }
+
+    #[test]
+    fn codes_and_codebooks_reassembled() {
+        let mut rng = Rng::new(2);
+        let (_, hs, w, _) = guided_problem(&mut rng, 40, 12, 8, 2);
+        let q = Lnq::new(2);
+        let res = guided_quantize(&q, &hs, &w).unwrap();
+        let codes = res.codes.expect("codes");
+        let cbs = res.codebooks.expect("codebooks");
+        // Decode must reproduce w_hat.
+        for i in 0..w.rows {
+            for j in 0..w.cols {
+                assert_eq!(res.w_hat.at(i, j), cbs.at(j, codes[i * w.cols + j] as usize));
+            }
+        }
+    }
+
+    #[test]
+    fn avg_bits_weighted_average() {
+        let mut rng = Rng::new(3);
+        let (_, hs, w, _) = guided_problem(&mut rng, 32, 12, 7, 2);
+        let q = Gptq::new(2);
+        let res = guided_quantize(&q, &hs, &w).unwrap();
+        // 2 bits + per-column codebook overhead (4 fp16 entries over d_in=12).
+        let bound = 2.0 + 4.0 * 16.0 / 12.0 + 0.1;
+        assert!(res.avg_bits >= 2.0 && res.avg_bits < bound, "{}", res.avg_bits);
+    }
+}

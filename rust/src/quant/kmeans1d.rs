@@ -1,0 +1,247 @@
+//! Weighted 1-D k-means: Lloyd's algorithm with k-means++ seeding (what
+//! SqueezeLLM uses) and an exact O(n·k) dynamic program (SMAWK-free variant
+//! of Grønlund et al. 2017) for ground-truth comparisons at small n.
+//!
+//! Minimizes Σ_i w_i (x_i − c_{a(i)})² — the weighted k-means objective the
+//! paper's Eq. (3) reduces to for non-uniform scalar quantization.
+
+use crate::util::Rng;
+
+/// Result: cluster centers (sorted ascending) and per-point assignment.
+#[derive(Debug, Clone)]
+pub struct KMeans1d {
+    pub centers: Vec<f32>,
+    pub assign: Vec<u16>,
+    pub objective: f64,
+}
+
+fn objective(xs: &[f32], ws: &[f32], centers: &[f32], assign: &[u16]) -> f64 {
+    xs.iter()
+        .zip(ws)
+        .zip(assign)
+        .map(|((&x, &w), &a)| {
+            let d = (x - centers[a as usize]) as f64;
+            w as f64 * d * d
+        })
+        .sum()
+}
+
+fn assign_nearest(xs: &[f32], centers: &[f32]) -> Vec<u16> {
+    xs.iter()
+        .map(|&x| {
+            let mut best = 0u16;
+            let mut bd = f32::INFINITY;
+            for (q, &c) in centers.iter().enumerate() {
+                let d = (x - c) * (x - c);
+                if d < bd {
+                    bd = d;
+                    best = q as u16;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// k-means++ seeding over the weighted points.
+fn seed_pp(xs: &[f32], ws: &[f32], k: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut centers = Vec::with_capacity(k);
+    let wsum: Vec<f64> = ws.iter().map(|&w| w.max(0.0) as f64).collect();
+    centers.push(xs[rng.weighted(&wsum)]);
+    let mut d2: Vec<f64> = xs
+        .iter()
+        .zip(&wsum)
+        .map(|(&x, &w)| w * ((x - centers[0]) as f64).powi(2))
+        .collect();
+    while centers.len() < k {
+        let idx = rng.weighted(&d2);
+        let c = xs[idx];
+        centers.push(c);
+        for (i, &x) in xs.iter().enumerate() {
+            let nd = wsum[i] * ((x - c) as f64).powi(2);
+            if nd < d2[i] {
+                d2[i] = nd;
+            }
+        }
+    }
+    centers
+}
+
+/// Lloyd's algorithm with k-means++ init (SqueezeLLM's solver).
+/// Zero-weight points are assigned but do not influence centers.
+pub fn lloyd(xs: &[f32], ws: &[f32], k: usize, iters: usize, rng: &mut Rng) -> KMeans1d {
+    assert_eq!(xs.len(), ws.len());
+    assert!(k >= 1 && !xs.is_empty());
+    let k = k.min(xs.len());
+    let mut centers = seed_pp(xs, ws, k, rng);
+    let mut assign = assign_nearest(xs, &centers);
+    for _ in 0..iters {
+        // Update step: weighted means.
+        let mut num = vec![0.0f64; k];
+        let mut den = vec![0.0f64; k];
+        for ((&x, &w), &a) in xs.iter().zip(ws).zip(&assign) {
+            num[a as usize] += (w as f64) * (x as f64);
+            den[a as usize] += w as f64;
+        }
+        for q in 0..k {
+            if den[q] > 0.0 {
+                centers[q] = (num[q] / den[q]) as f32;
+            }
+        }
+        let new_assign = assign_nearest(xs, &centers);
+        if new_assign == assign {
+            break;
+        }
+        assign = new_assign;
+    }
+    let mut centers_sorted: Vec<f32> = centers.clone();
+    centers_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let assign = assign_nearest(xs, &centers_sorted);
+    let objective = objective(xs, ws, &centers_sorted, &assign);
+    KMeans1d { centers: centers_sorted, assign, objective }
+}
+
+/// Exact weighted 1-D k-means by dynamic programming over sorted points.
+/// O(n²·k) — ground truth for tests and small problems.
+pub fn exact_dp(xs: &[f32], ws: &[f32], k: usize) -> KMeans1d {
+    let n = xs.len();
+    assert!(n > 0 && k >= 1);
+    let k = k.min(n);
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let sx: Vec<f64> = order.iter().map(|&i| xs[i] as f64).collect();
+    let sw: Vec<f64> = order.iter().map(|&i| (ws[i] as f64).max(0.0)).collect();
+    // Prefix sums for O(1) interval cost.
+    let mut pw = vec![0.0; n + 1];
+    let mut pwx = vec![0.0; n + 1];
+    let mut pwx2 = vec![0.0; n + 1];
+    for i in 0..n {
+        pw[i + 1] = pw[i] + sw[i];
+        pwx[i + 1] = pwx[i] + sw[i] * sx[i];
+        pwx2[i + 1] = pwx2[i] + sw[i] * sx[i] * sx[i];
+    }
+    // cost of clustering sorted points [a, b) into one cluster at their mean
+    let cost = |a: usize, b: usize| -> f64 {
+        let w = pw[b] - pw[a];
+        if w <= 0.0 {
+            return 0.0;
+        }
+        let wx = pwx[b] - pwx[a];
+        let wx2 = pwx2[b] - pwx2[a];
+        (wx2 - wx * wx / w).max(0.0)
+    };
+    // dp[q][b] = best cost of first b points with q clusters.
+    let inf = f64::INFINITY;
+    let mut dp = vec![vec![inf; n + 1]; k + 1];
+    let mut arg = vec![vec![0usize; n + 1]; k + 1];
+    dp[0][0] = 0.0;
+    for q in 1..=k {
+        for b in 1..=n {
+            for a in (q - 1)..b {
+                if dp[q - 1][a] == inf {
+                    continue;
+                }
+                let c = dp[q - 1][a] + cost(a, b);
+                if c < dp[q][b] {
+                    dp[q][b] = c;
+                    arg[q][b] = a;
+                }
+            }
+        }
+    }
+    // Backtrack boundaries -> centers.
+    let mut bounds = vec![n];
+    let mut b = n;
+    for q in (1..=k).rev() {
+        b = arg[q][b];
+        bounds.push(b);
+    }
+    bounds.reverse();
+    let mut centers = Vec::with_capacity(k);
+    for win in bounds.windows(2) {
+        let (a, b) = (win[0], win[1]);
+        let w = pw[b] - pw[a];
+        let c = if w > 0.0 {
+            ((pwx[b] - pwx[a]) / w) as f32
+        } else if b > a {
+            sx[a] as f32
+        } else {
+            0.0
+        };
+        centers.push(c);
+    }
+    centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let assign = assign_nearest(xs, &centers);
+    let objective = objective(xs, ws, &centers, &assign);
+    KMeans1d { centers, assign, objective }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+
+    #[test]
+    fn lloyd_separates_obvious_clusters() {
+        let xs = [0.0, 0.1, -0.1, 5.0, 5.2, 4.8];
+        let ws = [1.0f32; 6];
+        let km = lloyd(&xs, &ws, 2, 50, &mut Rng::new(0));
+        assert!((km.centers[0] - 0.0).abs() < 0.2, "{:?}", km.centers);
+        assert!((km.centers[1] - 5.0).abs() < 0.2, "{:?}", km.centers);
+        assert_eq!(km.assign[0], km.assign[1]);
+        assert_ne!(km.assign[0], km.assign[3]);
+    }
+
+    #[test]
+    fn weights_pull_centers() {
+        // A huge weight on one point should place a center on it exactly.
+        let xs = [0.0, 1.0, 2.0];
+        let ws = [1.0, 1000.0, 1.0];
+        let km = lloyd(&xs, &ws, 2, 50, &mut Rng::new(1));
+        assert!(km.centers.iter().any(|&c| (c - 1.0).abs() < 0.01), "{:?}", km.centers);
+    }
+
+    #[test]
+    fn exact_dp_is_optimal_vs_lloyd() {
+        testing::check("dp-beats-lloyd", 20, |rng| {
+            let n = 8 + rng.below(24);
+            let k = 2 + rng.below(3);
+            let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let ws: Vec<f32> = (0..n).map(|_| rng.f32() + 0.01).collect();
+            let dp = exact_dp(&xs, &ws, k);
+            let ll = lloyd(&xs, &ws, k, 100, rng);
+            testing::ensure(
+                dp.objective <= ll.objective + 1e-6 * (1.0 + ll.objective),
+                format!("dp {} > lloyd {}", dp.objective, ll.objective),
+            )
+        });
+    }
+
+    #[test]
+    fn exact_dp_zero_cost_when_k_equals_n() {
+        let xs = [1.0, 2.0, 3.0];
+        let ws = [1.0f32; 3];
+        let dp = exact_dp(&xs, &ws, 3);
+        assert!(dp.objective < 1e-12);
+    }
+
+    #[test]
+    fn lloyd_objective_matches_manual() {
+        let xs = [0.0, 1.0, 10.0, 11.0];
+        let ws = [1.0f32; 4];
+        let km = lloyd(&xs, &ws, 2, 50, &mut Rng::new(2));
+        // centers 0.5 and 10.5, objective = 4 * 0.25
+        assert!((km.objective - 1.0).abs() < 1e-6, "{}", km.objective);
+    }
+
+    #[test]
+    fn zero_weights_handled() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ws = [0.0f32; 4];
+        let km = lloyd(&xs, &ws, 2, 10, &mut Rng::new(3));
+        assert_eq!(km.assign.len(), 4);
+        assert!(km.objective == 0.0);
+        let dp = exact_dp(&xs, &ws, 2);
+        assert_eq!(dp.objective, 0.0);
+    }
+}

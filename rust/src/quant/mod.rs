@@ -1,0 +1,55 @@
+//! The paper's algorithms and every baseline they are compared against.
+//!
+//! All layer-wise output-based methods share the interface
+//! `fn quantize(H, W) -> QuantResult` where `H` is a `d_in × d_in` proxy
+//! Hessian (plain `X^T X`, or GuidedQuant's group-averaged `H̄_k`) and
+//! `W: [d_in, d_out]`. [`guided::GuidedQuant`] (Algorithm 1) wraps any of
+//! them, splitting output channels into saliency groups and dispatching with
+//! the per-group Hessian.
+
+pub mod cd;
+pub mod finetune;
+pub mod formats;
+pub mod gptq;
+pub mod gptvq;
+pub mod grid;
+pub mod guided;
+pub mod kmeans1d;
+pub mod lnq;
+pub mod objective;
+pub mod packing;
+pub mod rotation;
+pub mod sparse;
+pub mod spinquant;
+pub mod squeezellm;
+pub mod trellis;
+pub mod vq;
+
+use crate::tensor::Mat;
+
+/// The decoded result of quantizing one weight matrix, plus enough structure
+/// to build a serving format (codes + per-channel codebooks when they exist).
+#[derive(Debug, Clone)]
+pub struct QuantResult {
+    /// Dequantized weights, same shape as the input `W`.
+    pub w_hat: Mat,
+    /// Per-weight code indices (d_in × d_out row-major), if LUT-coded.
+    pub codes: Option<Vec<u16>>,
+    /// Per-output-channel codebooks (d_out × m), if LUT-coded.
+    pub codebooks: Option<Mat>,
+    /// Average bits per weight actually spent (incl. codebook overhead).
+    pub avg_bits: f64,
+}
+
+impl QuantResult {
+    pub fn dense(w_hat: Mat, avg_bits: f64) -> Self {
+        QuantResult { w_hat, codes: None, codebooks: None, avg_bits }
+    }
+}
+
+/// A layer-wise output-based quantization algorithm Q (paper notation).
+pub trait LayerQuantizer: Send + Sync {
+    /// Quantize `w` against proxy Hessian `h` (must be d_in × d_in).
+    fn quantize(&self, h: &Mat, w: &Mat) -> anyhow::Result<QuantResult>;
+    fn name(&self) -> &'static str;
+}

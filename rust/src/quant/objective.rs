@@ -1,0 +1,112 @@
+//! The layer-wise quadratic objective (paper Eq. 6/7) and helpers.
+//!
+//! proxy_loss(H, W, Ŵ) = Σ_j (ŵ_j − w_j)^T H (ŵ_j − w_j)
+//!
+//! Every solver in this module is judged against this value; LNQ's descent
+//! guarantee (Prop 4.1) and CD's monotonicity are property-tested on it.
+
+use crate::tensor::{ops::matmul, Mat};
+
+/// Σ_j Δ_j^T H Δ_j with Δ = Ŵ − W, computed as Σ elementwise(Δ ⊙ (H Δ)).
+pub fn proxy_loss(h: &Mat, w: &Mat, w_hat: &Mat) -> f64 {
+    assert_eq!(h.rows, h.cols);
+    assert_eq!(h.rows, w.rows);
+    assert_eq!((w.rows, w.cols), (w_hat.rows, w_hat.cols));
+    let delta = w_hat.sub(w);
+    let hd = matmul(h, &delta);
+    delta
+        .data
+        .iter()
+        .zip(&hd.data)
+        .map(|(&d, &hd)| d as f64 * hd as f64)
+        .sum()
+}
+
+/// Per-column objective values (diagnostics for group-level analysis).
+pub fn proxy_loss_per_col(h: &Mat, w: &Mat, w_hat: &Mat) -> Vec<f64> {
+    let delta = w_hat.sub(w);
+    let hd = matmul(h, &delta);
+    let mut out = vec![0.0; w.cols];
+    for i in 0..w.rows {
+        for j in 0..w.cols {
+            out[j] += delta.at(i, j) as f64 * hd.at(i, j) as f64;
+        }
+    }
+    out
+}
+
+/// Output MSE ‖XW − XŴ‖_F² given precomputed activations X.
+pub fn output_mse(x: &Mat, w: &Mat, w_hat: &Mat) -> f64 {
+    let z = matmul(x, w);
+    let z_hat = matmul(x, w_hat);
+    z.sub(&z_hat).frob_norm_sq()
+}
+
+/// Plain weight-space MSE (what RTN minimizes).
+pub fn weight_mse(w: &Mat, w_hat: &Mat) -> f64 {
+    w.sub(w_hat).frob_norm_sq() / (w.rows * w.cols) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::matmul_tn;
+    use crate::testing;
+    use crate::util::Rng;
+
+    #[test]
+    fn proxy_loss_zero_iff_exact() {
+        let mut rng = Rng::new(0);
+        let x = Mat::randn(32, 8, 1.0, &mut rng);
+        let h = matmul_tn(&x, &x);
+        let w = Mat::randn(8, 5, 1.0, &mut rng);
+        assert_eq!(proxy_loss(&h, &w, &w), 0.0);
+        let mut w2 = w.clone();
+        w2.data[3] += 0.1;
+        assert!(proxy_loss(&h, &w, &w2) > 0.0);
+    }
+
+    #[test]
+    fn proxy_loss_equals_output_mse_for_gram_h() {
+        // When H = X^T X, the quadratic form equals ‖XW − XŴ‖² exactly.
+        testing::check("proxy-vs-output-mse", 10, |rng| {
+            let n = 8 + rng.below(24);
+            let d = 2 + rng.below(10);
+            let c = 1 + rng.below(6);
+            let x = Mat::randn(n, d, 1.0, rng);
+            let h = matmul_tn(&x, &x);
+            let w = Mat::randn(d, c, 1.0, rng);
+            let mut w_hat = w.clone();
+            for v in w_hat.data.iter_mut() {
+                *v += 0.05 * rng.normal_f32();
+            }
+            let a = proxy_loss(&h, &w, &w_hat);
+            let b = output_mse(&x, &w, &w_hat);
+            testing::ensure((a - b).abs() < 1e-2 * (1.0 + b), format!("{a} vs {b}"))
+        });
+    }
+
+    #[test]
+    fn per_col_sums_to_total() {
+        let mut rng = Rng::new(1);
+        let x = Mat::randn(20, 6, 1.0, &mut rng);
+        let h = matmul_tn(&x, &x);
+        let w = Mat::randn(6, 4, 1.0, &mut rng);
+        let mut w_hat = w.clone();
+        for v in w_hat.data.iter_mut() {
+            *v += 0.1;
+        }
+        let per = proxy_loss_per_col(&h, &w, &w_hat);
+        let total = proxy_loss(&h, &w, &w_hat);
+        assert!((per.iter().sum::<f64>() - total).abs() < 1e-6 * (1.0 + total));
+        assert!(per.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn weight_mse_basic() {
+        let w = Mat::zeros(2, 2);
+        let mut w2 = Mat::zeros(2, 2);
+        w2.data = vec![1.0, 1.0, 1.0, 1.0];
+        assert!((weight_mse(&w, &w2) - 1.0).abs() < 1e-12);
+    }
+}

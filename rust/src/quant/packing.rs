@@ -1,0 +1,130 @@
+//! Bit-packing of code indices into u32 words — the storage format behind
+//! the serving-engine formats (Table 2's bits accounting is real bytes).
+
+/// Codes packed `bits` per element into u32 words, row-major.
+#[derive(Debug, Clone)]
+pub struct PackedCodes {
+    pub bits: u32,
+    pub len: usize,
+    words: Vec<u32>,
+}
+
+impl PackedCodes {
+    pub fn pack(codes: &[u16], bits: u32) -> Self {
+        assert!(bits >= 1 && bits <= 16);
+        let per_word = 32 / bits as usize;
+        let n_words = codes.len().div_ceil(per_word);
+        let mask = (1u32 << bits) - 1;
+        let mut words = vec![0u32; n_words];
+        for (idx, &c) in codes.iter().enumerate() {
+            debug_assert!((c as u32) <= mask, "code {c} exceeds {bits} bits");
+            let w = idx / per_word;
+            let off = (idx % per_word) as u32 * bits;
+            words[w] |= ((c as u32) & mask) << off;
+        }
+        PackedCodes { bits, len: codes.len(), words }
+    }
+
+    #[inline]
+    pub fn get(&self, idx: usize) -> u16 {
+        debug_assert!(idx < self.len);
+        let per_word = 32 / self.bits as usize;
+        let w = idx / per_word;
+        let off = (idx % per_word) as u32 * self.bits;
+        ((self.words[w] >> off) & ((1u32 << self.bits) - 1)) as u16
+    }
+
+    /// Unpack a contiguous range (hot path: one shift/mask per element,
+    /// word-at-a-time — no per-element division). Word-aligned ranges with
+    /// power-of-two bits take a branch-free unrolled path.
+    pub fn unpack_range(&self, start: usize, out: &mut [u16]) {
+        debug_assert!(start + out.len() <= self.len);
+        let bits = self.bits as usize;
+        let per_word = 32 / bits;
+        let mask = (1u32 << bits) - 1;
+        if 32 % bits == 0 && start % per_word == 0 && out.len() % per_word == 0 {
+            let w0 = start / per_word;
+            for (chunk, &w) in out.chunks_exact_mut(per_word).zip(&self.words[w0..]) {
+                let mut word = w;
+                for o in chunk {
+                    *o = (word & mask) as u16;
+                    word >>= bits;
+                }
+            }
+            return;
+        }
+        let mut w = start / per_word;
+        let mut off = (start % per_word) * bits;
+        let mut word = self.words[w] >> off;
+        for o in out.iter_mut() {
+            *o = (word & mask) as u16;
+            off += bits;
+            if off + bits > 32 {
+                w += 1;
+                off = 0;
+                word = *self.words.get(w).unwrap_or(&0);
+            } else {
+                word >>= bits;
+            }
+        }
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.words.len() * 4
+    }
+
+    /// Raw packed words (for fused decode loops in the serving formats).
+    #[inline]
+    pub fn words(&self) -> &[u32] {
+        &self.words
+    }
+
+    /// True if rows of length `row_len` starting at multiples of `row_len`
+    /// are word-aligned (the fused serving decode requires this).
+    pub fn rows_aligned(&self, row_len: usize) -> bool {
+        32 % self.bits == 0 && row_len % (32 / self.bits as usize) == 0
+    }
+
+    pub fn to_vec(&self) -> Vec<u16> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::Rng;
+
+    #[test]
+    fn pack_unpack_round_trip_property() {
+        testing::check("pack-roundtrip", 20, |rng| {
+            let bits = 1 + rng.below(8) as u32;
+            let n = 1 + rng.below(200);
+            let max = (1u32 << bits) as usize;
+            let codes: Vec<u16> = (0..n).map(|_| rng.below(max) as u16).collect();
+            let packed = PackedCodes::pack(&codes, bits);
+            testing::ensure(packed.to_vec() == codes, "roundtrip mismatch")?;
+            let mut out = vec![0u16; n.min(7)];
+            packed.unpack_range(0, &mut out);
+            testing::ensure(out[..] == codes[..out.len()], "range mismatch")
+        });
+    }
+
+    #[test]
+    fn storage_is_compact() {
+        let codes = vec![3u16; 64];
+        let p2 = PackedCodes::pack(&codes, 2);
+        assert_eq!(p2.storage_bytes(), 16); // 64*2 bits = 128 bits = 16 B
+        let p4 = PackedCodes::pack(&codes, 4);
+        assert_eq!(p4.storage_bytes(), 32);
+    }
+
+    #[test]
+    fn three_bit_packing_crosses_words() {
+        // 32/3 = 10 codes per word; code 10 starts a new word.
+        let codes: Vec<u16> = (0..25).map(|i| (i % 8) as u16).collect();
+        let p = PackedCodes::pack(&codes, 3);
+        assert_eq!(p.to_vec(), codes);
+    }
+}

@@ -1,0 +1,239 @@
+//! Orthogonal residual-stream rotations (QuaRot / SpinQuant substrate):
+//! randomized Hadamard transforms R = H·D/√d with D a random ±1 diagonal.
+//! All MiniLlama hidden sizes are powers of two, so the fast Walsh–Hadamard
+//! transform applies directly.
+
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+/// In-place fast Walsh–Hadamard transform (unnormalized). len power of two.
+pub fn fwht(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "fwht length {n} not a power of two");
+    let mut h = 1;
+    while h < n {
+        for i in (0..n).step_by(h * 2) {
+            for j in i..i + h {
+                let (a, b) = (x[j], x[j + h]);
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+}
+
+/// A randomized-Hadamard rotation R = Hd·D/√d acting on row vectors as
+/// x ↦ x·R. Orthogonal: R·Rᵀ = I.
+#[derive(Debug, Clone)]
+pub struct HadamardRotation {
+    pub signs: Vec<f32>, // ±1
+}
+
+impl HadamardRotation {
+    pub fn random(d: usize, rng: &mut Rng) -> Self {
+        assert!(d.is_power_of_two());
+        HadamardRotation {
+            signs: (0..d).map(|_| if rng.f32() < 0.5 { -1.0 } else { 1.0 }).collect(),
+        }
+    }
+
+    pub fn identity_signs(d: usize) -> Self {
+        HadamardRotation { signs: vec![1.0; d] }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.signs.len()
+    }
+
+    /// y = R x (column-vector action): R x = Hd(D x)/√d.
+    pub fn apply(&self, x: &mut [f32]) {
+        let d = self.dim();
+        assert_eq!(x.len(), d);
+        for (v, &s) in x.iter_mut().zip(&self.signs) {
+            *v *= s;
+        }
+        fwht(x);
+        let norm = 1.0 / (d as f32).sqrt();
+        for v in x.iter_mut() {
+            *v *= norm;
+        }
+    }
+
+    /// y = Rᵀ x: Rᵀ x = D·Hd(x)/√d.
+    pub fn apply_t(&self, x: &mut [f32]) {
+        let d = self.dim();
+        assert_eq!(x.len(), d);
+        fwht(x);
+        let norm = 1.0 / (d as f32).sqrt();
+        for (v, &s) in x.iter_mut().zip(&self.signs) {
+            *v = *v * norm * s;
+        }
+    }
+
+    /// W' = Rᵀ W (reading linears: input arrives pre-rotated).
+    pub fn rotate_left_t(&self, w: &Mat) -> Mat {
+        assert_eq!(w.rows, self.dim());
+        let mut out = w.clone();
+        let mut col = vec![0.0f32; w.rows];
+        for j in 0..w.cols {
+            for i in 0..w.rows {
+                col[i] = w.at(i, j);
+            }
+            self.apply_t(&mut col);
+            out.set_col(j, &col);
+        }
+        out
+    }
+
+    /// W' = W R (writing linears: output leaves rotated).
+    /// Row convention: (W R)ᵢ. = Rᵀ·(Wᵢ.)ᵀ.
+    pub fn rotate_right(&self, w: &Mat) -> Mat {
+        assert_eq!(w.cols, self.dim());
+        let mut out = w.clone();
+        for i in 0..w.rows {
+            let row = out.row_mut(i);
+            // row' = row · R  ⇔ apply Rᵀ to the row as a column vector? No:
+            // (row·R)_j = Σ_k row_k R_kj = (Rᵀ row)_j.
+            let mut v = row.to_vec();
+            self.apply_t_row(&mut v);
+            row.copy_from_slice(&v);
+        }
+        out
+    }
+
+    /// Helper: y_j = Σ_k x_k R_kj = (Rᵀ x)_j — same as apply_t? No: apply_t
+    /// computes Rᵀx = D·H·x/√d while Σ_k x_k R_kj needs R's columns:
+    /// R = H·D/√d so R_kj = (H D)_kj/√d = H_kj·s_j/√d and
+    /// (xᵀR)_j = s_j · (H x)_j / √d — i.e. fwht THEN signs.
+    fn apply_t_row(&self, x: &mut [f32]) {
+        let d = self.dim();
+        fwht(x);
+        let norm = 1.0 / (d as f32).sqrt();
+        for (v, &s) in x.iter_mut().zip(&self.signs) {
+            *v = *v * norm * s;
+        }
+    }
+}
+
+/// Activation-outlier metric used by the SpinQuant-lite rotation search:
+/// mean over rows of (max |x| / rms(x)) — the quantity rotations reduce.
+pub fn outlier_score(x: &Mat) -> f64 {
+    let mut total = 0.0f64;
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let max = row.iter().fold(0.0f32, |m, &v| m.max(v.abs())) as f64;
+        let rms = (row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / row.len() as f64)
+            .sqrt()
+            .max(1e-12);
+        total += max / rms;
+    }
+    total / x.rows.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+
+    #[test]
+    fn fwht_involution_up_to_n() {
+        let mut rng = Rng::new(0);
+        let orig: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+        let mut x = orig.clone();
+        fwht(&mut x);
+        fwht(&mut x);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a / 16.0 - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rotation_is_orthogonal() {
+        testing::check("rotation-orthogonal", 10, |rng| {
+            let d = 32;
+            let r = HadamardRotation::random(d, rng);
+            let mut x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let norm0: f32 = x.iter().map(|v| v * v).sum();
+            r.apply(&mut x);
+            let norm1: f32 = x.iter().map(|v| v * v).sum();
+            testing::ensure((norm0 - norm1).abs() < 1e-3 * norm0, "norm not preserved")?;
+            // Rᵀ undoes R.
+            let mut y = x.clone();
+            r.apply_t(&mut y);
+            let mut x0: Vec<f32> = vec![0.0; d];
+            // reconstruct original by applying R then Rᵀ to a fresh copy
+            let orig: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            x0.copy_from_slice(&orig);
+            r.apply(&mut x0);
+            r.apply_t(&mut x0);
+            testing::assert_close(&x0, &orig, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn rotate_left_then_input_rotation_is_identity_map() {
+        // x·R @ (Rᵀ W) == x @ W for all x.
+        let mut rng = Rng::new(1);
+        let d = 16;
+        let r = HadamardRotation::random(d, &mut rng);
+        let w = Mat::randn(d, 8, 1.0, &mut rng);
+        let wr = r.rotate_left_t(&w);
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        // x·R (row vector): via apply_t_row semantics == fwht+signs
+        let mut xr = x.clone();
+        fwht(&mut xr);
+        let norm = 1.0 / (d as f32).sqrt();
+        for (v, &s) in xr.iter_mut().zip(&r.signs) {
+            *v = *v * norm * s;
+        }
+        let want = crate::tensor::ops::matvec(&w.transpose(), &x);
+        let got = crate::tensor::ops::matvec(&wr.transpose(), &xr);
+        testing::assert_close(&got, &want, 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn rotate_right_matches_explicit_matrix() {
+        let mut rng = Rng::new(2);
+        let d = 8;
+        let r = HadamardRotation::random(d, &mut rng);
+        // Build explicit R: columns R e_j? Use apply on basis vectors:
+        // R e_j gives column j of R.
+        let mut rm = Mat::zeros(d, d);
+        for j in 0..d {
+            let mut e = vec![0.0f32; d];
+            e[j] = 1.0;
+            r.apply(&mut e);
+            rm.set_col(j, &e);
+        }
+        let w = Mat::randn(3, d, 1.0, &mut rng);
+        let want = crate::tensor::ops::matmul(&w, &rm);
+        let got = r.rotate_right(&w);
+        testing::assert_close(&got.data, &want.data, 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn rotation_reduces_outliers_on_spiky_activations() {
+        let mut rng = Rng::new(3);
+        let d = 64;
+        // Spiky activations: one huge channel.
+        let mut x = Mat::randn(32, d, 0.1, &mut rng);
+        for i in 0..32 {
+            *x.at_mut(i, 7) = 20.0;
+        }
+        let before = outlier_score(&x);
+        let r = HadamardRotation::random(d, &mut rng);
+        let mut xr = x.clone();
+        for i in 0..32 {
+            let mut row = xr.row(i).to_vec();
+            fwht(&mut row);
+            let norm = 1.0 / (d as f32).sqrt();
+            for (v, &s) in row.iter_mut().zip(&r.signs) {
+                *v = *v * norm * s;
+            }
+            xr.row_mut(i).copy_from_slice(&row);
+        }
+        let after = outlier_score(&xr);
+        assert!(after < before * 0.5, "outliers not reduced: {before} -> {after}");
+    }
+}

@@ -1,0 +1,163 @@
+//! Dense-and-sparse decomposition (SqueezeLLM §Dense-and-Sparse, paper
+//! Table 17): keep a small fraction of weights in full precision (outliers
+//! by magnitude or sensitivity), quantize the dense remainder with any
+//! method, and overlay the sparse values at decode time.
+
+use crate::tensor::Mat;
+
+use super::{LayerQuantizer, QuantResult};
+
+/// COO sparse overlay.
+#[derive(Debug, Clone, Default)]
+pub struct SparseOverlay {
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl SparseOverlay {
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    pub fn apply(&self, w: &mut Mat) {
+        for ((&i, &j), &v) in self.rows.iter().zip(&self.cols).zip(&self.vals) {
+            *w.at_mut(i as usize, j as usize) = v;
+        }
+    }
+}
+
+/// Select the top `frac` weights by score (|w| or a sensitivity matrix) and
+/// split: returns (dense W with outliers zeroed, overlay of originals).
+pub fn split_outliers(w: &Mat, score: Option<&Mat>, frac: f32) -> (Mat, SparseOverlay) {
+    let total = w.rows * w.cols;
+    let keep = ((total as f64) * frac as f64).round() as usize;
+    if keep == 0 {
+        return (w.clone(), SparseOverlay::default());
+    }
+    let mut idx: Vec<usize> = (0..total).collect();
+    let key = |t: usize| -> f32 {
+        let (i, j) = (t / w.cols, t % w.cols);
+        match score {
+            Some(s) => s.at(i, j).abs(),
+            None => w.at(i, j).abs(),
+        }
+    };
+    idx.select_nth_unstable_by(total - keep, |&a, &b| key(a).partial_cmp(&key(b)).unwrap());
+    let chosen = &idx[total - keep..];
+    let mut dense = w.clone();
+    let mut ov = SparseOverlay::default();
+    for &t in chosen {
+        let (i, j) = (t / w.cols, t % w.cols);
+        ov.rows.push(i as u32);
+        ov.cols.push(j as u32);
+        ov.vals.push(w.at(i, j));
+        *dense.at_mut(i, j) = 0.0;
+    }
+    (dense, ov)
+}
+
+/// Dense-and-sparse wrapper around any layer quantizer.
+pub struct DenseAndSparse<Q: LayerQuantizer> {
+    pub inner: Q,
+    pub frac: f32,
+}
+
+impl<Q: LayerQuantizer> DenseAndSparse<Q> {
+    pub fn new(inner: Q, frac: f32) -> Self {
+        DenseAndSparse { inner, frac }
+    }
+}
+
+impl<Q: LayerQuantizer> LayerQuantizer for DenseAndSparse<Q> {
+    fn quantize(&self, h: &Mat, w: &Mat) -> anyhow::Result<QuantResult> {
+        let (dense, overlay) = split_outliers(w, None, self.frac);
+        let mut res = self.inner.quantize(h, &dense)?;
+        overlay.apply(&mut res.w_hat);
+        // Sparse storage cost: 16-bit value + 32-bit index per entry.
+        let total = (w.rows * w.cols) as f64;
+        res.avg_bits += overlay.len() as f64 * 48.0 / total;
+        Ok(res)
+    }
+
+    fn name(&self) -> &'static str {
+        "dense+sparse"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::grid::rtn_quantize;
+    use crate::quant::objective::proxy_loss;
+    use crate::tensor::ops::matmul_tn;
+    use crate::util::Rng;
+
+    #[test]
+    fn split_extracts_exact_fraction() {
+        let mut rng = Rng::new(0);
+        let w = Mat::randn(40, 10, 1.0, &mut rng);
+        let (dense, ov) = split_outliers(&w, None, 0.01);
+        assert_eq!(ov.len(), 4); // 1% of 400
+        for ((&i, &j), &v) in ov.rows.iter().zip(&ov.cols).zip(&ov.vals) {
+            assert_eq!(dense.at(i as usize, j as usize), 0.0);
+            assert_eq!(v, w.at(i as usize, j as usize));
+        }
+    }
+
+    #[test]
+    fn outliers_are_the_largest_magnitudes() {
+        let mut rng = Rng::new(1);
+        let mut w = Mat::randn(20, 5, 0.1, &mut rng);
+        *w.at_mut(3, 2) = 50.0;
+        *w.at_mut(10, 0) = -40.0;
+        let (_, ov) = split_outliers(&w, None, 0.02);
+        assert_eq!(ov.len(), 2);
+        let mut vals: Vec<f32> = ov.vals.iter().map(|v| v.abs()).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(vals, vec![40.0, 50.0]);
+    }
+
+    #[test]
+    fn overlay_restores_exact_values() {
+        let mut rng = Rng::new(2);
+        let w = Mat::randn(16, 4, 1.0, &mut rng);
+        let (dense, ov) = split_outliers(&w, None, 0.1);
+        let mut back = dense.clone();
+        ov.apply(&mut back);
+        for ((&i, &j), _) in ov.rows.iter().zip(&ov.cols).zip(&ov.vals) {
+            assert_eq!(back.at(i as usize, j as usize), w.at(i as usize, j as usize));
+        }
+    }
+
+    #[test]
+    fn dense_and_sparse_improves_objective_with_heavy_outliers() {
+        let mut rng = Rng::new(3);
+        let x = Mat::randn(64, 24, 1.0, &mut rng);
+        let h = matmul_tn(&x, &x);
+        let mut w = Mat::randn(24, 6, 0.2, &mut rng);
+        // Plant outliers that wreck a 2-bit grid.
+        *w.at_mut(0, 0) = 8.0;
+        *w.at_mut(5, 3) = -7.0;
+        let plain = rtn_quantize(&w, 2);
+        let plain_obj = proxy_loss(&h, &w, &plain.w_hat);
+        let (dense, ov) = split_outliers(&w, None, 0.02);
+        let mut ds = rtn_quantize(&dense, 2);
+        ov.apply(&mut ds.w_hat);
+        let ds_obj = proxy_loss(&h, &w, &ds.w_hat);
+        assert!(ds_obj < plain_obj, "dense+sparse {ds_obj} !< plain {plain_obj}");
+    }
+
+    #[test]
+    fn zero_fraction_is_noop() {
+        let mut rng = Rng::new(4);
+        let w = Mat::randn(8, 3, 1.0, &mut rng);
+        let (dense, ov) = split_outliers(&w, None, 0.0);
+        assert!(ov.is_empty());
+        assert_eq!(dense, w);
+    }
+}

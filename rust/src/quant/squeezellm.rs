@@ -1,0 +1,119 @@
+//! SqueezeLLM (Kim et al., 2024) — weight-only non-uniform scalar PTQ via
+//! sensitivity-weighted k-means per output channel (the paper's Eq. 3
+//! objective with the diagonal Fisher approximation).
+//!
+//! Not a layer-wise output-based method: it never sees H, only the
+//! per-weight diagonal Fisher F_kk (from `fisher::` / the calib_stats
+//! artifact). `Weighted k-means` column in Figure 2.
+
+use anyhow::Result;
+
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+use super::grid::avg_bits_scalar;
+use super::QuantResult;
+
+#[derive(Debug, Clone)]
+pub struct SqueezeLlm {
+    pub bits: u32,
+    /// Lloyd iterations per channel.
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl SqueezeLlm {
+    pub fn new(bits: u32) -> Self {
+        SqueezeLlm { bits, iters: 50, seed: 0 }
+    }
+}
+
+/// Quantize `w` with per-weight sensitivities (d_in × d_out, non-negative).
+/// Each output channel j solves a weighted 1-D k-means over its column.
+pub fn squeezellm_quantize(w: &Mat, sensitivity: &Mat, cfg: &SqueezeLlm) -> Result<QuantResult> {
+    assert_eq!((w.rows, w.cols), (sensitivity.rows, sensitivity.cols));
+    let d_in = w.rows;
+    let d_out = w.cols;
+    let m = 1usize << cfg.bits;
+    let mut codebooks = Mat::zeros(d_out, m);
+    let mut codes = vec![0u16; d_in * d_out];
+    let mut w_hat = Mat::zeros(d_in, d_out);
+    let mut rng = Rng::new(cfg.seed ^ 0x53715a);
+    for j in 0..d_out {
+        let col = w.col(j);
+        // Zero sensitivity would let k-means ignore a weight entirely; floor
+        // it so every weight still rounds to a meaningful center.
+        let ws: Vec<f32> = (0..d_in).map(|i| sensitivity.at(i, j).max(1e-12)).collect();
+        let km = super::kmeans1d::lloyd(&col, &ws, m, cfg.iters, &mut rng);
+        for q in 0..m {
+            *codebooks.at_mut(j, q) = *km.centers.get(q).unwrap_or(km.centers.last().unwrap());
+        }
+        for i in 0..d_in {
+            let q = km.assign[i];
+            codes[i * d_out + j] = q;
+            *w_hat.at_mut(i, j) = codebooks.at(j, q as usize);
+        }
+    }
+    Ok(QuantResult {
+        w_hat,
+        codes: Some(codes),
+        codebooks: Some(codebooks),
+        avg_bits: avg_bits_scalar(d_in, d_out, cfg.bits),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::objective::weight_mse;
+    use crate::testing;
+
+    #[test]
+    fn uniform_sensitivity_is_plain_kmeans() {
+        let mut rng = Rng::new(0);
+        let w = Mat::randn(64, 2, 1.0, &mut rng);
+        let s = Mat::from_fn(64, 2, |_, _| 1.0);
+        let res = squeezellm_quantize(&w, &s, &SqueezeLlm::new(3)).unwrap();
+        // 8 levels on 64 gaussians: small MSE.
+        assert!(weight_mse(&w, &res.w_hat) < 0.05);
+    }
+
+    #[test]
+    fn high_sensitivity_weights_are_prioritized() {
+        testing::check("sqllm-sensitivity", 8, |rng| {
+            let d = 48;
+            let w = Mat::randn(d, 1, 1.0, rng);
+            let mut s = Mat::from_fn(d, 1, |_, _| 1e-6);
+            // Mark 4 weights as critical.
+            for i in 0..4 {
+                *s.at_mut(i * 10, 0) = 1e3;
+            }
+            let res = squeezellm_quantize(&w, &s, &SqueezeLlm::new(2)).unwrap();
+            // Critical weights should have much lower error than average.
+            let mut crit = 0.0f64;
+            for i in 0..4 {
+                crit += ((w.at(i * 10, 0) - res.w_hat.at(i * 10, 0)) as f64).powi(2);
+            }
+            let total = res.w_hat.sub(&w).frob_norm_sq();
+            testing::ensure(
+                crit / 4.0 <= total / d as f64 + 1e-9,
+                format!("critical err {} vs avg {}", crit / 4.0, total / d as f64),
+            )
+        });
+    }
+
+    #[test]
+    fn codes_decode_to_w_hat() {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(16, 3, 1.0, &mut rng);
+        let s = Mat::from_fn(16, 3, |_, _| 1.0);
+        let res = squeezellm_quantize(&w, &s, &SqueezeLlm::new(2)).unwrap();
+        let codes = res.codes.unwrap();
+        let cbs = res.codebooks.unwrap();
+        for i in 0..16 {
+            for j in 0..3 {
+                assert_eq!(res.w_hat.at(i, j), cbs.at(j, codes[i * 3 + j] as usize));
+            }
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Vector-quantization substrate: weighted k-means in R^dim over weight
+//! vectors formed from `dim` consecutive rows of one output channel.
+//! Used by GPTVQ 2D/4D and (as initialization) the trellis quantizer.
+
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+/// Weighted k-means over `points` (n × dim flattened), weights per point.
+#[derive(Debug, Clone)]
+pub struct KMeansVq {
+    /// k × dim centroids.
+    pub centers: Vec<f32>,
+    pub dim: usize,
+    pub assign: Vec<u16>,
+    pub objective: f64,
+}
+
+fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| (x - y) * (x - y)).sum()
+}
+
+fn assign_nearest(points: &[f32], dim: usize, centers: &[f32]) -> Vec<u16> {
+    let n = points.len() / dim;
+    let k = centers.len() / dim;
+    (0..n)
+        .map(|i| {
+            let p = &points[i * dim..(i + 1) * dim];
+            let mut best = 0u16;
+            let mut bd = f32::INFINITY;
+            for q in 0..k {
+                let d = dist2(p, &centers[q * dim..(q + 1) * dim]);
+                if d < bd {
+                    bd = d;
+                    best = q as u16;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Lloyd with k-means++ seeding in R^dim.
+pub fn lloyd_vq(points: &[f32], dim: usize, weights: &[f32], k: usize, iters: usize, rng: &mut Rng) -> KMeansVq {
+    let n = points.len() / dim;
+    assert_eq!(weights.len(), n);
+    assert!(n > 0);
+    let k = k.min(n).max(1);
+    // k-means++ seeding.
+    let wsum: Vec<f64> = weights.iter().map(|&w| w.max(0.0) as f64).collect();
+    let mut centers = Vec::with_capacity(k * dim);
+    let first = rng.weighted(&wsum);
+    centers.extend_from_slice(&points[first * dim..(first + 1) * dim]);
+    let mut d2: Vec<f64> = (0..n)
+        .map(|i| wsum[i] * dist2(&points[i * dim..(i + 1) * dim], &centers[0..dim]) as f64)
+        .collect();
+    while centers.len() < k * dim {
+        let idx = rng.weighted(&d2);
+        let c = &points[idx * dim..(idx + 1) * dim];
+        centers.extend_from_slice(c);
+        let q = centers.len() / dim - 1;
+        for i in 0..n {
+            let nd = wsum[i] * dist2(&points[i * dim..(i + 1) * dim], &centers[q * dim..(q + 1) * dim]) as f64;
+            if nd < d2[i] {
+                d2[i] = nd;
+            }
+        }
+    }
+    let mut assign = assign_nearest(points, dim, &centers);
+    for _ in 0..iters {
+        let mut num = vec![0.0f64; k * dim];
+        let mut den = vec![0.0f64; k];
+        for i in 0..n {
+            let a = assign[i] as usize;
+            den[a] += wsum[i];
+            for t in 0..dim {
+                num[a * dim + t] += wsum[i] * points[i * dim + t] as f64;
+            }
+        }
+        for q in 0..k {
+            if den[q] > 0.0 {
+                for t in 0..dim {
+                    centers[q * dim + t] = (num[q * dim + t] / den[q]) as f32;
+                }
+            }
+        }
+        let new_assign = assign_nearest(points, dim, &centers);
+        if new_assign == assign {
+            break;
+        }
+        assign = new_assign;
+    }
+    let objective = (0..n)
+        .map(|i| {
+            wsum[i] * dist2(
+                &points[i * dim..(i + 1) * dim],
+                &centers[assign[i] as usize * dim..(assign[i] as usize + 1) * dim],
+            ) as f64
+        })
+        .sum();
+    KMeansVq { centers, dim, assign, objective }
+}
+
+/// Extract VQ points from a weight column: `dim` consecutive rows per point.
+/// d_in must be divisible by dim.
+pub fn column_points(w: &Mat, j: usize, dim: usize) -> Vec<f32> {
+    assert_eq!(w.rows % dim, 0);
+    let mut out = Vec::with_capacity(w.rows);
+    for i in 0..w.rows {
+        out.push(w.at(i, j));
+    }
+    out // already contiguous along rows: point p = rows [p*dim, (p+1)*dim)
+}
+
+/// Per-point weights from a per-row weight vector (summed within a point).
+pub fn point_weights(row_weights: &[f32], dim: usize) -> Vec<f32> {
+    row_weights.chunks(dim).map(|c| c.iter().sum()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+
+    #[test]
+    fn vq_recovers_planted_clusters() {
+        let mut rng = Rng::new(0);
+        // Two clusters in R^2 at (0,0) and (5,5).
+        let mut pts = Vec::new();
+        for i in 0..40 {
+            let base = if i % 2 == 0 { 0.0 } else { 5.0 };
+            pts.push(base + 0.1 * rng.normal_f32());
+            pts.push(base + 0.1 * rng.normal_f32());
+        }
+        let w = vec![1.0f32; 40];
+        let km = lloyd_vq(&pts, 2, &w, 2, 30, &mut rng);
+        let c0 = &km.centers[0..2];
+        let c1 = &km.centers[2..4];
+        let near = |c: &[f32], t: f32| (c[0] - t).abs() < 0.3 && (c[1] - t).abs() < 0.3;
+        assert!((near(c0, 0.0) && near(c1, 5.0)) || (near(c0, 5.0) && near(c1, 0.0)));
+        assert!(km.objective < 5.0);
+    }
+
+    #[test]
+    fn lloyd_vq_objective_nonincreasing_vs_random_assign() {
+        testing::check("vq-better-than-random", 8, |rng| {
+            let n = 32;
+            let dim = 2;
+            let pts: Vec<f32> = (0..n * dim).map(|_| rng.normal_f32()).collect();
+            let ws = vec![1.0f32; n];
+            let km = lloyd_vq(&pts, dim, &ws, 4, 30, rng);
+            // Compare against centroid-of-all (k=1) objective: must be <=.
+            let k1 = lloyd_vq(&pts, dim, &ws, 1, 10, rng);
+            testing::ensure(km.objective <= k1.objective + 1e-6, "k=4 worse than k=1")
+        });
+    }
+
+    #[test]
+    fn point_weights_sums() {
+        assert_eq!(point_weights(&[1.0, 2.0, 3.0, 4.0], 2), vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn assign_within_k() {
+        let mut rng = Rng::new(5);
+        let pts: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+        let ws = vec![1.0f32; 16];
+        let km = lloyd_vq(&pts, 4, &ws, 5, 10, &mut rng);
+        assert!(km.assign.iter().all(|&a| (a as usize) < 5));
+        assert_eq!(km.assign.len(), 16);
+    }
+}

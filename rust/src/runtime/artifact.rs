@@ -1,0 +1,242 @@
+//! Artifact registry: compile-once, execute-many wrappers over the `xla`
+//! crate's PJRT CPU client.
+//!
+//! HLO *text* is the interchange format — xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos (64-bit instruction ids), while the text
+//! parser reassigns ids (see /opt/xla-example/README.md). All artifacts are
+//! lowered with `return_tuple=True`, so outputs arrive as one tuple literal.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Mat;
+
+use super::manifest::Manifest;
+
+/// An argument/result value crossing the PJRT boundary.
+#[derive(Debug, Clone)]
+pub enum Value {
+    /// f32 tensor with explicit dims (row-major).
+    F32(Vec<f32>, Vec<usize>),
+    /// i32 tensor with explicit dims (tokens).
+    I32(Vec<i32>, Vec<usize>),
+    /// f32 scalar.
+    Scalar(f32),
+}
+
+impl Value {
+    pub fn from_mat(m: &Mat) -> Value {
+        Value::F32(m.data.clone(), vec![m.rows, m.cols])
+    }
+
+    /// Norm-style vectors are rank-1 in the artifacts.
+    pub fn from_mat_vec(m: &Mat) -> Value {
+        if m.cols == 1 {
+            Value::F32(m.data.clone(), vec![m.rows])
+        } else {
+            Self::from_mat(m)
+        }
+    }
+
+    pub fn tokens(batch: usize, seq: usize, toks: &[i32]) -> Value {
+        assert_eq!(toks.len(), batch * seq);
+        Value::I32(toks.to_vec(), vec![batch, seq])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Value::F32(data, dims) => {
+                let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Value::I32(data, dims) => {
+                let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Value::Scalar(v) => xla::Literal::scalar(*v),
+        })
+    }
+
+    /// Interpret a result literal as f32 data + dims.
+    fn from_literal(lit: &xla::Literal) -> Result<Value> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Value::F32(lit.to_vec::<f32>()?, dims)),
+            xla::ElementType::S32 => Ok(Value::I32(lit.to_vec::<i32>()?, dims)),
+            other => bail!("unsupported result element type {other:?}"),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32(d, _) => Ok(d),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        match self {
+            Value::Scalar(v) => Ok(*v),
+            Value::F32(d, dims) if d.len() == 1 => {
+                let _ = dims;
+                Ok(d[0])
+            }
+            _ => bail!("expected scalar, got {self:?}"),
+        }
+    }
+
+    /// View as a matrix with the last dim as cols and everything else rows.
+    pub fn into_mat(self) -> Result<Mat> {
+        match self {
+            Value::F32(d, dims) => {
+                let cols = *dims.last().unwrap_or(&1);
+                let rows = d.len() / cols.max(1);
+                Ok(Mat::from_vec(rows, cols, d))
+            }
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Value::F32(_, d) | Value::I32(_, d) => d,
+            Value::Scalar(_) => &[],
+        }
+    }
+}
+
+/// One compiled executable.
+pub struct Artifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    pub fn execute(&self, args: &[Value]) -> Result<Vec<Value>> {
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<Result<_>>()
+            .with_context(|| format!("building literals for {}", self.name))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        let tuple = out.to_tuple().context("result tuple")?;
+        tuple.iter().map(Value::from_literal).collect()
+    }
+}
+
+/// The registry: PJRT client + lazily compiled artifacts for one model.
+pub struct Runtime {
+    pub manifest: Manifest,
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    cache: std::sync::Mutex<HashMap<String, std::sync::Arc<Artifact>>>,
+}
+
+impl Runtime {
+    /// `dir` is artifacts/<model>.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::log_info!(
+            "runtime",
+            "PJRT client up: platform={} devices={} model={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.model.name
+        );
+        Ok(Runtime { manifest, dir, client, cache: std::sync::Mutex::new(HashMap::new()) })
+    }
+
+    /// Convenience: artifacts/<model> under a base dir.
+    pub fn load_model(base: impl AsRef<Path>, model: &str) -> Result<Runtime> {
+        Self::load(base.as_ref().join(model))
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    pub fn artifact(&self, name: &str) -> Result<std::sync::Arc<Artifact>> {
+        if let Some(a) = self.cache.lock().unwrap().get(name) {
+            return Ok(a.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        anyhow::ensure!(path.exists(), "artifact {path:?} missing (run `make artifacts`)");
+        let t = crate::util::Timer::new();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf8")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        crate::log_info!("runtime", "compiled {name} in {}", crate::util::human_duration(t.elapsed()));
+        let artifact = std::sync::Arc::new(Artifact { name: name.to_string(), exe });
+        self.cache.lock().unwrap().insert(name.to_string(), artifact.clone());
+        Ok(artifact)
+    }
+
+    /// Parameter-store values in artifact argument order.
+    pub fn param_args(&self, ps: &crate::model::ParamStore) -> Vec<Value> {
+        ps.cfg
+            .param_specs()
+            .iter()
+            .map(|spec| {
+                let m = ps.get(&spec.name);
+                if spec.name.ends_with("norm") {
+                    Value::from_mat_vec(m)
+                } else {
+                    Value::from_mat(m)
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_literal_round_trip() {
+        let v = Value::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
+        let lit = v.to_literal().unwrap();
+        let back = Value::from_literal(&lit).unwrap();
+        assert_eq!(back.dims(), &[2, 3]);
+        assert_eq!(back.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn i32_values() {
+        let v = Value::tokens(2, 2, &[1, 2, 3, 4]);
+        let lit = v.to_literal().unwrap();
+        let back = Value::from_literal(&lit).unwrap();
+        match back {
+            Value::I32(d, dims) => {
+                assert_eq!(d, vec![1, 2, 3, 4]);
+                assert_eq!(dims, vec![2, 2]);
+            }
+            other => panic!("wrong value {other:?}"),
+        }
+    }
+
+    #[test]
+    fn into_mat_flattens_leading_dims() {
+        let v = Value::F32(vec![0.0; 24], vec![2, 3, 4]);
+        let m = v.into_mat().unwrap();
+        assert_eq!((m.rows, m.cols), (6, 4));
+    }
+
+    #[test]
+    fn scalar_helpers() {
+        assert_eq!(Value::Scalar(2.5).scalar_f32().unwrap(), 2.5);
+        assert_eq!(Value::F32(vec![7.0], vec![]).scalar_f32().unwrap(), 7.0);
+        assert!(Value::F32(vec![1.0, 2.0], vec![2]).scalar_f32().is_err());
+    }
+}

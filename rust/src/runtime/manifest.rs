@@ -1,0 +1,204 @@
+//! Parser for `artifacts/<model>/manifest.txt` (written by aot.py) and the
+//! cross-check against the Rust presets — any drift between the Python and
+//! Rust model definitions fails here, before any HLO is executed.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cfg::{preset, BatchConfig, ModelConfig};
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    pub name: String,
+    /// (name, dtype, dims) — dims may contain the "..." placeholder for the
+    /// flattened parameter list.
+    pub inputs: Vec<(String, String, Vec<String>)>,
+    pub outputs: Vec<(String, String, Vec<String>)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelConfig,
+    pub batch: BatchConfig,
+    pub groups: usize,
+    pub grad_scale: f64,
+    pub lr: f64,
+    pub params: Vec<(String, Vec<usize>)>,
+    pub linears: Vec<(String, usize, usize)>,
+    pub artifacts: Vec<ArtifactSig>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let path = dir.as_ref().join("manifest.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut model_name = None;
+        let mut fields = std::collections::BTreeMap::new();
+        let mut params = Vec::new();
+        let mut linears = Vec::new();
+        let mut artifacts: Vec<ArtifactSig> = Vec::new();
+        for (no, raw) in text.lines().enumerate() {
+            let line = raw.trim_end();
+            if line.is_empty() {
+                continue;
+            }
+            let indented = line.starts_with("  ");
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            match (indented, parts[0]) {
+                (false, "model") => model_name = Some(parts[1].to_string()),
+                (false, k @ ("vocab" | "d_model" | "n_layers" | "n_heads" | "d_ff" | "batch" | "seq" | "groups")) => {
+                    fields.insert(k.to_string(), parts[1].parse::<usize>().context(k.to_string())?);
+                }
+                (false, "grad_scale") | (false, "lr") => {
+                    fields.insert(parts[0].to_string(), 0);
+                    // stored separately below
+                }
+                (false, "param") => {
+                    let dims = parts[2..].iter().map(|p| p.parse().unwrap()).collect();
+                    params.push((parts[1].to_string(), dims));
+                }
+                (false, "linear") => {
+                    linears.push((parts[1].to_string(), parts[2].parse()?, parts[3].parse()?));
+                }
+                (false, "artifact") => {
+                    artifacts.push(ArtifactSig { name: parts[1].to_string(), inputs: vec![], outputs: vec![] });
+                }
+                (true, "in") | (true, "out") => {
+                    let Some(a) = artifacts.last_mut() else {
+                        bail!("line {}: io outside artifact", no + 1);
+                    };
+                    let entry = (
+                        parts[1].to_string(),
+                        parts[2].to_string(),
+                        parts[3..].iter().map(|s| s.to_string()).collect(),
+                    );
+                    if parts[0] == "in" {
+                        a.inputs.push(entry);
+                    } else {
+                        a.outputs.push(entry);
+                    }
+                }
+                _ => bail!("line {}: cannot parse `{line}`", no + 1),
+            }
+        }
+        let name = model_name.context("manifest missing model name")?;
+        let grad_scale: f64 = text
+            .lines()
+            .find(|l| l.starts_with("grad_scale"))
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1.0e3);
+        let lr: f64 = text
+            .lines()
+            .find(|l| l.starts_with("lr "))
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1e-3);
+        let get = |k: &str| -> Result<usize> {
+            fields.get(k).copied().with_context(|| format!("manifest missing `{k}`"))
+        };
+        let model = ModelConfig {
+            name: name.clone(),
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            d_ff: get("d_ff")?,
+            rope_theta: 10000.0,
+        };
+        let batch = BatchConfig { batch: get("batch")?, seq: get("seq")? };
+        let m = Manifest {
+            model,
+            batch,
+            groups: get("groups")?,
+            grad_scale,
+            lr,
+            params,
+            linears,
+            artifacts,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Cross-check against the Rust preset of the same name.
+    fn validate(&self) -> Result<()> {
+        let (cfg, _) = preset(&self.model.name);
+        if cfg != self.model {
+            bail!(
+                "manifest model config differs from Rust preset `{}`:\n  manifest: {:?}\n  preset:   {:?}",
+                self.model.name,
+                self.model,
+                cfg
+            );
+        }
+        let specs = cfg.param_specs();
+        if specs.len() != self.params.len() {
+            bail!("param count mismatch: manifest {} vs preset {}", self.params.len(), specs.len());
+        }
+        for (spec, (name, dims)) in specs.iter().zip(&self.params) {
+            let want: Vec<usize> = if spec.cols == 1 && !spec.name.contains('w') {
+                vec![spec.rows]
+            } else {
+                vec![spec.rows, spec.cols]
+            };
+            if &spec.name != name || dims != &want {
+                bail!("param mismatch: manifest {name} {dims:?} vs preset {} {want:?}", spec.name);
+            }
+        }
+        let lspecs = cfg.linear_specs();
+        if lspecs.len() != self.linears.len() {
+            bail!("linear count mismatch");
+        }
+        Ok(())
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSig> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        p.join("manifest.txt").exists().then_some(p)
+    }
+
+    #[test]
+    fn parses_real_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.name, "tiny");
+        assert_eq!(m.model.d_model, 128);
+        assert_eq!(m.params.len(), 21);
+        assert_eq!(m.linears.len(), 14);
+        assert!(m.artifact("fwd_loss").is_some());
+        assert!(m.artifact("calib_stats").is_some());
+        assert!((m.grad_scale - 1000.0).abs() < 1e-9);
+        let cs = m.artifact("calib_stats").unwrap();
+        assert_eq!(cs.outputs.len(), 1 + 2 * 14);
+    }
+
+    #[test]
+    fn rejects_mismatched_config() {
+        let text = "model tiny\nvocab 999\nd_model 128\nn_layers 2\nn_heads 4\nd_ff 256\nbatch 2\nseq 64\ngroups 4\n";
+        assert!(Manifest::parse(text).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("nonsense line here\n").is_err());
+        assert!(Manifest::parse("").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by `make artifacts`
+//! and executes them on the CPU PJRT client (`xla` crate). This is the only
+//! bridge between the Rust coordinator and the L2/L1 graphs — Python never
+//! runs at serving/quantization time.
+
+pub mod artifact;
+pub mod manifest;
+
+pub use artifact::{Artifact, Runtime, Value};
+pub use manifest::Manifest;

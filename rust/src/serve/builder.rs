@@ -1,0 +1,187 @@
+//! Build a NativeModel whose seven per-block linears use a chosen serving
+//! format. Embedding / norms / head stay fp32 (as in all the paper's
+//! weight-only kernels).
+
+use anyhow::{Context, Result};
+
+use crate::fisher::CalibStats;
+use crate::model::forward::{Block, LinearOp, NativeModel};
+use crate::model::ParamStore;
+use crate::quant::formats::{LutLinear, TrellisLinear, UniformScalarLinear, VqLinear};
+use crate::quant::gptq::gptq_with_grid;
+use crate::quant::gptvq::{gptvq_vq_quantize, GptvqVq};
+use crate::quant::grid::UniformGrid;
+use crate::quant::lnq::{lnq_quantize, Lnq};
+use crate::quant::trellis::{trellis_quantize, Trellis};
+use crate::tensor::Mat;
+
+/// Table 2 rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeFormat {
+    /// fp32 baseline ("Original" row; fp16 on the paper's GPUs).
+    Fp32,
+    /// Uniform scalar (LUT-GEMM analog).
+    UniformScalar,
+    /// Non-uniform scalar LUT (Any-Precision-LLM analog).
+    NonUniformScalar,
+    /// Vector quantization decode.
+    Vector,
+    /// QTIP-style trellis decode.
+    Trellis,
+}
+
+impl ServeFormat {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServeFormat::Fp32 => "fp32",
+            ServeFormat::UniformScalar => "uniform",
+            ServeFormat::NonUniformScalar => "nonuniform",
+            ServeFormat::Vector => "vector",
+            ServeFormat::Trellis => "trellis",
+        }
+    }
+}
+
+/// Quantize every linear of `ps` at `bits` for the given serving format and
+/// assemble the serving model. `stats` supplies the layer Hessians (uses
+/// identity-free RTN-style fits when absent).
+pub fn build_serving_model(
+    ps: &ParamStore,
+    stats: Option<&CalibStats>,
+    format: ServeFormat,
+    bits: u32,
+) -> Result<NativeModel> {
+    let cfg = ps.cfg.clone();
+    let make_linear = |name: &str| -> Result<Box<dyn LinearOp>> {
+        let w = ps.get(name);
+        let h = match stats.and_then(|s| s.layer(name)) {
+            Some(ls) => ls.plain_hessian().clone(),
+            None => Mat::eye(w.rows),
+        };
+        Ok(match format {
+            ServeFormat::Fp32 => Box::new(w.clone()),
+            ServeFormat::UniformScalar => {
+                let grid = UniformGrid::fit(w, bits);
+                let (_, codes) = gptq_with_grid(&h, w, &grid, 32)?;
+                Box::new(UniformScalarLinear::new(&codes, &grid, w.rows, w.cols))
+            }
+            ServeFormat::NonUniformScalar => {
+                let res = lnq_quantize(&h, w, &Lnq { t_iters: 1, ..Lnq::new(bits) })?;
+                Box::new(LutLinear::new(
+                    &res.codes.context("lnq codes")?,
+                    res.codebooks.context("lnq codebooks")?,
+                    bits,
+                    w.rows,
+                    w.cols,
+                ))
+            }
+            ServeFormat::Vector => {
+                let dim = 2usize;
+                let res = gptvq_vq_quantize(&h, w, &GptvqVq::new(bits, dim))?;
+                let cbs = res.codebooks.context("vq codebooks")?;
+                let k = cbs.cols / dim;
+                let code_bits = (usize::BITS - (k - 1).leading_zeros()).max(1);
+                Box::new(VqLinear::new(
+                    &res.codes.context("vq codes")?,
+                    cbs,
+                    dim,
+                    code_bits,
+                    w.rows,
+                    w.cols,
+                ))
+            }
+            ServeFormat::Trellis => {
+                let tcfg = Trellis::new(bits, crate::cfg::TrellisVariant::Hyb);
+                let (_, codes, gen) = trellis_quantize(&h, w, &tcfg)?;
+                Box::new(TrellisLinear::new(&codes, gen, tcfg, w.rows))
+            }
+        })
+    };
+
+    let blocks = (0..cfg.n_layers)
+        .map(|l| {
+            let p = format!("layers.{l}.");
+            Ok(Block {
+                attn_norm: ps.get(&format!("{p}attn_norm")).data.clone(),
+                mlp_norm: ps.get(&format!("{p}mlp_norm")).data.clone(),
+                wq: make_linear(&format!("{p}wq"))?,
+                wk: make_linear(&format!("{p}wk"))?,
+                wv: make_linear(&format!("{p}wv"))?,
+                wo: make_linear(&format!("{p}wo"))?,
+                wgate: make_linear(&format!("{p}wgate"))?,
+                wup: make_linear(&format!("{p}wup"))?,
+                wdown: make_linear(&format!("{p}wdown"))?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(NativeModel {
+        tok_emb: ps.get("tok_emb").clone(),
+        head: Box::new(ps.get("head").clone()),
+        final_norm: ps.get("final_norm").data.clone(),
+        cfg,
+        blocks,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::preset;
+    use crate::util::Rng;
+
+    fn params() -> ParamStore {
+        let (cfg, _) = preset("tiny");
+        ParamStore::init(&cfg, &mut Rng::new(0))
+    }
+
+    #[test]
+    fn all_formats_build_and_decode() {
+        let ps = params();
+        let toks = [1u32, 5, 9, 2];
+        let fp = build_serving_model(&ps, None, ServeFormat::Fp32, 16).unwrap();
+        let fp_logits = fp.forward_sequence(&toks);
+        for format in [
+            ServeFormat::UniformScalar,
+            ServeFormat::NonUniformScalar,
+            ServeFormat::Vector,
+            ServeFormat::Trellis,
+        ] {
+            let m = build_serving_model(&ps, None, format, 4).unwrap();
+            let logits = m.forward_sequence(&toks);
+            assert_eq!((logits.rows, logits.cols), (fp_logits.rows, fp_logits.cols));
+            assert!(
+                logits.data.iter().all(|v| v.is_finite()),
+                "{format:?} produced non-finite logits"
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_formats_use_less_storage() {
+        let ps = params();
+        let fp = build_serving_model(&ps, None, ServeFormat::Fp32, 16).unwrap();
+        let q = build_serving_model(&ps, None, ServeFormat::UniformScalar, 2).unwrap();
+        assert!(q.linear_storage_bytes() * 8 < fp.linear_storage_bytes());
+    }
+
+    #[test]
+    fn four_bit_lut_model_tracks_fp_logits() {
+        let ps = params();
+        let toks = [3u32, 7];
+        let fp = build_serving_model(&ps, None, ServeFormat::Fp32, 16).unwrap();
+        let q = build_serving_model(&ps, None, ServeFormat::NonUniformScalar, 4).unwrap();
+        let a = fp.forward_sequence(&toks);
+        let b = q.forward_sequence(&toks);
+        // 4-bit LNQ on a tiny model: logits should correlate strongly.
+        let mut dot = 0.0f64;
+        let mut na = 0.0f64;
+        let mut nb = 0.0f64;
+        for (x, y) in a.data.iter().zip(&b.data) {
+            dot += (*x as f64) * (*y as f64);
+            na += (*x as f64).powi(2);
+            nb += (*y as f64).powi(2);
+        }
+        let cos = dot / (na.sqrt() * nb.sqrt()).max(1e-12);
+        assert!(cos > 0.95, "cosine {cos}");
+    }
+}

@@ -1,0 +1,8 @@
+//! Serving engine: batched token generation over quantized models with
+//! format-specific fused dequant kernels — the Table 2 measurement rig.
+
+pub mod builder;
+pub mod engine;
+
+pub use builder::{build_serving_model, ServeFormat};
+pub use engine::{generate_batch, ServeStats};

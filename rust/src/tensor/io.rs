@@ -1,0 +1,141 @@
+//! Binary tensor I/O: a minimal named-tensor container ("GQTB" format) used
+//! for trained weights, Hessian caches and quantized model checkpoints.
+//!
+//! Layout (little-endian):
+//!   magic "GQTB" | u32 version | u32 count
+//!   per entry: u32 name_len | name bytes | u32 rows | u32 cols | f32 data
+//!
+//! No serde offline — the format is deliberately trivial and versioned.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Mat;
+
+const MAGIC: &[u8; 4] = b"GQTB";
+const VERSION: u32 = 1;
+
+/// Ordered collection of named matrices.
+#[derive(Default, Debug, Clone)]
+pub struct TensorFile {
+    pub entries: BTreeMap<String, Mat>,
+}
+
+impl TensorFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, m: Mat) {
+        self.entries.insert(name.into(), m);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Mat> {
+        self.entries.get(name)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w =
+            std::io::BufWriter::new(std::fs::File::create(path).with_context(|| format!("create {path:?}"))?);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(self.entries.len() as u32).to_le_bytes())?;
+        for (name, m) in &self.entries {
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            w.write_all(&(m.rows as u32).to_le_bytes())?;
+            w.write_all(&(m.cols as u32).to_le_bytes())?;
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(m.data.as_ptr() as *const u8, m.data.len() * 4)
+            };
+            w.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut r =
+            std::io::BufReader::new(std::fs::File::open(path).with_context(|| format!("open {path:?}"))?);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?}: bad magic {magic:?}");
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            bail!("{path:?}: unsupported version {version}");
+        }
+        let count = read_u32(&mut r)? as usize;
+        let mut entries = BTreeMap::new();
+        for _ in 0..count {
+            let name_len = read_u32(&mut r)? as usize;
+            if name_len > 4096 {
+                bail!("{path:?}: corrupt name length {name_len}");
+            }
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("tensor name utf8")?;
+            let rows = read_u32(&mut r)? as usize;
+            let cols = read_u32(&mut r)? as usize;
+            let mut data = vec![0f32; rows * cols];
+            let bytes: &mut [u8] = unsafe {
+                std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, data.len() * 4)
+            };
+            r.read_exact(bytes)?;
+            entries.insert(name, Mat::from_vec(rows, cols, data));
+        }
+        Ok(TensorFile { entries })
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tmpfile(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("gq_test_{tag}_{}.gqtb", std::process::id()))
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let mut rng = Rng::new(0);
+        let mut tf = TensorFile::new();
+        tf.insert("w.a", Mat::randn(7, 5, 1.0, &mut rng));
+        tf.insert("w.b", Mat::randn(1, 9, 2.0, &mut rng));
+        let path = tmpfile("roundtrip");
+        tf.save(&path).unwrap();
+        let back = TensorFile::load(&path).unwrap();
+        assert_eq!(back.entries.len(), 2);
+        assert_eq!(back.get("w.a").unwrap(), tf.get("w.a").unwrap());
+        assert_eq!(back.get("w.b").unwrap(), tf.get("w.b").unwrap());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmpfile("badmagic");
+        std::fs::write(&path, b"NOPE\x01\x00\x00\x00\x00\x00\x00\x00").unwrap();
+        assert!(TensorFile::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(TensorFile::load("/nonexistent/gq.bin").is_err());
+    }
+}

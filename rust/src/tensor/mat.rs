@@ -1,0 +1,230 @@
+//! Row-major f32 matrix. The workhorse container for weights, activations
+//! and Hessians throughout the quantization pipeline.
+
+use crate::util::Rng;
+
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl std::fmt::Debug for Mat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mat({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// i.i.d. N(0, sigma^2) entries.
+    pub fn randn(rows: usize, cols: usize, sigma: f32, rng: &mut Rng) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(rng.normal_f32() * sigma);
+        }
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            *self.at_mut(i, j) = v[i];
+        }
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Columns `[lo, hi)` as a new matrix.
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.cols);
+        Mat::from_fn(self.rows, hi - lo, |i, j| self.at(i, lo + j))
+    }
+
+    /// Overwrite columns `[lo, lo + src.cols)` with `src`.
+    pub fn paste_cols(&mut self, lo: usize, src: &Mat) {
+        assert_eq!(src.rows, self.rows);
+        assert!(lo + src.cols <= self.cols);
+        for i in 0..self.rows {
+            for j in 0..src.cols {
+                *self.at_mut(i, lo + j) = src.at(i, j);
+            }
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// self += other * s
+    pub fn axpy(&mut self, other: &Mat, s: f32) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b * s;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn frob_norm_sq(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Symmetrize in place: self = (self + self^T)/2. Requires square.
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let avg = 0.5 * (self.at(i, j) + self.at(j, i));
+                *self.at_mut(i, j) = avg;
+                *self.at_mut(j, i) = avg;
+            }
+        }
+    }
+
+    /// Add `lambda` to the diagonal (damping, paper §4.2).
+    pub fn add_diag(&mut self, lambda: f32) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self.data[i * self.cols + i] += lambda;
+        }
+    }
+
+    pub fn diag(&self) -> Vec<f32> {
+        (0..self.rows.min(self.cols)).map(|i| self.at(i, i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let mut m = Mat::zeros(2, 3);
+        *m.at_mut(1, 2) = 5.0;
+        assert_eq!(m.at(1, 2), 5.0);
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.0]);
+        assert_eq!(m.col(2), vec![0.0, 5.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn from_vec_checks_shape() {
+        Mat::from_vec(2, 2, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let mut rng = Rng::new(0);
+        let m = Mat::randn(37, 53, 1.0, &mut rng);
+        let t = m.transpose();
+        assert_eq!((t.rows, t.cols), (53, 37));
+        assert_eq!(t.transpose(), m);
+        assert_eq!(m.at(10, 20), t.at(20, 10));
+    }
+
+    #[test]
+    fn slice_and_paste_cols() {
+        let m = Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f32);
+        let s = m.slice_cols(1, 3);
+        assert_eq!(s.row(0), &[1.0, 2.0]);
+        let mut m2 = Mat::zeros(3, 4);
+        m2.paste_cols(1, &s);
+        assert_eq!(m2.at(2, 2), m.at(2, 2));
+        assert_eq!(m2.at(2, 0), 0.0);
+    }
+
+    #[test]
+    fn symmetrize_and_diag() {
+        let mut m = Mat::from_vec(2, 2, vec![1.0, 2.0, 4.0, 3.0]);
+        m.symmetrize();
+        assert_eq!(m.at(0, 1), 3.0);
+        assert_eq!(m.at(1, 0), 3.0);
+        m.add_diag(0.5);
+        assert_eq!(m.diag(), vec![1.5, 3.5]);
+    }
+
+    #[test]
+    fn norms() {
+        let m = Mat::from_vec(1, 3, vec![3.0, -4.0, 0.0]);
+        assert!((m.frob_norm_sq() - 25.0).abs() < 1e-12);
+        assert_eq!(m.max_abs(), 4.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Dense f32 matrix substrate: storage, blocked/threaded matmul, binary I/O.
+
+pub mod io;
+pub mod mat;
+pub mod ops;
+
+pub use mat::Mat;
+pub use ops::{matmul, matmul_tn, matvec};

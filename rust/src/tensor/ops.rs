@@ -1,0 +1,194 @@
+//! Matrix multiplication kernels: blocked, transposed variants, and a
+//! std::thread row-parallel driver (no rayon offline). These are the
+//! CPU hot paths behind the quantization solvers and the serving engine's
+//! fp32 baseline.
+
+use super::Mat;
+
+/// Number of worker threads for the parallel matmul paths.
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// C = A @ B, blocked over K with a row-parallel outer loop.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul inner dims");
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C = A @ B into preallocated `c` (overwritten).
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    let (m, n) = (a.rows, b.cols);
+    let threads = if m * n * a.cols >= 1 << 18 { num_threads() } else { 1 };
+    if threads <= 1 || m < 2 {
+        matmul_rows(a, b, &mut c.data, 0, m);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    let chunks: Vec<(usize, &mut [f32])> = {
+        let mut out = Vec::new();
+        let mut rest = c.data.as_mut_slice();
+        let mut row = 0;
+        while row < m {
+            let take = rows_per.min(m - row);
+            let (head, tail) = rest.split_at_mut(take * n);
+            out.push((row, head));
+            rest = tail;
+            row += take;
+        }
+        out
+    };
+    std::thread::scope(|s| {
+        for (row0, chunk) in chunks {
+            s.spawn(move || {
+                let nrows = chunk.len() / n;
+                matmul_rows_into(a, b, chunk, row0, row0 + nrows);
+            });
+        }
+    });
+}
+
+fn matmul_rows(a: &Mat, b: &Mat, c: &mut [f32], r0: usize, r1: usize) {
+    matmul_rows_into(a, b, &mut c[r0 * b.cols..r1 * b.cols], r0, r1);
+}
+
+/// Compute rows [r0, r1) of A@B into `c` (length (r1-r0)*n), i-k-j order so
+/// the inner loop is a contiguous axpy over B's rows (auto-vectorizes).
+fn matmul_rows_into(a: &Mat, b: &Mat, c: &mut [f32], r0: usize, r1: usize) {
+    let n = b.cols;
+    let k = a.cols;
+    c.fill(0.0);
+    for i in r0..r1 {
+        let arow = a.row(i);
+        let crow = &mut c[(i - r0) * n..(i - r0 + 1) * n];
+        for kk in 0..k {
+            let aik = arow[kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b.data[kk * n..kk * n + n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv;
+            }
+        }
+    }
+}
+
+/// C = A^T @ B without materializing A^T (A: k x m, B: k x n -> C: m x n).
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows, "matmul_tn inner dims");
+    let (m, n, k) = (a.cols, b.cols, a.rows);
+    let mut c = Mat::zeros(m, n);
+    for kk in 0..k {
+        let arow = a.row(kk);
+        let brow = b.row(kk);
+        for i in 0..m {
+            let aik = arow[i];
+            if aik == 0.0 {
+                continue;
+            }
+            let crow = &mut c.data[i * n..i * n + n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv;
+            }
+        }
+    }
+    c
+}
+
+/// y = A @ x.
+pub fn matvec(a: &Mat, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, x.len());
+    (0..a.rows).map(|i| dot(a.row(i), x)).collect()
+}
+
+/// Dense dot product (8-way unrolled for the serving hot path).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        for l in 0..8 {
+            acc[l] += a[i + l] * b[i + l];
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for i in chunks * 8..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::Rng;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0f64;
+                for k in 0..a.cols {
+                    s += a.at(i, k) as f64 * b.at(k, j) as f64;
+                }
+                *c.at_mut(i, j) = s as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive_property() {
+        testing::check("matmul-vs-naive", 20, |rng| {
+            let m = 1 + rng.below(40);
+            let k = 1 + rng.below(40);
+            let n = 1 + rng.below(40);
+            let a = Mat::randn(m, k, 1.0, rng);
+            let b = Mat::randn(k, n, 1.0, rng);
+            testing::assert_close(&matmul(&a, &b).data, &naive(&a, &b).data, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn matmul_threaded_large() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(130, 70, 1.0, &mut rng);
+        let b = Mat::randn(70, 90, 1.0, &mut rng);
+        testing::assert_close(&matmul(&a, &b).data, &naive(&a, &b).data, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn matmul_tn_matches_explicit_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(33, 17, 1.0, &mut rng);
+        let b = Mat::randn(33, 21, 1.0, &mut rng);
+        let want = matmul(&a.transpose(), &b);
+        testing::assert_close(&matmul_tn(&a, &b).data, &want.data, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn matvec_and_dot() {
+        let a = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(matvec(&a, &[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
+        let xs: Vec<f32> = (0..19).map(|i| i as f32).collect();
+        let want: f32 = xs.iter().map(|v| v * v).sum();
+        assert_eq!(dot(&xs, &xs), want);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(12, 12, 1.0, &mut rng);
+        let i = Mat::eye(12);
+        testing::assert_close(&matmul(&a, &i).data, &a.data, 1e-6, 1e-6).unwrap();
+        testing::assert_close(&matmul(&i, &a).data, &a.data, 1e-6, 1e-6).unwrap();
+    }
+}

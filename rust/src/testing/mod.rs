@@ -1,0 +1,101 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` random seeds;
+//! on failure it reports the failing seed so the case can be replayed as a
+//! deterministic regression (`replay(seed, f)`). Used by the quantization
+//! solvers to pin the paper's invariants (e.g. LNQ's Prop 4.1 descent
+//! guarantee) across randomized problem instances.
+
+use crate::util::Rng;
+
+/// Run `f` over `cases` independently-seeded RNGs. Panics with the failing
+/// seed if `f` panics or returns `Err`.
+pub fn check<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base = env_seed();
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E3779B97F4A7C15) | 1);
+        let mut rng = Rng::new(seed);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        match outcome {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => panic!("property `{name}` failed (replay seed {seed:#x}): {msg}"),
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<panic>".into());
+                panic!("property `{name}` panicked (replay seed {seed:#x}): {msg}");
+            }
+        }
+    }
+}
+
+/// Replay one failing case from its reported seed.
+pub fn replay<F>(seed: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    f(&mut rng).expect("replayed case failed");
+}
+
+fn env_seed() -> u64 {
+    std::env::var("GQ_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Assert |a - b| <= atol + rtol*|b| elementwise, with context on failure.
+pub fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("at {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Convenience: fail with a formatted message if `cond` is false.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_when_property_holds() {
+        check("sum-commutes", 50, |rng| {
+            let a = rng.f64();
+            let b = rng.f64();
+            ensure(a + b == b + a, "addition must commute")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn check_reports_seed_on_failure() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(assert_close(&[1.0], &[1.0 + 1e-7], 1e-5, 1e-6).is_ok());
+        assert!(assert_close(&[1.0], &[2.0], 1e-5, 1e-6).is_err());
+        assert!(assert_close(&[1.0, 2.0], &[1.0], 0.0, 0.0).is_err());
+    }
+}

@@ -1,0 +1,67 @@
+//! Human-readable formatting for the CLI/coordinator logs.
+
+/// `1_532_000` -> "1.53M"
+pub fn human_count(n: u64) -> String {
+    const UNITS: [(&str, f64); 4] = [("B", 1e9), ("M", 1e6), ("K", 1e3), ("", 1.0)];
+    for (suffix, div) in UNITS {
+        if n as f64 >= div && div > 1.0 {
+            return format!("{:.2}{}", n as f64 / div, suffix);
+        }
+    }
+    n.to_string()
+}
+
+/// `1_532_000` bytes -> "1.46 MiB"
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [(&str, f64); 4] = [
+        ("GiB", 1024.0 * 1024.0 * 1024.0),
+        ("MiB", 1024.0 * 1024.0),
+        ("KiB", 1024.0),
+        ("B", 1.0),
+    ];
+    for (suffix, div) in UNITS {
+        if n as f64 >= div && div > 1.0 {
+            return format!("{:.2} {}", n as f64 / div, suffix);
+        }
+    }
+    format!("{n} B")
+}
+
+/// Seconds -> "1.2s" / "3m12s" / "450ms"
+pub fn human_duration(secs: f64) -> String {
+    if secs < 1.0 {
+        format!("{:.0}ms", secs * 1000.0)
+    } else if secs < 60.0 {
+        format!("{secs:.1}s")
+    } else {
+        let m = (secs / 60.0).floor() as u64;
+        format!("{}m{:02.0}s", m, secs - 60.0 * m as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts() {
+        assert_eq!(human_count(532), "532");
+        assert_eq!(human_count(1_530), "1.53K");
+        assert_eq!(human_count(2_000_000), "2.00M");
+        assert_eq!(human_count(3_100_000_000), "3.10B");
+    }
+
+    #[test]
+    fn bytes() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(1_572_864), "1.50 MiB");
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(human_duration(0.45), "450ms");
+        assert_eq!(human_duration(12.34), "12.3s");
+        assert_eq!(human_duration(125.0), "2m05s");
+    }
+}

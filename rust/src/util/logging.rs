@@ -1,0 +1,87 @@
+//! Minimal leveled logger (no `log` crate offline). Controlled by the
+//! `GQ_LOG` env var (`debug` | `info` | `warn` | `quiet`; default `info`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Quiet = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+
+fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw != 255 {
+        return unsafe { std::mem::transmute::<u8, Level>(raw) };
+    }
+    let lvl = match std::env::var("GQ_LOG").as_deref() {
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        Ok("quiet") => Level::Quiet,
+        _ => Level::Info,
+    };
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+    lvl
+}
+
+/// Override the log level programmatically (tests, benches).
+pub fn set_level(lvl: Level) {
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(lvl: Level) -> bool {
+    lvl >= level()
+}
+
+pub fn log(lvl: Level, tag: &str, msg: std::fmt::Arguments) {
+    if enabled(lvl) {
+        eprintln!("[gq:{tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, $tag, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, $tag, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, $tag, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Info < Level::Warn);
+        assert!(Level::Warn < Level::Quiet);
+    }
+
+    #[test]
+    fn set_level_controls_enabled() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+}

@@ -1,0 +1,15 @@
+//! Small shared substrates: PRNG, timing, stats, logging, formatting.
+//!
+//! The offline environment has no `rand`/`log`/`humantime` crates, so these
+//! are built in-repo (DESIGN.md §1, offline constraints table).
+
+pub mod fmt;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use fmt::{human_bytes, human_count, human_duration};
+pub use rng::Rng;
+pub use stats::{mean, percentile, stddev};
+pub use timer::Timer;

@@ -1,0 +1,71 @@
+//! Wall-clock timing helpers used by the coordinator metrics and the bench
+//! harness (the offline stand-in for criterion).
+
+use std::time::{Duration, Instant};
+
+/// A simple start/lap timer.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+    last: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Timer { start: now, last: now }
+    }
+
+    /// Seconds since construction.
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Seconds since the previous `lap()` (or construction).
+    pub fn lap(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        dt
+    }
+
+    pub fn elapsed_duration(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let mut t = Timer::new();
+        std::thread::sleep(Duration::from_millis(5));
+        let lap1 = t.lap();
+        assert!(lap1 >= 0.004);
+        let lap2 = t.lap();
+        assert!(lap2 < lap1);
+        assert!(t.elapsed() >= lap1);
+    }
+
+    #[test]
+    fn time_it_returns_result() {
+        let (v, secs) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,138 @@
+//! Calibration integration: the calib_stats artifact's Hessians must agree
+//! with independent reconstructions from the grad_taps artifact's raw
+//! activations/gradients (Algorithm 1's math, checked end to end through
+//! two different lowered graphs).
+
+use guidedquant::cfg::preset;
+use guidedquant::data::{Batcher, Corpus, CorpusConfig, Split};
+use guidedquant::fisher::collect_stats;
+use guidedquant::model::ParamStore;
+use guidedquant::runtime::{Runtime, Value};
+use guidedquant::tensor::Mat;
+use guidedquant::util::Rng;
+
+fn setup() -> Option<(Runtime, ParamStore, Corpus)> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let rt = Runtime::load(dir).unwrap();
+    let (cfg, _) = preset("tiny");
+    let ps = ParamStore::init(&cfg, &mut Rng::new(0));
+    let corpus = Corpus::new(CorpusConfig::for_vocab(cfg.vocab, 0));
+    Some((rt, ps, corpus))
+}
+
+#[test]
+fn calib_stats_consistent_with_grad_taps() {
+    let Some((rt, ps, corpus)) = setup() else { return };
+    let bc = rt.manifest.batch;
+    let groups = rt.manifest.groups;
+    let mut batcher = Batcher::new(&corpus, Split::Calib, bc, 1);
+    let toks = batcher.next_batch().unwrap();
+    let mut args = rt.param_args(&ps);
+    args.push(Value::tokens(bc.batch, bc.seq, &toks));
+
+    let stats_out = rt.artifact("calib_stats").unwrap().execute(&args).unwrap();
+    let taps_out = rt.artifact("grad_taps").unwrap().execute(&args).unwrap();
+    // Same loss from both graphs.
+    let l1 = stats_out[0].scalar_f32().unwrap();
+    let l2 = taps_out[0].scalar_f32().unwrap();
+    assert!((l1 - l2).abs() / l1.abs().max(1e-6) < 1e-4, "{l1} vs {l2}");
+
+    let specs = ps.cfg.linear_specs();
+    for li in [0usize, 3, 6] {
+        let spec = &specs[li];
+        let d = spec.d_in;
+        let hs = stats_out[1 + 2 * li].as_f32().unwrap();
+        let x = taps_out[1 + 2 * li].clone().into_mat().unwrap();
+        let g = taps_out[2 + 2 * li].clone().into_mat().unwrap();
+        // hs[0] == X^T X
+        let want_h = guidedquant::tensor::ops::matmul_tn(&x, &x);
+        guidedquant::testing::assert_close(&hs[..d * d], &want_h.data, 3e-2, 3e-2)
+            .unwrap_or_else(|e| panic!("{}: H mismatch: {e}", spec.name));
+        // hs[1] == X^T diag(s_1) X with s_1 = mean of first-group grads².
+        let per = spec.d_out / groups;
+        let mut xs = x.clone();
+        for i in 0..x.rows {
+            let mut s = 0.0f32;
+            for j in 0..per {
+                s += g.at(i, j) * g.at(i, j);
+            }
+            s /= per as f32;
+            let sq = s.sqrt();
+            for v in xs.row_mut(i) {
+                *v *= sq;
+            }
+        }
+        let want_h1 = guidedquant::tensor::ops::matmul_tn(&xs, &xs);
+        let got = &hs[d * d..2 * d * d];
+        // Relative tolerance scaled to the matrix magnitude.
+        let scale = want_h1.max_abs().max(1e-12);
+        for (a, b) in got.iter().zip(&want_h1.data) {
+            assert!(
+                (a - b).abs() < 3e-2 * scale,
+                "{}: H̄_1 mismatch {a} vs {b} (scale {scale})",
+                spec.name
+            );
+        }
+        // diagf == (x²)^T (g²)
+        let diagf = stats_out[2 + 2 * li].as_f32().unwrap();
+        let mut want_df = Mat::zeros(spec.d_in, spec.d_out);
+        for i in 0..x.rows {
+            for a in 0..spec.d_in {
+                let xa2 = x.at(i, a) * x.at(i, a);
+                for b in 0..spec.d_out {
+                    *want_df.at_mut(a, b) += xa2 * g.at(i, b) * g.at(i, b);
+                }
+            }
+        }
+        let dscale = want_df.max_abs().max(1e-12);
+        for (a, b) in diagf.iter().zip(&want_df.data) {
+            assert!((a - b).abs() < 3e-2 * dscale, "{}: diagF {a} vs {b}", spec.name);
+        }
+    }
+}
+
+#[test]
+fn collect_stats_accumulates_batches() {
+    let Some((rt, ps, corpus)) = setup() else { return };
+    let bc = rt.manifest.batch;
+    let mut b1 = Batcher::new(&corpus, Split::Calib, bc, 1);
+    let s1 = collect_stats(&rt, &ps, &mut b1, 1).unwrap();
+    let mut b2 = Batcher::new(&corpus, Split::Calib, bc, 2);
+    let s2 = collect_stats(&rt, &ps, &mut b2, 2).unwrap();
+    assert_eq!(s1.batches, 1);
+    assert_eq!(s2.batches, 2);
+    assert!(s2.tokens == 2 * s1.tokens);
+    // Hessian sums should grow with more batches (PSD accumulations).
+    let t1: f64 = s1.layers[0].hs[0].diag().iter().map(|&v| v as f64).sum();
+    let t2: f64 = s2.layers[0].hs[0].diag().iter().map(|&v| v as f64).sum();
+    assert!(t2 > t1, "trace did not grow: {t1} -> {t2}");
+    // Hessians stay symmetric PSD-ish.
+    let h = &s2.layers[0].hs[0];
+    for i in 0..h.rows {
+        for j in 0..h.cols {
+            assert!((h.at(i, j) - h.at(j, i)).abs() < 1e-2 * h.max_abs());
+        }
+    }
+}
+
+#[test]
+fn hessian_cache_round_trips_collected_stats() {
+    let Some((rt, ps, corpus)) = setup() else { return };
+    let bc = rt.manifest.batch;
+    let mut batcher = Batcher::new(&corpus, Split::Calib, bc, 1);
+    let stats = collect_stats(&rt, &ps, &mut batcher, 1).unwrap();
+    let dir = std::env::temp_dir().join(format!("gq_it_cache_{}", std::process::id()));
+    let cache = guidedquant::fisher::HessianCache::new(&dir);
+    cache.save("tiny_it", &stats).unwrap();
+    let back = cache.load("tiny_it").unwrap();
+    assert_eq!(back.layers.len(), stats.layers.len());
+    for (a, b) in back.layers.iter().zip(&stats.layers) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.hs[0], b.hs[0]);
+    }
+    std::fs::remove_dir_all(dir).ok();
+}

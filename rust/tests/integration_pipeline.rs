@@ -1,0 +1,154 @@
+//! Pipeline integration: a miniature end-to-end run (train → calib →
+//! quantize → eval) asserting the paper's qualitative claims hold on the
+//! tiny preset: training reduces perplexity, quantization degrades it
+//! gracefully, and GuidedQuant does not hurt at 2 bits.
+
+use guidedquant::cfg::{PipelineConfig, QuantConfig, QuantMethod};
+use guidedquant::coordinator::Pipeline;
+use guidedquant::data::Split;
+
+fn pipeline() -> Option<Pipeline> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let cfg = PipelineConfig {
+        model: "tiny".into(),
+        artifacts_dir: dir.parent().unwrap().to_str().unwrap().to_string(),
+        out_dir: std::env::temp_dir()
+            .join(format!("gq_it_pipeline_{}", std::process::id()))
+            .to_str()
+            .unwrap()
+            .to_string(),
+        train_steps: 80,
+        calib_batches: 4,
+        eval_batches: 6,
+        ..Default::default()
+    };
+    Some(Pipeline::new(cfg).unwrap())
+}
+
+#[test]
+fn full_pipeline_claims() {
+    let Some(p) = pipeline() else { return };
+    let mut ps = p.init_params();
+    let ppl_untrained = p.perplexity(&ps, Split::Eval, "fwd_loss").unwrap();
+    let losses = p.train(&mut ps, p.cfg.train_steps, 0).unwrap();
+    assert_eq!(losses.len(), 80);
+    assert!(
+        losses.last().unwrap() < &(losses.first().unwrap() - 0.2),
+        "training did not reduce loss: {losses:?}"
+    );
+    let ppl_fp = p.perplexity(&ps, Split::Eval, "fwd_loss").unwrap();
+    assert!(ppl_fp < 0.8 * ppl_untrained, "training did not cut ppl: {ppl_untrained} -> {ppl_fp}");
+
+    let stats = p.calib(&ps, true).unwrap();
+    assert_eq!(stats.layers.len(), ps.cfg.linear_specs().len());
+
+    // 4-bit quantization should be nearly lossless on the tiny model.
+    let q4 = p
+        .quantize(&ps, &stats, &QuantConfig::with(QuantMethod::Lnq, 4, 4))
+        .unwrap();
+    let ppl_q4 = p.perplexity(&p.apply_quantized(&ps, &q4), Split::Eval, "fwd_loss").unwrap();
+    assert!(ppl_q4 < ppl_fp * 1.1, "4-bit hurt too much: {ppl_fp} -> {ppl_q4}");
+
+    // 2-bit: GuidedQuant should be no worse than plain LNQ (paper claim),
+    // with a small tolerance for tiny-model noise.
+    let lnq2 = p
+        .quantize(&ps, &stats, &QuantConfig::with(QuantMethod::Lnq, 2, 0))
+        .unwrap();
+    let gq2 = p
+        .quantize(&ps, &stats, &QuantConfig::with(QuantMethod::Lnq, 2, 4))
+        .unwrap();
+    let ppl_lnq2 = p.perplexity(&p.apply_quantized(&ps, &lnq2), Split::Eval, "fwd_loss").unwrap();
+    let ppl_gq2 = p.perplexity(&p.apply_quantized(&ps, &gq2), Split::Eval, "fwd_loss").unwrap();
+    assert!(
+        ppl_gq2 <= ppl_lnq2 * 1.10,
+        "GuidedQuant hurt at 2 bits: lnq {ppl_lnq2} vs gq {ppl_gq2}"
+    );
+    // And both should sit between fp and untrained.
+    assert!(ppl_lnq2 >= ppl_fp * 0.95);
+    assert!(ppl_gq2 < ppl_untrained * 2.0);
+}
+
+#[test]
+fn quantize_every_method_produces_finite_models() {
+    let Some(p) = pipeline() else { return };
+    let mut ps = p.init_params();
+    p.train(&mut ps, 30, 0).unwrap();
+    let stats = p.calib(&ps, true).unwrap();
+    for method in [
+        QuantMethod::Rtn,
+        QuantMethod::Gptq,
+        QuantMethod::SqueezeLlm,
+        QuantMethod::Gptvq1d,
+        QuantMethod::Gptvq2d,
+        QuantMethod::Lnq,
+        QuantMethod::Trellis,
+    ] {
+        let layers = p
+            .quantize(&ps, &stats, &QuantConfig::with(method, 3, 2))
+            .unwrap_or_else(|e| panic!("{method:?}: {e}"));
+        assert_eq!(layers.len(), ps.cfg.linear_specs().len(), "{method:?}");
+        for l in &layers {
+            assert!(
+                l.result.w_hat.data.iter().all(|v| v.is_finite()),
+                "{method:?}/{} non-finite",
+                l.name
+            );
+            assert!(l.result.avg_bits > 0.0);
+        }
+        let qps = p.apply_quantized(&ps, &layers);
+        let ppl = p.perplexity(&qps, Split::Eval, "fwd_loss").unwrap();
+        assert!(ppl.is_finite() && ppl > 1.0, "{method:?} ppl {ppl}");
+    }
+}
+
+#[test]
+fn sparse_fraction_reduces_two_bit_damage() {
+    let Some(p) = pipeline() else { return };
+    let mut ps = p.init_params();
+    p.train(&mut ps, 60, 0).unwrap();
+    let stats = p.calib(&ps, true).unwrap();
+    let dense = p
+        .quantize(&ps, &stats, &QuantConfig::with(QuantMethod::Gptq, 2, 0))
+        .unwrap();
+    let mut qcfg = QuantConfig::with(QuantMethod::Gptq, 2, 0);
+    qcfg.sparse_frac = 0.01;
+    let sparse = p.quantize(&ps, &stats, &qcfg).unwrap();
+    let ppl_dense = p.perplexity(&p.apply_quantized(&ps, &dense), Split::Eval, "fwd_loss").unwrap();
+    let ppl_sparse =
+        p.perplexity(&p.apply_quantized(&ps, &sparse), Split::Eval, "fwd_loss").unwrap();
+    assert!(
+        ppl_sparse <= ppl_dense * 1.05,
+        "sparse overlay hurt: {ppl_dense} -> {ppl_sparse}"
+    );
+}
+
+#[test]
+fn wa_quantization_path_matches_table5_shape() {
+    // Rotation + GPTQ weights + activation fake-quant eval (Table 5 rig).
+    let Some(p) = pipeline() else { return };
+    let mut ps = p.init_params();
+    p.train(&mut ps, 60, 0).unwrap();
+    let toks = p.corpus.tokens(Split::Calib, 128);
+    let mut rotated = ps.clone();
+    let mut rng = guidedquant::util::Rng::new(0);
+    guidedquant::quant::spinquant::spinquant_rotate(&mut rotated, &toks, 2, &mut rng);
+    // Rotated fp model evaluates identically through the artifact.
+    let ppl_plain = p.perplexity(&ps, Split::Eval, "fwd_loss").unwrap();
+    let ppl_rot = p.perplexity(&rotated, Split::Eval, "fwd_loss").unwrap();
+    assert!(
+        (ppl_plain - ppl_rot).abs() / ppl_plain < 0.02,
+        "rotation changed the function: {ppl_plain} vs {ppl_rot}"
+    );
+    // W4A4KV4 eval runs and degrades gracefully.
+    let stats = p.calib(&rotated, true).unwrap();
+    let layers = p
+        .quantize(&rotated, &stats, &QuantConfig::with(QuantMethod::Gptq, 4, 2))
+        .unwrap();
+    let qps = p.apply_quantized(&rotated, &layers);
+    let ppl_qa = p.perplexity(&qps, Split::Eval, "fwd_loss_qa4kv4").unwrap();
+    assert!(ppl_qa.is_finite() && ppl_qa < ppl_plain * 2.0, "{ppl_qa}");
+}

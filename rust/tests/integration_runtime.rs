@@ -1,0 +1,172 @@
+//! Runtime integration: the AOT artifacts must execute from Rust and agree
+//! numerically with the independent native forward — the deepest
+//! correctness check in the repository (two implementations of the model,
+//! one in JAX lowered to HLO, one in Rust, must produce the same loss).
+//!
+//! All tests skip gracefully when artifacts are not built.
+
+use guidedquant::cfg::preset;
+use guidedquant::model::{NativeModel, ParamStore};
+use guidedquant::runtime::{Runtime, Value};
+use guidedquant::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("runtime load"))
+}
+
+fn params(rt: &Runtime, seed: u64) -> ParamStore {
+    let (cfg, _) = preset(&rt.manifest.model.name);
+    ParamStore::init(&cfg, &mut Rng::new(seed))
+}
+
+fn tokens(rt: &Runtime, seed: u64) -> Vec<i32> {
+    let bc = rt.manifest.batch;
+    let vocab = rt.manifest.model.vocab;
+    let mut rng = Rng::new(seed);
+    (0..bc.tokens()).map(|_| rng.below(vocab) as i32).collect()
+}
+
+#[test]
+fn fwd_loss_matches_native_forward() {
+    let Some(rt) = runtime() else { return };
+    let ps = params(&rt, 7);
+    let toks = tokens(&rt, 1);
+    let bc = rt.manifest.batch;
+
+    let mut args = rt.param_args(&ps);
+    args.push(Value::tokens(bc.batch, bc.seq, &toks));
+    let outs = rt.artifact("fwd_loss").unwrap().execute(&args).unwrap();
+    let artifact_loss = outs[0].scalar_f32().unwrap() as f64;
+
+    // Native forward on the same tokens (row-per-sequence).
+    let model = NativeModel::from_params(&ps);
+    let mut native_loss = 0.0f64;
+    for b in 0..bc.batch {
+        let seq: Vec<u32> = toks[b * bc.seq..(b + 1) * bc.seq].iter().map(|&t| t as u32).collect();
+        native_loss += model.loss_sum(&seq);
+    }
+    let rel = (artifact_loss - native_loss).abs() / native_loss.max(1e-9);
+    assert!(
+        rel < 2e-3,
+        "artifact loss {artifact_loss} vs native {native_loss} (rel {rel})"
+    );
+}
+
+#[test]
+fn qa_artifacts_execute_and_order_sensibly() {
+    let Some(rt) = runtime() else { return };
+    let ps = params(&rt, 8);
+    let toks = tokens(&rt, 2);
+    let bc = rt.manifest.batch;
+    let mut args = rt.param_args(&ps);
+    args.push(Value::tokens(bc.batch, bc.seq, &toks));
+    let loss16 = rt.artifact("fwd_loss").unwrap().execute(&args).unwrap()[0]
+        .scalar_f32()
+        .unwrap();
+    let loss8 = rt.artifact("fwd_loss_qa8kv8").unwrap().execute(&args).unwrap()[0]
+        .scalar_f32()
+        .unwrap();
+    let loss4 = rt.artifact("fwd_loss_qa4kv4").unwrap().execute(&args).unwrap()[0]
+        .scalar_f32()
+        .unwrap();
+    // 8-bit activations barely move the loss; 4-bit moves it more.
+    assert!((loss8 - loss16).abs() / loss16 < 0.05, "{loss16} vs {loss8}");
+    assert!((loss4 - loss16).abs() >= (loss8 - loss16).abs() * 0.5, "{loss16} {loss8} {loss4}");
+    assert!(loss4.is_finite());
+}
+
+#[test]
+fn xtsx_demo_matches_native_gram() {
+    let Some(rt) = runtime() else { return };
+    let bc = rt.manifest.batch;
+    let n = bc.tokens();
+    let d = rt.manifest.model.d_model;
+    let g = rt.manifest.groups + 1;
+    let mut rng = Rng::new(3);
+    let x = guidedquant::tensor::Mat::randn(n, d, 1.0, &mut rng);
+    let s = guidedquant::tensor::Mat::from_fn(g, n, |_, _| rng.f32());
+    let outs = rt
+        .artifact("xtsx_demo")
+        .unwrap()
+        .execute(&[Value::from_mat(&x), Value::from_mat(&s)])
+        .unwrap();
+    let hs = outs[0].as_f32().unwrap();
+    // Native check for group 1.
+    let k = 1usize;
+    let mut want = guidedquant::tensor::Mat::zeros(d, d);
+    for i in 0..n {
+        let sv = s.at(k, i);
+        for a in 0..d {
+            let base = sv * x.at(i, a);
+            for b in 0..d {
+                *want.at_mut(a, b) += base * x.at(i, b);
+            }
+        }
+    }
+    let block = &hs[k * d * d..(k + 1) * d * d];
+    guidedquant::testing::assert_close(block, &want.data, 5e-3, 5e-3).unwrap();
+}
+
+#[test]
+fn lut_matmul_demo_matches_native_dequant_matmul() {
+    let Some(rt) = runtime() else { return };
+    let bc = rt.manifest.batch;
+    let n = bc.tokens();
+    let d = rt.manifest.model.d_model;
+    let m = 16usize;
+    let mut rng = Rng::new(4);
+    let x = guidedquant::tensor::Mat::randn(n, d, 1.0, &mut rng);
+    let codes: Vec<i32> = (0..d * d).map(|_| rng.below(m) as i32).collect();
+    let cb = guidedquant::tensor::Mat::randn(d, m, 1.0, &mut rng);
+    let outs = rt
+        .artifact("lut_matmul_demo")
+        .unwrap()
+        .execute(&[
+            Value::from_mat(&x),
+            Value::I32(codes.clone(), vec![d, d]),
+            Value::from_mat(&cb),
+        ])
+        .unwrap();
+    let y = outs[0].as_f32().unwrap();
+    // Native: decode then matmul.
+    let w_hat = guidedquant::tensor::Mat::from_fn(d, d, |i, j| cb.at(j, codes[i * d + j] as usize));
+    let want = guidedquant::tensor::ops::matmul(&x, &w_hat);
+    guidedquant::testing::assert_close(y, &want.data, 5e-3, 5e-3).unwrap();
+}
+
+#[test]
+fn train_step_decreases_loss_deterministically() {
+    let Some(rt) = runtime() else { return };
+    let ps = params(&rt, 9);
+    let bc = rt.manifest.batch;
+    let toks = tokens(&rt, 5);
+    let n_p = ps.cfg.param_specs().len();
+    let zeros: Vec<Value> = ps
+        .cfg
+        .param_specs()
+        .iter()
+        .map(|s| {
+            if s.cols == 1 && s.name.ends_with("norm") {
+                Value::F32(vec![0.0; s.rows], vec![s.rows])
+            } else {
+                Value::F32(vec![0.0; s.rows * s.cols], vec![s.rows, s.cols])
+            }
+        })
+        .collect();
+    let mut args = rt.param_args(&ps);
+    args.extend(zeros.clone());
+    args.extend(zeros);
+    args.push(Value::Scalar(0.0));
+    args.push(Value::tokens(bc.batch, bc.seq, &toks));
+    let artifact = rt.artifact("train_step").unwrap();
+    let o1 = artifact.execute(&args).unwrap();
+    let o2 = artifact.execute(&args).unwrap();
+    assert_eq!(o1[0].scalar_f32().unwrap(), o2[0].scalar_f32().unwrap(), "nondeterministic");
+    assert_eq!(o1.len(), 1 + 3 * n_p + 1);
+    assert_eq!(o1[1 + 3 * n_p].scalar_f32().unwrap(), 1.0, "step counter");
+}
