@@ -21,7 +21,6 @@ use guidedquant::coordinator::Pipeline;
 use guidedquant::data::Split;
 use guidedquant::report::{f, Table};
 use guidedquant::serve::{build_serving_model, generate_batch, ServeFormat};
-use guidedquant::util::Rng;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
@@ -75,7 +74,7 @@ fn main() -> anyhow::Result<()> {
         let qps = pipeline.apply_quantized(&ps, &layers);
         table.row(vec![
             name.into(),
-            f(pipeline.avg_bits(&ps, &layers), 2),
+            f(pipeline.avg_bits(&layers), 2),
             f(pipeline.perplexity(&qps, Split::Eval, "fwd_loss")?, 3),
             f(pipeline.perplexity(&qps, Split::EvalShift, "fwd_loss")?, 3),
         ]);
@@ -86,17 +85,16 @@ fn main() -> anyhow::Result<()> {
     // ---- 5. serve ---------------------------------------------------------
     println!("\n== phase 5: serving (non-uniform LUT format, 4-bit) ==");
     let serving = build_serving_model(&ps, Some(&stats), ServeFormat::NonUniformScalar, 4)?;
-    let mut rng = Rng::new(1);
-    let prompts: Vec<Vec<u32>> = (0..4)
-        .map(|_| (0..16).map(|_| rng.below(serving.cfg.vocab) as u32).collect())
-        .collect();
-    let (outs, sstats) = generate_batch(&serving, &prompts, 32, pipeline.cfg.workers);
+    let prompts = guidedquant::serve::random_prompts(serving.cfg.vocab, 4, 16, 1);
+    let (outs, sstats) = generate_batch(&serving, &prompts, 32, pipeline.cfg.workers)?;
     println!(
-        "served {} requests x 32 tokens: {:.1} tok/s (p50 {:.2} ms, p99 {:.2} ms), weights {}",
+        "served {} requests x 32 tokens: {:.1} tok/s (p50 {:.2} ms, p99 {:.2} ms, ttft_p50 {:.2} ms, batch {:.1}), weights {}",
         outs.len(),
         sstats.tok_per_sec,
         sstats.p50_ms,
         sstats.p99_ms,
+        sstats.ttft_p50_ms,
+        sstats.batch_occupancy,
         guidedquant::util::human_bytes(sstats.weight_bytes as u64)
     );
     println!("\nall five phases complete.");

@@ -1,21 +1,25 @@
 //! Serving example: quantize a model into every serving format and serve a
-//! batch of requests from each, printing a latency/throughput comparison —
-//! the interactive version of the Table 2 bench.
+//! batch of requests from each through the continuous-batching scheduler,
+//! then sweep the batch width for one format to show the amortized-decode
+//! win over the thread-per-sequence baseline — the interactive version of
+//! the Table 2 bench.
 //!
 //!   cargo run --release --example serve_quantized [-- --model tiny --bits 4]
 
-use guidedquant::cfg::PipelineConfig;
+use guidedquant::cfg::{PipelineConfig, ServeConfig};
 use guidedquant::cli::Args;
 use guidedquant::coordinator::Pipeline;
 use guidedquant::report::{f, Table};
-use guidedquant::serve::{build_serving_model, generate_batch, ServeFormat};
-use guidedquant::util::{human_bytes, Rng};
+use guidedquant::serve::{
+    build_serving_model, generate_per_sequence, generate_scheduled, random_prompts, ServeFormat,
+};
+use guidedquant::util::human_bytes;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     let model = args.get_or("model", "tiny").to_string();
     let bits = args.get_usize("bits", 4)? as u32;
-    let requests = args.get_usize("requests", 6)?;
+    let requests = args.get_usize("requests", 8)?;
     let gen_tokens = args.get_usize("gen-tokens", 32)?;
 
     let pipeline = Pipeline::new(PipelineConfig {
@@ -27,15 +31,14 @@ fn main() -> anyhow::Result<()> {
     let mut ps = pipeline.init_params();
     println!("training {model} briefly so generations aren't pure noise ...");
     pipeline.train(&mut ps, pipeline.cfg.train_steps, 0)?;
+    let workers = pipeline.cfg.workers;
 
-    let mut rng = Rng::new(3);
-    let prompts: Vec<Vec<u32>> = (0..requests)
-        .map(|_| (0..12).map(|_| rng.below(ps.cfg.vocab) as u32).collect())
-        .collect();
+    let prompts = random_prompts(ps.cfg.vocab, requests, 12, 3);
 
+    // ---- every format through the scheduler at full batch width ---------
     let mut table = Table::new(
-        &format!("serving formats ({model}, {bits}-bit, {requests} reqs × {gen_tokens} tok)"),
-        &["format", "tok/s", "p50_ms", "p99_ms", "weights", "kv"],
+        &format!("serving formats ({model}, {bits}-bit, {requests} reqs × {gen_tokens} tok, scheduler)"),
+        &["format", "tok/s", "p50_ms", "p99_ms", "ttft_p50", "weights", "kv"],
     );
     for format in [
         ServeFormat::Fp32,
@@ -45,16 +48,49 @@ fn main() -> anyhow::Result<()> {
         ServeFormat::Trellis,
     ] {
         let m = build_serving_model(&ps, None, format, bits)?;
-        let (_, stats) = generate_batch(&m, &prompts, gen_tokens, pipeline.cfg.workers);
+        let cfg = ServeConfig { max_batch: requests.max(1), max_queued: requests.max(1) };
+        let (_, stats) = generate_scheduled(&m, &prompts, gen_tokens, workers, cfg)?;
         table.row(vec![
             format.name().into(),
             f(stats.tok_per_sec, 1),
             f(stats.p50_ms, 3),
             f(stats.p99_ms, 3),
+            f(stats.ttft_p50_ms, 3),
             human_bytes(stats.weight_bytes as u64),
             human_bytes(stats.kv_bytes as u64),
         ]);
     }
     table.print();
+
+    // ---- batch-width sweep: scheduler vs thread-per-sequence -------------
+    let m = build_serving_model(&ps, None, ServeFormat::NonUniformScalar, bits)?;
+    let mut sweep = Table::new(
+        &format!("batch sweep (nonuniform {bits}-bit, {requests} reqs × {gen_tokens} tok)"),
+        &["max_batch", "mode", "tok/s", "p50_ms", "queue_ms", "occupancy"],
+    );
+    let (_, base) = generate_per_sequence(&m, &prompts, gen_tokens, workers)?;
+    sweep.row(vec![
+        "-".into(),
+        "per-seq".into(),
+        f(base.tok_per_sec, 1),
+        f(base.p50_ms, 3),
+        f(0.0, 1),
+        f(1.0, 1),
+    ]);
+    let mut width = 1usize;
+    while width <= requests.max(1) {
+        let cfg = ServeConfig { max_batch: width, max_queued: requests.max(1) };
+        let (_, s) = generate_scheduled(&m, &prompts, gen_tokens, workers, cfg)?;
+        sweep.row(vec![
+            width.to_string(),
+            "scheduler".into(),
+            f(s.tok_per_sec, 1),
+            f(s.p50_ms, 3),
+            f(s.queue_wait_ms, 1),
+            f(s.batch_occupancy, 2),
+        ]);
+        width *= 2;
+    }
+    sweep.print();
     Ok(())
 }

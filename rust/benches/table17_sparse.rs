@@ -29,7 +29,7 @@ fn main() {
                     name.into(),
                     bits.to_string(),
                     if sparse > 0.0 { "0.45%".into() } else { "-".to_string() },
-                    f(s.pipeline.avg_bits(&s.ps, &layers), 2),
+                    f(s.pipeline.avg_bits(&layers), 2),
                     f(s.ppl(&qps, "fwd_loss"), 3),
                 ]);
             }

@@ -1,47 +1,70 @@
 //! Paper Table 2 (+7, +11) — end-to-end decode throughput by serving
-//! format and bit-width. Reproduction target: uniform ≈ non-uniform scalar,
-//! both faster than vector/trellis (decode overhead), all faster than fp32
-//! at low bits on the memory-bound decode path.
+//! format, bit-width, and batch size. Reproduction target: uniform ≈
+//! non-uniform scalar, both faster than vector/trellis (decode overhead),
+//! all faster than fp32 at low bits on the memory-bound decode path — and,
+//! with the continuous-batching scheduler, every quantized format gains
+//! over the thread-per-sequence baseline as the batch grows, because each
+//! weight tile is decoded once per step instead of once per lane.
+//!
+//! Throughput does not depend on weight values, so this bench runs from
+//! randomly initialized parameters and needs no AOT artifacts.
 
-#[path = "common.rs"]
-mod common;
-
+use guidedquant::cfg::{preset, ServeConfig};
+use guidedquant::model::ParamStore;
 use guidedquant::report::{f, Table};
-use guidedquant::serve::{build_serving_model, generate_batch, ServeFormat};
-use guidedquant::util::human_bytes;
-use guidedquant::util::Rng;
+use guidedquant::serve::{
+    build_serving_model, generate_per_sequence, generate_scheduled, random_prompts, ServeFormat,
+};
+use guidedquant::util::{human_bytes, Rng};
 
 fn main() {
-    let model = common::bench_model();
-    let s = common::setup(&model);
+    let model = std::env::var("GQ_BENCH_MODEL").unwrap_or_else(|_| "tiny".to_string());
+    let (cfg, _) = preset(&model);
+    let ps = ParamStore::init(&cfg, &mut Rng::new(0));
     let fast = guidedquant::bench::fast_mode();
-    let (requests, gen_tokens, prompt_len) = if fast { (2, 8, 4) } else { (4, 48, 16) };
-    let workers = s.pipeline.cfg.workers;
+    let (gen_tokens, prompt_len) = if fast { (8, 4) } else { (32, 16) };
+    let batches: &[usize] = if fast { &[1, 4] } else { &[1, 4, 8, 16] };
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
 
     let mut table = Table::new(
-        &format!("Table 2 analog — decode throughput ({model}, {requests} reqs × {gen_tokens} tokens)"),
-        &["format", "bits", "tok/s", "p50_ms", "p99_ms", "weights"],
+        &format!("Table 2 analog — decode throughput ({model}, {gen_tokens} tok/req, batch sweep)"),
+        &["format", "bits", "batch", "mode", "tok/s", "p50_ms", "ttft_p50", "occupancy", "weights"],
     );
 
-    let mut rng = Rng::new(11);
-    let vocab = s.ps.cfg.vocab;
-    let prompts: Vec<Vec<u32>> = (0..requests)
-        .map(|_| (0..prompt_len).map(|_| rng.below(vocab) as u32).collect())
-        .collect();
-
     let mut run = |format: ServeFormat, bits: u32| {
-        let m = build_serving_model(&s.ps, Some(&s.stats), format, bits).unwrap();
-        // Warm once, then measure.
-        let _ = generate_batch(&m, &prompts[..1.min(prompts.len())], 2, workers);
-        let (_, stats) = generate_batch(&m, &prompts, gen_tokens, workers);
-        table.row(vec![
-            format.name().into(),
-            if format == ServeFormat::Fp32 { "32".into() } else { bits.to_string() },
-            f(stats.tok_per_sec, 1),
-            f(stats.p50_ms, 3),
-            f(stats.p99_ms, 3),
-            human_bytes(stats.weight_bytes as u64),
-        ]);
+        let m = build_serving_model(&ps, None, format, bits).unwrap();
+        let warm = random_prompts(cfg.vocab, 1, prompt_len, 7);
+        let _ = generate_per_sequence(&m, &warm, 2, workers).unwrap();
+        for &batch in batches {
+            let prompts = random_prompts(cfg.vocab, batch, prompt_len, 11 + batch as u64);
+            let bits_str =
+                if format == ServeFormat::Fp32 { "32".to_string() } else { bits.to_string() };
+            let (_, seq) = generate_per_sequence(&m, &prompts, gen_tokens, workers).unwrap();
+            table.row(vec![
+                format.name().into(),
+                bits_str.clone(),
+                batch.to_string(),
+                "per-seq".into(),
+                f(seq.tok_per_sec, 1),
+                f(seq.p50_ms, 3),
+                f(seq.ttft_p50_ms, 3),
+                f(1.0, 2),
+                human_bytes(seq.weight_bytes as u64),
+            ]);
+            let scfg = ServeConfig { max_batch: batch, max_queued: batch };
+            let (_, sch) = generate_scheduled(&m, &prompts, gen_tokens, workers, scfg).unwrap();
+            table.row(vec![
+                format.name().into(),
+                bits_str,
+                batch.to_string(),
+                "scheduler".into(),
+                f(sch.tok_per_sec, 1),
+                f(sch.p50_ms, 3),
+                f(sch.ttft_p50_ms, 3),
+                f(sch.batch_occupancy, 2),
+                human_bytes(sch.weight_bytes as u64),
+            ]);
+        }
     };
 
     run(ServeFormat::Fp32, 16);

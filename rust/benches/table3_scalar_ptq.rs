@@ -35,7 +35,7 @@ fn main() {
             let qps = s.apply(&layers);
             let ppl = s.ppl(&qps, "fwd_loss");
             let shift = s.ppl_shift(&qps);
-            let avg_bits = s.pipeline.avg_bits(&s.ps, &layers);
+            let avg_bits = s.pipeline.avg_bits(&layers);
             table.row(vec![
                 name.into(),
                 bits.to_string(),

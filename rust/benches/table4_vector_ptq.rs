@@ -28,7 +28,7 @@ fn main() {
             table.row(vec![
                 name.into(),
                 bits.to_string(),
-                f(s.pipeline.avg_bits(&s.ps, &layers), 2),
+                f(s.pipeline.avg_bits(&layers), 2),
                 f(s.ppl(&qps, "fwd_loss"), 3),
                 f(s.ppl_shift(&qps), 3),
             ]);

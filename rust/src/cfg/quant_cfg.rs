@@ -159,6 +159,44 @@ impl QuantConfig {
     }
 }
 
+/// Serving/scheduler knobs for the continuous-batching engine
+/// (`gq serve`, `serve::Scheduler`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Maximum sequences decoding concurrently (continuous-batch width);
+    /// finished sequences are evicted mid-flight and queued requests
+    /// spliced in at the next step.
+    pub max_batch: usize,
+    /// Admission control: maximum requests waiting in the queue before
+    /// `submit` errors (back-pressure to the caller).
+    pub max_queued: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 8, max_queued: 256 }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_toml(doc: &TomlDoc, section: &str) -> Result<Self> {
+        let mut c = ServeConfig::default();
+        if let Some(v) = doc.get_int(section, "max_batch") {
+            c.max_batch = v as usize;
+        }
+        if let Some(v) = doc.get_int(section, "max_queued") {
+            c.max_queued = v as usize;
+        }
+        if c.max_batch == 0 {
+            bail!("serve.max_batch must be at least 1");
+        }
+        if c.max_queued == 0 {
+            bail!("serve.max_queued must be at least 1");
+        }
+        Ok(c)
+    }
+}
+
 /// End-to-end pipeline configuration (`gq pipeline`).
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
@@ -174,6 +212,7 @@ pub struct PipelineConfig {
     /// Worker threads for the (layer, group) quantization job queue.
     pub workers: usize,
     pub quant: QuantConfig,
+    pub serve: ServeConfig,
     pub seed: u64,
 }
 
@@ -188,6 +227,7 @@ impl Default for PipelineConfig {
             eval_batches: 16,
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             quant: QuantConfig::default(),
+            serve: ServeConfig::default(),
             seed: 0,
         }
     }
@@ -222,6 +262,7 @@ impl PipelineConfig {
             c.seed = v as u64;
         }
         c.quant = QuantConfig::from_toml(doc, "quant")?;
+        c.serve = ServeConfig::from_toml(doc, "serve")?;
         Ok(c)
     }
 }
@@ -255,7 +296,7 @@ mod tests {
     #[test]
     fn from_toml_overrides_defaults() {
         let doc = TomlDoc::parse(
-            "[pipeline]\nmodel = \"tiny\"\ntrain_steps = 7\n[quant]\nmethod = \"gptq\"\nbits = 2\nsparse_frac = 0.0045\n",
+            "[pipeline]\nmodel = \"tiny\"\ntrain_steps = 7\n[quant]\nmethod = \"gptq\"\nbits = 2\nsparse_frac = 0.0045\n[serve]\nmax_batch = 16\nmax_queued = 99\n",
         )
         .unwrap();
         let c = PipelineConfig::from_toml(&doc).unwrap();
@@ -264,5 +305,17 @@ mod tests {
         assert_eq!(c.quant.method, QuantMethod::Gptq);
         assert_eq!(c.quant.bits, 2);
         assert!((c.quant.sparse_frac - 0.0045).abs() < 1e-9);
+        assert_eq!(c.serve.max_batch, 16);
+        assert_eq!(c.serve.max_queued, 99);
+    }
+
+    #[test]
+    fn serve_config_rejects_zero_knobs() {
+        let doc = TomlDoc::parse("[serve]\nmax_batch = 0\n").unwrap();
+        assert!(ServeConfig::from_toml(&doc, "serve").is_err());
+        let doc = TomlDoc::parse("[serve]\nmax_queued = 0\n").unwrap();
+        assert!(ServeConfig::from_toml(&doc, "serve").is_err());
+        let c = ServeConfig::default();
+        assert!(c.max_batch >= 1 && c.max_queued >= 1);
     }
 }

@@ -56,6 +56,16 @@ impl Args {
         }
     }
 
+    /// Like [`Args::get_usize`] but enforces a lower bound — scheduler
+    /// knobs such as `--max-batch` are meaningless at 0.
+    pub fn get_usize_at_least(&self, name: &str, default: usize, min: usize) -> Result<usize> {
+        let v = self.get_usize(name, default)?;
+        if v < min {
+            bail!("--{name}: must be at least {min}, got {v}");
+        }
+        Ok(v)
+    }
+
     pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             None => Ok(default),
@@ -114,6 +124,15 @@ mod tests {
         // `--check` is followed by another flag, so it's a switch:
         assert!(a.switch("check"));
         assert_eq!(a.get("model"), Some("tiny"));
+    }
+
+    #[test]
+    fn bounded_getter() {
+        let a = parse(&["--max-batch", "4"]);
+        assert_eq!(a.get_usize_at_least("max-batch", 8, 1).unwrap(), 4);
+        assert_eq!(a.get_usize_at_least("max-queued", 8, 1).unwrap(), 8);
+        let z = parse(&["--max-batch", "0"]);
+        assert!(z.get_usize_at_least("max-batch", 8, 1).is_err());
     }
 
     #[test]

@@ -17,7 +17,7 @@ use crate::quant::gptvq::{Gptvq1d, GptvqVq};
 use crate::quant::grid::rtn_quantize;
 use crate::quant::guided::group_ranges;
 use crate::quant::lnq::Lnq;
-use crate::quant::sparse::{split_outliers, SparseOverlay};
+use crate::quant::sparse::{split_outliers, SparseOverlay, SPARSE_OUTLIER_BITS};
 use crate::quant::squeezellm::{squeezellm_quantize, SqueezeLlm};
 use crate::quant::trellis::Trellis;
 use crate::quant::{LayerQuantizer, QuantResult};
@@ -240,8 +240,8 @@ impl Pipeline {
                         let mut res = q.quantize(&h, &dense)?;
                         if !overlay.is_empty() {
                             overlay.apply(&mut res.w_hat);
-                            res.avg_bits +=
-                                overlay.len() as f64 * 48.0 / (wg.rows * wg.cols) as f64;
+                            res.avg_bits += overlay.len() as f64 * SPARSE_OUTLIER_BITS
+                                / (wg.rows * wg.cols) as f64;
                         }
                         Ok(GroupJobOut { li, k: k + 1, lo, hi, res })
                     }));
@@ -324,7 +324,7 @@ impl Pipeline {
     }
 
     /// Weighted average bits across quantized layers.
-    pub fn avg_bits(&self, ps: &ParamStore, layers: &[QuantizedLayer]) -> f64 {
+    pub fn avg_bits(&self, layers: &[QuantizedLayer]) -> f64 {
         let mut bits = 0.0f64;
         let mut weight = 0.0f64;
         for l in layers {
@@ -332,7 +332,6 @@ impl Pipeline {
             bits += l.result.avg_bits * n;
             weight += n;
         }
-        let _ = ps;
         bits / weight.max(1.0)
     }
 
@@ -356,7 +355,7 @@ impl Pipeline {
             self.metrics.time("eval_secs", || self.perplexity(&ps, Split::Eval, "fwd_loss"))?;
         report.ppl_fp_shift = self.perplexity(&ps, Split::EvalShift, "fwd_loss")?;
         let layers = self.quantize(&ps, &stats, &self.cfg.quant)?;
-        report.avg_bits = self.avg_bits(&ps, &layers);
+        report.avg_bits = self.avg_bits(&layers);
         let qps = self.apply_quantized(&ps, &layers);
         report.ppl_q_eval = self.perplexity(&qps, Split::Eval, "fwd_loss")?;
         report.ppl_q_shift = self.perplexity(&qps, Split::EvalShift, "fwd_loss")?;

@@ -21,8 +21,9 @@ use guidedquant::cli::Args;
 use guidedquant::coordinator::Pipeline;
 use guidedquant::data::Split;
 use guidedquant::model::ParamStore;
-use guidedquant::serve::{build_serving_model, generate_batch, ServeFormat};
-use guidedquant::util::Rng;
+use guidedquant::serve::{
+    build_serving_model, generate_per_sequence, generate_scheduled, ServeFormat,
+};
 
 const USAGE: &str = "usage: gq <pipeline|train|quantize|eval|serve|fisher|info> [flags]
   common flags: --model tiny|small|base  --artifacts DIR  --out DIR --config FILE
@@ -30,7 +31,9 @@ const USAGE: &str = "usage: gq <pipeline|train|quantize|eval|serve|fisher|info> 
                 --bits N --groups G --sparse-frac F --seed S
   pipeline:     --train-steps N --calib-batches N --eval-batches N --workers N
   serve:        --format fp32|uniform|nonuniform|vector|trellis --requests N
-                --gen-tokens N --prompt-len N
+                --gen-tokens N --prompt-len N --max-batch N --max-queued N
+                --per-seq (thread-per-sequence baseline instead of the
+                continuous-batching scheduler)
   train:        --steps N --save FILE
   eval/quantize: --load FILE [--save FILE] --artifact fwd_loss|fwd_loss_qa4kv4|...";
 
@@ -49,6 +52,8 @@ fn pipeline_config(args: &Args) -> Result<PipelineConfig> {
     cfg.eval_batches = args.get_usize("eval-batches", cfg.eval_batches)?;
     cfg.workers = args.get_usize("workers", cfg.workers)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.serve.max_batch = args.get_usize_at_least("max-batch", cfg.serve.max_batch, 1)?;
+    cfg.serve.max_queued = args.get_usize_at_least("max-queued", cfg.serve.max_queued, 1)?;
     cfg.quant = quant_config(args, cfg.quant)?;
     Ok(cfg)
 }
@@ -140,7 +145,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     println!(
         "quantized {} linears, avg bits {:.3}",
         layers.len(),
-        pipeline.avg_bits(&ps, &layers)
+        pipeline.avg_bits(&layers)
     );
     if let Some(path) = args.get("save") {
         qps.save(path)?;
@@ -180,18 +185,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let ps = load_or_init(&pipeline, args)?;
     println!("building {} serving model at {bits} bits ...", format.name());
     let model = build_serving_model(&ps, None, format, bits)?;
-    let mut rng = Rng::new(7);
-    let prompts: Vec<Vec<u32>> = (0..requests)
-        .map(|_| (0..prompt_len).map(|_| rng.below(model.cfg.vocab) as u32).collect())
-        .collect();
-    let (_, stats) = generate_batch(&model, &prompts, gen_tokens, pipeline.cfg.workers);
+    let prompts = guidedquant::serve::random_prompts(model.cfg.vocab, requests, prompt_len, 7);
+    let (_, stats) = if args.switch("per-seq") {
+        generate_per_sequence(&model, &prompts, gen_tokens, pipeline.cfg.workers)?
+    } else {
+        generate_scheduled(
+            &model,
+            &prompts,
+            gen_tokens,
+            pipeline.cfg.workers,
+            pipeline.cfg.serve.clone(),
+        )?
+    };
     println!(
-        "format={} bits={} requests={requests} gen={gen_tokens}: {:.1} tok/s  p50 {:.2} ms  p99 {:.2} ms  weights {}",
+        "format={} bits={} requests={requests} gen={gen_tokens}: {:.1} tok/s  p50 {:.2} ms  p99 {:.2} ms  ttft_p50 {:.2} ms  queue {:.2} ms  batch {:.1}  weights {}",
         format.name(),
         bits,
         stats.tok_per_sec,
         stats.p50_ms,
         stats.p99_ms,
+        stats.ttft_p50_ms,
+        stats.queue_wait_ms,
+        stats.batch_occupancy,
         guidedquant::util::human_bytes(stats.weight_bytes as u64)
     );
     Ok(())

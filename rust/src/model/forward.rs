@@ -18,6 +18,22 @@ pub trait LinearOp: Send + Sync {
     fn d_out(&self) -> usize;
     /// out += is NOT implied: `out` is overwritten.
     fn matvec(&self, x: &[f32], out: &mut [f32]);
+    /// Batched linear: `out.row(r) = xs.row(r) @ W` for every row.
+    /// `xs: [batch, d_in]`, `out: [batch, d_out]`, both overwritten row-major.
+    ///
+    /// The default loops [`LinearOp::matvec`]; quantized serving formats
+    /// override it to decode each weight tile ONCE per step and apply it to
+    /// all batch lanes. Implementations must keep per-lane arithmetic (op
+    /// order included) identical to `matvec` so batched greedy decode is
+    /// bit-identical to the per-sequence path.
+    fn matmul(&self, xs: &Mat, out: &mut Mat) {
+        debug_assert_eq!(xs.cols, self.d_in());
+        debug_assert_eq!(out.cols, self.d_out());
+        debug_assert_eq!(xs.rows, out.rows);
+        for r in 0..xs.rows {
+            self.matvec(xs.row(r), out.row_mut(r));
+        }
+    }
     /// Bytes of weight storage (for the Table 2 bits/OOM accounting).
     fn storage_bytes(&self) -> usize;
 }
@@ -42,6 +58,27 @@ impl LinearOp for Mat {
             let row = self.row(i);
             for (o, w) in out.iter_mut().zip(row) {
                 *o += xi * w;
+            }
+        }
+    }
+
+    fn matmul(&self, xs: &Mat, out: &mut Mat) {
+        debug_assert_eq!(xs.cols, self.rows);
+        debug_assert_eq!(out.cols, self.cols);
+        debug_assert_eq!(xs.rows, out.rows);
+        out.data.fill(0.0);
+        // Weight row i is read once and applied to every lane (per-lane op
+        // order matches `matvec`: i ascending, j ascending, zeros skipped).
+        for i in 0..self.rows {
+            let wrow = self.row(i);
+            for r in 0..xs.rows {
+                let xi = xs.at(r, i);
+                if xi == 0.0 {
+                    continue;
+                }
+                for (o, w) in out.row_mut(r).iter_mut().zip(wrow) {
+                    *o += xi * w;
+                }
             }
         }
     }
@@ -90,6 +127,125 @@ impl DecodeState {
 
     pub fn kv_bytes(&self) -> usize {
         self.keys.iter().chain(&self.vals).map(|v| v.len() * 4).sum()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Clear the cache for reuse, keeping the backing allocations.
+    pub fn reset(&mut self) {
+        for k in &mut self.keys {
+            k.clear();
+        }
+        for v in &mut self.vals {
+            v.clear();
+        }
+        self.pos = 0;
+    }
+}
+
+/// Pool of KV caches for the batched serve path. Sequences that finish
+/// return their cache here and sequences that join take one over, so
+/// continuous batching splices requests in and out without reallocating
+/// KV storage (the cleared `Vec`s keep their capacity).
+pub struct KvArena {
+    n_layers: usize,
+    free: Vec<DecodeState>,
+}
+
+impl KvArena {
+    pub fn new(n_layers: usize) -> Self {
+        KvArena { n_layers, free: Vec::new() }
+    }
+
+    /// A fresh (pos = 0) state, reusing a pooled allocation when possible.
+    pub fn acquire(&mut self) -> DecodeState {
+        self.free.pop().unwrap_or_else(|| DecodeState::new(self.n_layers))
+    }
+
+    pub fn release(&mut self, mut state: DecodeState) {
+        debug_assert_eq!(state.n_layers(), self.n_layers);
+        state.reset();
+        self.free.push(state);
+    }
+
+    /// Number of caches currently pooled.
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+/// Reusable activation buffers for [`NativeModel::step_batch_with`]. The
+/// decode loop owns one of these; buffers are resized only when the batch
+/// width changes (lanes joining/leaving), not on every step. Every buffer
+/// is fully overwritten within a step before it is read.
+pub struct BatchScratch {
+    x: Mat,
+    normed: Mat,
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    ctx: Mat,
+    o: Mat,
+    gate: Mat,
+    up: Mat,
+    down: Mat,
+    logits: Mat,
+    scores: Vec<f32>,
+    pre: Vec<f32>,
+}
+
+impl Default for BatchScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BatchScratch {
+    pub fn new() -> Self {
+        let empty = || Mat::zeros(0, 0);
+        BatchScratch {
+            x: empty(),
+            normed: empty(),
+            q: empty(),
+            k: empty(),
+            v: empty(),
+            ctx: empty(),
+            o: empty(),
+            gate: empty(),
+            up: empty(),
+            down: empty(),
+            logits: empty(),
+            scores: Vec::new(),
+            pre: Vec::new(),
+        }
+    }
+
+    /// Next-token logits from the last [`NativeModel::step_batch_with`]
+    /// call: row `r` belongs to lane `r` of that call.
+    pub fn logits(&self) -> &Mat {
+        &self.logits
+    }
+
+    fn ensure(&mut self, b: usize, d: usize, ff: usize, vocab: usize) {
+        if self.x.rows != b || self.x.cols != d {
+            self.x = Mat::zeros(b, d);
+            self.normed = Mat::zeros(b, d);
+            self.q = Mat::zeros(b, d);
+            self.k = Mat::zeros(b, d);
+            self.v = Mat::zeros(b, d);
+            self.ctx = Mat::zeros(b, d);
+            self.o = Mat::zeros(b, d);
+            self.down = Mat::zeros(b, d);
+        }
+        if self.gate.rows != b || self.gate.cols != ff {
+            self.gate = Mat::zeros(b, ff);
+            self.up = Mat::zeros(b, ff);
+        }
+        if self.logits.rows != b || self.logits.cols != vocab {
+            self.logits = Mat::zeros(b, vocab);
+        }
     }
 }
 
@@ -151,6 +307,10 @@ impl NativeModel {
 
     pub fn new_state(&self) -> DecodeState {
         DecodeState::new(self.cfg.n_layers)
+    }
+
+    pub fn new_arena(&self) -> KvArena {
+        KvArena::new(self.cfg.n_layers)
     }
 
     /// Total weight bytes across the seven quantizable linears (all blocks).
@@ -287,6 +447,136 @@ impl NativeModel {
         logits
     }
 
+    /// One decode step over a slab of independent sequences (continuous
+    /// batching): lane `r` appends `tokens[r]` to `states[r]`, and row `r`
+    /// of the returned matrix holds its next-token logits.
+    ///
+    /// Every linear runs through the batched [`LinearOp::matmul`], so each
+    /// quantized weight tile is decoded once per step instead of once per
+    /// lane; attention is per-lane (lanes may sit at different positions).
+    /// Per-lane arithmetic is bit-identical to [`NativeModel::step`].
+    pub fn step_batch(&self, states: &mut [&mut DecodeState], tokens: &[u32]) -> Mat {
+        let mut scratch = BatchScratch::new();
+        self.step_batch_with(&mut scratch, states, tokens);
+        scratch.logits
+    }
+
+    /// [`NativeModel::step_batch`] with caller-owned scratch buffers: the
+    /// decode loop calls this once per generated token, so the per-step
+    /// activation buffers — the logits matrix included — are reused instead
+    /// of reallocated (they are only re-sized when the batch width changes).
+    /// All buffers are fully overwritten before being read, so reuse cannot
+    /// leak state between steps. Results land in [`BatchScratch::logits`].
+    pub fn step_batch_with(
+        &self,
+        scratch: &mut BatchScratch,
+        states: &mut [&mut DecodeState],
+        tokens: &[u32],
+    ) {
+        assert_eq!(states.len(), tokens.len(), "one state per token lane");
+        let b = tokens.len();
+        let d = self.cfg.d_model;
+        let h = self.cfg.n_heads;
+        let hd = self.cfg.head_dim();
+        let theta = self.cfg.rope_theta;
+        let ff = self.cfg.d_ff;
+
+        scratch.ensure(b, d, ff, self.cfg.vocab);
+        let BatchScratch {
+            x,
+            normed,
+            q,
+            k,
+            v,
+            ctx,
+            o,
+            gate,
+            up,
+            down,
+            logits,
+            scores,
+            pre,
+        } = scratch;
+        for (r, &tok) in tokens.iter().enumerate() {
+            x.row_mut(r).copy_from_slice(self.tok_emb.row(tok as usize));
+        }
+
+        for (l, blk) in self.blocks.iter().enumerate() {
+            for r in 0..b {
+                rmsnorm(x.row(r), &blk.attn_norm, normed.row_mut(r));
+            }
+            blk.wq.matmul(&normed, &mut q);
+            blk.wk.matmul(&normed, &mut k);
+            blk.wv.matmul(&normed, &mut v);
+            for r in 0..b {
+                let pos = states[r].pos;
+                for head in 0..h {
+                    rope_inplace(&mut q.row_mut(r)[head * hd..(head + 1) * hd], pos, theta);
+                    rope_inplace(&mut k.row_mut(r)[head * hd..(head + 1) * hd], pos, theta);
+                }
+                states[r].keys[l].extend_from_slice(k.row(r));
+                states[r].vals[l].extend_from_slice(v.row(r));
+            }
+            let scale = 1.0 / (hd as f32).sqrt();
+            ctx.data.fill(0.0);
+            for r in 0..b {
+                let st = &*states[r];
+                let n_pos = st.pos + 1;
+                let qrow = q.row(r);
+                let ctx_row = ctx.row_mut(r);
+                for head in 0..h {
+                    let qh = &qrow[head * hd..(head + 1) * hd];
+                    scores.clear();
+                    let mut max_s = f32::NEG_INFINITY;
+                    for p in 0..n_pos {
+                        let kh = &st.keys[l][p * d + head * hd..p * d + (head + 1) * hd];
+                        let s = crate::tensor::ops::dot(qh, kh) * scale;
+                        max_s = max_s.max(s);
+                        scores.push(s);
+                    }
+                    let mut denom = 0.0f32;
+                    for s in scores.iter_mut() {
+                        *s = (*s - max_s).exp();
+                        denom += *s;
+                    }
+                    let ctx_h = &mut ctx_row[head * hd..(head + 1) * hd];
+                    for p in 0..n_pos {
+                        let w = scores[p] / denom;
+                        let vh = &st.vals[l][p * d + head * hd..p * d + (head + 1) * hd];
+                        for (c, &vv) in ctx_h.iter_mut().zip(vh) {
+                            *c += w * vv;
+                        }
+                    }
+                }
+            }
+            blk.wo.matmul(&ctx, &mut o);
+            for (xv, &ov) in x.data.iter_mut().zip(&o.data) {
+                *xv += ov;
+            }
+            for r in 0..b {
+                rmsnorm(x.row(r), &blk.mlp_norm, normed.row_mut(r));
+            }
+            blk.wgate.matmul(&normed, &mut gate);
+            blk.wup.matmul(&normed, &mut up);
+            for (g, &u) in gate.data.iter_mut().zip(&up.data) {
+                *g = silu(*g) * u;
+            }
+            blk.wdown.matmul(&gate, &mut down);
+            for (xv, &dv) in x.data.iter_mut().zip(&down.data) {
+                *xv += dv;
+            }
+        }
+        for st in states.iter_mut() {
+            st.pos += 1;
+        }
+        for r in 0..b {
+            pre.clear();
+            pre.extend_from_slice(x.row(r));
+            rmsnorm(pre, &self.final_norm, x.row_mut(r));
+        }
+        self.head.matmul(x, logits);
+    }
+
     /// Input activations of every linear over a full sequence: one
     /// (seq_len × d_in) matrix per linear, flat (layer, kind) order.
     pub fn record_linear_inputs(&self, tokens: &[u32]) -> Vec<Mat> {
@@ -409,6 +699,98 @@ mod tests {
         let b1 = st.kv_bytes();
         m.step(&mut st, 1);
         assert_eq!(st.kv_bytes(), 2 * b1);
+    }
+
+    #[test]
+    fn step_batch_bitwise_matches_sequential_step() {
+        // Three lanes fed different tokens must produce, per lane and per
+        // step, EXACTLY the logits the scalar `step` path produces — the
+        // invariant the continuous-batching scheduler relies on.
+        let m = tiny_model();
+        let lanes: [[u32; 3]; 3] = [[5, 9, 2], [3, 8, 1], [250, 0, 7]];
+
+        let mut want: Vec<Vec<Vec<f32>>> = Vec::new();
+        for lane in &lanes {
+            let mut st = m.new_state();
+            want.push(lane.iter().map(|&t| m.step(&mut st, t)).collect());
+        }
+
+        let mut states: Vec<DecodeState> = (0..3).map(|_| m.new_state()).collect();
+        for step in 0..3 {
+            let tokens: Vec<u32> = lanes.iter().map(|l| l[step]).collect();
+            let mut refs: Vec<&mut DecodeState> = states.iter_mut().collect();
+            let logits = m.step_batch(&mut refs, &tokens);
+            for (r, w) in want.iter().enumerate() {
+                assert_eq!(logits.row(r), &w[step][..], "lane {r} step {step}");
+            }
+        }
+        for st in &states {
+            assert_eq!(st.pos, 3);
+        }
+    }
+
+    #[test]
+    fn step_batch_handles_mixed_positions() {
+        // Lanes entering at different times (different pos) stay per-lane
+        // consistent with scalar decode.
+        let m = tiny_model();
+        let mut early = m.new_state();
+        m.step(&mut early, 4);
+        m.step(&mut early, 11);
+        let mut late = m.new_state();
+        m.step(&mut late, 9);
+
+        let mut ref_early = m.new_state();
+        m.step(&mut ref_early, 4);
+        m.step(&mut ref_early, 11);
+        let want_early = m.step(&mut ref_early, 2);
+        let mut ref_late = m.new_state();
+        m.step(&mut ref_late, 9);
+        let want_late = m.step(&mut ref_late, 7);
+
+        let mut refs: Vec<&mut DecodeState> = vec![&mut early, &mut late];
+        let logits = m.step_batch(&mut refs, &[2, 7]);
+        assert_eq!(logits.row(0), &want_early[..]);
+        assert_eq!(logits.row(1), &want_late[..]);
+        assert_eq!(early.pos, 3);
+        assert_eq!(late.pos, 2);
+    }
+
+    #[test]
+    fn kv_arena_recycles_states() {
+        let m = tiny_model();
+        let mut arena = m.new_arena();
+        let mut s = arena.acquire();
+        m.step(&mut s, 1);
+        m.step(&mut s, 2);
+        assert!(s.kv_bytes() > 0);
+        let cap_before: usize = s.keys.iter().map(|k| k.capacity()).sum();
+        arena.release(s);
+        assert_eq!(arena.pooled(), 1);
+        let s2 = arena.acquire();
+        assert_eq!(arena.pooled(), 0);
+        assert_eq!(s2.pos, 0);
+        assert_eq!(s2.kv_bytes(), 0);
+        // The recycled state keeps its backing allocation.
+        let cap_after: usize = s2.keys.iter().map(|k| k.capacity()).sum();
+        assert_eq!(cap_before, cap_after);
+    }
+
+    #[test]
+    fn mat_matmul_matches_looped_matvec_exactly() {
+        let mut rng = Rng::new(9);
+        let w = Mat::randn(24, 10, 1.0, &mut rng);
+        let mut xs = Mat::randn(4, 24, 1.0, &mut rng);
+        for r in 0..4 {
+            xs.row_mut(r)[r] = 0.0; // exercise the zero-skip path
+        }
+        let mut want = Mat::zeros(4, 10);
+        for r in 0..4 {
+            LinearOp::matvec(&w, xs.row(r), want.row_mut(r));
+        }
+        let mut got = Mat::zeros(4, 10);
+        LinearOp::matmul(&w, &xs, &mut got);
+        assert_eq!(got.data, want.data);
     }
 
     #[test]

@@ -6,5 +6,5 @@
 pub mod forward;
 pub mod params;
 
-pub use forward::{DecodeState, NativeModel};
+pub use forward::{BatchScratch, DecodeState, KvArena, NativeModel};
 pub use params::ParamStore;

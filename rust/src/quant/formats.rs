@@ -73,6 +73,44 @@ impl LinearOp for UniformScalarLinear {
         }
     }
 
+    fn matmul(&self, xs: &Mat, out: &mut Mat) {
+        debug_assert_eq!(xs.cols, self.d_in);
+        debug_assert_eq!(out.cols, self.d_out);
+        debug_assert_eq!(xs.rows, out.rows);
+        let b = xs.rows;
+        out.data.fill(0.0);
+        let mut row = vec![0u16; self.d_out];
+        let mut xsum = vec![0.0f32; b];
+        for i in 0..self.d_in {
+            // Unpack code row i once for the whole batch.
+            let mut any = false;
+            for (r, s) in xsum.iter_mut().enumerate() {
+                let xi = xs.at(r, i);
+                *s += xi;
+                any |= xi != 0.0;
+            }
+            if !any {
+                continue;
+            }
+            self.codes.unpack_range(i * self.d_out, &mut row);
+            for r in 0..b {
+                let xi = xs.at(r, i);
+                if xi == 0.0 {
+                    continue;
+                }
+                for (o, &q) in out.row_mut(r).iter_mut().zip(&row) {
+                    *o += xi * q as f32;
+                }
+            }
+        }
+        for r in 0..b {
+            let orow = out.row_mut(r);
+            for j in 0..self.d_out {
+                orow[j] = orow[j] * self.scale[j] + xsum[r] * self.zero[j];
+            }
+        }
+    }
+
     fn storage_bytes(&self) -> usize {
         self.codes.storage_bytes() + (self.scale.len() + self.zero.len()) * 2 // fp16 grid
     }
@@ -151,6 +189,38 @@ impl LinearOp for LutLinear {
         }
     }
 
+    fn matmul(&self, xs: &Mat, out: &mut Mat) {
+        debug_assert_eq!(xs.cols, self.d_in);
+        debug_assert_eq!(out.cols, self.d_out);
+        debug_assert_eq!(xs.rows, out.rows);
+        let b = xs.rows;
+        out.data.fill(0.0);
+        let m = self.codebooks.cols;
+        let cb = &self.codebooks.data;
+        let mut row = vec![0u16; self.d_out];
+        let mut wrow = vec![0.0f32; self.d_out];
+        for i in 0..self.d_in {
+            if (0..b).all(|r| xs.at(r, i) == 0.0) {
+                continue;
+            }
+            // Gather weight row i through the LUT once, then FMA it into
+            // every lane — the decode cost is amortized across the batch.
+            self.codes.unpack_range(i * self.d_out, &mut row);
+            for (j, w) in wrow.iter_mut().enumerate() {
+                *w = cb[j * m + row[j] as usize];
+            }
+            for r in 0..b {
+                let xi = xs.at(r, i);
+                if xi == 0.0 {
+                    continue;
+                }
+                for (o, &w) in out.row_mut(r).iter_mut().zip(&wrow) {
+                    *o += xi * w;
+                }
+            }
+        }
+    }
+
     fn storage_bytes(&self) -> usize {
         self.codes.storage_bytes() + self.codebooks.data.len() * 2 // fp16 LUT
     }
@@ -222,6 +292,35 @@ impl LinearOp for VqLinear {
         }
     }
 
+    fn matmul(&self, xs: &Mat, out: &mut Mat) {
+        debug_assert_eq!(xs.cols, self.d_in);
+        debug_assert_eq!(out.cols, self.d_out);
+        debug_assert_eq!(xs.rows, out.rows);
+        let b = xs.rows;
+        out.data.fill(0.0);
+        let dim = self.dim;
+        let n_pts = self.d_in / dim;
+        let cbw = self.codebooks.cols;
+        let mut row = vec![0u16; self.d_out];
+        for p in 0..n_pts {
+            // One code unpack + one centroid gather per (point, channel),
+            // shared by all lanes.
+            self.codes.unpack_range(p * self.d_out, &mut row);
+            for j in 0..self.d_out {
+                let c = row[j] as usize * dim;
+                let cent = &self.codebooks.data[j * cbw + c..j * cbw + c + dim];
+                for r in 0..b {
+                    let xsr = &xs.row(r)[p * dim..(p + 1) * dim];
+                    let mut acc = 0.0f32;
+                    for t in 0..dim {
+                        acc += xsr[t] * cent[t];
+                    }
+                    *out.at_mut(r, j) += acc;
+                }
+            }
+        }
+    }
+
     fn storage_bytes(&self) -> usize {
         self.codes.storage_bytes() + self.codebooks.data.len() * 2
     }
@@ -285,6 +384,34 @@ impl LinearOp for TrellisLinear {
                 acc += x[i] * self.gen.value(state);
             }
             out[j] = acc * self.scales[j];
+        }
+    }
+
+    fn matmul(&self, xs: &Mat, out: &mut Mat) {
+        debug_assert_eq!(xs.cols, self.d_in);
+        debug_assert_eq!(out.cols, self.d_out);
+        debug_assert_eq!(xs.rows, out.rows);
+        let b = xs.rows;
+        let mask = (1u32 << self.cfg.state_bits) - 1;
+        let bits = self.cfg.bits;
+        let mut syms = vec![0u16; self.d_in];
+        let mut acc = vec![0.0f32; b];
+        for j in 0..self.d_out {
+            // The stateful trellis walk — the expensive part of QTIP-style
+            // decode — runs once per column and feeds every lane.
+            let mut state = self.initial_states[j];
+            self.symbols.unpack_range(j * self.d_in, &mut syms);
+            acc.fill(0.0);
+            for (i, &sym) in syms.iter().enumerate() {
+                state = ((state << bits) | sym as u32) & mask;
+                let w = self.gen.value(state);
+                for (r, a) in acc.iter_mut().enumerate() {
+                    *a += xs.at(r, i) * w;
+                }
+            }
+            for (r, &a) in acc.iter().enumerate() {
+                *out.at_mut(r, j) = a * self.scales[j];
+            }
         }
     }
 
@@ -369,6 +496,83 @@ mod tests {
         let mut got = vec![0.0; 4];
         lin.matvec(&x, &mut got);
         testing::assert_close(&got, &want, 1e-3, 1e-3).unwrap();
+    }
+
+    /// Batched `matmul` must equal looping `matvec` over the rows EXACTLY
+    /// (bitwise): the continuous-batching engine relies on this to keep
+    /// greedy decode identical to the per-sequence path.
+    fn assert_matmul_is_looped_matvec(lin: &dyn LinearOp, b: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let mut xs = Mat::randn(b, lin.d_in(), 1.0, &mut rng);
+        for r in 0..b {
+            xs.row_mut(r)[r % lin.d_in()] = 0.0; // exercise zero-skip paths
+        }
+        // One all-zero lane exercises the all-lanes-zero row skip.
+        if b > 1 {
+            xs.row_mut(b - 1).fill(0.0);
+        }
+        let mut want = Mat::zeros(b, lin.d_out());
+        for r in 0..b {
+            lin.matvec(xs.row(r), want.row_mut(r));
+        }
+        let mut got = Mat::zeros(b, lin.d_out());
+        lin.matmul(&xs, &mut got);
+        assert_eq!(got.data, want.data, "batched matmul != looped matvec");
+    }
+
+    #[test]
+    fn uniform_matmul_exactly_matches_matvec() {
+        let mut rng = Rng::new(10);
+        let w = Mat::randn(24, 10, 1.0, &mut rng);
+        let grid = UniformGrid::fit(&w, 3);
+        let (_, codes) = round_all(&w, &grid);
+        let lin = UniformScalarLinear::new(&codes, &grid, 24, 10);
+        assert_matmul_is_looped_matvec(&lin, 5, 100);
+    }
+
+    #[test]
+    fn lut_matmul_exactly_matches_matvec_aligned_and_not() {
+        let mut rng = Rng::new(11);
+        // d_out = 8 at 4 bits: word-aligned rows (fused matvec path).
+        let w = Mat::randn(16, 8, 1.0, &mut rng);
+        let res = rtn_quantize(&w, 4);
+        let lin = LutLinear::new(&res.codes.unwrap(), res.codebooks.unwrap(), 4, 16, 8);
+        assert_matmul_is_looped_matvec(&lin, 6, 101);
+        // d_out = 10 at 3 bits: unaligned rows (staged matvec path).
+        let w = Mat::randn(12, 10, 1.0, &mut rng);
+        let res = rtn_quantize(&w, 3);
+        let lin = LutLinear::new(&res.codes.unwrap(), res.codebooks.unwrap(), 3, 12, 10);
+        assert_matmul_is_looped_matvec(&lin, 3, 102);
+    }
+
+    #[test]
+    fn vq_matmul_exactly_matches_matvec() {
+        let mut rng = Rng::new(12);
+        let (d_in, d_out, dim, k) = (12, 6, 2, 4);
+        let codebooks = Mat::randn(d_out, k * dim, 1.0, &mut rng);
+        let n_pts = d_in / dim;
+        let codes: Vec<u16> = (0..n_pts * d_out).map(|_| rng.below(k) as u16).collect();
+        let lin = VqLinear::new(&codes, codebooks, dim, 2, d_in, d_out);
+        assert_matmul_is_looped_matvec(&lin, 7, 103);
+    }
+
+    #[test]
+    fn trellis_matmul_exactly_matches_matvec() {
+        let mut rng = Rng::new(13);
+        let x_cal = Mat::randn(64, 32, 1.0, &mut rng);
+        let h = matmul_tn(&x_cal, &x_cal);
+        let w = Mat::randn(32, 4, 1.0, &mut rng);
+        let cfg = Trellis::new(2, crate::cfg::TrellisVariant::Hyb);
+        let (_, codes, gen) = trellis_quantize(&h, &w, &cfg).unwrap();
+        let lin = TrellisLinear::new(&codes, gen, cfg, 32);
+        assert_matmul_is_looped_matvec(&lin, 4, 104);
+    }
+
+    #[test]
+    fn fp32_matmul_exactly_matches_matvec() {
+        let mut rng = Rng::new(14);
+        let w = Mat::randn(20, 9, 1.0, &mut rng);
+        assert_matmul_is_looped_matvec(&w, 5, 105);
     }
 
     #[test]

@@ -7,6 +7,10 @@ use crate::tensor::Mat;
 
 use super::{LayerQuantizer, QuantResult};
 
+/// Bits charged per sparse outlier (fp16 value + 32-bit COO index), shared
+/// by the dense-and-sparse wrapper and the pipeline's avg-bits accounting.
+pub const SPARSE_OUTLIER_BITS: f64 = 48.0;
+
 /// COO sparse overlay.
 #[derive(Debug, Clone, Default)]
 pub struct SparseOverlay {
@@ -78,9 +82,8 @@ impl<Q: LayerQuantizer> LayerQuantizer for DenseAndSparse<Q> {
         let (dense, overlay) = split_outliers(w, None, self.frac);
         let mut res = self.inner.quantize(h, &dense)?;
         overlay.apply(&mut res.w_hat);
-        // Sparse storage cost: 16-bit value + 32-bit index per entry.
         let total = (w.rows * w.cols) as f64;
-        res.avg_bits += overlay.len() as f64 * 48.0 / total;
+        res.avg_bits += overlay.len() as f64 * SPARSE_OUTLIER_BITS / total;
         Ok(res)
     }
 

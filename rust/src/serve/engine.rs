@@ -1,13 +1,22 @@
-//! Batched decode loop + throughput/latency measurement (Table 2 rig).
+//! Serving engine facade + throughput/latency measurement (Table 2 rig).
 //!
-//! Requests are independent sequences; the engine decodes them on the
-//! worker pool (one sequence per worker at a time — the CPU analog of
-//! batched single-stream decoding) and reports aggregate tokens/s plus
-//! per-token latency percentiles.
+//! Two decode paths, guaranteed to emit bit-identical greedy tokens:
+//!
+//! * [`generate_batch`] / [`generate_scheduled`] — the continuous-batching
+//!   [`Scheduler`]: one batched model step per engine step, quantized weight
+//!   tiles decoded once per step and applied to every lane.
+//! * [`generate_per_sequence`] — the original per-sequence reference (one
+//!   worker thread per sequence, scalar decode), kept as the baseline the
+//!   batched path is benchmarked and regression-tested against.
 
+use anyhow::{ensure, Result};
+
+use crate::cfg::ServeConfig;
 use crate::coordinator::run_jobs;
 use crate::model::NativeModel;
-use crate::util::{percentile, Rng};
+use crate::util::{mean, percentile, Rng};
+
+use super::scheduler::{greedy_argmax, Scheduler};
 
 #[derive(Debug, Clone)]
 pub struct ServeStats {
@@ -17,23 +26,123 @@ pub struct ServeStats {
     /// Per-token decode latencies (ms), pooled across sequences.
     pub p50_ms: f64,
     pub p99_ms: f64,
+    /// Time-to-first-token across requests (ms).
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    /// Mean admission-queue wait across requests (ms).
+    pub queue_wait_ms: f64,
+    /// Mean active lanes per decode step (1.0 on the per-sequence path).
+    pub batch_occupancy: f64,
     pub weight_bytes: usize,
     pub kv_bytes: usize,
 }
 
-/// Greedy-decode `gen_tokens` continuation tokens for each prompt.
+/// Greedy-decode `gen_tokens` continuation tokens for each prompt through
+/// the continuous-batching scheduler. Compatibility wrapper: every prompt
+/// is admitted immediately (`max_batch = prompts.len()`). Errors on empty
+/// prompts — the old path silently greedy-decoded token 0 from zeroed
+/// logits when a prompt had no tokens to prefill.
 pub fn generate_batch(
     model: &NativeModel,
     prompts: &[Vec<u32>],
     gen_tokens: usize,
     workers: usize,
-) -> (Vec<Vec<u32>>, ServeStats) {
+) -> Result<(Vec<Vec<u32>>, ServeStats)> {
+    let cfg = ServeConfig {
+        max_batch: prompts.len().max(1),
+        max_queued: prompts.len().max(1),
+    };
+    generate_scheduled(model, prompts, gen_tokens, workers, cfg)
+}
+
+/// Scheduler path with explicit admission-control knobs (`max_batch`
+/// bounds the continuous-batch width; queued requests splice in as lanes
+/// free up).
+pub fn generate_scheduled(
+    model: &NativeModel,
+    prompts: &[Vec<u32>],
+    gen_tokens: usize,
+    workers: usize,
+    cfg: ServeConfig,
+) -> Result<(Vec<Vec<u32>>, ServeStats)> {
+    let t0 = std::time::Instant::now();
+    let mut sched = Scheduler::with_workers(model, cfg, workers);
+    let mut done = Vec::with_capacity(prompts.len());
+    for p in prompts {
+        // Back-pressure: when the admission queue is full, drain decode
+        // steps until a slot frees instead of erroring — `max_queued` is a
+        // buffering knob here, not a hard cap on the request set.
+        while sched.queued() >= sched.cfg.max_queued {
+            done.extend(sched.step());
+        }
+        sched.submit(p, gen_tokens)?;
+    }
+    done.extend(sched.run_to_completion());
+    done.sort_by_key(|f| f.id);
+    let wall = t0.elapsed().as_secs_f64();
+    ensure!(done.len() == prompts.len(), "scheduler dropped requests");
+
+    let mut outs = Vec::with_capacity(done.len());
+    let mut lats = Vec::new();
+    let mut ttfts = Vec::with_capacity(done.len());
+    let mut waits = Vec::with_capacity(done.len());
+    let mut kv_bytes = 0usize;
+    // run_to_completion returns submission order, which is prompt order.
+    for fr in done {
+        lats.extend_from_slice(&fr.metrics.token_ms);
+        ttfts.push(fr.metrics.ttft_ms);
+        waits.push(fr.metrics.queue_wait_ms);
+        kv_bytes += fr.metrics.kv_bytes;
+        outs.push(fr.tokens);
+    }
+    let total_tokens: usize = outs.iter().map(|o| o.len()).sum();
+    let stats = ServeStats {
+        total_tokens,
+        wall_secs: wall,
+        tok_per_sec: total_tokens as f64 / wall.max(1e-9),
+        p50_ms: percentile(&lats, 50.0),
+        p99_ms: percentile(&lats, 99.0),
+        ttft_p50_ms: percentile(&ttfts, 50.0),
+        ttft_p99_ms: percentile(&ttfts, 99.0),
+        queue_wait_ms: mean(&waits),
+        batch_occupancy: sched.mean_occupancy(),
+        weight_bytes: model.linear_storage_bytes(),
+        kv_bytes,
+    };
+    Ok((outs, stats))
+}
+
+/// Reference path: one worker thread per sequence, scalar decode, no
+/// batching — the CPU analog of batched single-stream decoding that the
+/// seed engine implemented. Kept for benchmarking the amortized-decode win
+/// and for bit-identity regression tests against the scheduler.
+pub fn generate_per_sequence(
+    model: &NativeModel,
+    prompts: &[Vec<u32>],
+    gen_tokens: usize,
+    workers: usize,
+) -> Result<(Vec<Vec<u32>>, ServeStats)> {
+    ensure!(
+        prompts.iter().all(|p| !p.is_empty()),
+        "empty prompt: prefill needs at least one (BOS) token"
+    );
+    // Mirror Scheduler::submit's validation so the two paths fail the same
+    // way instead of this one panicking inside the embedding lookup.
+    let vocab = model.cfg.vocab;
+    ensure!(
+        prompts.iter().flatten().all(|&t| (t as usize) < vocab),
+        "prompt token out of range for vocab {vocab}"
+    );
     let t0 = std::time::Instant::now();
     let jobs: Vec<_> = prompts
         .iter()
         .map(|prompt| {
             let prompt = prompt.clone();
             move || {
+                // TTFT is measured from batch start (t0), not worker
+                // pickup, so it includes waiting for a free worker thread —
+                // the same clock the scheduler path's submit-based TTFT
+                // uses, keeping the two paths' columns comparable.
                 let mut state = model.new_state();
                 let mut latencies = Vec::with_capacity(gen_tokens);
                 let mut logits = vec![0.0f32; model.cfg.vocab];
@@ -41,19 +150,18 @@ pub fn generate_batch(
                     logits = model.step(&mut state, t);
                 }
                 let mut out = Vec::with_capacity(gen_tokens);
-                for _ in 0..gen_tokens {
+                let mut ttft = 0.0f64;
+                for i in 0..gen_tokens {
                     let tt = std::time::Instant::now();
-                    let next = logits
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .map(|(i, _)| i as u32)
-                        .unwrap();
+                    let next = greedy_argmax(&logits);
                     out.push(next);
+                    if i == 0 {
+                        ttft = t0.elapsed().as_secs_f64() * 1000.0;
+                    }
                     logits = model.step(&mut state, next);
                     latencies.push(tt.elapsed().as_secs_f64() * 1000.0);
                 }
-                (out, latencies, state.kv_bytes())
+                (out, latencies, ttft, state.kv_bytes())
             }
         })
         .collect();
@@ -61,10 +169,12 @@ pub fn generate_batch(
     let wall = t0.elapsed().as_secs_f64();
     let mut outs = Vec::with_capacity(prompts.len());
     let mut lats = Vec::new();
+    let mut ttfts = Vec::new();
     let mut kv_bytes = 0usize;
-    for (o, l, kv) in results {
+    for (o, l, ttft, kv) in results {
         outs.push(o);
         lats.extend(l);
+        ttfts.push(ttft);
         kv_bytes += kv;
     }
     let total_tokens = gen_tokens * prompts.len();
@@ -74,10 +184,14 @@ pub fn generate_batch(
         tok_per_sec: total_tokens as f64 / wall.max(1e-9),
         p50_ms: percentile(&lats, 50.0),
         p99_ms: percentile(&lats, 99.0),
+        ttft_p50_ms: percentile(&ttfts, 50.0),
+        ttft_p99_ms: percentile(&ttfts, 99.0),
+        queue_wait_ms: 0.0,
+        batch_occupancy: 1.0,
         weight_bytes: model.linear_storage_bytes(),
         kv_bytes,
     };
-    (outs, stats)
+    Ok((outs, stats))
 }
 
 /// Deterministic random prompts for benchmarking.
@@ -104,21 +218,82 @@ mod tests {
     fn generates_requested_tokens() {
         let m = model();
         let prompts = random_prompts(m.cfg.vocab, 3, 4, 1);
-        let (outs, stats) = generate_batch(&m, &prompts, 5, 2);
+        let (outs, stats) = generate_batch(&m, &prompts, 5, 2).unwrap();
         assert_eq!(outs.len(), 3);
         assert!(outs.iter().all(|o| o.len() == 5));
         assert_eq!(stats.total_tokens, 15);
         assert!(stats.tok_per_sec > 0.0);
         assert!(stats.p99_ms >= stats.p50_ms);
         assert!(stats.kv_bytes > 0);
+        assert!(stats.batch_occupancy >= 1.0);
+        assert!(stats.ttft_p99_ms >= stats.ttft_p50_ms);
     }
 
     #[test]
     fn greedy_decode_is_deterministic() {
         let m = model();
         let prompts = random_prompts(m.cfg.vocab, 2, 6, 2);
-        let (a, _) = generate_batch(&m, &prompts, 4, 1);
-        let (b, _) = generate_batch(&m, &prompts, 4, 2);
+        let (a, _) = generate_batch(&m, &prompts, 4, 1).unwrap();
+        let (b, _) = generate_batch(&m, &prompts, 4, 2).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scheduler_path_matches_per_sequence_path_bitwise() {
+        let m = model();
+        let prompts = random_prompts(m.cfg.vocab, 4, 5, 3);
+        let (want, _) = generate_per_sequence(&m, &prompts, 7, 2).unwrap();
+        // Full-width batch.
+        let (got, _) = generate_batch(&m, &prompts, 7, 2).unwrap();
+        assert_eq!(got, want);
+        // Narrow batch: continuous splicing, still identical.
+        let cfg = ServeConfig { max_batch: 2, max_queued: 8 };
+        let (got2, stats) = generate_scheduled(&m, &prompts, 7, 1, cfg).unwrap();
+        assert_eq!(got2, want);
+        assert!(stats.batch_occupancy <= 2.0 + 1e-9);
+    }
+
+    #[test]
+    fn empty_prompts_are_rejected() {
+        let m = model();
+        let prompts = vec![vec![1u32, 2], vec![]];
+        assert!(generate_batch(&m, &prompts, 3, 1).is_err());
+        assert!(generate_per_sequence(&m, &prompts, 3, 1).is_err());
+    }
+
+    #[test]
+    fn zero_gen_tokens_has_sane_stats() {
+        let m = model();
+        let prompts = random_prompts(m.cfg.vocab, 2, 3, 5);
+        let (outs, stats) = generate_batch(&m, &prompts, 0, 1).unwrap();
+        assert!(outs.iter().all(|o| o.is_empty()));
+        assert_eq!(stats.total_tokens, 0);
+        assert_eq!(stats.tok_per_sec, 0.0);
+        assert!(stats.tok_per_sec.is_finite());
+        assert_eq!(stats.p50_ms, 0.0);
+        assert_eq!(stats.p99_ms, 0.0);
+    }
+
+    #[test]
+    fn request_set_larger_than_queue_capacity_is_still_served() {
+        // max_queued is a buffering knob: generate_scheduled drains decode
+        // steps when the queue fills instead of erroring.
+        let m = model();
+        let prompts = random_prompts(m.cfg.vocab, 6, 3, 7);
+        let (want, _) = generate_per_sequence(&m, &prompts, 3, 1).unwrap();
+        let cfg = ServeConfig { max_batch: 2, max_queued: 2 };
+        let (outs, _) = generate_scheduled(&m, &prompts, 3, 1, cfg).unwrap();
+        assert_eq!(outs, want);
+    }
+
+    #[test]
+    fn narrow_batch_reports_queue_wait() {
+        let m = model();
+        let prompts = random_prompts(m.cfg.vocab, 4, 3, 6);
+        let cfg = ServeConfig { max_batch: 1, max_queued: 8 };
+        let (_, stats) = generate_scheduled(&m, &prompts, 3, 1, cfg).unwrap();
+        // With a single lane, later requests must have waited in the queue.
+        assert!(stats.queue_wait_ms > 0.0);
+        assert!((stats.batch_occupancy - 1.0).abs() < 1e-9);
     }
 }

@@ -1,8 +1,34 @@
-//! Serving engine: batched token generation over quantized models with
-//! format-specific fused dequant kernels — the Table 2 measurement rig.
+//! Continuous-batching serving engine over quantized models — the Table 2
+//! measurement rig, grown into a request-scheduler architecture.
+//!
+//! Layers, bottom-up:
+//!
+//! * **Batched kernels** — every serving format ([`quant::formats`])
+//!   implements `LinearOp::matmul`, decoding each quantized weight tile
+//!   (packed codes, LUT gather, VQ centroids, trellis state walk) ONCE per
+//!   engine step and applying it to all batch lanes. This is the paper's
+//!   amortized-decode story: per-sequence decode re-pays the dequant cost
+//!   for every token of every sequence, batched decode pays it once.
+//! * **Batched model step** — `NativeModel::step_batch` advances a slab of
+//!   per-sequence `DecodeState`s (KV caches pooled in a `KvArena`) with
+//!   per-lane arithmetic bit-identical to the scalar `step`.
+//! * **[`scheduler::Scheduler`]** — admission queue (`max_queued`
+//!   back-pressure), continuous batching up to `max_batch` lanes (finished
+//!   sequences evicted mid-flight, queued requests spliced in at the next
+//!   step), and per-request metrics: queue wait, time-to-first-token, and
+//!   per-token latency percentiles.
+//! * **[`engine`]** — `generate_batch` (compatibility wrapper over the
+//!   scheduler, bit-identical greedy outputs), `generate_scheduled` (with
+//!   explicit knobs), and `generate_per_sequence` (the original
+//!   thread-per-sequence baseline, kept for benchmarking and regression).
+//! * **[`builder`]** — quantizes a checkpoint into any serving format.
 
 pub mod builder;
 pub mod engine;
+pub mod scheduler;
 
 pub use builder::{build_serving_model, ServeFormat};
-pub use engine::{generate_batch, ServeStats};
+pub use engine::{
+    generate_batch, generate_per_sequence, generate_scheduled, random_prompts, ServeStats,
+};
+pub use scheduler::{greedy_argmax, FinishedRequest, RequestMetrics, Scheduler};

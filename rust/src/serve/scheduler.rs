@@ -1,0 +1,410 @@
+//! Continuous-batching request scheduler.
+//!
+//! Requests enter an admission queue (`max_queued` back-pressure) and are
+//! spliced into decode lanes up to `max_batch` wide. Each engine step runs
+//! ONE batched model step over all active lanes ([`NativeModel::step_batch`],
+//! which decodes every quantized weight tile once per step), finished
+//! sequences are evicted mid-flight — their KV caches return to a
+//! [`KvArena`] — and queued requests take over the freed lanes at the next
+//! step. Per-lane arithmetic is bit-identical to the scalar
+//! [`NativeModel::step`] path, so greedy outputs match per-sequence decode
+//! exactly regardless of batch composition.
+//!
+//! Prefill runs the prompt (all but its last token) through scalar steps on
+//! the worker pool before a lane joins the batch; the last prompt token is
+//! the lane's first batched step, which produces its first logits.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::cfg::ServeConfig;
+use crate::coordinator::run_jobs;
+use crate::model::{BatchScratch, DecodeState, KvArena, NativeModel};
+use crate::util::percentile;
+
+/// Greedy sampling: index of the max logit. Ties resolve to the highest
+/// index (`Iterator::max_by` keeps the last maximum) — the same rule the
+/// per-sequence engine has always used, so both paths pick identical tokens.
+pub fn greedy_argmax(logits: &[f32]) -> u32 {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as u32)
+        .unwrap()
+}
+
+/// Per-request service metrics (milliseconds).
+#[derive(Debug, Clone)]
+pub struct RequestMetrics {
+    /// Time spent waiting in the admission queue before prefill started.
+    pub queue_wait_ms: f64,
+    /// Submit → first generated token.
+    pub ttft_ms: f64,
+    /// Per-token decode latency percentiles for this request.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// KV cache size at completion (before the cache returned to the arena).
+    pub kv_bytes: usize,
+    /// Raw per-token decode latencies, for cross-request pooling.
+    pub token_ms: Vec<f64>,
+}
+
+/// A completed request: generated tokens + metrics.
+#[derive(Debug, Clone)]
+pub struct FinishedRequest {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub metrics: RequestMetrics,
+}
+
+struct Queued {
+    id: u64,
+    prompt: Vec<u32>,
+    gen_tokens: usize,
+    submitted: f64,
+}
+
+struct Lane {
+    id: u64,
+    state: DecodeState,
+    /// Next token to feed (last prompt token, then each generated token).
+    pending: u32,
+    out: Vec<u32>,
+    gen_tokens: usize,
+    submitted: f64,
+    admitted: f64,
+    first_token: Option<f64>,
+    token_ms: Vec<f64>,
+}
+
+/// The continuous-batching engine: admission queue + decode lane slab.
+pub struct Scheduler<'m> {
+    model: &'m NativeModel,
+    pub cfg: ServeConfig,
+    /// Worker threads for prompt prefill (decode steps are batched, not
+    /// threaded).
+    prefill_workers: usize,
+    epoch: Instant,
+    queue: VecDeque<Queued>,
+    lanes: Vec<Lane>,
+    arena: KvArena,
+    scratch: BatchScratch,
+    next_id: u64,
+    steps: usize,
+    lane_steps: usize,
+}
+
+impl<'m> Scheduler<'m> {
+    pub fn new(model: &'m NativeModel, cfg: ServeConfig) -> Self {
+        Self::with_workers(model, cfg, 1)
+    }
+
+    pub fn with_workers(
+        model: &'m NativeModel,
+        mut cfg: ServeConfig,
+        prefill_workers: usize,
+    ) -> Self {
+        // Zero-width knobs are meaningless and (for max_queued) would make
+        // every submit fail; config file / CLI layers reject them, and the
+        // library layer clamps so a hand-built ServeConfig cannot wedge the
+        // engine.
+        cfg.max_batch = cfg.max_batch.max(1);
+        cfg.max_queued = cfg.max_queued.max(1);
+        Scheduler {
+            arena: model.new_arena(),
+            model,
+            cfg,
+            prefill_workers: prefill_workers.max(1),
+            epoch: Instant::now(),
+            queue: VecDeque::new(),
+            lanes: Vec::new(),
+            scratch: BatchScratch::new(),
+            next_id: 0,
+            steps: 0,
+            lane_steps: 0,
+        }
+    }
+
+    fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Enqueue a request. Errors on an empty prompt (prefill needs at least
+    /// one token — the old engine silently decoded token 0 from zeroed
+    /// logits), on out-of-vocab tokens, and when the queue is full.
+    pub fn submit(&mut self, prompt: &[u32], gen_tokens: usize) -> Result<u64> {
+        if prompt.is_empty() {
+            bail!("empty prompt: prefill needs at least one (BOS) token");
+        }
+        let vocab = self.model.cfg.vocab;
+        if let Some(&t) = prompt.iter().find(|&&t| t as usize >= vocab) {
+            bail!("prompt token {t} out of range for vocab {vocab}");
+        }
+        if self.queue.len() >= self.cfg.max_queued {
+            bail!(
+                "admission queue full ({} waiting, max_queued = {})",
+                self.queue.len(),
+                self.cfg.max_queued
+            );
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(Queued {
+            id,
+            prompt: prompt.to_vec(),
+            gen_tokens,
+            submitted: self.now(),
+        });
+        Ok(id)
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || !self.lanes.is_empty()
+    }
+
+    /// Mean number of active lanes per decode step (batch utilization).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.lane_steps as f64 / self.steps as f64
+        }
+    }
+
+    /// KV caches currently pooled in the arena (freed by evicted lanes).
+    pub fn pooled_kv(&self) -> usize {
+        self.arena.pooled()
+    }
+
+    /// Splice queued requests into free lanes and prefill their prompts.
+    fn admit(&mut self, finished: &mut Vec<FinishedRequest>) {
+        let mut fresh: Vec<(Queued, DecodeState)> = Vec::new();
+        while self.lanes.len() + fresh.len() < self.cfg.max_batch.max(1) {
+            let Some(qr) = self.queue.pop_front() else { break };
+            if qr.gen_tokens == 0 {
+                // Nothing to generate; completes at admission.
+                let now = self.now();
+                finished.push(FinishedRequest {
+                    id: qr.id,
+                    tokens: Vec::new(),
+                    metrics: RequestMetrics {
+                        queue_wait_ms: (now - qr.submitted) * 1e3,
+                        ttft_ms: 0.0,
+                        p50_ms: 0.0,
+                        p99_ms: 0.0,
+                        kv_bytes: 0,
+                        token_ms: Vec::new(),
+                    },
+                });
+                continue;
+            }
+            fresh.push((qr, self.arena.acquire()));
+        }
+        if fresh.is_empty() {
+            return;
+        }
+        let admitted = self.now();
+        let model = self.model;
+        // Per-lane scalar prefill (parallel across lanes) keeps arithmetic
+        // identical to the single-sequence path.
+        let jobs: Vec<_> = fresh
+            .into_iter()
+            .map(|(qr, mut state)| {
+                move || {
+                    for &t in &qr.prompt[..qr.prompt.len() - 1] {
+                        model.step(&mut state, t);
+                    }
+                    (qr, state)
+                }
+            })
+            .collect();
+        for (qr, state) in run_jobs(jobs, self.prefill_workers) {
+            let pending = *qr.prompt.last().unwrap();
+            self.lanes.push(Lane {
+                id: qr.id,
+                state,
+                pending,
+                out: Vec::new(),
+                gen_tokens: qr.gen_tokens,
+                submitted: qr.submitted,
+                admitted,
+                first_token: None,
+                token_ms: Vec::new(),
+            });
+        }
+    }
+
+    /// One engine step: admit queued requests, run one batched decode step
+    /// over all lanes, evict finished sequences. Returns the requests that
+    /// completed during this step.
+    pub fn step(&mut self) -> Vec<FinishedRequest> {
+        let mut finished = Vec::new();
+        self.admit(&mut finished);
+        if self.lanes.is_empty() {
+            return finished;
+        }
+        let tokens: Vec<u32> = self.lanes.iter().map(|l| l.pending).collect();
+        let t0 = Instant::now();
+        {
+            let mut states: Vec<&mut DecodeState> =
+                self.lanes.iter_mut().map(|l| &mut l.state).collect();
+            self.model.step_batch_with(&mut self.scratch, &mut states, &tokens);
+        }
+        self.steps += 1;
+        self.lane_steps += self.lanes.len();
+        for (r, lane) in self.lanes.iter_mut().enumerate() {
+            let next = greedy_argmax(self.scratch.logits().row(r));
+            lane.out.push(next);
+            lane.pending = next;
+        }
+        // Per-token latency covers step + sampling, matching what the
+        // per-sequence path times per token.
+        let step_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let now = self.now();
+        for lane in self.lanes.iter_mut() {
+            lane.token_ms.push(step_ms);
+            if lane.first_token.is_none() {
+                lane.first_token = Some(now);
+            }
+        }
+        // Evict finished lanes; their KV caches go back to the arena so the
+        // next admit reuses the allocations.
+        let mut r = 0;
+        while r < self.lanes.len() {
+            if self.lanes[r].out.len() >= self.lanes[r].gen_tokens {
+                let lane = self.lanes.swap_remove(r);
+                finished.push(self.finish(lane));
+            } else {
+                r += 1;
+            }
+        }
+        finished
+    }
+
+    fn finish(&mut self, lane: Lane) -> FinishedRequest {
+        let kv_bytes = lane.state.kv_bytes();
+        self.arena.release(lane.state);
+        let metrics = RequestMetrics {
+            queue_wait_ms: (lane.admitted - lane.submitted) * 1e3,
+            ttft_ms: (lane.first_token.unwrap_or(lane.admitted) - lane.submitted) * 1e3,
+            p50_ms: percentile(&lane.token_ms, 50.0),
+            p99_ms: percentile(&lane.token_ms, 99.0),
+            kv_bytes,
+            token_ms: lane.token_ms,
+        };
+        FinishedRequest { id: lane.id, tokens: lane.out, metrics }
+    }
+
+    /// Drain queue and lanes; finished requests are returned in submission
+    /// (id) order.
+    pub fn run_to_completion(&mut self) -> Vec<FinishedRequest> {
+        let mut done = Vec::new();
+        while self.has_work() {
+            done.extend(self.step());
+        }
+        done.sort_by_key(|f| f.id);
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::preset;
+    use crate::model::ParamStore;
+    use crate::util::Rng;
+
+    fn model() -> NativeModel {
+        let (cfg, _) = preset("tiny");
+        let ps = ParamStore::init(&cfg, &mut Rng::new(0));
+        NativeModel::from_params(&ps)
+    }
+
+    /// Scalar per-sequence greedy reference (the seed engine's loop).
+    fn reference_decode(m: &NativeModel, prompt: &[u32], gen: usize) -> Vec<u32> {
+        let mut state = m.new_state();
+        let mut logits = vec![0.0f32; m.cfg.vocab];
+        for &t in prompt {
+            logits = m.step(&mut state, t);
+        }
+        let mut out = Vec::with_capacity(gen);
+        for _ in 0..gen {
+            let next = greedy_argmax(&logits);
+            out.push(next);
+            logits = m.step(&mut state, next);
+        }
+        out
+    }
+
+    #[test]
+    fn continuous_batching_is_bit_identical_to_per_sequence() {
+        let m = model();
+        let mut rng = Rng::new(4);
+        // Mixed lengths force mid-flight eviction + splicing: with
+        // max_batch = 2 and 5 requests, lanes finish at different steps.
+        let prompts: Vec<Vec<u32>> = (0..5)
+            .map(|i| (0..(2 + i % 3)).map(|_| rng.below(m.cfg.vocab) as u32).collect())
+            .collect();
+        let gens = [6usize, 3, 9, 1, 5];
+
+        let mut sched = Scheduler::new(&m, ServeConfig { max_batch: 2, max_queued: 16 });
+        for (p, &g) in prompts.iter().zip(&gens) {
+            sched.submit(p, g).unwrap();
+        }
+        let done = sched.run_to_completion();
+        assert_eq!(done.len(), 5);
+        for (i, fr) in done.iter().enumerate() {
+            assert_eq!(fr.id, i as u64);
+            let want = reference_decode(&m, &prompts[i], gens[i]);
+            assert_eq!(fr.tokens, want, "request {i} diverged from scalar decode");
+        }
+        assert!(sched.mean_occupancy() > 1.0, "batching never engaged");
+        assert!(sched.pooled_kv() > 0, "finished lanes should refill the arena");
+    }
+
+    #[test]
+    fn admission_control_and_validation() {
+        let m = model();
+        let mut sched = Scheduler::new(&m, ServeConfig { max_batch: 1, max_queued: 2 });
+        assert!(sched.submit(&[], 4).is_err(), "empty prompt must be rejected");
+        let big = m.cfg.vocab as u32;
+        assert!(sched.submit(&[big], 4).is_err(), "out-of-vocab token must be rejected");
+        sched.submit(&[1], 2).unwrap();
+        sched.submit(&[2], 2).unwrap();
+        assert!(sched.submit(&[3], 2).is_err(), "queue beyond max_queued must refuse");
+        let done = sched.run_to_completion();
+        assert_eq!(done.len(), 2);
+        assert!(done.iter().all(|f| f.tokens.len() == 2));
+        assert!(done.iter().all(|f| f.metrics.queue_wait_ms >= 0.0));
+        assert!(done.iter().all(|f| f.metrics.ttft_ms >= f.metrics.queue_wait_ms));
+    }
+
+    #[test]
+    fn zero_gen_tokens_completes_without_decoding() {
+        let m = model();
+        let mut sched = Scheduler::new(&m, ServeConfig::default());
+        sched.submit(&[5, 6], 0).unwrap();
+        let done = sched.run_to_completion();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].tokens.is_empty());
+        assert_eq!(done[0].metrics.p50_ms, 0.0);
+        assert_eq!(done[0].metrics.kv_bytes, 0);
+    }
+
+    #[test]
+    fn greedy_argmax_breaks_ties_like_max_by() {
+        assert_eq!(greedy_argmax(&[0.0, 1.0, 1.0, 0.5]), 2);
+        assert_eq!(greedy_argmax(&[3.0]), 0);
+    }
+}

@@ -60,4 +60,30 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
     }
+
+    #[test]
+    fn percentile_empty_is_zero_for_any_p() {
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[], p), 0.0);
+        }
+    }
+
+    #[test]
+    fn percentile_single_element_is_that_element() {
+        // rank = p/100 * 0 = 0 for every p: no interpolation, no panic.
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[7.25], p), 7.25);
+        }
+    }
+
+    #[test]
+    fn percentile_is_monotone_in_p() {
+        let xs = [5.0, 1.0, 9.0, 3.0, 3.0];
+        let mut last = f64::NEG_INFINITY;
+        for p in 0..=100 {
+            let v = percentile(&xs, p as f64);
+            assert!(v >= last, "p={p}: {v} < {last}");
+            last = v;
+        }
+    }
 }

@@ -69,8 +69,8 @@ fn engine_scales_with_workers_and_stays_deterministic() {
     let prompts: Vec<Vec<u32>> = (0..4)
         .map(|_| (0..8).map(|_| rng.below(m.cfg.vocab) as u32).collect())
         .collect();
-    let (o1, s1) = generate_batch(&m, &prompts, 12, 1);
-    let (o2, s2) = generate_batch(&m, &prompts, 12, 4);
+    let (o1, s1) = generate_batch(&m, &prompts, 12, 1).unwrap();
+    let (o2, s2) = generate_batch(&m, &prompts, 12, 4).unwrap();
     assert_eq!(o1, o2, "worker count changed generations");
     assert_eq!(s1.total_tokens, 48);
     assert!(s2.tok_per_sec > 0.0);
@@ -84,8 +84,47 @@ fn quantized_generation_overlaps_fp_generation() {
     let fp = build_serving_model(&ps, None, ServeFormat::Fp32, 16).unwrap();
     let q = build_serving_model(&ps, None, ServeFormat::NonUniformScalar, 4).unwrap();
     let prompts = vec![vec![1u32, 2, 3, 4]];
-    let (a, _) = generate_batch(&fp, &prompts, 16, 1);
-    let (b, _) = generate_batch(&q, &prompts, 16, 1);
+    let (a, _) = generate_batch(&fp, &prompts, 16, 1).unwrap();
+    let (b, _) = generate_batch(&q, &prompts, 16, 1).unwrap();
     let agree = a[0].iter().zip(&b[0]).filter(|(x, y)| x == y).count();
     assert!(agree >= 6, "only {agree}/16 tokens agreed");
+}
+
+#[test]
+fn scheduler_is_bit_identical_to_per_sequence_on_quantized_models() {
+    // The continuous-batching scheduler must produce EXACTLY the greedy
+    // tokens of the per-sequence reference path, for every serving format,
+    // including when the batch is narrower than the request count
+    // (mid-flight eviction + splicing).
+    use guidedquant::cfg::ServeConfig;
+    use guidedquant::serve::{generate_per_sequence, generate_scheduled, random_prompts};
+
+    let ps = params();
+    for format in [
+        ServeFormat::Fp32,
+        ServeFormat::UniformScalar,
+        ServeFormat::NonUniformScalar,
+        ServeFormat::Vector,
+        ServeFormat::Trellis,
+    ] {
+        let m = build_serving_model(&ps, None, format, 4).unwrap();
+        let prompts = random_prompts(m.cfg.vocab, 5, 6, 9);
+        let (want, _) = generate_per_sequence(&m, &prompts, 8, 2).unwrap();
+        let (full, _) = generate_batch(&m, &prompts, 8, 2).unwrap();
+        assert_eq!(full, want, "{format:?}: full-width batch diverged");
+        let cfg = ServeConfig { max_batch: 2, max_queued: 8 };
+        let (narrow, stats) = generate_scheduled(&m, &prompts, 8, 1, cfg).unwrap();
+        assert_eq!(narrow, want, "{format:?}: narrow batch diverged");
+        assert!(stats.batch_occupancy > 1.0, "{format:?}: batching never engaged");
+    }
+}
+
+#[test]
+fn empty_prompts_are_rejected_by_both_paths() {
+    use guidedquant::serve::generate_per_sequence;
+    let ps = params();
+    let m = build_serving_model(&ps, None, ServeFormat::NonUniformScalar, 4).unwrap();
+    let prompts = vec![vec![]];
+    assert!(generate_batch(&m, &prompts, 4, 1).is_err());
+    assert!(generate_per_sequence(&m, &prompts, 4, 1).is_err());
 }

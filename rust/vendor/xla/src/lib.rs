@@ -1,0 +1,243 @@
+//! Offline stub of the `xla` crate (PJRT CPU bindings).
+//!
+//! The real `xla_extension` shared library is unavailable in this build
+//! environment, so this crate provides just enough surface for the
+//! workspace to compile and for the non-PJRT paths to run:
+//!
+//! * [`Literal`] is a real, in-memory implementation (vec1 / reshape /
+//!   scalar / to_vec / array_shape / tuples), so value round-trip code and
+//!   its tests work.
+//! * [`PjRtClient`] constructs, but [`PjRtClient::compile`] and HLO parsing
+//!   return a clear "PJRT unavailable" error. Callers already skip
+//!   gracefully when artifacts are missing, which is the only situation in
+//!   which compilation would be reached here.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} requires the native xla_extension runtime, which is not \
+         available in this offline build"
+    )))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    F16,
+    F32,
+    F64,
+}
+
+/// Element types the stub can hold in a [`Literal`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn write(data: &[Self]) -> Data;
+    fn read(data: &Data) -> Option<Vec<Self>>;
+}
+
+#[derive(Debug, Clone)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn write(data: &[f32]) -> Data {
+        Data::F32(data.to_vec())
+    }
+    fn read(data: &Data) -> Option<Vec<f32>> {
+        match data {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn write(data: &[i32]) -> Data {
+        Data::I32(data.to_vec())
+    }
+    fn read(data: &Data) -> Option<Vec<i32>> {
+        match data {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// In-memory tensor literal (row-major), mirroring the real crate's API.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::write(data) }
+    }
+
+    pub fn scalar(v: f32) -> Literal {
+        Literal { dims: Vec::new(), data: Data::F32(vec![v]) }
+    }
+
+    fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(v) => v.len(),
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.len() {
+            return Err(Error(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.data {
+            Data::F32(_) => ElementType::F32,
+            Data::I32(_) => ElementType::S32,
+            Data::Tuple(_) => return Err(Error("tuple literal has no array shape".into())),
+        };
+        Ok(ArrayShape { ty, dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::read(&self.data).ok_or_else(|| {
+            Error(format!("literal is not of the requested element type ({:?})", T::TY))
+        })
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            Data::Tuple(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { dims: vec![elems.len() as i64], data: Data::Tuple(elems) }
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("parsing HLO text")
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("fetching device buffers")
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("executing a PJRT program")
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compiling an XLA computation")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let shape = l.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn bad_reshape_rejected() {
+        assert!(Literal::vec1(&[1i32, 2, 3]).reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn client_is_inert() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "stub-cpu");
+        assert!(client.compile(&XlaComputation).is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
