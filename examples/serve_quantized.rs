@@ -48,7 +48,11 @@ fn main() -> anyhow::Result<()> {
         ServeFormat::Trellis,
     ] {
         let m = build_serving_model(&ps, None, format, bits)?;
-        let cfg = ServeConfig { max_batch: requests.max(1), max_queued: requests.max(1) };
+        let cfg = ServeConfig {
+            max_batch: requests.max(1),
+            max_queued: requests.max(1),
+            ..ServeConfig::default()
+        };
         let (_, stats) = generate_scheduled(&m, &prompts, gen_tokens, workers, cfg)?;
         table.row(vec![
             format.name().into(),
@@ -79,7 +83,11 @@ fn main() -> anyhow::Result<()> {
     ]);
     let mut width = 1usize;
     while width <= requests.max(1) {
-        let cfg = ServeConfig { max_batch: width, max_queued: requests.max(1) };
+        let cfg = ServeConfig {
+            max_batch: width,
+            max_queued: requests.max(1),
+            ..ServeConfig::default()
+        };
         let (_, s) = generate_scheduled(&m, &prompts, gen_tokens, workers, cfg)?;
         sweep.row(vec![
             width.to_string(),

@@ -1,16 +1,19 @@
 //! Micro-benchmarks of the hot paths: serving-format matvec kernels
-//! (the Table 2 inner loop), the native matmul, and the L1 xtsx Pallas
-//! kernel executed through its demo artifact vs a native Rust reduction.
+//! (the Table 2 inner loop), the native matmul, serial-vs-pool rows for
+//! the parallel kernels (tiled `matmul_tn` and the column-sharded batched
+//! decode step), and the L1 xtsx Pallas kernel executed through its demo
+//! artifact vs a native Rust reduction (skipped when no AOT artifacts are
+//! present, so CI smoke runs work from a bare checkout).
 
 #[path = "common.rs"]
 mod common;
 
 use guidedquant::bench::bench;
-use guidedquant::quant::grid::{round_all, rtn_quantize, UniformGrid};
+use guidedquant::model::forward::{matmul_col_sharded_with, LinearOp};
 use guidedquant::quant::formats::{LutLinear, UniformScalarLinear};
-use guidedquant::model::forward::LinearOp;
+use guidedquant::quant::grid::{round_all, rtn_quantize, UniformGrid};
 use guidedquant::runtime::Value;
-use guidedquant::tensor::ops::{matmul, matmul_tn};
+use guidedquant::tensor::ops::{matmul, matmul_tn, matmul_tn_with, num_threads};
 use guidedquant::tensor::Mat;
 use guidedquant::util::Rng;
 
@@ -40,8 +43,45 @@ fn main() {
     let flops = 2.0 * (d as f64).powi(3);
     println!("   ≈ {:.2} GFLOP/s", flops / r.mean_secs / 1e9);
 
-    // L1 kernel: artifact (Pallas xtsx lowered through interpret) vs native.
+    // -- parallel kernels: serial vs shared worker pool -------------------
+    let threads = num_threads();
+    println!("-- parallel kernels (pool width {threads}) --");
+    // Hessian accumulation: H = X^T X with a calibration-shaped X.
+    let n_cal = if fast { 256 } else { 1024 };
+    let xc = Mat::randn(n_cal, d, 1.0, &mut rng);
+    let tn_reps = if fast { 3 } else { 10 };
+    let s = bench("matmul_tn serial", 1, tn_reps, || matmul_tn_with(&xc, &xc, 1));
+    let p = bench("matmul_tn pool", 1, tn_reps, || matmul_tn(&xc, &xc));
+    println!("   matmul_tn speedup ×{:.2}", s.mean_secs / p.mean_secs.max(1e-12));
+
+    // Column-sharded batched decode step at batch 8 (the serve hot loop).
+    let batch = 8;
+    let xs = Mat::randn(batch, d, 1.0, &mut rng);
+    let mut outm = Mat::zeros(batch, d);
+    let dec_reps = if fast { 5 } else { 30 };
+    for (name, lin) in [
+        ("uniform-4bit", &uni as &dyn LinearOp),
+        ("lut-4bit", &lut as &dyn LinearOp),
+    ] {
+        let s = bench(&format!("batched decode {name} b={batch} serial"), 1, dec_reps, || {
+            matmul_col_sharded_with(lin, &xs, &mut outm, 1)
+        });
+        let p = bench(&format!("batched decode {name} b={batch} pool"), 1, dec_reps, || {
+            matmul_col_sharded_with(lin, &xs, &mut outm, threads)
+        });
+        println!(
+            "   batched decode {name} speedup ×{:.2}",
+            s.mean_secs / p.mean_secs.max(1e-12)
+        );
+    }
+
+    // L1 kernel: artifact (Pallas xtsx lowered through interpret) vs
+    // native. Needs AOT artifacts on disk; skipped otherwise.
     let model = common::bench_model();
+    if !std::path::Path::new("artifacts").join(&model).join("manifest.txt").exists() {
+        println!("-- L1 xtsx kernel: artifacts/{model} missing, section skipped --");
+        return;
+    }
     let s = common::setup(&model);
     let rt = &s.pipeline.rt;
     let bc = rt.manifest.batch;

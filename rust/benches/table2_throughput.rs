@@ -51,7 +51,7 @@ fn main() {
                 f(1.0, 2),
                 human_bytes(seq.weight_bytes as u64),
             ]);
-            let scfg = ServeConfig { max_batch: batch, max_queued: batch };
+            let scfg = ServeConfig { max_batch: batch, max_queued: batch, ..ServeConfig::default() };
             let (_, sch) = generate_scheduled(&m, &prompts, gen_tokens, workers, scfg).unwrap();
             table.row(vec![
                 format.name().into(),

@@ -170,15 +170,32 @@ pub struct ServeConfig {
     /// Admission control: maximum requests waiting in the queue before
     /// `submit` errors (back-pressure to the caller).
     pub max_queued: usize,
+    /// Engine worker threads (scalar-prefill fan-out; the batched kernels
+    /// size themselves from the shared pool). 0 = auto: follow
+    /// `tensor::ops::num_threads()` (and its `GQ_THREADS` override).
+    pub workers: usize,
+    /// Use the per-lane scalar prefill reference path instead of chunked
+    /// batched prefill — kept as the bit-identity regression baseline and
+    /// for benchmarking the chunked-prefill win.
+    pub scalar_prefill: bool,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_batch: 8, max_queued: 256 }
+        ServeConfig { max_batch: 8, max_queued: 256, workers: 0, scalar_prefill: false }
     }
 }
 
 impl ServeConfig {
+    /// Effective worker count: `workers`, or the shared-pool width when 0.
+    pub fn resolved_workers(&self) -> usize {
+        if self.workers == 0 {
+            crate::tensor::ops::num_threads()
+        } else {
+            self.workers
+        }
+    }
+
     pub fn from_toml(doc: &TomlDoc, section: &str) -> Result<Self> {
         let mut c = ServeConfig::default();
         if let Some(v) = doc.get_int(section, "max_batch") {
@@ -186,6 +203,12 @@ impl ServeConfig {
         }
         if let Some(v) = doc.get_int(section, "max_queued") {
             c.max_queued = v as usize;
+        }
+        if let Some(v) = doc.get_int(section, "workers") {
+            c.workers = v as usize; // 0 = auto
+        }
+        if let Some(v) = doc.get_bool(section, "scalar_prefill") {
+            c.scalar_prefill = v;
         }
         if c.max_batch == 0 {
             bail!("serve.max_batch must be at least 1");
@@ -210,6 +233,8 @@ pub struct PipelineConfig {
     /// Evaluation batches for perplexity.
     pub eval_batches: usize,
     /// Worker threads for the (layer, group) quantization job queue.
+    /// Defaults to `tensor::ops::num_threads()` — the shared-pool width,
+    /// including the `GQ_THREADS` env override.
     pub workers: usize,
     pub quant: QuantConfig,
     pub serve: ServeConfig,
@@ -225,7 +250,7 @@ impl Default for PipelineConfig {
             train_steps: 200,
             calib_batches: 8,
             eval_batches: 16,
-            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            workers: crate::tensor::ops::num_threads(),
             quant: QuantConfig::default(),
             serve: ServeConfig::default(),
             seed: 0,
@@ -317,5 +342,25 @@ mod tests {
         assert!(ServeConfig::from_toml(&doc, "serve").is_err());
         let c = ServeConfig::default();
         assert!(c.max_batch >= 1 && c.max_queued >= 1);
+    }
+
+    #[test]
+    fn serve_workers_default_to_pool_width() {
+        let c = ServeConfig::default();
+        assert_eq!(c.workers, 0, "0 = auto");
+        assert_eq!(c.resolved_workers(), crate::tensor::ops::num_threads());
+        assert!(!c.scalar_prefill);
+        let doc =
+            TomlDoc::parse("[serve]\nworkers = 3\nscalar_prefill = true\n").unwrap();
+        let c = ServeConfig::from_toml(&doc, "serve").unwrap();
+        assert_eq!(c.workers, 3);
+        assert_eq!(c.resolved_workers(), 3);
+        assert!(c.scalar_prefill);
+    }
+
+    #[test]
+    fn pipeline_workers_default_follows_num_threads() {
+        let c = PipelineConfig::default();
+        assert_eq!(c.workers, crate::tensor::ops::num_threads());
     }
 }

@@ -4,8 +4,9 @@
 //!   train → calib-stats (Hessian cache) → quantize (parallel
 //!   (layer, group) jobs) → eval → serve.
 //!
-//! The worker pool is a std::thread job queue (no tokio offline); metrics
-//! are collected per phase and surfaced in the pipeline report (Tables 8/9
+//! The worker pool is a persistent std::thread pool with parked workers
+//! (no tokio offline) shared by every hot loop in the crate; metrics are
+//! collected per phase and surfaced in the pipeline report (Tables 8/9
 //! analogs).
 
 pub mod metrics;
@@ -14,4 +15,4 @@ pub mod pool;
 
 pub use metrics::Metrics;
 pub use pipeline::{Pipeline, PipelineReport, QuantizedLayer};
-pub use pool::run_jobs;
+pub use pool::{global, run_jobs, WorkerPool};

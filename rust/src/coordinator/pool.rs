@@ -1,46 +1,294 @@
-//! Worker pool: run an ordered list of independent jobs across threads.
+//! Persistent worker pool: long-lived parked threads + scoped job batches.
 //!
-//! Jobs are claimed from a shared atomic cursor (work stealing without
-//! queues); results land in their original slots, so output order is
-//! deterministic regardless of scheduling. Panics in jobs propagate.
+//! The pool spawns its threads once (see [`global`]) and parks them on a
+//! condvar; every hot loop in the system — the batched serve kernels, the
+//! dense matmuls, the (layer, group) quantization jobs, prompt prefill —
+//! submits work here instead of paying a thread spawn per call.
+//!
+//! [`run_jobs`] keeps its original contract: an ordered list of independent
+//! jobs, results in their original slots, panics propagated. Jobs are
+//! claimed from a shared atomic cursor (work stealing without queues), and
+//! the *calling* thread always participates as one worker, so a pool of
+//! `n - 1` threads yields `n`-wide parallelism and a zero-thread pool
+//! degrades to serial execution.
+//!
+//! Jobs may borrow from the caller's stack even though the pool threads are
+//! long-lived: helper tasks are lifetime-erased before entering the shared
+//! queue, and `run_with` does not return until every helper has finished
+//! (each one counts down a per-run latch on completion, panic included).
+//! While waiting, the caller help-drains the shared queue — running either
+//! its own not-yet-started helpers (no-ops once the cursor is exhausted) or
+//! other runs' tasks — so nested `run_with` calls from inside pool jobs
+//! cannot deadlock even when every pool thread is busy.
 
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
 
-/// Run `jobs` on up to `workers` threads, preserving result order.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct TaskQueue {
+    tasks: VecDeque<Task>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    queue: Mutex<TaskQueue>,
+    available: Condvar,
+}
+
+/// Countdown latch: one count per helper task of a run.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch { remaining: Mutex::new(n), done: Condvar::new() }
+    }
+
+    fn count_down(&self) {
+        let mut n = self.remaining.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        *self.remaining.lock().unwrap() == 0
+    }
+
+    fn wait_timeout(&self, d: Duration) {
+        let n = self.remaining.lock().unwrap();
+        if *n > 0 {
+            drop(self.done.wait_timeout(n, d).unwrap());
+        }
+    }
+}
+
+/// Decrements its latch on drop, so a panicking task still releases its run.
+struct LatchGuard<'a>(&'a Latch);
+
+impl Drop for LatchGuard<'_> {
+    fn drop(&mut self) {
+        self.0.count_down();
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.tasks.pop_front() {
+                    break Some(t);
+                }
+                if q.shutdown {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        match task {
+            // Tasks catch their own job panics; this outer catch only keeps
+            // a stray panic from killing the worker thread.
+            Some(t) => drop(catch_unwind(AssertUnwindSafe(t))),
+            None => return,
+        }
+    }
+}
+
+/// A persistent pool of parked worker threads.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    threads: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `threads` parked workers (0 is valid: every run
+    /// executes serially on the calling thread).
+    pub fn new(threads: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(TaskQueue { tasks: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+        });
+        let handles = (0..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("gq-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, threads, handles }
+    }
+
+    /// Number of pool threads (parallel width is `threads() + 1`: the
+    /// caller always works too).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn try_pop(&self) -> Option<Task> {
+        self.shared.queue.lock().unwrap().tasks.pop_front()
+    }
+
+    fn push_tasks(&self, tasks: Vec<Task>) {
+        let mut q = self.shared.queue.lock().unwrap();
+        for t in tasks {
+            q.tasks.push_back(t);
+        }
+        drop(q);
+        self.shared.available.notify_all();
+    }
+
+    /// Run `jobs` at the pool's full width, preserving result order.
+    pub fn run<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        self.run_with(jobs, usize::MAX)
+    }
+
+    /// Run `jobs` with at most `workers` executing concurrently (the caller
+    /// counts as one). Results land in their original slots regardless of
+    /// scheduling; a panic in any job is re-raised here after the batch
+    /// drains.
+    pub fn run_with<T, F>(&self, jobs: Vec<F>, workers: usize) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = workers.clamp(1, n).min(self.threads + 1);
+        if workers <= 1 {
+            return jobs.into_iter().map(|j| j()).collect();
+        }
+        let cursor = AtomicUsize::new(0);
+        let jobs: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+        let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let panic_slot: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+        let drive = || loop {
+            let i = cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            let job = jobs[i].lock().unwrap().take().expect("job claimed twice");
+            match catch_unwind(AssertUnwindSafe(job)) {
+                Ok(out) => *results[i].lock().unwrap() = Some(out),
+                Err(p) => {
+                    let mut slot = panic_slot.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(p);
+                    }
+                }
+            }
+        };
+        let helpers = workers - 1;
+        let latch = Latch::new(helpers);
+        {
+            let mut tasks: Vec<Task> = Vec::with_capacity(helpers);
+            for _ in 0..helpers {
+                let drive_ref = &drive;
+                let latch_ref = &latch;
+                let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let _guard = LatchGuard(latch_ref);
+                    drive_ref();
+                });
+                // SAFETY: the task borrows only from this stack frame
+                // (drive's captures and the latch). The frame is not left
+                // until the latch confirms every helper finished — the
+                // LatchGuard counts down even on panic — so no borrow
+                // outlives its referent.
+                tasks.push(unsafe { erase_task(task) });
+            }
+            self.push_tasks(tasks);
+            drive();
+            // Help-drain while waiting: a popped task is either one of our
+            // own helpers (instant no-op now the cursor is exhausted) or
+            // another run's work — running either guarantees progress even
+            // when every pool thread is blocked inside a nested run.
+            while !latch.is_done() {
+                match self.try_pop() {
+                    // Same panic shield as worker_loop: a panicking foreign
+                    // task must not unwind out of this frame before our own
+                    // latch is done — queued helpers still borrow it.
+                    Some(t) => drop(catch_unwind(AssertUnwindSafe(t))),
+                    None => latch.wait_timeout(Duration::from_millis(1)),
+                }
+            }
+        }
+        // Every helper has finished (latch), so nothing borrows `drive` or
+        // the slot vectors any more.
+        drop(drive);
+        if let Some(p) = panic_slot.into_inner().unwrap() {
+            resume_unwind(p);
+        }
+        results
+            .into_iter()
+            .map(|r| r.into_inner().unwrap().expect("job did not complete"))
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Lifetime-erase a borrowing task so it can sit in the `'static` queue.
+///
+/// # Safety
+/// The caller must keep every borrow in `t` alive until the task has
+/// finished executing. `run_with` guarantees this by waiting on the per-run
+/// latch before leaving the frame the task borrows from.
+unsafe fn erase_task<'a>(t: Box<dyn FnOnce() + Send + 'a>) -> Task {
+    std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Task>(t)
+}
+
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The process-wide pool, created on first use with
+/// `tensor::ops::num_threads() - 1` workers (caller participation makes the
+/// effective width `num_threads()`; `GQ_THREADS=1` therefore forces fully
+/// serial execution).
+pub fn global() -> &'static WorkerPool {
+    GLOBAL.get_or_init(|| WorkerPool::new(crate::tensor::ops::num_threads().saturating_sub(1)))
+}
+
+/// Run `jobs` on up to `workers` threads of the shared pool, preserving
+/// result order. Thin wrapper over [`WorkerPool::run_with`] on [`global`];
+/// kept as the crate-wide entry point so callers never pay thread-spawn
+/// cost per call.
+///
+/// Unlike the old spawn-per-call implementation, concurrency is capped at
+/// the pool width (`num_threads()`, i.e. the `GQ_THREADS` override or
+/// `available_parallelism`) — asking for more workers than the machine has
+/// no longer oversubscribes it.
 pub fn run_jobs<T, F>(jobs: Vec<F>, workers: usize) -> Vec<T>
 where
     T: Send,
     F: FnOnce() -> T + Send,
 {
-    let n = jobs.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    let workers = workers.clamp(1, n);
-    if workers == 1 {
-        return jobs.into_iter().map(|j| j()).collect();
-    }
-    let cursor = AtomicUsize::new(0);
-    let jobs: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
-    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let job = jobs[i].lock().unwrap().take().expect("job taken twice");
-                let out = job();
-                *results[i].lock().unwrap() = Some(out);
-            });
-        }
-    });
-    results
-        .into_iter()
-        .map(|r| r.into_inner().unwrap().expect("job did not complete"))
-        .collect()
+    global().run_with(jobs, workers)
 }
 
 #[cfg(test)]
@@ -64,13 +312,63 @@ mod tests {
 
     #[test]
     fn actually_parallel() {
-        // With 4 workers, 4 sleeping jobs should finish in ~1 sleep.
+        // On a dedicated 4-thread pool, 4 sleeping jobs (caller + 3
+        // helpers at minimum) should finish in ~1 sleep.
+        let pool = WorkerPool::new(4);
         let t = std::time::Instant::now();
         let jobs: Vec<_> = (0..4)
-            .map(|_| move || std::thread::sleep(std::time::Duration::from_millis(50)))
+            .map(|_| move || std::thread::sleep(Duration::from_millis(50)))
             .collect();
-        run_jobs(jobs, 4);
+        pool.run(jobs);
         assert!(t.elapsed().as_millis() < 180, "{:?}", t.elapsed());
+    }
+
+    #[test]
+    fn pool_threads_persist_across_runs() {
+        let pool = WorkerPool::new(2);
+        for round in 0..10 {
+            let jobs: Vec<_> = (0..8).map(|i| move || i + round).collect();
+            let out = pool.run(jobs);
+            assert_eq!(out, (0..8).map(|i| i + round).collect::<Vec<_>>());
+        }
+        assert_eq!(pool.threads(), 2);
+    }
+
+    #[test]
+    fn zero_thread_pool_runs_serially() {
+        let pool = WorkerPool::new(0);
+        let jobs: Vec<_> = (0..5).map(|i| move || i * i).collect();
+        assert_eq!(pool.run(jobs), vec![0, 1, 4, 9, 16]);
+    }
+
+    #[test]
+    fn nested_runs_do_not_deadlock() {
+        // Every outer job itself fans out on the same (tiny) pool: inner
+        // runs must complete even with all pool threads busy in outer jobs.
+        let pool = WorkerPool::new(2);
+        let jobs: Vec<_> = (0..6)
+            .map(|i| {
+                let pool = &pool;
+                move || {
+                    let inner: Vec<_> = (0..4).map(|j| move || i * 10 + j).collect();
+                    pool.run(inner).iter().sum::<i32>()
+                }
+            })
+            .collect();
+        let out = pool.run(jobs);
+        let want: Vec<i32> = (0..6).map(|i| (0..4).map(|j| i * 10 + j).sum()).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn borrowed_state_is_safe() {
+        let data: Vec<u64> = (0..100).collect();
+        let jobs: Vec<_> = data
+            .chunks(7)
+            .map(|chunk| move || chunk.iter().sum::<u64>())
+            .collect();
+        let total: u64 = run_jobs(jobs, 4).iter().sum();
+        assert_eq!(total, data.iter().sum::<u64>());
     }
 
     #[test]
@@ -79,5 +377,16 @@ mod tests {
         let jobs: Vec<Box<dyn FnOnce() -> i32 + Send>> =
             vec![Box::new(|| 1), Box::new(|| panic!("boom"))];
         run_jobs(jobs, 2);
+    }
+
+    #[test]
+    fn panic_does_not_poison_the_pool() {
+        let pool = WorkerPool::new(2);
+        let bad: Vec<Box<dyn FnOnce() -> i32 + Send>> =
+            vec![Box::new(|| panic!("boom")), Box::new(|| 2)];
+        assert!(catch_unwind(AssertUnwindSafe(|| pool.run(bad))).is_err());
+        // The pool stays usable after a panicking batch.
+        let jobs: Vec<_> = (0..4).map(|i| move || i).collect();
+        assert_eq!(pool.run(jobs), vec![0, 1, 2, 3]);
     }
 }

@@ -34,6 +34,9 @@ const USAGE: &str = "usage: gq <pipeline|train|quantize|eval|serve|fisher|info> 
                 --gen-tokens N --prompt-len N --max-batch N --max-queued N
                 --per-seq (thread-per-sequence baseline instead of the
                 continuous-batching scheduler)
+                --scalar-prefill (per-lane scalar prefill instead of
+                chunked batched prefill)
+  env:          GQ_THREADS=N caps the shared worker pool (1 = serial)
   train:        --steps N --save FILE
   eval/quantize: --load FILE [--save FILE] --artifact fwd_loss|fwd_loss_qa4kv4|...";
 
@@ -54,6 +57,13 @@ fn pipeline_config(args: &Args) -> Result<PipelineConfig> {
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     cfg.serve.max_batch = args.get_usize_at_least("max-batch", cfg.serve.max_batch, 1)?;
     cfg.serve.max_queued = args.get_usize_at_least("max-queued", cfg.serve.max_queued, 1)?;
+    if args.has("workers") {
+        // An explicit --workers drives the serve engine too.
+        cfg.serve.workers = cfg.workers;
+    }
+    if args.switch("scalar-prefill") {
+        cfg.serve.scalar_prefill = true;
+    }
     cfg.quant = quant_config(args, cfg.quant)?;
     Ok(cfg)
 }

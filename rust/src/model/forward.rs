@@ -22,10 +22,11 @@ pub trait LinearOp: Send + Sync {
     /// `xs: [batch, d_in]`, `out: [batch, d_out]`, both overwritten row-major.
     ///
     /// The default loops [`LinearOp::matvec`]; quantized serving formats
-    /// override it to decode each weight tile ONCE per step and apply it to
-    /// all batch lanes. Implementations must keep per-lane arithmetic (op
-    /// order included) identical to `matvec` so batched greedy decode is
-    /// bit-identical to the per-sequence path.
+    /// override it to decode each weight tile ONCE per step, apply it to
+    /// all batch lanes, and shard the output columns across the worker pool
+    /// (see [`matmul_col_sharded`]). Implementations must keep per-lane
+    /// arithmetic (op order included) identical to `matvec` so batched
+    /// greedy decode is bit-identical to the per-sequence path.
     fn matmul(&self, xs: &Mat, out: &mut Mat) {
         debug_assert_eq!(xs.cols, self.d_in());
         debug_assert_eq!(out.cols, self.d_out());
@@ -34,8 +35,97 @@ pub trait LinearOp: Send + Sync {
             self.matvec(xs.row(r), out.row_mut(r));
         }
     }
+    /// Columns `[lo, hi)` of the batched product:
+    /// `out.row(r) = xs.row(r) @ W[:, lo..hi]` with `out: [batch, hi-lo]`,
+    /// overwritten. Per-output-element arithmetic (accumulation order
+    /// included) must match `matvec` exactly — the column-sharded batched
+    /// path relies on this for bit-identical greedy decode at ANY shard
+    /// count. The default loops `matvec` and copies the column window;
+    /// serving formats override it with a windowed decode-once kernel.
+    fn matmul_cols(&self, xs: &Mat, out: &mut Mat, lo: usize, hi: usize) {
+        debug_assert_eq!(xs.cols, self.d_in());
+        debug_assert_eq!(out.cols, hi - lo);
+        debug_assert_eq!(xs.rows, out.rows);
+        let mut full = vec![0.0f32; self.d_out()];
+        for r in 0..xs.rows {
+            self.matvec(xs.row(r), &mut full);
+            out.row_mut(r).copy_from_slice(&full[lo..hi]);
+        }
+    }
     /// Bytes of weight storage (for the Table 2 bits/OOM accounting).
     fn storage_bytes(&self) -> usize;
+}
+
+/// Minimum `batch * d_in * d_out` before a batched product is sharded
+/// across output columns on the worker pool.
+const SHARD_MIN_WORK: usize = 1 << 16;
+
+/// Drive a batched linear through column shards on the shared worker pool.
+///
+/// Each shard decodes its own weight tiles once and serves every batch
+/// lane, so the result is bit-identical to the serial batched kernel (and
+/// per lane to `matvec`) at any shard count: each output element is
+/// produced by exactly one shard with unchanged accumulation order. Small
+/// products stay serial.
+pub fn matmul_col_sharded(op: &dyn LinearOp, xs: &Mat, out: &mut Mat) {
+    let d_out = op.d_out();
+    let work = xs.rows * op.d_in() * d_out;
+    let shards = if work < SHARD_MIN_WORK {
+        1
+    } else {
+        crate::tensor::ops::num_threads().min(d_out.max(1))
+    };
+    matmul_col_sharded_with(op, xs, out, shards);
+}
+
+/// [`matmul_col_sharded`] with an explicit shard count (1 = the serial
+/// whole-width kernel). Exposed for bit-identity tests and the
+/// serial-vs-pool bench rows; shard counts that do not divide `d_out` are
+/// fine (the last shard is narrower).
+pub fn matmul_col_sharded_with(op: &dyn LinearOp, xs: &Mat, out: &mut Mat, shards: usize) {
+    debug_assert_eq!(xs.cols, op.d_in());
+    debug_assert_eq!(out.cols, op.d_out());
+    debug_assert_eq!(xs.rows, out.rows);
+    let d_out = op.d_out();
+    let shards = shards.clamp(1, d_out.max(1));
+    if shards <= 1 {
+        op.matmul_cols(xs, out, 0, d_out);
+        return;
+    }
+    let b = xs.rows;
+    // Align shard boundaries to the packed-code word (32 covers every
+    // power-of-two bit width's per-word count), so each shard's
+    // `unpack_range` start stays on the word-at-a-time fast path whenever
+    // the serial whole-width kernel's would. Only applied when shards are
+    // at least a word-group wide — narrow shards (tiny layers, many
+    // threads) keep the exact split. Partitioning never changes values,
+    // only which shard computes which column.
+    const COL_ALIGN: usize = 32;
+    let mut per = d_out.div_ceil(shards);
+    if per >= COL_ALIGN {
+        per = per.div_ceil(COL_ALIGN) * COL_ALIGN;
+    }
+    let mut ranges = Vec::with_capacity(shards);
+    let mut lo = 0;
+    while lo < d_out {
+        let hi = (lo + per).min(d_out);
+        ranges.push((lo, hi));
+        lo = hi;
+    }
+    let n_shards = ranges.len();
+    let jobs: Vec<_> = ranges
+        .into_iter()
+        .map(|(lo, hi)| {
+            move || {
+                let mut sub = Mat::zeros(b, hi - lo);
+                op.matmul_cols(xs, &mut sub, lo, hi);
+                (lo, sub)
+            }
+        })
+        .collect();
+    for (lo, sub) in crate::coordinator::run_jobs(jobs, n_shards) {
+        out.paste_cols(lo, &sub);
+    }
 }
 
 impl LinearOp for Mat {
@@ -63,14 +153,18 @@ impl LinearOp for Mat {
     }
 
     fn matmul(&self, xs: &Mat, out: &mut Mat) {
+        matmul_col_sharded(self, xs, out);
+    }
+
+    fn matmul_cols(&self, xs: &Mat, out: &mut Mat, lo: usize, hi: usize) {
         debug_assert_eq!(xs.cols, self.rows);
-        debug_assert_eq!(out.cols, self.cols);
+        debug_assert_eq!(out.cols, hi - lo);
         debug_assert_eq!(xs.rows, out.rows);
         out.data.fill(0.0);
         // Weight row i is read once and applied to every lane (per-lane op
         // order matches `matvec`: i ascending, j ascending, zeros skipped).
         for i in 0..self.rows {
-            let wrow = self.row(i);
+            let wrow = &self.row(i)[lo..hi];
             for r in 0..xs.rows {
                 let xi = xs.at(r, i);
                 if xi == 0.0 {
@@ -791,6 +885,77 @@ mod tests {
         let mut got = Mat::zeros(4, 10);
         LinearOp::matmul(&w, &xs, &mut got);
         assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn col_sharded_matmul_is_bit_identical_at_any_shard_count() {
+        let mut rng = Rng::new(10);
+        let w = Mat::randn(24, 10, 1.0, &mut rng);
+        let xs = Mat::randn(5, 24, 1.0, &mut rng);
+        let mut want = Mat::zeros(5, 10);
+        for r in 0..5 {
+            LinearOp::matvec(&w, xs.row(r), want.row_mut(r));
+        }
+        // Includes shard counts that do not divide d_out = 10, and counts
+        // above d_out (clamped to one column per shard).
+        for shards in [1usize, 2, 3, 4, 7, 10, 13] {
+            let mut got = Mat::zeros(5, 10);
+            matmul_col_sharded_with(&w, &xs, &mut got, shards);
+            assert_eq!(got.data, want.data, "shards={shards}");
+        }
+        // Wide output exercises the word-aligned boundary branch
+        // (per >= 32 rounds up to a multiple of 32; 96/2 -> 64 + 32).
+        let w = Mat::randn(16, 96, 1.0, &mut rng);
+        let xs = Mat::randn(3, 16, 1.0, &mut rng);
+        let mut want = Mat::zeros(3, 96);
+        for r in 0..3 {
+            LinearOp::matvec(&w, xs.row(r), want.row_mut(r));
+        }
+        for shards in [2usize, 3, 5] {
+            let mut got = Mat::zeros(3, 96);
+            matmul_col_sharded_with(&w, &xs, &mut got, shards);
+            assert_eq!(got.data, want.data, "wide shards={shards}");
+        }
+    }
+
+    #[test]
+    fn default_matmul_cols_window_matches_matvec() {
+        // A LinearOp that only provides matvec exercises the trait-default
+        // matmul_cols (full matvec + window copy); it must agree bitwise
+        // with Mat's windowed override, shard-by-shard.
+        struct MatvecOnly(Mat);
+        impl LinearOp for MatvecOnly {
+            fn d_in(&self) -> usize {
+                self.0.rows
+            }
+            fn d_out(&self) -> usize {
+                self.0.cols
+            }
+            fn matvec(&self, x: &[f32], out: &mut [f32]) {
+                LinearOp::matvec(&self.0, x, out)
+            }
+            fn storage_bytes(&self) -> usize {
+                LinearOp::storage_bytes(&self.0)
+            }
+        }
+        let mut rng = Rng::new(11);
+        let w = Mat::randn(16, 9, 1.0, &mut rng);
+        let xs = Mat::randn(3, 16, 1.0, &mut rng);
+        let wrapped = MatvecOnly(w.clone());
+        let (lo, hi) = (2usize, 7usize);
+        let mut want = Mat::zeros(3, hi - lo);
+        LinearOp::matmul_cols(&w, &xs, &mut want, lo, hi);
+        let mut got = Mat::zeros(3, hi - lo);
+        wrapped.matmul_cols(&xs, &mut got, lo, hi);
+        assert_eq!(got.data, want.data);
+        // And the sharded driver over the matvec-only op stays bit-exact.
+        let mut full_want = Mat::zeros(3, 9);
+        for r in 0..3 {
+            LinearOp::matvec(&w, xs.row(r), full_want.row_mut(r));
+        }
+        let mut full_got = Mat::zeros(3, 9);
+        matmul_col_sharded_with(&wrapped, &xs, &mut full_got, 4);
+        assert_eq!(full_got.data, full_want.data);
     }
 
     #[test]

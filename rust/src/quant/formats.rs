@@ -10,7 +10,7 @@
 //!                             per weight → the paper's vector-quant decode
 //!                             overhead shows up honestly).
 
-use crate::model::forward::LinearOp;
+use crate::model::forward::{matmul_col_sharded, LinearOp};
 use crate::tensor::Mat;
 
 use super::grid::UniformGrid;
@@ -74,15 +74,19 @@ impl LinearOp for UniformScalarLinear {
     }
 
     fn matmul(&self, xs: &Mat, out: &mut Mat) {
+        matmul_col_sharded(self, xs, out);
+    }
+
+    fn matmul_cols(&self, xs: &Mat, out: &mut Mat, lo: usize, hi: usize) {
         debug_assert_eq!(xs.cols, self.d_in);
-        debug_assert_eq!(out.cols, self.d_out);
+        debug_assert_eq!(out.cols, hi - lo);
         debug_assert_eq!(xs.rows, out.rows);
         let b = xs.rows;
         out.data.fill(0.0);
-        let mut row = vec![0u16; self.d_out];
+        let mut row = vec![0u16; hi - lo];
         let mut xsum = vec![0.0f32; b];
         for i in 0..self.d_in {
-            // Unpack code row i once for the whole batch.
+            // Unpack this shard's slice of code row i once for the batch.
             let mut any = false;
             for (r, s) in xsum.iter_mut().enumerate() {
                 let xi = xs.at(r, i);
@@ -92,7 +96,7 @@ impl LinearOp for UniformScalarLinear {
             if !any {
                 continue;
             }
-            self.codes.unpack_range(i * self.d_out, &mut row);
+            self.codes.unpack_range(i * self.d_out + lo, &mut row);
             for r in 0..b {
                 let xi = xs.at(r, i);
                 if xi == 0.0 {
@@ -105,8 +109,8 @@ impl LinearOp for UniformScalarLinear {
         }
         for r in 0..b {
             let orow = out.row_mut(r);
-            for j in 0..self.d_out {
-                orow[j] = orow[j] * self.scale[j] + xsum[r] * self.zero[j];
+            for (jj, o) in orow.iter_mut().enumerate() {
+                *o = *o * self.scale[lo + jj] + xsum[r] * self.zero[lo + jj];
             }
         }
     }
@@ -190,24 +194,29 @@ impl LinearOp for LutLinear {
     }
 
     fn matmul(&self, xs: &Mat, out: &mut Mat) {
+        matmul_col_sharded(self, xs, out);
+    }
+
+    fn matmul_cols(&self, xs: &Mat, out: &mut Mat, lo: usize, hi: usize) {
         debug_assert_eq!(xs.cols, self.d_in);
-        debug_assert_eq!(out.cols, self.d_out);
+        debug_assert_eq!(out.cols, hi - lo);
         debug_assert_eq!(xs.rows, out.rows);
         let b = xs.rows;
         out.data.fill(0.0);
         let m = self.codebooks.cols;
         let cb = &self.codebooks.data;
-        let mut row = vec![0u16; self.d_out];
-        let mut wrow = vec![0.0f32; self.d_out];
+        let mut row = vec![0u16; hi - lo];
+        let mut wrow = vec![0.0f32; hi - lo];
         for i in 0..self.d_in {
             if (0..b).all(|r| xs.at(r, i) == 0.0) {
                 continue;
             }
-            // Gather weight row i through the LUT once, then FMA it into
-            // every lane — the decode cost is amortized across the batch.
-            self.codes.unpack_range(i * self.d_out, &mut row);
-            for (j, w) in wrow.iter_mut().enumerate() {
-                *w = cb[j * m + row[j] as usize];
+            // Gather this shard's slice of weight row i through the LUT
+            // once, then FMA it into every lane — the decode cost is
+            // amortized across the batch.
+            self.codes.unpack_range(i * self.d_out + lo, &mut row);
+            for (jj, w) in wrow.iter_mut().enumerate() {
+                *w = cb[(lo + jj) * m + row[jj] as usize];
             }
             for r in 0..b {
                 let xi = xs.at(r, i);
@@ -293,21 +302,26 @@ impl LinearOp for VqLinear {
     }
 
     fn matmul(&self, xs: &Mat, out: &mut Mat) {
+        matmul_col_sharded(self, xs, out);
+    }
+
+    fn matmul_cols(&self, xs: &Mat, out: &mut Mat, lo: usize, hi: usize) {
         debug_assert_eq!(xs.cols, self.d_in);
-        debug_assert_eq!(out.cols, self.d_out);
+        debug_assert_eq!(out.cols, hi - lo);
         debug_assert_eq!(xs.rows, out.rows);
         let b = xs.rows;
         out.data.fill(0.0);
         let dim = self.dim;
         let n_pts = self.d_in / dim;
         let cbw = self.codebooks.cols;
-        let mut row = vec![0u16; self.d_out];
+        let mut row = vec![0u16; hi - lo];
         for p in 0..n_pts {
-            // One code unpack + one centroid gather per (point, channel),
-            // shared by all lanes.
-            self.codes.unpack_range(p * self.d_out, &mut row);
-            for j in 0..self.d_out {
-                let c = row[j] as usize * dim;
+            // One code unpack + one centroid gather per (point, channel)
+            // of this shard's column window, shared by all lanes.
+            self.codes.unpack_range(p * self.d_out + lo, &mut row);
+            for (jj, &code) in row.iter().enumerate() {
+                let j = lo + jj;
+                let c = code as usize * dim;
                 let cent = &self.codebooks.data[j * cbw + c..j * cbw + c + dim];
                 for r in 0..b {
                     let xsr = &xs.row(r)[p * dim..(p + 1) * dim];
@@ -315,7 +329,7 @@ impl LinearOp for VqLinear {
                     for t in 0..dim {
                         acc += xsr[t] * cent[t];
                     }
-                    *out.at_mut(r, j) += acc;
+                    *out.at_mut(r, jj) += acc;
                 }
             }
         }
@@ -388,17 +402,22 @@ impl LinearOp for TrellisLinear {
     }
 
     fn matmul(&self, xs: &Mat, out: &mut Mat) {
+        matmul_col_sharded(self, xs, out);
+    }
+
+    fn matmul_cols(&self, xs: &Mat, out: &mut Mat, lo: usize, hi: usize) {
         debug_assert_eq!(xs.cols, self.d_in);
-        debug_assert_eq!(out.cols, self.d_out);
+        debug_assert_eq!(out.cols, hi - lo);
         debug_assert_eq!(xs.rows, out.rows);
         let b = xs.rows;
         let mask = (1u32 << self.cfg.state_bits) - 1;
         let bits = self.cfg.bits;
         let mut syms = vec![0u16; self.d_in];
         let mut acc = vec![0.0f32; b];
-        for j in 0..self.d_out {
+        for j in lo..hi {
             // The stateful trellis walk — the expensive part of QTIP-style
-            // decode — runs once per column and feeds every lane.
+            // decode — runs once per column and feeds every lane. Columns
+            // are decode-independent, so the window shards cleanly.
             let mut state = self.initial_states[j];
             self.symbols.unpack_range(j * self.d_in, &mut syms);
             acc.fill(0.0);
@@ -410,7 +429,7 @@ impl LinearOp for TrellisLinear {
                 }
             }
             for (r, &a) in acc.iter().enumerate() {
-                *out.at_mut(r, j) = a * self.scales[j];
+                *out.at_mut(r, j - lo) = a * self.scales[j];
             }
         }
     }
@@ -499,9 +518,12 @@ mod tests {
     }
 
     /// Batched `matmul` must equal looping `matvec` over the rows EXACTLY
-    /// (bitwise): the continuous-batching engine relies on this to keep
-    /// greedy decode identical to the per-sequence path.
+    /// (bitwise) — at every column-shard count, including ones that do not
+    /// divide d_out: the continuous-batching engine relies on this to keep
+    /// greedy decode identical to the per-sequence path no matter how the
+    /// worker pool splits the output channels.
     fn assert_matmul_is_looped_matvec(lin: &dyn LinearOp, b: usize, seed: u64) {
+        use crate::model::forward::matmul_col_sharded_with;
         let mut rng = Rng::new(seed);
         let mut xs = Mat::randn(b, lin.d_in(), 1.0, &mut rng);
         for r in 0..b {
@@ -518,6 +540,15 @@ mod tests {
         let mut got = Mat::zeros(b, lin.d_out());
         lin.matmul(&xs, &mut got);
         assert_eq!(got.data, want.data, "batched matmul != looped matvec");
+        // 3 never divides the test d_outs evenly; d_out + 1 over-shards.
+        for shards in [1usize, 2, 3, lin.d_out(), lin.d_out() + 1] {
+            let mut sharded = Mat::zeros(b, lin.d_out());
+            matmul_col_sharded_with(lin, &xs, &mut sharded, shards);
+            assert_eq!(
+                sharded.data, want.data,
+                "column-sharded matmul (shards={shards}) != looped matvec"
+            );
+        }
     }
 
     #[test]

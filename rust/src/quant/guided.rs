@@ -32,26 +32,52 @@ pub fn group_ranges(d_out: usize, g: usize) -> Vec<(usize, usize)> {
 /// Apply Q per group with per-group Hessians; reassemble Ŵ/codes/codebooks.
 ///
 /// `hessians` must have one Mat (d_in × d_in) per group; pass a single
-/// Hessian for the unguided baseline.
+/// Hessian for the unguided baseline. The g group solves (Algorithm 1's
+/// loop body) are independent and fan out across the shared worker pool.
 pub fn guided_quantize(
     q: &dyn LayerQuantizer,
     hessians: &[Mat],
     w: &Mat,
 ) -> Result<QuantResult> {
+    guided_quantize_with(q, hessians, w, crate::tensor::ops::num_threads())
+}
+
+/// [`guided_quantize`] with an explicit worker count (1 = the serial group
+/// loop). Group solves are pure functions of (H̄_k, W_k) and reassembly is
+/// order-preserving, so output is bit-identical at any worker count;
+/// exposed for the bit-identity regression tests.
+pub fn guided_quantize_with(
+    q: &dyn LayerQuantizer,
+    hessians: &[Mat],
+    w: &Mat,
+    workers: usize,
+) -> Result<QuantResult> {
     let g = hessians.len();
     anyhow::ensure!(g >= 1, "need at least one Hessian");
     let ranges = group_ranges(w.cols, g);
+    let jobs: Vec<_> = ranges
+        .iter()
+        .enumerate()
+        .map(|(k, &(lo, hi))| {
+            let h = &hessians[k];
+            move || -> Result<QuantResult> {
+                let wg = w.slice_cols(lo, hi);
+                let res = q.quantize(h, &wg)?;
+                anyhow::ensure!(
+                    res.w_hat.rows == wg.rows && res.w_hat.cols == wg.cols,
+                    "Q returned wrong shape for group {k}"
+                );
+                Ok(res)
+            }
+        })
+        .collect();
+    let outs = crate::coordinator::run_jobs(jobs, workers);
     let mut w_hat = Mat::zeros(w.rows, w.cols);
     let mut codes: Option<Vec<u16>> = None;
     let mut codebooks: Option<Mat> = None;
     let mut bits_acc = 0.0f64;
-    for (k, &(lo, hi)) in ranges.iter().enumerate() {
-        let wg = w.slice_cols(lo, hi);
-        let res = q.quantize(&hessians[k], &wg)?;
-        anyhow::ensure!(
-            res.w_hat.rows == wg.rows && res.w_hat.cols == wg.cols,
-            "Q returned wrong shape for group {k}"
-        );
+    for (out, &(lo, hi)) in outs.into_iter().zip(ranges.iter()) {
+        let res = out?;
         w_hat.paste_cols(lo, &res.w_hat);
         bits_acc += res.avg_bits * (hi - lo) as f64;
         match (res.codes, res.codebooks) {
@@ -169,6 +195,28 @@ mod tests {
         for i in 0..w.rows {
             for j in 0..w.cols {
                 assert_eq!(res.w_hat.at(i, j), cbs.at(j, codes[i * w.cols + j] as usize));
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_groups_are_bit_identical_to_serial() {
+        // The pooled group fan-out must reproduce the serial loop EXACTLY:
+        // same Ŵ bits, same codes, same codebooks, same avg_bits.
+        let mut rng = Rng::new(4);
+        let (_, hs, w, _) = guided_problem(&mut rng, 40, 12, 10, 4);
+        for q in [&Gptq::new(2) as &dyn LayerQuantizer, &Lnq::new(2) as &dyn LayerQuantizer] {
+            let serial = guided_quantize_with(q, &hs, &w, 1).unwrap();
+            for workers in [2usize, 4, 8] {
+                let par = guided_quantize_with(q, &hs, &w, workers).unwrap();
+                assert_eq!(par.w_hat.data, serial.w_hat.data, "workers={workers}");
+                assert_eq!(par.codes, serial.codes, "workers={workers}");
+                assert_eq!(
+                    par.codebooks.as_ref().map(|m| &m.data),
+                    serial.codebooks.as_ref().map(|m| &m.data),
+                    "workers={workers}"
+                );
+                assert_eq!(par.avg_bits, serial.avg_bits, "workers={workers}");
             }
         }
     }

@@ -51,6 +51,7 @@ pub fn generate_batch(
     let cfg = ServeConfig {
         max_batch: prompts.len().max(1),
         max_queued: prompts.len().max(1),
+        ..ServeConfig::default()
     };
     generate_scheduled(model, prompts, gen_tokens, workers, cfg)
 }
@@ -66,6 +67,9 @@ pub fn generate_scheduled(
     cfg: ServeConfig,
 ) -> Result<(Vec<Vec<u32>>, ServeStats)> {
     let t0 = std::time::Instant::now();
+    // An explicit [serve] workers knob overrides the positional argument,
+    // so config files drive the engine the same way the CLI does.
+    let workers = if cfg.workers != 0 { cfg.workers } else { workers };
     let mut sched = Scheduler::with_workers(model, cfg, workers);
     let mut done = Vec::with_capacity(prompts.len());
     for p in prompts {
@@ -247,7 +251,7 @@ mod tests {
         let (got, _) = generate_batch(&m, &prompts, 7, 2).unwrap();
         assert_eq!(got, want);
         // Narrow batch: continuous splicing, still identical.
-        let cfg = ServeConfig { max_batch: 2, max_queued: 8 };
+        let cfg = ServeConfig { max_batch: 2, max_queued: 8, ..ServeConfig::default() };
         let (got2, stats) = generate_scheduled(&m, &prompts, 7, 1, cfg).unwrap();
         assert_eq!(got2, want);
         assert!(stats.batch_occupancy <= 2.0 + 1e-9);
@@ -281,7 +285,7 @@ mod tests {
         let m = model();
         let prompts = random_prompts(m.cfg.vocab, 6, 3, 7);
         let (want, _) = generate_per_sequence(&m, &prompts, 3, 1).unwrap();
-        let cfg = ServeConfig { max_batch: 2, max_queued: 2 };
+        let cfg = ServeConfig { max_batch: 2, max_queued: 2, ..ServeConfig::default() };
         let (outs, _) = generate_scheduled(&m, &prompts, 3, 1, cfg).unwrap();
         assert_eq!(outs, want);
     }
@@ -290,7 +294,7 @@ mod tests {
     fn narrow_batch_reports_queue_wait() {
         let m = model();
         let prompts = random_prompts(m.cfg.vocab, 4, 3, 6);
-        let cfg = ServeConfig { max_batch: 1, max_queued: 8 };
+        let cfg = ServeConfig { max_batch: 1, max_queued: 8, ..ServeConfig::default() };
         let (_, stats) = generate_scheduled(&m, &prompts, 3, 1, cfg).unwrap();
         // With a single lane, later requests must have waited in the queue.
         assert!(stats.queue_wait_ms > 0.0);

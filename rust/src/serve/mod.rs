@@ -4,11 +4,14 @@
 //! Layers, bottom-up:
 //!
 //! * **Batched kernels** — every serving format ([`quant::formats`])
-//!   implements `LinearOp::matmul`, decoding each quantized weight tile
-//!   (packed codes, LUT gather, VQ centroids, trellis state walk) ONCE per
-//!   engine step and applying it to all batch lanes. This is the paper's
-//!   amortized-decode story: per-sequence decode re-pays the dequant cost
-//!   for every token of every sequence, batched decode pays it once.
+//!   implements `LinearOp::matmul_cols`, decoding each quantized weight
+//!   tile (packed codes, LUT gather, VQ centroids, trellis state walk)
+//!   ONCE per engine step and applying it to all batch lanes; the
+//!   `matmul_col_sharded` driver splits the output channels across the
+//!   persistent worker pool (bit-exact at any shard count). This is the
+//!   paper's amortized-decode story: per-sequence decode re-pays the
+//!   dequant cost for every token of every sequence, batched decode pays
+//!   it once.
 //! * **Batched model step** — `NativeModel::step_batch` advances a slab of
 //!   per-sequence `DecodeState`s (KV caches pooled in a `KvArena`) with
 //!   per-lane arithmetic bit-identical to the scalar `step`.

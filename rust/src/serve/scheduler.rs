@@ -10,9 +10,15 @@
 //! [`NativeModel::step`] path, so greedy outputs match per-sequence decode
 //! exactly regardless of batch composition.
 //!
-//! Prefill runs the prompt (all but its last token) through scalar steps on
-//! the worker pool before a lane joins the batch; the last prompt token is
-//! the lane's first batched step, which produces its first logits.
+//! Prefill is chunked: all freshly admitted lanes advance through their
+//! prompts (all but the last token) together, one batched
+//! [`NativeModel::step_batch_with`] call per prompt depth — weight tiles
+//! are decoded once per chunk and the matmuls column-shard across the
+//! worker pool. Lanes drop out of the chunk as their prompts end; the last
+//! prompt token is the lane's first batched decode step, which produces
+//! its first logits. [`ServeConfig::scalar_prefill`] keeps the per-lane
+//! scalar reference path (pool-parallel across lanes) as the bit-identity
+//! baseline.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -84,29 +90,30 @@ struct Lane {
 pub struct Scheduler<'m> {
     model: &'m NativeModel,
     pub cfg: ServeConfig,
-    /// Worker threads for prompt prefill (decode steps are batched, not
-    /// threaded).
-    prefill_workers: usize,
+    /// Worker threads for the scalar-prefill reference path (chunked
+    /// prefill and decode steps are batched and column-shard on the pool
+    /// instead).
+    workers: usize,
     epoch: Instant,
     queue: VecDeque<Queued>,
     lanes: Vec<Lane>,
     arena: KvArena,
     scratch: BatchScratch,
+    prefill_scratch: BatchScratch,
     next_id: u64,
     steps: usize,
     lane_steps: usize,
 }
 
 impl<'m> Scheduler<'m> {
+    /// Engine with the config's worker count (`ServeConfig::workers`,
+    /// 0 = the shared pool width).
     pub fn new(model: &'m NativeModel, cfg: ServeConfig) -> Self {
-        Self::with_workers(model, cfg, 1)
+        let workers = cfg.resolved_workers();
+        Self::with_workers(model, cfg, workers)
     }
 
-    pub fn with_workers(
-        model: &'m NativeModel,
-        mut cfg: ServeConfig,
-        prefill_workers: usize,
-    ) -> Self {
+    pub fn with_workers(model: &'m NativeModel, mut cfg: ServeConfig, workers: usize) -> Self {
         // Zero-width knobs are meaningless and (for max_queued) would make
         // every submit fail; config file / CLI layers reject them, and the
         // library layer clamps so a hand-built ServeConfig cannot wedge the
@@ -117,15 +124,21 @@ impl<'m> Scheduler<'m> {
             arena: model.new_arena(),
             model,
             cfg,
-            prefill_workers: prefill_workers.max(1),
+            workers: workers.max(1),
             epoch: Instant::now(),
             queue: VecDeque::new(),
             lanes: Vec::new(),
             scratch: BatchScratch::new(),
+            prefill_scratch: BatchScratch::new(),
             next_id: 0,
             steps: 0,
             lane_steps: 0,
         }
+    }
+
+    /// Worker threads backing the scalar-prefill reference path.
+    pub fn workers(&self) -> usize {
+        self.workers
     }
 
     fn now(&self) -> f64 {
@@ -215,34 +228,63 @@ impl<'m> Scheduler<'m> {
             return;
         }
         let admitted = self.now();
-        let model = self.model;
-        // Per-lane scalar prefill (parallel across lanes) keeps arithmetic
-        // identical to the single-sequence path.
-        let jobs: Vec<_> = fresh
-            .into_iter()
-            .map(|(qr, mut state)| {
-                move || {
-                    for &t in &qr.prompt[..qr.prompt.len() - 1] {
-                        model.step(&mut state, t);
+        if self.cfg.scalar_prefill {
+            // Reference path: per-lane scalar prefill, parallel across
+            // lanes on the worker pool.
+            let model = self.model;
+            let jobs: Vec<_> = fresh
+                .into_iter()
+                .map(|(qr, mut state)| {
+                    move || {
+                        for &t in &qr.prompt[..qr.prompt.len() - 1] {
+                            model.step(&mut state, t);
+                        }
+                        (qr, state)
                     }
-                    (qr, state)
-                }
-            })
-            .collect();
-        for (qr, state) in run_jobs(jobs, self.prefill_workers) {
-            let pending = *qr.prompt.last().unwrap();
-            self.lanes.push(Lane {
-                id: qr.id,
-                state,
-                pending,
-                out: Vec::new(),
-                gen_tokens: qr.gen_tokens,
-                submitted: qr.submitted,
-                admitted,
-                first_token: None,
-                token_ms: Vec::new(),
-            });
+                })
+                .collect();
+            for (qr, state) in run_jobs(jobs, self.workers) {
+                self.push_lane(qr, state, admitted);
+            }
+            return;
         }
+        // Chunked prefill: every fresh lane advances through its prompt in
+        // lockstep, one batched step per prompt depth — each quantized
+        // weight tile is decoded once per chunk (and the matmuls shard
+        // their output columns across the pool) instead of once per lane.
+        // Lanes whose prompts end drop out of the chunk; prefill logits are
+        // discarded. Per-lane arithmetic is bit-identical to scalar
+        // `step` prefill because `step_batch` is bit-identical per lane.
+        let max_pre = fresh.iter().map(|(qr, _)| qr.prompt.len() - 1).max().unwrap_or(0);
+        for t in 0..max_pre {
+            let mut tokens = Vec::new();
+            let mut states: Vec<&mut DecodeState> = Vec::new();
+            for (qr, st) in fresh.iter_mut() {
+                if t + 1 < qr.prompt.len() {
+                    tokens.push(qr.prompt[t]);
+                    states.push(st);
+                }
+            }
+            self.model.step_batch_with(&mut self.prefill_scratch, &mut states, &tokens);
+        }
+        for (qr, state) in fresh {
+            self.push_lane(qr, state, admitted);
+        }
+    }
+
+    fn push_lane(&mut self, qr: Queued, state: DecodeState, admitted: f64) {
+        let pending = *qr.prompt.last().unwrap();
+        self.lanes.push(Lane {
+            id: qr.id,
+            state,
+            pending,
+            out: Vec::new(),
+            gen_tokens: qr.gen_tokens,
+            submitted: qr.submitted,
+            admitted,
+            first_token: None,
+            token_ms: Vec::new(),
+        });
     }
 
     /// One engine step: admit queued requests, run one batched decode step
@@ -358,7 +400,10 @@ mod tests {
             .collect();
         let gens = [6usize, 3, 9, 1, 5];
 
-        let mut sched = Scheduler::new(&m, ServeConfig { max_batch: 2, max_queued: 16 });
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig { max_batch: 2, max_queued: 16, ..ServeConfig::default() },
+        );
         for (p, &g) in prompts.iter().zip(&gens) {
             sched.submit(p, g).unwrap();
         }
@@ -376,7 +421,10 @@ mod tests {
     #[test]
     fn admission_control_and_validation() {
         let m = model();
-        let mut sched = Scheduler::new(&m, ServeConfig { max_batch: 1, max_queued: 2 });
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig { max_batch: 1, max_queued: 2, ..ServeConfig::default() },
+        );
         assert!(sched.submit(&[], 4).is_err(), "empty prompt must be rejected");
         let big = m.cfg.vocab as u32;
         assert!(sched.submit(&[big], 4).is_err(), "out-of-vocab token must be rejected");
@@ -406,5 +454,47 @@ mod tests {
     fn greedy_argmax_breaks_ties_like_max_by() {
         assert_eq!(greedy_argmax(&[0.0, 1.0, 1.0, 0.5]), 2);
         assert_eq!(greedy_argmax(&[3.0]), 0);
+    }
+
+    #[test]
+    fn chunked_prefill_is_bit_identical_to_scalar_prefill() {
+        // Mixed prompt lengths (1..=4) force lanes to drop out of the
+        // prefill chunk at different depths; both prefill paths must yield
+        // the exact same generations as the scalar reference.
+        let m = model();
+        let mut rng = Rng::new(17);
+        let prompts: Vec<Vec<u32>> = (0..6)
+            .map(|i| (0..(1 + i % 4)).map(|_| rng.below(m.cfg.vocab) as u32).collect())
+            .collect();
+        let gens = [4usize, 2, 5, 3, 1, 4];
+
+        let run = |scalar_prefill: bool| -> Vec<Vec<u32>> {
+            let cfg = ServeConfig {
+                max_batch: 3,
+                max_queued: 16,
+                scalar_prefill,
+                ..ServeConfig::default()
+            };
+            let mut sched = Scheduler::new(&m, cfg);
+            for (p, &g) in prompts.iter().zip(&gens) {
+                sched.submit(p, g).unwrap();
+            }
+            sched.run_to_completion().into_iter().map(|f| f.tokens).collect()
+        };
+        let chunked = run(false);
+        let scalar = run(true);
+        assert_eq!(chunked, scalar, "prefill paths diverged");
+        for (i, (p, &g)) in prompts.iter().zip(&gens).enumerate() {
+            assert_eq!(chunked[i], reference_decode(&m, p, g), "request {i}");
+        }
+    }
+
+    #[test]
+    fn scheduler_new_uses_config_worker_count() {
+        let m = model();
+        let s = Scheduler::new(&m, ServeConfig::default());
+        assert_eq!(s.workers(), crate::tensor::ops::num_threads());
+        let s = Scheduler::new(&m, ServeConfig { workers: 3, ..ServeConfig::default() });
+        assert_eq!(s.workers(), 3);
     }
 }

@@ -1,13 +1,31 @@
-//! Matrix multiplication kernels: blocked, transposed variants, and a
-//! std::thread row-parallel driver (no rayon offline). These are the
-//! CPU hot paths behind the quantization solvers and the serving engine's
-//! fp32 baseline.
+//! Matrix multiplication kernels: blocked, transposed variants, and
+//! row-parallel drivers on the shared worker pool (no rayon offline).
+//! These are the CPU hot paths behind the quantization solvers, the
+//! Hessian accumulation, and the serving engine's fp32 baseline.
 
 use super::Mat;
 
-/// Number of worker threads for the parallel matmul paths.
+/// Below this many multiply-accumulates a kernel stays serial — the pool
+/// round-trip would cost more than it saves.
+const PAR_MIN_MACS: usize = 1 << 18;
+
+/// Number of worker threads for the parallel kernels and the shared pool.
+///
+/// Honors a `GQ_THREADS` env override (>= 1; `GQ_THREADS=1` forces fully
+/// serial execution) so CI and benches run deterministically-sized; falls
+/// back to `available_parallelism`. Cached on first read — the global pool
+/// is sized from this once per process.
 pub fn num_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    static N: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("GQ_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+            })
+    })
 }
 
 /// C = A @ B, blocked over K with a row-parallel outer loop.
@@ -18,38 +36,40 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// C = A @ B into preallocated `c` (overwritten).
+/// C = A @ B into preallocated `c` (overwritten). Large products split
+/// into row chunks that run as jobs on the shared worker pool.
 pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.rows);
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
     let (m, n) = (a.rows, b.cols);
-    let threads = if m * n * a.cols >= 1 << 18 { num_threads() } else { 1 };
+    let threads = if m * n * a.cols >= PAR_MIN_MACS { num_threads() } else { 1 };
     if threads <= 1 || m < 2 {
         matmul_rows(a, b, &mut c.data, 0, m);
         return;
     }
+    let jobs: Vec<_> = split_rows(&mut c.data, m, n, threads)
+        .into_iter()
+        .map(|(head, r0, r1)| move || matmul_rows_into(a, b, head, r0, r1))
+        .collect();
+    crate::coordinator::run_jobs(jobs, threads);
+}
+
+/// Partition the row-major buffer of an (m x n) matrix into per-worker row
+/// chunks: `(chunk, r0, r1)` triples covering `[0, m)` in order. Shared by
+/// every row-parallel kernel driver so chunk sizing stays consistent.
+fn split_rows(c: &mut [f32], m: usize, n: usize, threads: usize) -> Vec<(&mut [f32], usize, usize)> {
     let rows_per = m.div_ceil(threads);
-    let chunks: Vec<(usize, &mut [f32])> = {
-        let mut out = Vec::new();
-        let mut rest = c.data.as_mut_slice();
-        let mut row = 0;
-        while row < m {
-            let take = rows_per.min(m - row);
-            let (head, tail) = rest.split_at_mut(take * n);
-            out.push((row, head));
-            rest = tail;
-            row += take;
-        }
-        out
-    };
-    std::thread::scope(|s| {
-        for (row0, chunk) in chunks {
-            s.spawn(move || {
-                let nrows = chunk.len() / n;
-                matmul_rows_into(a, b, chunk, row0, row0 + nrows);
-            });
-        }
-    });
+    let mut out = Vec::with_capacity(threads);
+    let mut rest = c;
+    let mut row = 0;
+    while row < m {
+        let take = rows_per.min(m - row);
+        let (head, tail) = rest.split_at_mut(take * n);
+        out.push((head, row, row + take));
+        rest = tail;
+        row += take;
+    }
+    out
 }
 
 fn matmul_rows(a: &Mat, b: &Mat, c: &mut [f32], r0: usize, r1: usize) {
@@ -57,7 +77,8 @@ fn matmul_rows(a: &Mat, b: &Mat, c: &mut [f32], r0: usize, r1: usize) {
 }
 
 /// Compute rows [r0, r1) of A@B into `c` (length (r1-r0)*n), i-k-j order so
-/// the inner loop is a contiguous axpy over B's rows (auto-vectorizes).
+/// the inner loop is a contiguous, branch-free axpy over B's rows (dense
+/// inputs auto-vectorize; zero-skipping lives in [`matmul_sparse`] only).
 fn matmul_rows_into(a: &Mat, b: &Mat, c: &mut [f32], r0: usize, r1: usize) {
     let n = b.cols;
     let k = a.cols;
@@ -67,6 +88,27 @@ fn matmul_rows_into(a: &Mat, b: &Mat, c: &mut [f32], r0: usize, r1: usize) {
         let crow = &mut c[(i - r0) * n..(i - r0 + 1) * n];
         for kk in 0..k {
             let aik = arow[kk];
+            let brow = &b.data[kk * n..kk * n + n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv;
+            }
+        }
+    }
+}
+
+/// A @ B for inputs where A is mostly zeros: skips zero multiplicands
+/// row-by-row. The zero test pessimizes dense inputs (it defeats
+/// auto-vectorization of the inner axpy), so the dense kernels above never
+/// branch — call this entry point only when A's sparsity is known to be
+/// high (e.g. masked or pruned activations).
+pub fn matmul_sparse(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul inner dims");
+    let n = b.cols;
+    let mut c = Mat::zeros(a.rows, n);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
             if aik == 0.0 {
                 continue;
             }
@@ -76,28 +118,67 @@ fn matmul_rows_into(a: &Mat, b: &Mat, c: &mut [f32], r0: usize, r1: usize) {
             }
         }
     }
+    c
 }
 
-/// C = A^T @ B without materializing A^T (A: k x m, B: k x n -> C: m x n).
+/// C = A^T @ B without materializing A^T (A: k x m, B: k x n -> C: m x n) —
+/// the Hessian-accumulation kernel (H = X^T X and friends). Large products
+/// run row-parallel on the shared worker pool.
 pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.rows, b.rows, "matmul_tn inner dims");
     let (m, n, k) = (a.cols, b.cols, a.rows);
+    let threads = if m * n * k >= PAR_MIN_MACS { num_threads() } else { 1 };
+    matmul_tn_with(a, b, threads)
+}
+
+/// [`matmul_tn`] with an explicit worker count (1 = the serial tiled
+/// kernel). Row partitioning does not change per-element accumulation
+/// order, so results are bit-identical at any thread count; exposed for
+/// the bit-identity tests and the serial-vs-pool bench rows.
+pub fn matmul_tn_with(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    assert_eq!(a.rows, b.rows, "matmul_tn inner dims");
+    let (m, n) = (a.cols, b.cols);
     let mut c = Mat::zeros(m, n);
-    for kk in 0..k {
-        let arow = a.row(kk);
-        let brow = b.row(kk);
-        for i in 0..m {
-            let aik = arow[i];
-            if aik == 0.0 {
-                continue;
-            }
-            let crow = &mut c.data[i * n..i * n + n];
-            for (cv, bv) in crow.iter_mut().zip(brow) {
-                *cv += aik * bv;
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let threads = threads.clamp(1, m);
+    if threads <= 1 {
+        matmul_tn_rows(a, b, &mut c.data, 0, m);
+        return c;
+    }
+    let jobs: Vec<_> = split_rows(&mut c.data, m, n, threads)
+        .into_iter()
+        .map(|(head, r0, r1)| move || matmul_tn_rows(a, b, head, r0, r1))
+        .collect();
+    let n_jobs = jobs.len();
+    crate::coordinator::run_jobs(jobs, n_jobs);
+    c
+}
+
+/// Rows [r0, r1) of A^T @ B into `c` (length (r1-r0)*n). Output rows are
+/// processed in tiles that stay cache-resident across the K sweep; the
+/// inner loop is a contiguous, branch-free axpy over B's row.
+fn matmul_tn_rows(a: &Mat, b: &Mat, c: &mut [f32], r0: usize, r1: usize) {
+    let n = b.cols;
+    let k = a.rows;
+    c.fill(0.0);
+    const ROW_TILE: usize = 32;
+    let mut t0 = r0;
+    while t0 < r1 {
+        let t1 = (t0 + ROW_TILE).min(r1);
+        for kk in 0..k {
+            let arow = &a.row(kk)[t0..t1];
+            let brow = b.row(kk);
+            for (i, &aik) in arow.iter().enumerate() {
+                let off = (t0 - r0 + i) * n;
+                let crow = &mut c[off..off + n];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += aik * bv;
+                }
             }
         }
+        t0 = t1;
     }
-    c
 }
 
 /// y = A @ x.
@@ -166,12 +247,55 @@ mod tests {
     }
 
     #[test]
+    fn matmul_sparse_matches_dense() {
+        let mut rng = Rng::new(7);
+        let mut a = Mat::randn(23, 31, 1.0, &mut rng);
+        // ~80% zeros.
+        for v in a.data.iter_mut() {
+            if rng.f32() < 0.8 {
+                *v = 0.0;
+            }
+        }
+        let b = Mat::randn(31, 19, 1.0, &mut rng);
+        testing::assert_close(&matmul_sparse(&a, &b).data, &matmul(&a, &b).data, 1e-5, 1e-5)
+            .unwrap();
+    }
+
+    #[test]
     fn matmul_tn_matches_explicit_transpose() {
         let mut rng = Rng::new(2);
         let a = Mat::randn(33, 17, 1.0, &mut rng);
         let b = Mat::randn(33, 21, 1.0, &mut rng);
         let want = matmul(&a.transpose(), &b);
         testing::assert_close(&matmul_tn(&a, &b).data, &want.data, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn matmul_tn_parallel_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(8);
+        // m = 70 does not divide evenly across 4 chunks; k crosses the
+        // 32-row tile boundary.
+        let a = Mat::randn(65, 70, 1.0, &mut rng);
+        let b = Mat::randn(65, 40, 1.0, &mut rng);
+        let serial = matmul_tn_with(&a, &b, 1);
+        for threads in [2, 3, 4, 7] {
+            let par = matmul_tn_with(&a, &b, threads);
+            assert_eq!(par.data, serial.data, "threads={threads}");
+        }
+        // And the tiled kernel still matches the naive transpose product.
+        let want = matmul(&a.transpose(), &b);
+        testing::assert_close(&serial.data, &want.data, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn matmul_tn_large_goes_through_the_pool() {
+        // Big enough to clear PAR_MIN_MACS so `matmul_tn` takes the
+        // parallel path end to end.
+        let mut rng = Rng::new(9);
+        let a = Mat::randn(80, 96, 1.0, &mut rng);
+        let b = Mat::randn(80, 64, 1.0, &mut rng);
+        let got = matmul_tn(&a, &b);
+        assert_eq!(got.data, matmul_tn_with(&a, &b, 1).data);
     }
 
     #[test]
@@ -190,5 +314,10 @@ mod tests {
         let i = Mat::eye(12);
         testing::assert_close(&matmul(&a, &i).data, &a.data, 1e-6, 1e-6).unwrap();
         testing::assert_close(&matmul(&i, &a).data, &a.data, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn num_threads_is_at_least_one() {
+        assert!(num_threads() >= 1);
     }
 }

@@ -112,10 +112,20 @@ fn scheduler_is_bit_identical_to_per_sequence_on_quantized_models() {
         let (want, _) = generate_per_sequence(&m, &prompts, 8, 2).unwrap();
         let (full, _) = generate_batch(&m, &prompts, 8, 2).unwrap();
         assert_eq!(full, want, "{format:?}: full-width batch diverged");
-        let cfg = ServeConfig { max_batch: 2, max_queued: 8 };
+        let cfg = ServeConfig { max_batch: 2, max_queued: 8, ..ServeConfig::default() };
         let (narrow, stats) = generate_scheduled(&m, &prompts, 8, 1, cfg).unwrap();
         assert_eq!(narrow, want, "{format:?}: narrow batch diverged");
         assert!(stats.batch_occupancy > 1.0, "{format:?}: batching never engaged");
+        // Chunked prefill (default) and the scalar-prefill reference path
+        // must agree bitwise, per format.
+        let cfg = ServeConfig {
+            max_batch: 2,
+            max_queued: 8,
+            scalar_prefill: true,
+            ..ServeConfig::default()
+        };
+        let (scalar_pre, _) = generate_scheduled(&m, &prompts, 8, 1, cfg).unwrap();
+        assert_eq!(scalar_pre, want, "{format:?}: scalar-prefill path diverged");
     }
 }
 
