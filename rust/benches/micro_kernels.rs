@@ -1,15 +1,18 @@
 //! Micro-benchmarks of the hot paths: serving-format matvec kernels
 //! (the Table 2 inner loop), the native matmul, serial-vs-pool rows for
-//! the parallel kernels (tiled `matmul_tn` and the column-sharded batched
-//! decode step), and the L1 xtsx Pallas kernel executed through its demo
-//! artifact vs a native Rust reduction (skipped when no AOT artifacts are
-//! present, so CI smoke runs work from a bare checkout).
+//! the parallel kernels (tiled `matmul_tn`, the column-sharded batched
+//! decode step, and batch-8 long-context paged attention), and the L1
+//! xtsx Pallas kernel executed through its demo artifact vs a native Rust
+//! reduction (skipped when no AOT artifacts are present, so CI smoke runs
+//! work from a bare checkout).
 
 #[path = "common.rs"]
 mod common;
 
 use guidedquant::bench::bench;
+use guidedquant::model::attention::attention_batch_with;
 use guidedquant::model::forward::{matmul_col_sharded_with, LinearOp};
+use guidedquant::model::DecodeState;
 use guidedquant::quant::formats::{LutLinear, UniformScalarLinear};
 use guidedquant::quant::grid::{round_all, rtn_quantize, UniformGrid};
 use guidedquant::runtime::Value;
@@ -74,6 +77,38 @@ fn main() {
             s.mean_secs / p.mean_secs.max(1e-12)
         );
     }
+
+    // Lane×head-parallel attention over the head-major paged KV cache:
+    // batch-8 long-context decode, the serve hot loop once the linears are
+    // amortized. Serial vs pool is bit-identical; only placement changes.
+    let (heads, hd) = (8usize, 64usize);
+    let dm = heads * hd;
+    let n_pos = if fast { 128 } else { 512 };
+    let batch = 8;
+    let mut states: Vec<DecodeState> =
+        (0..batch).map(|_| DecodeState::new(1, heads, hd)).collect();
+    for st in states.iter_mut() {
+        for p in 0..n_pos {
+            let k: Vec<f32> = (0..dm).map(|_| rng.normal_f32()).collect();
+            let v: Vec<f32> = (0..dm).map(|_| rng.normal_f32()).collect();
+            st.append_kv(0, &k, &v);
+            if p + 1 < n_pos {
+                st.pos += 1;
+            }
+        }
+    }
+    let refs: Vec<&DecodeState> = states.iter().collect();
+    let qm = Mat::randn(batch, dm, 1.0, &mut rng);
+    let mut ctx = Mat::zeros(batch, dm);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let att_reps = if fast { 5 } else { 30 };
+    let s = bench(&format!("attention b={batch} ctx={n_pos} serial"), 1, att_reps, || {
+        attention_batch_with(0, heads, hd, scale, &qm, &refs, &mut ctx, 1)
+    });
+    let p = bench(&format!("attention b={batch} ctx={n_pos} pool"), 1, att_reps, || {
+        attention_batch_with(0, heads, hd, scale, &qm, &refs, &mut ctx, threads)
+    });
+    println!("   attention speedup ×{:.2}", s.mean_secs / p.mean_secs.max(1e-12));
 
     // L1 kernel: artifact (Pallas xtsx lowered through interpret) vs
     // native. Needs AOT artifacts on disk; skipped otherwise.

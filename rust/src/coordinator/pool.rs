@@ -160,7 +160,9 @@ impl WorkerPool {
     /// Run `jobs` with at most `workers` executing concurrently (the caller
     /// counts as one). Results land in their original slots regardless of
     /// scheduling; a panic in any job is re-raised here after the batch
-    /// drains.
+    /// drains. Thin result-collecting layer over [`WorkerPool::run_units`];
+    /// scatter-style kernels that write into pre-split buffers should call
+    /// `run_units` directly and skip the per-job result slots.
     pub fn run_with<T, F>(&self, jobs: Vec<F>, workers: usize) -> Vec<T>
     where
         T: Send,
@@ -170,13 +172,47 @@ impl WorkerPool {
         if n == 0 {
             return Vec::new();
         }
+        let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let units: Vec<_> = jobs
+            .into_iter()
+            .zip(&results)
+            .map(|(job, slot)| {
+                move || {
+                    let out = job();
+                    *slot.lock().unwrap() = Some(out);
+                }
+            })
+            .collect();
+        self.run_units(units, workers);
+        results
+            .into_iter()
+            .map(|r| r.into_inner().unwrap().expect("job did not complete"))
+            .collect()
+    }
+
+    /// Run result-less `jobs` with at most `workers` executing concurrently
+    /// (the caller counts as one). The workhorse behind [`WorkerPool::run`]
+    /// / [`WorkerPool::run_with`] and the scatter-style kernels (e.g. the
+    /// lane×head attention fan-out) whose jobs write into disjoint caller
+    /// buffers: no per-job result slot is allocated. A panic in any job is
+    /// re-raised here after the batch drains.
+    pub fn run_units<F>(&self, jobs: Vec<F>, workers: usize)
+    where
+        F: FnOnce() + Send,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return;
+        }
         let workers = workers.clamp(1, n).min(self.threads + 1);
         if workers <= 1 {
-            return jobs.into_iter().map(|j| j()).collect();
+            for j in jobs {
+                j();
+            }
+            return;
         }
         let cursor = AtomicUsize::new(0);
         let jobs: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
-        let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
         let panic_slot: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
         let drive = || loop {
             let i = cursor.fetch_add(1, Ordering::Relaxed);
@@ -184,13 +220,10 @@ impl WorkerPool {
                 break;
             }
             let job = jobs[i].lock().unwrap().take().expect("job claimed twice");
-            match catch_unwind(AssertUnwindSafe(job)) {
-                Ok(out) => *results[i].lock().unwrap() = Some(out),
-                Err(p) => {
-                    let mut slot = panic_slot.lock().unwrap();
-                    if slot.is_none() {
-                        *slot = Some(p);
-                    }
+            if let Err(p) = catch_unwind(AssertUnwindSafe(job)) {
+                let mut slot = panic_slot.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(p);
                 }
             }
         };
@@ -229,15 +262,11 @@ impl WorkerPool {
             }
         }
         // Every helper has finished (latch), so nothing borrows `drive` or
-        // the slot vectors any more.
+        // the job slots any more.
         drop(drive);
         if let Some(p) = panic_slot.into_inner().unwrap() {
             resume_unwind(p);
         }
-        results
-            .into_iter()
-            .map(|r| r.into_inner().unwrap().expect("job did not complete"))
-            .collect()
     }
 }
 
@@ -258,8 +287,8 @@ impl Drop for WorkerPool {
 ///
 /// # Safety
 /// The caller must keep every borrow in `t` alive until the task has
-/// finished executing. `run_with` guarantees this by waiting on the per-run
-/// latch before leaving the frame the task borrows from.
+/// finished executing. `run_units` guarantees this by waiting on the
+/// per-run latch before leaving the frame the task borrows from.
 unsafe fn erase_task<'a>(t: Box<dyn FnOnce() + Send + 'a>) -> Task {
     std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Task>(t)
 }
@@ -289,6 +318,18 @@ where
     F: FnOnce() -> T + Send,
 {
     global().run_with(jobs, workers)
+}
+
+/// Run result-less `jobs` on up to `workers` threads of the shared pool.
+/// Scatter entry point ([`WorkerPool::run_units`] on [`global`]): jobs that
+/// write into disjoint caller-owned buffers skip the per-job result slots
+/// `run_jobs` would allocate — the steady-state path of the lane×head
+/// attention fan-out.
+pub fn run_unit_jobs<F>(jobs: Vec<F>, workers: usize)
+where
+    F: FnOnce() + Send,
+{
+    global().run_units(jobs, workers)
 }
 
 #[cfg(test)]
@@ -369,6 +410,37 @@ mod tests {
             .collect();
         let total: u64 = run_jobs(jobs, 4).iter().sum();
         assert_eq!(total, data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn unit_jobs_write_disjoint_buffers() {
+        // The scatter path: jobs mutate pre-split chunks of one buffer.
+        let mut data = vec![0u64; 40];
+        let jobs: Vec<_> = data
+            .chunks_mut(7)
+            .enumerate()
+            .map(|(i, chunk)| {
+                move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (i * 100 + j) as u64;
+                    }
+                }
+            })
+            .collect();
+        run_unit_jobs(jobs, 4);
+        for (i, chunk) in data.chunks(7).enumerate() {
+            for (j, &v) in chunk.iter().enumerate() {
+                assert_eq!(v, (i * 100 + j) as u64);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unit boom")]
+    fn unit_job_panic_propagates() {
+        let jobs: Vec<Box<dyn FnOnce() + Send>> =
+            vec![Box::new(|| {}), Box::new(|| panic!("unit boom"))];
+        run_unit_jobs(jobs, 2);
     }
 
     #[test]

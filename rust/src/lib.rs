@@ -37,3 +37,11 @@ pub mod testing;
 pub mod util;
 
 pub use anyhow::{anyhow, bail, Context, Result};
+
+/// The unit-test harness runs under a counting allocator so the
+/// zero-allocation steady-state guarantees of the serve token loop are
+/// enforced by tests, not just claimed (see `testing::alloc_count`).
+#[cfg(test)]
+#[global_allocator]
+static TEST_ALLOC: testing::alloc_count::CountingAllocator =
+    testing::alloc_count::CountingAllocator;

@@ -22,7 +22,7 @@ use guidedquant::coordinator::Pipeline;
 use guidedquant::data::Split;
 use guidedquant::model::ParamStore;
 use guidedquant::serve::{
-    build_serving_model, generate_per_sequence, generate_scheduled, ServeFormat,
+    build_serving_model, generate_per_sequence, generate_scheduled_streaming, ServeFormat,
 };
 
 const USAGE: &str = "usage: gq <pipeline|train|quantize|eval|serve|fisher|info> [flags]
@@ -36,6 +36,8 @@ const USAGE: &str = "usage: gq <pipeline|train|quantize|eval|serve|fisher|info> 
                 continuous-batching scheduler)
                 --scalar-prefill (per-lane scalar prefill instead of
                 chunked batched prefill)
+                --stream (print tokens per request as each engine step
+                generates them instead of waiting for completion)
   env:          GQ_THREADS=N caps the shared worker pool (1 = serial)
   train:        --steps N --save FILE
   eval/quantize: --load FILE [--save FILE] --artifact fwd_loss|fwd_loss_qa4kv4|...";
@@ -196,15 +198,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("building {} serving model at {bits} bits ...", format.name());
     let model = build_serving_model(&ps, None, format, bits)?;
     let prompts = guidedquant::serve::random_prompts(model.cfg.vocab, requests, prompt_len, 7);
+    let stream = args.switch("stream");
     let (_, stats) = if args.switch("per-seq") {
         generate_per_sequence(&model, &prompts, gen_tokens, pipeline.cfg.workers)?
     } else {
-        generate_scheduled(
+        generate_scheduled_streaming(
             &model,
             &prompts,
             gen_tokens,
             pipeline.cfg.workers,
             pipeline.cfg.serve.clone(),
+            |id, tok| {
+                if stream {
+                    println!("stream req={id} token={tok}");
+                }
+            },
         )?
     };
     println!(

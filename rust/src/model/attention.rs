@@ -1,0 +1,700 @@
+//! Decode-time attention: head-major paged KV cache + lane×head-parallel
+//! score/context kernels.
+//!
+//! ## Why this layout
+//!
+//! The original `DecodeState` stored each layer's cache as one growing
+//! `Vec<f32>` in `[pos][d_model]` order, so a head's score loop strided by
+//! `d_model` on every dot product and a long-context decode step was
+//! dominated by cache misses. Here the cache is **head-major and paged**:
+//! each (layer, head) owns a list of fixed-size pages, and page `p` holds
+//! positions `[p*KV_PAGE_POS, (p+1)*KV_PAGE_POS)` as contiguous
+//! `[pos][head_dim]` rows. A head's score and context loops stream over
+//! contiguous memory, and evicting a lane returns whole pages to a shared
+//! slab (recycled through [`KvArena`]) instead of freeing one monolithic
+//! buffer per layer.
+//!
+//! ## Parallelism
+//!
+//! Attention work items are the independent (lane, head) pairs of a batch
+//! step: every item reads its own query row and KV page list and writes its
+//! own disjoint `head_dim` slice of the context matrix. [`attention_batch`]
+//! fans contiguous item ranges across the shared worker pool
+//! (`coordinator::run_unit_jobs`) above a work threshold and runs serially
+//! below it; per-head accumulation order is identical on both paths, so
+//! results are **bit-identical at any thread count**. Score buffers live in
+//! a per-worker thread-local scratch sized to the longest context seen, so
+//! a warm steady-state step allocates nothing.
+
+use std::cell::RefCell;
+use std::sync::{Arc, Mutex};
+
+use crate::tensor::ops::{axpy, dot, num_threads};
+use crate::tensor::Mat;
+
+/// Positions per KV page. 64 positions × `head_dim` floats keeps pages in
+/// the tens-of-KB range (L1/L2-resident while a head streams them) and
+/// makes slab traffic rare: a lane touches the slab once per 64 tokens.
+pub const KV_PAGE_POS: usize = 64;
+
+/// One KV page: `KV_PAGE_POS * head_dim` floats, `[pos][head_dim]` rows.
+type Page = Box<[f32]>;
+
+/// Shared recycling slab of KV pages (all pages of one model share a size,
+/// so any lane's freed page can back any other lane's growth). Lock traffic
+/// is confined to page-boundary crossings and lane eviction.
+pub(crate) struct PageSlab {
+    page_floats: usize,
+    free: Mutex<Vec<Page>>,
+}
+
+impl PageSlab {
+    fn new(head_dim: usize) -> Self {
+        PageSlab { page_floats: KV_PAGE_POS * head_dim, free: Mutex::new(Vec::new()) }
+    }
+
+    /// Pop a recycled page, or allocate a fresh zeroed one (cold path).
+    fn take(&self) -> Page {
+        self.free
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| vec![0.0f32; self.page_floats].into_boxed_slice())
+    }
+
+    fn pooled(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+
+    fn reserve(&self, pages: usize) {
+        let mut free = self.free.lock().unwrap();
+        while free.len() < pages {
+            free.push(vec![0.0f32; self.page_floats].into_boxed_slice());
+        }
+    }
+}
+
+/// Per-sequence KV cache, head-major and paged: page list `[layer][head]`
+/// (flattened `layer * n_heads + head`), keys and values separate so the
+/// score pass streams key pages and the context pass streams value pages.
+pub struct DecodeState {
+    n_heads: usize,
+    head_dim: usize,
+    key_pages: Vec<Vec<Page>>,
+    val_pages: Vec<Vec<Page>>,
+    /// Number of completed decode steps (the next append writes slot
+    /// `pos % KV_PAGE_POS` of page `pos / KV_PAGE_POS`).
+    pub pos: usize,
+    slab: Arc<PageSlab>,
+}
+
+impl DecodeState {
+    /// A standalone state with its own private page slab (pages still
+    /// recycle across [`DecodeState::reset`]). Serving lanes should come
+    /// from a [`KvArena`] instead so evicted pages are shared.
+    pub fn new(n_layers: usize, n_heads: usize, head_dim: usize) -> Self {
+        Self::with_slab(n_layers, n_heads, head_dim, Arc::new(PageSlab::new(head_dim)))
+    }
+
+    fn with_slab(n_layers: usize, n_heads: usize, head_dim: usize, slab: Arc<PageSlab>) -> Self {
+        let lists = n_layers * n_heads;
+        DecodeState {
+            n_heads,
+            head_dim,
+            key_pages: (0..lists).map(|_| Vec::new()).collect(),
+            val_pages: (0..lists).map(|_| Vec::new()).collect(),
+            pos: 0,
+            slab,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.key_pages.len() / self.n_heads.max(1)
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.n_heads
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    /// Logical cache size: bytes of K+V actually stored, linear in `pos`
+    /// (page-granular over-allocation is reported by
+    /// [`DecodeState::kv_allocated_bytes`]).
+    pub fn kv_bytes(&self) -> usize {
+        2 * self.key_pages.len() * self.head_dim * self.pos * 4
+    }
+
+    /// Bytes of page storage currently held (a multiple of the page size).
+    pub fn kv_allocated_bytes(&self) -> usize {
+        let pages: usize = self.key_pages.iter().chain(&self.val_pages).map(Vec::len).sum();
+        pages * KV_PAGE_POS * self.head_dim * 4
+    }
+
+    /// Append one step's K/V rows (`d_model` floats each) for `layer` at
+    /// the current position, splitting them per head into the page tails.
+    /// Grabs a page from the slab when the position opens a new page.
+    pub fn append_kv(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        let hd = self.head_dim;
+        debug_assert_eq!(k.len(), self.n_heads * hd);
+        debug_assert_eq!(v.len(), self.n_heads * hd);
+        let slot = self.pos % KV_PAGE_POS;
+        let base = layer * self.n_heads;
+        for head in 0..self.n_heads {
+            let idx = base + head;
+            if slot == 0 {
+                self.key_pages[idx].push(self.slab.take());
+                self.val_pages[idx].push(self.slab.take());
+            }
+            let seg = &k[head * hd..(head + 1) * hd];
+            self.key_pages[idx].last_mut().unwrap()[slot * hd..(slot + 1) * hd]
+                .copy_from_slice(seg);
+            let seg = &v[head * hd..(head + 1) * hd];
+            self.val_pages[idx].last_mut().unwrap()[slot * hd..(slot + 1) * hd]
+                .copy_from_slice(seg);
+        }
+    }
+
+    #[inline]
+    pub(crate) fn key_pages(&self, layer: usize, head: usize) -> &[Page] {
+        &self.key_pages[layer * self.n_heads + head]
+    }
+
+    #[inline]
+    pub(crate) fn val_pages(&self, layer: usize, head: usize) -> &[Page] {
+        &self.val_pages[layer * self.n_heads + head]
+    }
+
+    /// Clear for reuse: every page returns to the slab (the per-list `Vec`s
+    /// keep their capacity, so a recycled lane re-pages without allocating).
+    pub fn reset(&mut self) {
+        let mut free = self.slab.free.lock().unwrap();
+        for list in self.key_pages.iter_mut().chain(self.val_pages.iter_mut()) {
+            free.extend(list.drain(..));
+        }
+        drop(free);
+        self.pos = 0;
+    }
+
+    fn rebind(&mut self, slab: Arc<PageSlab>) {
+        debug_assert_eq!(slab.page_floats, KV_PAGE_POS * self.head_dim);
+        self.slab = slab;
+    }
+}
+
+/// Pool of KV caches for the batched serve path, now page-granular:
+/// releasing an evicted lane returns its *pages* to a shared slab
+/// (plus the state shell, so the per-head list `Vec`s keep their capacity),
+/// and any growing lane pulls those pages back out — continuous batching
+/// splices requests in and out with zero steady-state allocator traffic.
+pub struct KvArena {
+    n_layers: usize,
+    n_heads: usize,
+    head_dim: usize,
+    slab: Arc<PageSlab>,
+    free: Vec<DecodeState>,
+}
+
+impl KvArena {
+    pub fn new(n_layers: usize, n_heads: usize, head_dim: usize) -> Self {
+        KvArena {
+            n_layers,
+            n_heads,
+            head_dim,
+            slab: Arc::new(PageSlab::new(head_dim)),
+            free: Vec::new(),
+        }
+    }
+
+    /// A fresh (pos = 0) state wired to the arena's shared page slab.
+    pub fn acquire(&mut self) -> DecodeState {
+        self.free.pop().unwrap_or_else(|| {
+            let slab = Arc::clone(&self.slab);
+            DecodeState::with_slab(self.n_layers, self.n_heads, self.head_dim, slab)
+        })
+    }
+
+    pub fn release(&mut self, mut state: DecodeState) {
+        debug_assert_eq!(state.n_layers(), self.n_layers);
+        debug_assert_eq!(state.head_dim, self.head_dim);
+        // A foreign state (built via `DecodeState::new`) adopts this
+        // arena's slab so its pages land here rather than being stranded.
+        state.rebind(Arc::clone(&self.slab));
+        state.reset();
+        self.free.push(state);
+    }
+
+    /// Number of state shells currently pooled.
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Number of KV pages currently pooled in the shared slab.
+    pub fn pooled_pages(&self) -> usize {
+        self.slab.pooled()
+    }
+
+    /// Pre-allocate slab pages so decode-time page grabs never hit the
+    /// system allocator (e.g. before latency-sensitive serving).
+    pub fn reserve_pages(&self, pages: usize) {
+        self.slab.reserve(pages);
+    }
+}
+
+/// Read access to a lane's KV cache. Implemented for owned states, `&mut`,
+/// and `&` references so the batched step accepts either a contiguous state
+/// slab (`&mut [DecodeState]`, the scheduler's zero-allocation path) or a
+/// gathered `&mut [&mut DecodeState]` (tests, prefill subsets) without
+/// repacking.
+pub trait KvLane: Sync {
+    fn kv(&self) -> &DecodeState;
+}
+
+/// Mutable access on top of [`KvLane`] (the batched step appends K/V and
+/// advances `pos`).
+pub trait KvLaneMut: KvLane + Send {
+    fn kv_mut(&mut self) -> &mut DecodeState;
+}
+
+impl KvLane for DecodeState {
+    fn kv(&self) -> &DecodeState {
+        self
+    }
+}
+
+impl KvLaneMut for DecodeState {
+    fn kv_mut(&mut self) -> &mut DecodeState {
+        self
+    }
+}
+
+impl KvLane for &mut DecodeState {
+    fn kv(&self) -> &DecodeState {
+        self
+    }
+}
+
+impl KvLaneMut for &mut DecodeState {
+    fn kv_mut(&mut self) -> &mut DecodeState {
+        self
+    }
+}
+
+impl KvLane for &DecodeState {
+    fn kv(&self) -> &DecodeState {
+        self
+    }
+}
+
+/// Minimum total multiply-accumulates (summed over lanes and heads) before
+/// a batch attention call fans out on the worker pool.
+const ATTN_MIN_WORK: usize = 1 << 16;
+
+thread_local! {
+    /// Per-worker score scratch: grows to the longest context this thread
+    /// has attended over and is reused forever after — the zero-allocation
+    /// steady state of the token loop.
+    static SCORES: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Softmax attention for one (lane, head) work item over its paged cache.
+///
+/// Accumulation order is exactly the pre-paging kernel's: scores in
+/// ascending position order (8-way unrolled [`dot`]), single max, exp/sum
+/// in position order, then the context axpy in position order — only the
+/// *addresses* changed (contiguous pages instead of `d_model`-strided
+/// rows), so results are bit-identical to the historical layout.
+#[allow(clippy::too_many_arguments)]
+fn head_attention(
+    qh: &[f32],
+    key_pages: &[Page],
+    val_pages: &[Page],
+    n_pos: usize,
+    hd: usize,
+    scale: f32,
+    scores: &mut Vec<f32>,
+    ctx_h: &mut [f32],
+) {
+    scores.clear();
+    let mut max_s = f32::NEG_INFINITY;
+    let mut p = 0;
+    'score: for page in key_pages {
+        for kh in page.chunks_exact(hd) {
+            if p == n_pos {
+                break 'score;
+            }
+            let s = dot(qh, kh) * scale;
+            max_s = max_s.max(s);
+            scores.push(s);
+            p += 1;
+        }
+    }
+    debug_assert_eq!(scores.len(), n_pos, "page list shorter than n_pos");
+    let mut denom = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - max_s).exp();
+        denom += *s;
+    }
+    ctx_h.fill(0.0);
+    let mut p = 0;
+    'ctx: for page in val_pages {
+        for vh in page.chunks_exact(hd) {
+            if p == n_pos {
+                break 'ctx;
+            }
+            axpy(ctx_h, scores[p] / denom, vh);
+            p += 1;
+        }
+    }
+}
+
+/// One (lane, head) item of a flattened batch: item `i` is lane `i / h`,
+/// head `i % h`, and owns context chunk `i` (the `hd`-float slices of the
+/// context matrix in row-major order are exactly the items in order).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn item_attention<S: KvLane>(
+    layer: usize,
+    h: usize,
+    hd: usize,
+    scale: f32,
+    qdata: &[f32],
+    states: &[S],
+    item: usize,
+    scores: &mut Vec<f32>,
+    ctx_h: &mut [f32],
+) {
+    let lane = item / h;
+    let head = item % h;
+    let st = states[lane].kv();
+    let n_pos = st.pos + 1;
+    let d = h * hd;
+    let qh = &qdata[lane * d + head * hd..lane * d + (head + 1) * hd];
+    head_attention(
+        qh,
+        st.key_pages(layer, head),
+        st.val_pages(layer, head),
+        n_pos,
+        hd,
+        scale,
+        scores,
+        ctx_h,
+    );
+}
+
+#[allow(clippy::too_many_arguments)]
+fn attention_impl<S: KvLane>(
+    layer: usize,
+    h: usize,
+    hd: usize,
+    scale: f32,
+    qdata: &[f32],
+    states: &[S],
+    ctxdata: &mut [f32],
+    threads: usize,
+) {
+    let b = states.len();
+    debug_assert_eq!(qdata.len(), b * h * hd);
+    debug_assert_eq!(ctxdata.len(), b * h * hd);
+    let items = b * h;
+    if items == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, items);
+    if threads <= 1 {
+        SCORES.with(|s| {
+            let scores = &mut *s.borrow_mut();
+            for (item, ctx_h) in ctxdata.chunks_mut(hd).enumerate() {
+                item_attention(layer, h, hd, scale, qdata, states, item, scores, ctx_h);
+            }
+        });
+        return;
+    }
+    // Fan contiguous (lane, head) ranges out as pool jobs. Each job writes
+    // a disjoint split of the context buffer; per-item arithmetic is the
+    // serial path's, so partitioning never changes values — only which
+    // worker computes which head.
+    let per = items.div_ceil(threads);
+    let mut jobs = Vec::with_capacity(threads);
+    let mut rest = ctxdata;
+    let mut start = 0;
+    while start < items {
+        let take = per.min(items - start);
+        let (part, tail) = rest.split_at_mut(take * hd);
+        rest = tail;
+        jobs.push(move || {
+            SCORES.with(|s| {
+                let scores = &mut *s.borrow_mut();
+                for (j, ctx_h) in part.chunks_mut(hd).enumerate() {
+                    item_attention(layer, h, hd, scale, qdata, states, start + j, scores, ctx_h);
+                }
+            });
+        });
+        start += take;
+    }
+    let n_jobs = jobs.len();
+    crate::coordinator::run_unit_jobs(jobs, n_jobs);
+}
+
+/// Attention for a batch decode step: lane `r` of `q`/`ctx` attends over
+/// `states[r]`'s cached positions for `layer` (the current token's K/V must
+/// already be appended; `pos` not yet advanced). Fans (lane, head) items
+/// across the worker pool above a work threshold, serial below it —
+/// bit-identical either way.
+pub fn attention_batch<S: KvLane>(
+    layer: usize,
+    n_heads: usize,
+    head_dim: usize,
+    scale: f32,
+    q: &Mat,
+    states: &[S],
+    ctx: &mut Mat,
+) {
+    let total_pos: usize = states.iter().map(|s| s.kv().pos + 1).sum();
+    let work = total_pos * n_heads * head_dim * 2;
+    let threads = if work < ATTN_MIN_WORK {
+        1
+    } else {
+        num_threads().min(states.len() * n_heads)
+    };
+    attention_batch_with(layer, n_heads, head_dim, scale, q, states, ctx, threads);
+}
+
+/// [`attention_batch`] with an explicit worker count (1 = serial). Exposed
+/// for the bit-identity tests and the serial-vs-pool bench rows.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_batch_with<S: KvLane>(
+    layer: usize,
+    n_heads: usize,
+    head_dim: usize,
+    scale: f32,
+    q: &Mat,
+    states: &[S],
+    ctx: &mut Mat,
+    threads: usize,
+) {
+    debug_assert_eq!(q.rows, states.len());
+    debug_assert_eq!(ctx.rows, states.len());
+    debug_assert_eq!(q.cols, n_heads * head_dim);
+    debug_assert_eq!(ctx.cols, n_heads * head_dim);
+    attention_impl(layer, n_heads, head_dim, scale, &q.data, states, &mut ctx.data, threads);
+}
+
+/// Single-lane attention (the scalar [`NativeModel::step`] path): same
+/// kernel, heads fanned across the pool only when one lane's context is
+/// long enough to clear the work threshold.
+///
+/// [`NativeModel::step`]: super::NativeModel::step
+pub fn attention_single(
+    layer: usize,
+    n_heads: usize,
+    head_dim: usize,
+    scale: f32,
+    q: &[f32],
+    state: &DecodeState,
+    ctx: &mut [f32],
+) {
+    let work = (state.pos + 1) * n_heads * head_dim * 2;
+    let threads = if work < ATTN_MIN_WORK { 1 } else { num_threads().min(n_heads) };
+    attention_impl(layer, n_heads, head_dim, scale, q, &[state][..], ctx, threads);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Reference attention over an interleaved `[pos][d_model]` cache —
+    /// the exact pre-paging kernel, kept as the bitwise oracle.
+    fn reference_attention(
+        q: &[f32],
+        keys: &[f32],
+        vals: &[f32],
+        h: usize,
+        hd: usize,
+        n_pos: usize,
+        scale: f32,
+    ) -> Vec<f32> {
+        let d = h * hd;
+        let mut ctx = vec![0.0f32; d];
+        for head in 0..h {
+            let qh = &q[head * hd..(head + 1) * hd];
+            let mut scores = Vec::with_capacity(n_pos);
+            let mut max_s = f32::NEG_INFINITY;
+            for p in 0..n_pos {
+                let kh = &keys[p * d + head * hd..p * d + (head + 1) * hd];
+                let s = dot(qh, kh) * scale;
+                max_s = max_s.max(s);
+                scores.push(s);
+            }
+            let mut denom = 0.0f32;
+            for s in scores.iter_mut() {
+                *s = (*s - max_s).exp();
+                denom += *s;
+            }
+            let ctx_h = &mut ctx[head * hd..(head + 1) * hd];
+            for p in 0..n_pos {
+                let w = scores[p] / denom;
+                let vh = &vals[p * d + head * hd..p * d + (head + 1) * hd];
+                for (c, &vv) in ctx_h.iter_mut().zip(vh) {
+                    *c += w * vv;
+                }
+            }
+        }
+        ctx
+    }
+
+    /// Fill `state` with `n_pos` random positions for every layer and set
+    /// `pos` so the next attention call sees exactly `n_pos` positions
+    /// (mirrors a step: current token appended, pos not yet advanced).
+    /// Returns the interleaved per-layer (keys, vals) the old layout held.
+    fn fill_state(
+        state: &mut DecodeState,
+        n_layers: usize,
+        d: usize,
+        n_pos: usize,
+        rng: &mut Rng,
+    ) -> Vec<(Vec<f32>, Vec<f32>)> {
+        let mut flat = vec![(Vec::new(), Vec::new()); n_layers];
+        for p in 0..n_pos {
+            for (l, fl) in flat.iter_mut().enumerate() {
+                let k: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+                let v: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+                state.append_kv(l, &k, &v);
+                fl.0.extend_from_slice(&k);
+                fl.1.extend_from_slice(&v);
+            }
+            if p + 1 < n_pos {
+                state.pos += 1;
+            }
+        }
+        flat
+    }
+
+    #[test]
+    fn paged_layout_matches_interleaved_reference_bitwise() {
+        // Crosses a page boundary (n_pos > KV_PAGE_POS) and uses 2 layers.
+        let (h, hd, n_layers) = (4usize, 8usize, 2usize);
+        let d = h * hd;
+        let n_pos = KV_PAGE_POS + 9;
+        let mut rng = Rng::new(3);
+        let mut state = DecodeState::new(n_layers, h, hd);
+        let flat = fill_state(&mut state, n_layers, d, n_pos, &mut rng);
+        let scale = 1.0 / (hd as f32).sqrt();
+        for l in 0..n_layers {
+            let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let want = reference_attention(&q, &flat[l].0, &flat[l].1, h, hd, n_pos, scale);
+            let mut ctx = vec![0.0f32; d];
+            attention_single(l, h, hd, scale, &q, &state, &mut ctx);
+            assert_eq!(ctx, want, "layer {l}");
+        }
+    }
+
+    #[test]
+    fn batch_attention_is_bit_identical_at_any_thread_count() {
+        // Mixed lane positions, one lane past a page boundary.
+        let (h, hd) = (4usize, 8usize);
+        let d = h * hd;
+        let mut rng = Rng::new(7);
+        let positions = [3usize, KV_PAGE_POS + 5, 17];
+        let mut states: Vec<DecodeState> = Vec::new();
+        for &n_pos in &positions {
+            let mut st = DecodeState::new(1, h, hd);
+            fill_state(&mut st, 1, d, n_pos, &mut rng);
+            states.push(st);
+        }
+        let q = Mat::randn(states.len(), d, 1.0, &mut rng);
+        let refs: Vec<&DecodeState> = states.iter().collect();
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut want = Mat::zeros(states.len(), d);
+        attention_batch_with(0, h, hd, scale, &q, &refs, &mut want, 1);
+        for threads in [2usize, 3, 4, 7, 12] {
+            let mut got = Mat::zeros(states.len(), d);
+            attention_batch_with(0, h, hd, scale, &q, &refs, &mut got, threads);
+            assert_eq!(got.data, want.data, "threads={threads}");
+        }
+        // The auto driver (threshold + pool width) agrees too.
+        let mut auto = Mat::zeros(states.len(), d);
+        attention_batch(0, h, hd, scale, &q, &refs, &mut auto);
+        assert_eq!(auto.data, want.data);
+    }
+
+    #[test]
+    fn pages_allocate_lazily_and_kv_bytes_stays_linear() {
+        let (h, hd) = (2usize, 8usize);
+        let d = h * hd;
+        let mut st = DecodeState::new(1, h, hd);
+        assert_eq!(st.kv_bytes(), 0);
+        assert_eq!(st.kv_allocated_bytes(), 0);
+        let k = vec![1.0f32; d];
+        let v = vec![2.0f32; d];
+        let mut per_pos = 0;
+        for p in 0..KV_PAGE_POS + 3 {
+            st.append_kv(0, &k, &v);
+            st.pos += 1;
+            if p == 0 {
+                per_pos = st.kv_bytes();
+                assert!(per_pos > 0);
+            }
+            assert_eq!(st.kv_bytes(), per_pos * (p + 1), "pos {p}");
+        }
+        // One page per (layer=1, head=2) K and V list for the first 64
+        // positions, then a second page each after the boundary.
+        assert_eq!(st.kv_allocated_bytes(), 2 * 2 * 2 * KV_PAGE_POS * hd * 4);
+    }
+
+    #[test]
+    fn eviction_returns_pages_to_the_arena_slab() {
+        let (n_layers, h, hd) = (2usize, 2usize, 8usize);
+        let d = h * hd;
+        let mut arena = KvArena::new(n_layers, h, hd);
+        let mut st = arena.acquire();
+        let row = vec![0.5f32; d];
+        for _ in 0..KV_PAGE_POS + 1 {
+            for l in 0..n_layers {
+                st.append_kv(l, &row, &row);
+            }
+            st.pos += 1;
+        }
+        // 2 pages per (layer, head) per K/V list: 2 layers * 2 heads * 2
+        // lists * 2 pages.
+        let held = 2 * n_layers * h * 2;
+        assert_eq!(st.kv_allocated_bytes(), held * KV_PAGE_POS * hd * 4);
+        assert_eq!(arena.pooled_pages(), 0);
+        arena.release(st);
+        assert_eq!(arena.pooled(), 1);
+        assert_eq!(arena.pooled_pages(), held, "eviction must return whole pages");
+        // A recycled lane re-pages from the slab instead of allocating.
+        let mut st2 = arena.acquire();
+        assert_eq!(st2.pos, 0);
+        assert_eq!(st2.kv_bytes(), 0);
+        for l in 0..n_layers {
+            st2.append_kv(l, &row, &row);
+        }
+        st2.pos += 1;
+        assert_eq!(arena.pooled_pages(), held - n_layers * h * 2);
+    }
+
+    #[test]
+    fn reserve_pages_prefills_the_slab() {
+        let arena = KvArena::new(1, 2, 8);
+        arena.reserve_pages(10);
+        assert_eq!(arena.pooled_pages(), 10);
+        // Reserving less than pooled is a no-op.
+        arena.reserve_pages(4);
+        assert_eq!(arena.pooled_pages(), 10);
+    }
+
+    #[test]
+    fn foreign_state_release_adopts_the_arena_slab() {
+        let mut arena = KvArena::new(1, 2, 8);
+        let mut st = DecodeState::new(1, 2, 8);
+        let row = vec![1.0f32; 16];
+        st.append_kv(0, &row, &row);
+        st.pos += 1;
+        arena.release(st);
+        assert_eq!(arena.pooled_pages(), 4, "foreign pages must land in the arena");
+    }
+}

@@ -5,9 +5,12 @@
 //! cross-validated against the `fwd_loss` HLO artifact, and the serving
 //! engine can swap any linear for a quantized format via [`LinearOp`].
 
+use std::sync::Mutex;
+
 use crate::cfg::ModelConfig;
 use crate::tensor::Mat;
 
+use super::attention::{self, DecodeState, KvArena, KvLaneMut};
 use super::params::ParamStore;
 
 /// A linear layer `z = x @ W` with `W: [d_in, d_out]`. Implemented by plain
@@ -117,7 +120,7 @@ pub fn matmul_col_sharded_with(op: &dyn LinearOp, xs: &Mat, out: &mut Mat, shard
         .into_iter()
         .map(|(lo, hi)| {
             move || {
-                let mut sub = Mat::zeros(b, hi - lo);
+                let mut sub = take_shard_scratch(b, hi - lo);
                 op.matmul_cols(xs, &mut sub, lo, hi);
                 (lo, sub)
             }
@@ -125,6 +128,35 @@ pub fn matmul_col_sharded_with(op: &dyn LinearOp, xs: &Mat, out: &mut Mat, shard
         .collect();
     for (lo, sub) in crate::coordinator::run_jobs(jobs, n_shards) {
         out.paste_cols(lo, &sub);
+        put_shard_scratch(sub);
+    }
+}
+
+/// Recycled per-shard output buffers for [`matmul_col_sharded_with`]: the
+/// decode loop calls the driver once per linear per step, so sub-Mat
+/// allocations would otherwise dominate steady-state allocator traffic.
+/// Buffers are shape-agnostic `Vec<f32>`s (capacity grows to the largest
+/// `batch * shard_width` seen, then stabilizes); the stack is bounded so a
+/// one-off wide product cannot pin memory forever.
+static SHARD_SCRATCH: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
+
+/// Most shards ever in flight worth caching: pool width shards per linear,
+/// and the pool is recycled LIFO, so a small multiple covers nested use.
+const SHARD_SCRATCH_MAX: usize = 64;
+
+fn take_shard_scratch(rows: usize, cols: usize) -> Mat {
+    let mut data = SHARD_SCRATCH.lock().unwrap().pop().unwrap_or_default();
+    // No zero-fill: `matmul_cols` overwrites the full window (trait
+    // contract), so only the length matters — `resize` truncates or
+    // extends without touching retained elements.
+    data.resize(rows * cols, 0.0);
+    Mat::from_vec(rows, cols, data)
+}
+
+fn put_shard_scratch(m: Mat) {
+    let mut pool = SHARD_SCRATCH.lock().unwrap();
+    if pool.len() < SHARD_SCRATCH_MAX {
+        pool.push(m.data);
     }
 }
 
@@ -202,74 +234,6 @@ pub struct NativeModel {
     pub blocks: Vec<Block>,
 }
 
-/// Growing per-sequence KV cache.
-pub struct DecodeState {
-    /// keys[block] : flat [pos][d_model] (heads contiguous within d_model).
-    keys: Vec<Vec<f32>>,
-    vals: Vec<Vec<f32>>,
-    pub pos: usize,
-}
-
-impl DecodeState {
-    pub fn new(n_layers: usize) -> Self {
-        DecodeState {
-            keys: vec![Vec::new(); n_layers],
-            vals: vec![Vec::new(); n_layers],
-            pos: 0,
-        }
-    }
-
-    pub fn kv_bytes(&self) -> usize {
-        self.keys.iter().chain(&self.vals).map(|v| v.len() * 4).sum()
-    }
-
-    pub fn n_layers(&self) -> usize {
-        self.keys.len()
-    }
-
-    /// Clear the cache for reuse, keeping the backing allocations.
-    pub fn reset(&mut self) {
-        for k in &mut self.keys {
-            k.clear();
-        }
-        for v in &mut self.vals {
-            v.clear();
-        }
-        self.pos = 0;
-    }
-}
-
-/// Pool of KV caches for the batched serve path. Sequences that finish
-/// return their cache here and sequences that join take one over, so
-/// continuous batching splices requests in and out without reallocating
-/// KV storage (the cleared `Vec`s keep their capacity).
-pub struct KvArena {
-    n_layers: usize,
-    free: Vec<DecodeState>,
-}
-
-impl KvArena {
-    pub fn new(n_layers: usize) -> Self {
-        KvArena { n_layers, free: Vec::new() }
-    }
-
-    /// A fresh (pos = 0) state, reusing a pooled allocation when possible.
-    pub fn acquire(&mut self) -> DecodeState {
-        self.free.pop().unwrap_or_else(|| DecodeState::new(self.n_layers))
-    }
-
-    pub fn release(&mut self, mut state: DecodeState) {
-        debug_assert_eq!(state.n_layers(), self.n_layers);
-        state.reset();
-        self.free.push(state);
-    }
-
-    /// Number of caches currently pooled.
-    pub fn pooled(&self) -> usize {
-        self.free.len()
-    }
-}
-
 /// Reusable activation buffers for [`NativeModel::step_batch_with`]. The
 /// decode loop owns one of these; buffers are resized only when the batch
 /// width changes (lanes joining/leaving), not on every step. Every buffer
@@ -286,7 +250,6 @@ pub struct BatchScratch {
     up: Mat,
     down: Mat,
     logits: Mat,
-    scores: Vec<f32>,
     pre: Vec<f32>,
 }
 
@@ -311,7 +274,6 @@ impl BatchScratch {
             up: empty(),
             down: empty(),
             logits: empty(),
-            scores: Vec::new(),
             pre: Vec::new(),
         }
     }
@@ -400,11 +362,11 @@ impl NativeModel {
     }
 
     pub fn new_state(&self) -> DecodeState {
-        DecodeState::new(self.cfg.n_layers)
+        DecodeState::new(self.cfg.n_layers, self.cfg.n_heads, self.cfg.head_dim())
     }
 
     pub fn new_arena(&self) -> KvArena {
-        KvArena::new(self.cfg.n_layers)
+        KvArena::new(self.cfg.n_layers, self.cfg.n_heads, self.cfg.head_dim())
     }
 
     /// Total weight bytes across the seven quantizable linears (all blocks).
@@ -450,6 +412,7 @@ impl NativeModel {
         let h = self.cfg.n_heads;
         let hd = self.cfg.head_dim();
         let theta = self.cfg.rope_theta;
+        let scale = 1.0 / (hd as f32).sqrt();
         let pos = state.pos;
 
         let mut x = self.tok_emb.row(token as usize).to_vec();
@@ -479,36 +442,8 @@ impl NativeModel {
                 rope_inplace(&mut q[head * hd..(head + 1) * hd], pos, theta);
                 rope_inplace(&mut k[head * hd..(head + 1) * hd], pos, theta);
             }
-            state.keys[l].extend_from_slice(&k);
-            state.vals[l].extend_from_slice(&v);
-            let n_pos = pos + 1;
-            let scale = 1.0 / (hd as f32).sqrt();
-            ctx.fill(0.0);
-            for head in 0..h {
-                let qh = &q[head * hd..(head + 1) * hd];
-                // scores over all cached positions
-                let mut scores = Vec::with_capacity(n_pos);
-                let mut max_s = f32::NEG_INFINITY;
-                for p in 0..n_pos {
-                    let kh = &state.keys[l][p * d + head * hd..p * d + (head + 1) * hd];
-                    let s = crate::tensor::ops::dot(qh, kh) * scale;
-                    max_s = max_s.max(s);
-                    scores.push(s);
-                }
-                let mut denom = 0.0f32;
-                for s in scores.iter_mut() {
-                    *s = (*s - max_s).exp();
-                    denom += *s;
-                }
-                let ctx_h = &mut ctx[head * hd..(head + 1) * hd];
-                for p in 0..n_pos {
-                    let w = scores[p] / denom;
-                    let vh = &state.vals[l][p * d + head * hd..p * d + (head + 1) * hd];
-                    for (c, &vv) in ctx_h.iter_mut().zip(vh) {
-                        *c += w * vv;
-                    }
-                }
-            }
+            state.append_kv(l, &k, &v);
+            attention::attention_single(l, h, hd, scale, &q, state, &mut ctx);
             if let Some(r) = rec.as_deref_mut() {
                 r.push(ctx.clone());
             }
@@ -535,7 +470,10 @@ impl NativeModel {
             }
         }
         state.pos += 1;
-        rmsnorm(&x.clone(), &self.final_norm, &mut x);
+        // Reuse `normed` (free here) as the pre-norm copy instead of
+        // cloning `x` for the in-place final rmsnorm.
+        normed.copy_from_slice(&x);
+        rmsnorm(&normed, &self.final_norm, &mut x);
         let mut logits = vec![0.0f32; self.cfg.vocab];
         self.head.matvec(&x, &mut logits);
         logits
@@ -547,9 +485,15 @@ impl NativeModel {
     ///
     /// Every linear runs through the batched [`LinearOp::matmul`], so each
     /// quantized weight tile is decoded once per step instead of once per
-    /// lane; attention is per-lane (lanes may sit at different positions).
-    /// Per-lane arithmetic is bit-identical to [`NativeModel::step`].
-    pub fn step_batch(&self, states: &mut [&mut DecodeState], tokens: &[u32]) -> Mat {
+    /// lane; attention fans the independent (lane, head) items across the
+    /// worker pool ([`attention::attention_batch`]), with lanes free to sit
+    /// at different positions. Per-lane arithmetic is bit-identical to
+    /// [`NativeModel::step`] at any thread count.
+    ///
+    /// Lanes are any [`KvLaneMut`] slice: a contiguous `&mut [DecodeState]`
+    /// slab (the scheduler's zero-allocation path) or a gathered
+    /// `&mut [&mut DecodeState]`.
+    pub fn step_batch<S: KvLaneMut>(&self, states: &mut [S], tokens: &[u32]) -> Mat {
         let mut scratch = BatchScratch::new();
         self.step_batch_with(&mut scratch, states, tokens);
         scratch.logits
@@ -561,10 +505,10 @@ impl NativeModel {
     /// of reallocated (they are only re-sized when the batch width changes).
     /// All buffers are fully overwritten before being read, so reuse cannot
     /// leak state between steps. Results land in [`BatchScratch::logits`].
-    pub fn step_batch_with(
+    pub fn step_batch_with<S: KvLaneMut>(
         &self,
         scratch: &mut BatchScratch,
-        states: &mut [&mut DecodeState],
+        states: &mut [S],
         tokens: &[u32],
     ) {
         assert_eq!(states.len(), tokens.len(), "one state per token lane");
@@ -573,6 +517,7 @@ impl NativeModel {
         let h = self.cfg.n_heads;
         let hd = self.cfg.head_dim();
         let theta = self.cfg.rope_theta;
+        let scale = 1.0 / (hd as f32).sqrt();
         let ff = self.cfg.d_ff;
 
         scratch.ensure(b, d, ff, self.cfg.vocab);
@@ -588,7 +533,6 @@ impl NativeModel {
             up,
             down,
             logits,
-            scores,
             pre,
         } = scratch;
         for (r, &tok) in tokens.iter().enumerate() {
@@ -603,46 +547,14 @@ impl NativeModel {
             blk.wk.matmul(&normed, &mut k);
             blk.wv.matmul(&normed, &mut v);
             for r in 0..b {
-                let pos = states[r].pos;
+                let pos = states[r].kv().pos;
                 for head in 0..h {
                     rope_inplace(&mut q.row_mut(r)[head * hd..(head + 1) * hd], pos, theta);
                     rope_inplace(&mut k.row_mut(r)[head * hd..(head + 1) * hd], pos, theta);
                 }
-                states[r].keys[l].extend_from_slice(k.row(r));
-                states[r].vals[l].extend_from_slice(v.row(r));
+                states[r].kv_mut().append_kv(l, k.row(r), v.row(r));
             }
-            let scale = 1.0 / (hd as f32).sqrt();
-            ctx.data.fill(0.0);
-            for r in 0..b {
-                let st = &*states[r];
-                let n_pos = st.pos + 1;
-                let qrow = q.row(r);
-                let ctx_row = ctx.row_mut(r);
-                for head in 0..h {
-                    let qh = &qrow[head * hd..(head + 1) * hd];
-                    scores.clear();
-                    let mut max_s = f32::NEG_INFINITY;
-                    for p in 0..n_pos {
-                        let kh = &st.keys[l][p * d + head * hd..p * d + (head + 1) * hd];
-                        let s = crate::tensor::ops::dot(qh, kh) * scale;
-                        max_s = max_s.max(s);
-                        scores.push(s);
-                    }
-                    let mut denom = 0.0f32;
-                    for s in scores.iter_mut() {
-                        *s = (*s - max_s).exp();
-                        denom += *s;
-                    }
-                    let ctx_h = &mut ctx_row[head * hd..(head + 1) * hd];
-                    for p in 0..n_pos {
-                        let w = scores[p] / denom;
-                        let vh = &st.vals[l][p * d + head * hd..p * d + (head + 1) * hd];
-                        for (c, &vv) in ctx_h.iter_mut().zip(vh) {
-                            *c += w * vv;
-                        }
-                    }
-                }
-            }
+            attention::attention_batch(l, h, hd, scale, q, &*states, ctx);
             blk.wo.matmul(&ctx, &mut o);
             for (xv, &ov) in x.data.iter_mut().zip(&o.data) {
                 *xv += ov;
@@ -661,7 +573,7 @@ impl NativeModel {
             }
         }
         for st in states.iter_mut() {
-            st.pos += 1;
+            st.kv_mut().pos += 1;
         }
         for r in 0..b {
             pre.clear();
@@ -851,23 +763,88 @@ mod tests {
     }
 
     #[test]
-    fn kv_arena_recycles_states() {
+    fn kv_arena_recycles_states_and_pages() {
         let m = tiny_model();
         let mut arena = m.new_arena();
         let mut s = arena.acquire();
         m.step(&mut s, 1);
         m.step(&mut s, 2);
         assert!(s.kv_bytes() > 0);
-        let cap_before: usize = s.keys.iter().map(|k| k.capacity()).sum();
+        let pages_held = s.kv_allocated_bytes();
+        assert!(pages_held > 0);
         arena.release(s);
         assert_eq!(arena.pooled(), 1);
-        let s2 = arena.acquire();
+        assert!(arena.pooled_pages() > 0, "eviction must return pages to the slab");
+        let mut s2 = arena.acquire();
         assert_eq!(arena.pooled(), 0);
         assert_eq!(s2.pos, 0);
         assert_eq!(s2.kv_bytes(), 0);
-        // The recycled state keeps its backing allocation.
-        let cap_after: usize = s2.keys.iter().map(|k| k.capacity()).sum();
-        assert_eq!(cap_before, cap_after);
+        // The recycled state re-pages from the slab instead of allocating:
+        // after one step it holds slab pages again and the slab drained.
+        let pooled_before = arena.pooled_pages();
+        m.step(&mut s2, 3);
+        assert_eq!(s2.kv_allocated_bytes(), pages_held);
+        assert!(arena.pooled_pages() < pooled_before);
+    }
+
+    #[test]
+    fn decode_across_page_boundary_matches_replay() {
+        // A sequence longer than one KV page must keep matching the
+        // full-sequence replay bitwise-closely across the boundary.
+        use crate::model::KV_PAGE_POS;
+        let m = tiny_model();
+        let mut rng = Rng::new(21);
+        let toks: Vec<u32> =
+            (0..KV_PAGE_POS + 5).map(|_| rng.below(m.cfg.vocab) as u32).collect();
+        let full = m.forward_sequence(&toks);
+        let mut st = m.new_state();
+        for (t, &tok) in toks.iter().enumerate() {
+            let logits = m.step(&mut st, tok);
+            crate::testing::assert_close(&logits, full.row(t), 1e-5, 1e-5)
+                .unwrap_or_else(|e| panic!("pos {t}: {e}"));
+        }
+        assert!(st.kv_allocated_bytes() > st.kv_bytes(), "second page only part-filled");
+    }
+
+    #[test]
+    fn step_batch_matches_step_across_page_boundary() {
+        // One lane past the page boundary, one fresh lane: the paged
+        // batched path must equal scalar decode EXACTLY for both.
+        use crate::model::KV_PAGE_POS;
+        let m = tiny_model();
+        let depth = KV_PAGE_POS + 2;
+        let mut long = m.new_state();
+        let mut long_ref = m.new_state();
+        for i in 0..depth {
+            let t = (i % 97) as u32;
+            m.step(&mut long, t);
+            m.step(&mut long_ref, t);
+        }
+        let mut short = m.new_state();
+        let mut short_ref = m.new_state();
+        m.step(&mut short, 9);
+        m.step(&mut short_ref, 9);
+        let want_long = m.step(&mut long_ref, 4);
+        let want_short = m.step(&mut short_ref, 7);
+        let mut refs: Vec<&mut DecodeState> = vec![&mut long, &mut short];
+        let logits = m.step_batch(&mut refs, &[4, 7]);
+        assert_eq!(logits.row(0), &want_long[..]);
+        assert_eq!(logits.row(1), &want_short[..]);
+    }
+
+    #[test]
+    fn step_batch_accepts_owned_state_slabs() {
+        // The scheduler's zero-allocation path passes `&mut [DecodeState]`
+        // directly; it must be bit-identical to the gathered-refs form.
+        let m = tiny_model();
+        let mut slab: Vec<DecodeState> = (0..2).map(|_| m.new_state()).collect();
+        let logits_slab = m.step_batch(&mut slab, &[5, 11]);
+        let mut a = m.new_state();
+        let mut b = m.new_state();
+        let mut refs: Vec<&mut DecodeState> = vec![&mut a, &mut b];
+        let logits_refs = m.step_batch(&mut refs, &[5, 11]);
+        assert_eq!(logits_slab.data, logits_refs.data);
+        assert_eq!(slab[0].pos, 1);
     }
 
     #[test]

@@ -1,10 +1,15 @@
 //! MiniLlama model substrate on the Rust side: the named parameter store
-//! (interchange with the HLO artifacts) and a native f32 reference forward
-//! (full-sequence and incremental-decode with KV cache). The native forward
-//! cross-validates the artifact path and powers the serving engine.
+//! (interchange with the HLO artifacts), a native f32 reference forward
+//! (full-sequence and incremental-decode), and the decode-time attention
+//! subsystem — a head-major paged KV cache ([`attention::KV_PAGE_POS`]
+//! pages recycled through [`KvArena`]) with lane×head-parallel kernels.
+//! The native forward cross-validates the artifact path and powers the
+//! serving engine.
 
+pub mod attention;
 pub mod forward;
 pub mod params;
 
-pub use forward::{BatchScratch, DecodeState, KvArena, NativeModel};
+pub use attention::{DecodeState, KvArena, KvLane, KvLaneMut, KV_PAGE_POS};
+pub use forward::{BatchScratch, NativeModel};
 pub use params::ParamStore;

@@ -66,22 +66,47 @@ pub fn generate_scheduled(
     workers: usize,
     cfg: ServeConfig,
 ) -> Result<(Vec<Vec<u32>>, ServeStats)> {
+    generate_scheduled_streaming(model, prompts, gen_tokens, workers, cfg, |_, _| {})
+}
+
+/// [`generate_scheduled`] with a streaming sink: `on_token(request_id,
+/// token)` fires for every token the moment its engine step completes
+/// (drained from [`Scheduler::step_tokens`]), so consumers see output
+/// incrementally instead of waiting for sequence completion. Tokens of one
+/// request arrive in order; tokens of different requests interleave in
+/// lane order per step.
+pub fn generate_scheduled_streaming(
+    model: &NativeModel,
+    prompts: &[Vec<u32>],
+    gen_tokens: usize,
+    workers: usize,
+    cfg: ServeConfig,
+    mut on_token: impl FnMut(u64, u32),
+) -> Result<(Vec<Vec<u32>>, ServeStats)> {
     let t0 = std::time::Instant::now();
     // An explicit [serve] workers knob overrides the positional argument,
     // so config files drive the engine the same way the CLI does.
     let workers = if cfg.workers != 0 { cfg.workers } else { workers };
     let mut sched = Scheduler::with_workers(model, cfg, workers);
     let mut done = Vec::with_capacity(prompts.len());
+    let mut drain_step = |sched: &mut Scheduler, done: &mut Vec<_>| {
+        done.extend(sched.step());
+        for &(id, tok) in sched.step_tokens() {
+            on_token(id, tok);
+        }
+    };
     for p in prompts {
         // Back-pressure: when the admission queue is full, drain decode
         // steps until a slot frees instead of erroring — `max_queued` is a
         // buffering knob here, not a hard cap on the request set.
         while sched.queued() >= sched.cfg.max_queued {
-            done.extend(sched.step());
+            drain_step(&mut sched, &mut done);
         }
         sched.submit(p, gen_tokens)?;
     }
-    done.extend(sched.run_to_completion());
+    while sched.has_work() {
+        drain_step(&mut sched, &mut done);
+    }
     done.sort_by_key(|f| f.id);
     let wall = t0.elapsed().as_secs_f64();
     ensure!(done.len() == prompts.len(), "scheduler dropped requests");
@@ -91,7 +116,7 @@ pub fn generate_scheduled(
     let mut ttfts = Vec::with_capacity(done.len());
     let mut waits = Vec::with_capacity(done.len());
     let mut kv_bytes = 0usize;
-    // run_to_completion returns submission order, which is prompt order.
+    // `done` was sorted by id above: submission order, which is prompt order.
     for fr in done {
         lats.extend_from_slice(&fr.metrics.token_ms);
         ttfts.push(fr.metrics.ttft_ms);
@@ -255,6 +280,28 @@ mod tests {
         let (got2, stats) = generate_scheduled(&m, &prompts, 7, 1, cfg).unwrap();
         assert_eq!(got2, want);
         assert!(stats.batch_occupancy <= 2.0 + 1e-9);
+    }
+
+    #[test]
+    fn streaming_callback_sees_every_token_in_order() {
+        // The streamed (id, token) feed must reassemble exactly into the
+        // returned outputs, even with back-pressure draining mid-submit.
+        let m = model();
+        let prompts = random_prompts(m.cfg.vocab, 4, 4, 11);
+        let mut streamed: std::collections::HashMap<u64, Vec<u32>> = Default::default();
+        let cfg = ServeConfig { max_batch: 2, max_queued: 2, ..ServeConfig::default() };
+        let (outs, _) = generate_scheduled_streaming(&m, &prompts, 5, 1, cfg, |id, tok| {
+            streamed.entry(id).or_default().push(tok);
+        })
+        .unwrap();
+        assert_eq!(outs.len(), 4);
+        for (i, out) in outs.iter().enumerate() {
+            assert_eq!(&streamed[&(i as u64)], out, "request {i}");
+        }
+        // And the non-streaming wrapper returns identical outputs.
+        let cfg = ServeConfig { max_batch: 2, max_queued: 2, ..ServeConfig::default() };
+        let (plain, _) = generate_scheduled(&m, &prompts, 5, 1, cfg).unwrap();
+        assert_eq!(plain, outs);
     }
 
     #[test]

@@ -17,9 +17,11 @@
 //!   per-lane arithmetic bit-identical to the scalar `step`.
 //! * **[`scheduler::Scheduler`]** — admission queue (`max_queued`
 //!   back-pressure), continuous batching up to `max_batch` lanes (finished
-//!   sequences evicted mid-flight, queued requests spliced in at the next
-//!   step), and per-request metrics: queue wait, time-to-first-token, and
-//!   per-token latency percentiles.
+//!   sequences evicted mid-flight — their KV pages return to the arena
+//!   slab — and queued requests spliced in at the next step), per-request
+//!   metrics (queue wait, time-to-first-token, per-token latency
+//!   percentiles), and a streaming drain (`step_tokens`) exposing every
+//!   step's tokens as they are generated.
 //! * **[`engine`]** — `generate_batch` (compatibility wrapper over the
 //!   scheduler, bit-identical greedy outputs), `generate_scheduled` (with
 //!   explicit knobs), and `generate_per_sequence` (the original
@@ -32,6 +34,7 @@ pub mod scheduler;
 
 pub use builder::{build_serving_model, ServeFormat};
 pub use engine::{
-    generate_batch, generate_per_sequence, generate_scheduled, random_prompts, ServeStats,
+    generate_batch, generate_per_sequence, generate_scheduled, generate_scheduled_streaming,
+    random_prompts, ServeStats,
 };
 pub use scheduler::{greedy_argmax, FinishedRequest, RequestMetrics, Scheduler};

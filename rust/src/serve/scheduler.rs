@@ -3,12 +3,16 @@
 //! Requests enter an admission queue (`max_queued` back-pressure) and are
 //! spliced into decode lanes up to `max_batch` wide. Each engine step runs
 //! ONE batched model step over all active lanes ([`NativeModel::step_batch`],
-//! which decodes every quantized weight tile once per step), finished
-//! sequences are evicted mid-flight — their KV caches return to a
-//! [`KvArena`] — and queued requests take over the freed lanes at the next
-//! step. Per-lane arithmetic is bit-identical to the scalar
-//! [`NativeModel::step`] path, so greedy outputs match per-sequence decode
-//! exactly regardless of batch composition.
+//! which decodes every quantized weight tile once per step and fans the
+//! (lane, head) attention items across the worker pool), finished sequences
+//! are evicted mid-flight — their KV pages return to a [`KvArena`] slab —
+//! and queued requests take over the freed lanes at the next step. Per-lane
+//! arithmetic is bit-identical to the scalar [`NativeModel::step`] path, so
+//! greedy outputs match per-sequence decode exactly regardless of batch
+//! composition. Lane KV caches live in a contiguous slab passed straight to
+//! the model, and per-step buffers are reused, so a warm steady-state step
+//! performs no heap allocation; each step's tokens are exposed through
+//! [`Scheduler::step_tokens`] for streaming consumers.
 //!
 //! Prefill is chunked: all freshly admitted lanes advance through their
 //! prompts (all but the last token) together, one batched
@@ -75,7 +79,6 @@ struct Queued {
 
 struct Lane {
     id: u64,
-    state: DecodeState,
     /// Next token to feed (last prompt token, then each generated token).
     pending: u32,
     out: Vec<u32>,
@@ -87,6 +90,13 @@ struct Lane {
 }
 
 /// The continuous-batching engine: admission queue + decode lane slab.
+///
+/// Lane metadata (`lanes`) and KV caches (`states`) are parallel vectors
+/// kept index-aligned (both `swap_remove` on eviction): the decode step
+/// passes the contiguous `&mut [DecodeState]` slab straight to
+/// [`NativeModel::step_batch_with`], so a steady-state step gathers no
+/// per-step reference vector and performs no heap allocation once the
+/// token/emission buffers are warm.
 pub struct Scheduler<'m> {
     model: &'m NativeModel,
     pub cfg: ServeConfig,
@@ -97,9 +107,15 @@ pub struct Scheduler<'m> {
     epoch: Instant,
     queue: VecDeque<Queued>,
     lanes: Vec<Lane>,
+    states: Vec<DecodeState>,
     arena: KvArena,
     scratch: BatchScratch,
     prefill_scratch: BatchScratch,
+    /// Reused per-step pending-token buffer (cleared, never shrunk).
+    token_buf: Vec<u32>,
+    /// Tokens emitted by the most recent step, in lane order at the time
+    /// of the step — the streaming drain ([`Scheduler::step_tokens`]).
+    emitted: Vec<(u64, u32)>,
     next_id: u64,
     steps: usize,
     lane_steps: usize,
@@ -128,12 +144,22 @@ impl<'m> Scheduler<'m> {
             epoch: Instant::now(),
             queue: VecDeque::new(),
             lanes: Vec::new(),
+            states: Vec::new(),
             scratch: BatchScratch::new(),
             prefill_scratch: BatchScratch::new(),
+            token_buf: Vec::new(),
+            emitted: Vec::new(),
             next_id: 0,
             steps: 0,
             lane_steps: 0,
         }
+    }
+
+    /// Pre-allocate `pages` KV pages in the arena's shared slab so decode
+    /// page grabs (one per lane per [`crate::model::KV_PAGE_POS`] tokens)
+    /// never hit the system allocator mid-serve.
+    pub fn reserve_kv_pages(&self, pages: usize) {
+        self.arena.reserve_pages(pages);
     }
 
     /// Worker threads backing the scalar-prefill reference path.
@@ -200,6 +226,12 @@ impl<'m> Scheduler<'m> {
         self.arena.pooled()
     }
 
+    /// KV pages currently pooled in the arena's shared slab (whole pages
+    /// returned by evicted lanes, less pages re-taken by growing lanes).
+    pub fn pooled_kv_pages(&self) -> usize {
+        self.arena.pooled_pages()
+    }
+
     /// Splice queued requests into free lanes and prefill their prompts.
     fn admit(&mut self, finished: &mut Vec<FinishedRequest>) {
         let mut fresh: Vec<(Queued, DecodeState)> = Vec::new();
@@ -255,60 +287,89 @@ impl<'m> Scheduler<'m> {
         // Lanes whose prompts end drop out of the chunk; prefill logits are
         // discarded. Per-lane arithmetic is bit-identical to scalar
         // `step` prefill because `step_batch` is bit-identical per lane.
-        let max_pre = fresh.iter().map(|(qr, _)| qr.prompt.len() - 1).max().unwrap_or(0);
+        //
+        // Longest prompts first (stable, so equal lengths keep submission
+        // order): the lanes still in the chunk at any depth are then a
+        // PREFIX of the state slab, so each depth passes a contiguous
+        // sub-slice and the reused token buffer — no per-depth gathering
+        // of `&mut` refs. Lane order never affects per-lane results.
+        fresh.sort_by(|a, b| b.0.prompt.len().cmp(&a.0.prompt.len()));
+        let (metas, mut states): (Vec<Queued>, Vec<DecodeState>) = fresh.into_iter().unzip();
+        let max_pre = metas.first().map(|q| q.prompt.len() - 1).unwrap_or(0);
         for t in 0..max_pre {
-            let mut tokens = Vec::new();
-            let mut states: Vec<&mut DecodeState> = Vec::new();
-            for (qr, st) in fresh.iter_mut() {
-                if t + 1 < qr.prompt.len() {
-                    tokens.push(qr.prompt[t]);
-                    states.push(st);
+            self.token_buf.clear();
+            for q in &metas {
+                if t + 1 < q.prompt.len() {
+                    self.token_buf.push(q.prompt[t]);
+                } else {
+                    break;
                 }
             }
-            self.model.step_batch_with(&mut self.prefill_scratch, &mut states, &tokens);
+            let active = self.token_buf.len();
+            self.model.step_batch_with(
+                &mut self.prefill_scratch,
+                &mut states[..active],
+                &self.token_buf,
+            );
         }
-        for (qr, state) in fresh {
+        for (qr, state) in metas.into_iter().zip(states) {
             self.push_lane(qr, state, admitted);
         }
     }
 
     fn push_lane(&mut self, qr: Queued, state: DecodeState, admitted: f64) {
         let pending = *qr.prompt.last().unwrap();
+        // Reserve the known-bounded output/latency capacity up front so
+        // steady-state pushes never reallocate (capped so an absurd
+        // gen_tokens request cannot pre-pin memory).
+        let reserve = qr.gen_tokens.min(1 << 16);
         self.lanes.push(Lane {
             id: qr.id,
-            state,
             pending,
-            out: Vec::new(),
+            out: Vec::with_capacity(reserve),
             gen_tokens: qr.gen_tokens,
             submitted: qr.submitted,
             admitted,
             first_token: None,
-            token_ms: Vec::new(),
+            token_ms: Vec::with_capacity(reserve),
         });
+        self.states.push(state);
+    }
+
+    /// Tokens generated by the most recent [`Scheduler::step`], one
+    /// `(request id, token)` per lane that decoded (including lanes that
+    /// finished during that step), in lane order. This is the streaming
+    /// drain: callers can forward tokens after every step instead of
+    /// waiting for sequence completion.
+    pub fn step_tokens(&self) -> &[(u64, u32)] {
+        &self.emitted
     }
 
     /// One engine step: admit queued requests, run one batched decode step
     /// over all lanes, evict finished sequences. Returns the requests that
-    /// completed during this step.
+    /// completed during this step; per-lane tokens of the step are exposed
+    /// via [`Scheduler::step_tokens`] for streaming consumers.
     pub fn step(&mut self) -> Vec<FinishedRequest> {
         let mut finished = Vec::new();
         self.admit(&mut finished);
+        self.emitted.clear();
         if self.lanes.is_empty() {
             return finished;
         }
-        let tokens: Vec<u32> = self.lanes.iter().map(|l| l.pending).collect();
+        debug_assert_eq!(self.lanes.len(), self.states.len());
+        self.token_buf.clear();
+        self.token_buf.extend(self.lanes.iter().map(|l| l.pending));
         let t0 = Instant::now();
-        {
-            let mut states: Vec<&mut DecodeState> =
-                self.lanes.iter_mut().map(|l| &mut l.state).collect();
-            self.model.step_batch_with(&mut self.scratch, &mut states, &tokens);
-        }
+        self.model.step_batch_with(&mut self.scratch, &mut self.states, &self.token_buf);
         self.steps += 1;
         self.lane_steps += self.lanes.len();
+        let scratch = &self.scratch;
+        let emitted = &mut self.emitted;
         for (r, lane) in self.lanes.iter_mut().enumerate() {
-            let next = greedy_argmax(self.scratch.logits().row(r));
+            let next = greedy_argmax(scratch.logits().row(r));
             lane.out.push(next);
             lane.pending = next;
+            emitted.push((lane.id, next));
         }
         // Per-token latency covers step + sampling, matching what the
         // per-sequence path times per token.
@@ -320,13 +381,14 @@ impl<'m> Scheduler<'m> {
                 lane.first_token = Some(now);
             }
         }
-        // Evict finished lanes; their KV caches go back to the arena so the
-        // next admit reuses the allocations.
+        // Evict finished lanes; their KV pages go back to the arena slab so
+        // admitted and growing lanes reuse them.
         let mut r = 0;
         while r < self.lanes.len() {
             if self.lanes[r].out.len() >= self.lanes[r].gen_tokens {
                 let lane = self.lanes.swap_remove(r);
-                finished.push(self.finish(lane));
+                let state = self.states.swap_remove(r);
+                finished.push(self.finish(lane, state));
             } else {
                 r += 1;
             }
@@ -334,9 +396,9 @@ impl<'m> Scheduler<'m> {
         finished
     }
 
-    fn finish(&mut self, lane: Lane) -> FinishedRequest {
-        let kv_bytes = lane.state.kv_bytes();
-        self.arena.release(lane.state);
+    fn finish(&mut self, lane: Lane, state: DecodeState) -> FinishedRequest {
+        let kv_bytes = state.kv_bytes();
+        self.arena.release(state);
         let metrics = RequestMetrics {
             queue_wait_ms: (lane.admitted - lane.submitted) * 1e3,
             ttft_ms: (lane.first_token.unwrap_or(lane.admitted) - lane.submitted) * 1e3,
@@ -487,6 +549,97 @@ mod tests {
         for (i, (p, &g)) in prompts.iter().zip(&gens).enumerate() {
             assert_eq!(chunked[i], reference_decode(&m, p, g), "request {i}");
         }
+    }
+
+    #[test]
+    fn step_tokens_streams_generations_incrementally() {
+        // Tokens drained per step must reassemble exactly into each
+        // request's final output, and must be available BEFORE completion.
+        use std::collections::HashMap;
+        let m = model();
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig { max_batch: 2, max_queued: 8, ..ServeConfig::default() },
+        );
+        sched.submit(&[1, 2], 5).unwrap();
+        sched.submit(&[3], 3).unwrap();
+        sched.submit(&[7, 8, 9], 4).unwrap();
+        let mut streamed: HashMap<u64, Vec<u32>> = HashMap::new();
+        let mut done = Vec::new();
+        let mut saw_partial = false;
+        while sched.has_work() {
+            done.extend(sched.step());
+            for &(id, tok) in sched.step_tokens() {
+                streamed.entry(id).or_default().push(tok);
+            }
+            saw_partial |= !sched.step_tokens().is_empty() && done.is_empty();
+        }
+        assert!(saw_partial, "tokens must stream before any request completes");
+        assert_eq!(done.len(), 3);
+        for fr in &done {
+            assert_eq!(streamed[&fr.id], fr.tokens, "request {}", fr.id);
+        }
+    }
+
+    #[test]
+    fn evicted_lane_pages_are_recycled_by_spliced_lanes() {
+        let m = model();
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig { max_batch: 1, max_queued: 8, ..ServeConfig::default() },
+        );
+        sched.reserve_kv_pages(4);
+        assert!(sched.pooled_kv_pages() >= 4);
+        sched.submit(&[1, 2, 3], 3).unwrap();
+        sched.submit(&[4, 5], 2).unwrap();
+        let done = sched.run_to_completion();
+        assert_eq!(done.len(), 2);
+        // Both lanes' pages ended back in the slab.
+        assert!(sched.pooled_kv_pages() >= 4);
+        assert_eq!(sched.pooled_kv(), 1, "single lane slot reuses one shell");
+    }
+
+    #[test]
+    fn steady_state_step_makes_no_heap_allocations() {
+        // Acceptance criterion: a warm decode step — attention, the
+        // column-sharded matmuls, and scheduler bookkeeping — must not
+        // touch the heap. The model is sized so every kernel stays below
+        // its parallelism threshold: the probe counts allocations on the
+        // calling thread, which then executes the whole step.
+        use crate::cfg::ModelConfig;
+        use crate::testing::alloc_count::count_allocs;
+        let cfg = ModelConfig {
+            name: "alloc-probe".into(),
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 64,
+            rope_theta: 10000.0,
+        };
+        let ps = ParamStore::init(&cfg, &mut Rng::new(0));
+        let m = NativeModel::from_params(&ps);
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig { max_batch: 2, max_queued: 8, ..ServeConfig::default() },
+        );
+        sched.submit(&[1, 2, 3], 64).unwrap();
+        sched.submit(&[4, 5], 64).unwrap();
+        // Warm-up: admission fills scratch, the first KV page per lane, and
+        // grows the thread-local score buffer past the probe's horizon
+        // (Vec doubling: 20 warm steps leave capacity 32 > 24 probed
+        // positions; still within the first 64-position KV page).
+        for _ in 0..20 {
+            let fin = sched.step();
+            assert!(fin.is_empty());
+        }
+        let ((), allocs) = count_allocs(|| {
+            for _ in 0..3 {
+                let fin = sched.step();
+                debug_assert!(fin.is_empty());
+            }
+        });
+        assert_eq!(allocs, 0, "steady-state decode step hit the heap {allocs} time(s)");
     }
 
     #[test]

@@ -187,6 +187,17 @@ pub fn matvec(a: &Mat, x: &[f32]) -> Vec<f32> {
     (0..a.rows).map(|i| dot(a.row(i), x)).collect()
 }
 
+/// y += a * x, elementwise in index order — the attention context
+/// accumulation kernel. Kept branch-free so it auto-vectorizes; callers
+/// that rely on bit-identical results depend on the in-order accumulation.
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += a * xv;
+    }
+}
+
 /// Dense dot product (8-way unrolled for the serving hot path).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
@@ -296,6 +307,23 @@ mod tests {
         let b = Mat::randn(80, 64, 1.0, &mut rng);
         let got = matmul_tn(&a, &b);
         assert_eq!(got.data, matmul_tn_with(&a, &b, 1).data);
+    }
+
+    #[test]
+    fn axpy_accumulates_in_order() {
+        let mut y = vec![1.0f32, 2.0, 3.0];
+        axpy(&mut y, 0.5, &[2.0, 4.0, 6.0]);
+        assert_eq!(y, vec![2.0, 4.0, 6.0]);
+        // Bitwise equivalence to the scalar loop (the attention invariant).
+        let mut rng = Rng::new(11);
+        let x: Vec<f32> = (0..37).map(|_| rng.normal_f32()).collect();
+        let mut a = vec![0.25f32; 37];
+        let mut b = a.clone();
+        axpy(&mut a, 0.3, &x);
+        for (bv, &xv) in b.iter_mut().zip(&x) {
+            *bv += 0.3 * xv;
+        }
+        assert_eq!(a, b);
     }
 
     #[test]

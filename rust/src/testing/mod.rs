@@ -8,6 +8,73 @@
 
 use crate::util::Rng;
 
+pub mod alloc_count {
+    //! Heap-allocation probe for the zero-allocation steady-state tests.
+    //!
+    //! [`CountingAllocator`] wraps the system allocator and counts
+    //! allocation events (alloc / alloc_zeroed / realloc) made by the
+    //! *current thread* while a [`count_allocs`] probe is active. Counting
+    //! is thread-local so concurrently running tests (and pool workers) do
+    //! not pollute each other's probes; the flip side is that work fanned
+    //! out to pool threads is not attributed to the probing thread, so
+    //! probes should measure code paths that stay below the parallelism
+    //! thresholds. The crate's test harness installs this as the global
+    //! allocator (`#[cfg(test)]` in `lib.rs`); outside the test harness
+    //! [`count_allocs`] simply reports 0.
+
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::cell::Cell;
+
+    thread_local! {
+        // `const` + no-Drop payloads: plain TLS slots, no lazy-init
+        // registration — safe to touch from inside the allocator.
+        static ENABLED: Cell<bool> = const { Cell::new(false) };
+        static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    pub struct CountingAllocator;
+
+    #[inline]
+    fn note() {
+        ENABLED.with(|e| {
+            if e.get() {
+                ALLOCS.with(|c| c.set(c.get() + 1));
+            }
+        });
+    }
+
+    unsafe impl GlobalAlloc for CountingAllocator {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            note();
+            System.alloc(layout)
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            note();
+            System.alloc_zeroed(layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            note();
+            System.realloc(ptr, layout, new_size)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+    }
+
+    /// Run `f`, returning its value and the number of heap allocations the
+    /// current thread made while it ran.
+    pub fn count_allocs<T>(f: impl FnOnce() -> T) -> (T, u64) {
+        ALLOCS.with(|c| c.set(0));
+        ENABLED.with(|e| e.set(true));
+        let out = f();
+        ENABLED.with(|e| e.set(false));
+        (out, ALLOCS.with(|c| c.get()))
+    }
+}
+
 /// Run `f` over `cases` independently-seeded RNGs. Panics with the failing
 /// seed if `f` panics or returns `Err`.
 pub fn check<F>(name: &str, cases: u64, mut f: F)
@@ -90,6 +157,20 @@ mod tests {
     #[should_panic(expected = "replay seed")]
     fn check_reports_seed_on_failure() {
         check("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn alloc_probe_counts_only_this_threads_allocations() {
+        use super::alloc_count::count_allocs;
+        let (v, n) = count_allocs(|| {
+            let v: Vec<u64> = Vec::with_capacity(32);
+            std::hint::black_box(v)
+        });
+        assert_eq!(v.capacity(), 32);
+        assert!(n >= 1, "allocation not observed by the probe");
+        let (x, n) = count_allocs(|| std::hint::black_box(1u32) + 1);
+        assert_eq!(x, 2);
+        assert_eq!(n, 0, "allocation-free closure must count zero");
     }
 
     #[test]

@@ -130,6 +130,52 @@ fn scheduler_is_bit_identical_to_per_sequence_on_quantized_models() {
 }
 
 #[test]
+fn long_context_decode_is_bit_identical_across_kv_page_boundaries() {
+    // Every serving format must keep scheduler output EXACTLY equal to the
+    // per-sequence scalar path when sequences grow past a KV page
+    // (KV_PAGE_POS positions), exercising page-boundary crossings, paged
+    // batched attention, and mid-flight eviction with page recycling.
+    // Run under GQ_THREADS=1 (CI determinism job) and the default pool
+    // width, results must be identical.
+    use guidedquant::cfg::ServeConfig;
+    use guidedquant::model::KV_PAGE_POS;
+    use guidedquant::serve::{generate_per_sequence, generate_scheduled, random_prompts};
+
+    let ps = params();
+    let gen = KV_PAGE_POS + 6; // prompts are short, so decode crosses the boundary
+    for format in [
+        ServeFormat::Fp32,
+        ServeFormat::UniformScalar,
+        ServeFormat::NonUniformScalar,
+        ServeFormat::Vector,
+        ServeFormat::Trellis,
+    ] {
+        let m = build_serving_model(&ps, None, format, 4).unwrap();
+        let prompts = random_prompts(m.cfg.vocab, 3, 3, 13);
+        let (want, _) = generate_per_sequence(&m, &prompts, gen, 2).unwrap();
+        let cfg = ServeConfig { max_batch: 2, max_queued: 8, ..ServeConfig::default() };
+        let (got, _) = generate_scheduled(&m, &prompts, gen, 2, cfg).unwrap();
+        assert_eq!(got, want, "{format:?} diverged past the page boundary");
+    }
+}
+
+#[test]
+fn streaming_matches_batch_outputs() {
+    use guidedquant::cfg::ServeConfig;
+    use guidedquant::serve::generate_scheduled_streaming;
+    let ps = params();
+    let m = build_serving_model(&ps, None, ServeFormat::NonUniformScalar, 4).unwrap();
+    let prompts = vec![vec![1u32, 2, 3], vec![4u32, 5]];
+    let mut streamed = vec![Vec::new(); prompts.len()];
+    let cfg = ServeConfig { max_batch: 2, max_queued: 4, ..ServeConfig::default() };
+    let (outs, _) = generate_scheduled_streaming(&m, &prompts, 6, 1, cfg, |id, tok| {
+        streamed[id as usize].push(tok);
+    })
+    .unwrap();
+    assert_eq!(streamed, outs);
+}
+
+#[test]
 fn empty_prompts_are_rejected_by_both_paths() {
     use guidedquant::serve::generate_per_sequence;
     let ps = params();
