@@ -10,18 +10,22 @@
 mod common;
 
 use guidedquant::bench::bench;
+use guidedquant::cfg::TrellisVariant;
 use guidedquant::model::attention::attention_batch_with;
 use guidedquant::model::forward::{matmul_col_sharded_with, LinearOp};
 use guidedquant::model::DecodeState;
-use guidedquant::quant::formats::{LutLinear, UniformScalarLinear};
+use guidedquant::quant::formats::{LutLinear, TrellisLinear, UniformScalarLinear, VqLinear};
 use guidedquant::quant::grid::{round_all, rtn_quantize, UniformGrid};
+use guidedquant::quant::trellis::{Generator, Trellis, TrellisCode};
 use guidedquant::runtime::Value;
+use guidedquant::tensor::gemm::{self, ColWindow};
 use guidedquant::tensor::ops::{matmul, matmul_tn, matmul_tn_with, num_threads};
 use guidedquant::tensor::Mat;
 use guidedquant::util::Rng;
 
 fn main() {
     let fast = guidedquant::bench::fast_mode();
+    println!("batched decode kernel: {}", gemm::kernel_desc());
     let d = if fast { 128 } else { 512 };
     let mut rng = Rng::new(0);
     let w = Mat::randn(d, d, 1.0, &mut rng);
@@ -45,6 +49,61 @@ fn main() {
     let r = bench("matmul dxd", 1, if fast { 3 } else { 10 }, || matmul(&a, &b));
     let flops = 2.0 * (d as f64).powi(3);
     println!("   ≈ {:.2} GFLOP/s", flops / r.mean_secs / 1e9);
+
+    // -- quantized GEMM: row-at-a-time vs tiled dequant-once kernels ------
+    // Every serving format, batch 1 and 8, bit-identical by contract —
+    // only the decode/apply schedule differs. VQ and trellis operands are
+    // built directly from random codes (throughput does not depend on
+    // weight values, and running the quantizers here would dwarf the
+    // kernels being measured).
+    println!("-- quantized GEMM: row-at-a-time vs tiled ({d}x{d}) --");
+    let (vdim, vbits) = (4usize, 6u32);
+    let kcent = 1usize << vbits;
+    let vq_cb = Mat::randn(d, kcent * vdim, 1.0, &mut rng);
+    let vq_codes: Vec<u16> = (0..(d / vdim) * d).map(|_| rng.below(kcent) as u16).collect();
+    let vq = VqLinear::new(&vq_codes, vq_cb, vdim, vbits, d, d);
+    let tcfg = Trellis::new(2, TrellisVariant::ThreeInst);
+    let tgen = Generator::new(TrellisVariant::ThreeInst, tcfg.state_bits, &[], &mut rng);
+    let tcodes: Vec<TrellisCode> = (0..d)
+        .map(|_| TrellisCode {
+            initial_state: rng.below(tcfg.n_states()) as u32,
+            symbols: (0..d).map(|_| rng.below(1usize << tcfg.bits) as u16).collect(),
+            scale: 0.5 + rng.f32(),
+        })
+        .collect();
+    let trellis = TrellisLinear::new(&tcodes, tgen, tcfg, d);
+    let gemm_reps = |batch: usize| {
+        if fast {
+            5
+        } else if batch == 1 {
+            60
+        } else {
+            20
+        }
+    };
+    for (name, lin) in [
+        ("fp32", &w as &dyn LinearOp),
+        ("uniform-4bit", &uni),
+        ("lut-4bit", &lut),
+        ("vq-6bit/d4", &vq),
+        ("trellis-2bit", &trellis),
+    ] {
+        for batch in [1usize, 8] {
+            let xs = Mat::randn(batch, d, 1.0, &mut rng);
+            let mut outm = Mat::zeros(batch, d);
+            let reps = gemm_reps(batch);
+            let s = bench(&format!("{name} b={batch} row-at-a-time"), 1, reps, || {
+                lin.matmul_cols(&xs, &mut ColWindow::full(&mut outm))
+            });
+            let t = bench(&format!("{name} b={batch} tiled"), 1, reps, || {
+                gemm::matmul_tiled_with(lin, &xs, &mut ColWindow::full(&mut outm), gemm::TILE_ROWS)
+            });
+            println!(
+                "   {name} b={batch} tiled speedup ×{:.2}",
+                s.mean_secs / t.mean_secs.max(1e-12)
+            );
+        }
+    }
 
     // -- parallel kernels: serial vs shared worker pool -------------------
     let threads = num_threads();

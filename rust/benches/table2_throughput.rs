@@ -18,6 +18,11 @@ use guidedquant::serve::{
 use guidedquant::util::{human_bytes, Rng};
 
 fn main() {
+    // Table 2 numbers depend on which batched decode kernel ran — record it.
+    println!(
+        "batched decode kernel: {}",
+        guidedquant::tensor::gemm::kernel_desc()
+    );
     let model = std::env::var("GQ_BENCH_MODEL").unwrap_or_else(|_| "tiny".to_string());
     let (cfg, _) = preset(&model);
     let ps = ParamStore::init(&cfg, &mut Rng::new(0));

@@ -15,4 +15,4 @@ pub mod pool;
 
 pub use metrics::Metrics;
 pub use pipeline::{Pipeline, PipelineReport, QuantizedLayer};
-pub use pool::{global, run_jobs, run_unit_jobs, WorkerPool};
+pub use pool::{global, run_indexed, run_jobs, run_unit_jobs, Scatter, WorkerPool};

@@ -5,32 +5,57 @@
 //! dense matmuls, the (layer, group) quantization jobs, prompt prefill —
 //! submits work here instead of paying a thread spawn per call.
 //!
-//! [`run_jobs`] keeps its original contract: an ordered list of independent
-//! jobs, results in their original slots, panics propagated. Jobs are
-//! claimed from a shared atomic cursor (work stealing without queues), and
-//! the *calling* thread always participates as one worker, so a pool of
-//! `n - 1` threads yields `n`-wide parallelism and a zero-thread pool
-//! degrades to serial execution.
+//! ## Indexed scatter, allocation-free
 //!
-//! Jobs may borrow from the caller's stack even though the pool threads are
-//! long-lived: helper tasks are lifetime-erased before entering the shared
-//! queue, and `run_with` does not return until every helper has finished
+//! The primitive is [`WorkerPool::run_indexed`]: run `f(0..n)` with the
+//! items claimed from a shared atomic cursor (work stealing without
+//! queues). The calling thread always participates as one worker, so a
+//! pool of `n - 1` threads yields `n`-wide parallelism and a zero-thread
+//! pool degrades to serial execution. Submission enqueues only small
+//! plain-data helper stubs (lifetime-erased pointers to the run's shared
+//! drive closure and completion latch) into the pool's reusable queue —
+//! a warm indexed run performs **zero heap allocations** on the
+//! submitting thread, which is what lets the column-sharded batched decode
+//! step stay allocation-free in the serve steady state.
+//!
+//! [`run_jobs`] / [`run_unit_jobs`] keep their original contracts (an
+//! ordered list of independent one-shot jobs, results in their original
+//! slots, panics propagated) as thin layers over `run_indexed`.
+//!
+//! Jobs may borrow from the caller's stack even though the pool threads
+//! are long-lived: the queued helper stubs point into the submitting
+//! frame, and `run_indexed` does not return until every stub has finished
 //! (each one counts down a per-run latch on completion, panic included).
 //! While waiting, the caller help-drains the shared queue — running either
-//! its own not-yet-started helpers (no-ops once the cursor is exhausted) or
-//! other runs' tasks — so nested `run_with` calls from inside pool jobs
-//! cannot deadlock even when every pool thread is busy.
+//! its own not-yet-started helpers (no-ops once the cursor is exhausted)
+//! or other runs' stubs — so nested runs from inside pool jobs cannot
+//! deadlock even when every pool thread is busy.
 
-use std::collections::VecDeque;
+use std::marker::PhantomData;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Duration;
 
-type Task = Box<dyn FnOnce() + Send + 'static>;
+/// Lifetime-erased pointer to an in-flight run's shared drive closure.
+type DrivePtr = *const (dyn Fn() + Sync + 'static);
+
+/// A queued helper stub for an in-flight indexed run: plain data, so
+/// enqueueing helpers never allocates (the queue's buffer is reused across
+/// runs). Both pointers target the submitting stack frame, which stays
+/// alive until the run's latch confirms every stub has finished.
+#[derive(Clone, Copy)]
+struct Helper {
+    drive: DrivePtr,
+    latch: *const Latch,
+}
+
+// SAFETY: the pointees are Sync (`dyn Fn() + Sync`, `Latch`), and the
+// submitting frame outlives every queued copy (latch protocol below).
+unsafe impl Send for Helper {}
 
 struct TaskQueue {
-    tasks: VecDeque<Task>,
+    tasks: std::collections::VecDeque<Helper>,
     shutdown: bool,
 }
 
@@ -39,7 +64,7 @@ struct PoolShared {
     available: Condvar,
 }
 
-/// Countdown latch: one count per helper task of a run.
+/// Countdown latch: one count per helper stub of a run.
 struct Latch {
     remaining: Mutex<usize>,
     done: Condvar,
@@ -79,6 +104,19 @@ impl Drop for LatchGuard<'_> {
     }
 }
 
+/// Execute one queued helper stub: join the run it points at.
+fn run_helper(h: Helper) {
+    // SAFETY: the submitting frame of `run_indexed` keeps the drive
+    // closure and latch alive until the latch reaches zero, and the guard
+    // counts down even if the drive panics — so both derefs are live.
+    let latch = unsafe { &*h.latch };
+    let _guard = LatchGuard(latch);
+    let drive = unsafe { &*h.drive };
+    // The drive catches per-item panics itself; this outer catch only
+    // keeps a stray panic from unwinding into pool machinery.
+    drop(catch_unwind(AssertUnwindSafe(drive)));
+}
+
 fn worker_loop(shared: Arc<PoolShared>) {
     loop {
         let task = {
@@ -94,9 +132,7 @@ fn worker_loop(shared: Arc<PoolShared>) {
             }
         };
         match task {
-            // Tasks catch their own job panics; this outer catch only keeps
-            // a stray panic from killing the worker thread.
-            Some(t) => drop(catch_unwind(AssertUnwindSafe(t))),
+            Some(h) => run_helper(h),
             None => return,
         }
     }
@@ -114,7 +150,14 @@ impl WorkerPool {
     /// executes serially on the calling thread).
     pub fn new(threads: usize) -> Self {
         let shared = Arc::new(PoolShared {
-            queue: Mutex::new(TaskQueue { tasks: VecDeque::new(), shutdown: false }),
+            queue: Mutex::new(TaskQueue {
+                // Generous stub capacity up front (stubs are ~3 words):
+                // enqueueing helpers must not realloc mid-serve — the
+                // zero-allocation steady state of the sharded decode step
+                // depends on it even with many concurrent indexed runs.
+                tasks: std::collections::VecDeque::with_capacity(256),
+                shutdown: false,
+            }),
             available: Condvar::new(),
         });
         let handles = (0..threads)
@@ -135,17 +178,79 @@ impl WorkerPool {
         self.threads
     }
 
-    fn try_pop(&self) -> Option<Task> {
+    fn try_pop(&self) -> Option<Helper> {
         self.shared.queue.lock().unwrap().tasks.pop_front()
     }
 
-    fn push_tasks(&self, tasks: Vec<Task>) {
+    fn push_helpers(&self, h: Helper, count: usize) {
         let mut q = self.shared.queue.lock().unwrap();
-        for t in tasks {
-            q.tasks.push_back(t);
+        for _ in 0..count {
+            q.tasks.push_back(h);
         }
         drop(q);
         self.shared.available.notify_all();
+    }
+
+    /// Run `f(i)` for every `i in 0..n` with at most `workers` executing
+    /// concurrently (the caller counts as one and always participates).
+    /// Items are claimed from a shared cursor, so each index runs exactly
+    /// once; a panic in any item is re-raised here after the batch drains.
+    ///
+    /// This is the pool's scatter workhorse: `f` is shared by all workers
+    /// (`Sync`), items write into disjoint caller-owned buffers (see
+    /// [`Scatter`]), and a warm call performs no heap allocation on the
+    /// submitting thread.
+    pub fn run_indexed(&self, n: usize, workers: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        let workers = workers.clamp(1, n).min(self.threads + 1);
+        if workers <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let cursor = AtomicUsize::new(0);
+        let panic_slot: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+        let drive = || loop {
+            let i = cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                let mut slot = panic_slot.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(p);
+                }
+            }
+        };
+        let helpers = workers - 1;
+        let latch = Latch::new(helpers);
+        {
+            // SAFETY: the queued stubs borrow only this stack frame (the
+            // drive closure's captures and the latch). The frame is not
+            // left until the latch confirms every stub finished — the
+            // LatchGuard counts down even on panic — so no borrow outlives
+            // its referent.
+            let h = Helper { drive: unsafe { erase_drive(&drive) }, latch: &latch };
+            self.push_helpers(h, helpers);
+            drive();
+            // Help-drain while waiting: a popped stub is either one of our
+            // own helpers (instant no-op now the cursor is exhausted) or
+            // another run's work — running either guarantees progress even
+            // when every pool thread is blocked inside a nested run.
+            while !latch.is_done() {
+                match self.try_pop() {
+                    Some(t) => run_helper(t),
+                    None => latch.wait_timeout(Duration::from_millis(1)),
+                }
+            }
+        }
+        drop(drive);
+        if let Some(p) = panic_slot.into_inner().unwrap() {
+            resume_unwind(p);
+        }
     }
 
     /// Run `jobs` at the pool's full width, preserving result order.
@@ -161,8 +266,9 @@ impl WorkerPool {
     /// counts as one). Results land in their original slots regardless of
     /// scheduling; a panic in any job is re-raised here after the batch
     /// drains. Thin result-collecting layer over [`WorkerPool::run_units`];
-    /// scatter-style kernels that write into pre-split buffers should call
-    /// `run_units` directly and skip the per-job result slots.
+    /// scatter-style kernels that write into pre-split buffers should use
+    /// `run_units` or [`WorkerPool::run_indexed`] and skip the per-job
+    /// result slots.
     pub fn run_with<T, F>(&self, jobs: Vec<F>, workers: usize) -> Vec<T>
     where
         T: Send,
@@ -190,12 +296,11 @@ impl WorkerPool {
             .collect()
     }
 
-    /// Run result-less `jobs` with at most `workers` executing concurrently
-    /// (the caller counts as one). The workhorse behind [`WorkerPool::run`]
-    /// / [`WorkerPool::run_with`] and the scatter-style kernels (e.g. the
-    /// lane×head attention fan-out) whose jobs write into disjoint caller
-    /// buffers: no per-job result slot is allocated. A panic in any job is
-    /// re-raised here after the batch drains.
+    /// Run result-less one-shot `jobs` with at most `workers` executing
+    /// concurrently. Layer over [`WorkerPool::run_indexed`]: the cursor
+    /// claims each slot exactly once, so every `FnOnce` runs exactly once.
+    /// (This path allocates per-job slots; kernels on the zero-allocation
+    /// steady state use `run_indexed` directly.)
     pub fn run_units<F>(&self, jobs: Vec<F>, workers: usize)
     where
         F: FnOnce() + Send,
@@ -204,69 +309,11 @@ impl WorkerPool {
         if n == 0 {
             return;
         }
-        let workers = workers.clamp(1, n).min(self.threads + 1);
-        if workers <= 1 {
-            for j in jobs {
-                j();
-            }
-            return;
-        }
-        let cursor = AtomicUsize::new(0);
-        let jobs: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
-        let panic_slot: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
-        let drive = || loop {
-            let i = cursor.fetch_add(1, Ordering::Relaxed);
-            if i >= n {
-                break;
-            }
-            let job = jobs[i].lock().unwrap().take().expect("job claimed twice");
-            if let Err(p) = catch_unwind(AssertUnwindSafe(job)) {
-                let mut slot = panic_slot.lock().unwrap();
-                if slot.is_none() {
-                    *slot = Some(p);
-                }
-            }
-        };
-        let helpers = workers - 1;
-        let latch = Latch::new(helpers);
-        {
-            let mut tasks: Vec<Task> = Vec::with_capacity(helpers);
-            for _ in 0..helpers {
-                let drive_ref = &drive;
-                let latch_ref = &latch;
-                let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
-                    let _guard = LatchGuard(latch_ref);
-                    drive_ref();
-                });
-                // SAFETY: the task borrows only from this stack frame
-                // (drive's captures and the latch). The frame is not left
-                // until the latch confirms every helper finished — the
-                // LatchGuard counts down even on panic — so no borrow
-                // outlives its referent.
-                tasks.push(unsafe { erase_task(task) });
-            }
-            self.push_tasks(tasks);
-            drive();
-            // Help-drain while waiting: a popped task is either one of our
-            // own helpers (instant no-op now the cursor is exhausted) or
-            // another run's work — running either guarantees progress even
-            // when every pool thread is blocked inside a nested run.
-            while !latch.is_done() {
-                match self.try_pop() {
-                    // Same panic shield as worker_loop: a panicking foreign
-                    // task must not unwind out of this frame before our own
-                    // latch is done — queued helpers still borrow it.
-                    Some(t) => drop(catch_unwind(AssertUnwindSafe(t))),
-                    None => latch.wait_timeout(Duration::from_millis(1)),
-                }
-            }
-        }
-        // Every helper has finished (latch), so nothing borrows `drive` or
-        // the job slots any more.
-        drop(drive);
-        if let Some(p) = panic_slot.into_inner().unwrap() {
-            resume_unwind(p);
-        }
+        let slots: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+        self.run_indexed(n, workers, &|i| {
+            let job = slots[i].lock().unwrap().take().expect("job claimed twice");
+            job();
+        });
     }
 }
 
@@ -283,14 +330,62 @@ impl Drop for WorkerPool {
     }
 }
 
-/// Lifetime-erase a borrowing task so it can sit in the `'static` queue.
+/// Lifetime-erase a borrowed drive closure so its stub can sit in the
+/// `'static` queue.
 ///
 /// # Safety
-/// The caller must keep every borrow in `t` alive until the task has
-/// finished executing. `run_units` guarantees this by waiting on the
-/// per-run latch before leaving the frame the task borrows from.
-unsafe fn erase_task<'a>(t: Box<dyn FnOnce() + Send + 'a>) -> Task {
-    std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Task>(t)
+/// The caller must keep the closure alive (and unmoved) until every queued
+/// stub pointing at it has finished executing. `run_indexed` guarantees
+/// this by waiting on the per-run latch before leaving the frame.
+unsafe fn erase_drive<'a>(d: &'a (dyn Fn() + Sync + 'a)) -> DrivePtr {
+    std::mem::transmute::<&'a (dyn Fn() + Sync + 'a), &'static (dyn Fn() + Sync + 'static)>(d)
+}
+
+/// Shared handle over a `&mut [T]` for indexed scatter jobs
+/// ([`WorkerPool::run_indexed`]) that write DISJOINT ranges concurrently.
+/// The exclusive borrow is parked in the handle for `'a`; jobs carve it
+/// back into non-overlapping `&mut` slices.
+pub struct Scatter<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _life: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: the handle only hands out slices through the unsafe, disjointness-
+// contracted `slice_mut`; T: Send makes cross-thread writes sound.
+unsafe impl<T: Send> Sync for Scatter<'_, T> {}
+unsafe impl<T: Send> Send for Scatter<'_, T> {}
+
+impl<'a, T> Scatter<'a, T> {
+    pub fn new(data: &'a mut [T]) -> Self {
+        Scatter { ptr: data.as_mut_ptr(), len: data.len(), _life: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The underlying base pointer (for strided window views that cannot be
+    /// expressed as one contiguous slice — e.g. column windows).
+    pub fn as_mut_ptr(&self) -> *mut T {
+        self.ptr
+    }
+
+    /// Elements `[off, off + n)` as an exclusive slice.
+    ///
+    /// # Safety
+    /// The ranges handed out to concurrently live slices must be pairwise
+    /// disjoint and in bounds, and the caller must not touch the original
+    /// slice for `'a`.
+    #[allow(clippy::mut_from_ref)] // scatter handle: disjointness is the contract
+    pub unsafe fn slice_mut(&self, off: usize, n: usize) -> &'a mut [T] {
+        debug_assert!(off + n <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(off), n)
+    }
 }
 
 static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
@@ -308,10 +403,9 @@ pub fn global() -> &'static WorkerPool {
 /// kept as the crate-wide entry point so callers never pay thread-spawn
 /// cost per call.
 ///
-/// Unlike the old spawn-per-call implementation, concurrency is capped at
-/// the pool width (`num_threads()`, i.e. the `GQ_THREADS` override or
-/// `available_parallelism`) — asking for more workers than the machine has
-/// no longer oversubscribes it.
+/// Concurrency is capped at the pool width (`num_threads()`, i.e. the
+/// `GQ_THREADS` override or `available_parallelism`) — asking for more
+/// workers than the machine has does not oversubscribe it.
 pub fn run_jobs<T, F>(jobs: Vec<F>, workers: usize) -> Vec<T>
 where
     T: Send,
@@ -320,16 +414,21 @@ where
     global().run_with(jobs, workers)
 }
 
-/// Run result-less `jobs` on up to `workers` threads of the shared pool.
-/// Scatter entry point ([`WorkerPool::run_units`] on [`global`]): jobs that
-/// write into disjoint caller-owned buffers skip the per-job result slots
-/// `run_jobs` would allocate — the steady-state path of the lane×head
-/// attention fan-out.
+/// Run result-less `jobs` on up to `workers` threads of the shared pool
+/// ([`WorkerPool::run_units`] on [`global`]).
 pub fn run_unit_jobs<F>(jobs: Vec<F>, workers: usize)
 where
     F: FnOnce() + Send,
 {
     global().run_units(jobs, workers)
+}
+
+/// Run `f(0..n)` on up to `workers` threads of the shared pool
+/// ([`WorkerPool::run_indexed`] on [`global`]): the allocation-free scatter
+/// entry point for kernels whose items are computable from their index and
+/// write disjoint regions (column-sharded decode, lane×head attention).
+pub fn run_indexed(n: usize, workers: usize, f: &(dyn Fn(usize) + Sync)) {
+    global().run_indexed(n, workers, f)
 }
 
 #[cfg(test)]
@@ -433,6 +532,83 @@ mod tests {
                 assert_eq!(v, (i * 100 + j) as u64);
             }
         }
+    }
+
+    #[test]
+    fn indexed_runs_each_item_exactly_once() {
+        let counts: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        run_indexed(97, 8, &|i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "item {i}");
+        }
+    }
+
+    #[test]
+    fn indexed_scatter_writes_disjoint_ranges() {
+        let mut data = vec![0u32; 50];
+        let scatter = Scatter::new(&mut data);
+        run_indexed(10, 4, &|t| {
+            // SAFETY: item t writes [t*5, t*5+5) — disjoint across items.
+            let chunk = unsafe { scatter.slice_mut(t * 5, 5) };
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = (t * 10 + j) as u32;
+            }
+        });
+        for (t, chunk) in data.chunks(5).enumerate() {
+            for (j, &v) in chunk.iter().enumerate() {
+                assert_eq!(v, (t * 10 + j) as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn warm_indexed_run_is_allocation_free_on_the_submitting_thread() {
+        use crate::testing::alloc_count::count_allocs;
+        // A dedicated pool keeps the probe deterministic: no other test's
+        // stubs share this queue.
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0.0f32; 64];
+        for _ in 0..3 {
+            let scatter = Scatter::new(&mut data);
+            pool.run_indexed(8, 8, &|t| {
+                let chunk = unsafe { scatter.slice_mut(t * 8, 8) };
+                chunk.fill(t as f32);
+            });
+        }
+        let scatter = Scatter::new(&mut data);
+        let ((), n) = count_allocs(|| {
+            pool.run_indexed(8, 8, &|t| {
+                let chunk = unsafe { scatter.slice_mut(t * 8, 8) };
+                chunk.fill(t as f32 + 1.0);
+            });
+        });
+        assert_eq!(n, 0, "indexed submission must not allocate when warm");
+        assert_eq!(data[63], 8.0);
+    }
+
+    #[test]
+    fn nested_indexed_runs_do_not_deadlock() {
+        let pool = WorkerPool::new(2);
+        let total = AtomicUsize::new(0);
+        pool.run_indexed(6, 6, &|i| {
+            pool.run_indexed(4, 4, &|j| {
+                total.fetch_add(i * 10 + j, Ordering::Relaxed);
+            });
+        });
+        let want: usize = (0..6).map(|i| (0..4).map(|j| i * 10 + j).sum::<usize>()).sum();
+        assert_eq!(total.load(Ordering::Relaxed), want);
+    }
+
+    #[test]
+    #[should_panic(expected = "indexed boom")]
+    fn indexed_panic_propagates() {
+        run_indexed(4, 4, &|i| {
+            if i == 2 {
+                panic!("indexed boom");
+            }
+        });
     }
 
     #[test]

@@ -412,30 +412,28 @@ fn attention_impl<S: KvLane>(
         });
         return;
     }
-    // Fan contiguous (lane, head) ranges out as pool jobs. Each job writes
-    // a disjoint split of the context buffer; per-item arithmetic is the
-    // serial path's, so partitioning never changes values — only which
-    // worker computes which head.
+    // Fan contiguous (lane, head) ranges out as indexed scatter items on
+    // the pool: item t's range is computed from t, and its slice of the
+    // context buffer is carved from a shared handle — so a warm batched
+    // attention step submits with zero heap allocations. Per-item
+    // arithmetic is the serial path's, so partitioning never changes
+    // values — only which worker computes which head.
     let per = items.div_ceil(threads);
-    let mut jobs = Vec::with_capacity(threads);
-    let mut rest = ctxdata;
-    let mut start = 0;
-    while start < items {
+    let n_jobs = items.div_ceil(per);
+    let ctx = crate::coordinator::Scatter::new(ctxdata);
+    crate::coordinator::run_indexed(n_jobs, n_jobs, &|t| {
+        let start = t * per;
         let take = per.min(items - start);
-        let (part, tail) = rest.split_at_mut(take * hd);
-        rest = tail;
-        jobs.push(move || {
-            SCORES.with(|s| {
-                let scores = &mut *s.borrow_mut();
-                for (j, ctx_h) in part.chunks_mut(hd).enumerate() {
-                    item_attention(layer, h, hd, scale, qdata, states, start + j, scores, ctx_h);
-                }
-            });
+        // SAFETY: item t writes head slices [start, start + take) — ranges
+        // of distinct items are disjoint and in bounds.
+        let part = unsafe { ctx.slice_mut(start * hd, take * hd) };
+        SCORES.with(|s| {
+            let scores = &mut *s.borrow_mut();
+            for (j, ctx_h) in part.chunks_mut(hd).enumerate() {
+                item_attention(layer, h, hd, scale, qdata, states, start + j, scores, ctx_h);
+            }
         });
-        start += take;
-    }
-    let n_jobs = jobs.len();
-    crate::coordinator::run_unit_jobs(jobs, n_jobs);
+    });
 }
 
 /// Attention for a batch decode step: lane `r` of `q`/`ctx` attends over

@@ -5,9 +5,8 @@
 //! cross-validated against the `fwd_loss` HLO artifact, and the serving
 //! engine can swap any linear for a quantized format via [`LinearOp`].
 
-use std::sync::Mutex;
-
 use crate::cfg::ModelConfig;
+use crate::tensor::gemm::{self, ColWindow};
 use crate::tensor::Mat;
 
 use super::attention::{self, DecodeState, KvArena, KvLaneMut};
@@ -16,20 +15,49 @@ use super::params::ParamStore;
 /// A linear layer `z = x @ W` with `W: [d_in, d_out]`. Implemented by plain
 /// `Mat` (fp32) here and by every quantized serving format in
 /// `quant::formats` — the decode loop is format-agnostic.
+///
+/// ## The tile contract
+///
+/// Serving formats expose their weights to the shared tiled GEMM engine
+/// (`tensor::gemm`) through three hooks:
+///
+/// * [`LinearOp::decode_tile`] decodes rows `[i0, i1)` × columns
+///   `[lo, hi)` of the *pre-epilogue* weight matrix `D` into a caller
+///   f32 tile — once per tile per batched product, with any code→value
+///   tables pre-expanded to f32 at construction.
+/// * The engine accumulates `acc[r][j] = Σ_i xs[r][i] · D[i][j]` with a
+///   register-blocked micro-kernel. Each `(lane, column)` sum is a single
+///   flat chain in ascending `i` (resumed across tiles), with NO zero-skip
+///   branches.
+/// * [`LinearOp::tile_epilogue`] turns the raw sums into final outputs
+///   (e.g. the uniform grid's `acc·scale + Σx·zero`, the trellis
+///   per-column scale).
+///
+/// Every kernel — [`LinearOp::matvec`], the row-at-a-time
+/// [`LinearOp::matmul_cols`] fallback, and the tiled engine — must produce
+/// exactly equal results per output element (f32 `==`): the same flat
+/// ascending-`i` accumulation per element and the same epilogue
+/// arithmetic. (Reference kernels may still skip `x_i == 0` terms: adding
+/// `±0.0` to a finite running sum can change at most the sign of a zero,
+/// which `==` treats as equal and no downstream computation distinguishes.)
+/// The continuous-batching engine relies on this to keep batched greedy
+/// decode bit-identical to the per-sequence path at any tile height, shard
+/// count, and thread count.
 pub trait LinearOp: Send + Sync {
     fn d_in(&self) -> usize;
     fn d_out(&self) -> usize;
     /// out += is NOT implied: `out` is overwritten.
     fn matvec(&self, x: &[f32], out: &mut [f32]);
     /// Batched linear: `out.row(r) = xs.row(r) @ W` for every row.
-    /// `xs: [batch, d_in]`, `out: [batch, d_out]`, both overwritten row-major.
+    /// `xs: [batch, d_in]`, `out: [batch, d_out]`, both overwritten
+    /// row-major.
     ///
-    /// The default loops [`LinearOp::matvec`]; quantized serving formats
-    /// override it to decode each weight tile ONCE per step, apply it to
-    /// all batch lanes, and shard the output columns across the worker pool
-    /// (see [`matmul_col_sharded`]). Implementations must keep per-lane
-    /// arithmetic (op order included) identical to `matvec` so batched
-    /// greedy decode is bit-identical to the per-sequence path.
+    /// The default loops [`LinearOp::matvec`]; serving formats override it
+    /// with [`matmul_col_sharded`], which splits the output columns across
+    /// the worker pool and runs the tiled GEMM engine (or the row-at-a-time
+    /// window kernel when `GQ_TILE=0`) per shard — decoding each weight
+    /// tile ONCE per step and applying it to all batch lanes. Per-lane
+    /// results must equal `matvec` exactly (see the trait docs).
     fn matmul(&self, xs: &Mat, out: &mut Mat) {
         debug_assert_eq!(xs.cols, self.d_in());
         debug_assert_eq!(out.cols, self.d_out());
@@ -38,22 +66,43 @@ pub trait LinearOp: Send + Sync {
             self.matvec(xs.row(r), out.row_mut(r));
         }
     }
-    /// Columns `[lo, hi)` of the batched product:
-    /// `out.row(r) = xs.row(r) @ W[:, lo..hi]` with `out: [batch, hi-lo]`,
-    /// overwritten. Per-output-element arithmetic (accumulation order
-    /// included) must match `matvec` exactly — the column-sharded batched
-    /// path relies on this for bit-identical greedy decode at ANY shard
-    /// count. The default loops `matvec` and copies the column window;
-    /// serving formats override it with a windowed decode-once kernel.
-    fn matmul_cols(&self, xs: &Mat, out: &mut Mat, lo: usize, hi: usize) {
+    /// Row-at-a-time window kernel: write columns `[out.lo(), out.hi())` of
+    /// the batched product into the window (`out.row_mut(r)` is that slice
+    /// of output row `r`, overwritten). This is the `GQ_TILE=0` fallback
+    /// and the shard-level unit of [`matmul_col_sharded`]; per-element
+    /// arithmetic must match `matvec` exactly. The default loops `matvec`
+    /// into thread-local full-width scratch and copies the window out.
+    fn matmul_cols(&self, xs: &Mat, out: &mut ColWindow) {
         debug_assert_eq!(xs.cols, self.d_in());
-        debug_assert_eq!(out.cols, hi - lo);
-        debug_assert_eq!(xs.rows, out.rows);
-        let mut full = vec![0.0f32; self.d_out()];
-        for r in 0..xs.rows {
-            self.matvec(xs.row(r), &mut full);
-            out.row_mut(r).copy_from_slice(&full[lo..hi]);
-        }
+        debug_assert_eq!(xs.rows, out.rows());
+        let (lo, hi) = (out.lo(), out.hi());
+        gemm::with_full_scratch(self.d_out(), |full| {
+            for r in 0..xs.rows {
+                self.matvec(xs.row(r), full);
+                out.row_mut(r).copy_from_slice(&full[lo..hi]);
+            }
+        });
+    }
+    /// Whether this format implements [`LinearOp::decode_tile`] (the tiled
+    /// engine is only routed to when true).
+    fn supports_decode_tile(&self) -> bool {
+        false
+    }
+    /// Decode rows `[i0, i1)` × columns `[lo, hi)` of the pre-epilogue
+    /// weight matrix into `tile` (row-major `(i1-i0) × (hi-lo)`, fully
+    /// overwritten). Called once per tile per batched product; decoded
+    /// values must be exactly the per-weight values `matvec` multiplies by
+    /// before its epilogue.
+    fn decode_tile(&self, i0: usize, i1: usize, lo: usize, hi: usize, tile: &mut [f32]) {
+        let _ = (i0, i1, lo, hi, tile);
+        unimplemented!("decode_tile unsupported (supports_decode_tile() is false)");
+    }
+    /// Transform one lane's raw tile-accumulated window sums into final
+    /// outputs: `out_w` is the `[lo, lo + out_w.len())` slice of that
+    /// lane's output row, `x` the lane's full input row (for input-sum
+    /// terms). Default: identity (decoded values are already final).
+    fn tile_epilogue(&self, x: &[f32], out_w: &mut [f32], lo: usize) {
+        let _ = (x, out_w, lo);
     }
     /// Bytes of weight storage (for the Table 2 bits/OOM accounting).
     fn storage_bytes(&self) -> usize;
@@ -85,6 +134,12 @@ pub fn matmul_col_sharded(op: &dyn LinearOp, xs: &Mat, out: &mut Mat) {
 /// whole-width kernel). Exposed for bit-identity tests and the
 /// serial-vs-pool bench rows; shard counts that do not divide `d_out` are
 /// fine (the last shard is narrower).
+///
+/// Shards write their column windows IN PLACE into `out` (disjoint
+/// [`ColWindow`]s over one buffer) and run as indexed scatter items on the
+/// pool ([`crate::coordinator::run_indexed`]): no per-shard staging
+/// buffer, no paste copy, and — with the formats' thread-local decode
+/// scratch — no heap allocation on a warm call.
 pub fn matmul_col_sharded_with(op: &dyn LinearOp, xs: &Mat, out: &mut Mat, shards: usize) {
     debug_assert_eq!(xs.cols, op.d_in());
     debug_assert_eq!(out.cols, op.d_out());
@@ -92,72 +147,33 @@ pub fn matmul_col_sharded_with(op: &dyn LinearOp, xs: &Mat, out: &mut Mat, shard
     let d_out = op.d_out();
     let shards = shards.clamp(1, d_out.max(1));
     if shards <= 1 {
-        op.matmul_cols(xs, out, 0, d_out);
+        gemm::matmul_cols_auto(op, xs, &mut ColWindow::full(out));
         return;
     }
     let b = xs.rows;
     // Align shard boundaries to the packed-code word (32 covers every
-    // power-of-two bit width's per-word count), so each shard's
-    // `unpack_range` start stays on the word-at-a-time fast path whenever
-    // the serial whole-width kernel's would. Only applied when shards are
-    // at least a word-group wide — narrow shards (tiny layers, many
-    // threads) keep the exact split. Partitioning never changes values,
-    // only which shard computes which column.
+    // power-of-two bit width's per-word count), so each shard's decode
+    // start stays on the word-at-a-time fast path whenever the serial
+    // whole-width kernel's would. Only applied when shards are at least a
+    // word-group wide — narrow shards (tiny layers, many threads) keep the
+    // exact split. Partitioning never changes values, only which shard
+    // computes which column.
     const COL_ALIGN: usize = 32;
     let mut per = d_out.div_ceil(shards);
     if per >= COL_ALIGN {
         per = per.div_ceil(COL_ALIGN) * COL_ALIGN;
     }
-    let mut ranges = Vec::with_capacity(shards);
-    let mut lo = 0;
-    while lo < d_out {
+    let n_shards = d_out.div_ceil(per);
+    let scatter = crate::coordinator::Scatter::new(&mut out.data);
+    crate::coordinator::run_indexed(n_shards, n_shards, &|t| {
+        let lo = t * per;
         let hi = (lo + per).min(d_out);
-        ranges.push((lo, hi));
-        lo = hi;
-    }
-    let n_shards = ranges.len();
-    let jobs: Vec<_> = ranges
-        .into_iter()
-        .map(|(lo, hi)| {
-            move || {
-                let mut sub = take_shard_scratch(b, hi - lo);
-                op.matmul_cols(xs, &mut sub, lo, hi);
-                (lo, sub)
-            }
-        })
-        .collect();
-    for (lo, sub) in crate::coordinator::run_jobs(jobs, n_shards) {
-        out.paste_cols(lo, &sub);
-        put_shard_scratch(sub);
-    }
-}
-
-/// Recycled per-shard output buffers for [`matmul_col_sharded_with`]: the
-/// decode loop calls the driver once per linear per step, so sub-Mat
-/// allocations would otherwise dominate steady-state allocator traffic.
-/// Buffers are shape-agnostic `Vec<f32>`s (capacity grows to the largest
-/// `batch * shard_width` seen, then stabilizes); the stack is bounded so a
-/// one-off wide product cannot pin memory forever.
-static SHARD_SCRATCH: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
-
-/// Most shards ever in flight worth caching: pool width shards per linear,
-/// and the pool is recycled LIFO, so a small multiple covers nested use.
-const SHARD_SCRATCH_MAX: usize = 64;
-
-fn take_shard_scratch(rows: usize, cols: usize) -> Mat {
-    let mut data = SHARD_SCRATCH.lock().unwrap().pop().unwrap_or_default();
-    // No zero-fill: `matmul_cols` overwrites the full window (trait
-    // contract), so only the length matters — `resize` truncates or
-    // extends without touching retained elements.
-    data.resize(rows * cols, 0.0);
-    Mat::from_vec(rows, cols, data)
-}
-
-fn put_shard_scratch(m: Mat) {
-    let mut pool = SHARD_SCRATCH.lock().unwrap();
-    if pool.len() < SHARD_SCRATCH_MAX {
-        pool.push(m.data);
-    }
+        // SAFETY: shard t writes only the [lo, hi) column window — windows
+        // of distinct shards are disjoint, and `out` is not touched again
+        // until every shard has completed.
+        let mut win = unsafe { ColWindow::from_raw(scatter.as_mut_ptr(), b, d_out, lo, hi) };
+        gemm::matmul_cols_auto(op, xs, &mut win);
+    });
 }
 
 impl LinearOp for Mat {
@@ -188,11 +204,11 @@ impl LinearOp for Mat {
         matmul_col_sharded(self, xs, out);
     }
 
-    fn matmul_cols(&self, xs: &Mat, out: &mut Mat, lo: usize, hi: usize) {
+    fn matmul_cols(&self, xs: &Mat, out: &mut ColWindow) {
         debug_assert_eq!(xs.cols, self.rows);
-        debug_assert_eq!(out.cols, hi - lo);
-        debug_assert_eq!(xs.rows, out.rows);
-        out.data.fill(0.0);
+        debug_assert_eq!(xs.rows, out.rows());
+        let (lo, hi) = (out.lo(), out.hi());
+        out.fill(0.0);
         // Weight row i is read once and applied to every lane (per-lane op
         // order matches `matvec`: i ascending, j ascending, zeros skipped).
         for i in 0..self.rows {
@@ -206,6 +222,17 @@ impl LinearOp for Mat {
                     *o += xi * w;
                 }
             }
+        }
+    }
+
+    fn supports_decode_tile(&self) -> bool {
+        true
+    }
+
+    fn decode_tile(&self, i0: usize, i1: usize, lo: usize, hi: usize, tile: &mut [f32]) {
+        let w = hi - lo;
+        for (i, trow) in (i0..i1).zip(tile.chunks_exact_mut(w)) {
+            trow.copy_from_slice(&self.row(i)[lo..hi]);
         }
     }
 
@@ -285,23 +312,33 @@ impl BatchScratch {
     }
 
     fn ensure(&mut self, b: usize, d: usize, ff: usize, vocab: usize) {
-        if self.x.rows != b || self.x.cols != d {
-            self.x = Mat::zeros(b, d);
-            self.normed = Mat::zeros(b, d);
-            self.q = Mat::zeros(b, d);
-            self.k = Mat::zeros(b, d);
-            self.v = Mat::zeros(b, d);
-            self.ctx = Mat::zeros(b, d);
-            self.o = Mat::zeros(b, d);
-            self.down = Mat::zeros(b, d);
+        // Reshape in place, keeping each buffer's capacity: the chunked
+        // prefill shrinks the batch width as prompts end and grows it back
+        // at the next admission, and a warm flip-flop must not reallocate
+        // (capacity converges to the widest batch seen).
+        fn reshape(m: &mut Mat, rows: usize, cols: usize) {
+            if m.rows == rows && m.cols == cols {
+                return;
+            }
+            let mut data = std::mem::take(&mut m.data);
+            data.resize(rows * cols, 0.0);
+            *m = Mat::from_vec(rows, cols, data);
         }
-        if self.gate.rows != b || self.gate.cols != ff {
-            self.gate = Mat::zeros(b, ff);
-            self.up = Mat::zeros(b, ff);
+        for m in [
+            &mut self.x,
+            &mut self.normed,
+            &mut self.q,
+            &mut self.k,
+            &mut self.v,
+            &mut self.ctx,
+            &mut self.o,
+            &mut self.down,
+        ] {
+            reshape(m, b, d);
         }
-        if self.logits.rows != b || self.logits.cols != vocab {
-            self.logits = Mat::zeros(b, vocab);
-        }
+        reshape(&mut self.gate, b, ff);
+        reshape(&mut self.up, b, ff);
+        reshape(&mut self.logits, b, vocab);
     }
 }
 
@@ -898,8 +935,9 @@ mod tests {
     #[test]
     fn default_matmul_cols_window_matches_matvec() {
         // A LinearOp that only provides matvec exercises the trait-default
-        // matmul_cols (full matvec + window copy); it must agree bitwise
-        // with Mat's windowed override, shard-by-shard.
+        // matmul_cols (full matvec + window copy) and the non-tiled branch
+        // of the auto router; it must agree bitwise with Mat's windowed
+        // override, shard-by-shard.
         struct MatvecOnly(Mat);
         impl LinearOp for MatvecOnly {
             fn d_in(&self) -> usize {
@@ -919,12 +957,15 @@ mod tests {
         let w = Mat::randn(16, 9, 1.0, &mut rng);
         let xs = Mat::randn(3, 16, 1.0, &mut rng);
         let wrapped = MatvecOnly(w.clone());
+        assert!(!wrapped.supports_decode_tile());
         let (lo, hi) = (2usize, 7usize);
-        let mut want = Mat::zeros(3, hi - lo);
-        LinearOp::matmul_cols(&w, &xs, &mut want, lo, hi);
-        let mut got = Mat::zeros(3, hi - lo);
-        wrapped.matmul_cols(&xs, &mut got, lo, hi);
-        assert_eq!(got.data, want.data);
+        let mut want = Mat::zeros(3, 9);
+        LinearOp::matmul_cols(&w, &xs, &mut ColWindow::window(&mut want, lo, hi));
+        let mut got = Mat::zeros(3, 9);
+        wrapped.matmul_cols(&xs, &mut ColWindow::window(&mut got, lo, hi));
+        for r in 0..3 {
+            assert_eq!(got.row(r)[lo..hi], want.row(r)[lo..hi], "row {r}");
+        }
         // And the sharded driver over the matvec-only op stays bit-exact.
         let mut full_want = Mat::zeros(3, 9);
         for r in 0..3 {
@@ -933,6 +974,43 @@ mod tests {
         let mut full_got = Mat::zeros(3, 9);
         matmul_col_sharded_with(&wrapped, &xs, &mut full_got, 4);
         assert_eq!(full_got.data, full_want.data);
+    }
+
+    #[test]
+    fn mat_decode_tile_copies_weight_windows() {
+        let mut rng = Rng::new(12);
+        let w = Mat::randn(10, 7, 1.0, &mut rng);
+        let (i0, i1, lo, hi) = (3usize, 8usize, 2usize, 6usize);
+        let mut tile = vec![0.0f32; (i1 - i0) * (hi - lo)];
+        w.decode_tile(i0, i1, lo, hi, &mut tile);
+        for i in i0..i1 {
+            for j in lo..hi {
+                assert_eq!(tile[(i - i0) * (hi - lo) + (j - lo)], w.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn warm_sharded_matmul_is_allocation_free() {
+        // Acceptance criterion: the column-sharded batched product must not
+        // touch the heap once warm — in-place shard windows, the pool's
+        // plain-data helper stubs, and thread-local decode scratch replace
+        // every per-call buffer. The probe counts the submitting thread,
+        // which always participates in the scatter.
+        use crate::testing::alloc_count::count_allocs;
+        let mut rng = Rng::new(13);
+        let w = Mat::randn(48, 96, 1.0, &mut rng);
+        let xs = Mat::randn(4, 48, 1.0, &mut rng);
+        let mut out = Mat::zeros(4, 96);
+        for _ in 0..3 {
+            matmul_col_sharded_with(&w, &xs, &mut out, 4);
+        }
+        let ((), allocs) = count_allocs(|| {
+            for _ in 0..2 {
+                matmul_col_sharded_with(&w, &xs, &mut out, 4);
+            }
+        });
+        assert_eq!(allocs, 0, "warm sharded matmul allocated {allocs} time(s)");
     }
 
     #[test]

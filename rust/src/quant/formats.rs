@@ -1,4 +1,4 @@
-//! Serving formats: fused dequant-matvec kernels implementing
+//! Serving formats: fused dequant kernels implementing
 //! [`model::forward::LinearOp`] so the decode engine can serve any format.
 //!
 //! These are the CPU analogs of the paper's CUDA kernels (Table 2):
@@ -9,8 +9,20 @@
 //! * [`TrellisLinear`]       — QTIP-style stateful decode (extra ALU work
 //!                             per weight → the paper's vector-quant decode
 //!                             overhead shows up honestly).
+//!
+//! Every format provides three kernels with exactly equal per-element
+//! results (the tile contract on [`LinearOp`]): the scalar `matvec`
+//! reference, a row-at-a-time batched window kernel (`matmul_cols`, the
+//! `GQ_TILE=0` fallback), and the decode-once hooks for the shared tiled
+//! GEMM engine (`decode_tile` + `tile_epilogue`, `tensor::gemm`). All
+//! code→value tables are pre-expanded to f32 at construction (no
+//! per-element `as f32` converts or generator hashes in inner loops), all
+//! staging buffers are thread-local scratch (warm kernels allocate
+//! nothing), and constructors validate code/table shapes with clear errors
+//! instead of debug-only assertions.
 
 use crate::model::forward::{matmul_col_sharded, LinearOp};
+use crate::tensor::gemm::{with_f32_scratch, with_u16_scratch, ColWindow};
 use crate::tensor::Mat;
 
 use super::grid::UniformGrid;
@@ -27,17 +39,40 @@ pub struct UniformScalarLinear {
     pub codes: PackedCodes, // row-major d_in × d_out
     pub scale: Vec<f32>,
     pub zero: Vec<f32>,
+    /// Pre-expanded code→f32 table (`levels[q] == q as f32`, 2^bits
+    /// entries): inner decode loops gather through it instead of paying a
+    /// per-element int→float convert.
+    levels: Vec<f32>,
 }
 
 impl UniformScalarLinear {
     pub fn new(codes: &[u16], grid: &UniformGrid, d_in: usize, d_out: usize) -> Self {
-        assert_eq!(codes.len(), d_in * d_out);
+        assert_eq!(
+            codes.len(),
+            d_in * d_out,
+            "uniform format: {} codes for a {d_in}x{d_out} weight",
+            codes.len()
+        );
+        assert_eq!(
+            grid.scale.len(),
+            d_out,
+            "uniform format: grid has {} scale channels, weight has {d_out}",
+            grid.scale.len()
+        );
+        assert_eq!(
+            grid.zero.len(),
+            d_out,
+            "uniform format: grid has {} zero channels, weight has {d_out}",
+            grid.zero.len()
+        );
+        let levels: Vec<f32> = (0..1u32 << grid.bits).map(|q| q as f32).collect();
         UniformScalarLinear {
             d_in,
             d_out,
             codes: PackedCodes::pack(codes, grid.bits),
             scale: grid.scale.clone(),
             zero: grid.zero.clone(),
+            levels,
         }
     }
 }
@@ -56,18 +91,19 @@ impl LinearOp for UniformScalarLinear {
         debug_assert_eq!(out.len(), self.d_out);
         // out_j = scale_j · Σ_i x_i q_ij + zero_j · Σ_i x_i
         out.fill(0.0);
-        let mut row = vec![0u16; self.d_out];
         let mut xsum = 0.0f32;
-        for (i, &xi) in x.iter().enumerate() {
-            xsum += xi;
-            if xi == 0.0 {
-                continue;
+        with_f32_scratch(self.d_out, |wrow| {
+            for (i, &xi) in x.iter().enumerate() {
+                xsum += xi;
+                if xi == 0.0 {
+                    continue;
+                }
+                self.codes.unpack_map_f32(i * self.d_out, &self.levels, wrow);
+                for (o, &q) in out.iter_mut().zip(&*wrow) {
+                    *o += xi * q;
+                }
             }
-            self.codes.unpack_range(i * self.d_out, &mut row);
-            for (o, &q) in out.iter_mut().zip(&row) {
-                *o += xi * q as f32;
-            }
-        }
+        });
         for j in 0..self.d_out {
             out[j] = out[j] * self.scale[j] + xsum * self.zero[j];
         }
@@ -77,41 +113,61 @@ impl LinearOp for UniformScalarLinear {
         matmul_col_sharded(self, xs, out);
     }
 
-    fn matmul_cols(&self, xs: &Mat, out: &mut Mat, lo: usize, hi: usize) {
+    fn matmul_cols(&self, xs: &Mat, out: &mut ColWindow) {
         debug_assert_eq!(xs.cols, self.d_in);
-        debug_assert_eq!(out.cols, hi - lo);
-        debug_assert_eq!(xs.rows, out.rows);
+        debug_assert_eq!(xs.rows, out.rows());
+        let (lo, w) = (out.lo(), out.width());
         let b = xs.rows;
-        out.data.fill(0.0);
-        let mut row = vec![0u16; hi - lo];
-        let mut xsum = vec![0.0f32; b];
-        for i in 0..self.d_in {
-            // Unpack this shard's slice of code row i once for the batch.
-            let mut any = false;
-            for (r, s) in xsum.iter_mut().enumerate() {
-                let xi = xs.at(r, i);
-                *s += xi;
-                any |= xi != 0.0;
-            }
-            if !any {
-                continue;
-            }
-            self.codes.unpack_range(i * self.d_out + lo, &mut row);
-            for r in 0..b {
-                let xi = xs.at(r, i);
-                if xi == 0.0 {
+        out.fill(0.0);
+        with_f32_scratch(w + b, |scratch| {
+            let (wrow, xsum) = scratch.split_at_mut(w);
+            xsum.fill(0.0);
+            for i in 0..self.d_in {
+                // Decode this shard's slice of code row i once for the batch.
+                let mut any = false;
+                for (r, s) in xsum.iter_mut().enumerate() {
+                    let xi = xs.at(r, i);
+                    *s += xi;
+                    any |= xi != 0.0;
+                }
+                if !any {
                     continue;
                 }
-                for (o, &q) in out.row_mut(r).iter_mut().zip(&row) {
-                    *o += xi * q as f32;
+                self.codes.unpack_map_f32(i * self.d_out + lo, &self.levels, wrow);
+                for r in 0..b {
+                    let xi = xs.at(r, i);
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    for (o, &q) in out.row_mut(r).iter_mut().zip(&*wrow) {
+                        *o += xi * q;
+                    }
                 }
             }
-        }
-        for r in 0..b {
-            let orow = out.row_mut(r);
-            for (jj, o) in orow.iter_mut().enumerate() {
-                *o = *o * self.scale[lo + jj] + xsum[r] * self.zero[lo + jj];
+            for r in 0..b {
+                let orow = out.row_mut(r);
+                for (jj, o) in orow.iter_mut().enumerate() {
+                    *o = *o * self.scale[lo + jj] + xsum[r] * self.zero[lo + jj];
+                }
             }
+        });
+    }
+
+    fn supports_decode_tile(&self) -> bool {
+        true
+    }
+
+    fn decode_tile(&self, i0: usize, i1: usize, lo: usize, hi: usize, tile: &mut [f32]) {
+        let w = hi - lo;
+        for (i, trow) in (i0..i1).zip(tile.chunks_exact_mut(w)) {
+            self.codes.unpack_map_f32(i * self.d_out + lo, &self.levels, trow);
+        }
+    }
+
+    fn tile_epilogue(&self, x: &[f32], out_w: &mut [f32], lo: usize) {
+        let xsum: f32 = x.iter().sum();
+        for (jj, o) in out_w.iter_mut().enumerate() {
+            *o = *o * self.scale[lo + jj] + xsum * self.zero[lo + jj];
         }
     }
 
@@ -128,14 +184,28 @@ pub struct LutLinear {
     pub d_in: usize,
     pub d_out: usize,
     pub codes: PackedCodes, // row-major d_in × d_out
-    /// d_out × m, row-contiguous per channel.
+    /// d_out × m, row-contiguous per channel (already f32 — the format's
+    /// pre-expanded decode table).
     pub codebooks: Mat,
 }
 
 impl LutLinear {
     pub fn new(codes: &[u16], codebooks: Mat, bits: u32, d_in: usize, d_out: usize) -> Self {
-        assert_eq!(codes.len(), d_in * d_out);
-        assert_eq!(codebooks.rows, d_out);
+        assert_eq!(
+            codes.len(),
+            d_in * d_out,
+            "lut format: {} codes for a {d_in}x{d_out} weight",
+            codes.len()
+        );
+        assert_eq!(
+            codebooks.rows, d_out,
+            "lut format: {} codebook channels, weight has {d_out}",
+            codebooks.rows
+        );
+        let m = codebooks.cols;
+        if let Some(&c) = codes.iter().find(|&&c| c as usize >= m) {
+            panic!("lut format: code {c} indexes past the {m}-entry per-channel codebook");
+        }
         LutLinear { d_in, d_out, codes: PackedCodes::pack(codes, bits), codebooks }
     }
 }
@@ -179,55 +249,76 @@ impl LinearOp for LutLinear {
             }
             return;
         }
-        let mut row = vec![0u16; self.d_out];
-        for (i, &xi) in x.iter().enumerate() {
-            if xi == 0.0 {
-                continue;
+        with_u16_scratch(self.d_out, |row| {
+            for (i, &xi) in x.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                self.codes.unpack_range(i * self.d_out, row);
+                for j in 0..self.d_out {
+                    // gather: w_ij = cb[j][code]
+                    *unsafe { out.get_unchecked_mut(j) } +=
+                        xi * unsafe { *cb.get_unchecked(j * m + row[j] as usize) };
+                }
             }
-            self.codes.unpack_range(i * self.d_out, &mut row);
-            for j in 0..self.d_out {
-                // gather: w_ij = cb[j][code]
-                *unsafe { out.get_unchecked_mut(j) } +=
-                    xi * unsafe { *cb.get_unchecked(j * m + row[j] as usize) };
-            }
-        }
+        });
     }
 
     fn matmul(&self, xs: &Mat, out: &mut Mat) {
         matmul_col_sharded(self, xs, out);
     }
 
-    fn matmul_cols(&self, xs: &Mat, out: &mut Mat, lo: usize, hi: usize) {
+    fn matmul_cols(&self, xs: &Mat, out: &mut ColWindow) {
         debug_assert_eq!(xs.cols, self.d_in);
-        debug_assert_eq!(out.cols, hi - lo);
-        debug_assert_eq!(xs.rows, out.rows);
+        debug_assert_eq!(xs.rows, out.rows());
+        let (lo, w) = (out.lo(), out.width());
         let b = xs.rows;
-        out.data.fill(0.0);
+        out.fill(0.0);
         let m = self.codebooks.cols;
         let cb = &self.codebooks.data;
-        let mut row = vec![0u16; hi - lo];
-        let mut wrow = vec![0.0f32; hi - lo];
-        for i in 0..self.d_in {
-            if (0..b).all(|r| xs.at(r, i) == 0.0) {
-                continue;
-            }
-            // Gather this shard's slice of weight row i through the LUT
-            // once, then FMA it into every lane — the decode cost is
-            // amortized across the batch.
-            self.codes.unpack_range(i * self.d_out + lo, &mut row);
-            for (jj, w) in wrow.iter_mut().enumerate() {
-                *w = cb[(lo + jj) * m + row[jj] as usize];
-            }
-            for r in 0..b {
-                let xi = xs.at(r, i);
-                if xi == 0.0 {
-                    continue;
+        with_u16_scratch(w, |row| {
+            with_f32_scratch(w, |wrow| {
+                for i in 0..self.d_in {
+                    if (0..b).all(|r| xs.at(r, i) == 0.0) {
+                        continue;
+                    }
+                    // Gather this shard's slice of weight row i through the
+                    // LUT once, then FMA it into every lane — the decode
+                    // cost is amortized across the batch.
+                    self.codes.unpack_range(i * self.d_out + lo, row);
+                    for (jj, (wv, &code)) in wrow.iter_mut().zip(&*row).enumerate() {
+                        *wv = cb[(lo + jj) * m + code as usize];
+                    }
+                    for r in 0..b {
+                        let xi = xs.at(r, i);
+                        if xi == 0.0 {
+                            continue;
+                        }
+                        for (o, &wv) in out.row_mut(r).iter_mut().zip(&*wrow) {
+                            *o += xi * wv;
+                        }
+                    }
                 }
-                for (o, &w) in out.row_mut(r).iter_mut().zip(&wrow) {
-                    *o += xi * w;
+            })
+        });
+    }
+
+    fn supports_decode_tile(&self) -> bool {
+        true
+    }
+
+    fn decode_tile(&self, i0: usize, i1: usize, lo: usize, hi: usize, tile: &mut [f32]) {
+        let w = hi - lo;
+        let m = self.codebooks.cols;
+        let cb = &self.codebooks.data;
+        with_u16_scratch(w, |row| {
+            for (i, trow) in (i0..i1).zip(tile.chunks_exact_mut(w)) {
+                self.codes.unpack_range(i * self.d_out + lo, row);
+                for (jj, (tv, &code)) in trow.iter_mut().zip(&*row).enumerate() {
+                    *tv = cb[(lo + jj) * m + code as usize];
                 }
             }
-        }
+        });
     }
 
     fn storage_bytes(&self) -> usize {
@@ -259,7 +350,23 @@ impl VqLinear {
         d_in: usize,
         d_out: usize,
     ) -> Self {
-        assert_eq!(codes.len(), (d_in / dim) * d_out);
+        assert!(dim >= 1 && d_in % dim == 0, "vq format: dim {dim} must divide d_in {d_in}");
+        assert_eq!(
+            codes.len(),
+            (d_in / dim) * d_out,
+            "vq format: {} codes for {} points x {d_out} channels",
+            codes.len(),
+            d_in / dim
+        );
+        assert_eq!(
+            codebooks.rows, d_out,
+            "vq format: {} codebook channels, weight has {d_out}",
+            codebooks.rows
+        );
+        let k = codebooks.cols / dim;
+        if let Some(&c) = codes.iter().find(|&&c| c as usize >= k) {
+            panic!("vq format: code {c} indexes past the {k}-centroid per-channel codebook");
+        }
         VqLinear {
             d_in,
             d_out,
@@ -285,54 +392,84 @@ impl LinearOp for VqLinear {
         let dim = self.dim;
         let n_pts = self.d_in / dim;
         let cbw = self.codebooks.cols;
-        let mut row = vec![0u16; self.d_out];
-        for p in 0..n_pts {
-            let xs = &x[p * dim..(p + 1) * dim];
-            self.codes.unpack_range(p * self.d_out, &mut row);
-            for j in 0..self.d_out {
-                let c = row[j] as usize * dim;
-                let cent = &self.codebooks.data[j * cbw + c..j * cbw + c + dim];
-                let mut acc = 0.0f32;
-                for t in 0..dim {
-                    acc += xs[t] * cent[t];
+        with_u16_scratch(self.d_out, |row| {
+            for p in 0..n_pts {
+                let xsp = &x[p * dim..(p + 1) * dim];
+                self.codes.unpack_range(p * self.d_out, row);
+                for (j, &code) in row.iter().enumerate() {
+                    let c = code as usize * dim;
+                    let cent = &self.codebooks.data[j * cbw + c..j * cbw + c + dim];
+                    // Flat ascending-i accumulation (the tile contract):
+                    // each centroid lane folds straight into out_j.
+                    let o = &mut out[j];
+                    for (xv, cv) in xsp.iter().zip(cent) {
+                        *o += xv * cv;
+                    }
                 }
-                out[j] += acc;
             }
-        }
+        });
     }
 
     fn matmul(&self, xs: &Mat, out: &mut Mat) {
         matmul_col_sharded(self, xs, out);
     }
 
-    fn matmul_cols(&self, xs: &Mat, out: &mut Mat, lo: usize, hi: usize) {
+    fn matmul_cols(&self, xs: &Mat, out: &mut ColWindow) {
         debug_assert_eq!(xs.cols, self.d_in);
-        debug_assert_eq!(out.cols, hi - lo);
-        debug_assert_eq!(xs.rows, out.rows);
+        debug_assert_eq!(xs.rows, out.rows());
+        let (lo, w) = (out.lo(), out.width());
         let b = xs.rows;
-        out.data.fill(0.0);
+        out.fill(0.0);
         let dim = self.dim;
         let n_pts = self.d_in / dim;
         let cbw = self.codebooks.cols;
-        let mut row = vec![0u16; hi - lo];
-        for p in 0..n_pts {
-            // One code unpack + one centroid gather per (point, channel)
-            // of this shard's column window, shared by all lanes.
-            self.codes.unpack_range(p * self.d_out + lo, &mut row);
-            for (jj, &code) in row.iter().enumerate() {
-                let j = lo + jj;
-                let c = code as usize * dim;
-                let cent = &self.codebooks.data[j * cbw + c..j * cbw + c + dim];
+        with_u16_scratch(w, |row| {
+            for p in 0..n_pts {
+                // One code unpack + one centroid gather per (point, channel)
+                // of this shard's column window, shared by all lanes.
+                self.codes.unpack_range(p * self.d_out + lo, row);
                 for r in 0..b {
-                    let xsr = &xs.row(r)[p * dim..(p + 1) * dim];
-                    let mut acc = 0.0f32;
-                    for t in 0..dim {
-                        acc += xsr[t] * cent[t];
+                    let xsp = &xs.row(r)[p * dim..(p + 1) * dim];
+                    let orow = out.row_mut(r);
+                    for (jj, &code) in row.iter().enumerate() {
+                        let c = code as usize * dim;
+                        let base = (lo + jj) * cbw + c;
+                        let cent = &self.codebooks.data[base..base + dim];
+                        let o = &mut orow[jj];
+                        for (xv, cv) in xsp.iter().zip(cent) {
+                            *o += xv * cv;
+                        }
                     }
-                    *out.at_mut(r, jj) += acc;
                 }
             }
-        }
+        });
+    }
+
+    fn supports_decode_tile(&self) -> bool {
+        true
+    }
+
+    fn decode_tile(&self, i0: usize, i1: usize, lo: usize, hi: usize, tile: &mut [f32]) {
+        let w = hi - lo;
+        let dim = self.dim;
+        let cbw = self.codebooks.cols;
+        with_u16_scratch(w, |row| {
+            let p0 = i0 / dim;
+            let p1 = (i1 - 1) / dim;
+            for p in p0..=p1 {
+                self.codes.unpack_range(p * self.d_out + lo, row);
+                // Rows of this point that overlap the tile (tile heights
+                // need not align to the vector dim).
+                let r0 = (p * dim).max(i0);
+                let r1 = ((p + 1) * dim).min(i1);
+                for (jj, &code) in row.iter().enumerate() {
+                    let base = (lo + jj) * cbw + code as usize * dim;
+                    for i in r0..r1 {
+                        tile[(i - i0) * w + jj] = self.codebooks.data[base + (i - p * dim)];
+                    }
+                }
+            }
+        });
     }
 
     fn storage_bytes(&self) -> usize {
@@ -344,6 +481,12 @@ impl LinearOp for VqLinear {
 // Trellis (QTIP-style stateful decode)
 // ---------------------------------------------------------------------------
 
+/// Rows between stored trellis walk states. Checkpoints let
+/// `decode_tile` start a column's stateful walk at any tile boundary
+/// without replaying from row 0 (at most `TRELLIS_CKPT - 1` replay steps
+/// for tile heights that do not align).
+const TRELLIS_CKPT: usize = 64;
+
 pub struct TrellisLinear {
     pub d_in: usize,
     pub d_out: usize,
@@ -354,14 +497,47 @@ pub struct TrellisLinear {
     pub symbols: PackedCodes,
     pub initial_states: Vec<u32>,
     pub scales: Vec<f32>,
+    /// Pre-expanded state→value table (2^state_bits entries): inner loops
+    /// gather through it instead of recomputing the generator hash per
+    /// weight.
+    state_values: Vec<f32>,
+    /// Walk states at row checkpoints, per column: entry `j * n_ckpts + t`
+    /// is column j's state BEFORE absorbing the symbol of row
+    /// `t * TRELLIS_CKPT`.
+    state_ckpts: Vec<u32>,
+    n_ckpts: usize,
 }
 
 impl TrellisLinear {
     pub fn new(codes: &[TrellisCode], gen: Generator, cfg: Trellis, d_in: usize) -> Self {
+        assert!(d_in >= 1, "trellis format: empty input dimension");
+        assert!(
+            cfg.state_bits >= cfg.bits && cfg.state_bits <= 16,
+            "trellis format: state_bits {} outside bits..=16",
+            cfg.state_bits
+        );
         let d_out = codes.len();
+        let n_states = cfg.n_states();
+        let state_values: Vec<f32> = (0..n_states as u32).map(|s| gen.value(s)).collect();
+        let mask = (1u32 << cfg.state_bits) - 1;
+        let bits = cfg.bits;
+        let n_ckpts = d_in.div_ceil(TRELLIS_CKPT);
         let mut flat = Vec::with_capacity(d_in * d_out);
+        let mut state_ckpts = Vec::with_capacity(d_out * n_ckpts);
         for code in codes {
-            assert_eq!(code.symbols.len(), d_in);
+            assert_eq!(
+                code.symbols.len(),
+                d_in,
+                "trellis format: column has {} symbols, weight has {d_in} rows",
+                code.symbols.len()
+            );
+            let mut state = code.initial_state;
+            for (i, &sym) in code.symbols.iter().enumerate() {
+                if i % TRELLIS_CKPT == 0 {
+                    state_ckpts.push(state);
+                }
+                state = ((state << bits) | sym as u32) & mask;
+            }
             flat.extend_from_slice(&code.symbols);
         }
         TrellisLinear {
@@ -370,6 +546,9 @@ impl TrellisLinear {
             symbols: PackedCodes::pack(&flat, cfg.bits),
             initial_states: codes.iter().map(|c| c.initial_state).collect(),
             scales: codes.iter().map(|c| c.scale).collect(),
+            state_values,
+            state_ckpts,
+            n_ckpts,
             gen,
             cfg,
         }
@@ -388,49 +567,88 @@ impl LinearOp for TrellisLinear {
     fn matvec(&self, x: &[f32], out: &mut [f32]) {
         let mask = (1u32 << self.cfg.state_bits) - 1;
         let bits = self.cfg.bits;
-        let mut syms = vec![0u16; self.d_in];
-        for j in 0..self.d_out {
-            let mut state = self.initial_states[j];
-            self.symbols.unpack_range(j * self.d_in, &mut syms);
-            let mut acc = 0.0f32;
-            for (i, &sym) in syms.iter().enumerate() {
-                state = ((state << bits) | sym as u32) & mask;
-                acc += x[i] * self.gen.value(state);
+        with_u16_scratch(self.d_in, |syms| {
+            for j in 0..self.d_out {
+                let mut state = self.initial_states[j];
+                self.symbols.unpack_range(j * self.d_in, syms);
+                let mut acc = 0.0f32;
+                for (i, &sym) in syms.iter().enumerate() {
+                    state = ((state << bits) | sym as u32) & mask;
+                    acc += x[i] * self.state_values[state as usize];
+                }
+                out[j] = acc * self.scales[j];
             }
-            out[j] = acc * self.scales[j];
-        }
+        });
     }
 
     fn matmul(&self, xs: &Mat, out: &mut Mat) {
         matmul_col_sharded(self, xs, out);
     }
 
-    fn matmul_cols(&self, xs: &Mat, out: &mut Mat, lo: usize, hi: usize) {
+    fn matmul_cols(&self, xs: &Mat, out: &mut ColWindow) {
         debug_assert_eq!(xs.cols, self.d_in);
-        debug_assert_eq!(out.cols, hi - lo);
-        debug_assert_eq!(xs.rows, out.rows);
+        debug_assert_eq!(xs.rows, out.rows());
+        let (lo, hi) = (out.lo(), out.hi());
         let b = xs.rows;
         let mask = (1u32 << self.cfg.state_bits) - 1;
         let bits = self.cfg.bits;
-        let mut syms = vec![0u16; self.d_in];
-        let mut acc = vec![0.0f32; b];
-        for j in lo..hi {
-            // The stateful trellis walk — the expensive part of QTIP-style
-            // decode — runs once per column and feeds every lane. Columns
-            // are decode-independent, so the window shards cleanly.
-            let mut state = self.initial_states[j];
-            self.symbols.unpack_range(j * self.d_in, &mut syms);
-            acc.fill(0.0);
-            for (i, &sym) in syms.iter().enumerate() {
-                state = ((state << bits) | sym as u32) & mask;
-                let w = self.gen.value(state);
-                for (r, a) in acc.iter_mut().enumerate() {
-                    *a += xs.at(r, i) * w;
+        with_u16_scratch(self.d_in, |syms| {
+            with_f32_scratch(b, |acc| {
+                for j in lo..hi {
+                    // The stateful trellis walk — the expensive part of
+                    // QTIP-style decode — runs once per column and feeds
+                    // every lane. Columns are decode-independent, so the
+                    // window shards cleanly.
+                    let mut state = self.initial_states[j];
+                    self.symbols.unpack_range(j * self.d_in, syms);
+                    acc.fill(0.0);
+                    for (i, &sym) in syms.iter().enumerate() {
+                        state = ((state << bits) | sym as u32) & mask;
+                        let wv = self.state_values[state as usize];
+                        for (r, a) in acc.iter_mut().enumerate() {
+                            *a += xs.at(r, i) * wv;
+                        }
+                    }
+                    for (r, &a) in acc.iter().enumerate() {
+                        out.row_mut(r)[j - lo] = a * self.scales[j];
+                    }
+                }
+            })
+        });
+    }
+
+    fn supports_decode_tile(&self) -> bool {
+        true
+    }
+
+    fn decode_tile(&self, i0: usize, i1: usize, lo: usize, hi: usize, tile: &mut [f32]) {
+        let w = hi - lo;
+        let mask = (1u32 << self.cfg.state_bits) - 1;
+        let bits = self.cfg.bits;
+        let t = i0 / TRELLIS_CKPT;
+        let start = t * TRELLIS_CKPT;
+        with_u16_scratch(i1 - start, |syms| {
+            for j in lo..hi {
+                // Resume the walk from the nearest checkpoint at or before
+                // the tile, replay up to the tile's first row, then decode
+                // the tile's rows through the pre-expanded value table.
+                let mut state = self.state_ckpts[j * self.n_ckpts + t];
+                self.symbols.unpack_range(j * self.d_in + start, syms);
+                for &sym in &syms[..i0 - start] {
+                    state = ((state << bits) | sym as u32) & mask;
+                }
+                let jj = j - lo;
+                for (i, &sym) in syms[i0 - start..].iter().enumerate() {
+                    state = ((state << bits) | sym as u32) & mask;
+                    tile[i * w + jj] = self.state_values[state as usize];
                 }
             }
-            for (r, &a) in acc.iter().enumerate() {
-                *out.at_mut(r, j - lo) = a * self.scales[j];
-            }
+        });
+    }
+
+    fn tile_epilogue(&self, _x: &[f32], out_w: &mut [f32], lo: usize) {
+        for (jj, o) in out_w.iter_mut().enumerate() {
+            *o *= self.scales[lo + jj];
         }
     }
 
@@ -444,6 +662,7 @@ mod tests {
     use super::*;
     use crate::quant::grid::{round_all, rtn_quantize, UniformGrid};
     use crate::quant::trellis::trellis_quantize;
+    use crate::tensor::gemm::matmul_tiled_with;
     use crate::tensor::ops::{matmul_tn, matvec};
     use crate::testing;
     use crate::util::Rng;
@@ -468,7 +687,8 @@ mod tests {
         let mut rng = Rng::new(1);
         let w = Mat::randn(16, 8, 1.0, &mut rng);
         let res = rtn_quantize(&w, 4);
-        let lin = LutLinear::new(&res.codes.clone().unwrap(), res.codebooks.clone().unwrap(), 4, 16, 8);
+        let lin =
+            LutLinear::new(&res.codes.clone().unwrap(), res.codebooks.clone().unwrap(), 4, 16, 8);
         let x: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
         let want = matvec(&res.w_hat.transpose(), &x);
         let mut got = vec![0.0; 8];
@@ -476,11 +696,11 @@ mod tests {
         testing::assert_close(&got, &want, 1e-4, 1e-4).unwrap();
     }
 
-    #[test]
-    fn vq_format_matches_dense_dequant() {
-        let mut rng = Rng::new(2);
-        let (d_in, d_out, dim, k) = (12, 6, 2, 4);
-        // Build a VQ-coded weight matrix directly.
+    /// A VQ-coded weight matrix built directly (throughput-shaped tests
+    /// need no quantizer run).
+    fn vq_fixture(seed: u64) -> (VqLinear, Mat) {
+        let mut rng = Rng::new(seed);
+        let (d_in, d_out, dim, k) = (12usize, 6usize, 2usize, 4usize);
         let codebooks = Mat::randn(d_out, k * dim, 1.0, &mut rng);
         let n_pts = d_in / dim;
         let codes: Vec<u16> = (0..n_pts * d_out).map(|_| rng.below(k) as u16).collect();
@@ -493,35 +713,48 @@ mod tests {
                 }
             }
         }
-        let lin = VqLinear::new(&codes, codebooks, dim, 2, d_in, d_out);
-        let x: Vec<f32> = (0..d_in).map(|_| rng.normal_f32()).collect();
+        (VqLinear::new(&codes, codebooks, dim, 2, d_in, d_out), w_hat)
+    }
+
+    #[test]
+    fn vq_format_matches_dense_dequant() {
+        let (lin, w_hat) = vq_fixture(2);
+        let mut rng = Rng::new(20);
+        let x: Vec<f32> = (0..lin.d_in).map(|_| rng.normal_f32()).collect();
         let want = matvec(&w_hat.transpose(), &x);
-        let mut got = vec![0.0; d_out];
+        let mut got = vec![0.0; lin.d_out];
         lin.matvec(&x, &mut got);
         testing::assert_close(&got, &want, 1e-4, 1e-4).unwrap();
     }
 
-    #[test]
-    fn trellis_format_matches_dense_dequant() {
-        let mut rng = Rng::new(3);
+    fn trellis_fixture(seed: u64) -> (TrellisLinear, Mat) {
+        let mut rng = Rng::new(seed);
         let x_cal = Mat::randn(64, 32, 1.0, &mut rng);
         let h = matmul_tn(&x_cal, &x_cal);
         let w = Mat::randn(32, 4, 1.0, &mut rng);
         let cfg = Trellis::new(2, crate::cfg::TrellisVariant::Hyb);
         let (qr, codes, gen) = trellis_quantize(&h, &w, &cfg).unwrap();
-        let lin = TrellisLinear::new(&codes, gen, cfg, 32);
+        (TrellisLinear::new(&codes, gen, cfg, 32), qr.w_hat)
+    }
+
+    #[test]
+    fn trellis_format_matches_dense_dequant() {
+        let (lin, w_hat) = trellis_fixture(3);
+        let mut rng = Rng::new(30);
         let x: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
-        let want = matvec(&qr.w_hat.transpose(), &x);
+        let want = matvec(&w_hat.transpose(), &x);
         let mut got = vec![0.0; 4];
         lin.matvec(&x, &mut got);
         testing::assert_close(&got, &want, 1e-3, 1e-3).unwrap();
     }
 
     /// Batched `matmul` must equal looping `matvec` over the rows EXACTLY
-    /// (bitwise) — at every column-shard count, including ones that do not
-    /// divide d_out: the continuous-batching engine relies on this to keep
-    /// greedy decode identical to the per-sequence path no matter how the
-    /// worker pool splits the output channels.
+    /// (per-element f32 `==`) — at every column-shard count (including ones
+    /// that do not divide d_out) and at every tiled-GEMM tile height
+    /// (including ones that do not divide d_in): the continuous-batching
+    /// engine relies on this to keep greedy decode identical to the
+    /// per-sequence path no matter how the worker pool splits the output
+    /// channels or how the engine tiles the input rows.
     fn assert_matmul_is_looped_matvec(lin: &dyn LinearOp, b: usize, seed: u64) {
         use crate::model::forward::matmul_col_sharded_with;
         let mut rng = Rng::new(seed);
@@ -540,6 +773,31 @@ mod tests {
         let mut got = Mat::zeros(b, lin.d_out());
         lin.matmul(&xs, &mut got);
         assert_eq!(got.data, want.data, "batched matmul != looped matvec");
+        // Row-at-a-time window kernel (the GQ_TILE=0 fallback).
+        let mut row_kernel = Mat::zeros(b, lin.d_out());
+        lin.matmul_cols(&xs, &mut ColWindow::full(&mut row_kernel));
+        assert_eq!(row_kernel.data, want.data, "row-at-a-time kernel != looped matvec");
+        // Tiled engine at several heights: 1 (degenerate), a prime that
+        // divides nothing here, the exact d_in, and one past it.
+        assert!(lin.supports_decode_tile(), "serving formats must support tile decode");
+        for tile in [1usize, 3, 5, lin.d_in(), lin.d_in() + 3] {
+            let mut tiled = Mat::zeros(b, lin.d_out());
+            matmul_tiled_with(lin, &xs, &mut ColWindow::full(&mut tiled), tile);
+            assert_eq!(tiled.data, want.data, "tiled GEMM (tile={tile}) != looped matvec");
+        }
+        // Tiled engine on a column window (a shard's view).
+        if lin.d_out() >= 3 {
+            let (lo, hi) = (1usize, lin.d_out() - 1);
+            let mut windowed = Mat::zeros(b, lin.d_out());
+            matmul_tiled_with(lin, &xs, &mut ColWindow::window(&mut windowed, lo, hi), 5);
+            for r in 0..b {
+                assert_eq!(
+                    windowed.row(r)[lo..hi],
+                    want.row(r)[lo..hi],
+                    "tiled window row {r} != matvec columns"
+                );
+            }
+        }
         // 3 never divides the test d_outs evenly; d_out + 1 over-shards.
         for shards in [1usize, 2, 3, lin.d_out(), lin.d_out() + 1] {
             let mut sharded = Mat::zeros(b, lin.d_out());
@@ -578,24 +836,14 @@ mod tests {
 
     #[test]
     fn vq_matmul_exactly_matches_matvec() {
-        let mut rng = Rng::new(12);
-        let (d_in, d_out, dim, k) = (12, 6, 2, 4);
-        let codebooks = Mat::randn(d_out, k * dim, 1.0, &mut rng);
-        let n_pts = d_in / dim;
-        let codes: Vec<u16> = (0..n_pts * d_out).map(|_| rng.below(k) as u16).collect();
-        let lin = VqLinear::new(&codes, codebooks, dim, 2, d_in, d_out);
+        let (lin, _) = vq_fixture(12);
+        // dim = 2 with tile heights 1/3/5: tiles split vector points.
         assert_matmul_is_looped_matvec(&lin, 7, 103);
     }
 
     #[test]
     fn trellis_matmul_exactly_matches_matvec() {
-        let mut rng = Rng::new(13);
-        let x_cal = Mat::randn(64, 32, 1.0, &mut rng);
-        let h = matmul_tn(&x_cal, &x_cal);
-        let w = Mat::randn(32, 4, 1.0, &mut rng);
-        let cfg = Trellis::new(2, crate::cfg::TrellisVariant::Hyb);
-        let (_, codes, gen) = trellis_quantize(&h, &w, &cfg).unwrap();
-        let lin = TrellisLinear::new(&codes, gen, cfg, 32);
+        let (lin, _) = trellis_fixture(13);
         assert_matmul_is_looped_matvec(&lin, 4, 104);
     }
 
@@ -604,6 +852,86 @@ mod tests {
         let mut rng = Rng::new(14);
         let w = Mat::randn(20, 9, 1.0, &mut rng);
         assert_matmul_is_looped_matvec(&w, 5, 105);
+    }
+
+    #[test]
+    fn trellis_checkpointed_tiles_cross_checkpoint_boundaries() {
+        // d_in = 150 spans three TRELLIS_CKPT(=64) checkpoint windows;
+        // tile heights around and past the checkpoint stride must all
+        // resume the walk exactly.
+        let mut rng = Rng::new(40);
+        let d_in = 150usize;
+        let d_out = 5usize;
+        let variant = crate::cfg::TrellisVariant::ThreeInst;
+        let cfg = Trellis::new(2, variant);
+        let gen = Generator::new(variant, cfg.state_bits, &[], &mut rng);
+        let codes: Vec<TrellisCode> = (0..d_out)
+            .map(|_| TrellisCode {
+                initial_state: rng.below(cfg.n_states()) as u32,
+                symbols: (0..d_in).map(|_| rng.below(1usize << cfg.bits) as u16).collect(),
+                scale: 0.5 + rng.f32(),
+            })
+            .collect();
+        let lin = TrellisLinear::new(&codes, gen, cfg, d_in);
+        let xs = Mat::randn(3, d_in, 1.0, &mut rng);
+        let mut want = Mat::zeros(3, d_out);
+        for r in 0..3 {
+            lin.matvec(xs.row(r), want.row_mut(r));
+        }
+        for tile in [1usize, 63, 64, 65, 100, 128, d_in] {
+            let mut got = Mat::zeros(3, d_out);
+            matmul_tiled_with(&lin, &xs, &mut ColWindow::full(&mut got), tile);
+            assert_eq!(got.data, want.data, "tile={tile}");
+        }
+    }
+
+    #[test]
+    fn warm_format_kernels_are_allocation_free() {
+        // Satellite: the per-call decode buffers are gone — matvec, the
+        // row-at-a-time window kernel, and the tiled engine all run on
+        // thread-local scratch once warm.
+        use crate::testing::alloc_count::count_allocs;
+        let mut rng = Rng::new(41);
+        let w = Mat::randn(24, 10, 1.0, &mut rng);
+        let grid = UniformGrid::fit(&w, 3);
+        let (_, codes) = round_all(&w, &grid);
+        let uni = UniformScalarLinear::new(&codes, &grid, 24, 10);
+        let res = rtn_quantize(&w, 3);
+        let lut = LutLinear::new(&res.codes.unwrap(), res.codebooks.unwrap(), 3, 24, 10);
+        let (vq, _) = vq_fixture(42);
+        let (tre, _) = trellis_fixture(43);
+        for lin in [&uni as &dyn LinearOp, &lut, &vq, &tre] {
+            let xs = Mat::randn(3, lin.d_in(), 1.0, &mut rng);
+            let mut out = Mat::zeros(3, lin.d_out());
+            let mut y = vec![0.0f32; lin.d_out()];
+            // Warm every path's scratch.
+            lin.matvec(xs.row(0), &mut y);
+            lin.matmul_cols(&xs, &mut ColWindow::full(&mut out));
+            matmul_tiled_with(lin, &xs, &mut ColWindow::full(&mut out), 7);
+            let ((), n) = count_allocs(|| {
+                lin.matvec(xs.row(0), &mut y);
+                lin.matmul_cols(&xs, &mut ColWindow::full(&mut out));
+                matmul_tiled_with(lin, &xs, &mut ColWindow::full(&mut out), 7);
+            });
+            assert_eq!(n, 0, "warm kernels allocated {n} time(s)");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "indexes past")]
+    fn lut_rejects_out_of_table_codes() {
+        let mut rng = Rng::new(44);
+        let codebooks = Mat::randn(4, 8, 1.0, &mut rng);
+        let codes = vec![9u16; 8]; // 9 >= 8-entry codebook
+        LutLinear::new(&codes, codebooks, 4, 2, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide d_in")]
+    fn vq_rejects_misaligned_dim() {
+        let mut rng = Rng::new(45);
+        let codebooks = Mat::randn(4, 8, 1.0, &mut rng);
+        VqLinear::new(&[0u16; 8], codebooks, 3, 2, 10, 4);
     }
 
     #[test]

@@ -11,13 +11,18 @@ pub struct PackedCodes {
 
 impl PackedCodes {
     pub fn pack(codes: &[u16], bits: u32) -> Self {
-        assert!(bits >= 1 && bits <= 16);
+        assert!(bits >= 1 && bits <= 16, "pack: bit width {bits} outside 1..=16");
         let per_word = 32 / bits as usize;
         let n_words = codes.len().div_ceil(per_word);
         let mask = (1u32 << bits) - 1;
         let mut words = vec![0u32; n_words];
         for (idx, &c) in codes.iter().enumerate() {
-            debug_assert!((c as u32) <= mask, "code {c} exceeds {bits} bits");
+            // Always-on (not debug_assert): a silently truncated code would
+            // decode to the wrong weight for the lifetime of the format.
+            assert!(
+                (c as u32) <= mask,
+                "pack: code {c} at index {idx} does not fit in {bits} bits"
+            );
             let w = idx / per_word;
             let off = (idx % per_word) as u32 * bits;
             words[w] |= ((c as u32) & mask) << off;
@@ -58,6 +63,58 @@ impl PackedCodes {
         let mut word = self.words[w] >> off;
         for o in out.iter_mut() {
             *o = (word & mask) as u16;
+            off += bits;
+            if off + bits > 32 {
+                w += 1;
+                off = 0;
+                word = *self.words.get(w).unwrap_or(&0);
+            } else {
+                word >>= bits;
+            }
+        }
+    }
+
+    /// Decode a contiguous code range through an f32 lookup table:
+    /// `out[k] = lut[code(start + k)]`. This is the tile-granular decode
+    /// fast path of the serving formats — codes go straight from packed
+    /// words to dequantized f32 (tables are pre-expanded at format
+    /// construction), with no u16 staging buffer and no per-element
+    /// int→float convert in the caller's inner loop. Word-aligned starts
+    /// with power-of-two bit widths take a word-at-a-time path for any
+    /// output length; other starts fall back to the rolling-word decode.
+    pub fn unpack_map_f32(&self, start: usize, lut: &[f32], out: &mut [f32]) {
+        debug_assert!(start + out.len() <= self.len);
+        debug_assert!(lut.len() >= (1usize << self.bits.min(16)));
+        let bits = self.bits as usize;
+        let per_word = 32 / bits;
+        let mask = (1u32 << bits) - 1;
+        if 32 % bits == 0 && start % per_word == 0 {
+            let w0 = start / per_word;
+            let mut chunks = out.chunks_exact_mut(per_word);
+            let mut used = 0usize;
+            for (chunk, &wd) in (&mut chunks).zip(&self.words[w0..]) {
+                let mut word = wd;
+                for o in chunk {
+                    *o = lut[(word & mask) as usize];
+                    word >>= bits;
+                }
+                used += 1;
+            }
+            let rem = chunks.into_remainder();
+            if !rem.is_empty() {
+                let mut word = self.words[w0 + used];
+                for o in rem {
+                    *o = lut[(word & mask) as usize];
+                    word >>= bits;
+                }
+            }
+            return;
+        }
+        let mut w = start / per_word;
+        let mut off = (start % per_word) * bits;
+        let mut word = self.words[w] >> off;
+        for o in out.iter_mut() {
+            *o = lut[(word & mask) as usize];
             off += bits;
             if off + bits > 32 {
                 w += 1;
@@ -118,6 +175,36 @@ mod tests {
         assert_eq!(p2.storage_bytes(), 16); // 64*2 bits = 128 bits = 16 B
         let p4 = PackedCodes::pack(&codes, 4);
         assert_eq!(p4.storage_bytes(), 32);
+    }
+
+    #[test]
+    fn unpack_map_f32_matches_staged_decode_property() {
+        // The fused f32-table decode must agree with unpack_range + table
+        // gather at every bit width, start offset, and length — including
+        // word-aligned starts with non-word-multiple lengths (the tiled
+        // GEMM window shape).
+        testing::check("unpack-map-f32", 30, |rng| {
+            let bits = 1 + rng.below(8) as u32;
+            let n = 8 + rng.below(300);
+            let levels = 1usize << bits;
+            let codes: Vec<u16> = (0..n).map(|_| rng.below(levels) as u16).collect();
+            let lut: Vec<f32> = (0..levels).map(|_| rng.normal_f32()).collect();
+            let packed = PackedCodes::pack(&codes, bits);
+            let start = rng.below(n);
+            let len = rng.below(n - start + 1);
+            let mut staged = vec![0u16; len];
+            packed.unpack_range(start, &mut staged);
+            let want: Vec<f32> = staged.iter().map(|&c| lut[c as usize]).collect();
+            let mut got = vec![0.0f32; len];
+            packed.unpack_map_f32(start, &lut, &mut got);
+            testing::ensure(got == want, format!("bits={bits} start={start} len={len}"))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit in 2 bits")]
+    fn pack_rejects_out_of_range_codes() {
+        PackedCodes::pack(&[1, 2, 7], 2);
     }
 
     #[test]

@@ -4,14 +4,17 @@
 //! Layers, bottom-up:
 //!
 //! * **Batched kernels** — every serving format ([`quant::formats`])
-//!   implements `LinearOp::matmul_cols`, decoding each quantized weight
-//!   tile (packed codes, LUT gather, VQ centroids, trellis state walk)
-//!   ONCE per engine step and applying it to all batch lanes; the
-//!   `matmul_col_sharded` driver splits the output channels across the
-//!   persistent worker pool (bit-exact at any shard count). This is the
-//!   paper's amortized-decode story: per-sequence decode re-pays the
-//!   dequant cost for every token of every sequence, batched decode pays
-//!   it once.
+//!   plugs into the shared tiled GEMM engine (`tensor::gemm`): each
+//!   `[tile × window]` block of weights (packed codes, LUT gather, VQ
+//!   centroids, checkpointed trellis state walk) is decoded ONCE per
+//!   engine step into thread-local f32 scratch and applied to all batch
+//!   lanes by a register-blocked micro-kernel; the `matmul_col_sharded`
+//!   driver splits the output channels across the persistent worker pool
+//!   as in-place column windows (bit-exact at any tile height, shard
+//!   count, and thread count; `GQ_TILE=0` falls back to the row-at-a-time
+//!   kernels). This is the paper's amortized-decode story: per-sequence
+//!   decode re-pays the dequant cost for every token of every sequence,
+//!   batched decode pays it once per tile.
 //! * **Batched model step** — `NativeModel::step_batch` advances a slab of
 //!   per-sequence `DecodeState`s (KV caches pooled in a `KvArena`) with
 //!   per-lane arithmetic bit-identical to the scalar `step`.

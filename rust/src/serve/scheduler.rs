@@ -116,10 +116,23 @@ pub struct Scheduler<'m> {
     /// Tokens emitted by the most recent step, in lane order at the time
     /// of the step — the streaming drain ([`Scheduler::step_tokens`]).
     emitted: Vec<(u64, u32)>,
+    /// Reused admission scratch: freshly admitted request metadata and
+    /// their KV states, kept as index-aligned parallel vectors (drained
+    /// into `lanes`/`states` each admission, capacity retained).
+    fresh_meta: Vec<Queued>,
+    fresh_states: Vec<DecodeState>,
+    /// Recycled [`Lane`] shells: finished lanes return here with their
+    /// token/latency buffer capacity intact, so a warm admission performs
+    /// no heap allocation (bounded — see [`LANE_POOL_MAX`]).
+    lane_pool: Vec<Lane>,
     next_id: u64,
     steps: usize,
     lane_steps: usize,
 }
+
+/// Most recycled lane shells worth keeping (covers any realistic
+/// `max_batch`; beyond it, shells are dropped rather than pinned).
+const LANE_POOL_MAX: usize = 256;
 
 impl<'m> Scheduler<'m> {
     /// Engine with the config's worker count (`ServeConfig::workers`,
@@ -149,6 +162,9 @@ impl<'m> Scheduler<'m> {
             prefill_scratch: BatchScratch::new(),
             token_buf: Vec::new(),
             emitted: Vec::new(),
+            fresh_meta: Vec::new(),
+            fresh_states: Vec::new(),
+            lane_pool: Vec::new(),
             next_id: 0,
             steps: 0,
             lane_steps: 0,
@@ -233,9 +249,16 @@ impl<'m> Scheduler<'m> {
     }
 
     /// Splice queued requests into free lanes and prefill their prompts.
+    ///
+    /// A warm admission (recycled arena states, recycled lane shells,
+    /// reused `fresh_*` scratch, insertion co-sort in place of an
+    /// allocating stable sort) performs no heap allocation — together with
+    /// the batched prefill steps below, a warm chunked-prefill engine step
+    /// stays off the allocator entirely (enforced by
+    /// `warm_chunked_prefill_step_is_allocation_free`).
     fn admit(&mut self, finished: &mut Vec<FinishedRequest>) {
-        let mut fresh: Vec<(Queued, DecodeState)> = Vec::new();
-        while self.lanes.len() + fresh.len() < self.cfg.max_batch.max(1) {
+        debug_assert!(self.fresh_meta.is_empty() && self.fresh_states.is_empty());
+        while self.lanes.len() + self.fresh_meta.len() < self.cfg.max_batch.max(1) {
             let Some(qr) = self.queue.pop_front() else { break };
             if qr.gen_tokens == 0 {
                 // Nothing to generate; completes at admission.
@@ -254,9 +277,10 @@ impl<'m> Scheduler<'m> {
                 });
                 continue;
             }
-            fresh.push((qr, self.arena.acquire()));
+            self.fresh_meta.push(qr);
+            self.fresh_states.push(self.arena.acquire());
         }
-        if fresh.is_empty() {
+        if self.fresh_meta.is_empty() {
             return;
         }
         let admitted = self.now();
@@ -264,8 +288,10 @@ impl<'m> Scheduler<'m> {
             // Reference path: per-lane scalar prefill, parallel across
             // lanes on the worker pool.
             let model = self.model;
-            let jobs: Vec<_> = fresh
-                .into_iter()
+            let jobs: Vec<_> = self
+                .fresh_meta
+                .drain(..)
+                .zip(self.fresh_states.drain(..))
                 .map(|(qr, mut state)| {
                     move || {
                         for &t in &qr.prompt[..qr.prompt.len() - 1] {
@@ -288,17 +314,27 @@ impl<'m> Scheduler<'m> {
         // discarded. Per-lane arithmetic is bit-identical to scalar
         // `step` prefill because `step_batch` is bit-identical per lane.
         //
-        // Longest prompts first (stable, so equal lengths keep submission
-        // order): the lanes still in the chunk at any depth are then a
-        // PREFIX of the state slab, so each depth passes a contiguous
-        // sub-slice and the reused token buffer — no per-depth gathering
-        // of `&mut` refs. Lane order never affects per-lane results.
-        fresh.sort_by(|a, b| b.0.prompt.len().cmp(&a.0.prompt.len()));
-        let (metas, mut states): (Vec<Queued>, Vec<DecodeState>) = fresh.into_iter().unzip();
-        let max_pre = metas.first().map(|q| q.prompt.len() - 1).unwrap_or(0);
+        // Longest prompts first, via an in-place stable insertion co-sort
+        // of the two parallel scratch vectors (admissions are
+        // max_batch-bounded, and equal lengths keep submission order): the
+        // lanes still in the chunk at any depth are then a PREFIX of the
+        // state slab, so each depth passes a contiguous sub-slice and the
+        // reused token buffer — no per-depth gathering of `&mut` refs.
+        // Lane order never affects per-lane results.
+        for k in 1..self.fresh_meta.len() {
+            let mut i = k;
+            while i > 0
+                && self.fresh_meta[i - 1].prompt.len() < self.fresh_meta[i].prompt.len()
+            {
+                self.fresh_meta.swap(i - 1, i);
+                self.fresh_states.swap(i - 1, i);
+                i -= 1;
+            }
+        }
+        let max_pre = self.fresh_meta.first().map(|q| q.prompt.len() - 1).unwrap_or(0);
         for t in 0..max_pre {
             self.token_buf.clear();
-            for q in &metas {
+            for q in &self.fresh_meta {
                 if t + 1 < q.prompt.len() {
                     self.token_buf.push(q.prompt[t]);
                 } else {
@@ -308,31 +344,49 @@ impl<'m> Scheduler<'m> {
             let active = self.token_buf.len();
             self.model.step_batch_with(
                 &mut self.prefill_scratch,
-                &mut states[..active],
+                &mut self.fresh_states[..active],
                 &self.token_buf,
             );
         }
-        for (qr, state) in metas.into_iter().zip(states) {
+        // Drain the scratch into live lanes, handing capacity back to the
+        // fields afterwards (`mem::take` + restore keeps the buffers warm).
+        let mut metas = std::mem::take(&mut self.fresh_meta);
+        let mut states = std::mem::take(&mut self.fresh_states);
+        for (qr, state) in metas.drain(..).zip(states.drain(..)) {
             self.push_lane(qr, state, admitted);
         }
+        self.fresh_meta = metas;
+        self.fresh_states = states;
     }
 
     fn push_lane(&mut self, qr: Queued, state: DecodeState, admitted: f64) {
         let pending = *qr.prompt.last().unwrap();
         // Reserve the known-bounded output/latency capacity up front so
         // steady-state pushes never reallocate (capped so an absurd
-        // gen_tokens request cannot pre-pin memory).
+        // gen_tokens request cannot pre-pin memory). Recycled shells keep
+        // their buffers, so a warm admission's reserve is a no-op.
         let reserve = qr.gen_tokens.min(1 << 16);
-        self.lanes.push(Lane {
-            id: qr.id,
-            pending,
-            out: Vec::with_capacity(reserve),
-            gen_tokens: qr.gen_tokens,
-            submitted: qr.submitted,
-            admitted,
+        let mut lane = self.lane_pool.pop().unwrap_or_else(|| Lane {
+            id: 0,
+            pending: 0,
+            out: Vec::new(),
+            gen_tokens: 0,
+            submitted: 0.0,
+            admitted: 0.0,
             first_token: None,
-            token_ms: Vec::with_capacity(reserve),
+            token_ms: Vec::new(),
         });
+        lane.id = qr.id;
+        lane.pending = pending;
+        lane.out.clear();
+        lane.out.reserve(reserve);
+        lane.gen_tokens = qr.gen_tokens;
+        lane.submitted = qr.submitted;
+        lane.admitted = admitted;
+        lane.first_token = None;
+        lane.token_ms.clear();
+        lane.token_ms.reserve(reserve);
+        self.lanes.push(lane);
         self.states.push(state);
     }
 
@@ -396,18 +450,34 @@ impl<'m> Scheduler<'m> {
         finished
     }
 
-    fn finish(&mut self, lane: Lane, state: DecodeState) -> FinishedRequest {
+    fn finish(&mut self, mut lane: Lane, state: DecodeState) -> FinishedRequest {
         let kv_bytes = state.kv_bytes();
         self.arena.release(state);
+        // When the shell is recycled, the result takes copies so the
+        // shell keeps its buffers (and their capacity) for the next
+        // admission, which must not allocate once warm; otherwise the
+        // buffers just move out.
+        let recycle = self.lane_pool.len() < LANE_POOL_MAX;
+        let (tokens, token_ms) = if recycle {
+            (lane.out.clone(), lane.token_ms.clone())
+        } else {
+            (std::mem::take(&mut lane.out), std::mem::take(&mut lane.token_ms))
+        };
         let metrics = RequestMetrics {
             queue_wait_ms: (lane.admitted - lane.submitted) * 1e3,
             ttft_ms: (lane.first_token.unwrap_or(lane.admitted) - lane.submitted) * 1e3,
-            p50_ms: percentile(&lane.token_ms, 50.0),
-            p99_ms: percentile(&lane.token_ms, 99.0),
+            p50_ms: percentile(&token_ms, 50.0),
+            p99_ms: percentile(&token_ms, 99.0),
             kv_bytes,
-            token_ms: lane.token_ms,
+            token_ms,
         };
-        FinishedRequest { id: lane.id, tokens: lane.out, metrics }
+        let fr = FinishedRequest { id: lane.id, tokens, metrics };
+        if recycle {
+            lane.out.clear();
+            lane.token_ms.clear();
+            self.lane_pool.push(lane);
+        }
+        fr
     }
 
     /// Drain queue and lanes; finished requests are returned in submission
@@ -640,6 +710,90 @@ mod tests {
             }
         });
         assert_eq!(allocs, 0, "steady-state decode step hit the heap {allocs} time(s)");
+    }
+
+    #[test]
+    fn steady_state_sharded_decode_step_is_allocation_free() {
+        // Acceptance criterion (PR 4): zero allocation must hold INCLUDING
+        // the column-sharded path. The head product (2 lanes × 32 × 2048)
+        // clears SHARD_MIN_WORK, so at any pool width > 1 the decode step
+        // fans shards out through `run_indexed` — whose submission is
+        // plain-data stubs into the pool's reusable queue. The probe counts
+        // the submitting thread, which always participates in the scatter
+        // and warms its own thread-local decode scratch deterministically.
+        use crate::cfg::ModelConfig;
+        use crate::testing::alloc_count::count_allocs;
+        let cfg = ModelConfig {
+            name: "alloc-probe-sharded".into(),
+            vocab: 2048,
+            d_model: 32,
+            n_layers: 1,
+            n_heads: 4,
+            d_ff: 64,
+            rope_theta: 10000.0,
+        };
+        let ps = ParamStore::init(&cfg, &mut Rng::new(0));
+        let m = NativeModel::from_params(&ps);
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig { max_batch: 2, max_queued: 8, ..ServeConfig::default() },
+        );
+        sched.submit(&[1, 2, 3], 64).unwrap();
+        sched.submit(&[4, 5], 64).unwrap();
+        for _ in 0..20 {
+            let fin = sched.step();
+            assert!(fin.is_empty());
+        }
+        let ((), allocs) = count_allocs(|| {
+            for _ in 0..3 {
+                let fin = sched.step();
+                debug_assert!(fin.is_empty());
+            }
+        });
+        assert_eq!(allocs, 0, "sharded decode step hit the heap {allocs} time(s)");
+    }
+
+    #[test]
+    fn warm_chunked_prefill_step_is_allocation_free() {
+        // Satellite (PR 4): after one wave warms the lane shells, arena
+        // pages, prefill scratch, and queue capacity, admitting and
+        // chunk-prefilling a second wave of the same shape must not touch
+        // the heap — recycled shells, reused fresh-scratch, and the
+        // insertion co-sort replace every per-admission allocation.
+        use crate::cfg::ModelConfig;
+        use crate::testing::alloc_count::count_allocs;
+        let cfg = ModelConfig {
+            name: "alloc-probe-prefill".into(),
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 64,
+            rope_theta: 10000.0,
+        };
+        let ps = ParamStore::init(&cfg, &mut Rng::new(0));
+        let m = NativeModel::from_params(&ps);
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig { max_batch: 2, max_queued: 8, ..ServeConfig::default() },
+        );
+        // Wave 1: warms everything (runs to completion, shells recycled).
+        sched.submit(&[1, 2, 3], 4).unwrap();
+        sched.submit(&[4, 5], 4).unwrap();
+        let done = sched.run_to_completion();
+        assert_eq!(done.len(), 2);
+        // Wave 2: same prompt shapes and generation lengths.
+        sched.submit(&[6, 7, 8], 4).unwrap();
+        sched.submit(&[9, 10], 4).unwrap();
+        let ((), allocs) = count_allocs(|| {
+            // One step = admission + chunked prefill + first decode step.
+            let fin = sched.step();
+            debug_assert!(fin.is_empty());
+        });
+        assert_eq!(allocs, 0, "warm chunked-prefill step hit the heap {allocs} time(s)");
+        let done = sched.run_to_completion();
+        assert_eq!(done.len(), 2);
+        assert!(done.iter().all(|f| f.tokens.len() == 4));
     }
 
     #[test]

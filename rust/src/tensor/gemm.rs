@@ -1,0 +1,493 @@
+//! Tiled quantized-GEMM engine: decode-once register-blocked kernels shared
+//! by every serving format.
+//!
+//! ## Why tiles
+//!
+//! The row-at-a-time batched kernels (`LinearOp::matmul_cols`) unpack one
+//! code row per input channel and immediately FMA it into every lane. That
+//! amortizes *decode* across the batch, but the inner loops stay short and
+//! branchy (per-lane zero skips, per-row staging), which defeats
+//! auto-vectorization. The tiled engine instead decodes a
+//! `[tile_rows × window]` block of weights ONCE into thread-local f32
+//! scratch ([`LinearOp::decode_tile`], with code→f32 tables pre-expanded at
+//! format construction), then applies the whole tile to all batch lanes
+//! with a straight-line register-blocked micro-kernel (a fixed
+//! [`PANEL_J`]-column panel unrolled over [`PANEL_LANES`] lanes, no
+//! zero-skip branches) before the next tile is decoded.
+//!
+//! ## Bit-identity contract
+//!
+//! Every output element accumulates its terms in ascending input-row order:
+//! the micro-kernel resumes each `(lane, column)` accumulator from the
+//! output buffer, so splitting the input rows into tiles never reorders a
+//! sum. Combined with the per-format epilogues
+//! ([`LinearOp::tile_epilogue`]), the tiled product is exactly equal
+//! (f32 `==`, per element) to looping [`LinearOp::matvec`] over the lanes —
+//! at any tile height, any column-shard count, and any thread count. The
+//! row-at-a-time kernels remain as the `GQ_TILE=0` fallback and must stay
+//! bit-identical too; CI runs the determinism suite with the tiled engine
+//! both forced on and forced off.
+//!
+//! ## Knobs
+//!
+//! `GQ_TILE` (env, read once): `0` disables the tiled engine (row-at-a-time
+//! kernels everywhere), `1` or unset enables it with the default
+//! [`TILE_ROWS`] tile height, any other integer `N >= 2` enables it with
+//! tile height `N`.
+
+use std::cell::Cell;
+use std::marker::PhantomData;
+use std::sync::OnceLock;
+
+use crate::model::forward::LinearOp;
+use crate::tensor::Mat;
+
+/// Default decode-tile height (input rows decoded per tile). 64 rows keeps
+/// a full-width tile of a 2k-channel layer in the hundreds of KB and a
+/// per-shard tile comfortably cache-resident, while amortizing per-tile
+/// decode setup (e.g. the trellis checkpoint replay) over many rows.
+pub const TILE_ROWS: usize = 64;
+
+/// Columns held in registers by the micro-kernel panel.
+const PANEL_J: usize = 8;
+
+/// Batch lanes blocked per micro-kernel pass (`PANEL_LANES * PANEL_J`
+/// accumulators stay in registers).
+const PANEL_LANES: usize = 4;
+
+/// Parsed `GQ_TILE` setting: `None` = tiled engine disabled, `Some(rows)` =
+/// enabled with that tile height. Read once per process.
+fn tile_cfg() -> Option<usize> {
+    static CFG: OnceLock<Option<usize>> = OnceLock::new();
+    *CFG.get_or_init(|| match std::env::var("GQ_TILE") {
+        Err(_) => Some(TILE_ROWS),
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(0) => None,
+            Ok(1) => Some(TILE_ROWS),
+            Ok(n) => Some(n),
+            Err(_) => Some(TILE_ROWS),
+        },
+    })
+}
+
+/// Whether the tiled engine is enabled for auto-routed products.
+pub fn tiled_enabled() -> bool {
+    tile_cfg().is_some()
+}
+
+/// Tile height the auto-routed engine uses (the `GQ_TILE` override or
+/// [`TILE_ROWS`]).
+pub fn tile_rows() -> usize {
+    tile_cfg().unwrap_or(TILE_ROWS)
+}
+
+/// Human-readable description of which batched decode kernel is active —
+/// benches print this so recorded numbers say what ran.
+pub fn kernel_desc() -> String {
+    match tile_cfg() {
+        Some(rows) => format!("tiled-gemm (dequant-once, tile rows {rows})"),
+        None => "row-at-a-time (GQ_TILE=0)".to_string(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Output column windows
+// ---------------------------------------------------------------------------
+
+/// Mutable view of columns `[lo, hi)` of a row-major `[rows, stride]`
+/// output buffer — the unit of work of the column-sharded batched linear.
+///
+/// The sharded driver materializes one window per shard over the SAME
+/// output matrix (disjoint column ranges, in-place writes: no per-shard
+/// staging buffer, no paste copy), so the view is raw-pointer-backed; each
+/// row window is handed out as an ordinary `&mut [f32]`. Safe constructors
+/// ([`ColWindow::full`], [`ColWindow::window`]) cover the exclusive-access
+/// cases; only the driver uses the unsafe disjoint-shard constructor.
+pub struct ColWindow<'a> {
+    ptr: *mut f32,
+    rows: usize,
+    stride: usize,
+    lo: usize,
+    hi: usize,
+    _life: PhantomData<&'a mut [f32]>,
+}
+
+// SAFETY: a window is an exclusive view of its column range (constructor
+// contract); sending it to a pool worker moves that exclusive access.
+unsafe impl Send for ColWindow<'_> {}
+
+impl<'a> ColWindow<'a> {
+    /// The whole matrix as one window.
+    pub fn full(m: &'a mut Mat) -> Self {
+        let (rows, stride) = (m.rows, m.cols);
+        ColWindow {
+            ptr: m.data.as_mut_ptr(),
+            rows,
+            stride,
+            lo: 0,
+            hi: stride,
+            _life: PhantomData,
+        }
+    }
+
+    /// Columns `[lo, hi)` of `m` as a window (exclusive borrow of the whole
+    /// matrix, so trivially safe).
+    pub fn window(m: &'a mut Mat, lo: usize, hi: usize) -> Self {
+        assert!(lo <= hi && hi <= m.cols, "window [{lo}, {hi}) out of {} cols", m.cols);
+        let (rows, stride) = (m.rows, m.cols);
+        ColWindow { ptr: m.data.as_mut_ptr(), rows, stride, lo, hi, _life: PhantomData }
+    }
+
+    /// Window over a raw row-major buffer.
+    ///
+    /// # Safety
+    /// `ptr` must point at a live `rows * stride` f32 buffer for `'a`,
+    /// `lo <= hi <= stride`, and the column ranges of all concurrently
+    /// live windows over that buffer must be pairwise disjoint (the
+    /// sharded driver guarantees this by construction).
+    pub unsafe fn from_raw(
+        ptr: *mut f32,
+        rows: usize,
+        stride: usize,
+        lo: usize,
+        hi: usize,
+    ) -> Self {
+        debug_assert!(lo <= hi && hi <= stride);
+        ColWindow { ptr, rows, stride, lo, hi, _life: PhantomData }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// First absolute output column of the window.
+    #[inline]
+    pub fn lo(&self) -> usize {
+        self.lo
+    }
+
+    /// One past the last absolute output column of the window.
+    #[inline]
+    pub fn hi(&self) -> usize {
+        self.hi
+    }
+
+    #[inline]
+    pub fn width(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    /// Row `r` of the window: the `[lo, hi)` slice of output row `r`.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        debug_assert!(r < self.rows);
+        // SAFETY: in-bounds (r < rows, hi <= stride); `&mut self` makes
+        // this view's access exclusive, and disjointness across views is
+        // the `from_raw` contract.
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                self.ptr.add(r * self.stride + self.lo),
+                self.hi - self.lo,
+            )
+        }
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        for r in 0..self.rows {
+            self.row_mut(r).fill(v);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread-local kernel scratch
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    // `const`-init Cells with take/put discipline: no lazy registration on
+    // the hot path, re-entrancy degrades to a fresh allocation instead of
+    // a panic, and a warm steady-state kernel call allocates nothing.
+    static KERNEL_U16: Cell<Vec<u16>> = const { Cell::new(Vec::new()) };
+    static KERNEL_F32: Cell<Vec<f32>> = const { Cell::new(Vec::new()) };
+    static TILE_F32: Cell<Vec<f32>> = const { Cell::new(Vec::new()) };
+    static FULL_F32: Cell<Vec<f32>> = const { Cell::new(Vec::new()) };
+}
+
+fn with_cell_u16<T>(cell: &Cell<Vec<u16>>, len: usize, f: impl FnOnce(&mut [u16]) -> T) -> T {
+    let mut v = cell.take();
+    if v.len() < len {
+        v.resize(len, 0);
+    }
+    let out = f(&mut v[..len]);
+    cell.set(v);
+    out
+}
+
+fn with_cell_f32<T>(cell: &Cell<Vec<f32>>, len: usize, f: impl FnOnce(&mut [f32]) -> T) -> T {
+    let mut v = cell.take();
+    if v.len() < len {
+        v.resize(len, 0.0);
+    }
+    let out = f(&mut v[..len]);
+    cell.set(v);
+    out
+}
+
+/// Thread-local u16 code staging scratch for the format kernels (replaces
+/// the per-call `vec![0u16; ...]` decode buffers).
+pub(crate) fn with_u16_scratch<T>(len: usize, f: impl FnOnce(&mut [u16]) -> T) -> T {
+    KERNEL_U16.with(|c| with_cell_u16(c, len, f))
+}
+
+/// Thread-local f32 scratch for the format kernels (decoded weight rows,
+/// per-lane accumulators).
+pub(crate) fn with_f32_scratch<T>(len: usize, f: impl FnOnce(&mut [f32]) -> T) -> T {
+    KERNEL_F32.with(|c| with_cell_f32(c, len, f))
+}
+
+/// Thread-local scratch for the trait-default whole-row `matvec` staging
+/// (kept separate from [`with_f32_scratch`] so a default `matmul_cols`
+/// wrapping a format matvec does not thrash the kernel cell).
+pub(crate) fn with_full_scratch<T>(len: usize, f: impl FnOnce(&mut [f32]) -> T) -> T {
+    FULL_F32.with(|c| with_cell_f32(c, len, f))
+}
+
+fn with_tile_scratch<T>(len: usize, f: impl FnOnce(&mut [f32]) -> T) -> T {
+    TILE_F32.with(|c| with_cell_f32(c, len, f))
+}
+
+// ---------------------------------------------------------------------------
+// The tiled engine
+// ---------------------------------------------------------------------------
+
+/// Auto-routed batched window product: the tiled engine when it is enabled
+/// and the format supports tile decode, the format's row-at-a-time
+/// `matmul_cols` kernel otherwise. Both paths are bit-identical; this is
+/// the entry point the column-sharded driver uses per shard.
+pub fn matmul_cols_auto(op: &dyn LinearOp, xs: &Mat, out: &mut ColWindow) {
+    match tile_cfg() {
+        Some(rows) if op.supports_decode_tile() => matmul_tiled_with(op, xs, out, rows),
+        _ => op.matmul_cols(xs, out),
+    }
+}
+
+/// Tiled window product at an explicit tile height (exposed for the
+/// bit-identity tests and the row-vs-tiled bench rows; heights that do not
+/// divide `d_in` are fine — the last tile is shorter).
+///
+/// `out.row(r)[lo..hi] = epilogue(xs.row(r) @ D[:, lo..hi])` where `D` is
+/// the format's pre-epilogue decoded weight matrix: each tile of `D` is
+/// decoded once into thread-local scratch and applied to every lane before
+/// the next tile is decoded. Accumulation per output element stays in
+/// ascending input-row order (resumed from `out` across tiles), so the
+/// result is bit-identical to looping `matvec`.
+pub fn matmul_tiled_with(op: &dyn LinearOp, xs: &Mat, out: &mut ColWindow, tile_height: usize) {
+    let d_in = op.d_in();
+    debug_assert_eq!(xs.cols, d_in);
+    debug_assert_eq!(xs.rows, out.rows());
+    debug_assert!(out.hi() <= op.d_out());
+    let (lo, hi, w) = (out.lo(), out.hi(), out.width());
+    let b = xs.rows;
+    if w == 0 || b == 0 {
+        return;
+    }
+    let th = tile_height.max(1);
+    out.fill(0.0);
+    with_tile_scratch(th.min(d_in.max(1)) * w, |tile| {
+        let mut i0 = 0;
+        while i0 < d_in {
+            let i1 = (i0 + th).min(d_in);
+            let t = &mut tile[..(i1 - i0) * w];
+            op.decode_tile(i0, i1, lo, hi, t);
+            apply_tile(xs, out, t, i0);
+            i0 = i1;
+        }
+    });
+    for r in 0..b {
+        op.tile_epilogue(xs.row(r), out.row_mut(r), lo);
+    }
+}
+
+/// FMA one decoded tile (rows `[i0, i0 + tile.len()/width)`) into every
+/// lane's output window: register-blocked panels of [`PANEL_J`] columns ×
+/// [`PANEL_LANES`] lanes, with narrower straight-line remainders. Every
+/// `(lane, column)` accumulator is loaded from `out`, extended over the
+/// tile's rows in ascending order, and stored back — a resumed flat sum.
+fn apply_tile(xs: &Mat, out: &mut ColWindow, tile: &[f32], i0: usize) {
+    let w = out.width();
+    let b = xs.rows;
+    let mut jp = 0;
+    while jp < w {
+        let nj = (w - jp).min(PANEL_J);
+        if nj == PANEL_J {
+            let mut r0 = 0;
+            while r0 + PANEL_LANES <= b {
+                micro_panel::<PANEL_LANES>(xs, out, tile, i0, jp, r0);
+                r0 += PANEL_LANES;
+            }
+            while r0 < b {
+                micro_panel::<1>(xs, out, tile, i0, jp, r0);
+                r0 += 1;
+            }
+        } else {
+            for r in 0..b {
+                micro_panel_rem(xs, out, tile, i0, jp, nj, r);
+            }
+        }
+        jp += nj;
+    }
+}
+
+/// Full-width panel: `NR` lanes × [`PANEL_J`] columns of accumulators held
+/// in registers across the tile's row sweep.
+#[inline]
+fn micro_panel<const NR: usize>(
+    xs: &Mat,
+    out: &mut ColWindow,
+    tile: &[f32],
+    i0: usize,
+    jp: usize,
+    r0: usize,
+) {
+    let w = out.width();
+    let rows = tile.len() / w;
+    let xrows: [&[f32]; NR] = std::array::from_fn(|r| xs.row(r0 + r));
+    let mut acc = [[0.0f32; PANEL_J]; NR];
+    for (r, a) in acc.iter_mut().enumerate() {
+        a.copy_from_slice(&out.row_mut(r0 + r)[jp..jp + PANEL_J]);
+    }
+    for i in 0..rows {
+        let trow = &tile[i * w + jp..i * w + jp + PANEL_J];
+        for (xr, a) in xrows.iter().zip(acc.iter_mut()) {
+            let xi = xr[i0 + i];
+            for (av, &tv) in a.iter_mut().zip(trow) {
+                *av += xi * tv;
+            }
+        }
+    }
+    for (r, a) in acc.iter().enumerate() {
+        out.row_mut(r0 + r)[jp..jp + PANEL_J].copy_from_slice(a);
+    }
+}
+
+/// Remainder panel (window width not a multiple of [`PANEL_J`]): one lane,
+/// `nj < PANEL_J` columns, same resumed ascending-row accumulation.
+#[inline]
+fn micro_panel_rem(
+    xs: &Mat,
+    out: &mut ColWindow,
+    tile: &[f32],
+    i0: usize,
+    jp: usize,
+    nj: usize,
+    r: usize,
+) {
+    let w = out.width();
+    let rows = tile.len() / w;
+    let xrow = xs.row(r);
+    let mut acc = [0.0f32; PANEL_J];
+    acc[..nj].copy_from_slice(&out.row_mut(r)[jp..jp + nj]);
+    for i in 0..rows {
+        let xi = xrow[i0 + i];
+        let trow = &tile[i * w + jp..i * w + jp + nj];
+        for (av, &tv) in acc[..nj].iter_mut().zip(trow) {
+            *av += xi * tv;
+        }
+    }
+    out.row_mut(r)[jp..jp + nj].copy_from_slice(&acc[..nj]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::LinearOp;
+    use crate::testing;
+    use crate::util::Rng;
+
+    fn looped_matvec(op: &dyn LinearOp, xs: &Mat) -> Mat {
+        let mut want = Mat::zeros(xs.rows, op.d_out());
+        for r in 0..xs.rows {
+            op.matvec(xs.row(r), want.row_mut(r));
+        }
+        want
+    }
+
+    #[test]
+    fn tiled_fp32_matches_looped_matvec_property() {
+        // Random shapes, batches, and tile heights — including heights that
+        // do not divide d_in and exceed it — must all be exactly equal to
+        // the per-lane matvec reference (panel remainders included: widths
+        // sweep across the PANEL_J boundary).
+        testing::check("tiled-vs-matvec", 30, |rng| {
+            let d_in = 1 + rng.below(40);
+            let d_out = 1 + rng.below(40);
+            let b = 1 + rng.below(7);
+            let w = Mat::randn(d_in, d_out, 1.0, rng);
+            let mut xs = Mat::randn(b, d_in, 1.0, rng);
+            xs.row_mut(0)[rng.below(d_in)] = 0.0; // zero-skip vs straight-line
+            let want = looped_matvec(&w, &xs);
+            for tile in [1, 2, 3, d_in, d_in + 5] {
+                let mut got = Mat::zeros(b, d_out);
+                matmul_tiled_with(&w, &xs, &mut ColWindow::full(&mut got), tile);
+                testing::ensure(
+                    got.data == want.data,
+                    format!("tile={tile} d_in={d_in} d_out={d_out} b={b}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tiled_window_matches_matvec_columns() {
+        let mut rng = Rng::new(3);
+        let w = Mat::randn(24, 19, 1.0, &mut rng);
+        let xs = Mat::randn(4, 24, 1.0, &mut rng);
+        let want = looped_matvec(&w, &xs);
+        let (lo, hi) = (5usize, 17usize);
+        let mut got = Mat::zeros(4, 19);
+        matmul_tiled_with(&w, &xs, &mut ColWindow::window(&mut got, lo, hi), 7);
+        for r in 0..4 {
+            assert_eq!(&got.row(r)[lo..hi], &want.row(r)[lo..hi], "row {r}");
+            // Outside the window stays untouched.
+            assert!(got.row(r)[..lo].iter().all(|&v| v == 0.0));
+            assert!(got.row(r)[hi..].iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn col_window_views_rows() {
+        let mut m = Mat::from_fn(3, 5, |i, j| (i * 5 + j) as f32);
+        let mut win = ColWindow::window(&mut m, 1, 4);
+        assert_eq!(win.rows(), 3);
+        assert_eq!((win.lo(), win.hi(), win.width()), (1, 4, 3));
+        assert_eq!(win.row_mut(2), &[11.0, 12.0, 13.0]);
+        win.fill(-1.0);
+        assert_eq!(m.row(0), &[0.0, -1.0, -1.0, -1.0, 4.0]);
+    }
+
+    #[test]
+    fn gq_tile_knob_reports_kernel() {
+        // The parsed setting is process-wide; whatever it is, the report
+        // string and the enabled flag must agree.
+        assert_eq!(kernel_desc().starts_with("tiled"), tiled_enabled());
+        assert!(tile_rows() >= 1);
+    }
+
+    #[test]
+    fn warm_kernel_scratch_does_not_allocate() {
+        use crate::testing::alloc_count::count_allocs;
+        with_u16_scratch(128, |s| s.fill(1));
+        with_f32_scratch(128, |s| s.fill(1.0));
+        let ((), n) = count_allocs(|| {
+            with_u16_scratch(128, |s| {
+                s[0] = 2;
+            });
+            with_f32_scratch(64, |s| {
+                s[0] = 2.0;
+            });
+        });
+        assert_eq!(n, 0, "warm scratch reuse must not touch the heap");
+    }
+}

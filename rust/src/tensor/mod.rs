@@ -1,8 +1,11 @@
-//! Dense f32 matrix substrate: storage, blocked/threaded matmul, binary I/O.
+//! Dense f32 matrix substrate: storage, blocked/threaded matmul, the tiled
+//! quantized-GEMM engine, and binary I/O.
 
+pub mod gemm;
 pub mod io;
 pub mod mat;
 pub mod ops;
 
+pub use gemm::ColWindow;
 pub use mat::Mat;
 pub use ops::{matmul, matmul_tn, matvec};
