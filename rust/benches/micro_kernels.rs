@@ -5,6 +5,13 @@
 //! xtsx Pallas kernel executed through its demo artifact vs a native Rust
 //! reduction (skipped when no AOT artifacts are present, so CI smoke runs
 //! work from a bare checkout).
+//!
+//! When `GQ_BENCH_JSON=<path>` is set, every speedup comparison is also
+//! written to `<path>` as machine-readable JSON (one row per
+//! kernel/format/batch with baseline ms, candidate ms, and the speedup
+//! factor). CI's micro-kernel smoke uploads this as the
+//! `BENCH_micro_kernels.json` artifact so measured numbers can be recorded
+//! in the ROADMAP from any CI run.
 
 #[path = "common.rs"]
 mod common;
@@ -21,7 +28,36 @@ use guidedquant::runtime::Value;
 use guidedquant::tensor::gemm::{self, ColWindow};
 use guidedquant::tensor::ops::{matmul, matmul_tn, matmul_tn_with, num_threads};
 use guidedquant::tensor::Mat;
+use guidedquant::util::json::Json;
 use guidedquant::util::Rng;
+
+/// One speedup comparison as a JSON row (times in milliseconds).
+fn speedup_row(kernel: &str, baseline_ms: f64, candidate_ms: f64) -> Json {
+    Json::object()
+        .with("kernel", kernel)
+        .with("baseline_ms", baseline_ms)
+        .with("candidate_ms", candidate_ms)
+        .with("speedup", baseline_ms / candidate_ms.max(1e-9))
+}
+
+/// Dump the collected speedup rows when `GQ_BENCH_JSON=<path>` is set.
+fn write_bench_json(rows: &[Json], fast: bool, threads: usize, dim: usize) {
+    let Some(path) = std::env::var_os("GQ_BENCH_JSON") else { return };
+    let path = std::path::PathBuf::from(path);
+    let doc = Json::object()
+        .with("bench", "micro_kernels")
+        .with("fast_mode", fast)
+        .with("threads", threads)
+        .with("dim", dim)
+        .with("rows", rows.to_vec());
+    match std::fs::write(&path, doc.encode() + "\n") {
+        Ok(()) => println!("wrote {} speedup rows to {}", rows.len(), path.display()),
+        Err(e) => {
+            eprintln!("failed to write {}: {e}", path.display());
+            std::process::exit(1);
+        }
+    }
+}
 
 fn main() {
     let fast = guidedquant::bench::fast_mode();
@@ -81,6 +117,7 @@ fn main() {
             20
         }
     };
+    let mut rows: Vec<Json> = Vec::new();
     for (name, lin) in [
         ("fp32", &w as &dyn LinearOp),
         ("uniform-4bit", &uni),
@@ -102,6 +139,11 @@ fn main() {
                 "   {name} b={batch} tiled speedup ×{:.2}",
                 s.mean_secs / t.mean_secs.max(1e-12)
             );
+            rows.push(
+                speedup_row("tiled_gemm", s.mean_secs * 1e3, t.mean_secs * 1e3)
+                    .with("format", name)
+                    .with("batch", batch),
+            );
         }
     }
 
@@ -115,6 +157,9 @@ fn main() {
     let s = bench("matmul_tn serial", 1, tn_reps, || matmul_tn_with(&xc, &xc, 1));
     let p = bench("matmul_tn pool", 1, tn_reps, || matmul_tn(&xc, &xc));
     println!("   matmul_tn speedup ×{:.2}", s.mean_secs / p.mean_secs.max(1e-12));
+    rows.push(
+        speedup_row("matmul_tn", s.mean_secs * 1e3, p.mean_secs * 1e3).with("threads", threads),
+    );
 
     // Column-sharded batched decode step at batch 8 (the serve hot loop).
     let batch = 8;
@@ -134,6 +179,12 @@ fn main() {
         println!(
             "   batched decode {name} speedup ×{:.2}",
             s.mean_secs / p.mean_secs.max(1e-12)
+        );
+        rows.push(
+            speedup_row("batched_decode", s.mean_secs * 1e3, p.mean_secs * 1e3)
+                .with("format", name)
+                .with("batch", batch)
+                .with("threads", threads),
         );
     }
 
@@ -168,6 +219,17 @@ fn main() {
         attention_batch_with(0, heads, hd, scale, &qm, &refs, &mut ctx, threads)
     });
     println!("   attention speedup ×{:.2}", s.mean_secs / p.mean_secs.max(1e-12));
+    rows.push(
+        speedup_row("attention", s.mean_secs * 1e3, p.mean_secs * 1e3)
+            .with("batch", batch)
+            .with("ctx", n_pos)
+            .with("threads", threads),
+    );
+
+    // Machine-readable artifact (CI uploads BENCH_micro_kernels.json) —
+    // written before the artifact-gated L1 section so it exists even on a
+    // bare checkout.
+    write_bench_json(&rows, fast, threads, d);
 
     // L1 kernel: artifact (Pallas xtsx lowered through interpret) vs
     // native. Needs AOT artifacts on disk; skipped otherwise.

@@ -178,11 +178,21 @@ pub struct ServeConfig {
     /// batched prefill — kept as the bit-identity regression baseline and
     /// for benchmarking the chunked-prefill win.
     pub scalar_prefill: bool,
+    /// Bind address for the HTTP front-end (`serve::http`), e.g.
+    /// `127.0.0.1:8080` (port 0 picks a free port). `None` keeps `gq serve`
+    /// in its stdout benchmark mode; `gq serve --http ADDR` overrides.
+    pub http_addr: Option<String>,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_batch: 8, max_queued: 256, workers: 0, scalar_prefill: false }
+        ServeConfig {
+            max_batch: 8,
+            max_queued: 256,
+            workers: 0,
+            scalar_prefill: false,
+            http_addr: None,
+        }
     }
 }
 
@@ -209,6 +219,9 @@ impl ServeConfig {
         }
         if let Some(v) = doc.get_bool(section, "scalar_prefill") {
             c.scalar_prefill = v;
+        }
+        if let Some(v) = doc.get_str(section, "http") {
+            c.http_addr = Some(v.to_string());
         }
         if c.max_batch == 0 {
             bail!("serve.max_batch must be at least 1");
@@ -356,6 +369,15 @@ mod tests {
         assert_eq!(c.workers, 3);
         assert_eq!(c.resolved_workers(), 3);
         assert!(c.scalar_prefill);
+    }
+
+    #[test]
+    fn serve_http_addr_from_toml() {
+        let c = ServeConfig::default();
+        assert_eq!(c.http_addr, None, "stdout mode by default");
+        let doc = TomlDoc::parse("[serve]\nhttp = \"127.0.0.1:8080\"\n").unwrap();
+        let c = ServeConfig::from_toml(&doc, "serve").unwrap();
+        assert_eq!(c.http_addr.as_deref(), Some("127.0.0.1:8080"));
     }
 
     #[test]

@@ -1,6 +1,19 @@
 //! Hand-rolled CLI argument parser for the `gq` launcher (clap is not
 //! available offline). Supports `--flag value`, `--flag=value`, boolean
 //! `--flag`, and positional arguments.
+//!
+//! Parsing rules worth knowing:
+//!
+//! * `--flag=` is an **explicit empty value** (kept, retrievable via
+//!   [`Args::get`] as `Some("")`) — it is neither dropped nor demoted to a
+//!   boolean switch, so typed getters fail loudly on it instead of
+//!   silently using their default.
+//! * A value that itself starts with `--` must use the `=` form
+//!   (`--http=--weird`): in the space-separated form the next `--token` is
+//!   always parsed as a flag, never as a value.
+//! * `--=value` (empty flag name) is a parse error.
+//! * Subcommands can reject typos with [`Args::ensure_known`] instead of
+//!   silently ignoring unknown flags.
 
 use std::collections::BTreeMap;
 
@@ -23,6 +36,9 @@ impl Args {
                     bail!("bare `--` is not supported");
                 }
                 if let Some(eq) = name.find('=') {
+                    if eq == 0 {
+                        bail!("empty flag name in `{arg}`");
+                    }
                     out.flags.insert(name[..eq].to_string(), name[eq + 1..].to_string());
                 } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
                     let val = iter.next().unwrap();
@@ -88,6 +104,20 @@ impl Args {
     pub fn switch(&self, name: &str) -> bool {
         self.bools.iter().any(|b| b == name)
     }
+
+    /// Reject flags outside `allowed` with a usage error (`context` names
+    /// the subcommand). Catches typos like `--max-batc 4`, which would
+    /// otherwise be silently ignored and leave the default in effect.
+    pub fn ensure_known(&self, context: &str, allowed: &[&str]) -> Result<()> {
+        let present =
+            self.flags.keys().map(|s| s.as_str()).chain(self.bools.iter().map(|s| s.as_str()));
+        for name in present {
+            if !allowed.contains(&name) {
+                bail!("{context}: unknown flag `--{name}` (known: {})", allowed.join(", "));
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -139,5 +169,45 @@ mod tests {
     fn trailing_boolean() {
         let a = parse(&["--fast"]);
         assert!(a.switch("fast"));
+    }
+
+    #[test]
+    fn explicit_empty_value_is_kept() {
+        // `--http=` must not be dropped or demoted to a switch: the value
+        // is present and empty, so typed getters error instead of silently
+        // falling back to their default.
+        let a = parse(&["--http=", "--steps=7"]);
+        assert_eq!(a.get("http"), Some(""));
+        assert!(a.has("http"));
+        assert!(!a.switch("http"));
+        assert!(a.get_usize("http", 3).is_err(), "empty value must not parse as default");
+        assert_eq!(a.get_usize("steps", 1).unwrap(), 7);
+    }
+
+    #[test]
+    fn eq_form_carries_values_that_start_with_dashes() {
+        // `--http --bad` parses `--http` as a switch (next token is a
+        // flag); the `=` form is the escape hatch for such values.
+        let a = parse(&["--http=--bad", "--addr", ":8080"]);
+        assert_eq!(a.get("http"), Some("--bad"));
+        assert_eq!(a.get("addr"), Some(":8080"), "plain values never need the = form");
+        let b = parse(&["--http", "--bad"]);
+        assert!(b.switch("http"));
+        assert!(b.switch("bad"));
+    }
+
+    #[test]
+    fn empty_flag_name_is_rejected() {
+        assert!(Args::parse(["--=x".to_string()]).is_err());
+        assert!(Args::parse(["--".to_string()]).is_err());
+    }
+
+    #[test]
+    fn ensure_known_rejects_typos() {
+        let a = parse(&["serve", "--model", "tiny", "--stream"]);
+        assert!(a.ensure_known("gq serve", &["model", "stream", "http"]).is_ok());
+        let err = a.ensure_known("gq serve", &["model"]).unwrap_err().to_string();
+        assert!(err.contains("unknown flag `--stream`"), "{err}");
+        assert!(err.contains("gq serve"), "{err}");
     }
 }

@@ -23,7 +23,6 @@ use crate::quant::trellis::Trellis;
 use crate::quant::{LayerQuantizer, QuantResult};
 use crate::runtime::{Runtime, Value};
 use crate::tensor::Mat;
-use crate::util::Rng;
 
 use super::metrics::Metrics;
 use super::pool::run_jobs;
@@ -65,7 +64,7 @@ impl Pipeline {
 
     pub fn init_params(&self) -> ParamStore {
         let (model_cfg, _) = preset(&self.cfg.model);
-        ParamStore::init(&model_cfg, &mut Rng::new(self.cfg.seed ^ 0x1a17))
+        ParamStore::init_seeded(&model_cfg, self.cfg.seed)
     }
 
     fn values_to_params(&self, ps: &ParamStore, vals: &[Value]) -> Result<Vec<Mat>> {

@@ -5,24 +5,29 @@
 //!   train     train a model via the train_step artifact, save checkpoint
 //!   quantize  quantize a checkpoint with any method/bits/groups
 //!   eval      perplexity of a checkpoint through the fwd artifacts
-//!   serve     batched generation benchmark over a serving format
+//!   serve     batched generation benchmark — or, with --http, an HTTP
+//!             serving front-end — over a quantized serving format
 //!   fisher    export Fisher-structure data (Figures 3/4) as CSV matrices
 //!   info      print model/artifact/manifest information
 //!
 //! Examples:
 //!   gq pipeline --model small --method lnq --bits 2 --groups 4
 //!   gq serve --model tiny --format nonuniform --bits 4 --requests 8
+//!   gq serve --model tiny --format nonuniform --bits 4 --http 127.0.0.1:8080
 //!   gq info --model small
+
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use guidedquant::cfg::{preset, PipelineConfig, QuantConfig, QuantMethod, TomlDoc};
+use guidedquant::cfg::{preset, PipelineConfig, PRESET_NAMES, QuantConfig, QuantMethod, TomlDoc};
 use guidedquant::cli::Args;
 use guidedquant::coordinator::Pipeline;
 use guidedquant::data::Split;
 use guidedquant::model::ParamStore;
 use guidedquant::serve::{
-    build_serving_model, generate_per_sequence, generate_scheduled_streaming, ServeFormat,
+    build_serving_model, generate_per_sequence, generate_scheduled_streaming, HttpServer,
+    ServeFormat,
 };
 
 const USAGE: &str = "usage: gq <pipeline|train|quantize|eval|serve|fisher|info> [flags]
@@ -32,6 +37,9 @@ const USAGE: &str = "usage: gq <pipeline|train|quantize|eval|serve|fisher|info> 
   pipeline:     --train-steps N --calib-batches N --eval-batches N --workers N
   serve:        --format fp32|uniform|nonuniform|vector|trellis --requests N
                 --gen-tokens N --prompt-len N --max-batch N --max-queued N
+                --http ADDR (HTTP front-end: POST /v1/completions,
+                GET /metrics, GET /healthz — instead of the stdout
+                benchmark; port 0 picks a free port, e.g. 127.0.0.1:0)
                 --per-seq (thread-per-sequence baseline instead of the
                 continuous-batching scheduler)
                 --scalar-prefill (per-lane scalar prefill instead of
@@ -137,20 +145,22 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn load_or_init(pipeline: &Pipeline, args: &Args) -> Result<ParamStore> {
+/// Load `--load FILE`, or fresh-init from the preset via the canonical
+/// `ParamStore::init_seeded` derivation — one code path shared by every
+/// subcommand that materializes params, artifact-backed or not.
+fn load_or_init(model: &str, seed: u64, args: &Args) -> Result<ParamStore> {
+    let (model_cfg, _) = preset(model);
     match args.get("load") {
-        Some(path) => {
-            let (cfg, _) = preset(&pipeline.cfg.model);
-            ParamStore::load(&cfg, path).with_context(|| format!("loading checkpoint {path}"))
-        }
-        None => Ok(pipeline.init_params()),
+        Some(path) => ParamStore::load(&model_cfg, path)
+            .with_context(|| format!("loading checkpoint {path}")),
+        None => Ok(ParamStore::init_seeded(&model_cfg, seed)),
     }
 }
 
 fn cmd_quantize(args: &Args) -> Result<()> {
     let cfg = pipeline_config(args)?;
     let pipeline = Pipeline::new(cfg)?;
-    let ps = load_or_init(&pipeline, args)?;
+    let ps = load_or_init(&pipeline.cfg.model, pipeline.cfg.seed, args)?;
     let stats = pipeline.calib(&ps, args.switch("recalib"))?;
     let layers = pipeline.quantize(&ps, &stats, &pipeline.cfg.quant)?;
     let qps = pipeline.apply_quantized(&ps, &layers);
@@ -171,7 +181,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
 fn cmd_eval(args: &Args) -> Result<()> {
     let cfg = pipeline_config(args)?;
     let pipeline = Pipeline::new(cfg)?;
-    let ps = load_or_init(&pipeline, args)?;
+    let ps = load_or_init(&pipeline.cfg.model, pipeline.cfg.seed, args)?;
     let artifact = args.get_or("artifact", "fwd_loss");
     let eval = pipeline.perplexity(&ps, Split::Eval, artifact)?;
     let shift = pipeline.perplexity(&ps, Split::EvalShift, artifact)?;
@@ -179,7 +189,16 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Flags `gq serve` accepts: the shared pipeline/config/quant flags its
+/// config loader reads, plus the serve-specific knobs. Anything else is a
+/// usage error instead of a silently ignored typo.
+const SERVE_FLAGS: &str = "config model artifacts out train-steps calib-batches eval-batches \
+    workers seed max-batch max-queued scalar-prefill method bits groups sparse-frac format \
+    requests gen-tokens prompt-len per-seq stream http load";
+
 fn cmd_serve(args: &Args) -> Result<()> {
+    let allowed: Vec<&str> = SERVE_FLAGS.split_whitespace().collect();
+    args.ensure_known("gq serve", &allowed)?;
     let cfg = pipeline_config(args)?;
     let format = match args.get_or("format", "nonuniform") {
         "fp32" => ServeFormat::Fp32,
@@ -193,21 +212,55 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.get_usize("requests", 4)?;
     let gen_tokens = args.get_usize("gen-tokens", 32)?;
     let prompt_len = args.get_usize("prompt-len", 16)?;
-    let pipeline = Pipeline::new(cfg)?;
-    let ps = load_or_init(&pipeline, args)?;
+    // --http (or [serve] http in the config file) switches from the stdout
+    // benchmark to the network front-end. A bare `--http` (no address, or
+    // followed by another --flag) parses as a switch — error out BEFORE the
+    // expensive model build rather than silently running the benchmark
+    // mode the user didn't ask for.
+    if args.switch("http") {
+        bail!("--http needs an address, e.g. --http 127.0.0.1:8080 (port 0 picks a free port)");
+    }
+    let http_addr = args.get("http").map(str::to_string).or_else(|| cfg.serve.http_addr.clone());
+    if http_addr.is_some() {
+        // Benchmark-mode flags do nothing under --http; reject them so the
+        // user isn't left believing they took effect.
+        for flag in ["per-seq", "stream", "requests", "gen-tokens", "prompt-len"] {
+            if args.has(flag) {
+                bail!("--{flag} is benchmark-mode only and has no effect with --http");
+            }
+        }
+    }
+    // The serving model is built straight from the preset (the canonical
+    // ParamStore::init_seeded derivation shared with Pipeline::init_params),
+    // not through the artifact runtime: serving never executes Python-side
+    // artifacts, and the HTTP front-end — plus CI's serve-e2e job — must
+    // boot from a bare checkout.
+    if !PRESET_NAMES.contains(&cfg.model.as_str()) {
+        bail!("unknown model preset `{}` (expected one of {PRESET_NAMES:?})", cfg.model);
+    }
+    let ps = load_or_init(&cfg.model, cfg.seed, args)?;
     println!("building {} serving model at {bits} bits ...", format.name());
     let model = build_serving_model(&ps, None, format, bits)?;
+
+    if let Some(addr) = http_addr {
+        let server = HttpServer::bind(Arc::new(model), cfg.serve.clone(), &addr)?;
+        println!("http: listening on {}", server.local_addr());
+        println!("http: POST /v1/completions | GET /metrics | GET /healthz (Ctrl-C stops)");
+        server.join();
+        return Ok(());
+    }
+
     let prompts = guidedquant::serve::random_prompts(model.cfg.vocab, requests, prompt_len, 7);
     let stream = args.switch("stream");
     let (_, stats) = if args.switch("per-seq") {
-        generate_per_sequence(&model, &prompts, gen_tokens, pipeline.cfg.workers)?
+        generate_per_sequence(&model, &prompts, gen_tokens, cfg.workers)?
     } else {
         generate_scheduled_streaming(
             &model,
             &prompts,
             gen_tokens,
-            pipeline.cfg.workers,
-            pipeline.cfg.serve.clone(),
+            cfg.workers,
+            cfg.serve.clone(),
             |id, tok| {
                 if stream {
                     println!("stream req={id} token={tok}");
@@ -242,7 +295,7 @@ fn cmd_fisher(args: &Args) -> Result<()> {
     let out_dir = std::path::PathBuf::from(args.get_or("fisher-out", "target/fisher"));
     std::fs::create_dir_all(&out_dir)?;
     let pipeline = Pipeline::new(cfg)?;
-    let ps = load_or_init(&pipeline, args)?;
+    let ps = load_or_init(&pipeline.cfg.model, pipeline.cfg.seed, args)?;
     let rt = &pipeline.rt;
     let bc = rt.manifest.batch;
     let mut batcher = Batcher::new(&pipeline.corpus, Split::Calib, bc, 1);

@@ -36,6 +36,14 @@ impl ParamStore {
         ParamStore { cfg: cfg.clone(), mats, index }
     }
 
+    /// [`ParamStore::init`] seeded from a pipeline seed — the ONE canonical
+    /// derivation (`seed ^ 0x1a17`), shared by `Pipeline::init_params` and
+    /// artifact-free consumers (`gq serve`, the HTTP front-end) so their
+    /// fresh-init weights always agree bit-for-bit.
+    pub fn init_seeded(cfg: &ModelConfig, pipeline_seed: u64) -> Self {
+        Self::init(cfg, &mut Rng::new(pipeline_seed ^ 0x1a17))
+    }
+
     pub fn get(&self, name: &str) -> &Mat {
         &self.mats[*self.index.get(name).unwrap_or_else(|| panic!("no param `{name}`"))]
     }
@@ -134,6 +142,18 @@ mod tests {
         let (cfg, _) = preset("tiny");
         let ps = ParamStore::init(&cfg, &mut Rng::new(0));
         assert!(ps.get("final_norm").data.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn init_seeded_is_the_canonical_derivation() {
+        // `gq serve` (artifact-free) and `Pipeline::init_params` both go
+        // through init_seeded, which must stay equal to the historical
+        // explicit derivation so fresh-init weights never diverge.
+        let (cfg, _) = preset("tiny");
+        let a = ParamStore::init_seeded(&cfg, 7);
+        let b = ParamStore::init(&cfg, &mut Rng::new(7 ^ 0x1a17));
+        assert_eq!(a.get("layers.0.wq"), b.get("layers.0.wq"));
+        assert_eq!(a.get("tok_emb"), b.get("tok_emb"));
     }
 
     #[test]

@@ -1,0 +1,797 @@
+//! Dependency-free HTTP/1.1 front-end for the continuous-batching engine.
+//!
+//! `gq serve --http <addr>` turns the [`Scheduler`] into a network service
+//! without hyper/serde (offline environment): request parsing is
+//! hand-rolled over [`std::net::TcpListener`] and bodies use the in-repo
+//! [`crate::util::json`] codec.
+//!
+//! ## Architecture
+//!
+//! One **engine thread** owns the [`Scheduler`] and is the only thread that
+//! touches the model. Connection threads never decode tokens; they parse
+//! HTTP, hand a [`ToEngine::Submit`] message over an mpsc channel, and get
+//! back a per-request event channel. The engine loop alternates between
+//! draining the submission channel (non-blocking while lanes are active,
+//! blocking-parked when idle) and running [`Scheduler::step`]; each step's
+//! tokens fan out through the per-request channels
+//! ([`Scheduler::step_tokens`] is the streaming drain), so HTTP consumers
+//! observe exactly the greedy tokens the batch engine generated —
+//! bit-identical to [`super::engine::generate_scheduled`] regardless of
+//! what other requests share the batch.
+//!
+//! ## Endpoints
+//!
+//! * `POST /v1/completions` — body `{"prompt": [u32 token ids],
+//!   "max_tokens": n, "stream": bool}`. Non-streaming responses return the
+//!   full token list plus per-request metrics; `"stream": true` switches to
+//!   chunked transfer encoding carrying SSE events (`data: {"id":..,
+//!   "token":..}` per generated token, then a `"done":true` summary event,
+//!   then the `data: [DONE]` terminator).
+//! * `GET /metrics` — queue depth, active lanes, completion/rejection
+//!   counters, and TTFT / per-token / queue-wait percentiles over a sliding
+//!   sample window.
+//! * `GET /healthz` — liveness plus the served model's shape.
+//!
+//! ## Admission control as HTTP semantics
+//!
+//! The scheduler's back-pressure maps onto status codes: a full admission
+//! queue (`ServeConfig::max_queued`) answers **429** with `Retry-After`
+//! (the request is never enqueued), malformed bodies and invalid prompts
+//! answer **400**, and a draining server answers **503**.
+//! [`HttpServer::shutdown`] stops accepting, then lets the engine drain
+//! every in-flight lane before joining it, so accepted requests always
+//! complete.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cfg::ServeConfig;
+use crate::model::NativeModel;
+use crate::util::json::Json;
+use crate::util::percentile;
+
+use super::scheduler::{FinishedRequest, Scheduler};
+
+/// Request bodies beyond this are rejected before reading.
+const MAX_BODY_BYTES: usize = 1 << 20;
+/// Hard cap on the request head (request line + headers): the limited
+/// reader turns an endless or oversized header section into EOF — a
+/// malformed-request error (400) — instead of unbounded memory growth on
+/// the connection thread.
+const MAX_HEAD_BYTES: u64 = 16 * 1024;
+/// Per-request generation cap; larger `max_tokens` answer 400.
+pub const MAX_GEN_TOKENS: usize = 4096;
+/// Sliding window for latency percentiles in `/metrics`.
+const METRIC_WINDOW: usize = 4096;
+/// Hard cap on live connection threads. Past it, new connections are
+/// dropped at accept time — OS threads and their stacks are the scarce
+/// resource here, and the scheduler's `max_queued` back-pressure can only
+/// protect what reaches a parsed request.
+const MAX_CONN_THREADS: usize = 256;
+/// Socket read/write timeout: a stalled client — one that stops sending a
+/// body, or stops reading its response/stream — cannot pin a connection
+/// thread forever. A timed-out write errors the handler, which drops the
+/// request's event channel; the engine's sends then fail harmlessly.
+const IO_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Connection threads → engine thread.
+enum ToEngine {
+    Submit { prompt: Vec<u32>, gen_tokens: usize, reply: Sender<SubmitOutcome> },
+    Shutdown,
+}
+
+/// Engine thread → the submitting connection thread.
+enum SubmitOutcome {
+    Accepted { id: u64, events: Receiver<TokenEvent> },
+    QueueFull(String),
+    Invalid(String),
+    ShuttingDown,
+}
+
+/// Engine thread → a request's streaming consumer.
+enum TokenEvent {
+    Token(u32),
+    Done(FinishedRequest),
+}
+
+#[derive(Default, Clone)]
+struct Metrics {
+    queued: usize,
+    active: usize,
+    completed: u64,
+    rejected: u64,
+    ttft_ms: Vec<f64>,
+    token_ms: Vec<f64>,
+    queue_wait_ms: Vec<f64>,
+}
+
+fn push_capped(v: &mut Vec<f64>, x: f64) {
+    if v.len() >= METRIC_WINDOW {
+        let excess = v.len() - METRIC_WINDOW / 2;
+        v.drain(..excess);
+    }
+    v.push(x);
+}
+
+/// State shared by the engine, accept, and connection threads.
+struct Shared {
+    shutdown: AtomicBool,
+    /// Live connection threads (bounded by [`MAX_CONN_THREADS`]).
+    conns: AtomicUsize,
+    model_name: String,
+    vocab: usize,
+    max_batch: usize,
+    max_queued: usize,
+    metrics: Mutex<Metrics>,
+}
+
+impl Shared {
+    fn health_json(&self) -> Json {
+        Json::object()
+            .with("status", "ok")
+            .with("model", self.model_name.as_str())
+            .with("vocab", self.vocab)
+    }
+
+    fn metrics_json(&self) -> Json {
+        fn pctl(xs: &[f64]) -> Json {
+            Json::object()
+                .with("count", xs.len())
+                .with("p50", percentile(xs, 50.0))
+                .with("p99", percentile(xs, 99.0))
+        }
+        // Snapshot under the lock (plain memcpys); the percentile sorting
+        // over 4096-sample windows happens outside it, so a /metrics
+        // poller cannot stall the engine thread's per-step lock takes.
+        let m = self.metrics.lock().unwrap().clone();
+        Json::object()
+            .with("queued", m.queued)
+            .with("active", m.active)
+            .with("completed", m.completed)
+            .with("rejected", m.rejected)
+            .with("connections", self.conns.load(Ordering::SeqCst))
+            .with("max_batch", self.max_batch)
+            .with("max_queued", self.max_queued)
+            .with("ttft_ms", pctl(&m.ttft_ms))
+            .with("token_ms", pctl(&m.token_ms))
+            .with("queue_wait_ms", pctl(&m.queue_wait_ms))
+    }
+}
+
+/// The HTTP serving front-end. Binding spawns the engine thread (scheduler
+/// owner) and the accept thread; [`HttpServer::shutdown`] drains both.
+pub struct HttpServer {
+    addr: SocketAddr,
+    tx: Sender<ToEngine>,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    engine: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:8080`; port 0 picks a free port — read
+    /// it back from [`HttpServer::local_addr`]) and start serving `model`
+    /// under the scheduler knobs in `cfg`.
+    pub fn bind(model: Arc<NativeModel>, cfg: ServeConfig, addr: &str) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        let shared = Arc::new(Shared {
+            shutdown: AtomicBool::new(false),
+            conns: AtomicUsize::new(0),
+            model_name: model.cfg.name.clone(),
+            vocab: model.cfg.vocab,
+            max_batch: cfg.max_batch.max(1),
+            max_queued: cfg.max_queued.max(1),
+            metrics: Mutex::new(Metrics::default()),
+        });
+        let (tx, rx) = mpsc::channel();
+        let engine = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("gq-http-engine".into())
+                .spawn(move || engine_loop(model, cfg, rx, shared))
+                .context("spawning engine thread")?
+        };
+        let accept = {
+            let tx = tx.clone();
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("gq-http-accept".into())
+                .spawn(move || accept_loop(listener, tx, shared))
+                .context("spawning accept thread")?
+        };
+        Ok(HttpServer { addr, tx, shared, accept: Some(accept), engine: Some(engine) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Serve until the process exits (the accept loop only stops on
+    /// [`HttpServer::shutdown`]).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.engine.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Graceful shutdown: stop accepting connections, let the engine drain
+    /// every in-flight and queued request (their consumers still receive
+    /// all tokens), then join both threads.
+    pub fn shutdown(mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        let _ = self.tx.send(ToEngine::Shutdown);
+        // Unblock the accept loop: it re-checks the flag per connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.engine.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine thread
+
+fn engine_loop(
+    model: Arc<NativeModel>,
+    cfg: ServeConfig,
+    rx: Receiver<ToEngine>,
+    shared: Arc<Shared>,
+) {
+    let mut sched = Scheduler::new(&model, cfg);
+    let mut sinks: HashMap<u64, Sender<TokenEvent>> = HashMap::new();
+    let mut draining = false;
+    loop {
+        if !sched.has_work() {
+            if draining {
+                break;
+            }
+            // Idle: park on the channel instead of spinning.
+            match rx.recv() {
+                Ok(msg) => handle_msg(msg, &mut sched, &mut sinks, &shared, &mut draining),
+                Err(_) => break, // server dropped without shutdown()
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(msg) => handle_msg(msg, &mut sched, &mut sinks, &shared, &mut draining),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    draining = true;
+                    break;
+                }
+            }
+        }
+        if !sched.has_work() {
+            publish_gauges(&shared, &sched);
+            continue;
+        }
+        let finished = sched.step();
+        for &(id, tok) in sched.step_tokens() {
+            if let Some(sink) = sinks.get(&id) {
+                // A send error means the consumer hung up mid-stream; the
+                // request still runs to completion server-side.
+                let _ = sink.send(TokenEvent::Token(tok));
+            }
+        }
+        publish_gauges(&shared, &sched);
+        if !finished.is_empty() {
+            let mut m = shared.metrics.lock().unwrap();
+            for fr in &finished {
+                m.completed += 1;
+                push_capped(&mut m.ttft_ms, fr.metrics.ttft_ms);
+                push_capped(&mut m.queue_wait_ms, fr.metrics.queue_wait_ms);
+                for &t in &fr.metrics.token_ms {
+                    push_capped(&mut m.token_ms, t);
+                }
+            }
+        }
+        for fr in finished {
+            if let Some(sink) = sinks.remove(&fr.id) {
+                let _ = sink.send(TokenEvent::Done(fr));
+            }
+        }
+    }
+}
+
+fn publish_gauges(shared: &Shared, sched: &Scheduler) {
+    let mut m = shared.metrics.lock().unwrap();
+    m.queued = sched.queued();
+    m.active = sched.active();
+}
+
+fn handle_msg(
+    msg: ToEngine,
+    sched: &mut Scheduler,
+    sinks: &mut HashMap<u64, Sender<TokenEvent>>,
+    shared: &Shared,
+    draining: &mut bool,
+) {
+    match msg {
+        ToEngine::Shutdown => *draining = true,
+        ToEngine::Submit { prompt, gen_tokens, reply } => {
+            if *draining {
+                let _ = reply.send(SubmitOutcome::ShuttingDown);
+            } else if sched.queued() >= sched.cfg.max_queued {
+                shared.metrics.lock().unwrap().rejected += 1;
+                let _ = reply.send(SubmitOutcome::QueueFull(format!(
+                    "admission queue full ({} waiting, max_queued = {})",
+                    sched.queued(),
+                    sched.cfg.max_queued
+                )));
+            } else {
+                match sched.submit(&prompt, gen_tokens) {
+                    Ok(id) => {
+                        let (etx, erx) = mpsc::channel();
+                        sinks.insert(id, etx);
+                        let _ = reply.send(SubmitOutcome::Accepted { id, events: erx });
+                    }
+                    Err(e) => {
+                        let _ = reply.send(SubmitOutcome::Invalid(e.to_string()));
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Accept + connection threads
+
+/// Decrements the live-connection gauge when a connection thread exits
+/// (normally or by panic).
+struct ConnGuard(Arc<Shared>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.conns.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn accept_loop(listener: TcpListener, tx: Sender<ToEngine>, shared: Arc<Shared>) {
+    for conn in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = conn else { continue };
+        // Load-shed past the thread cap by dropping the connection: even a
+        // quick 503 write could block the accept loop on a hostile socket.
+        if shared.conns.load(Ordering::SeqCst) >= MAX_CONN_THREADS {
+            drop(stream);
+            continue;
+        }
+        shared.conns.fetch_add(1, Ordering::SeqCst);
+        let tx = tx.clone();
+        let conn_shared = shared.clone();
+        let spawned = std::thread::Builder::new().name("gq-http-conn".into()).spawn(move || {
+            let _guard = ConnGuard(conn_shared.clone());
+            handle_conn(stream, tx, conn_shared);
+        });
+        if spawned.is_err() {
+            shared.conns.fetch_sub(1, Ordering::SeqCst);
+            crate::log_warn!("http", "failed to spawn connection thread");
+        }
+    }
+}
+
+struct Request {
+    method: String,
+    path: String,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+}
+
+/// Parse one HTTP/1.x request (request line, headers, `Content-Length`
+/// body). Chunked request bodies are rejected — clients must send a
+/// length. `w` carries the interim `100 Continue` response: curl defers
+/// bodies over 1 KiB behind `Expect: 100-continue` and would otherwise
+/// stall ~1s per large-prompt request waiting for it.
+fn read_request(r: &mut impl BufRead, w: &mut impl Write) -> Result<Request> {
+    // The head is read through a `Take` so a hostile client cannot grow
+    // the line buffers past MAX_HEAD_BYTES; the body keeps its own cap.
+    let mut head = r.by_ref().take(MAX_HEAD_BYTES);
+    let mut line = String::new();
+    if head.read_line(&mut line)? == 0 {
+        bail!("empty request");
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("missing method")?.to_string();
+    let target = parts.next().context("missing request target")?.to_string();
+    let version = parts.next().context("missing HTTP version")?;
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported protocol `{version}`");
+    }
+    let path = target.split('?').next().unwrap_or("").to_string();
+    let mut headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        if head.read_line(&mut h)? == 0 {
+            bail!("connection closed mid-headers");
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        let (name, value) =
+            h.split_once(':').with_context(|| format!("malformed header `{h}`"))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let mut body = Vec::new();
+    if let Some(te) = header(&headers, "transfer-encoding") {
+        bail!("transfer-encoding `{te}` not supported; send Content-Length");
+    }
+    if let Some(cl) = header(&headers, "content-length") {
+        let n: usize = cl.parse().context("bad Content-Length")?;
+        if n > MAX_BODY_BYTES {
+            bail!("body too large ({n} bytes, cap {MAX_BODY_BYTES})");
+        }
+        if let Some(expect) = header(&headers, "expect") {
+            if expect.eq_ignore_ascii_case("100-continue") {
+                w.write_all(b"HTTP/1.1 100 Continue\r\n\r\n").context("writing 100 Continue")?;
+                w.flush().context("flushing 100 Continue")?;
+            }
+        }
+        body.resize(n, 0);
+        r.read_exact(&mut body).context("reading body")?;
+    }
+    Ok(Request { method, path, headers, body })
+}
+
+fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra: &[(&str, &str)],
+    body: &str,
+) -> std::io::Result<()> {
+    write!(w, "HTTP/1.1 {status} {reason}\r\n")?;
+    write!(w, "Content-Type: {content_type}\r\n")?;
+    write!(w, "Content-Length: {}\r\n", body.len())?;
+    for (k, v) in extra {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "Connection: close\r\n\r\n")?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+fn write_json(w: &mut impl Write, status: u16, reason: &str, doc: &Json) -> std::io::Result<()> {
+    write_response(w, status, reason, "application/json", &[], &doc.encode())
+}
+
+fn write_error_extra(
+    w: &mut impl Write,
+    status: u16,
+    reason: &str,
+    extra: &[(&str, &str)],
+    msg: &str,
+) -> std::io::Result<()> {
+    let body = Json::object().with("error", msg).encode();
+    write_response(w, status, reason, "application/json", extra, &body)
+}
+
+fn write_error(w: &mut impl Write, status: u16, reason: &str, msg: &str) -> std::io::Result<()> {
+    write_error_extra(w, status, reason, &[], msg)
+}
+
+fn write_chunk(w: &mut impl Write, payload: &str) -> std::io::Result<()> {
+    write!(w, "{:x}\r\n", payload.len())?;
+    w.write_all(payload.as_bytes())?;
+    w.write_all(b"\r\n")?;
+    w.flush()
+}
+
+fn finish_chunks(w: &mut impl Write) -> std::io::Result<()> {
+    w.write_all(b"0\r\n\r\n")?;
+    w.flush()
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<ToEngine>, shared: Arc<Shared>) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let req = match read_request(&mut reader, &mut writer) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = write_error(&mut writer, 400, "Bad Request", &e.to_string());
+            return;
+        }
+    };
+    let _ = match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => write_json(&mut writer, 200, "OK", &shared.health_json()),
+        ("GET", "/metrics") => write_json(&mut writer, 200, "OK", &shared.metrics_json()),
+        ("POST", "/v1/completions") => handle_completion(&mut writer, &req.body, &tx),
+        (_, "/healthz") | (_, "/metrics") | (_, "/v1/completions") => write_error(
+            &mut writer,
+            405,
+            "Method Not Allowed",
+            &format!("{} not supported on {}", req.method, req.path),
+        ),
+        _ => write_error(
+            &mut writer,
+            404,
+            "Not Found",
+            &format!("no route for {} {}", req.method, req.path),
+        ),
+    };
+}
+
+struct CompletionReq {
+    prompt: Vec<u32>,
+    max_tokens: usize,
+    stream: bool,
+}
+
+fn parse_completion(body: &[u8]) -> Result<CompletionReq> {
+    let text = std::str::from_utf8(body).context("body is not UTF-8")?;
+    let doc = Json::parse(text)?;
+    let prompt = doc.get("prompt").context("missing `prompt` (array of token ids)")?;
+    let arr = prompt.as_arr().context("`prompt` must be an array of token ids")?;
+    let mut toks = Vec::with_capacity(arr.len());
+    for t in arr {
+        let n = t.as_u64().context("`prompt` entries must be non-negative integers")?;
+        if n > u32::MAX as u64 {
+            bail!("prompt token {n} out of range");
+        }
+        toks.push(n as u32);
+    }
+    let max_tokens = match doc.get("max_tokens") {
+        None => 16,
+        Some(m) => {
+            let n = m.as_u64().context("`max_tokens` must be a non-negative integer")?;
+            // Compare in u64 BEFORE narrowing: `n as usize` would wrap on
+            // 32-bit targets and let huge values sail under the cap.
+            if n > MAX_GEN_TOKENS as u64 {
+                bail!("max_tokens {n} exceeds the per-request cap {MAX_GEN_TOKENS}");
+            }
+            n as usize
+        }
+    };
+    let stream = match doc.get("stream") {
+        None => false,
+        Some(s) => s.as_bool().context("`stream` must be a boolean")?,
+    };
+    Ok(CompletionReq { prompt: toks, max_tokens, stream })
+}
+
+fn request_metrics_json(fr: &FinishedRequest) -> Json {
+    Json::object()
+        .with("queue_wait_ms", fr.metrics.queue_wait_ms)
+        .with("ttft_ms", fr.metrics.ttft_ms)
+        .with("p50_ms", fr.metrics.p50_ms)
+        .with("p99_ms", fr.metrics.p99_ms)
+        .with("kv_bytes", fr.metrics.kv_bytes)
+}
+
+fn handle_completion(
+    w: &mut impl Write,
+    body: &[u8],
+    tx: &Sender<ToEngine>,
+) -> std::io::Result<()> {
+    let req = match parse_completion(body) {
+        Ok(r) => r,
+        Err(e) => return write_error(w, 400, "Bad Request", &e.to_string()),
+    };
+    let (rtx, rrx) = mpsc::channel();
+    let submit = ToEngine::Submit { prompt: req.prompt, gen_tokens: req.max_tokens, reply: rtx };
+    if tx.send(submit).is_err() {
+        return write_error(w, 503, "Service Unavailable", "engine stopped");
+    }
+    let outcome = match rrx.recv() {
+        Ok(o) => o,
+        Err(_) => return write_error(w, 503, "Service Unavailable", "engine stopped"),
+    };
+    match outcome {
+        SubmitOutcome::QueueFull(msg) => {
+            write_error_extra(w, 429, "Too Many Requests", &[("Retry-After", "1")], &msg)
+        }
+        SubmitOutcome::Invalid(msg) => write_error(w, 400, "Bad Request", &msg),
+        SubmitOutcome::ShuttingDown => {
+            write_error(w, 503, "Service Unavailable", "server is shutting down")
+        }
+        SubmitOutcome::Accepted { id, events } => {
+            if req.stream {
+                stream_completion(w, id, events)
+            } else {
+                blocking_completion(w, id, events)
+            }
+        }
+    }
+}
+
+fn blocking_completion(
+    w: &mut impl Write,
+    id: u64,
+    events: Receiver<TokenEvent>,
+) -> std::io::Result<()> {
+    loop {
+        match events.recv() {
+            Ok(TokenEvent::Token(_)) => continue,
+            Ok(TokenEvent::Done(fr)) => {
+                let toks: Vec<Json> = fr.tokens.iter().map(|&t| Json::from(t)).collect();
+                let doc = Json::object()
+                    .with("id", id)
+                    .with("tokens", toks)
+                    .with("n_tokens", fr.tokens.len())
+                    .with("finish_reason", "length")
+                    .with("metrics", request_metrics_json(&fr));
+                return write_json(w, 200, "OK", &doc);
+            }
+            Err(_) => {
+                return write_error(w, 500, "Internal Server Error", "engine dropped request");
+            }
+        }
+    }
+}
+
+fn stream_completion(
+    w: &mut impl Write,
+    id: u64,
+    events: Receiver<TokenEvent>,
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\n\
+         Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+    )?;
+    w.flush()?;
+    loop {
+        match events.recv() {
+            Ok(TokenEvent::Token(tok)) => {
+                let ev = Json::object().with("id", id).with("token", tok);
+                write_chunk(w, &format!("data: {}\n\n", ev.encode()))?;
+            }
+            Ok(TokenEvent::Done(fr)) => {
+                let done = Json::object()
+                    .with("id", id)
+                    .with("done", true)
+                    .with("n_tokens", fr.tokens.len())
+                    .with("finish_reason", "length")
+                    .with("metrics", request_metrics_json(&fr));
+                write_chunk(w, &format!("data: {}\n\n", done.encode()))?;
+                write_chunk(w, "data: [DONE]\n\n")?;
+                return finish_chunks(w);
+            }
+            // Engine exited without finishing (shutdown drains lanes first,
+            // so this is abnormal): end the stream without [DONE] so the
+            // client can tell it was truncated.
+            Err(_) => return finish_chunks(w),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_bytes(raw: &[u8]) -> Result<Request> {
+        let mut r = std::io::BufReader::new(raw);
+        read_request(&mut r, &mut Vec::new())
+    }
+
+    #[test]
+    fn parses_request_line_headers_and_body() {
+        let raw = b"POST /v1/completions?x=1 HTTP/1.1\r\nHost: h\r\nContent-Length: 4\r\n\r\nbody";
+        let req = parse_bytes(raw).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/completions", "query string must be stripped");
+        assert_eq!(header(&req.headers, "host"), Some("h"));
+        assert_eq!(req.body, b"body");
+    }
+
+    #[test]
+    fn get_without_body_parses() {
+        let req = parse_bytes(b"GET /healthz HTTP/1.0\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn expect_100_continue_gets_interim_response() {
+        // curl defers bodies > 1 KiB behind `Expect: 100-continue`; the
+        // interim response must be written before the body read.
+        let raw = b"POST / HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 2\r\n\r\nok";
+        let mut r = std::io::BufReader::new(&raw[..]);
+        let mut interim = Vec::new();
+        let req = read_request(&mut r, &mut interim).unwrap();
+        assert_eq!(req.body, b"ok");
+        assert_eq!(interim, b"HTTP/1.1 100 Continue\r\n\r\n");
+        // No Expect header -> nothing interim is written.
+        let mut quiet = Vec::new();
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 2\r\n\r\nok";
+        read_request(&mut std::io::BufReader::new(&raw[..]), &mut quiet).unwrap();
+        assert!(quiet.is_empty());
+    }
+
+    #[test]
+    fn malformed_requests_error() {
+        assert!(parse_bytes(b"").is_err(), "empty request");
+        assert!(parse_bytes(b"GET /\r\n\r\n").is_err(), "missing version");
+        assert!(parse_bytes(b"GET / SPDY/3\r\n\r\n").is_err(), "bad protocol");
+        assert!(parse_bytes(b"GET / HTTP/1.1\r\nbad header\r\n\r\n").is_err());
+        assert!(
+            parse_bytes(b"POST / HTTP/1.1\r\nContent-Length: 99\r\n\r\nshort").is_err(),
+            "truncated body"
+        );
+        assert!(
+            parse_bytes(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n\r\n")
+                .is_err(),
+            "chunked request bodies are unsupported"
+        );
+        let huge = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert!(parse_bytes(huge.as_bytes()).is_err(), "oversized body");
+        // An endless header section must hit the MAX_HEAD_BYTES cap, not
+        // grow without bound.
+        let mut big = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..4096 {
+            big.push_str(&format!("X-Pad-{i}: aaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa\r\n"));
+        }
+        big.push_str("\r\n");
+        assert!(parse_bytes(big.as_bytes()).is_err(), "oversized header section");
+    }
+
+    #[test]
+    fn completion_body_validation() {
+        let ok = parse_completion(br#"{"prompt": [1, 2, 3]}"#).unwrap();
+        assert_eq!(ok.prompt, vec![1, 2, 3]);
+        assert_eq!(ok.max_tokens, 16, "default");
+        assert!(!ok.stream);
+        let full =
+            parse_completion(br#"{"prompt": [7], "max_tokens": 0, "stream": true}"#).unwrap();
+        assert_eq!(full.max_tokens, 0);
+        assert!(full.stream);
+        for bad in [
+            &b"{oops"[..],
+            &br#"{"max_tokens": 4}"#[..],
+            &br#"{"prompt": "text"}"#[..],
+            &br#"{"prompt": [1.5]}"#[..],
+            &br#"{"prompt": [-1]}"#[..],
+            &br#"{"prompt": [1], "max_tokens": -2}"#[..],
+            &br#"{"prompt": [1], "max_tokens": 99999999}"#[..],
+            &br#"{"prompt": [1], "stream": 1}"#[..],
+        ] {
+            assert!(parse_completion(bad).is_err(), "{:?}", std::str::from_utf8(bad));
+        }
+    }
+
+    #[test]
+    fn response_writers_produce_wellformed_http() {
+        let mut buf = Vec::new();
+        write_error(&mut buf, 429, "Too Many Requests", "queue full").unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Content-Type: application/json\r\n"));
+        assert!(text.ends_with("{\"error\":\"queue full\"}"));
+        let body_len = "{\"error\":\"queue full\"}".len();
+        assert!(text.contains(&format!("Content-Length: {body_len}\r\n")));
+
+        let mut buf = Vec::new();
+        write_chunk(&mut buf, "data: hi\n\n").unwrap();
+        finish_chunks(&mut buf).unwrap();
+        assert_eq!(buf, b"a\r\ndata: hi\n\n\r\n0\r\n\r\n");
+    }
+}

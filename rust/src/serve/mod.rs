@@ -29,10 +29,21 @@
 //!   scheduler, bit-identical greedy outputs), `generate_scheduled` (with
 //!   explicit knobs), and `generate_per_sequence` (the original
 //!   thread-per-sequence baseline, kept for benchmarking and regression).
+//! * **[`http`]** — the network front-end (`gq serve --http <addr>`): a
+//!   dependency-free HTTP/1.1 server whose connection threads feed a single
+//!   scheduler-owning engine thread over an mpsc channel. `POST
+//!   /v1/completions` serves blocking and SSE-streamed completions (greedy
+//!   tokens bit-identical to `generate_scheduled`), `GET /metrics` exposes
+//!   queue depth and TTFT/per-token percentiles, `GET /healthz` is the
+//!   liveness probe. Admission control maps to HTTP status codes: a full
+//!   `max_queued` queue answers 429, malformed bodies 400, and graceful
+//!   shutdown drains every in-flight lane before the threads join. CI's
+//!   `serve-e2e` job exercises all of this against the release binary.
 //! * **[`builder`]** — quantizes a checkpoint into any serving format.
 
 pub mod builder;
 pub mod engine;
+pub mod http;
 pub mod scheduler;
 
 pub use builder::{build_serving_model, ServeFormat};
@@ -40,4 +51,5 @@ pub use engine::{
     generate_batch, generate_per_sequence, generate_scheduled, generate_scheduled_streaming,
     random_prompts, ServeStats,
 };
+pub use http::HttpServer;
 pub use scheduler::{greedy_argmax, FinishedRequest, RequestMetrics, Scheduler};

@@ -1,0 +1,534 @@
+//! Minimal JSON encoder/parser (serde is unavailable offline).
+//!
+//! The HTTP serving front-end ([`crate::serve::http`]) and the benchmark
+//! artifact emitters need machine-readable wire formats, so this module
+//! implements the subset of JSON the system uses: a [`Json`] value tree, a
+//! strict recursive-descent parser (full string escapes including `\uXXXX`
+//! surrogate pairs, depth-limited, rejects trailing garbage), and a compact
+//! encoder. Object keys keep insertion order so encoded documents are
+//! deterministic.
+
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// Nesting depth cap: a hand-rolled recursive parser must bound recursion
+/// so a hostile `[[[[...` body cannot blow the connection thread's stack.
+const MAX_DEPTH: usize = 128;
+
+/// 2^53 — every integer with magnitude strictly below this is exactly
+/// representable in f64, so integer round-trips are lossless under it.
+const F64_EXACT_INT: f64 = 9_007_199_254_740_992.0;
+
+/// A parsed JSON value. Numbers are f64 (JSON has no integer type); object
+/// pairs preserve insertion order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Empty object, for builder-style construction with [`Json::with`].
+    pub fn object() -> Json {
+        Json::Obj(Vec::new())
+    }
+
+    /// Append a key/value pair (no-op on non-objects); returns self so
+    /// documents read as a chain.
+    pub fn with(mut self, key: &str, value: impl Into<Json>) -> Json {
+        if let Json::Obj(pairs) = &mut self {
+            pairs.push((key.to_string(), value.into()));
+        }
+        self
+    }
+
+    /// Object field lookup (first match); `None` on non-objects.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Number as a non-negative integer; `None` for negatives, fractions,
+    /// and values at or beyond 2^53 (f64's exact-integer range).
+    pub fn as_u64(&self) -> Option<u64> {
+        let v = self.as_f64()?;
+        if v >= 0.0 && v.fract() == 0.0 && v < F64_EXACT_INT {
+            Some(v as u64)
+        } else {
+            None
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// Compact encoding (no whitespace). Non-finite numbers encode as
+    /// `null` — JSON has no NaN/Infinity.
+    pub fn encode(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => write_num(*v, out),
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Strict parse of a complete JSON document (trailing non-whitespace is
+    /// an error, as are numbers that overflow f64).
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let v = p.value(0)?;
+        p.skip_ws();
+        ensure!(p.pos == p.bytes.len(), "json: trailing data at byte {}", p.pos);
+        Ok(v)
+    }
+}
+
+impl From<&str> for Json {
+    fn from(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+}
+
+impl From<String> for Json {
+    fn from(s: String) -> Json {
+        Json::Str(s)
+    }
+}
+
+impl From<bool> for Json {
+    fn from(b: bool) -> Json {
+        Json::Bool(b)
+    }
+}
+
+impl From<f64> for Json {
+    fn from(v: f64) -> Json {
+        Json::Num(v)
+    }
+}
+
+impl From<i32> for Json {
+    fn from(v: i32) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<u32> for Json {
+    fn from(v: u32) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<u64> for Json {
+    fn from(v: u64) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<usize> for Json {
+    fn from(v: usize) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<Vec<Json>> for Json {
+    fn from(items: Vec<Json>) -> Json {
+        Json::Arr(items)
+    }
+}
+
+fn write_num(v: f64, out: &mut String) {
+    if !v.is_finite() {
+        out.push_str("null");
+    } else if v.fract() == 0.0 && v.abs() < F64_EXACT_INT {
+        let _ = write!(out, "{}", v as i64);
+    } else {
+        let _ = write!(out, "{v}");
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{0008}' => out.push_str("\\b"),
+            '\u{000c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if matches!(b, b' ' | b'\t' | b'\n' | b'\r') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json> {
+        ensure!(depth <= MAX_DEPTH, "json: nesting deeper than {MAX_DEPTH}");
+        self.skip_ws();
+        match self.peek() {
+            None => bail!("json: unexpected end of input"),
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => {
+                self.literal("true")?;
+                Ok(Json::Bool(true))
+            }
+            Some(b'f') => {
+                self.literal("false")?;
+                Ok(Json::Bool(false))
+            }
+            Some(b'n') => {
+                self.literal("null")?;
+                Ok(Json::Null)
+            }
+            Some(b'-') | Some(b'0'..=b'9') => self.number(),
+            Some(c) => bail!("json: unexpected byte `{}` at {}", c as char, self.pos),
+        }
+    }
+
+    fn literal(&mut self, lit: &str) -> Result<()> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(())
+        } else {
+            bail!("json: invalid literal at byte {}", self.pos)
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if matches!(b, b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let v: f64 = s.parse().map_err(|_| anyhow!("json: invalid number `{s}` at {start}"))?;
+        ensure!(v.is_finite(), "json: number `{s}` overflows f64");
+        Ok(Json::Num(v))
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        ensure!(self.pos + 4 <= self.bytes.len(), "json: truncated \\u escape");
+        let s = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .map_err(|_| anyhow!("json: bad \\u escape"))?;
+        let v = u32::from_str_radix(s, 16).map_err(|_| anyhow!("json: bad \\u escape `{s}`"))?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn string(&mut self) -> Result<String> {
+        // Caller ensured the opening quote.
+        self.pos += 1;
+        let mut out = String::new();
+        loop {
+            let Some(b) = self.peek() else { bail!("json: unterminated string") };
+            match b {
+                b'"' => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    self.pos += 1;
+                    let Some(e) = self.peek() else { bail!("json: unterminated escape") };
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let code = if (0xd800..0xdc00).contains(&hi) {
+                                self.literal("\\u")?;
+                                let lo = self.hex4()?;
+                                ensure!(
+                                    (0xdc00..0xe000).contains(&lo),
+                                    "json: invalid low surrogate \\u{lo:04x}"
+                                );
+                                0x10000 + ((hi - 0xd800) << 10) + (lo - 0xdc00)
+                            } else {
+                                hi
+                            };
+                            let c = char::from_u32(code)
+                                .ok_or_else(|| anyhow!("json: invalid \\u escape {code:#x}"))?;
+                            out.push(c);
+                        }
+                        other => bail!("json: unknown escape `\\{}`", other as char),
+                    }
+                }
+                b if b < 0x20 => bail!("json: unescaped control character in string"),
+                _ => {
+                    // Raw run up to the next quote/escape. The delimiters
+                    // are ASCII, so both endpoints sit on char boundaries
+                    // and the slice is valid UTF-8 (input was &str).
+                    let start = self.pos;
+                    while let Some(c) = self.peek() {
+                        if c == b'"' || c == b'\\' || c < 0x20 {
+                            break;
+                        }
+                        self.pos += 1;
+                    }
+                    out.push_str(std::str::from_utf8(&self.bytes[start..self.pos]).unwrap());
+                }
+            }
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json> {
+        self.pos += 1; // [
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => bail!("json: expected `,` or `]` at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json> {
+        self.pos += 1; // {
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            ensure!(self.peek() == Some(b'"'), "json: expected string key at byte {}", self.pos);
+            let key = self.string()?;
+            self.skip_ws();
+            ensure!(self.peek() == Some(b':'), "json: expected `:` at byte {}", self.pos);
+            self.pos += 1;
+            let val = self.value(depth + 1)?;
+            pairs.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => bail!("json: expected `,` or `}}` at byte {}", self.pos),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_escapes() {
+        let doc = Json::object()
+            .with("quote\"backslash\\", "line\nbreak\ttab")
+            .with("unicode", "café ☕")
+            .with("control", "\u{0001}bell\u{0007}");
+        let text = doc.encode();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, doc);
+        // Escapes actually appear escaped on the wire.
+        assert!(text.contains("\\\""));
+        assert!(text.contains("\\n"));
+        assert!(text.contains("\\u0001"));
+    }
+
+    #[test]
+    fn nested_objects_and_whitespace() {
+        let text = r#"
+            { "a" : [ 1 , 2 , { "b" : [ ] , "c" : { } } ] ,
+              "d" : null , "e" : true , "f" : false }
+        "#;
+        let v = Json::parse(text).unwrap();
+        let a = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[0].as_u64(), Some(1));
+        assert_eq!(a[2].get("b").unwrap().as_arr().unwrap().len(), 0);
+        assert_eq!(v.get("d"), Some(&Json::Null));
+        assert_eq!(v.get("e").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("f").unwrap().as_bool(), Some(false));
+        // Round-trip through the compact encoding.
+        assert_eq!(Json::parse(&v.encode()).unwrap(), v);
+    }
+
+    #[test]
+    fn numbers() {
+        let v = Json::parse("[0, -7, 2.5, 1e3, 1.25e-2, 9007199254740991]").unwrap();
+        let a = v.as_arr().unwrap();
+        assert_eq!(a[0].as_u64(), Some(0));
+        assert_eq!(a[1].as_f64(), Some(-7.0));
+        assert_eq!(a[1].as_u64(), None, "negative is not u64");
+        assert_eq!(a[2].as_f64(), Some(2.5));
+        assert_eq!(a[2].as_u64(), None, "fraction is not u64");
+        assert_eq!(a[3].as_f64(), Some(1000.0));
+        assert_eq!(a[4].as_f64(), Some(0.0125));
+        assert_eq!(a[5].as_u64(), Some(9007199254740991), "2^53 - 1 is exact");
+        let big = Json::parse("9007199254740992").unwrap();
+        assert_eq!(big.as_u64(), None, "2^53 is past the exact range");
+        // Integral floats encode without a decimal point; fractions keep it.
+        assert_eq!(Json::Num(3.0).encode(), "3");
+        assert_eq!(Json::Num(2.5).encode(), "2.5");
+        assert_eq!(Json::Num(f64::NAN).encode(), "null");
+        assert!(Json::parse("1e999").is_err(), "overflow must not parse to inf");
+    }
+
+    #[test]
+    fn unicode_escapes_and_raw_utf8() {
+        assert_eq!(Json::parse(r#""\u00e9""#).unwrap(), Json::Str("é".into()));
+        // Surrogate pair escape for U+1F600.
+        assert_eq!(Json::parse(r#""\ud83d\ude00""#).unwrap(), Json::Str("😀".into()));
+        // Raw (unescaped) multi-byte UTF-8 passes through untouched.
+        assert_eq!(Json::parse("\"caffè 😀\"").unwrap(), Json::Str("caffè 😀".into()));
+        assert!(Json::parse(r#""\ud83d""#).is_err(), "lone high surrogate");
+        assert!(Json::parse(r#""\uzzzz""#).is_err());
+    }
+
+    #[test]
+    fn malformed_documents_are_rejected() {
+        for bad in [
+            "",
+            "{",
+            "{\"a\":}",
+            "{\"a\" 1}",
+            "{a:1}",
+            "[1 2]",
+            "\"unterminated",
+            "nul",
+            "1 trailing",
+            "{} {}",
+            "\"raw\u{0001}control\"",
+            "--5",
+        ] {
+            assert!(Json::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn depth_limit_holds() {
+        let deep = "[".repeat(MAX_DEPTH + 8) + &"]".repeat(MAX_DEPTH + 8);
+        assert!(Json::parse(&deep).is_err());
+        let ok = "[".repeat(16) + &"]".repeat(16);
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn builder_and_accessors() {
+        let doc = Json::object()
+            .with("name", "gq")
+            .with("n", 3usize)
+            .with("on", true)
+            .with("items", vec![Json::from(1u32), Json::from(2u32)]);
+        assert_eq!(doc.get("name").unwrap().as_str(), Some("gq"));
+        assert_eq!(doc.get("n").unwrap().as_u64(), Some(3));
+        assert_eq!(doc.get("on").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("items").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(doc.get("missing"), None);
+        assert_eq!(Json::Null.get("x"), None);
+    }
+}

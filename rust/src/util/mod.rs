@@ -1,9 +1,10 @@
-//! Small shared substrates: PRNG, timing, stats, logging, formatting.
+//! Small shared substrates: PRNG, timing, stats, logging, formatting, JSON.
 //!
 //! The offline environment has no `rand`/`log`/`humantime` crates, so these
 //! are built in-repo (DESIGN.md §1, offline constraints table).
 
 pub mod fmt;
+pub mod json;
 pub mod logging;
 pub mod rng;
 pub mod stats;

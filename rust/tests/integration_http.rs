@@ -1,0 +1,301 @@
+//! HTTP front-end integration: a real [`HttpServer`] bound to port 0 on
+//! the tiny preset, driven by raw `TcpStream` clients. Verifies routing,
+//! the completion request/response schema, SSE streaming, bit-identity of
+//! served tokens against the in-process scheduler path, admission-control
+//! status codes (400/429), and graceful-shutdown draining.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use guidedquant::cfg::{preset, ServeConfig};
+use guidedquant::model::{NativeModel, ParamStore};
+use guidedquant::serve::{build_serving_model, generate_scheduled, HttpServer, ServeFormat};
+use guidedquant::util::json::Json;
+use guidedquant::util::Rng;
+
+fn model(format: ServeFormat) -> Arc<NativeModel> {
+    let (cfg, _) = preset("tiny");
+    let ps = ParamStore::init(&cfg, &mut Rng::new(0));
+    Arc::new(build_serving_model(&ps, None, format, 4).unwrap())
+}
+
+fn serve(format: ServeFormat, cfg: ServeConfig) -> (Arc<NativeModel>, HttpServer) {
+    let m = model(format);
+    let server = HttpServer::bind(m.clone(), cfg, "127.0.0.1:0").unwrap();
+    (m, server)
+}
+
+struct Response {
+    status: u16,
+    body: String,
+}
+
+/// Send one raw HTTP request and read the full response (Content-Length
+/// or chunked transfer encoding both handled).
+fn request(addr: SocketAddr, raw: &str) -> Response {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    s.write_all(raw.as_bytes()).unwrap();
+    let mut r = BufReader::new(s);
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let status: u16 = line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).unwrap();
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        let (k, v) = t.split_once(':').unwrap();
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    let chunked = headers.iter().any(|(k, v)| k == "transfer-encoding" && v.contains("chunked"));
+    let body = if chunked {
+        let mut out = String::new();
+        loop {
+            let mut sz = String::new();
+            r.read_line(&mut sz).unwrap();
+            let n = usize::from_str_radix(sz.trim(), 16).unwrap();
+            let mut buf = vec![0u8; n + 2];
+            r.read_exact(&mut buf).unwrap();
+            if n == 0 {
+                break;
+            }
+            out.push_str(std::str::from_utf8(&buf[..n]).unwrap());
+        }
+        out
+    } else {
+        let cl = headers.iter().find(|(k, _)| k == "content-length").expect("content-length");
+        let n: usize = cl.1.parse().unwrap();
+        let mut buf = vec![0u8; n];
+        r.read_exact(&mut buf).unwrap();
+        String::from_utf8(buf).unwrap()
+    };
+    Response { status, body }
+}
+
+fn get(addr: SocketAddr, path: &str) -> Response {
+    request(addr, &format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n"))
+}
+
+fn post(addr: SocketAddr, path: &str, body: &str) -> Response {
+    request(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+fn completion_body(prompt: &[u32], max_tokens: usize, stream: bool) -> String {
+    let toks: Vec<Json> = prompt.iter().map(|&t| Json::from(t)).collect();
+    Json::object()
+        .with("prompt", toks)
+        .with("max_tokens", max_tokens)
+        .with("stream", stream)
+        .encode()
+}
+
+fn response_tokens(body: &str) -> Vec<u32> {
+    let doc = Json::parse(body).unwrap();
+    let arr = doc.get("tokens").unwrap().as_arr().unwrap().to_vec();
+    arr.iter().map(|t| t.as_u64().unwrap() as u32).collect()
+}
+
+/// `data: {...}` SSE events from a streamed response body.
+fn sse_events(body: &str) -> Vec<String> {
+    body.lines().filter(|l| l.starts_with("data: ")).map(|l| l[6..].to_string()).collect()
+}
+
+fn reference_tokens(m: &NativeModel, prompt: &[u32], gen: usize) -> Vec<u32> {
+    let (outs, _) =
+        generate_scheduled(m, &[prompt.to_vec()], gen, 1, ServeConfig::default()).unwrap();
+    outs.into_iter().next().unwrap()
+}
+
+/// Poll `/metrics` until `pred` holds (the engine thread publishes gauges
+/// after every step, so transitions land within a few steps).
+fn wait_for_metrics(addr: SocketAddr, pred: impl Fn(&Json) -> bool, what: &str) {
+    let t0 = Instant::now();
+    loop {
+        let m = Json::parse(&get(addr, "/metrics").body).unwrap();
+        if pred(&m) {
+            return;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30), "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn healthz_metrics_and_routing() {
+    let (_m, server) = serve(ServeFormat::Fp32, ServeConfig::default());
+    let addr = server.local_addr();
+
+    let h = get(addr, "/healthz");
+    assert_eq!(h.status, 200);
+    let h = Json::parse(&h.body).unwrap();
+    assert_eq!(h.get("status").unwrap().as_str(), Some("ok"));
+    assert_eq!(h.get("model").unwrap().as_str(), Some("tiny"));
+
+    let m = get(addr, "/metrics");
+    assert_eq!(m.status, 200);
+    let m = Json::parse(&m.body).unwrap();
+    for key in ["queued", "active", "completed", "rejected", "ttft_ms", "token_ms"] {
+        assert!(m.get(key).is_some(), "metrics missing `{key}`: {}", m.encode());
+    }
+
+    assert_eq!(get(addr, "/nope").status, 404);
+    assert_eq!(get(addr, "/v1/completions").status, 405, "GET on a POST route");
+    server.shutdown();
+}
+
+#[test]
+fn blocking_completion_is_bit_identical_to_generate_scheduled() {
+    let (m, server) = serve(ServeFormat::NonUniformScalar, ServeConfig::default());
+    let addr = server.local_addr();
+    let prompt = [3u32, 17, 99, 5];
+    let want = reference_tokens(&m, &prompt, 6);
+
+    let resp = post(addr, "/v1/completions", &completion_body(&prompt, 6, false));
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let doc = Json::parse(&resp.body).unwrap();
+    assert_eq!(response_tokens(&resp.body), want, "served tokens diverged");
+    assert_eq!(doc.get("n_tokens").unwrap().as_u64(), Some(6));
+    assert_eq!(doc.get("finish_reason").unwrap().as_str(), Some("length"));
+    let met = doc.get("metrics").unwrap();
+    assert!(met.get("ttft_ms").unwrap().as_f64().unwrap() >= 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn streamed_completion_matches_blocking_and_terminates() {
+    let (m, server) = serve(ServeFormat::NonUniformScalar, ServeConfig::default());
+    let addr = server.local_addr();
+    let prompt = [1u32, 2, 3, 4];
+    let want = reference_tokens(&m, &prompt, 8);
+
+    let resp = post(addr, "/v1/completions", &completion_body(&prompt, 8, true));
+    assert_eq!(resp.status, 200);
+    let events = sse_events(&resp.body);
+    assert_eq!(events.len(), 10, "8 tokens + done + [DONE]: {events:?}");
+    assert_eq!(events.last().unwrap(), "[DONE]", "stream must end with the terminator");
+    let done = Json::parse(&events[events.len() - 2]).unwrap();
+    assert_eq!(done.get("done").unwrap().as_bool(), Some(true));
+    assert_eq!(done.get("n_tokens").unwrap().as_u64(), Some(8));
+    let streamed: Vec<u32> = events[..events.len() - 2]
+        .iter()
+        .map(|e| {
+            let ev = Json::parse(e).unwrap();
+            ev.get("token").unwrap().as_u64().unwrap() as u32
+        })
+        .collect();
+    assert_eq!(streamed, want, "streamed tokens diverged from the scheduler path");
+
+    // The non-streamed variant of the same request returns the same tokens.
+    let blocking = post(addr, "/v1/completions", &completion_body(&prompt, 8, false));
+    assert_eq!(response_tokens(&blocking.body), want);
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_clients_are_all_served_bit_identically() {
+    // Four clients race into the continuous batch; each response must
+    // still be exactly the single-prompt scheduler output (batch
+    // composition never changes per-lane arithmetic).
+    let (m, server) = serve(
+        ServeFormat::Fp32,
+        ServeConfig { max_batch: 3, max_queued: 8, ..ServeConfig::default() },
+    );
+    let addr = server.local_addr();
+    let mut rng = Rng::new(11);
+    let prompts: Vec<Vec<u32>> = (0..4)
+        .map(|i| (0..(2 + i % 3)).map(|_| rng.below(m.cfg.vocab) as u32).collect())
+        .collect();
+    let handles: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            let p = p.clone();
+            std::thread::spawn(move || {
+                let resp = post(addr, "/v1/completions", &completion_body(&p, 5, false));
+                assert_eq!(resp.status, 200, "{}", resp.body);
+                response_tokens(&resp.body)
+            })
+        })
+        .collect();
+    let got: Vec<Vec<u32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for (p, tokens) in prompts.iter().zip(&got) {
+        assert_eq!(tokens, &reference_tokens(&m, p, 5), "prompt {p:?}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn invalid_requests_get_400() {
+    let (_m, server) = serve(ServeFormat::Fp32, ServeConfig::default());
+    let addr = server.local_addr();
+    for body in [
+        "{oops",                                  // malformed json
+        "{\"max_tokens\": 4}",                    // missing prompt
+        "{\"prompt\": \"text\"}",                 // wrong type
+        "{\"prompt\": []}",                       // empty prompt
+        "{\"prompt\": [99999]}",                  // out of vocab
+        "{\"prompt\": [1], \"max_tokens\": 1e9}", // over the gen cap
+    ] {
+        let resp = post(addr, "/v1/completions", body);
+        assert_eq!(resp.status, 400, "`{body}` -> {}", resp.body);
+        let doc = Json::parse(&resp.body).unwrap();
+        assert!(doc.get("error").is_some(), "400 body must carry an error: {}", resp.body);
+    }
+    // Post-error the server still serves.
+    let ok = post(addr, "/v1/completions", &completion_body(&[1, 2], 2, false));
+    assert_eq!(ok.status, 200);
+    server.shutdown();
+}
+
+#[test]
+fn full_queue_gets_429_and_shutdown_drains_in_flight_lanes() {
+    // One active lane + one queued slot: the third concurrent request must
+    // bounce with 429, while the accepted ones run to completion even
+    // though shutdown() fires mid-generation.
+    let (_m, server) = serve(
+        ServeFormat::Fp32,
+        ServeConfig { max_batch: 1, max_queued: 1, ..ServeConfig::default() },
+    );
+    let addr = server.local_addr();
+
+    // A: long streamed request; occupies the single lane.
+    let a = std::thread::spawn(move || {
+        post(addr, "/v1/completions", &completion_body(&[1, 2], 600, true))
+    });
+    wait_for_metrics(addr, |m| m.get("active").unwrap().as_u64() == Some(1), "A active");
+
+    // B: fills the single queue slot.
+    let b = std::thread::spawn(move || {
+        post(addr, "/v1/completions", &completion_body(&[3], 4, false))
+    });
+    wait_for_metrics(addr, |m| m.get("queued").unwrap().as_u64() == Some(1), "B queued");
+
+    // C: queue full -> 429 with an error body, never enqueued.
+    let c = post(addr, "/v1/completions", &completion_body(&[4], 4, false));
+    assert_eq!(c.status, 429, "{}", c.body);
+    assert!(Json::parse(&c.body).unwrap().get("error").is_some());
+    let m = Json::parse(&get(addr, "/metrics").body).unwrap();
+    assert!(m.get("rejected").unwrap().as_u64().unwrap() >= 1);
+
+    // Graceful shutdown while A streams and B waits: both must complete.
+    server.shutdown();
+    let a = a.join().unwrap();
+    assert_eq!(a.status, 200);
+    let events = sse_events(&a.body);
+    assert_eq!(events.last().unwrap(), "[DONE]", "A was truncated by shutdown");
+    assert_eq!(events.len(), 602, "600 tokens + done + [DONE]");
+    let b = b.join().unwrap();
+    assert_eq!(b.status, 200);
+    assert_eq!(response_tokens(&b.body).len(), 4, "queued request must drain");
+}

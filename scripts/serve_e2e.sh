@@ -1,0 +1,109 @@
+#!/usr/bin/env bash
+# End-to-end smoke for the `gq serve --http` front-end.
+#
+# Boots the real release binary on the tiny preset (port 0 = kernel-picked,
+# read back from the log), then drives every endpoint over real HTTP:
+#   * /healthz and /metrics probes,
+#   * one blocking completion,
+#   * one streamed completion (chunk ordering + terminal [DONE] event,
+#     token-for-token identical to the blocking response),
+#   * a malformed body (400),
+#   * a 12-request burst against max_batch=2/max_queued=2 (at least one
+#     429, accepted requests still complete).
+#
+# All intermediate files land in ./serve-e2e/ so CI can upload them as an
+# artifact when a step fails. Usage: scripts/serve_e2e.sh [path-to-gq]
+
+set -euo pipefail
+
+GQ=${1:-target/release/gq}
+DIR=serve-e2e
+rm -rf "$DIR"
+mkdir -p "$DIR"
+LOG="$DIR/server.log"
+
+fail() {
+    echo "FAIL: $*" >&2
+    echo "---- server log ----" >&2
+    cat "$LOG" >&2 || true
+    exit 1
+}
+
+[ -x "$GQ" ] || { echo "FAIL: binary $GQ not found (run cargo build --release)" >&2; exit 1; }
+
+"$GQ" serve --model tiny --format nonuniform --bits 4 \
+    --http 127.0.0.1:0 --max-batch 2 --max-queued 2 >"$LOG" 2>&1 &
+SERVER=$!
+trap 'kill "$SERVER" 2>/dev/null || true; wait "$SERVER" 2>/dev/null || true' EXIT
+
+ADDR=
+for _ in $(seq 1 240); do
+    ADDR=$(sed -n 's/^http: listening on //p' "$LOG" | head -n 1)
+    [ -n "$ADDR" ] && break
+    kill -0 "$SERVER" 2>/dev/null || fail "server exited during startup"
+    sleep 0.25
+done
+[ -n "$ADDR" ] || fail "server never reported a listening address"
+BASE="http://$ADDR"
+echo "server up at $BASE"
+
+# --- /healthz ---------------------------------------------------------------
+curl -fsS "$BASE/healthz" >"$DIR/healthz.json"
+jq -e '.status == "ok"' "$DIR/healthz.json" >/dev/null || fail "/healthz not ok"
+
+# --- unknown route ----------------------------------------------------------
+CODE=$(curl -s -o /dev/null -w '%{http_code}' "$BASE/nope")
+[ "$CODE" = 404 ] || fail "unknown route returned $CODE, want 404"
+
+# --- blocking completion ----------------------------------------------------
+curl -fsS -X POST "$BASE/v1/completions" \
+    -d '{"prompt": [1, 2, 3, 4], "max_tokens": 8}' >"$DIR/blocking.json"
+jq -e '.tokens | length == 8' "$DIR/blocking.json" >/dev/null \
+    || fail "blocking completion did not return 8 tokens: $(cat "$DIR/blocking.json")"
+
+# --- streamed completion: chunk ordering + terminal event -------------------
+curl -fsS -N -X POST "$BASE/v1/completions" \
+    -d '{"prompt": [1, 2, 3, 4], "max_tokens": 8, "stream": true}' >"$DIR/stream.txt"
+grep '^data: ' "$DIR/stream.txt" >"$DIR/events.txt"
+N=$(wc -l <"$DIR/events.txt")
+[ "$N" -eq 10 ] || fail "expected 10 SSE events (8 tokens + done + [DONE]), got $N"
+[ "$(tail -n 1 "$DIR/events.txt")" = "data: [DONE]" ] || fail "stream did not end with [DONE]"
+sed -n "$((N - 1))p" "$DIR/events.txt" | grep -q '"done":true' \
+    || fail "penultimate stream event is not the done summary"
+STREAMED=$(grep -o '"token":[0-9]*' "$DIR/events.txt" | cut -d: -f2 | paste -sd, -)
+BLOCKING=$(jq -r '.tokens | map(tostring) | join(",")' "$DIR/blocking.json")
+[ "$STREAMED" = "$BLOCKING" ] \
+    || fail "streamed tokens [$STREAMED] differ from blocking tokens [$BLOCKING]"
+
+# --- malformed body -> 400 --------------------------------------------------
+CODE=$(curl -s -o "$DIR/bad.json" -w '%{http_code}' -X POST "$BASE/v1/completions" -d '{oops')
+[ "$CODE" = 400 ] || fail "malformed body returned $CODE, want 400"
+jq -e 'has("error")' "$DIR/bad.json" >/dev/null || fail "400 body carries no error"
+
+# --- burst past max_queued -> 429s, accepted requests complete --------------
+PIDS=()
+for i in $(seq 1 12); do
+    curl -s -o "$DIR/burst_body_$i.json" -w '%{http_code}\n' -X POST "$BASE/v1/completions" \
+        -d '{"prompt": [5, 6, 7], "max_tokens": 512}' >"$DIR/burst_code_$i" &
+    PIDS+=("$!")
+done
+for p in "${PIDS[@]}"; do
+    wait "$p" || true
+done
+cat "$DIR"/burst_code_* >"$DIR/burst_codes"
+N429=$(grep -cx 429 "$DIR/burst_codes" || true)
+N200=$(grep -cx 200 "$DIR/burst_codes" || true)
+echo "burst: $N200 served, $N429 rejected"
+[ "$N429" -ge 1 ] || fail "no 429 in a 12-request burst: $(tr '\n' ' ' <"$DIR/burst_codes")"
+[ "$N200" -ge 1 ] || fail "no burst request succeeded: $(tr '\n' ' ' <"$DIR/burst_codes")"
+[ $((N429 + N200)) -eq 12 ] \
+    || fail "unexpected status codes in burst: $(tr '\n' ' ' <"$DIR/burst_codes")"
+
+# --- /metrics reflects the traffic ------------------------------------------
+curl -fsS "$BASE/metrics" >"$DIR/metrics.json"
+jq -e ".completed >= 2 and .rejected >= $N429
+       and (.ttft_ms | has(\"p50\")) and (.token_ms | has(\"p99\"))" \
+    "$DIR/metrics.json" >/dev/null \
+    || fail "metrics missing expected fields: $(cat "$DIR/metrics.json")"
+
+echo "serve-e2e OK"
