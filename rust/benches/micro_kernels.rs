@@ -17,7 +17,7 @@
 mod common;
 
 use guidedquant::bench::bench;
-use guidedquant::cfg::TrellisVariant;
+use guidedquant::cfg::{KvDtype, TrellisVariant};
 use guidedquant::model::attention::attention_batch_with;
 use guidedquant::model::forward::{matmul_col_sharded_with, LinearOp};
 use guidedquant::model::DecodeState;
@@ -27,6 +27,7 @@ use guidedquant::quant::trellis::{Generator, Trellis, TrellisCode};
 use guidedquant::runtime::Value;
 use guidedquant::tensor::gemm::{self, ColWindow};
 use guidedquant::tensor::ops::{matmul, matmul_tn, matmul_tn_with, num_threads};
+use guidedquant::tensor::simd;
 use guidedquant::tensor::Mat;
 use guidedquant::util::json::Json;
 use guidedquant::util::Rng;
@@ -147,6 +148,43 @@ fn main() {
         }
     }
 
+    // -- SIMD micro-kernels: forced-scalar vs dispatched vector paths -----
+    // Same tiled dequant-once engine either way; only the inner-loop
+    // instruction level changes. The two runs are bit-identical by the
+    // simd contract, so the ratio is pure ALU/bandwidth.
+    println!("-- tiled GEMM: forced scalar vs {} --", simd::desc());
+    for (name, lin) in [
+        ("fp32", &w as &dyn LinearOp),
+        ("uniform-4bit", &uni),
+        ("lut-4bit", &lut),
+        ("vq-6bit/d4", &vq),
+        ("trellis-2bit", &trellis),
+    ] {
+        for batch in [1usize, 8] {
+            let xs = Mat::randn(batch, d, 1.0, &mut rng);
+            let mut outm = Mat::zeros(batch, d);
+            let reps = gemm_reps(batch);
+            simd::force(Some(false));
+            let s = bench(&format!("{name} b={batch} tiled scalar"), 1, reps, || {
+                gemm::matmul_tiled_with(lin, &xs, &mut ColWindow::full(&mut outm), gemm::TILE_ROWS)
+            });
+            simd::force(Some(true));
+            let v = bench(&format!("{name} b={batch} tiled simd"), 1, reps, || {
+                gemm::matmul_tiled_with(lin, &xs, &mut ColWindow::full(&mut outm), gemm::TILE_ROWS)
+            });
+            simd::force(None);
+            println!(
+                "   {name} b={batch} simd speedup ×{:.2}",
+                s.mean_secs / v.mean_secs.max(1e-12)
+            );
+            rows.push(
+                speedup_row("simd_gemm", s.mean_secs * 1e3, v.mean_secs * 1e3)
+                    .with("format", name)
+                    .with("batch", batch),
+            );
+        }
+    }
+
     // -- parallel kernels: serial vs shared worker pool -------------------
     let threads = num_threads();
     println!("-- parallel kernels (pool width {threads}) --");
@@ -224,6 +262,41 @@ fn main() {
             .with("batch", batch)
             .with("ctx", n_pos)
             .with("threads", threads),
+    );
+
+    // f16 KV storage: the same batch-8 long-context attention reading
+    // half-width pages (decode memory traffic halves; scores widen on
+    // read). Baseline is the f32 pool row above. Bytes-per-token gauges
+    // come straight from the states' own accounting.
+    let mut states16: Vec<DecodeState> =
+        (0..batch).map(|_| DecodeState::with_dtype(1, heads, hd, KvDtype::F16)).collect();
+    for st in states16.iter_mut() {
+        for p in 0..n_pos {
+            let k: Vec<f32> = (0..dm).map(|_| rng.normal_f32()).collect();
+            let v: Vec<f32> = (0..dm).map(|_| rng.normal_f32()).collect();
+            st.append_kv(0, &k, &v);
+            if p + 1 < n_pos {
+                st.pos += 1;
+            }
+        }
+    }
+    let refs16: Vec<&DecodeState> = states16.iter().collect();
+    let f = bench(&format!("attention b={batch} ctx={n_pos} f16 kv"), 1, att_reps, || {
+        attention_batch_with(0, heads, hd, scale, &qm, &refs16, &mut ctx, threads)
+    });
+    let tok_bytes_f32 = states[0].kv_bytes() / states[0].pos.max(1);
+    let tok_bytes_f16 = states16[0].kv_bytes() / states16[0].pos.max(1);
+    println!(
+        "   f16 kv speedup ×{:.2} ({tok_bytes_f16} vs {tok_bytes_f32} KV bytes/token/lane)",
+        p.mean_secs / f.mean_secs.max(1e-12)
+    );
+    rows.push(
+        speedup_row("attention_kv_f16", p.mean_secs * 1e3, f.mean_secs * 1e3)
+            .with("batch", batch)
+            .with("ctx", n_pos)
+            .with("threads", threads)
+            .with("kv_bytes_per_token_f32", tok_bytes_f32)
+            .with("kv_bytes_per_token_f16", tok_bytes_f16),
     );
 
     // Machine-readable artifact (CI uploads BENCH_micro_kernels.json) —

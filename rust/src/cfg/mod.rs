@@ -7,5 +7,5 @@ pub mod quant_cfg;
 pub mod toml;
 
 pub use presets::{preset, BatchConfig, LinearSpec, ModelConfig, ParamSpec, PRESET_NAMES};
-pub use quant_cfg::{PipelineConfig, QuantConfig, QuantMethod, ServeConfig, TrellisVariant};
+pub use quant_cfg::{KvDtype, PipelineConfig, QuantConfig, QuantMethod, ServeConfig, TrellisVariant};
 pub use toml::TomlDoc;

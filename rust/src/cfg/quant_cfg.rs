@@ -159,6 +159,46 @@ impl QuantConfig {
     }
 }
 
+/// Storage dtype of the paged KV cache (`model::attention`).
+///
+/// `F32` is the exact default: decode output is bit-identical to the
+/// reference path at any SIMD/tile/thread setting. `F16` halves KV bytes
+/// per token — the dominant stream of small-batch decode — by storing
+/// pages as IEEE binary16 (`util::half`), widening exactly on read; only
+/// the store rounds (to nearest even), so outputs are ULP-close to f32,
+/// not bit-equal, which is why it is an explicit opt-in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvDtype {
+    #[default]
+    F32,
+    F16,
+}
+
+impl KvDtype {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" | "fp32" => Self::F32,
+            "f16" | "fp16" | "half" => Self::F16,
+            other => bail!("unknown kv dtype `{other}` (expected f32 or f16)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::F32 => "f32",
+            Self::F16 => "f16",
+        }
+    }
+
+    /// Bytes per stored KV element.
+    pub fn bytes(&self) -> usize {
+        match self {
+            Self::F32 => 4,
+            Self::F16 => 2,
+        }
+    }
+}
+
 /// Serving/scheduler knobs for the continuous-batching engine
 /// (`gq serve`, `serve::Scheduler`).
 #[derive(Debug, Clone)]
@@ -182,6 +222,9 @@ pub struct ServeConfig {
     /// `127.0.0.1:8080` (port 0 picks a free port). `None` keeps `gq serve`
     /// in its stdout benchmark mode; `gq serve --http ADDR` overrides.
     pub http_addr: Option<String>,
+    /// KV cache storage dtype (`kv_dtype = "f16"` in TOML,
+    /// `gq serve --kv-dtype f16`). Defaults to exact f32.
+    pub kv_dtype: KvDtype,
 }
 
 impl Default for ServeConfig {
@@ -192,6 +235,7 @@ impl Default for ServeConfig {
             workers: 0,
             scalar_prefill: false,
             http_addr: None,
+            kv_dtype: KvDtype::F32,
         }
     }
 }
@@ -222,6 +266,9 @@ impl ServeConfig {
         }
         if let Some(v) = doc.get_str(section, "http") {
             c.http_addr = Some(v.to_string());
+        }
+        if let Some(v) = doc.get_str(section, "kv_dtype") {
+            c.kv_dtype = KvDtype::parse(v)?;
         }
         if c.max_batch == 0 {
             bail!("serve.max_batch must be at least 1");
@@ -378,6 +425,24 @@ mod tests {
         let doc = TomlDoc::parse("[serve]\nhttp = \"127.0.0.1:8080\"\n").unwrap();
         let c = ServeConfig::from_toml(&doc, "serve").unwrap();
         assert_eq!(c.http_addr.as_deref(), Some("127.0.0.1:8080"));
+    }
+
+    #[test]
+    fn kv_dtype_parses_and_defaults_to_f32() {
+        let c = ServeConfig::default();
+        assert_eq!(c.kv_dtype, KvDtype::F32, "f16 KV must stay opt-in");
+        assert_eq!(KvDtype::parse("f16").unwrap(), KvDtype::F16);
+        assert_eq!(KvDtype::parse("fp16").unwrap(), KvDtype::F16);
+        assert_eq!(KvDtype::parse("f32").unwrap(), KvDtype::F32);
+        assert!(KvDtype::parse("bf16").is_err());
+        assert_eq!(KvDtype::F16.bytes(), 2);
+        assert_eq!(KvDtype::F32.bytes(), 4);
+        assert_eq!(KvDtype::F16.name(), "f16");
+        let doc = TomlDoc::parse("[serve]\nkv_dtype = \"f16\"\n").unwrap();
+        let c = ServeConfig::from_toml(&doc, "serve").unwrap();
+        assert_eq!(c.kv_dtype, KvDtype::F16);
+        let doc = TomlDoc::parse("[serve]\nkv_dtype = \"int8\"\n").unwrap();
+        assert!(ServeConfig::from_toml(&doc, "serve").is_err());
     }
 
     #[test]

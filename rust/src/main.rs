@@ -20,7 +20,9 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use guidedquant::cfg::{preset, PipelineConfig, PRESET_NAMES, QuantConfig, QuantMethod, TomlDoc};
+use guidedquant::cfg::{
+    preset, KvDtype, PipelineConfig, PRESET_NAMES, QuantConfig, QuantMethod, TomlDoc,
+};
 use guidedquant::cli::Args;
 use guidedquant::coordinator::Pipeline;
 use guidedquant::data::Split;
@@ -37,6 +39,8 @@ const USAGE: &str = "usage: gq <pipeline|train|quantize|eval|serve|fisher|info> 
   pipeline:     --train-steps N --calib-batches N --eval-batches N --workers N
   serve:        --format fp32|uniform|nonuniform|vector|trellis --requests N
                 --gen-tokens N --prompt-len N --max-batch N --max-queued N
+                --kv-dtype f32|f16 (f16 halves KV cache bytes; greedy
+                tokens are validated ULP-close to f32, not bit-equal)
                 --http ADDR (HTTP front-end: POST /v1/completions,
                 GET /metrics, GET /healthz — instead of the stdout
                 benchmark; port 0 picks a free port, e.g. 127.0.0.1:0)
@@ -73,6 +77,9 @@ fn pipeline_config(args: &Args) -> Result<PipelineConfig> {
     }
     if args.switch("scalar-prefill") {
         cfg.serve.scalar_prefill = true;
+    }
+    if let Some(v) = args.get("kv-dtype") {
+        cfg.serve.kv_dtype = KvDtype::parse(v)?;
     }
     cfg.quant = quant_config(args, cfg.quant)?;
     Ok(cfg)
@@ -193,8 +200,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
 /// config loader reads, plus the serve-specific knobs. Anything else is a
 /// usage error instead of a silently ignored typo.
 const SERVE_FLAGS: &str = "config model artifacts out train-steps calib-batches eval-batches \
-    workers seed max-batch max-queued scalar-prefill method bits groups sparse-frac format \
-    requests gen-tokens prompt-len per-seq stream http load";
+    workers seed max-batch max-queued scalar-prefill kv-dtype method bits groups sparse-frac \
+    format requests gen-tokens prompt-len per-seq stream http load";
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let allowed: Vec<&str> = SERVE_FLAGS.split_whitespace().collect();

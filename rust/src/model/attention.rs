@@ -25,41 +25,79 @@
 //! results are **bit-identical at any thread count**. Score buffers live in
 //! a per-worker thread-local scratch sized to the longest context seen, so
 //! a warm steady-state step allocates nothing.
+//!
+//! ## KV storage dtype
+//!
+//! Pages store either exact `f32` rows (the default) or packed IEEE
+//! binary16 rows ([`KvDtype::F16`], the `kv_dtype = f16` serving opt-in),
+//! halving the bytes streamed per attended position. f16 rows are widened
+//! on read inside the score/context kernels (`simd::dot_f16` /
+//! `simd::axpy_f16`) — widening is exact, so the f16 path is just as
+//! bit-stable across SIMD levels and thread counts as the f32 path; only
+//! the *store* rounds (to nearest even), which is why f32 outputs and f16
+//! outputs are ULP-close rather than bit-equal.
 
 use std::cell::RefCell;
 use std::sync::{Arc, Mutex};
 
+use crate::cfg::KvDtype;
 use crate::tensor::ops::{axpy, dot, num_threads};
-use crate::tensor::Mat;
+use crate::tensor::{simd, Mat};
+use crate::util::half::narrow_slice;
 
-/// Positions per KV page. 64 positions × `head_dim` floats keeps pages in
+/// Positions per KV page. 64 positions × `head_dim` elements keeps pages in
 /// the tens-of-KB range (L1/L2-resident while a head streams them) and
 /// makes slab traffic rare: a lane touches the slab once per 64 tokens.
 pub const KV_PAGE_POS: usize = 64;
 
-/// One KV page: `KV_PAGE_POS * head_dim` floats, `[pos][head_dim]` rows.
-type Page = Box<[f32]>;
+/// One KV page: `KV_PAGE_POS * head_dim` elements in `[pos][head_dim]`
+/// rows, stored at the cache's dtype.
+pub(crate) enum Page {
+    F32(Box<[f32]>),
+    F16(Box<[u16]>),
+}
 
-/// Shared recycling slab of KV pages (all pages of one model share a size,
-/// so any lane's freed page can back any other lane's growth). Lock traffic
-/// is confined to page-boundary crossings and lane eviction.
+impl Page {
+    fn len(&self) -> usize {
+        match self {
+            Page::F32(p) => p.len(),
+            Page::F16(p) => p.len(),
+        }
+    }
+
+    /// Write one position row, narrowing if the page is f16.
+    fn store_row(&mut self, slot: usize, hd: usize, row: &[f32]) {
+        match self {
+            Page::F32(p) => p[slot * hd..(slot + 1) * hd].copy_from_slice(row),
+            Page::F16(p) => narrow_slice(row, &mut p[slot * hd..(slot + 1) * hd]),
+        }
+    }
+}
+
+/// Shared recycling slab of KV pages (all pages of one model share a size
+/// and dtype, so any lane's freed page can back any other lane's growth).
+/// Lock traffic is confined to page-boundary crossings and lane eviction.
 pub(crate) struct PageSlab {
-    page_floats: usize,
+    page_elems: usize,
+    dtype: KvDtype,
     free: Mutex<Vec<Page>>,
 }
 
 impl PageSlab {
-    fn new(head_dim: usize) -> Self {
-        PageSlab { page_floats: KV_PAGE_POS * head_dim, free: Mutex::new(Vec::new()) }
+    fn new(head_dim: usize, dtype: KvDtype) -> Self {
+        PageSlab { page_elems: KV_PAGE_POS * head_dim, dtype, free: Mutex::new(Vec::new()) }
+    }
+
+    fn fresh(&self) -> Page {
+        match self.dtype {
+            KvDtype::F32 => Page::F32(vec![0.0f32; self.page_elems].into_boxed_slice()),
+            KvDtype::F16 => Page::F16(vec![0u16; self.page_elems].into_boxed_slice()),
+        }
     }
 
     /// Pop a recycled page, or allocate a fresh zeroed one (cold path).
     fn take(&self) -> Page {
-        self.free
-            .lock()
-            .unwrap()
-            .pop()
-            .unwrap_or_else(|| vec![0.0f32; self.page_floats].into_boxed_slice())
+        self.free.lock().unwrap().pop().unwrap_or_else(|| self.fresh())
     }
 
     fn pooled(&self) -> usize {
@@ -69,7 +107,7 @@ impl PageSlab {
     fn reserve(&self, pages: usize) {
         let mut free = self.free.lock().unwrap();
         while free.len() < pages {
-            free.push(vec![0.0f32; self.page_floats].into_boxed_slice());
+            free.push(self.fresh());
         }
     }
 }
@@ -80,6 +118,7 @@ impl PageSlab {
 pub struct DecodeState {
     n_heads: usize,
     head_dim: usize,
+    dtype: KvDtype,
     key_pages: Vec<Vec<Page>>,
     val_pages: Vec<Vec<Page>>,
     /// Number of completed decode steps (the next append writes slot
@@ -91,9 +130,15 @@ pub struct DecodeState {
 impl DecodeState {
     /// A standalone state with its own private page slab (pages still
     /// recycle across [`DecodeState::reset`]). Serving lanes should come
-    /// from a [`KvArena`] instead so evicted pages are shared.
+    /// from a [`KvArena`] instead so evicted pages are shared. Exact f32
+    /// storage; see [`DecodeState::with_dtype`] for the f16 opt-in.
     pub fn new(n_layers: usize, n_heads: usize, head_dim: usize) -> Self {
-        Self::with_slab(n_layers, n_heads, head_dim, Arc::new(PageSlab::new(head_dim)))
+        Self::with_dtype(n_layers, n_heads, head_dim, KvDtype::F32)
+    }
+
+    /// [`DecodeState::new`] at an explicit KV storage dtype.
+    pub fn with_dtype(n_layers: usize, n_heads: usize, head_dim: usize, dtype: KvDtype) -> Self {
+        Self::with_slab(n_layers, n_heads, head_dim, Arc::new(PageSlab::new(head_dim, dtype)))
     }
 
     fn with_slab(n_layers: usize, n_heads: usize, head_dim: usize, slab: Arc<PageSlab>) -> Self {
@@ -101,6 +146,7 @@ impl DecodeState {
         DecodeState {
             n_heads,
             head_dim,
+            dtype: slab.dtype,
             key_pages: (0..lists).map(|_| Vec::new()).collect(),
             val_pages: (0..lists).map(|_| Vec::new()).collect(),
             pos: 0,
@@ -120,17 +166,22 @@ impl DecodeState {
         self.head_dim
     }
 
+    /// Storage dtype of this cache's pages.
+    pub fn kv_dtype(&self) -> KvDtype {
+        self.dtype
+    }
+
     /// Logical cache size: bytes of K+V actually stored, linear in `pos`
-    /// (page-granular over-allocation is reported by
+    /// and in the dtype width (page-granular over-allocation is reported by
     /// [`DecodeState::kv_allocated_bytes`]).
     pub fn kv_bytes(&self) -> usize {
-        2 * self.key_pages.len() * self.head_dim * self.pos * 4
+        2 * self.key_pages.len() * self.head_dim * self.pos * self.dtype.bytes()
     }
 
     /// Bytes of page storage currently held (a multiple of the page size).
     pub fn kv_allocated_bytes(&self) -> usize {
         let pages: usize = self.key_pages.iter().chain(&self.val_pages).map(Vec::len).sum();
-        pages * KV_PAGE_POS * self.head_dim * 4
+        pages * KV_PAGE_POS * self.head_dim * self.dtype.bytes()
     }
 
     /// Append one step's K/V rows (`d_model` floats each) for `layer` at
@@ -149,11 +200,9 @@ impl DecodeState {
                 self.val_pages[idx].push(self.slab.take());
             }
             let seg = &k[head * hd..(head + 1) * hd];
-            self.key_pages[idx].last_mut().unwrap()[slot * hd..(slot + 1) * hd]
-                .copy_from_slice(seg);
+            self.key_pages[idx].last_mut().unwrap().store_row(slot, hd, seg);
             let seg = &v[head * hd..(head + 1) * hd];
-            self.val_pages[idx].last_mut().unwrap()[slot * hd..(slot + 1) * hd]
-                .copy_from_slice(seg);
+            self.val_pages[idx].last_mut().unwrap().store_row(slot, hd, seg);
         }
     }
 
@@ -179,7 +228,8 @@ impl DecodeState {
     }
 
     fn rebind(&mut self, slab: Arc<PageSlab>) {
-        debug_assert_eq!(slab.page_floats, KV_PAGE_POS * self.head_dim);
+        debug_assert_eq!(slab.page_elems, KV_PAGE_POS * self.head_dim);
+        debug_assert_eq!(slab.dtype, self.dtype);
         self.slab = slab;
     }
 }
@@ -193,19 +243,34 @@ pub struct KvArena {
     n_layers: usize,
     n_heads: usize,
     head_dim: usize,
+    dtype: KvDtype,
     slab: Arc<PageSlab>,
     free: Vec<DecodeState>,
 }
 
 impl KvArena {
+    /// An arena of exact-f32 caches; see [`KvArena::with_dtype`] for the
+    /// f16 serving opt-in.
     pub fn new(n_layers: usize, n_heads: usize, head_dim: usize) -> Self {
+        Self::with_dtype(n_layers, n_heads, head_dim, KvDtype::F32)
+    }
+
+    /// [`KvArena::new`] at an explicit KV storage dtype: every lane this
+    /// arena hands out pages at `dtype`.
+    pub fn with_dtype(n_layers: usize, n_heads: usize, head_dim: usize, dtype: KvDtype) -> Self {
         KvArena {
             n_layers,
             n_heads,
             head_dim,
-            slab: Arc::new(PageSlab::new(head_dim)),
+            dtype,
+            slab: Arc::new(PageSlab::new(head_dim, dtype)),
             free: Vec::new(),
         }
+    }
+
+    /// Storage dtype of the lanes this arena hands out.
+    pub fn kv_dtype(&self) -> KvDtype {
+        self.dtype
     }
 
     /// A fresh (pos = 0) state wired to the arena's shared page slab.
@@ -219,6 +284,11 @@ impl KvArena {
     pub fn release(&mut self, mut state: DecodeState) {
         debug_assert_eq!(state.n_layers(), self.n_layers);
         debug_assert_eq!(state.head_dim, self.head_dim);
+        // A state of a different dtype cannot share this slab (its pages
+        // are the wrong storage); just drop it.
+        if state.dtype != self.dtype {
+            return;
+        }
         // A foreign state (built via `DecodeState::new`) adopts this
         // arena's slab so its pages land here rather than being stranded.
         state.rebind(Arc::clone(&self.slab));
@@ -234,6 +304,12 @@ impl KvArena {
     /// Number of KV pages currently pooled in the shared slab.
     pub fn pooled_pages(&self) -> usize {
         self.slab.pooled()
+    }
+
+    /// Bytes of page storage sitting in the shared slab (the allocated-but
+    /// -idle part of the serving KV footprint).
+    pub fn pooled_page_bytes(&self) -> usize {
+        self.slab.pooled() * self.slab.page_elems * self.dtype.bytes()
     }
 
     /// Pre-allocate slab pages so decode-time page grabs never hit the
@@ -305,7 +381,11 @@ thread_local! {
 /// ascending position order (8-way unrolled [`dot`]), single max, exp/sum
 /// in position order, then the context axpy in position order — only the
 /// *addresses* changed (contiguous pages instead of `d_model`-strided
-/// rows), so results are bit-identical to the historical layout.
+/// rows), so results are bit-identical to the historical layout. The max
+/// is taken over the filled score buffer ([`simd::max`]): f32 max over
+/// finite scores is order-independent, so hoisting it out of the score
+/// loop changes nothing. f16 pages widen on read (exactly), so the f16
+/// path has the same bit-stability across SIMD levels and thread counts.
 #[allow(clippy::too_many_arguments)]
 fn head_attention(
     qh: &[f32],
@@ -318,20 +398,32 @@ fn head_attention(
     ctx_h: &mut [f32],
 ) {
     scores.clear();
-    let mut max_s = f32::NEG_INFINITY;
     let mut p = 0;
     'score: for page in key_pages {
-        for kh in page.chunks_exact(hd) {
-            if p == n_pos {
-                break 'score;
+        debug_assert_eq!(page.len() % hd, 0);
+        match page {
+            Page::F32(rows) => {
+                for kh in rows.chunks_exact(hd) {
+                    if p == n_pos {
+                        break 'score;
+                    }
+                    scores.push(dot(qh, kh) * scale);
+                    p += 1;
+                }
             }
-            let s = dot(qh, kh) * scale;
-            max_s = max_s.max(s);
-            scores.push(s);
-            p += 1;
+            Page::F16(rows) => {
+                for kh in rows.chunks_exact(hd) {
+                    if p == n_pos {
+                        break 'score;
+                    }
+                    scores.push(simd::dot_f16(qh, kh) * scale);
+                    p += 1;
+                }
+            }
         }
     }
     debug_assert_eq!(scores.len(), n_pos, "page list shorter than n_pos");
+    let max_s = simd::max(scores);
     let mut denom = 0.0f32;
     for s in scores.iter_mut() {
         *s = (*s - max_s).exp();
@@ -340,12 +432,25 @@ fn head_attention(
     ctx_h.fill(0.0);
     let mut p = 0;
     'ctx: for page in val_pages {
-        for vh in page.chunks_exact(hd) {
-            if p == n_pos {
-                break 'ctx;
+        match page {
+            Page::F32(rows) => {
+                for vh in rows.chunks_exact(hd) {
+                    if p == n_pos {
+                        break 'ctx;
+                    }
+                    axpy(ctx_h, scores[p] / denom, vh);
+                    p += 1;
+                }
             }
-            axpy(ctx_h, scores[p] / denom, vh);
-            p += 1;
+            Page::F16(rows) => {
+                for vh in rows.chunks_exact(hd) {
+                    if p == n_pos {
+                        break 'ctx;
+                    }
+                    simd::axpy_f16(ctx_h, scores[p] / denom, vh);
+                    p += 1;
+                }
+            }
         }
     }
 }
@@ -694,5 +799,115 @@ mod tests {
         st.pos += 1;
         arena.release(st);
         assert_eq!(arena.pooled_pages(), 4, "foreign pages must land in the arena");
+    }
+
+    #[test]
+    fn f16_kv_halves_stored_and_allocated_bytes() {
+        let (h, hd) = (2usize, 8usize);
+        let d = h * hd;
+        let mut f32_st = DecodeState::new(1, h, hd);
+        let mut f16_st = DecodeState::with_dtype(1, h, hd, KvDtype::F16);
+        assert_eq!(f16_st.kv_dtype(), KvDtype::F16);
+        let k = vec![0.5f32; d];
+        let v = vec![-1.25f32; d];
+        for _ in 0..KV_PAGE_POS + 2 {
+            f32_st.append_kv(0, &k, &v);
+            f16_st.append_kv(0, &k, &v);
+            f32_st.pos += 1;
+            f16_st.pos += 1;
+        }
+        assert_eq!(f16_st.kv_bytes() * 2, f32_st.kv_bytes());
+        assert_eq!(f16_st.kv_allocated_bytes() * 2, f32_st.kv_allocated_bytes());
+    }
+
+    #[test]
+    fn f16_kv_attention_is_ulp_close_to_f32() {
+        // Same random K/V stream stored at both dtypes: outputs must agree
+        // to within the f16 rounding budget. One narrowing step is ~2^-11
+        // relative (~2^12 f32 ulps); the softmax mixes many such rounded
+        // terms, so allow a small multiple.
+        let (h, hd, n_layers) = (4usize, 8usize, 2usize);
+        let d = h * hd;
+        let n_pos = KV_PAGE_POS + 9;
+        let mut rng = Rng::new(29);
+        let mut f32_st = DecodeState::new(n_layers, h, hd);
+        let mut f16_st = DecodeState::with_dtype(n_layers, h, hd, KvDtype::F16);
+        for p in 0..n_pos {
+            for l in 0..n_layers {
+                let k: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+                let v: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+                f32_st.append_kv(l, &k, &v);
+                f16_st.append_kv(l, &k, &v);
+            }
+            if p + 1 < n_pos {
+                f32_st.pos += 1;
+                f16_st.pos += 1;
+            }
+        }
+        let scale = 1.0 / (hd as f32).sqrt();
+        for l in 0..n_layers {
+            let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let mut want = vec![0.0f32; d];
+            attention_single(l, h, hd, scale, &q, &f32_st, &mut want);
+            let mut got = vec![0.0f32; d];
+            attention_single(l, h, hd, scale, &q, &f16_st, &mut got);
+            crate::testing::assert_close_ulp(&got, &want, 1 << 15, 5e-3).unwrap();
+            assert_ne!(got, want, "f16 storage should actually round something");
+        }
+    }
+
+    #[test]
+    fn f16_kv_attention_is_bit_identical_across_simd_levels_and_threads() {
+        // Widening is exact, so the f16 read path must be just as
+        // deterministic as f32: same bits at any SIMD level, thread count.
+        let (h, hd) = (4usize, 8usize);
+        let d = h * hd;
+        let mut rng = Rng::new(31);
+        let mut st = DecodeState::with_dtype(1, h, hd, KvDtype::F16);
+        for p in 0..KV_PAGE_POS + 5 {
+            let k: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let v: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            st.append_kv(0, &k, &v);
+            if p + 1 < KV_PAGE_POS + 5 {
+                st.pos += 1;
+            }
+        }
+        let q = Mat::randn(1, d, 1.0, &mut rng);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let run = |threads: usize| {
+            let mut ctx = Mat::zeros(1, d);
+            attention_batch_with(0, h, hd, scale, &q, &[&st][..], &mut ctx, threads);
+            ctx
+        };
+        simd::force(Some(false));
+        let scalar = run(1);
+        simd::force(Some(true));
+        let vector = run(1);
+        let pooled = run(4);
+        simd::force(None);
+        assert_eq!(scalar.data, vector.data, "SIMD level must not change f16 reads");
+        assert_eq!(scalar.data, pooled.data, "thread count must not change f16 reads");
+    }
+
+    #[test]
+    fn f16_arena_pools_and_reports_dtype() {
+        let mut arena = KvArena::with_dtype(1, 2, 8, KvDtype::F16);
+        assert_eq!(arena.kv_dtype(), KvDtype::F16);
+        let mut st = arena.acquire();
+        assert_eq!(st.kv_dtype(), KvDtype::F16);
+        let row = vec![1.0f32; 16];
+        st.append_kv(0, &row, &row);
+        st.pos += 1;
+        arena.release(st);
+        assert_eq!(arena.pooled_pages(), 4);
+        assert_eq!(arena.pooled_page_bytes(), 4 * KV_PAGE_POS * 8 * 2);
+        // A foreign f32 state is dropped, not adopted: its pages cannot
+        // back f16 lanes.
+        let mut foreign = DecodeState::new(1, 2, 8);
+        foreign.append_kv(0, &row, &row);
+        foreign.pos += 1;
+        arena.release(foreign);
+        assert_eq!(arena.pooled(), 1, "wrong-dtype shell must not pool");
+        assert_eq!(arena.pooled_pages(), 4, "wrong-dtype pages must not pool");
     }
 }

@@ -402,8 +402,19 @@ impl NativeModel {
         DecodeState::new(self.cfg.n_layers, self.cfg.n_heads, self.cfg.head_dim())
     }
 
+    /// [`NativeModel::new_state`] at an explicit KV storage dtype (the
+    /// `kv_dtype = f16` serving opt-in).
+    pub fn new_state_with(&self, dtype: crate::cfg::KvDtype) -> DecodeState {
+        DecodeState::with_dtype(self.cfg.n_layers, self.cfg.n_heads, self.cfg.head_dim(), dtype)
+    }
+
     pub fn new_arena(&self) -> KvArena {
         KvArena::new(self.cfg.n_layers, self.cfg.n_heads, self.cfg.head_dim())
+    }
+
+    /// [`NativeModel::new_arena`] at an explicit KV storage dtype.
+    pub fn new_arena_with(&self, dtype: crate::cfg::KvDtype) -> KvArena {
+        KvArena::with_dtype(self.cfg.n_layers, self.cfg.n_heads, self.cfg.head_dim(), dtype)
     }
 
     /// Total weight bytes across the seven quantizable linears (all blocks).
@@ -704,6 +715,41 @@ mod tests {
             crate::testing::assert_close(&logits, full.row(t), 1e-5, 1e-5)
                 .unwrap_or_else(|e| panic!("pos {t}: {e}"));
         }
+    }
+
+    #[test]
+    fn f16_kv_decode_tracks_f32_with_greedy_token_equality() {
+        // Same model, same token stream, one state per KV dtype: logits
+        // must stay ULP-close (the only divergence source is the f16 store
+        // rounding of cached K/V) and the greedy continuation must match —
+        // the tiny preset's logit gaps dwarf the f16 KV error.
+        let m = tiny_model();
+        let mut f32_st = m.new_state();
+        let mut f16_st = m.new_state_with(crate::cfg::KvDtype::F16);
+        assert_eq!(f16_st.kv_dtype(), crate::cfg::KvDtype::F16);
+        let argmax = |logits: &[f32]| {
+            logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as u32)
+                .unwrap()
+        };
+        let mut tok_f32 = 7u32;
+        let mut tok_f16 = 7u32;
+        for step in 0..8 {
+            let want = m.step(&mut f32_st, tok_f32);
+            let got = m.step(&mut f16_st, tok_f16);
+            // ~2^15 f32 ulps ≈ 16 f16 rounding steps of headroom (the
+            // error compounds mildly across layers and positions), with an
+            // absolute floor for logits that land near zero.
+            crate::testing::assert_close_ulp(&got, &want, 1 << 15, 2e-2)
+                .unwrap_or_else(|e| panic!("step {step}: {e}"));
+            tok_f32 = argmax(&want);
+            tok_f16 = argmax(&got);
+            assert_eq!(tok_f32, tok_f16, "greedy tokens diverged at step {step}");
+        }
+        assert_eq!(f16_st.kv_bytes() * 2, f32_st.kv_bytes());
     }
 
     #[test]

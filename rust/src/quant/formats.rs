@@ -20,14 +20,34 @@
 //! staging buffers are thread-local scratch (warm kernels allocate
 //! nothing), and constructors validate code/table shapes with clear errors
 //! instead of debug-only assertions.
+//!
+//! The hot per-element loops — accumulate-into-lane FMAs, LUT gathers, and
+//! the affine/scale epilogues — route through [`tensor::simd`]
+//! (`crate::tensor::simd`), whose vector paths are bit-identical to their
+//! scalar fallbacks, so every `GQ_SIMD` setting produces the same results.
+//! [`LutLinear::with_f16_tables`] / [`VqLinear::with_f16_tables`] opt a
+//! layer into f16 decode-table storage (half the resident table bytes,
+//! widen-on-read): the f16 variant's kernels stay bit-identical to *each
+//! other*, while its outputs are ULP-close — one RNE rounding of each
+//! table entry — to the f32-table variant's.
 
 use crate::model::forward::{matmul_col_sharded, LinearOp};
 use crate::tensor::gemm::{with_f32_scratch, with_u16_scratch, ColWindow};
-use crate::tensor::Mat;
+use crate::tensor::{simd, Mat};
+use crate::util::half::{f16_to_f32, narrow_slice};
 
 use super::grid::UniformGrid;
 use super::packing::PackedCodes;
 use super::trellis::{Generator, Trellis, TrellisCode};
+
+/// Gather one code row through an f16-stored per-channel table, widening on
+/// read (`out[jj] = cb16[(lo+jj)*m + code]` as f32). Widening is exact
+/// (f16 ⊂ f32), so this is the f16-table analog of [`simd::lut_gather`].
+fn gather_widen_f16(cb16: &[u16], m: usize, lo: usize, codes: &[u16], out: &mut [f32]) {
+    for (jj, (o, &code)) in out.iter_mut().zip(codes).enumerate() {
+        *o = f16_to_f32(cb16[(lo + jj) * m + code as usize]);
+    }
+}
 
 // ---------------------------------------------------------------------------
 // Uniform scalar
@@ -99,14 +119,10 @@ impl LinearOp for UniformScalarLinear {
                     continue;
                 }
                 self.codes.unpack_map_f32(i * self.d_out, &self.levels, wrow);
-                for (o, &q) in out.iter_mut().zip(&*wrow) {
-                    *o += xi * q;
-                }
+                simd::axpy(out, xi, wrow);
             }
         });
-        for j in 0..self.d_out {
-            out[j] = out[j] * self.scale[j] + xsum * self.zero[j];
-        }
+        simd::scale_affine(out, &self.scale, &self.zero, xsum);
     }
 
     fn matmul(&self, xs: &Mat, out: &mut Mat) {
@@ -139,16 +155,16 @@ impl LinearOp for UniformScalarLinear {
                     if xi == 0.0 {
                         continue;
                     }
-                    for (o, &q) in out.row_mut(r).iter_mut().zip(&*wrow) {
-                        *o += xi * q;
-                    }
+                    simd::axpy(out.row_mut(r), xi, wrow);
                 }
             }
             for r in 0..b {
-                let orow = out.row_mut(r);
-                for (jj, o) in orow.iter_mut().enumerate() {
-                    *o = *o * self.scale[lo + jj] + xsum[r] * self.zero[lo + jj];
-                }
+                simd::scale_affine(
+                    out.row_mut(r),
+                    &self.scale[lo..lo + w],
+                    &self.zero[lo..lo + w],
+                    xsum[r],
+                );
             }
         });
     }
@@ -166,9 +182,8 @@ impl LinearOp for UniformScalarLinear {
 
     fn tile_epilogue(&self, x: &[f32], out_w: &mut [f32], lo: usize) {
         let xsum: f32 = x.iter().sum();
-        for (jj, o) in out_w.iter_mut().enumerate() {
-            *o = *o * self.scale[lo + jj] + xsum * self.zero[lo + jj];
-        }
+        let w = out_w.len();
+        simd::scale_affine(out_w, &self.scale[lo..lo + w], &self.zero[lo..lo + w], xsum);
     }
 
     fn storage_bytes(&self) -> usize {
@@ -185,8 +200,11 @@ pub struct LutLinear {
     pub d_out: usize,
     pub codes: PackedCodes, // row-major d_in × d_out
     /// d_out × m, row-contiguous per channel (already f32 — the format's
-    /// pre-expanded decode table).
+    /// pre-expanded decode table). Emptied when the f16 copy takes over.
     pub codebooks: Mat,
+    /// Opt-in f16 storage of the same table ([`Self::with_f16_tables`]):
+    /// gather sites widen on read instead of touching the f32 copy.
+    codebooks_f16: Option<Box<[u16]>>,
 }
 
 impl LutLinear {
@@ -206,7 +224,32 @@ impl LutLinear {
         if let Some(&c) = codes.iter().find(|&&c| c as usize >= m) {
             panic!("lut format: code {c} indexes past the {m}-entry per-channel codebook");
         }
-        LutLinear { d_in, d_out, codes: PackedCodes::pack(codes, bits), codebooks }
+        LutLinear {
+            d_in,
+            d_out,
+            codes: PackedCodes::pack(codes, bits),
+            codebooks,
+            codebooks_f16: None,
+        }
+    }
+
+    /// Re-store the decode table in f16, halving its resident bytes; the
+    /// f32 copy is dropped and every gather site widens on read. Each table
+    /// entry rounds once (RNE), so outputs are ULP-close — not bit-equal —
+    /// to the f32-table variant, while all kernels of *this* variant remain
+    /// bit-identical to each other. The fused word-walk matvec fast path
+    /// (which reads the f32 table directly) stands down.
+    pub fn with_f16_tables(mut self) -> Self {
+        let mut t = vec![0u16; self.codebooks.data.len()].into_boxed_slice();
+        narrow_slice(&self.codebooks.data, &mut t);
+        self.codebooks_f16 = Some(t);
+        self.codebooks.data = Vec::new(); // rows/cols still describe the table shape
+        self
+    }
+
+    /// True when the decode table is stored as f16.
+    pub fn f16_tables(&self) -> bool {
+        self.codebooks_f16.is_some()
     }
 }
 
@@ -222,10 +265,10 @@ impl LinearOp for LutLinear {
     fn matvec(&self, x: &[f32], out: &mut [f32]) {
         out.fill(0.0);
         let m = self.codebooks.cols;
-        let cb = &self.codebooks.data;
-        let bits = self.codes.bits as usize;
-        if self.codes.rows_aligned(self.d_out) {
+        if self.codebooks_f16.is_none() && self.codes.rows_aligned(self.d_out) {
             // Fused decode+FMA: walk packed words directly, no staging buffer.
+            let cb = &self.codebooks.data;
+            let bits = self.codes.bits as usize;
             let per_word = 32 / bits;
             let mask = (1u32 << bits) - 1;
             let words = self.codes.words();
@@ -250,17 +293,21 @@ impl LinearOp for LutLinear {
             return;
         }
         with_u16_scratch(self.d_out, |row| {
-            for (i, &xi) in x.iter().enumerate() {
-                if xi == 0.0 {
-                    continue;
+            with_f32_scratch(self.d_out, |wrow| {
+                for (i, &xi) in x.iter().enumerate() {
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    // Gather weight row i through the LUT (w_ij = cb[j][code])
+                    // into staging, then one vectorized FMA over the row.
+                    self.codes.unpack_range(i * self.d_out, row);
+                    match &self.codebooks_f16 {
+                        Some(cb16) => gather_widen_f16(cb16, m, 0, row, wrow),
+                        None => simd::lut_gather(&self.codebooks.data, m, 0, row, wrow),
+                    }
+                    simd::axpy(out, xi, wrow);
                 }
-                self.codes.unpack_range(i * self.d_out, row);
-                for j in 0..self.d_out {
-                    // gather: w_ij = cb[j][code]
-                    *unsafe { out.get_unchecked_mut(j) } +=
-                        xi * unsafe { *cb.get_unchecked(j * m + row[j] as usize) };
-                }
-            }
+            })
         });
     }
 
@@ -286,17 +333,16 @@ impl LinearOp for LutLinear {
                     // LUT once, then FMA it into every lane — the decode
                     // cost is amortized across the batch.
                     self.codes.unpack_range(i * self.d_out + lo, row);
-                    for (jj, (wv, &code)) in wrow.iter_mut().zip(&*row).enumerate() {
-                        *wv = cb[(lo + jj) * m + code as usize];
+                    match &self.codebooks_f16 {
+                        Some(cb16) => gather_widen_f16(cb16, m, lo, row, wrow),
+                        None => simd::lut_gather(cb, m, lo, row, wrow),
                     }
                     for r in 0..b {
                         let xi = xs.at(r, i);
                         if xi == 0.0 {
                             continue;
                         }
-                        for (o, &wv) in out.row_mut(r).iter_mut().zip(&*wrow) {
-                            *o += xi * wv;
-                        }
+                        simd::axpy(out.row_mut(r), xi, wrow);
                     }
                 }
             })
@@ -314,15 +360,18 @@ impl LinearOp for LutLinear {
         with_u16_scratch(w, |row| {
             for (i, trow) in (i0..i1).zip(tile.chunks_exact_mut(w)) {
                 self.codes.unpack_range(i * self.d_out + lo, row);
-                for (jj, (tv, &code)) in trow.iter_mut().zip(&*row).enumerate() {
-                    *tv = cb[(lo + jj) * m + code as usize];
+                match &self.codebooks_f16 {
+                    Some(cb16) => gather_widen_f16(cb16, m, lo, row, trow),
+                    None => simd::lut_gather(cb, m, lo, row, trow),
                 }
             }
         });
     }
 
     fn storage_bytes(&self) -> usize {
-        self.codes.storage_bytes() + self.codebooks.data.len() * 2 // fp16 LUT
+        // fp16 LUT either way: the f32 copy models a table that deploys as
+        // half-precision, the f16 copy *is* one.
+        self.codes.storage_bytes() + self.codebooks.rows * self.codebooks.cols * 2
     }
 }
 
@@ -337,8 +386,11 @@ pub struct VqLinear {
     /// codes: (d_in/dim) × d_out row-major per point.
     pub codes: PackedCodes,
     pub code_bits: u32,
-    /// d_out × (k·dim) centroid table.
+    /// d_out × (k·dim) centroid table. Emptied when the f16 copy takes over.
     pub codebooks: Mat,
+    /// Opt-in f16 storage of the centroid table
+    /// ([`Self::with_f16_tables`]): decode sites widen on read.
+    codebooks_f16: Option<Box<[u16]>>,
 }
 
 impl VqLinear {
@@ -374,7 +426,26 @@ impl VqLinear {
             codes: PackedCodes::pack(codes, code_bits),
             code_bits,
             codebooks,
+            codebooks_f16: None,
         }
+    }
+
+    /// Re-store the centroid table in f16, halving its resident bytes; the
+    /// f32 copy is dropped and every decode site widens on read. Same
+    /// contract as [`LutLinear::with_f16_tables`]: one RNE rounding per
+    /// table entry, all kernels of the f16 variant bit-identical to each
+    /// other.
+    pub fn with_f16_tables(mut self) -> Self {
+        let mut t = vec![0u16; self.codebooks.data.len()].into_boxed_slice();
+        narrow_slice(&self.codebooks.data, &mut t);
+        self.codebooks_f16 = Some(t);
+        self.codebooks.data = Vec::new(); // rows/cols still describe the table shape
+        self
+    }
+
+    /// True when the centroid table is stored as f16.
+    pub fn f16_tables(&self) -> bool {
+        self.codebooks_f16.is_some()
     }
 }
 
@@ -398,12 +469,22 @@ impl LinearOp for VqLinear {
                 self.codes.unpack_range(p * self.d_out, row);
                 for (j, &code) in row.iter().enumerate() {
                     let c = code as usize * dim;
-                    let cent = &self.codebooks.data[j * cbw + c..j * cbw + c + dim];
                     // Flat ascending-i accumulation (the tile contract):
                     // each centroid lane folds straight into out_j.
                     let o = &mut out[j];
-                    for (xv, cv) in xsp.iter().zip(cent) {
-                        *o += xv * cv;
+                    match &self.codebooks_f16 {
+                        Some(cb16) => {
+                            let cent = &cb16[j * cbw + c..j * cbw + c + dim];
+                            for (xv, &cv) in xsp.iter().zip(cent) {
+                                *o += xv * f16_to_f32(cv);
+                            }
+                        }
+                        None => {
+                            let cent = &self.codebooks.data[j * cbw + c..j * cbw + c + dim];
+                            for (xv, cv) in xsp.iter().zip(cent) {
+                                *o += xv * cv;
+                            }
+                        }
                     }
                 }
             }
@@ -432,12 +513,21 @@ impl LinearOp for VqLinear {
                     let xsp = &xs.row(r)[p * dim..(p + 1) * dim];
                     let orow = out.row_mut(r);
                     for (jj, &code) in row.iter().enumerate() {
-                        let c = code as usize * dim;
-                        let base = (lo + jj) * cbw + c;
-                        let cent = &self.codebooks.data[base..base + dim];
+                        let base = (lo + jj) * cbw + code as usize * dim;
                         let o = &mut orow[jj];
-                        for (xv, cv) in xsp.iter().zip(cent) {
-                            *o += xv * cv;
+                        match &self.codebooks_f16 {
+                            Some(cb16) => {
+                                let cent = &cb16[base..base + dim];
+                                for (xv, &cv) in xsp.iter().zip(cent) {
+                                    *o += xv * f16_to_f32(cv);
+                                }
+                            }
+                            None => {
+                                let cent = &self.codebooks.data[base..base + dim];
+                                for (xv, cv) in xsp.iter().zip(cent) {
+                                    *o += xv * cv;
+                                }
+                            }
                         }
                     }
                 }
@@ -465,7 +555,10 @@ impl LinearOp for VqLinear {
                 for (jj, &code) in row.iter().enumerate() {
                     let base = (lo + jj) * cbw + code as usize * dim;
                     for i in r0..r1 {
-                        tile[(i - i0) * w + jj] = self.codebooks.data[base + (i - p * dim)];
+                        tile[(i - i0) * w + jj] = match &self.codebooks_f16 {
+                            Some(cb16) => f16_to_f32(cb16[base + (i - p * dim)]),
+                            None => self.codebooks.data[base + (i - p * dim)],
+                        };
                     }
                 }
             }
@@ -473,7 +566,7 @@ impl LinearOp for VqLinear {
     }
 
     fn storage_bytes(&self) -> usize {
-        self.codes.storage_bytes() + self.codebooks.data.len() * 2
+        self.codes.storage_bytes() + self.codebooks.rows * self.codebooks.cols * 2
     }
 }
 
@@ -647,9 +740,8 @@ impl LinearOp for TrellisLinear {
     }
 
     fn tile_epilogue(&self, _x: &[f32], out_w: &mut [f32], lo: usize) {
-        for (jj, o) in out_w.iter_mut().enumerate() {
-            *o *= self.scales[lo + jj];
-        }
+        let w = out_w.len();
+        simd::scale_inplace(out_w, &self.scales[lo..lo + w]);
     }
 
     fn storage_bytes(&self) -> usize {
@@ -932,6 +1024,87 @@ mod tests {
         let mut rng = Rng::new(45);
         let codebooks = Mat::randn(4, 8, 1.0, &mut rng);
         VqLinear::new(&[0u16; 8], codebooks, 3, 2, 10, 4);
+    }
+
+    #[test]
+    fn format_kernels_are_bit_identical_across_simd_levels() {
+        // The bit-identity half of the SIMD contract, per serving format:
+        // forcing the scalar fallback and forcing the vector paths must
+        // produce exactly equal bytes from matvec, the sharded matmul, and
+        // the tiled engine.
+        use crate::tensor::simd;
+        let mut rng = Rng::new(50);
+        let w = Mat::randn(24, 10, 1.0, &mut rng);
+        let grid = UniformGrid::fit(&w, 3);
+        let (_, codes) = round_all(&w, &grid);
+        let uni = UniformScalarLinear::new(&codes, &grid, 24, 10);
+        let res = rtn_quantize(&w, 3);
+        let lut = LutLinear::new(&res.codes.unwrap(), res.codebooks.unwrap(), 3, 24, 10);
+        let (vq, _) = vq_fixture(51);
+        let (tre, _) = trellis_fixture(52);
+        for lin in [&uni as &dyn LinearOp, &lut, &vq, &tre] {
+            let xs = Mat::randn(5, lin.d_in(), 1.0, &mut rng);
+            let mut run = |simd_on: bool| {
+                simd::force(Some(simd_on));
+                let mut mv = vec![0.0f32; lin.d_out()];
+                lin.matvec(xs.row(0), &mut mv);
+                let mut mm = Mat::zeros(5, lin.d_out());
+                lin.matmul(&xs, &mut mm);
+                let mut tiled = Mat::zeros(5, lin.d_out());
+                matmul_tiled_with(lin, &xs, &mut ColWindow::full(&mut tiled), 7);
+                simd::force(None);
+                (mv, mm.data, tiled.data)
+            };
+            assert_eq!(run(false), run(true), "scalar vs SIMD kernels differ");
+        }
+    }
+
+    #[test]
+    fn lut_f16_tables_track_f32_within_ulp_budget() {
+        let mut rng = Rng::new(60);
+        let w = Mat::randn(12, 10, 1.0, &mut rng);
+        let res = rtn_quantize(&w, 3);
+        let codes = res.codes.unwrap();
+        let cbs = res.codebooks.unwrap();
+        let f32_lin = LutLinear::new(&codes, cbs.clone(), 3, 12, 10);
+        let f16_lin = LutLinear::new(&codes, cbs, 3, 12, 10).with_f16_tables();
+        assert!(f16_lin.f16_tables() && !f32_lin.f16_tables());
+        assert_eq!(f16_lin.storage_bytes(), f32_lin.storage_bytes());
+        let x: Vec<f32> = (0..12).map(|_| rng.normal_f32()).collect();
+        let mut want = vec![0.0f32; 10];
+        f32_lin.matvec(&x, &mut want);
+        let mut got = vec![0.0f32; 10];
+        f16_lin.matvec(&x, &mut got);
+        // One RNE rounding per table entry ≈ 2^-11 relative = 2^13 f32
+        // ulps; the atol floor covers outputs that land near zero.
+        testing::assert_close_ulp(&got, &want, 1 << 14, 1e-3).unwrap();
+        assert_ne!(got, want, "f16 narrowing should round at least one table entry");
+        // The f16 variant's kernels still agree with each other exactly.
+        assert_matmul_is_looped_matvec(&f16_lin, 4, 106);
+        // Word-aligned rows: the fused f32 fast path must stand down.
+        let w = Mat::randn(16, 8, 1.0, &mut rng);
+        let res = rtn_quantize(&w, 4);
+        let aligned16 =
+            LutLinear::new(&res.codes.unwrap(), res.codebooks.unwrap(), 4, 16, 8).with_f16_tables();
+        assert_matmul_is_looped_matvec(&aligned16, 3, 107);
+    }
+
+    #[test]
+    fn vq_f16_tables_track_f32_within_ulp_budget() {
+        let (f32_lin, _) = vq_fixture(61);
+        let (rebuilt, _) = vq_fixture(61); // same seed → identical weights
+        let f16_lin = rebuilt.with_f16_tables();
+        assert!(f16_lin.f16_tables());
+        assert_eq!(f16_lin.storage_bytes(), f32_lin.storage_bytes());
+        let mut rng = Rng::new(62);
+        let x: Vec<f32> = (0..f32_lin.d_in).map(|_| rng.normal_f32()).collect();
+        let mut want = vec![0.0f32; f32_lin.d_out];
+        f32_lin.matvec(&x, &mut want);
+        let mut got = vec![0.0f32; f16_lin.d_out];
+        f16_lin.matvec(&x, &mut got);
+        testing::assert_close_ulp(&got, &want, 1 << 14, 1e-3).unwrap();
+        assert_ne!(got, want, "f16 narrowing should round at least one centroid");
+        assert_matmul_is_looped_matvec(&f16_lin, 5, 108);
     }
 
     #[test]

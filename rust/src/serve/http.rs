@@ -108,6 +108,10 @@ struct Metrics {
     active: usize,
     completed: u64,
     rejected: u64,
+    /// Bytes of K/V currently stored across active lanes (gauge).
+    kv_bytes: usize,
+    /// Bytes of KV page storage held (active lanes + pooled arena pages).
+    kv_allocated_bytes: usize,
     ttft_ms: Vec<f64>,
     token_ms: Vec<f64>,
     queue_wait_ms: Vec<f64>,
@@ -130,6 +134,7 @@ struct Shared {
     vocab: usize,
     max_batch: usize,
     max_queued: usize,
+    kv_dtype: &'static str,
     metrics: Mutex<Metrics>,
 }
 
@@ -160,6 +165,9 @@ impl Shared {
             .with("connections", self.conns.load(Ordering::SeqCst))
             .with("max_batch", self.max_batch)
             .with("max_queued", self.max_queued)
+            .with("kv_dtype", self.kv_dtype)
+            .with("kv_bytes", m.kv_bytes)
+            .with("kv_allocated_bytes", m.kv_allocated_bytes)
             .with("ttft_ms", pctl(&m.ttft_ms))
             .with("token_ms", pctl(&m.token_ms))
             .with("queue_wait_ms", pctl(&m.queue_wait_ms))
@@ -190,6 +198,7 @@ impl HttpServer {
             vocab: model.cfg.vocab,
             max_batch: cfg.max_batch.max(1),
             max_queued: cfg.max_queued.max(1),
+            kv_dtype: cfg.kv_dtype.name(),
             metrics: Mutex::new(Metrics::default()),
         });
         let (tx, rx) = mpsc::channel();
@@ -310,9 +319,13 @@ fn engine_loop(
 }
 
 fn publish_gauges(shared: &Shared, sched: &Scheduler) {
+    let kv_bytes = sched.kv_bytes();
+    let kv_allocated = sched.kv_allocated_bytes();
     let mut m = shared.metrics.lock().unwrap();
     m.queued = sched.queued();
     m.active = sched.active();
+    m.kv_bytes = kv_bytes;
+    m.kv_allocated_bytes = kv_allocated;
 }
 
 fn handle_msg(

@@ -150,7 +150,7 @@ impl<'m> Scheduler<'m> {
         cfg.max_batch = cfg.max_batch.max(1);
         cfg.max_queued = cfg.max_queued.max(1);
         Scheduler {
-            arena: model.new_arena(),
+            arena: model.new_arena_with(cfg.kv_dtype),
             model,
             cfg,
             workers: workers.max(1),
@@ -246,6 +246,24 @@ impl<'m> Scheduler<'m> {
     /// returned by evicted lanes, less pages re-taken by growing lanes).
     pub fn pooled_kv_pages(&self) -> usize {
         self.arena.pooled_pages()
+    }
+
+    /// Storage dtype of every lane's KV cache ([`ServeConfig::kv_dtype`]).
+    pub fn kv_dtype(&self) -> crate::cfg::KvDtype {
+        self.arena.kv_dtype()
+    }
+
+    /// Bytes of K/V actually stored across all active lanes (grows with
+    /// each lane's position; halves under f16 KV storage).
+    pub fn kv_bytes(&self) -> usize {
+        self.states.iter().map(DecodeState::kv_bytes).sum()
+    }
+
+    /// Bytes of KV page storage held by the engine: active lanes' pages
+    /// plus pages pooled in the arena's shared slab.
+    pub fn kv_allocated_bytes(&self) -> usize {
+        let live: usize = self.states.iter().map(DecodeState::kv_allocated_bytes).sum();
+        live + self.arena.pooled_page_bytes()
     }
 
     /// Splice queued requests into free lanes and prefill their prompts.
@@ -794,6 +812,43 @@ mod tests {
         let done = sched.run_to_completion();
         assert_eq!(done.len(), 2);
         assert!(done.iter().all(|f| f.tokens.len() == 4));
+    }
+
+    #[test]
+    fn f16_kv_serving_halves_kv_bytes_and_matches_greedy() {
+        // Same workload under f32 and f16 KV storage: greedy tokens must
+        // match token-for-token (the serving exactness contract for the
+        // tiny preset) and both byte gauges must halve exactly.
+        use crate::cfg::KvDtype;
+        let m = model();
+        let run = |dtype: KvDtype| {
+            let cfg = ServeConfig {
+                max_batch: 2,
+                max_queued: 8,
+                kv_dtype: dtype,
+                ..ServeConfig::default()
+            };
+            let mut sched = Scheduler::new(&m, cfg);
+            assert_eq!(sched.kv_dtype(), dtype);
+            assert_eq!(sched.kv_bytes(), 0, "no lanes yet");
+            sched.submit(&[1, 2, 3], 3).unwrap();
+            sched.submit(&[4, 5], 3).unwrap();
+            let mut done = Vec::new();
+            let mut peak_live = 0usize;
+            while sched.has_work() {
+                done.extend(sched.step());
+                peak_live = peak_live.max(sched.kv_bytes());
+            }
+            done.sort_by_key(|f| f.id);
+            let tokens: Vec<Vec<u32>> = done.into_iter().map(|f| f.tokens).collect();
+            (tokens, peak_live, sched.kv_allocated_bytes())
+        };
+        let (tok32, live32, alloc32) = run(KvDtype::F32);
+        let (tok16, live16, alloc16) = run(KvDtype::F16);
+        assert_eq!(tok16, tok32, "f16 KV diverged from f32 greedy tokens");
+        assert!(live32 > 0 && alloc32 > 0);
+        assert_eq!(live16 * 2, live32, "f16 KV must halve live bytes");
+        assert_eq!(alloc16 * 2, alloc32, "f16 KV must halve allocated bytes");
     }
 
     #[test]

@@ -33,7 +33,9 @@
 //! `GQ_TILE` (env, read once): `0` disables the tiled engine (row-at-a-time
 //! kernels everywhere), `1` or unset enables it with the default
 //! [`TILE_ROWS`] tile height, any other integer `N >= 2` enables it with
-//! tile height `N`.
+//! tile height `N`. `GQ_SIMD` (see [`super::simd`]) independently routes
+//! the panel sweep between explicit vector code and the scalar fallback —
+//! results are bit-identical either way, so the two knobs compose freely.
 
 use std::cell::Cell;
 use std::marker::PhantomData;
@@ -48,8 +50,9 @@ use crate::tensor::Mat;
 /// decode setup (e.g. the trellis checkpoint replay) over many rows.
 pub const TILE_ROWS: usize = 64;
 
-/// Columns held in registers by the micro-kernel panel.
-const PANEL_J: usize = 8;
+/// Columns held in registers by the micro-kernel panel (one AVX2 register
+/// of f32 lanes — the panel sweep dispatches through [`super::simd`]).
+const PANEL_J: usize = super::simd::WIDTH;
 
 /// Batch lanes blocked per micro-kernel pass (`PANEL_LANES * PANEL_J`
 /// accumulators stay in registers).
@@ -84,9 +87,10 @@ pub fn tile_rows() -> usize {
 /// Human-readable description of which batched decode kernel is active —
 /// benches print this so recorded numbers say what ran.
 pub fn kernel_desc() -> String {
+    let simd = super::simd::desc();
     match tile_cfg() {
-        Some(rows) => format!("tiled-gemm (dequant-once, tile rows {rows})"),
-        None => "row-at-a-time (GQ_TILE=0)".to_string(),
+        Some(rows) => format!("tiled-gemm (dequant-once, tile rows {rows}, {simd})"),
+        None => format!("row-at-a-time (GQ_TILE=0, {simd})"),
     }
 }
 
@@ -323,11 +327,11 @@ fn apply_tile(xs: &Mat, out: &mut ColWindow, tile: &[f32], i0: usize) {
         if nj == PANEL_J {
             let mut r0 = 0;
             while r0 + PANEL_LANES <= b {
-                micro_panel::<PANEL_LANES>(xs, out, tile, i0, jp, r0);
+                micro_panel4(xs, out, tile, i0, jp, r0);
                 r0 += PANEL_LANES;
             }
             while r0 < b {
-                micro_panel::<1>(xs, out, tile, i0, jp, r0);
+                micro_panel1(xs, out, tile, i0, jp, r0);
                 r0 += 1;
             }
         } else {
@@ -339,36 +343,33 @@ fn apply_tile(xs: &Mat, out: &mut ColWindow, tile: &[f32], i0: usize) {
     }
 }
 
-/// Full-width panel: `NR` lanes × [`PANEL_J`] columns of accumulators held
-/// in registers across the tile's row sweep.
+/// Full-width panel: [`PANEL_LANES`] lanes × [`PANEL_J`] columns of
+/// accumulators held in registers across the tile's row sweep. The sweep
+/// itself dispatches through [`super::simd::panel_fma4`], whose scalar and
+/// vector paths are bit-identical (separate mul+add, same per-element
+/// chains) — so the tiled product stays exactly equal at any `GQ_SIMD`.
 #[inline]
-fn micro_panel<const NR: usize>(
-    xs: &Mat,
-    out: &mut ColWindow,
-    tile: &[f32],
-    i0: usize,
-    jp: usize,
-    r0: usize,
-) {
+fn micro_panel4(xs: &Mat, out: &mut ColWindow, tile: &[f32], i0: usize, jp: usize, r0: usize) {
     let w = out.width();
-    let rows = tile.len() / w;
-    let xrows: [&[f32]; NR] = std::array::from_fn(|r| xs.row(r0 + r));
-    let mut acc = [[0.0f32; PANEL_J]; NR];
+    let xrows: [&[f32]; PANEL_LANES] = std::array::from_fn(|r| xs.row(r0 + r));
+    let mut acc = [[0.0f32; PANEL_J]; PANEL_LANES];
     for (r, a) in acc.iter_mut().enumerate() {
         a.copy_from_slice(&out.row_mut(r0 + r)[jp..jp + PANEL_J]);
     }
-    for i in 0..rows {
-        let trow = &tile[i * w + jp..i * w + jp + PANEL_J];
-        for (xr, a) in xrows.iter().zip(acc.iter_mut()) {
-            let xi = xr[i0 + i];
-            for (av, &tv) in a.iter_mut().zip(trow) {
-                *av += xi * tv;
-            }
-        }
-    }
+    super::simd::panel_fma4(&mut acc, &xrows, tile, w, jp, i0);
     for (r, a) in acc.iter().enumerate() {
         out.row_mut(r0 + r)[jp..jp + PANEL_J].copy_from_slice(a);
     }
+}
+
+/// One-lane variant of [`micro_panel4`] (batch remainder rows).
+#[inline]
+fn micro_panel1(xs: &Mat, out: &mut ColWindow, tile: &[f32], i0: usize, jp: usize, r0: usize) {
+    let w = out.width();
+    let mut acc = [0.0f32; PANEL_J];
+    acc.copy_from_slice(&out.row_mut(r0)[jp..jp + PANEL_J]);
+    super::simd::panel_fma1(&mut acc, xs.row(r0), tile, w, jp, i0);
+    out.row_mut(r0)[jp..jp + PANEL_J].copy_from_slice(&acc);
 }
 
 /// Remainder panel (window width not a multiple of [`PANEL_J`]): one lane,
@@ -465,6 +466,27 @@ mod tests {
         assert_eq!(win.row_mut(2), &[11.0, 12.0, 13.0]);
         win.fill(-1.0);
         assert_eq!(m.row(0), &[0.0, -1.0, -1.0, -1.0, 4.0]);
+    }
+
+    #[test]
+    fn tiled_product_is_bit_identical_across_simd_levels() {
+        use crate::tensor::simd;
+        let mut rng = Rng::new(21);
+        // Width 29 exercises full panels and the nj < PANEL_J remainder;
+        // batch 6 exercises the 4-lane panel plus one-lane remainders.
+        let w = Mat::randn(48, 29, 1.0, &mut rng);
+        let xs = Mat::randn(6, 48, 1.0, &mut rng);
+        let run = || {
+            let mut got = Mat::zeros(6, 29);
+            matmul_tiled_with(&w, &xs, &mut ColWindow::full(&mut got), 16);
+            got
+        };
+        simd::force(Some(false));
+        let scalar = run();
+        simd::force(Some(true));
+        let vector = run();
+        simd::force(None);
+        assert_eq!(scalar.data, vector.data);
     }
 
     #[test]

@@ -5,6 +5,7 @@ pub mod gemm;
 pub mod io;
 pub mod mat;
 pub mod ops;
+pub mod simd;
 
 pub use gemm::ColWindow;
 pub use mat::Mat;

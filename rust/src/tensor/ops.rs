@@ -188,33 +188,20 @@ pub fn matvec(a: &Mat, x: &[f32]) -> Vec<f32> {
 }
 
 /// y += a * x, elementwise in index order — the attention context
-/// accumulation kernel. Kept branch-free so it auto-vectorizes; callers
-/// that rely on bit-identical results depend on the in-order accumulation.
+/// accumulation kernel. Dispatches to the explicit SIMD path when enabled
+/// (`tensor::simd`); callers that rely on bit-identical results depend on
+/// the in-order accumulation, which every dispatch level preserves.
 #[inline]
 pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
-    debug_assert_eq!(y.len(), x.len());
-    for (yv, &xv) in y.iter_mut().zip(x) {
-        *yv += a * xv;
-    }
+    super::simd::axpy(y, a, x);
 }
 
-/// Dense dot product (8-way unrolled for the serving hot path).
+/// Dense dot product (8-way unrolled for the serving hot path). Dispatches
+/// to the explicit SIMD path when enabled; all levels keep the same 8
+/// accumulator lanes and reduction order, so results are bit-identical.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let chunks = a.len() / 8;
-    let mut acc = [0.0f32; 8];
-    for c in 0..chunks {
-        let i = c * 8;
-        for l in 0..8 {
-            acc[l] += a[i + l] * b[i + l];
-        }
-    }
-    let mut s = acc.iter().sum::<f32>();
-    for i in chunks * 8..a.len() {
-        s += a[i] * b[i];
-    }
-    s
+    super::simd::dot(a, b)
 }
 
 #[cfg(test)]

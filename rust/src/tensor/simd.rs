@@ -1,0 +1,783 @@
+//! Explicit SIMD micro-kernels for the serving hot loops, with runtime
+//! dispatch and a bit-identity contract.
+//!
+//! ## Dispatch
+//!
+//! The active level is resolved once per process from `GQ_SIMD` (env, read
+//! once): `0` forces the chunked scalar fallbacks everywhere; unset or any
+//! other value uses the best level the CPU supports
+//! (`is_x86_feature_detected!`): AVX2, then SSE2 (always present on
+//! x86-64), scalar on other architectures. Benches and tests can override
+//! the routing in-process via [`force`] — safe to flip at any time because
+//! every primitive is **bit-identical across levels** (see below), so a
+//! mid-flight switch can never change results, only speed.
+//!
+//! ## Bit-identity contract
+//!
+//! Every primitive produces exactly the same f32 results (per element, `==`)
+//! at every level:
+//!
+//! * Vector paths use separate multiply + add (never fused FMA, whose
+//!   single rounding differs from the scalar two-rounding sequence).
+//! * [`dot`] keeps 8 independent accumulator lanes — exactly the scalar
+//!   fallback's 8-wide unroll — and reduces them in the same fixed
+//!   `acc[0] + acc[1] + … + acc[7]` order.
+//! * [`axpy`], [`panel_fma4`]/[`panel_fma1`], and the dequant epilogues
+//!   ([`scale_affine`], [`scale_inplace`], [`lut_gather`]) are elementwise:
+//!   each output element sees the same operations in the same order
+//!   regardless of how many land per instruction.
+//! * [`max`] is a plain max-reduction: f32 max over finite inputs is
+//!   associative and commutative, so lane order cannot change the value
+//!   (callers feed it finite attention scores; NaN inputs are excluded by
+//!   contract).
+//! * The f16 readers ([`dot_f16`], [`axpy_f16`]) widen half floats on read;
+//!   widening is exact (f16 ⊂ f32), so they are bit-identical across
+//!   levels too — F16C hardware converts agree with the software codec.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use crate::util::half::f16_to_f32;
+
+/// Vector width every panel/epilogue primitive is built around (f32 lanes
+/// of one AVX2 register; the scalar fallbacks unroll to the same width).
+pub const WIDTH: usize = 8;
+
+/// Active instruction level for the dispatched primitives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    Scalar,
+    Sse2,
+    Avx2,
+}
+
+/// Best level this CPU supports (ignores `GQ_SIMD`).
+fn detected() -> Level {
+    static DET: OnceLock<Level> = OnceLock::new();
+    *DET.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                Level::Avx2
+            } else {
+                Level::Sse2 // baseline of the x86-64 ISA
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            Level::Scalar
+        }
+    })
+}
+
+/// `GQ_SIMD`-resolved level: `0` forces scalar, anything else auto-detects.
+fn env_level() -> Level {
+    static CFG: OnceLock<Level> = OnceLock::new();
+    *CFG.get_or_init(|| match std::env::var("GQ_SIMD") {
+        Ok(v) if v.trim() == "0" => Level::Scalar,
+        _ => detected(),
+    })
+}
+
+/// In-process routing override: 0 = follow `GQ_SIMD`, 1 = force scalar,
+/// 2 = force the detected SIMD level (ignoring `GQ_SIMD`).
+static FORCE: AtomicU8 = AtomicU8::new(0);
+
+/// Test/bench hook: `Some(false)` forces the scalar fallbacks,
+/// `Some(true)` forces the detected SIMD level (ignoring `GQ_SIMD`),
+/// `None` restores `GQ_SIMD` routing. Safe to flip while other threads run
+/// kernels — all levels are bit-identical, so only throughput changes.
+pub fn force(mode: Option<bool>) {
+    let v = match mode {
+        None => 0,
+        Some(false) => 1,
+        Some(true) => 2,
+    };
+    FORCE.store(v, Ordering::Relaxed);
+}
+
+/// The level the next primitive call will dispatch to.
+#[inline]
+pub fn level() -> Level {
+    match FORCE.load(Ordering::Relaxed) {
+        1 => Level::Scalar,
+        2 => detected(),
+        _ => env_level(),
+    }
+}
+
+/// Whether F16C hardware f16<->f32 converts are used by the f16 readers
+/// (requires an active SIMD level; scalar routing uses the software codec).
+#[inline]
+fn use_f16c() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        static F16C: OnceLock<bool> = OnceLock::new();
+        level() != Level::Scalar
+            && *F16C.get_or_init(|| std::arch::is_x86_feature_detected!("f16c"))
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Human-readable description of the active routing — benches print this so
+/// recorded numbers say what ran.
+pub fn desc() -> &'static str {
+    match level() {
+        Level::Avx2 => {
+            if use_f16c() {
+                "simd avx2+f16c"
+            } else {
+                "simd avx2"
+            }
+        }
+        Level::Sse2 => "simd sse2",
+        Level::Scalar => "scalar (GQ_SIMD=0)",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dot / axpy / max
+// ---------------------------------------------------------------------------
+
+/// Dense dot product: 8 independent accumulator lanes over the 8-aligned
+/// prefix (one AVX2 register / two SSE registers / the scalar unroll),
+/// reduced in fixed lane order, scalar remainder.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    match level() {
+        Level::Avx2 => return unsafe { x86::dot_avx2(a, b) },
+        Level::Sse2 => return unsafe { x86::dot_sse2(a, b) },
+        Level::Scalar => {}
+    }
+    dot_scalar(a, b)
+}
+
+/// The scalar fallback of [`dot`] (8-wide chunked unroll, auto-vec
+/// friendly). Public so tests can pin the vector paths against it.
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let chunks = a.len() / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        for l in 0..8 {
+            acc[l] += a[i + l] * b[i + l];
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for i in chunks * 8..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y += a · x, elementwise in index order.
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    #[cfg(target_arch = "x86_64")]
+    match level() {
+        Level::Avx2 => return unsafe { x86::axpy_avx2(y, a, x) },
+        Level::Sse2 => return unsafe { x86::axpy_sse2(y, a, x) },
+        Level::Scalar => {}
+    }
+    axpy_scalar(y, a, x);
+}
+
+/// The scalar fallback of [`axpy`].
+#[inline]
+pub fn axpy_scalar(y: &mut [f32], a: f32, x: &[f32]) {
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += a * xv;
+    }
+}
+
+/// Max over a slice (`NEG_INFINITY` when empty). Order-independent for the
+/// finite inputs the softmax feeds it, so the vector reduction is exact.
+#[inline]
+pub fn max(xs: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if level() == Level::Avx2 {
+        return unsafe { x86::max_avx2(xs) };
+    }
+    xs.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v))
+}
+
+// ---------------------------------------------------------------------------
+// GEMM micro-panel row sweeps
+// ---------------------------------------------------------------------------
+
+/// Sweep a decoded tile's rows into 4 lanes × [`WIDTH`] columns of resumed
+/// accumulators: `acc[r][j] += xrows[r][i0 + i] * tile[i * w + jp + j]` for
+/// every tile row `i`, rows ascending, per-`(r, j)` chains independent.
+/// The accumulators stay in registers across the whole sweep.
+#[inline]
+pub fn panel_fma4(
+    acc: &mut [[f32; WIDTH]; 4],
+    xrows: &[&[f32]; 4],
+    tile: &[f32],
+    w: usize,
+    jp: usize,
+    i0: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if level() == Level::Avx2 {
+        unsafe { x86::panel4_avx2(acc, xrows, tile, w, jp, i0) };
+        return;
+    }
+    let rows = tile.len() / w;
+    for i in 0..rows {
+        let trow = &tile[i * w + jp..i * w + jp + WIDTH];
+        for (xr, a) in xrows.iter().zip(acc.iter_mut()) {
+            let xi = xr[i0 + i];
+            for (av, &tv) in a.iter_mut().zip(trow) {
+                *av += xi * tv;
+            }
+        }
+    }
+}
+
+/// One-lane variant of [`panel_fma4`] (batch remainder rows).
+#[inline]
+pub fn panel_fma1(
+    acc: &mut [f32; WIDTH],
+    xrow: &[f32],
+    tile: &[f32],
+    w: usize,
+    jp: usize,
+    i0: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if level() == Level::Avx2 {
+        unsafe { x86::panel1_avx2(acc, xrow, tile, w, jp, i0) };
+        return;
+    }
+    let rows = tile.len() / w;
+    for i in 0..rows {
+        let trow = &tile[i * w + jp..i * w + jp + WIDTH];
+        let xi = xrow[i0 + i];
+        for (av, &tv) in acc.iter_mut().zip(trow) {
+            *av += xi * tv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dequant epilogues
+// ---------------------------------------------------------------------------
+
+/// Affine epilogue of the uniform-scalar format:
+/// `out[j] = out[j] * scale[j] + xsum * zero[j]`, elementwise.
+#[inline]
+pub fn scale_affine(out: &mut [f32], scale: &[f32], zero: &[f32], xsum: f32) {
+    debug_assert_eq!(out.len(), scale.len());
+    debug_assert_eq!(out.len(), zero.len());
+    #[cfg(target_arch = "x86_64")]
+    if level() == Level::Avx2 {
+        unsafe { x86::scale_affine_avx2(out, scale, zero, xsum) };
+        return;
+    }
+    for ((o, &s), &z) in out.iter_mut().zip(scale).zip(zero) {
+        *o = *o * s + xsum * z;
+    }
+}
+
+/// Per-column scale epilogue of the trellis format: `out[j] *= scale[j]`.
+#[inline]
+pub fn scale_inplace(out: &mut [f32], scale: &[f32]) {
+    debug_assert_eq!(out.len(), scale.len());
+    #[cfg(target_arch = "x86_64")]
+    if level() == Level::Avx2 {
+        unsafe { x86::scale_inplace_avx2(out, scale) };
+        return;
+    }
+    for (o, &s) in out.iter_mut().zip(scale) {
+        *o *= s;
+    }
+}
+
+/// Per-channel LUT gather of the non-uniform format:
+/// `out[j] = cb[(lo + j) * m + codes[j]]` (an exact copy — the AVX2 path
+/// uses hardware gathers, trivially bit-identical).
+#[inline]
+pub fn lut_gather(cb: &[f32], m: usize, lo: usize, codes: &[u16], out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    #[cfg(target_arch = "x86_64")]
+    if level() == Level::Avx2 {
+        unsafe { x86::lut_gather_avx2(cb, m, lo, codes, out) };
+        return;
+    }
+    for (jj, (o, &code)) in out.iter_mut().zip(codes).enumerate() {
+        *o = cb[(lo + jj) * m + code as usize];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f16 widen-on-read kernels
+// ---------------------------------------------------------------------------
+
+/// [`dot`] against a packed-f16 operand, widening on read. Same 8-lane
+/// accumulator structure and reduction order as [`dot`]; the widening
+/// itself is exact, so results are identical across levels and codecs.
+#[inline]
+pub fn dot_f16(a: &[f32], b: &[u16]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if use_f16c() {
+        return unsafe { x86::dot_f16c(a, b) };
+    }
+    let chunks = a.len() / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        for l in 0..8 {
+            acc[l] += a[i + l] * f16_to_f32(b[i + l]);
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for i in chunks * 8..a.len() {
+        s += a[i] * f16_to_f32(b[i]);
+    }
+    s
+}
+
+/// [`axpy`] against a packed-f16 operand, widening on read.
+#[inline]
+pub fn axpy_f16(y: &mut [f32], a: f32, x: &[u16]) {
+    debug_assert_eq!(y.len(), x.len());
+    #[cfg(target_arch = "x86_64")]
+    if use_f16c() {
+        unsafe { x86::axpy_f16c(y, a, x) };
+        return;
+    }
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += a * f16_to_f32(xv);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86-64 vector implementations
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! `core::arch` implementations. Every function mirrors its scalar
+    //! fallback's arithmetic exactly: separate `mul` + `add` (no FMA), the
+    //! same accumulator lane structure, and the same reduction order.
+
+    use super::WIDTH;
+    use crate::util::half::f16_to_f32;
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+        let chunks = a.len() / 8;
+        let mut vacc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let i = c * 8;
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+            vacc = _mm256_add_ps(vacc, _mm256_mul_ps(va, vb));
+        }
+        let mut acc = [0.0f32; 8];
+        _mm256_storeu_ps(acc.as_mut_ptr(), vacc);
+        let mut s = acc.iter().sum::<f32>();
+        for i in chunks * 8..a.len() {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn dot_sse2(a: &[f32], b: &[f32]) -> f32 {
+        let chunks = a.len() / 8;
+        let mut lo = _mm_setzero_ps();
+        let mut hi = _mm_setzero_ps();
+        for c in 0..chunks {
+            let i = c * 8;
+            let a0 = _mm_loadu_ps(a.as_ptr().add(i));
+            let b0 = _mm_loadu_ps(b.as_ptr().add(i));
+            lo = _mm_add_ps(lo, _mm_mul_ps(a0, b0));
+            let a1 = _mm_loadu_ps(a.as_ptr().add(i + 4));
+            let b1 = _mm_loadu_ps(b.as_ptr().add(i + 4));
+            hi = _mm_add_ps(hi, _mm_mul_ps(a1, b1));
+        }
+        let mut acc = [0.0f32; 8];
+        _mm_storeu_ps(acc.as_mut_ptr(), lo);
+        _mm_storeu_ps(acc.as_mut_ptr().add(4), hi);
+        let mut s = acc.iter().sum::<f32>();
+        for i in chunks * 8..a.len() {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy_avx2(y: &mut [f32], a: f32, x: &[f32]) {
+        let n = y.len();
+        let va = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i + 8 <= n {
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(vy, _mm256_mul_ps(va, vx)));
+            i += 8;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn axpy_sse2(y: &mut [f32], a: f32, x: &[f32]) {
+        let n = y.len();
+        let va = _mm_set1_ps(a);
+        let mut i = 0;
+        while i + 4 <= n {
+            let vy = _mm_loadu_ps(y.as_ptr().add(i));
+            let vx = _mm_loadu_ps(x.as_ptr().add(i));
+            _mm_storeu_ps(y.as_mut_ptr().add(i), _mm_add_ps(vy, _mm_mul_ps(va, vx)));
+            i += 4;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn max_avx2(xs: &[f32]) -> f32 {
+        let n = xs.len();
+        let mut m = f32::NEG_INFINITY;
+        let mut i = 0;
+        if n >= 8 {
+            let mut vm = _mm256_loadu_ps(xs.as_ptr());
+            i = 8;
+            while i + 8 <= n {
+                vm = _mm256_max_ps(vm, _mm256_loadu_ps(xs.as_ptr().add(i)));
+                i += 8;
+            }
+            let mut lanes = [0.0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), vm);
+            for &v in &lanes {
+                m = m.max(v);
+            }
+        }
+        while i < n {
+            m = m.max(xs[i]);
+            i += 1;
+        }
+        m
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn panel4_avx2(
+        acc: &mut [[f32; WIDTH]; 4],
+        xrows: &[&[f32]; 4],
+        tile: &[f32],
+        w: usize,
+        jp: usize,
+        i0: usize,
+    ) {
+        let rows = tile.len() / w;
+        let mut v0 = _mm256_loadu_ps(acc[0].as_ptr());
+        let mut v1 = _mm256_loadu_ps(acc[1].as_ptr());
+        let mut v2 = _mm256_loadu_ps(acc[2].as_ptr());
+        let mut v3 = _mm256_loadu_ps(acc[3].as_ptr());
+        for i in 0..rows {
+            let trow = _mm256_loadu_ps(tile.as_ptr().add(i * w + jp));
+            let x0 = _mm256_set1_ps(*xrows[0].get_unchecked(i0 + i));
+            v0 = _mm256_add_ps(v0, _mm256_mul_ps(x0, trow));
+            let x1 = _mm256_set1_ps(*xrows[1].get_unchecked(i0 + i));
+            v1 = _mm256_add_ps(v1, _mm256_mul_ps(x1, trow));
+            let x2 = _mm256_set1_ps(*xrows[2].get_unchecked(i0 + i));
+            v2 = _mm256_add_ps(v2, _mm256_mul_ps(x2, trow));
+            let x3 = _mm256_set1_ps(*xrows[3].get_unchecked(i0 + i));
+            v3 = _mm256_add_ps(v3, _mm256_mul_ps(x3, trow));
+        }
+        _mm256_storeu_ps(acc[0].as_mut_ptr(), v0);
+        _mm256_storeu_ps(acc[1].as_mut_ptr(), v1);
+        _mm256_storeu_ps(acc[2].as_mut_ptr(), v2);
+        _mm256_storeu_ps(acc[3].as_mut_ptr(), v3);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn panel1_avx2(
+        acc: &mut [f32; WIDTH],
+        xrow: &[f32],
+        tile: &[f32],
+        w: usize,
+        jp: usize,
+        i0: usize,
+    ) {
+        let rows = tile.len() / w;
+        let mut v = _mm256_loadu_ps(acc.as_ptr());
+        for i in 0..rows {
+            let trow = _mm256_loadu_ps(tile.as_ptr().add(i * w + jp));
+            let xi = _mm256_set1_ps(*xrow.get_unchecked(i0 + i));
+            v = _mm256_add_ps(v, _mm256_mul_ps(xi, trow));
+        }
+        _mm256_storeu_ps(acc.as_mut_ptr(), v);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn scale_affine_avx2(
+        out: &mut [f32],
+        scale: &[f32],
+        zero: &[f32],
+        xsum: f32,
+    ) {
+        let n = out.len();
+        let vx = _mm256_set1_ps(xsum);
+        let mut j = 0;
+        while j + 8 <= n {
+            let vo = _mm256_loadu_ps(out.as_ptr().add(j));
+            let vs = _mm256_loadu_ps(scale.as_ptr().add(j));
+            let vz = _mm256_loadu_ps(zero.as_ptr().add(j));
+            let r = _mm256_add_ps(_mm256_mul_ps(vo, vs), _mm256_mul_ps(vx, vz));
+            _mm256_storeu_ps(out.as_mut_ptr().add(j), r);
+            j += 8;
+        }
+        while j < n {
+            out[j] = out[j] * scale[j] + xsum * zero[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn scale_inplace_avx2(out: &mut [f32], scale: &[f32]) {
+        let n = out.len();
+        let mut j = 0;
+        while j + 8 <= n {
+            let vo = _mm256_loadu_ps(out.as_ptr().add(j));
+            let vs = _mm256_loadu_ps(scale.as_ptr().add(j));
+            _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_mul_ps(vo, vs));
+            j += 8;
+        }
+        while j < n {
+            out[j] *= scale[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn lut_gather_avx2(
+        cb: &[f32],
+        m: usize,
+        lo: usize,
+        codes: &[u16],
+        out: &mut [f32],
+    ) {
+        let n = out.len();
+        let mut j = 0;
+        if m <= i32::MAX as usize && cb.len() <= i32::MAX as usize {
+            // Per-lane index: (lo + j + l) * m + codes[j + l].
+            let vm = _mm256_set1_epi32(m as i32);
+            let steps = _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7);
+            while j + 8 <= n {
+                // Widen 8 u16 codes to i32 lanes.
+                let c = _mm_loadu_si128(codes.as_ptr().add(j) as *const __m128i);
+                let vcode = _mm256_cvtepu16_epi32(c);
+                let base = _mm256_add_epi32(_mm256_set1_epi32((lo + j) as i32), steps);
+                let idx = _mm256_add_epi32(_mm256_mullo_epi32(base, vm), vcode);
+                let g = _mm256_i32gather_ps::<4>(cb.as_ptr(), idx);
+                _mm256_storeu_ps(out.as_mut_ptr().add(j), g);
+                j += 8;
+            }
+        }
+        while j < n {
+            out[j] = cb[(lo + j) * m + codes[j] as usize];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "f16c")]
+    pub(super) unsafe fn dot_f16c(a: &[f32], b: &[u16]) -> f32 {
+        let chunks = a.len() / 8;
+        let mut vacc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let i = c * 8;
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let h = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
+            let vb = _mm256_cvtph_ps(h);
+            vacc = _mm256_add_ps(vacc, _mm256_mul_ps(va, vb));
+        }
+        let mut acc = [0.0f32; 8];
+        _mm256_storeu_ps(acc.as_mut_ptr(), vacc);
+        let mut s = acc.iter().sum::<f32>();
+        for i in chunks * 8..a.len() {
+            s += a[i] * f16_to_f32(b[i]);
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2", enable = "f16c")]
+    pub(super) unsafe fn axpy_f16c(y: &mut [f32], a: f32, x: &[u16]) {
+        let n = y.len();
+        let va = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i + 8 <= n {
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            let h = _mm_loadu_si128(x.as_ptr().add(i) as *const __m128i);
+            let vx = _mm256_cvtph_ps(h);
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(vy, _mm256_mul_ps(va, vx)));
+            i += 8;
+        }
+        while i < n {
+            y[i] += a * f16_to_f32(x[i]);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::half::f32_to_f16;
+    use crate::util::Rng;
+
+    /// Run `f` once forced-scalar and once forced-SIMD, restoring `GQ_SIMD`
+    /// routing afterwards. On hardware without the vector paths both runs
+    /// take the scalar route and the comparison is trivially true — the CI
+    /// runners exercise the real thing.
+    fn both_levels<T>(f: impl Fn() -> T) -> (T, T) {
+        force(Some(false));
+        let scalar = f();
+        force(Some(true));
+        let simd = f();
+        force(None);
+        (scalar, simd)
+    }
+
+    #[test]
+    fn dot_and_axpy_are_bit_identical_across_levels() {
+        let mut rng = Rng::new(41);
+        for n in [0usize, 1, 7, 8, 9, 16, 19, 64, 127, 257] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let (ds, dv) = both_levels(|| dot(&a, &b));
+            assert_eq!(ds.to_bits(), dv.to_bits(), "dot n={n}");
+            assert_eq!(ds.to_bits(), dot_scalar(&a, &b).to_bits(), "dot fallback n={n}");
+            let y0: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let (ys, yv) = both_levels(|| {
+                let mut y = y0.clone();
+                axpy(&mut y, 0.37, &a);
+                y
+            });
+            assert_eq!(ys, yv, "axpy n={n}");
+        }
+    }
+
+    #[test]
+    fn max_and_epilogues_are_bit_identical_across_levels() {
+        let mut rng = Rng::new(43);
+        for n in [1usize, 5, 8, 13, 64, 100] {
+            let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let (ms, mv) = both_levels(|| max(&xs));
+            assert_eq!(ms.to_bits(), mv.to_bits(), "max n={n}");
+            let scale: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let zero: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let out0: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let (os, ov) = both_levels(|| {
+                let mut o = out0.clone();
+                scale_affine(&mut o, &scale, &zero, 1.25);
+                o
+            });
+            assert_eq!(os, ov, "scale_affine n={n}");
+            let (ps, pv) = both_levels(|| {
+                let mut o = out0.clone();
+                scale_inplace(&mut o, &scale);
+                o
+            });
+            assert_eq!(ps, pv, "scale_inplace n={n}");
+        }
+        assert_eq!(max(&[]), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn panel_sweeps_are_bit_identical_across_levels() {
+        let mut rng = Rng::new(47);
+        let (rows, w, jp, i0) = (13usize, 24usize, 8usize, 3usize);
+        let tile: Vec<f32> = (0..rows * w).map(|_| rng.normal_f32()).collect();
+        let xs: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..i0 + rows).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let acc0: [[f32; WIDTH]; 4] =
+            std::array::from_fn(|_| std::array::from_fn(|_| rng.normal_f32()));
+        let xrows: [&[f32]; 4] = std::array::from_fn(|r| xs[r].as_slice());
+        let (a4s, a4v) = both_levels(|| {
+            let mut acc = acc0;
+            panel_fma4(&mut acc, &xrows, &tile, w, jp, i0);
+            acc
+        });
+        assert_eq!(a4s, a4v, "panel_fma4");
+        let (a1s, a1v) = both_levels(|| {
+            let mut acc = acc0[0];
+            panel_fma1(&mut acc, &xs[0], &tile, w, jp, i0);
+            acc
+        });
+        assert_eq!(a1s, a1v, "panel_fma1");
+    }
+
+    #[test]
+    fn lut_gather_matches_scalar_indexing() {
+        let mut rng = Rng::new(51);
+        let (m, d_out) = (16usize, 37usize);
+        let cb: Vec<f32> = (0..d_out * m).map(|_| rng.normal_f32()).collect();
+        for (lo, n) in [(0usize, 37usize), (5, 20), (11, 3)] {
+            let codes: Vec<u16> = (0..n).map(|_| rng.below(m) as u16).collect();
+            let (gs, gv) = both_levels(|| {
+                let mut out = vec![0.0f32; n];
+                lut_gather(&cb, m, lo, &codes, &mut out);
+                out
+            });
+            assert_eq!(gs, gv, "lo={lo} n={n}");
+            for (jj, &o) in gs.iter().enumerate() {
+                assert_eq!(o, cb[(lo + jj) * m + codes[jj] as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn f16_readers_widen_exactly_at_every_level() {
+        let mut rng = Rng::new(53);
+        for n in [1usize, 8, 19, 64, 100] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let bh: Vec<u16> = (0..n).map(|_| f32_to_f16(rng.normal_f32())).collect();
+            let bw: Vec<f32> = bh.iter().map(|&h| crate::util::half::f16_to_f32(h)).collect();
+            let (ds, dv) = both_levels(|| dot_f16(&a, &bh));
+            assert_eq!(ds.to_bits(), dv.to_bits(), "dot_f16 n={n}");
+            // Widening is exact, so the f16 dot equals the f32 dot over the
+            // widened operand bit-for-bit.
+            assert_eq!(ds.to_bits(), dot(&a, &bw).to_bits(), "dot_f16 vs widened n={n}");
+            let y0: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let (ys, yv) = both_levels(|| {
+                let mut y = y0.clone();
+                axpy_f16(&mut y, 0.21, &bh);
+                y
+            });
+            assert_eq!(ys, yv, "axpy_f16 n={n}");
+            let mut yw = y0.clone();
+            axpy(&mut yw, 0.21, &bw);
+            assert_eq!(ys, yw, "axpy_f16 vs widened n={n}");
+        }
+    }
+
+    #[test]
+    fn force_overrides_and_restores_routing() {
+        let base = level();
+        force(Some(false));
+        assert_eq!(level(), Level::Scalar);
+        force(Some(true));
+        assert_ne!(level(), Level::Scalar, "detected level is never scalar on x86-64");
+        force(None);
+        assert_eq!(level(), base);
+        assert!(!desc().is_empty());
+    }
+}

@@ -131,6 +131,54 @@ pub fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), St
     Ok(())
 }
 
+/// Map an f32 onto the integer line so that adjacent representable floats
+/// differ by exactly 1 (the standard ordered-bits trick; ±0 map to the
+/// same point, so they count as equal).
+fn ordered(x: f32) -> i64 {
+    let b = x.to_bits();
+    if b & 0x8000_0000 == 0 {
+        b as i64
+    } else {
+        -((b & 0x7fff_ffff) as i64)
+    }
+}
+
+/// ULP distance between two f32s (0 = bit-identical or ±0 pair). The
+/// distance crosses zero correctly: `ulp_distance(-ε, +ε)` is 2, not huge.
+pub fn ulp_distance(a: f32, b: f32) -> u64 {
+    (ordered(a) - ordered(b)).unsigned_abs()
+}
+
+/// Assert elementwise ULP closeness with an absolute floor — the contract
+/// language of the f16-storage tests, where errors are relative by nature
+/// (an f16 rounding step is ~2^-11 relative, i.e. ~2^13 f32 ULPs). A pure
+/// ULP bound explodes when an output element happens to land near zero
+/// (its ULPs shrink with it while the propagated error does not), so an
+/// element also passes when `|x - y| <= atol`; pass `atol = 0.0` for a
+/// strict ULP check. NaNs must match positionally; infinities must be
+/// equal exactly.
+pub fn assert_close_ulp(a: &[f32], b: &[f32], max_ulp: u64, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        if x.is_nan() || y.is_nan() {
+            if x.is_nan() != y.is_nan() {
+                return Err(format!("at {i}: NaN mismatch ({x} vs {y})"));
+            }
+            continue;
+        }
+        if (x - y).abs() <= atol {
+            continue;
+        }
+        let d = ulp_distance(x, y);
+        if d > max_ulp {
+            return Err(format!("at {i}: {x} vs {y} is {d} ulps apart (max {max_ulp})"));
+        }
+    }
+    Ok(())
+}
+
 /// Convenience: fail with a formatted message if `cond` is false.
 pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
     if cond {
@@ -171,6 +219,37 @@ mod tests {
         let (x, n) = count_allocs(|| std::hint::black_box(1u32) + 1);
         assert_eq!(x, 2);
         assert_eq!(n, 0, "allocation-free closure must count zero");
+    }
+
+    #[test]
+    fn ulp_distance_counts_representable_steps() {
+        assert_eq!(ulp_distance(1.0, 1.0), 0);
+        assert_eq!(ulp_distance(0.0, -0.0), 0);
+        assert_eq!(ulp_distance(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+        // Crossing zero: smallest positive and smallest negative subnormal
+        // are two steps apart (through ±0).
+        let tiny = f32::from_bits(1);
+        assert_eq!(ulp_distance(tiny, -tiny), 2);
+        // One f16 rounding step at 1.0 is 2^-11 relative = 2^12 f32 ulps.
+        assert_eq!(ulp_distance(1.0, 1.0 + 2.0f32.powi(-11)), 1 << 12);
+    }
+
+    #[test]
+    fn assert_close_ulp_bounds_and_nan_rules() {
+        assert!(assert_close_ulp(&[1.0, 2.0], &[1.0, 2.0], 0, 0.0).is_ok());
+        let next = f32::from_bits(1.0f32.to_bits() + 3);
+        assert!(assert_close_ulp(&[next], &[1.0], 3, 0.0).is_ok());
+        assert!(assert_close_ulp(&[next], &[1.0], 2, 0.0).is_err());
+        assert!(assert_close_ulp(&[f32::NAN], &[f32::NAN], 0, 0.0).is_ok());
+        assert!(assert_close_ulp(&[f32::NAN], &[1.0], u64::MAX, 1e9).is_err());
+        assert!(assert_close_ulp(&[1.0], &[1.0, 2.0], 0, 0.0).is_err());
+        assert!(assert_close_ulp(&[f32::INFINITY], &[f32::INFINITY], 0, 0.0).is_ok());
+        // The absolute floor rescues near-zero elements whose tiny absolute
+        // error is huge in ULPs...
+        assert!(assert_close_ulp(&[1e-6], &[2e-6], 8, 0.0).is_err());
+        assert!(assert_close_ulp(&[1e-6], &[2e-6], 8, 1e-5).is_ok());
+        // ...but does not loosen well-scaled elements.
+        assert!(assert_close_ulp(&[2.0], &[1.0], 8, 1e-5).is_err());
     }
 
     #[test]

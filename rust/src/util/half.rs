@@ -1,0 +1,191 @@
+//! Software IEEE 754 binary16 ("f16") codec — bit-twiddling converts with
+//! no external crates (the offline environment has no `half`).
+//!
+//! The serving engine stores cold data (KV cache pages, opt-in quantized
+//! code tables) as `u16` half floats to halve memory traffic, widening on
+//! read. Two properties the callers rely on:
+//!
+//! * **Widening is exact**: every f16 value is representable in f32, so
+//!   [`f16_to_f32`] never rounds. Kernels that only *read* f16 data are
+//!   therefore bit-identical across scalar/SIMD paths.
+//! * **Narrowing rounds to nearest, ties to even** ([`f32_to_f16`]) — the
+//!   IEEE default — including gradual underflow to subnormals. Values past
+//!   ±65504 (f16 max) round to ±inf; NaNs stay NaNs.
+
+/// Exact widening conversion (f16 ⊂ f32: never rounds).
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // Subnormal: value = man · 2^-24. Renormalize into f32.
+            let mut e: u32 = 113; // f32 biased exponent of 2^-14
+            let mut m = man;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x03ff) << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13) // ±inf / NaN (payload widened)
+    } else {
+        // Normal: rebias 15 -> 127.
+        sign | ((exp as u32 + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Narrowing conversion with round-to-nearest-even (IEEE default mode).
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf stays inf; NaN keeps a non-zero mantissa (quiet bit forced so
+        // a payload living entirely in the dropped bits cannot turn a NaN
+        // into inf).
+        return if man == 0 { sign | 0x7c00 } else { sign | 0x7e00 | ((man >> 13) as u16 & 0x01ff) };
+    }
+    let e = exp - 127; // unbiased
+    if e >= 16 {
+        return sign | 0x7c00; // above f16 range: round to inf
+    }
+    if e < -25 {
+        return sign; // below half the smallest subnormal: rounds to ±0
+    }
+    let man = man | 0x0080_0000; // implicit leading 1 (f32 subnormals hit e < -25)
+    // Normals drop 13 mantissa bits; subnormals (e in [-25, -15]) drop more
+    // as the value denormalizes. Ties-to-even via the shifted-out remainder;
+    // the rounding carry may legitimately overflow the mantissa into the
+    // exponent field (subnormal -> smallest normal, largest normal -> inf).
+    let shift = if e < -14 { (13 - 14 - e) as u32 } else { 13 };
+    let base = man >> shift;
+    let rem = man & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    let mut h = if e < -14 {
+        base as u16 // subnormal: exponent field 0
+    } else {
+        (((e + 15) as u32) << 10 | (base & 0x03ff)) as u16
+    };
+    if rem > half || (rem == half && h & 1 == 1) {
+        h += 1;
+    }
+    sign | h
+}
+
+/// Widen a packed f16 slice into f32 (exact, elementwise).
+#[inline]
+pub fn widen_slice(src: &[u16], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f16_to_f32(s);
+    }
+}
+
+/// Narrow an f32 slice into packed f16 (round-to-nearest-even, elementwise).
+#[inline]
+pub fn narrow_slice(src: &[f32], dst: &mut [u16]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f32_to_f16(s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widen_then_narrow_roundtrips_every_f16() {
+        // Exhaustive: all 65536 bit patterns. Non-NaN patterns round-trip
+        // exactly; NaNs stay NaNs (payloads may canonicalize).
+        for h in 0..=u16::MAX {
+            let f = f16_to_f32(h);
+            if f.is_nan() {
+                assert_eq!(h & 0x7c00, 0x7c00);
+                assert_ne!(h & 0x03ff, 0);
+                assert!(f16_to_f32(f32_to_f16(f)).is_nan());
+            } else {
+                assert_eq!(f32_to_f16(f), h, "bits {h:#06x} -> {f} did not round-trip");
+            }
+        }
+    }
+
+    #[test]
+    fn widening_known_values() {
+        assert_eq!(f16_to_f32(0x0000), 0.0);
+        assert!(f16_to_f32(0x8000) == 0.0 && f16_to_f32(0x8000).is_sign_negative());
+        assert_eq!(f16_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_to_f32(0xc000), -2.0);
+        assert_eq!(f16_to_f32(0x7bff), 65504.0); // f16 max
+        assert_eq!(f16_to_f32(0x0400), 2.0f32.powi(-14)); // smallest normal
+        assert_eq!(f16_to_f32(0x0001), 2.0f32.powi(-24)); // smallest subnormal
+        assert_eq!(f16_to_f32(0x7c00), f32::INFINITY);
+        assert_eq!(f16_to_f32(0xfc00), f32::NEG_INFINITY);
+        assert!(f16_to_f32(0x7e00).is_nan());
+    }
+
+    #[test]
+    fn narrowing_rounds_to_nearest_even() {
+        // 1 + 2^-11 sits exactly between 1.0 (0x3c00, even) and the next
+        // f16 (0x3c01, odd): ties go to the even mantissa.
+        assert_eq!(f32_to_f16(1.0 + 2.0f32.powi(-11)), 0x3c00);
+        // 1 + 3·2^-11 sits between 0x3c01 and 0x3c02: ties to even -> 0x3c02.
+        assert_eq!(f32_to_f16(1.0 + 3.0 * 2.0f32.powi(-11)), 0x3c02);
+        // Just above/below the tie rounds to the nearer neighbor.
+        assert_eq!(f32_to_f16(1.0 + 2.0f32.powi(-11) + 2.0f32.powi(-18)), 0x3c01);
+        assert_eq!(f32_to_f16(1.0 + 2.0f32.powi(-11) - 2.0f32.powi(-18)), 0x3c00);
+    }
+
+    #[test]
+    fn narrowing_overflow_and_underflow() {
+        // 65520 is the midpoint between f16 max (65504) and 2^16: ties to
+        // even rounds up, i.e. to infinity; anything below stays finite.
+        assert_eq!(f32_to_f16(65520.0), 0x7c00);
+        assert_eq!(f32_to_f16(65519.9), 0x7bff);
+        assert_eq!(f32_to_f16(1e30), 0x7c00);
+        assert_eq!(f32_to_f16(-1e30), 0xfc00);
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7c00);
+        // 2^-25 is the midpoint between 0 and the smallest subnormal: ties
+        // to even rounds to 0; the next representable f32 up rounds to the
+        // subnormal.
+        assert_eq!(f32_to_f16(2.0f32.powi(-25)), 0x0000);
+        assert_eq!(f32_to_f16(2.0f32.powi(-25) + 2.0f32.powi(-48)), 0x0001);
+        assert_eq!(f32_to_f16(-2.0f32.powi(-25)), 0x8000);
+        // Gradual underflow: 2^-24 · 3 is exactly representable.
+        assert_eq!(f32_to_f16(3.0 * 2.0f32.powi(-24)), 0x0003);
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // A NaN whose payload lives entirely in the dropped low bits must
+        // not collapse to infinity.
+        let sneaky = f32::from_bits(0x7f80_0001);
+        assert!(sneaky.is_nan());
+        assert!(f16_to_f32(f32_to_f16(sneaky)).is_nan());
+    }
+
+    #[test]
+    fn slice_helpers_are_elementwise() {
+        let xs = [0.0f32, 1.5, -2.25, 1e-8, 70000.0];
+        let mut h = [0u16; 5];
+        narrow_slice(&xs, &mut h);
+        let mut back = [0f32; 5];
+        widen_slice(&h, &mut back);
+        for (i, (&x, &b)) in xs.iter().zip(&back).enumerate() {
+            assert_eq!(f16_to_f32(f32_to_f16(x)), b, "elem {i}");
+        }
+        assert_eq!(back[0], 0.0);
+        assert_eq!(back[1], 1.5); // exactly representable
+        assert_eq!(back[2], -2.25);
+        assert_eq!(back[4], f32::INFINITY);
+    }
+}

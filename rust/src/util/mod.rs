@@ -4,6 +4,7 @@
 //! are built in-repo (DESIGN.md §1, offline constraints table).
 
 pub mod fmt;
+pub mod half;
 pub mod json;
 pub mod logging;
 pub mod rng;

@@ -146,9 +146,20 @@ fn healthz_metrics_and_routing() {
     let m = get(addr, "/metrics");
     assert_eq!(m.status, 200);
     let m = Json::parse(&m.body).unwrap();
-    for key in ["queued", "active", "completed", "rejected", "ttft_ms", "token_ms"] {
+    let gauges = [
+        "queued",
+        "active",
+        "completed",
+        "rejected",
+        "ttft_ms",
+        "token_ms",
+        "kv_bytes",
+        "kv_allocated_bytes",
+    ];
+    for key in gauges {
         assert!(m.get(key).is_some(), "metrics missing `{key}`: {}", m.encode());
     }
+    assert_eq!(m.get("kv_dtype").unwrap().as_str(), Some("f32"));
 
     assert_eq!(get(addr, "/nope").status, 404);
     assert_eq!(get(addr, "/v1/completions").status, 405, "GET on a POST route");

@@ -1,0 +1,115 @@
+#!/usr/bin/env bash
+# Micro-kernel regression gate: compare a measured BENCH_micro_kernels run
+# against the committed baseline and fail on regressions.
+#
+# usage:
+#   scripts/bench_gate.sh <measured.json> [baseline.json]
+#   scripts/bench_gate.sh --update <measured.json> [baseline.json]
+#
+# Rows are keyed by kernel|format|batch|ctx|threads. Every baseline row is
+# printed expected-vs-measured; only rows marked `"gated": true` in the
+# baseline are ENFORCED. A gated row fails when its measured speedup falls
+# below the row's floor:
+#   floor = min_speedup                         (explicit bootstrap floor)
+#         = speedup * (1 - GQ_BENCH_TOL)        (default tolerance 0.15)
+# The committed baseline is a bootstrap (authored estimates with
+# conservative explicit floors); refresh it from a trusted CI run with
+# --update, which rewrites the measured numbers while preserving each
+# row's gated/min_speedup annotations — rows that then carry no
+# min_speedup are gated at the measured speedup minus the tolerance.
+#
+# Implemented with python3 (present on CI runners and dev boxes alike;
+# the jq in CI only validates the JSON shape).
+set -euo pipefail
+
+UPDATE=0
+if [ "${1:-}" = "--update" ]; then
+  UPDATE=1
+  shift
+fi
+MEASURED="${1:?usage: bench_gate.sh [--update] <measured.json> [baseline.json]}"
+BASELINE="${2:-BENCH_micro_kernels.json}"
+[ -f "$MEASURED" ] || { echo "bench_gate: measured file $MEASURED not found" >&2; exit 2; }
+[ -f "$BASELINE" ] || { echo "bench_gate: baseline file $BASELINE not found" >&2; exit 2; }
+
+GQ_BENCH_TOL="${GQ_BENCH_TOL:-0.15}" UPDATE="$UPDATE" \
+  python3 - "$MEASURED" "$BASELINE" <<'PY'
+import json, os, sys
+
+measured_path, baseline_path = sys.argv[1], sys.argv[2]
+tol = float(os.environ["GQ_BENCH_TOL"])
+update = os.environ["UPDATE"] == "1"
+
+with open(measured_path) as f:
+    measured = json.load(f)
+with open(baseline_path) as f:
+    baseline = json.load(f)
+
+
+def key(row):
+    return "|".join(
+        str(row.get(k, "-")) for k in ("kernel", "format", "batch", "ctx", "threads")
+    )
+
+
+meas = {key(r): r for r in measured.get("rows", [])}
+base = {key(r): r for r in baseline.get("rows", [])}
+
+if update:
+    # Rewrite the baseline from the measured run, carrying each row's
+    # gated/min_speedup annotations over by key. Measured-only rows join
+    # ungated; baseline-only rows (kernels that no longer exist) drop.
+    rows = []
+    for k, r in meas.items():
+        ann = base.get(k, {})
+        out = dict(r)
+        out["gated"] = bool(ann.get("gated", False))
+        if "min_speedup" in ann:
+            out["min_speedup"] = ann["min_speedup"]
+        rows.append(out)
+    doc = dict(measured)
+    doc["rows"] = rows
+    doc["provenance"] = "scripts/bench_gate.sh --update"
+    with open(baseline_path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"bench_gate: rewrote {baseline_path} from {measured_path} ({len(rows)} rows)")
+    sys.exit(0)
+
+failures = 0
+missing = 0
+print(f"bench_gate: {len(base)} baseline rows, tolerance {tol:.2f}")
+print(f"{'':5} {'row':52} {'expected':>9} {'floor':>7} {'measured':>9}")
+for k in sorted(base):
+    b = base[k]
+    gated = bool(b.get("gated", False))
+    floor = b.get("min_speedup", b.get("speedup", 0.0) * (1.0 - tol))
+    m = meas.get(k)
+    tag = "gate" if gated else "info"
+    if m is None:
+        state = "MISSING"
+        got = "-"
+        if gated:
+            failures += 1
+        else:
+            missing += 1
+    else:
+        sp = m.get("speedup", 0.0)
+        got = f"{sp:9.2f}"
+        if gated and sp < floor:
+            state = "FAIL"
+            failures += 1
+        else:
+            state = "ok"
+    print(f"{tag:5} {k:52} {b.get('speedup', 0.0):9.2f} {floor:7.2f} {got:>9} {state}")
+for k in sorted(set(meas) - set(base)):
+    print(f"new   {k:52} {'-':>9} {'-':>7} {meas[k].get('speedup', 0.0):9.2f} "
+          "(not in baseline; add via --update)")
+if missing:
+    print(f"bench_gate: {missing} ungated baseline row(s) absent from the measured run")
+if failures:
+    print(f"bench_gate: FAILED — {failures} gated row(s) regressed past their floor "
+          f"(>{tol:.0%} below baseline unless a min_speedup floor applies)")
+    sys.exit(1)
+print("bench_gate: all gated rows within tolerance")
+PY

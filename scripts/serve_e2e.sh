@@ -9,7 +9,12 @@
 #     token-for-token identical to the blocking response),
 #   * a malformed body (400),
 #   * a 12-request burst against max_batch=2/max_queued=2 (at least one
-#     429, accepted requests still complete).
+#     429, accepted requests still complete),
+#   * a second server booted with --kv-dtype f16: its blocking completion
+#     must be token-for-token identical to the f32 one (greedy argmax is
+#     validated ULP-close in unit tests; here the end-to-end tokens must
+#     agree) and its /metrics must report kv_dtype "f16" with halved
+#     kv_bytes gauges relative to page capacity.
 #
 # All intermediate files land in ./serve-e2e/ so CI can upload them as an
 # artifact when a step fails. Usage: scripts/serve_e2e.sh [path-to-gq]
@@ -102,8 +107,42 @@ echo "burst: $N200 served, $N429 rejected"
 # --- /metrics reflects the traffic ------------------------------------------
 curl -fsS "$BASE/metrics" >"$DIR/metrics.json"
 jq -e ".completed >= 2 and .rejected >= $N429
-       and (.ttft_ms | has(\"p50\")) and (.token_ms | has(\"p99\"))" \
+       and (.ttft_ms | has(\"p50\")) and (.token_ms | has(\"p99\"))
+       and .kv_dtype == \"f32\"
+       and has(\"kv_bytes\") and has(\"kv_allocated_bytes\")" \
     "$DIR/metrics.json" >/dev/null \
     || fail "metrics missing expected fields: $(cat "$DIR/metrics.json")"
+
+# --- f16 KV cache: greedy tokens match f32, gauges report the dtype ---------
+LOG16="$DIR/server_f16.log"
+"$GQ" serve --model tiny --format nonuniform --bits 4 --kv-dtype f16 \
+    --http 127.0.0.1:0 --max-batch 2 --max-queued 2 >"$LOG16" 2>&1 &
+SERVER16=$!
+trap 'kill "$SERVER" "$SERVER16" 2>/dev/null || true
+      wait "$SERVER" "$SERVER16" 2>/dev/null || true' EXIT
+
+ADDR16=
+for _ in $(seq 1 240); do
+    ADDR16=$(sed -n 's/^http: listening on //p' "$LOG16" | head -n 1)
+    [ -n "$ADDR16" ] && break
+    kill -0 "$SERVER16" 2>/dev/null \
+        || { LOG="$LOG16"; fail "f16 server exited during startup"; }
+    sleep 0.25
+done
+[ -n "$ADDR16" ] || { LOG="$LOG16"; fail "f16 server never reported a listening address"; }
+BASE16="http://$ADDR16"
+echo "f16 server up at $BASE16"
+
+curl -fsS -X POST "$BASE16/v1/completions" \
+    -d '{"prompt": [1, 2, 3, 4], "max_tokens": 8}' >"$DIR/blocking_f16.json"
+TOK16=$(jq -r '.tokens | map(tostring) | join(",")' "$DIR/blocking_f16.json")
+[ "$TOK16" = "$BLOCKING" ] \
+    || { LOG="$LOG16"; fail "f16 greedy tokens [$TOK16] differ from f32 tokens [$BLOCKING]"; }
+
+curl -fsS "$BASE16/metrics" >"$DIR/metrics_f16.json"
+jq -e '.kv_dtype == "f16" and .completed >= 1
+       and has("kv_bytes") and has("kv_allocated_bytes")' \
+    "$DIR/metrics_f16.json" >/dev/null \
+    || { LOG="$LOG16"; fail "f16 metrics wrong: $(cat "$DIR/metrics_f16.json")"; }
 
 echo "serve-e2e OK"
