@@ -7,5 +7,7 @@ pub mod quant_cfg;
 pub mod toml;
 
 pub use presets::{preset, BatchConfig, LinearSpec, ModelConfig, ParamSpec, PRESET_NAMES};
-pub use quant_cfg::{KvDtype, PipelineConfig, QuantConfig, QuantMethod, ServeConfig, TrellisVariant};
+pub use quant_cfg::{
+    KvDtype, PipelineConfig, QuantConfig, QuantMethod, RestartPolicy, ServeConfig, TrellisVariant,
+};
 pub use toml::TomlDoc;

@@ -199,6 +199,38 @@ impl KvDtype {
     }
 }
 
+/// What the engine supervisor does with in-flight requests when an
+/// unattributable fault forces an engine restart (`serve::SupervisedEngine`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RestartPolicy {
+    /// Fail every in-flight request with a 500 and restart empty. The
+    /// default: honest (no silent re-execution) and bounded-latency.
+    #[default]
+    FailFast,
+    /// Resubmit in-flight requests to the fresh engine under their
+    /// original ids and deadlines. Greedy decode is deterministic, so
+    /// replayed tokens are bit-identical and the supervisor suppresses
+    /// the ones already streamed.
+    Requeue,
+}
+
+impl RestartPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fail-fast" | "failfast" => Self::FailFast,
+            "requeue" => Self::Requeue,
+            other => bail!("unknown restart policy `{other}` (expected fail-fast or requeue)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::FailFast => "fail-fast",
+            Self::Requeue => "requeue",
+        }
+    }
+}
+
 /// Serving/scheduler knobs for the continuous-batching engine
 /// (`gq serve`, `serve::Scheduler`).
 #[derive(Debug, Clone)]
@@ -225,6 +257,20 @@ pub struct ServeConfig {
     /// KV cache storage dtype (`kv_dtype = "f16"` in TOML,
     /// `gq serve --kv-dtype f16`). Defaults to exact f32.
     pub kv_dtype: KvDtype,
+    /// Default wall-clock budget per request (submit → completion), in
+    /// milliseconds; expired lanes are evicted with partial output and
+    /// `finish_reason = "timeout"`. 0 disables. Per-request `timeout_ms`
+    /// in the HTTP body overrides this.
+    pub request_timeout_ms: u64,
+    /// Maximum time a request may wait in the admission queue before it
+    /// expires un-decoded, in milliseconds. 0 disables.
+    pub queue_timeout_ms: u64,
+    /// What happens to in-flight requests when a fault forces an engine
+    /// restart (`restart_policy = "fail-fast" | "requeue"` in TOML).
+    pub restart_policy: RestartPolicy,
+    /// Engine restarts tolerated before the supervisor declares the
+    /// engine dead (`/healthz` flips to 503 and the server drains).
+    pub max_engine_restarts: usize,
 }
 
 impl Default for ServeConfig {
@@ -236,6 +282,10 @@ impl Default for ServeConfig {
             scalar_prefill: false,
             http_addr: None,
             kv_dtype: KvDtype::F32,
+            request_timeout_ms: 0,
+            queue_timeout_ms: 0,
+            restart_policy: RestartPolicy::FailFast,
+            max_engine_restarts: 3,
         }
     }
 }
@@ -269,6 +319,18 @@ impl ServeConfig {
         }
         if let Some(v) = doc.get_str(section, "kv_dtype") {
             c.kv_dtype = KvDtype::parse(v)?;
+        }
+        if let Some(v) = doc.get_int(section, "request_timeout_ms") {
+            c.request_timeout_ms = v as u64;
+        }
+        if let Some(v) = doc.get_int(section, "queue_timeout_ms") {
+            c.queue_timeout_ms = v as u64;
+        }
+        if let Some(v) = doc.get_str(section, "restart_policy") {
+            c.restart_policy = RestartPolicy::parse(v)?;
+        }
+        if let Some(v) = doc.get_int(section, "max_engine_restarts") {
+            c.max_engine_restarts = v as usize;
         }
         if c.max_batch == 0 {
             bail!("serve.max_batch must be at least 1");
@@ -442,6 +504,30 @@ mod tests {
         let c = ServeConfig::from_toml(&doc, "serve").unwrap();
         assert_eq!(c.kv_dtype, KvDtype::F16);
         let doc = TomlDoc::parse("[serve]\nkv_dtype = \"int8\"\n").unwrap();
+        assert!(ServeConfig::from_toml(&doc, "serve").is_err());
+    }
+
+    #[test]
+    fn restart_policy_and_timeout_knobs_from_toml() {
+        let c = ServeConfig::default();
+        assert_eq!(c.request_timeout_ms, 0, "no deadline by default");
+        assert_eq!(c.queue_timeout_ms, 0);
+        assert_eq!(c.restart_policy, RestartPolicy::FailFast);
+        assert_eq!(c.max_engine_restarts, 3);
+        assert_eq!(RestartPolicy::parse("fail-fast").unwrap(), RestartPolicy::FailFast);
+        assert_eq!(RestartPolicy::parse("requeue").unwrap(), RestartPolicy::Requeue);
+        assert!(RestartPolicy::parse("retry").is_err());
+        assert_eq!(RestartPolicy::Requeue.name(), "requeue");
+        let doc = TomlDoc::parse(
+            "[serve]\nrequest_timeout_ms = 5000\nqueue_timeout_ms = 1000\nrestart_policy = \"requeue\"\nmax_engine_restarts = 1\n",
+        )
+        .unwrap();
+        let c = ServeConfig::from_toml(&doc, "serve").unwrap();
+        assert_eq!(c.request_timeout_ms, 5000);
+        assert_eq!(c.queue_timeout_ms, 1000);
+        assert_eq!(c.restart_policy, RestartPolicy::Requeue);
+        assert_eq!(c.max_engine_restarts, 1);
+        let doc = TomlDoc::parse("[serve]\nrestart_policy = \"retry\"\n").unwrap();
         assert!(ServeConfig::from_toml(&doc, "serve").is_err());
     }
 

@@ -637,4 +637,94 @@ mod tests {
         let jobs: Vec<_> = (0..4).map(|i| move || i).collect();
         assert_eq!(pool.run(jobs), vec![0, 1, 2, 3]);
     }
+
+    #[test]
+    fn indexed_panic_drains_the_batch_and_leaves_the_pool_usable() {
+        // A mid-run panic must not strand the latch or leave stale stubs
+        // in the queue: the run re-raises only after every item has been
+        // claimed, and the next run on the same pool completes normally.
+        let pool = WorkerPool::new(3);
+        for round in 0..5 {
+            let counts: Vec<AtomicUsize> = (0..32).map(|_| AtomicUsize::new(0)).collect();
+            let err = catch_unwind(AssertUnwindSafe(|| {
+                pool.run_indexed(32, 4, &|i| {
+                    counts[i].fetch_add(1, Ordering::Relaxed);
+                    if i == 7 {
+                        panic!("indexed boom round {round}");
+                    }
+                });
+            }));
+            assert!(err.is_err(), "round {round}: panic must propagate");
+            // Every item was still claimed exactly once — the cursor
+            // drains the batch even with one item panicking.
+            for (i, c) in counts.iter().enumerate() {
+                assert_eq!(c.load(Ordering::Relaxed), 1, "round {round}, item {i}");
+            }
+        }
+        // Fresh clean run on the recovered pool.
+        let total = AtomicUsize::new(0);
+        pool.run_indexed(16, 4, &|i| {
+            total.fetch_add(i + 1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), (1..=16).sum::<usize>());
+    }
+
+    #[test]
+    fn unit_job_panic_leaves_the_pool_usable() {
+        let pool = WorkerPool::new(2);
+        let ran = AtomicUsize::new(0);
+        let jobs: Vec<_> = (0..8)
+            .map(|i| {
+                let ran = &ran;
+                move || {
+                    ran.fetch_add(1, Ordering::Relaxed);
+                    if i == 3 {
+                        panic!("unit boom");
+                    }
+                }
+            })
+            .collect();
+        assert!(catch_unwind(AssertUnwindSafe(|| pool.run_units(jobs, 3))).is_err());
+        assert_eq!(ran.load(Ordering::Relaxed), 8, "all unit jobs still ran");
+        // The `job claimed twice` expect inside run_units would fire here
+        // if the panicking batch had left a stub replaying stale slots.
+        let mut data = vec![0usize; 6];
+        let jobs: Vec<_> = data
+            .iter_mut()
+            .enumerate()
+            .map(|(i, slot)| move || *slot = i * 3)
+            .collect();
+        pool.run_units(jobs, 3);
+        assert_eq!(data, vec![0, 3, 6, 9, 12, 15]);
+    }
+
+    #[test]
+    fn nested_fan_out_survives_inner_panics() {
+        // Outer items help-drain the shared queue while their inner runs
+        // complete; an inner panic unwinds through the outer item (both
+        // levels drain their latches) and the pool keeps serving nested
+        // rounds afterwards.
+        let pool = WorkerPool::new(2);
+        for _ in 0..3 {
+            let err = catch_unwind(AssertUnwindSafe(|| {
+                pool.run_indexed(4, 4, &|i| {
+                    pool.run_indexed(3, 3, &|j| {
+                        if i == 2 && j == 1 {
+                            panic!("nested boom");
+                        }
+                    });
+                });
+            }));
+            assert!(err.is_err(), "nested panic must propagate to the outer run");
+            // Recovery probe: a full nested fan-out still completes.
+            let total = AtomicUsize::new(0);
+            pool.run_indexed(4, 4, &|i| {
+                pool.run_indexed(3, 3, &|j| {
+                    total.fetch_add(i * 10 + j, Ordering::Relaxed);
+                });
+            });
+            let want: usize = (0..4).map(|i| (0..3).map(|j| i * 10 + j).sum::<usize>()).sum();
+            assert_eq!(total.load(Ordering::Relaxed), want);
+        }
+    }
 }

@@ -21,7 +21,8 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use guidedquant::cfg::{
-    preset, KvDtype, PipelineConfig, PRESET_NAMES, QuantConfig, QuantMethod, TomlDoc,
+    preset, KvDtype, PipelineConfig, PRESET_NAMES, QuantConfig, QuantMethod, RestartPolicy,
+    TomlDoc,
 };
 use guidedquant::cli::Args;
 use guidedquant::coordinator::Pipeline;
@@ -50,6 +51,15 @@ const USAGE: &str = "usage: gq <pipeline|train|quantize|eval|serve|fisher|info> 
                 chunked batched prefill)
                 --stream (print tokens per request as each engine step
                 generates them instead of waiting for completion)
+                --request-timeout MS (default deadline per request;
+                0 = none; a request's own timeout_ms overrides)
+                --queue-timeout MS (max admission wait before a queued
+                request fails with finish_reason timeout; 0 = none)
+                --restart-policy fail-fast|requeue (what happens to
+                in-flight requests when an engine fault forces a
+                scheduler restart)
+                --max-engine-restarts N (restart budget before the
+                engine is declared dead and /healthz turns 503)
   env:          GQ_THREADS=N caps the shared worker pool (1 = serial)
   train:        --steps N --save FILE
   eval/quantize: --load FILE [--save FILE] --artifact fwd_loss|fwd_loss_qa4kv4|...";
@@ -81,6 +91,13 @@ fn pipeline_config(args: &Args) -> Result<PipelineConfig> {
     if let Some(v) = args.get("kv-dtype") {
         cfg.serve.kv_dtype = KvDtype::parse(v)?;
     }
+    cfg.serve.request_timeout_ms = args.get_u64("request-timeout", cfg.serve.request_timeout_ms)?;
+    cfg.serve.queue_timeout_ms = args.get_u64("queue-timeout", cfg.serve.queue_timeout_ms)?;
+    if let Some(v) = args.get("restart-policy") {
+        cfg.serve.restart_policy = RestartPolicy::parse(v)?;
+    }
+    cfg.serve.max_engine_restarts =
+        args.get_usize("max-engine-restarts", cfg.serve.max_engine_restarts)?;
     cfg.quant = quant_config(args, cfg.quant)?;
     Ok(cfg)
 }
@@ -201,7 +218,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
 /// usage error instead of a silently ignored typo.
 const SERVE_FLAGS: &str = "config model artifacts out train-steps calib-batches eval-batches \
     workers seed max-batch max-queued scalar-prefill kv-dtype method bits groups sparse-frac \
-    format requests gen-tokens prompt-len per-seq stream http load";
+    format requests gen-tokens prompt-len per-seq stream http load request-timeout \
+    queue-timeout restart-policy max-engine-restarts";
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let allowed: Vec<&str> = SERVE_FLAGS.split_whitespace().collect();

@@ -311,6 +311,13 @@ impl BatchScratch {
         &self.logits
     }
 
+    /// Mutable logits access — exists for the fault-injection harness
+    /// (`util::fault::NAN_LOGITS` corrupts a lane's row in place to model
+    /// degenerate numerics); production code never writes logits here.
+    pub fn logits_mut(&mut self) -> &mut Mat {
+        &mut self.logits
+    }
+
     fn ensure(&mut self, b: usize, d: usize, ff: usize, vocab: usize) {
         // Reshape in place, keeping each buffer's capacity: the chunked
         // prefill shrinks the batch width as prompts end and grows it back

@@ -1,36 +1,55 @@
 //! Dependency-free HTTP/1.1 front-end for the continuous-batching engine.
 //!
-//! `gq serve --http <addr>` turns the [`Scheduler`] into a network service
+//! `gq serve --http <addr>` turns the scheduler into a network service
 //! without hyper/serde (offline environment): request parsing is
 //! hand-rolled over [`std::net::TcpListener`] and bodies use the in-repo
 //! [`crate::util::json`] codec.
 //!
 //! ## Architecture
 //!
-//! One **engine thread** owns the [`Scheduler`] and is the only thread that
-//! touches the model. Connection threads never decode tokens; they parse
-//! HTTP, hand a [`ToEngine::Submit`] message over an mpsc channel, and get
-//! back a per-request event channel. The engine loop alternates between
-//! draining the submission channel (non-blocking while lanes are active,
-//! blocking-parked when idle) and running [`Scheduler::step`]; each step's
-//! tokens fan out through the per-request channels
-//! ([`Scheduler::step_tokens`] is the streaming drain), so HTTP consumers
+//! One **engine thread** owns a [`SupervisedEngine`] (the scheduler under
+//! `catch_unwind` supervision) and is the only thread that touches the
+//! model. Connection threads never decode tokens; they parse HTTP, hand a
+//! [`ToEngine::Submit`] message over an mpsc channel, and get back a
+//! per-request event channel. The engine loop alternates between draining
+//! the submission channel (non-blocking while lanes are active,
+//! blocking-parked when idle) and running a supervised step; each step's
+//! tokens fan out through the per-request channels, so HTTP consumers
 //! observe exactly the greedy tokens the batch engine generated —
 //! bit-identical to [`super::engine::generate_scheduled`] regardless of
 //! what other requests share the batch.
 //!
+//! ## Failure model
+//!
+//! An engine-step panic no longer kills the server: the supervisor
+//! attributes the fault (see [`super::supervisor`]) — the poisoned request
+//! answers **500** via [`TokenEvent::Failed`], everything else keeps
+//! decoding, and unattributable faults restart the engine under a bounded
+//! budget. Past the budget `/healthz` flips to **503 engine dead** and the
+//! server drains. Requests carry deadlines (`timeout_ms` body field,
+//! `ServeConfig::request_timeout_ms`), answered with partial output and
+//! `"finish_reason": "timeout"`. Connection threads detect client
+//! disconnect (failed SSE chunk write, or a half-closed socket probed
+//! between blocking polls) and send [`ToEngine::Cancel`], so an abandoned
+//! lane frees its KV pages instead of decoding to completion. The
+//! `GQ_FAULT` env (`util::fault`) injects deterministic step panics, NaN
+//! logits, engine stalls, and slow socket writes for the chaos suite.
+//!
 //! ## Endpoints
 //!
 //! * `POST /v1/completions` — body `{"prompt": [u32 token ids],
-//!   "max_tokens": n, "stream": bool}`. Non-streaming responses return the
-//!   full token list plus per-request metrics; `"stream": true` switches to
-//!   chunked transfer encoding carrying SSE events (`data: {"id":..,
-//!   "token":..}` per generated token, then a `"done":true` summary event,
-//!   then the `data: [DONE]` terminator).
-//! * `GET /metrics` — queue depth, active lanes, completion/rejection
-//!   counters, and TTFT / per-token / queue-wait percentiles over a sliding
-//!   sample window.
-//! * `GET /healthz` — liveness plus the served model's shape.
+//!   "max_tokens": n, "stream": bool, "timeout_ms": n}`. Non-streaming
+//!   responses return the full token list plus per-request metrics;
+//!   `"stream": true` switches to chunked transfer encoding carrying SSE
+//!   events (`data: {"id":.., "token":..}` per generated token, then a
+//!   `"done":true` summary event, then the `data: [DONE]` terminator).
+//! * `GET /metrics` — queue depth, active lanes,
+//!   completion/rejection/cancellation/timeout/failure counters, engine
+//!   restarts, and TTFT / per-token / queue-wait percentiles over a
+//!   sliding sample window.
+//! * `GET /healthz` — truthful engine liveness (200 `ok` while the engine
+//!   thread serves, 503 `engine dead` once the restart budget is spent),
+//!   restart count, and the served model's shape.
 //!
 //! ## Admission control as HTTP semantics
 //!
@@ -46,7 +65,7 @@ use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -56,9 +75,10 @@ use anyhow::{bail, Context, Result};
 use crate::cfg::ServeConfig;
 use crate::model::NativeModel;
 use crate::util::json::Json;
-use crate::util::percentile;
+use crate::util::{fault, percentile};
 
-use super::scheduler::{FinishedRequest, Scheduler};
+use super::scheduler::{FinishReason, FinishedRequest};
+use super::supervisor::SupervisedEngine;
 
 /// Request bodies beyond this are rejected before reading.
 const MAX_BODY_BYTES: usize = 1 << 20;
@@ -84,7 +104,15 @@ const IO_TIMEOUT: Duration = Duration::from_secs(60);
 
 /// Connection threads → engine thread.
 enum ToEngine {
-    Submit { prompt: Vec<u32>, gen_tokens: usize, reply: Sender<SubmitOutcome> },
+    Submit {
+        prompt: Vec<u32>,
+        gen_tokens: usize,
+        timeout_ms: Option<u64>,
+        reply: Sender<SubmitOutcome>,
+    },
+    /// Client disconnected (or explicitly aborted): evict the request and
+    /// free its KV pages.
+    Cancel { id: u64 },
     Shutdown,
 }
 
@@ -94,12 +122,15 @@ enum SubmitOutcome {
     QueueFull(String),
     Invalid(String),
     ShuttingDown,
+    EngineDead,
 }
 
 /// Engine thread → a request's streaming consumer.
 enum TokenEvent {
     Token(u32),
     Done(FinishedRequest),
+    /// The request was killed by an engine fault; maps to HTTP 500.
+    Failed(String),
 }
 
 #[derive(Default, Clone)]
@@ -108,6 +139,14 @@ struct Metrics {
     active: usize,
     completed: u64,
     rejected: u64,
+    /// Requests evicted by client disconnect or explicit cancel.
+    cancelled: u64,
+    /// Requests evicted at a deadline (queue or decode).
+    timed_out: u64,
+    /// Requests killed by an attributed engine fault.
+    failed: u64,
+    /// Supervisor engine restarts (unattributable faults).
+    engine_restarts: u64,
     /// Bytes of K/V currently stored across active lanes (gauge).
     kv_bytes: usize,
     /// Bytes of KV page storage held (active lanes + pooled arena pages).
@@ -128,6 +167,9 @@ fn push_capped(v: &mut Vec<f64>, x: f64) {
 /// State shared by the engine, accept, and connection threads.
 struct Shared {
     shutdown: AtomicBool,
+    /// Restart budget exhausted: `/healthz` answers 503 and the engine
+    /// loop has exited (new submissions fail as "engine stopped").
+    engine_dead: AtomicBool,
     /// Live connection threads (bounded by [`MAX_CONN_THREADS`]).
     conns: AtomicUsize,
     model_name: String,
@@ -140,8 +182,12 @@ struct Shared {
 
 impl Shared {
     fn health_json(&self) -> Json {
+        let dead = self.engine_dead.load(Ordering::SeqCst);
+        let restarts = self.metrics.lock().unwrap().engine_restarts;
         Json::object()
-            .with("status", "ok")
+            .with("status", if dead { "engine dead" } else { "ok" })
+            .with("engine_alive", !dead)
+            .with("engine_restarts", restarts)
             .with("model", self.model_name.as_str())
             .with("vocab", self.vocab)
     }
@@ -162,6 +208,10 @@ impl Shared {
             .with("active", m.active)
             .with("completed", m.completed)
             .with("rejected", m.rejected)
+            .with("cancelled", m.cancelled)
+            .with("timed_out", m.timed_out)
+            .with("failed", m.failed)
+            .with("engine_restarts", m.engine_restarts)
             .with("connections", self.conns.load(Ordering::SeqCst))
             .with("max_batch", self.max_batch)
             .with("max_queued", self.max_queued)
@@ -193,6 +243,7 @@ impl HttpServer {
         let addr = listener.local_addr().context("reading bound address")?;
         let shared = Arc::new(Shared {
             shutdown: AtomicBool::new(false),
+            engine_dead: AtomicBool::new(false),
             conns: AtomicUsize::new(0),
             model_name: model.cfg.name.clone(),
             vocab: model.cfg.vocab,
@@ -262,23 +313,33 @@ fn engine_loop(
     rx: Receiver<ToEngine>,
     shared: Arc<Shared>,
 ) {
-    let mut sched = Scheduler::new(&model, cfg);
+    let mut engine = SupervisedEngine::new(&model, cfg);
     let mut sinks: HashMap<u64, Sender<TokenEvent>> = HashMap::new();
+    // Reused scratch for ids whose consumers hung up mid-stream.
+    let mut hangups: Vec<u64> = Vec::new();
     let mut draining = false;
     loop {
-        if !sched.has_work() {
+        if !engine.alive() {
+            // Restart budget exhausted. Flip /healthz to 503 and exit: the
+            // dropped receiver turns every later submit into a 503 at the
+            // connection thread.
+            shared.engine_dead.store(true, Ordering::SeqCst);
+            publish_gauges(&shared, &engine);
+            break;
+        }
+        if !engine.has_work() {
             if draining {
                 break;
             }
             // Idle: park on the channel instead of spinning.
             match rx.recv() {
-                Ok(msg) => handle_msg(msg, &mut sched, &mut sinks, &shared, &mut draining),
+                Ok(msg) => handle_msg(msg, &mut engine, &mut sinks, &shared, &mut draining),
                 Err(_) => break, // server dropped without shutdown()
             }
         }
         loop {
             match rx.try_recv() {
-                Ok(msg) => handle_msg(msg, &mut sched, &mut sinks, &shared, &mut draining),
+                Ok(msg) => handle_msg(msg, &mut engine, &mut sinks, &shared, &mut draining),
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
                     draining = true;
@@ -286,69 +347,101 @@ fn engine_loop(
                 }
             }
         }
-        if !sched.has_work() {
-            publish_gauges(&shared, &sched);
+        if !engine.has_work() {
+            publish_gauges(&shared, &engine);
             continue;
         }
-        let finished = sched.step();
-        for &(id, tok) in sched.step_tokens() {
+        let finished = engine.step();
+        hangups.clear();
+        for &(id, tok) in engine.step_tokens() {
             if let Some(sink) = sinks.get(&id) {
-                // A send error means the consumer hung up mid-stream; the
-                // request still runs to completion server-side.
-                let _ = sink.send(TokenEvent::Token(tok));
-            }
-        }
-        publish_gauges(&shared, &sched);
-        if !finished.is_empty() {
-            let mut m = shared.metrics.lock().unwrap();
-            for fr in &finished {
-                m.completed += 1;
-                push_capped(&mut m.ttft_ms, fr.metrics.ttft_ms);
-                push_capped(&mut m.queue_wait_ms, fr.metrics.queue_wait_ms);
-                for &t in &fr.metrics.token_ms {
-                    push_capped(&mut m.token_ms, t);
+                // A send error means the streaming consumer hung up:
+                // cancel the request below so its lane stops decoding and
+                // its KV pages return to the arena.
+                if sink.send(TokenEvent::Token(tok)).is_err() {
+                    hangups.push(id);
                 }
             }
         }
+        for &id in &hangups {
+            if engine.cancel(id).is_some() {
+                shared.metrics.lock().unwrap().cancelled += 1;
+            }
+            sinks.remove(&id);
+        }
+        publish_gauges(&shared, &engine);
+        if !finished.is_empty() {
+            let mut m = shared.metrics.lock().unwrap();
+            for fr in &finished {
+                match fr.finish {
+                    FinishReason::Length => {
+                        m.completed += 1;
+                        push_capped(&mut m.ttft_ms, fr.metrics.ttft_ms);
+                        push_capped(&mut m.queue_wait_ms, fr.metrics.queue_wait_ms);
+                        for &t in &fr.metrics.token_ms {
+                            push_capped(&mut m.token_ms, t);
+                        }
+                    }
+                    FinishReason::Timeout => m.timed_out += 1,
+                    FinishReason::Cancelled => m.cancelled += 1,
+                    FinishReason::Failed => m.failed += 1,
+                }
+            }
+            m.engine_restarts = engine.restarts() as u64;
+        }
         for fr in finished {
             if let Some(sink) = sinks.remove(&fr.id) {
-                let _ = sink.send(TokenEvent::Done(fr));
+                let _ = match fr.finish {
+                    FinishReason::Failed => sink.send(TokenEvent::Failed(
+                        "engine fault while serving this request".to_string(),
+                    )),
+                    _ => sink.send(TokenEvent::Done(fr)),
+                };
             }
         }
     }
 }
 
-fn publish_gauges(shared: &Shared, sched: &Scheduler) {
-    let kv_bytes = sched.kv_bytes();
-    let kv_allocated = sched.kv_allocated_bytes();
+fn publish_gauges(shared: &Shared, engine: &SupervisedEngine<'_>) {
+    let kv_bytes = engine.kv_bytes();
+    let kv_allocated = engine.kv_allocated_bytes();
     let mut m = shared.metrics.lock().unwrap();
-    m.queued = sched.queued();
-    m.active = sched.active();
+    m.queued = engine.queued();
+    m.active = engine.active();
     m.kv_bytes = kv_bytes;
     m.kv_allocated_bytes = kv_allocated;
+    m.engine_restarts = engine.restarts() as u64;
 }
 
 fn handle_msg(
     msg: ToEngine,
-    sched: &mut Scheduler,
+    engine: &mut SupervisedEngine<'_>,
     sinks: &mut HashMap<u64, Sender<TokenEvent>>,
     shared: &Shared,
     draining: &mut bool,
 ) {
     match msg {
         ToEngine::Shutdown => *draining = true,
-        ToEngine::Submit { prompt, gen_tokens, reply } => {
+        ToEngine::Cancel { id } => {
+            if engine.cancel(id).is_some() {
+                shared.metrics.lock().unwrap().cancelled += 1;
+            }
+            sinks.remove(&id);
+        }
+        ToEngine::Submit { prompt, gen_tokens, timeout_ms, reply } => {
             if *draining {
                 let _ = reply.send(SubmitOutcome::ShuttingDown);
-            } else if sched.queued() >= sched.cfg.max_queued {
+            } else if !engine.alive() {
+                let _ = reply.send(SubmitOutcome::EngineDead);
+            } else if engine.queued() >= shared.max_queued {
                 shared.metrics.lock().unwrap().rejected += 1;
                 let _ = reply.send(SubmitOutcome::QueueFull(format!(
                     "admission queue full ({} waiting, max_queued = {})",
-                    sched.queued(),
-                    sched.cfg.max_queued
+                    engine.queued(),
+                    shared.max_queued
                 )));
             } else {
-                match sched.submit(&prompt, gen_tokens) {
+                match engine.submit(&prompt, gen_tokens, timeout_ms) {
                     Ok(id) => {
                         let (etx, erx) = mpsc::channel();
                         sinks.insert(id, etx);
@@ -508,6 +601,9 @@ fn write_error(w: &mut impl Write, status: u16, reason: &str, msg: &str) -> std:
 }
 
 fn write_chunk(w: &mut impl Write, payload: &str) -> std::io::Result<()> {
+    // Chaos site: one slow SSE chunk write (a stalled client/socket); the
+    // engine thread must keep stepping other lanes undisturbed.
+    fault::maybe_stall(fault::SLOW_WRITE, Duration::from_millis(1000));
     write!(w, "{:x}\r\n", payload.len())?;
     w.write_all(payload.as_bytes())?;
     w.write_all(b"\r\n")?;
@@ -534,7 +630,14 @@ fn handle_conn(stream: TcpStream, tx: Sender<ToEngine>, shared: Arc<Shared>) {
         }
     };
     let _ = match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => write_json(&mut writer, 200, "OK", &shared.health_json()),
+        ("GET", "/healthz") => {
+            let doc = shared.health_json();
+            if shared.engine_dead.load(Ordering::SeqCst) {
+                write_json(&mut writer, 503, "Service Unavailable", &doc)
+            } else {
+                write_json(&mut writer, 200, "OK", &doc)
+            }
+        }
         ("GET", "/metrics") => write_json(&mut writer, 200, "OK", &shared.metrics_json()),
         ("POST", "/v1/completions") => handle_completion(&mut writer, &req.body, &tx),
         (_, "/healthz") | (_, "/metrics") | (_, "/v1/completions") => write_error(
@@ -556,7 +659,14 @@ struct CompletionReq {
     prompt: Vec<u32>,
     max_tokens: usize,
     stream: bool,
+    /// Per-request wall-clock budget; overrides the server's
+    /// `request_timeout_ms` default.
+    timeout_ms: Option<u64>,
 }
+
+/// Longest accepted per-request `timeout_ms` (24h) — anything larger is a
+/// client bug, not a deadline.
+const MAX_TIMEOUT_MS: u64 = 86_400_000;
 
 fn parse_completion(body: &[u8]) -> Result<CompletionReq> {
     let text = std::str::from_utf8(body).context("body is not UTF-8")?;
@@ -587,7 +697,20 @@ fn parse_completion(body: &[u8]) -> Result<CompletionReq> {
         None => false,
         Some(s) => s.as_bool().context("`stream` must be a boolean")?,
     };
-    Ok(CompletionReq { prompt: toks, max_tokens, stream })
+    let timeout_ms = match doc.get("timeout_ms") {
+        None => None,
+        Some(t) => {
+            let n = t.as_u64().context("`timeout_ms` must be a positive integer")?;
+            if n == 0 {
+                bail!("`timeout_ms` must be at least 1 (omit it for no deadline)");
+            }
+            if n > MAX_TIMEOUT_MS {
+                bail!("timeout_ms {n} exceeds the cap {MAX_TIMEOUT_MS} (24h)");
+            }
+            Some(n)
+        }
+    };
+    Ok(CompletionReq { prompt: toks, max_tokens, stream, timeout_ms })
 }
 
 fn request_metrics_json(fr: &FinishedRequest) -> Json {
@@ -600,7 +723,7 @@ fn request_metrics_json(fr: &FinishedRequest) -> Json {
 }
 
 fn handle_completion(
-    w: &mut impl Write,
+    w: &mut TcpStream,
     body: &[u8],
     tx: &Sender<ToEngine>,
 ) -> std::io::Result<()> {
@@ -609,7 +732,12 @@ fn handle_completion(
         Err(e) => return write_error(w, 400, "Bad Request", &e.to_string()),
     };
     let (rtx, rrx) = mpsc::channel();
-    let submit = ToEngine::Submit { prompt: req.prompt, gen_tokens: req.max_tokens, reply: rtx };
+    let submit = ToEngine::Submit {
+        prompt: req.prompt,
+        gen_tokens: req.max_tokens,
+        timeout_ms: req.timeout_ms,
+        reply: rtx,
+    };
     if tx.send(submit).is_err() {
         return write_error(w, 503, "Service Unavailable", "engine stopped");
     }
@@ -625,23 +753,52 @@ fn handle_completion(
         SubmitOutcome::ShuttingDown => {
             write_error(w, 503, "Service Unavailable", "server is shutting down")
         }
+        SubmitOutcome::EngineDead => {
+            write_error(w, 503, "Service Unavailable", "engine dead: restart budget exhausted")
+        }
         SubmitOutcome::Accepted { id, events } => {
             if req.stream {
-                stream_completion(w, id, events)
+                stream_completion(w, id, events, tx)
             } else {
-                blocking_completion(w, id, events)
+                blocking_completion(w, id, events, tx)
             }
         }
     }
 }
 
+/// Poll interval between client-liveness probes while a blocking
+/// completion waits for tokens.
+const DISCONNECT_POLL: Duration = Duration::from_millis(250);
+
+/// Has the client half-closed (or reset) the connection? A non-blocking
+/// `peek` sees EOF (`Ok(0)`) when the peer sent FIN — a blocking consumer
+/// that went away — while `WouldBlock` just means "no bytes, still open".
+/// Pipelined request bytes (`Ok(n)`) also count as alive; completions
+/// close the connection anyway.
+fn client_gone(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let gone = match stream.peek(&mut [0u8; 1]) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    if stream.set_nonblocking(false).is_err() {
+        return true;
+    }
+    gone
+}
+
 fn blocking_completion(
-    w: &mut impl Write,
+    w: &mut TcpStream,
     id: u64,
     events: Receiver<TokenEvent>,
+    tx: &Sender<ToEngine>,
 ) -> std::io::Result<()> {
     loop {
-        match events.recv() {
+        match events.recv_timeout(DISCONNECT_POLL) {
             Ok(TokenEvent::Token(_)) => continue,
             Ok(TokenEvent::Done(fr)) => {
                 let toks: Vec<Json> = fr.tokens.iter().map(|&t| Json::from(t)).collect();
@@ -649,11 +806,22 @@ fn blocking_completion(
                     .with("id", id)
                     .with("tokens", toks)
                     .with("n_tokens", fr.tokens.len())
-                    .with("finish_reason", "length")
+                    .with("finish_reason", fr.finish.name())
                     .with("metrics", request_metrics_json(&fr));
                 return write_json(w, 200, "OK", &doc);
             }
-            Err(_) => {
+            Ok(TokenEvent::Failed(msg)) => {
+                return write_error(w, 500, "Internal Server Error", &msg);
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                // No tokens yet: probe the socket so an abandoned request
+                // frees its lane instead of decoding to completion.
+                if client_gone(w) {
+                    let _ = tx.send(ToEngine::Cancel { id });
+                    return Ok(());
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
                 return write_error(w, 500, "Internal Server Error", "engine dropped request");
             }
         }
@@ -661,9 +829,26 @@ fn blocking_completion(
 }
 
 fn stream_completion(
-    w: &mut impl Write,
+    w: &mut TcpStream,
     id: u64,
     events: Receiver<TokenEvent>,
+    tx: &Sender<ToEngine>,
+) -> std::io::Result<()> {
+    let res = stream_completion_inner(w, id, &events);
+    if res.is_err() {
+        // A failed chunk write means the client hung up mid-stream: evict
+        // the request so its lane and KV pages are reclaimed. (The engine
+        // also detects this via its own failed sends; both paths are
+        // idempotent.)
+        let _ = tx.send(ToEngine::Cancel { id });
+    }
+    res
+}
+
+fn stream_completion_inner(
+    w: &mut TcpStream,
+    id: u64,
+    events: &Receiver<TokenEvent>,
 ) -> std::io::Result<()> {
     write!(
         w,
@@ -682,10 +867,17 @@ fn stream_completion(
                     .with("id", id)
                     .with("done", true)
                     .with("n_tokens", fr.tokens.len())
-                    .with("finish_reason", "length")
+                    .with("finish_reason", fr.finish.name())
                     .with("metrics", request_metrics_json(&fr));
                 write_chunk(w, &format!("data: {}\n\n", done.encode()))?;
                 write_chunk(w, "data: [DONE]\n\n")?;
+                return finish_chunks(w);
+            }
+            Ok(TokenEvent::Failed(msg)) => {
+                // Mid-stream engine fault: emit an error event and end the
+                // stream WITHOUT [DONE] so the client sees truncation.
+                let ev = Json::object().with("id", id).with("error", msg.as_str());
+                write_chunk(w, &format!("data: {}\n\n", ev.encode()))?;
                 return finish_chunks(w);
             }
             // Engine exited without finishing (shutdown drains lanes first,
@@ -786,6 +978,22 @@ mod tests {
             &br#"{"prompt": [1], "max_tokens": -2}"#[..],
             &br#"{"prompt": [1], "max_tokens": 99999999}"#[..],
             &br#"{"prompt": [1], "stream": 1}"#[..],
+        ] {
+            assert!(parse_completion(bad).is_err(), "{:?}", std::str::from_utf8(bad));
+        }
+    }
+
+    #[test]
+    fn completion_timeout_ms_validation() {
+        let none = parse_completion(br#"{"prompt": [1]}"#).unwrap();
+        assert_eq!(none.timeout_ms, None, "no deadline unless asked");
+        let some = parse_completion(br#"{"prompt": [1], "timeout_ms": 1500}"#).unwrap();
+        assert_eq!(some.timeout_ms, Some(1500));
+        for bad in [
+            &br#"{"prompt": [1], "timeout_ms": 0}"#[..],
+            &br#"{"prompt": [1], "timeout_ms": -5}"#[..],
+            &br#"{"prompt": [1], "timeout_ms": "1s"}"#[..],
+            &br#"{"prompt": [1], "timeout_ms": 86400001}"#[..],
         ] {
             assert!(parse_completion(bad).is_err(), "{:?}", std::str::from_utf8(bad));
         }

@@ -25,6 +25,14 @@
 //!   metrics (queue wait, time-to-first-token, per-token latency
 //!   percentiles), and a streaming drain (`step_tokens`) exposing every
 //!   step's tokens as they are generated.
+//! * **[`supervisor::SupervisedEngine`]** — fault isolation around the
+//!   scheduler: each step phase runs under `catch_unwind`, panics are
+//!   attributed (admission fault → fail the mid-prefill batch; single-lane
+//!   decode fault → fail that request; unattributable fault → engine
+//!   restart with a requeue-or-fail-fast policy), restarts are budgeted,
+//!   and per-request deadlines/cancellation evict lanes through the
+//!   splicing path so KV pages always return to the arena. Chaos scenarios
+//!   are driven by the deterministic `util::fault` injection sites.
 //! * **[`engine`]** — `generate_batch` (compatibility wrapper over the
 //!   scheduler, bit-identical greedy outputs), `generate_scheduled` (with
 //!   explicit knobs), and `generate_per_sequence` (the original
@@ -45,6 +53,7 @@ pub mod builder;
 pub mod engine;
 pub mod http;
 pub mod scheduler;
+pub mod supervisor;
 
 pub use builder::{build_serving_model, ServeFormat};
 pub use engine::{
@@ -52,4 +61,7 @@ pub use engine::{
     random_prompts, ServeStats,
 };
 pub use http::HttpServer;
-pub use scheduler::{greedy_argmax, FinishedRequest, RequestMetrics, Scheduler};
+pub use scheduler::{
+    greedy_argmax, FinishReason, FinishedRequest, RequestMetrics, Scheduler, SubmitOpts,
+};
+pub use supervisor::SupervisedEngine;

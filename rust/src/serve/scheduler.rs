@@ -25,25 +25,37 @@
 //! baseline.
 
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::cfg::ServeConfig;
 use crate::coordinator::run_jobs;
 use crate::model::{BatchScratch, DecodeState, KvArena, NativeModel};
-use crate::util::percentile;
+use crate::util::{fault, percentile};
 
-/// Greedy sampling: index of the max logit. Ties resolve to the highest
-/// index (`Iterator::max_by` keeps the last maximum) — the same rule the
-/// per-sequence engine has always used, so both paths pick identical tokens.
+/// Greedy sampling: index of the max logit under IEEE total order
+/// (`f32::total_cmp`), so degenerate logits — NaN, ±inf — still pick a
+/// deterministic token instead of panicking the engine (`partial_cmp`
+/// on NaN used to `unwrap` a `None`). Ties resolve to the highest index
+/// (`Iterator::max_by` keeps the last maximum) — the same rule the
+/// per-sequence engine has always used, so both paths pick identical
+/// tokens. Positive NaN sorts above +inf, so any positively-signed NaN in
+/// the row wins the argmax — which is what lets the decode step *detect*
+/// a poisoned row and fail that lane instead of serving garbage.
 pub fn greedy_argmax(logits: &[f32]) -> u32 {
     logits
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i as u32)
         .unwrap()
+}
+
+/// Millisecond knob → `Duration`; 0 means "disabled" everywhere a timeout
+/// knob appears ([`ServeConfig::request_timeout_ms`] and friends).
+fn ms_duration(ms: u64) -> Option<Duration> {
+    (ms > 0).then(|| Duration::from_millis(ms))
 }
 
 /// Per-request service metrics (milliseconds).
@@ -62,12 +74,75 @@ pub struct RequestMetrics {
     pub token_ms: Vec<f64>,
 }
 
-/// A completed request: generated tokens + metrics.
+impl RequestMetrics {
+    /// All-zero metrics, for requests that finished without decoding
+    /// (expired in the queue, failed by an engine fault).
+    pub fn empty() -> Self {
+        RequestMetrics {
+            queue_wait_ms: 0.0,
+            ttft_ms: 0.0,
+            p50_ms: 0.0,
+            p99_ms: 0.0,
+            kv_bytes: 0,
+            token_ms: Vec::new(),
+        }
+    }
+}
+
+/// Why a request left the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated its full `max_tokens` budget (the normal completion).
+    Length,
+    /// Evicted at its deadline (`request_timeout_ms` / per-request
+    /// `timeout_ms` / `queue_timeout_ms`) with whatever it had generated.
+    Timeout,
+    /// Cancelled — client disconnect or an explicit
+    /// [`Scheduler::cancel`]; partial output is returned.
+    Cancelled,
+    /// Killed by an engine fault attributed to this request (panic in its
+    /// single-lane step, panic mid-prefill, non-finite logits, or a
+    /// fail-fast engine restart). HTTP maps this to a 500.
+    Failed,
+}
+
+impl FinishReason {
+    /// Wire name (`finish_reason` in HTTP responses).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Length => "length",
+            Self::Timeout => "timeout",
+            Self::Cancelled => "cancelled",
+            Self::Failed => "error",
+        }
+    }
+}
+
+/// A finished request: generated tokens (possibly partial), metrics, and
+/// why it finished.
 #[derive(Debug, Clone)]
 pub struct FinishedRequest {
     pub id: u64,
     pub tokens: Vec<u32>,
     pub metrics: RequestMetrics,
+    pub finish: FinishReason,
+}
+
+/// Per-request knobs for [`Scheduler::submit_opts`].
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SubmitOpts {
+    /// Overall wall-clock budget (submit → completion). `None` falls back
+    /// to [`ServeConfig::request_timeout_ms`] (0 there = no deadline).
+    pub timeout: Option<Duration>,
+    /// Absolute deadline override — takes precedence over `timeout`. The
+    /// supervisor's requeue path uses this so a request's original
+    /// deadline survives an engine restart.
+    pub deadline: Option<Instant>,
+    /// Explicit request id (supervisor requeue after a restart: the
+    /// consumer already holds this id). Explicit-id submissions bypass the
+    /// queue-full check — they were admitted once already — and bump
+    /// `next_id` past the id so fresh submissions never collide.
+    pub id: Option<u64>,
 }
 
 struct Queued {
@@ -75,6 +150,10 @@ struct Queued {
     prompt: Vec<u32>,
     gen_tokens: usize,
     submitted: f64,
+    /// Overall deadline (absolute); checked while queued and per-lane.
+    deadline: Option<Instant>,
+    /// Admission deadline ([`ServeConfig::queue_timeout_ms`]).
+    queue_deadline: Option<Instant>,
 }
 
 struct Lane {
@@ -87,6 +166,11 @@ struct Lane {
     admitted: f64,
     first_token: Option<f64>,
     token_ms: Vec<f64>,
+    /// Overall deadline; expired lanes are evicted with partial output.
+    deadline: Option<Instant>,
+    /// The last step produced non-finite logits for this lane; evict it
+    /// with [`FinishReason::Failed`] instead of serving a garbage token.
+    poisoned: bool,
 }
 
 /// The continuous-batching engine: admission queue + decode lane slab.
@@ -191,6 +275,16 @@ impl<'m> Scheduler<'m> {
     /// one token — the old engine silently decoded token 0 from zeroed
     /// logits), on out-of-vocab tokens, and when the queue is full.
     pub fn submit(&mut self, prompt: &[u32], gen_tokens: usize) -> Result<u64> {
+        self.submit_opts(prompt, gen_tokens, SubmitOpts::default())
+    }
+
+    /// [`Scheduler::submit`] with per-request deadline/id knobs.
+    pub fn submit_opts(
+        &mut self,
+        prompt: &[u32],
+        gen_tokens: usize,
+        opts: SubmitOpts,
+    ) -> Result<u64> {
         if prompt.is_empty() {
             bail!("empty prompt: prefill needs at least one (BOS) token");
         }
@@ -198,22 +292,55 @@ impl<'m> Scheduler<'m> {
         if let Some(&t) = prompt.iter().find(|&&t| t as usize >= vocab) {
             bail!("prompt token {t} out of range for vocab {vocab}");
         }
-        if self.queue.len() >= self.cfg.max_queued {
+        if opts.id.is_none() && self.queue.len() >= self.cfg.max_queued {
             bail!(
                 "admission queue full ({} waiting, max_queued = {})",
                 self.queue.len(),
                 self.cfg.max_queued
             );
         }
-        let id = self.next_id;
-        self.next_id += 1;
+        let id = match opts.id {
+            Some(id) => {
+                self.next_id = self.next_id.max(id + 1);
+                id
+            }
+            None => {
+                let id = self.next_id;
+                self.next_id += 1;
+                id
+            }
+        };
+        let now = Instant::now();
+        let timeout = opts.timeout.or_else(|| ms_duration(self.cfg.request_timeout_ms));
+        let deadline = opts.deadline.or_else(|| timeout.map(|t| now + t));
+        let queue_deadline = ms_duration(self.cfg.queue_timeout_ms).map(|t| now + t);
         self.queue.push_back(Queued {
             id,
             prompt: prompt.to_vec(),
             gen_tokens,
             submitted: self.now(),
+            deadline,
+            queue_deadline,
         });
         Ok(id)
+    }
+
+    /// Cancel a queued or in-flight request: a queued one leaves the
+    /// admission queue, an active one is evicted through the splicing path
+    /// (its KV pages return to the arena slab). Returns the partial result
+    /// (reason [`FinishReason::Cancelled`]) or `None` when the id is
+    /// unknown — already finished, or never submitted.
+    pub fn cancel(&mut self, id: u64) -> Option<FinishedRequest> {
+        if let Some(qi) = self.queue.iter().position(|q| q.id == id) {
+            let qr = self.queue.remove(qi).unwrap();
+            return Some(self.finish_queued(qr, FinishReason::Cancelled));
+        }
+        if let Some(r) = self.lanes.iter().position(|l| l.id == id) {
+            let lane = self.lanes.swap_remove(r);
+            let state = self.states.swap_remove(r);
+            return Some(self.finish_with(lane, state, FinishReason::Cancelled));
+        }
+        None
     }
 
     pub fn queued(&self) -> usize {
@@ -280,19 +407,7 @@ impl<'m> Scheduler<'m> {
             let Some(qr) = self.queue.pop_front() else { break };
             if qr.gen_tokens == 0 {
                 // Nothing to generate; completes at admission.
-                let now = self.now();
-                finished.push(FinishedRequest {
-                    id: qr.id,
-                    tokens: Vec::new(),
-                    metrics: RequestMetrics {
-                        queue_wait_ms: (now - qr.submitted) * 1e3,
-                        ttft_ms: 0.0,
-                        p50_ms: 0.0,
-                        p99_ms: 0.0,
-                        kv_bytes: 0,
-                        token_ms: Vec::new(),
-                    },
-                });
+                finished.push(self.finish_queued(qr, FinishReason::Length));
                 continue;
             }
             self.fresh_meta.push(qr);
@@ -301,27 +416,39 @@ impl<'m> Scheduler<'m> {
         if self.fresh_meta.is_empty() {
             return;
         }
+        // Injection point: the panic lands with freshly admitted requests
+        // sitting in the fresh_* scratch, exactly the state
+        // [`Scheduler::recover_admission`] must clean up.
+        fault::maybe_panic(fault::PREFILL_PANIC);
         let admitted = self.now();
         if self.cfg.scalar_prefill {
             // Reference path: per-lane scalar prefill, parallel across
-            // lanes on the worker pool.
+            // lanes on the worker pool. Jobs BORROW the fresh scratch
+            // (disjoint field borrows: `&Queued` meta, `&mut DecodeState`)
+            // rather than moving requests into closures, so a panicking
+            // prefill leaves every admitted request identifiable in
+            // `fresh_meta` for [`Scheduler::recover_admission`].
             let model = self.model;
             let jobs: Vec<_> = self
                 .fresh_meta
-                .drain(..)
-                .zip(self.fresh_states.drain(..))
-                .map(|(qr, mut state)| {
+                .iter()
+                .zip(self.fresh_states.iter_mut())
+                .map(|(qr, state)| {
                     move || {
                         for &t in &qr.prompt[..qr.prompt.len() - 1] {
-                            model.step(&mut state, t);
+                            model.step(state, t);
                         }
-                        (qr, state)
                     }
                 })
                 .collect();
-            for (qr, state) in run_jobs(jobs, self.workers) {
+            run_jobs(jobs, self.workers);
+            let mut metas = std::mem::take(&mut self.fresh_meta);
+            let mut states = std::mem::take(&mut self.fresh_states);
+            for (qr, state) in metas.drain(..).zip(states.drain(..)) {
                 self.push_lane(qr, state, admitted);
             }
+            self.fresh_meta = metas;
+            self.fresh_states = states;
             return;
         }
         // Chunked prefill: every fresh lane advances through its prompt in
@@ -393,6 +520,8 @@ impl<'m> Scheduler<'m> {
             admitted: 0.0,
             first_token: None,
             token_ms: Vec::new(),
+            deadline: None,
+            poisoned: false,
         });
         lane.id = qr.id;
         lane.pending = pending;
@@ -404,6 +533,8 @@ impl<'m> Scheduler<'m> {
         lane.first_token = None;
         lane.token_ms.clear();
         lane.token_ms.reserve(reserve);
+        lane.deadline = qr.deadline;
+        lane.poisoned = false;
         self.lanes.push(lane);
         self.states.push(state);
     }
@@ -421,24 +552,64 @@ impl<'m> Scheduler<'m> {
     /// over all lanes, evict finished sequences. Returns the requests that
     /// completed during this step; per-lane tokens of the step are exposed
     /// via [`Scheduler::step_tokens`] for streaming consumers.
+    ///
+    /// Internally this is [`Scheduler::admit_phase`] followed by
+    /// [`Scheduler::decode_phase`] — the supervisor calls the two phases
+    /// separately (each under its own `catch_unwind`) so a panic can be
+    /// attributed to admission vs. decode.
     pub fn step(&mut self) -> Vec<FinishedRequest> {
+        let mut finished = self.admit_phase();
+        finished.extend(self.decode_phase());
+        finished
+    }
+
+    /// Phase 1 of a step: sweep expired deadlines, then splice queued
+    /// requests into free lanes and prefill them. A panic in here is
+    /// recoverable via [`Scheduler::recover_admission`] — in-flight decode
+    /// lanes are untouched by this phase.
+    pub fn admit_phase(&mut self) -> Vec<FinishedRequest> {
         let mut finished = Vec::new();
+        self.sweep_deadlines(&mut finished);
         self.admit(&mut finished);
+        finished
+    }
+
+    /// Phase 2 of a step: one batched decode step over all active lanes,
+    /// then eviction of finished / poisoned lanes.
+    pub fn decode_phase(&mut self) -> Vec<FinishedRequest> {
         self.emitted.clear();
+        let mut finished = Vec::new();
         if self.lanes.is_empty() {
             return finished;
         }
+        fault::maybe_panic(fault::STEP_PANIC);
+        fault::maybe_stall(fault::ENGINE_STALL, Duration::from_millis(1500));
         debug_assert_eq!(self.lanes.len(), self.states.len());
         self.token_buf.clear();
         self.token_buf.extend(self.lanes.iter().map(|l| l.pending));
         let t0 = Instant::now();
         self.model.step_batch_with(&mut self.scratch, &mut self.states, &self.token_buf);
+        if fault::hit(fault::NAN_LOGITS) {
+            // Corrupt lane 0's logits in place — models the degenerate
+            // outputs extreme quantization can produce.
+            for v in self.scratch.logits_mut().row_mut(0) {
+                *v = f32::NAN;
+            }
+        }
         self.steps += 1;
         self.lane_steps += self.lanes.len();
         let scratch = &self.scratch;
         let emitted = &mut self.emitted;
         for (r, lane) in self.lanes.iter_mut().enumerate() {
-            let next = greedy_argmax(scratch.logits().row(r));
+            let row = scratch.logits().row(r);
+            let next = greedy_argmax(row);
+            if !row[next as usize].is_finite() {
+                // The max logit is NaN/±inf: this lane's numerics are
+                // poisoned. Don't emit the garbage token — mark the lane
+                // for Failed eviction below.
+                lane.poisoned = true;
+                continue;
+            }
             lane.out.push(next);
             lane.pending = next;
             emitted.push((lane.id, next));
@@ -454,21 +625,80 @@ impl<'m> Scheduler<'m> {
             }
         }
         // Evict finished lanes; their KV pages go back to the arena slab so
-        // admitted and growing lanes reuse them.
+        // admitted and growing lanes reuse them. Poisoned lanes leave as
+        // Failed with the tokens generated before the fault.
         let mut r = 0;
         while r < self.lanes.len() {
-            if self.lanes[r].out.len() >= self.lanes[r].gen_tokens {
-                let lane = self.lanes.swap_remove(r);
-                let state = self.states.swap_remove(r);
-                finished.push(self.finish(lane, state));
+            let reason = if self.lanes[r].poisoned {
+                Some(FinishReason::Failed)
+            } else if self.lanes[r].out.len() >= self.lanes[r].gen_tokens {
+                Some(FinishReason::Length)
             } else {
-                r += 1;
+                None
+            };
+            match reason {
+                Some(reason) => {
+                    let lane = self.lanes.swap_remove(r);
+                    let state = self.states.swap_remove(r);
+                    finished.push(self.finish_with(lane, state, reason));
+                }
+                None => r += 1,
             }
         }
         finished
     }
 
-    fn finish(&mut self, mut lane: Lane, state: DecodeState) -> FinishedRequest {
+    /// Evict every request (queued or active) whose deadline has passed.
+    /// Expired active lanes return partial output ([`FinishReason::Timeout`]);
+    /// expired queued requests never decoded. Allocation-free when nothing
+    /// has expired (the common case on the steady-state path).
+    fn sweep_deadlines(&mut self, finished: &mut Vec<FinishedRequest>) {
+        let now = Instant::now();
+        let mut qi = 0;
+        while qi < self.queue.len() {
+            let q = &self.queue[qi];
+            let expired = q.deadline.map_or(false, |d| now >= d)
+                || q.queue_deadline.map_or(false, |d| now >= d);
+            if expired {
+                let qr = self.queue.remove(qi).unwrap();
+                finished.push(self.finish_queued(qr, FinishReason::Timeout));
+            } else {
+                qi += 1;
+            }
+        }
+        let mut r = 0;
+        while r < self.lanes.len() {
+            if self.lanes[r].deadline.map_or(false, |d| now >= d) {
+                let lane = self.lanes.swap_remove(r);
+                let state = self.states.swap_remove(r);
+                finished.push(self.finish_with(lane, state, FinishReason::Timeout));
+            } else {
+                r += 1;
+            }
+        }
+    }
+
+    /// Finish a request that never reached a decode lane (zero-gen
+    /// completion, queue timeout, cancellation while queued).
+    fn finish_queued(&mut self, qr: Queued, finish: FinishReason) -> FinishedRequest {
+        let now = self.now();
+        FinishedRequest {
+            id: qr.id,
+            tokens: Vec::new(),
+            metrics: RequestMetrics {
+                queue_wait_ms: (now - qr.submitted) * 1e3,
+                ..RequestMetrics::empty()
+            },
+            finish,
+        }
+    }
+
+    fn finish_with(
+        &mut self,
+        mut lane: Lane,
+        state: DecodeState,
+        finish: FinishReason,
+    ) -> FinishedRequest {
         let kv_bytes = state.kv_bytes();
         self.arena.release(state);
         // When the shell is recycled, the result takes copies so the
@@ -489,13 +719,59 @@ impl<'m> Scheduler<'m> {
             kv_bytes,
             token_ms,
         };
-        let fr = FinishedRequest { id: lane.id, tokens, metrics };
+        let fr = FinishedRequest { id: lane.id, tokens, metrics, finish };
         if recycle {
             lane.out.clear();
             lane.token_ms.clear();
             self.lane_pool.push(lane);
         }
         fr
+    }
+
+    /// Recover from a panic inside [`Scheduler::admit_phase`]: requests
+    /// caught mid-prefill are failed (their KV states go back to the
+    /// arena) and the admission scratch is reset so the next step starts
+    /// clean. In-flight decode lanes are untouched.
+    pub fn recover_admission(&mut self) -> Vec<FinishedRequest> {
+        // Lengths can differ if the panic hit between pushing a meta and
+        // acquiring its state, so drain the two vectors independently.
+        let metas = std::mem::take(&mut self.fresh_meta);
+        let states = std::mem::take(&mut self.fresh_states);
+        for state in states {
+            self.arena.release(state);
+        }
+        metas
+            .into_iter()
+            .map(|qr| self.finish_queued(qr, FinishReason::Failed))
+            .collect()
+    }
+
+    /// Fail every active lane ([`FinishReason::Failed`], partial tokens),
+    /// releasing their KV pages. The supervisor's single-lane fault
+    /// attribution path.
+    pub fn fail_all_active(&mut self) -> Vec<FinishedRequest> {
+        let mut finished = Vec::new();
+        while let Some(lane) = self.lanes.pop() {
+            let state = self.states.pop().expect("lanes/states parallel");
+            finished.push(self.finish_with(lane, state, FinishReason::Failed));
+        }
+        finished
+    }
+
+    /// Ids of the currently active (decoding) lanes.
+    pub fn lane_ids(&self) -> Vec<u64> {
+        self.lanes.iter().map(|l| l.id).collect()
+    }
+
+    /// The id the next plain [`Scheduler::submit`] would take.
+    pub fn next_request_id(&self) -> u64 {
+        self.next_id
+    }
+
+    /// Raise the id floor (a restarted engine continues its predecessor's
+    /// id sequence so ids never collide across restarts).
+    pub fn set_next_id(&mut self, id: u64) {
+        self.next_id = self.next_id.max(id);
     }
 
     /// Drain queue and lanes; finished requests are returned in submission
@@ -858,5 +1134,196 @@ mod tests {
         assert_eq!(s.workers(), crate::tensor::ops::num_threads());
         let s = Scheduler::new(&m, ServeConfig { workers: 3, ..ServeConfig::default() });
         assert_eq!(s.workers(), 3);
+    }
+
+    #[test]
+    fn greedy_argmax_survives_degenerate_logits() {
+        // The seed's `partial_cmp().unwrap()` panicked on any NaN; total
+        // order must instead pick deterministically. Positive NaN is the
+        // top of the total order, ties keep the last index.
+        assert_eq!(greedy_argmax(&[f32::NAN, f32::NAN, f32::NAN]), 2, "all-NaN: last wins");
+        assert_eq!(greedy_argmax(&[0.0, f32::NAN, 3.0]), 1, "+NaN outranks finite");
+        assert_eq!(greedy_argmax(&[f32::NAN, f32::INFINITY]), 0, "+NaN outranks +inf");
+        assert_eq!(greedy_argmax(&[-f32::NAN, 1.0]), 1, "-NaN is the bottom");
+        assert_eq!(greedy_argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+    }
+
+    #[test]
+    fn cancel_evicts_queued_and_active_requests() {
+        let m = model();
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig { max_batch: 1, max_queued: 8, ..ServeConfig::default() },
+        );
+        let a = sched.submit(&[1, 2], 50).unwrap();
+        let b = sched.submit(&[3, 4], 50).unwrap();
+        // Two steps: `a` occupies the single lane, `b` waits queued.
+        sched.step();
+        sched.step();
+        assert_eq!((sched.active(), sched.queued()), (1, 1));
+
+        let fb = sched.cancel(b).expect("queued request is cancellable");
+        assert_eq!(fb.finish, FinishReason::Cancelled);
+        assert!(fb.tokens.is_empty(), "queued request never decoded");
+        assert_eq!(sched.queued(), 0);
+
+        let fa = sched.cancel(a).expect("active request is cancellable");
+        assert_eq!(fa.finish, FinishReason::Cancelled);
+        assert!(!fa.tokens.is_empty(), "active lane returns partial output");
+        assert!(fa.tokens.len() < 50);
+        assert_eq!(sched.active(), 0);
+        assert!(sched.pooled_kv() > 0, "cancelled lane's KV returned to the arena");
+
+        assert!(sched.cancel(a).is_none(), "double cancel is a no-op");
+        assert!(sched.cancel(999).is_none(), "unknown id is a no-op");
+    }
+
+    #[test]
+    fn request_deadline_returns_partial_output_as_timeout() {
+        let m = model();
+        let mut sched = Scheduler::new(&m, ServeConfig::default());
+        let opts = SubmitOpts {
+            timeout: Some(Duration::from_millis(30)),
+            ..SubmitOpts::default()
+        };
+        sched.submit_opts(&[1, 2, 3], 1_000_000, opts).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut done = Vec::new();
+        while sched.has_work() && Instant::now() < deadline {
+            done.extend(sched.step());
+        }
+        assert_eq!(done.len(), 1, "request must expire, not decode 1M tokens");
+        assert_eq!(done[0].finish, FinishReason::Timeout);
+        assert!(done[0].tokens.len() < 1_000_000);
+        assert_eq!(sched.active(), 0);
+        assert!(sched.pooled_kv() > 0, "expired lane's KV returned to the arena");
+    }
+
+    #[test]
+    fn queue_timeout_expires_waiting_requests() {
+        let m = model();
+        let cfg = ServeConfig {
+            max_batch: 1,
+            max_queued: 8,
+            queue_timeout_ms: 20,
+            ..ServeConfig::default()
+        };
+        let mut sched = Scheduler::new(&m, cfg);
+        let a = sched.submit(&[1, 2], 1_000_000).unwrap(); // holds the lane
+        let b = sched.submit(&[3, 4], 30).unwrap();
+        // `b` cannot be admitted while `a` holds the only lane; after 20ms
+        // of queue wait the sweep must expire it (queue_timeout only
+        // gates *waiting* requests — `a`, admitted on the first step,
+        // decodes on unaffected).
+        let mut done = Vec::new();
+        let safety = Instant::now() + Duration::from_secs(10);
+        while !done.iter().any(|f| f.id == b) && Instant::now() < safety {
+            done.extend(sched.step());
+        }
+        let fb = done.iter().find(|f| f.id == b).expect("queued request expired");
+        assert_eq!(fb.finish, FinishReason::Timeout);
+        assert!(fb.tokens.is_empty());
+        assert!(fb.metrics.queue_wait_ms >= 20.0);
+        let fa = sched.cancel(a).expect("lane holder still active");
+        assert!(!fa.tokens.is_empty(), "lane holder kept decoding past the queue timeout");
+    }
+
+    #[test]
+    fn nan_logits_fail_only_the_poisoned_lane() {
+        let m = model();
+        let mut rng = Rng::new(9);
+        let p0: Vec<u32> = (0..3).map(|_| rng.below(m.cfg.vocab) as u32).collect();
+        let p1: Vec<u32> = (0..2).map(|_| rng.below(m.cfg.vocab) as u32).collect();
+        let want1 = reference_decode(&m, &p1, 8);
+
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig { max_batch: 2, max_queued: 8, ..ServeConfig::default() },
+        );
+        let a = sched.submit(&p0, 8).unwrap();
+        sched.submit(&p1, 8).unwrap();
+        // Fire on the 3rd decode step: lane 0 (request `a`) gets NaN
+        // logits and must leave as Failed with 2 tokens; its neighbor
+        // decodes to completion bit-identically to the scalar reference.
+        fault::arm(fault::NAN_LOGITS, 3);
+        let done = sched.run_to_completion();
+        fault::disarm_all();
+        assert_eq!(done.len(), 2);
+        let fa = done.iter().find(|f| f.id == a).unwrap();
+        assert_eq!(fa.finish, FinishReason::Failed);
+        assert_eq!(fa.tokens.len(), 2, "tokens before the poisoned step survive");
+        let fb = done.iter().find(|f| f.id != a).unwrap();
+        assert_eq!(fb.finish, FinishReason::Length);
+        assert_eq!(fb.tokens, want1, "unpoisoned lane must stay bit-identical");
+        assert_eq!(sched.active(), 0);
+    }
+
+    #[test]
+    fn admission_recovery_fails_fresh_requests_and_keeps_lanes() {
+        let m = model();
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig { max_batch: 2, max_queued: 8, ..ServeConfig::default() },
+        );
+        let a = sched.submit(&[1, 2], 40).unwrap();
+        sched.step(); // `a` holds a lane
+        let b = sched.submit(&[3, 4, 5], 6).unwrap();
+        fault::arm(fault::PREFILL_PANIC, 1);
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            sched.admit_phase();
+        }));
+        fault::disarm_all();
+        assert!(panicked.is_err(), "armed prefill fault must panic");
+        // The panic landed with `b` sitting in the admission scratch;
+        // recovery must fail it, release its KV state, and leave the
+        // in-flight lane `a` untouched.
+        let failed = sched.recover_admission();
+        assert_eq!(failed.len(), 1);
+        assert_eq!(failed[0].id, b);
+        assert_eq!(failed[0].finish, FinishReason::Failed);
+        assert_eq!(sched.active(), 1, "in-flight lane survives admission recovery");
+        assert_eq!(sched.queued(), 0);
+        let done = sched.run_to_completion();
+        assert!(done.iter().any(|f| f.id == a && f.finish == FinishReason::Length));
+    }
+
+    #[test]
+    fn fail_all_active_releases_every_lane() {
+        let m = model();
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig { max_batch: 2, max_queued: 8, ..ServeConfig::default() },
+        );
+        sched.submit(&[1, 2], 40).unwrap();
+        sched.submit(&[3], 40).unwrap();
+        for _ in 0..3 {
+            sched.step();
+        }
+        assert_eq!(sched.active(), 2);
+        let failed = sched.fail_all_active();
+        assert_eq!(failed.len(), 2);
+        assert!(failed.iter().all(|f| f.finish == FinishReason::Failed));
+        assert!(failed.iter().all(|f| !f.tokens.is_empty()), "partial output kept");
+        assert_eq!(sched.active(), 0);
+        assert_eq!(sched.pooled_kv(), 2, "both KV shells back in the arena");
+    }
+
+    #[test]
+    fn explicit_id_resubmission_bypasses_queue_and_bumps_next_id() {
+        let m = model();
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig { max_batch: 1, max_queued: 1, ..ServeConfig::default() },
+        );
+        sched.submit(&[1], 2).unwrap();
+        assert!(sched.submit(&[2], 2).is_err(), "queue full for plain submits");
+        // Requeue-after-restart path: explicit ids must be accepted even
+        // past max_queued, and must push next_id forward.
+        let opts = SubmitOpts { id: Some(7), ..SubmitOpts::default() };
+        sched.submit_opts(&[3], 2, opts).unwrap();
+        assert_eq!(sched.next_request_id(), 8);
+        let done = sched.run_to_completion();
+        assert_eq!(done.len(), 2);
+        assert!(done.iter().any(|f| f.id == 7));
     }
 }

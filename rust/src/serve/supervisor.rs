@@ -1,0 +1,502 @@
+//! Engine supervision: fault isolation and bounded restarts around the
+//! continuous-batching [`Scheduler`].
+//!
+//! The HTTP engine thread used to call `Scheduler::step` bare — one panic
+//! (a poisoned weight tile tripping the always-on code-range validation,
+//! a degenerate logit row) killed the engine permanently while `/healthz`
+//! kept reporting healthy. [`SupervisedEngine`] wraps each step phase in
+//! `catch_unwind` and **attributes** the fault:
+//!
+//! * a panic in the **admission phase** can only involve freshly admitted
+//!   requests (in-flight lanes are untouched by admission) — those
+//!   requests fail with [`FinishReason::Failed`], their KV states return
+//!   to the arena, and everything else proceeds;
+//! * a panic in the **decode phase** with a single active lane is pinned
+//!   on that request — it alone fails;
+//! * a multi-lane decode panic is unattributable — the supervisor
+//!   **restarts** the engine with a fresh [`Scheduler`] (dropping the old
+//!   one frees every KV page) and, per [`RestartPolicy`], either fails
+//!   in-flight requests fast or requeues them under their original ids
+//!   and deadlines. Greedy decode is deterministic, so a requeued lane's
+//!   first tokens are bit-identical replays; the supervisor suppresses
+//!   the ones already streamed, so consumers see each token exactly once.
+//!
+//! Restarts are bounded by [`ServeConfig::max_engine_restarts`]; past the
+//! budget the engine is declared dead ([`SupervisedEngine::alive`] turns
+//! false), every tracked request fails, and new submissions are refused —
+//! the HTTP layer flips `/healthz` to 503 and drains.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::cfg::{RestartPolicy, ServeConfig};
+use crate::model::NativeModel;
+use crate::serve::scheduler::{
+    FinishReason, FinishedRequest, RequestMetrics, Scheduler, SubmitOpts,
+};
+
+/// Everything the supervisor needs to recover a request after an engine
+/// restart: resubmit the original prompt under the original id/deadline,
+/// and suppress replayed tokens.
+struct Tracked {
+    prompt: Vec<u32>,
+    gen_tokens: usize,
+    /// Absolute deadline, fixed at submission — survives restarts (a
+    /// scheduler-relative deadline would silently extend on requeue).
+    deadline: Option<Instant>,
+    /// Tokens already exposed through [`SupervisedEngine::step_tokens`].
+    streamed: usize,
+    /// Replayed tokens still to swallow after a requeue (deterministic
+    /// decode re-emits exactly the `streamed` prefix, bit-identical).
+    replay_skip: usize,
+}
+
+/// A [`Scheduler`] under `catch_unwind` supervision with fault
+/// attribution, restart budgeting, and replay suppression. Drop-in for
+/// the engine loop: `submit` / `step` / `step_tokens` mirror the
+/// scheduler's surface.
+pub struct SupervisedEngine<'m> {
+    model: &'m NativeModel,
+    cfg: ServeConfig,
+    sched: Scheduler<'m>,
+    tracked: HashMap<u64, Tracked>,
+    restarts: usize,
+    dead: bool,
+    /// Post-suppression tokens of the most recent step.
+    emitted: Vec<(u64, u32)>,
+}
+
+impl<'m> SupervisedEngine<'m> {
+    pub fn new(model: &'m NativeModel, cfg: ServeConfig) -> Self {
+        SupervisedEngine {
+            sched: Scheduler::new(model, cfg.clone()),
+            model,
+            cfg,
+            tracked: HashMap::new(),
+            restarts: 0,
+            dead: false,
+            emitted: Vec::new(),
+        }
+    }
+
+    /// Submit a request. `timeout_ms` (from the HTTP body) overrides
+    /// [`ServeConfig::request_timeout_ms`]; 0/absent falls back. Errors
+    /// when the engine is dead or the scheduler refuses admission.
+    pub fn submit(
+        &mut self,
+        prompt: &[u32],
+        gen_tokens: usize,
+        timeout_ms: Option<u64>,
+    ) -> Result<u64> {
+        if self.dead {
+            bail!("engine dead: restart budget exhausted");
+        }
+        let ms = timeout_ms.filter(|&t| t > 0).unwrap_or(self.cfg.request_timeout_ms);
+        // The absolute deadline is fixed here, not inside the scheduler,
+        // so the supervisor can carry it across restarts verbatim.
+        let deadline = (ms > 0).then(|| Instant::now() + Duration::from_millis(ms));
+        let id = self.sched.submit_opts(
+            prompt,
+            gen_tokens,
+            SubmitOpts { deadline, ..SubmitOpts::default() },
+        )?;
+        self.tracked.insert(
+            id,
+            Tracked {
+                prompt: prompt.to_vec(),
+                gen_tokens,
+                deadline,
+                streamed: 0,
+                replay_skip: 0,
+            },
+        );
+        Ok(id)
+    }
+
+    /// Cancel a queued or in-flight request (client disconnect, explicit
+    /// abort). Returns the partial result, `None` if the id is unknown.
+    pub fn cancel(&mut self, id: u64) -> Option<FinishedRequest> {
+        let fr = self.sched.cancel(id)?;
+        self.tracked.remove(&id);
+        Some(fr)
+    }
+
+    /// One supervised engine step. Never panics; faults surface as
+    /// [`FinishReason::Failed`] events (and, for unattributable faults,
+    /// an engine restart). Step tokens — with requeue replays suppressed —
+    /// are exposed via [`SupervisedEngine::step_tokens`].
+    pub fn step(&mut self) -> Vec<FinishedRequest> {
+        self.emitted.clear();
+        if self.dead {
+            return Vec::new();
+        }
+        let mut finished = match catch_unwind(AssertUnwindSafe(|| self.sched.admit_phase())) {
+            Ok(f) => f,
+            Err(payload) => {
+                crate::log_warn!(
+                    "supervisor",
+                    "admission panic ({}); failing mid-prefill requests",
+                    panic_msg(&payload)
+                );
+                self.sched.recover_admission()
+            }
+        };
+        // Read attribution context BEFORE the step: lane membership only
+        // changes at eviction, after the panic window.
+        let single_lane = self.sched.active() == 1;
+        match catch_unwind(AssertUnwindSafe(|| self.sched.decode_phase())) {
+            Ok(f) => finished.extend(f),
+            Err(payload) if single_lane => {
+                crate::log_warn!(
+                    "supervisor",
+                    "decode panic with one lane ({}); failing that request",
+                    panic_msg(&payload)
+                );
+                finished.extend(self.sched.fail_all_active());
+            }
+            Err(payload) => {
+                crate::log_warn!(
+                    "supervisor",
+                    "unattributable decode panic ({}); restarting engine",
+                    panic_msg(&payload)
+                );
+                finished.extend(self.restart());
+            }
+        }
+        // Stream this step's tokens, swallowing post-restart replays.
+        for &(id, tok) in self.sched.step_tokens() {
+            if let Some(t) = self.tracked.get_mut(&id) {
+                if t.replay_skip > 0 {
+                    t.replay_skip -= 1;
+                    continue;
+                }
+                t.streamed += 1;
+            }
+            self.emitted.push((id, tok));
+        }
+        for fr in &finished {
+            self.tracked.remove(&fr.id);
+        }
+        finished
+    }
+
+    /// Replace the scheduler with a fresh one (freeing every KV page of
+    /// the old) and apply [`RestartPolicy`] to tracked requests. Declares
+    /// the engine dead past the restart budget.
+    fn restart(&mut self) -> Vec<FinishedRequest> {
+        self.restarts += 1;
+        let was_active: Vec<u64> = self.sched.lane_ids();
+        let next_id = self.sched.next_request_id();
+        // Dropping the old scheduler releases all lanes' KV pages.
+        self.sched = Scheduler::new(self.model, self.cfg.clone());
+        self.sched.set_next_id(next_id);
+
+        let mut ids: Vec<u64> = self.tracked.keys().copied().collect();
+        ids.sort_unstable();
+        let mut events = Vec::new();
+        if self.restarts > self.cfg.max_engine_restarts {
+            crate::log_warn!(
+                "supervisor",
+                "restart budget exhausted ({} > {}); engine dead",
+                self.restarts,
+                self.cfg.max_engine_restarts
+            );
+            self.dead = true;
+            for id in ids {
+                events.push(failed_event(id));
+            }
+            self.tracked.clear();
+            return events;
+        }
+        for id in ids {
+            let active = was_active.contains(&id);
+            if active && self.cfg.restart_policy == RestartPolicy::FailFast {
+                self.tracked.remove(&id);
+                events.push(failed_event(id));
+                continue;
+            }
+            // Queued requests (no output yet) are requeued under either
+            // policy; active ones only under Requeue, with their already
+            // streamed prefix marked for replay suppression.
+            let t = self.tracked.get_mut(&id).expect("tracked id");
+            t.replay_skip = if active { t.streamed } else { 0 };
+            t.streamed = 0;
+            let opts = SubmitOpts { deadline: t.deadline, id: Some(id), ..SubmitOpts::default() };
+            let (prompt, gen) = (t.prompt.clone(), t.gen_tokens);
+            if let Err(e) = self.sched.submit_opts(&prompt, gen, opts) {
+                crate::log_warn!("supervisor", "requeue of request {id} failed: {e}");
+                self.tracked.remove(&id);
+                events.push(failed_event(id));
+            }
+        }
+        events
+    }
+
+    /// Tokens of the most recent [`SupervisedEngine::step`], requeue
+    /// replays suppressed — each consumer sees each token exactly once.
+    pub fn step_tokens(&self) -> &[(u64, u32)] {
+        &self.emitted
+    }
+
+    /// False once the restart budget is exhausted: the engine refuses new
+    /// work and `/healthz` must report 503.
+    pub fn alive(&self) -> bool {
+        !self.dead
+    }
+
+    /// Engine restarts so far (the `/metrics` counter).
+    pub fn restarts(&self) -> usize {
+        self.restarts
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.dead && self.sched.has_work()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.sched.queued()
+    }
+
+    pub fn active(&self) -> usize {
+        self.sched.active()
+    }
+
+    pub fn kv_bytes(&self) -> usize {
+        self.sched.kv_bytes()
+    }
+
+    pub fn kv_allocated_bytes(&self) -> usize {
+        self.sched.kv_allocated_bytes()
+    }
+
+    pub fn kv_dtype(&self) -> crate::cfg::KvDtype {
+        self.sched.kv_dtype()
+    }
+
+    pub fn mean_occupancy(&self) -> f64 {
+        self.sched.mean_occupancy()
+    }
+}
+
+fn failed_event(id: u64) -> FinishedRequest {
+    FinishedRequest {
+        id,
+        tokens: Vec::new(),
+        metrics: RequestMetrics::empty(),
+        finish: FinishReason::Failed,
+    }
+}
+
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&'static str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::preset;
+    use crate::model::ParamStore;
+    use crate::util::{fault, Rng};
+    use std::collections::HashMap;
+
+    fn model() -> NativeModel {
+        let (cfg, _) = preset("tiny");
+        let ps = ParamStore::init(&cfg, &mut Rng::new(0));
+        NativeModel::from_params(&ps)
+    }
+
+    fn reference(m: &NativeModel, prompt: &[u32], gen: usize) -> Vec<u32> {
+        let mut sched = Scheduler::new(m, ServeConfig::default());
+        sched.submit(prompt, gen).unwrap();
+        sched.run_to_completion().remove(0).tokens
+    }
+
+    fn prompts(m: &NativeModel, n: usize, seed: u64) -> Vec<Vec<u32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| (0..(2 + i % 3)).map(|_| rng.below(m.cfg.vocab) as u32).collect())
+            .collect()
+    }
+
+    /// Drive to quiescence, collecting (finished, streamed-per-id).
+    fn drain(
+        eng: &mut SupervisedEngine<'_>,
+    ) -> (Vec<FinishedRequest>, HashMap<u64, Vec<u32>>) {
+        let mut done = Vec::new();
+        let mut streamed: HashMap<u64, Vec<u32>> = HashMap::new();
+        let safety = Instant::now() + Duration::from_secs(30);
+        while eng.has_work() && Instant::now() < safety {
+            done.extend(eng.step());
+            for &(id, tok) in eng.step_tokens() {
+                streamed.entry(id).or_default().push(tok);
+            }
+        }
+        done.sort_by_key(|f| f.id);
+        (done, streamed)
+    }
+
+    #[test]
+    fn happy_path_is_bit_identical_to_bare_scheduler() {
+        let m = model();
+        let ps = prompts(&m, 4, 11);
+        let gens = [5usize, 3, 7, 4];
+        let cfg = ServeConfig { max_batch: 2, max_queued: 8, ..ServeConfig::default() };
+        let mut eng = SupervisedEngine::new(&m, cfg);
+        for (p, &g) in ps.iter().zip(&gens) {
+            eng.submit(p, g, None).unwrap();
+        }
+        let (done, streamed) = drain(&mut eng);
+        assert_eq!(done.len(), 4);
+        assert_eq!(eng.restarts(), 0);
+        assert!(eng.alive());
+        for (i, fr) in done.iter().enumerate() {
+            assert_eq!(fr.finish, FinishReason::Length);
+            assert_eq!(fr.tokens, reference(&m, &ps[i], gens[i]), "request {i}");
+            assert_eq!(streamed[&fr.id], fr.tokens, "streamed != final for {i}");
+        }
+    }
+
+    #[test]
+    fn single_lane_panic_fails_only_that_request() {
+        let m = model();
+        let p = prompts(&m, 1, 3).remove(0);
+        let want = reference(&m, &p, 6);
+        let mut eng = SupervisedEngine::new(&m, ServeConfig::default());
+        let a = eng.submit(&p, 6, None).unwrap();
+        fault::arm(fault::STEP_PANIC, 3);
+        let (done, _) = drain(&mut eng);
+        fault::disarm_all();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, a);
+        assert_eq!(done[0].finish, FinishReason::Failed);
+        assert_eq!(done[0].tokens.len(), 2, "two steps decoded before the panic");
+        assert_eq!(eng.restarts(), 0, "single-lane fault must not restart");
+        assert!(eng.alive());
+        assert_eq!(eng.kv_bytes(), 0, "failed lane's KV released");
+        // The engine keeps serving, bit-identically.
+        eng.submit(&p, 6, None).unwrap();
+        let (done, _) = drain(&mut eng);
+        assert_eq!(done[0].finish, FinishReason::Length);
+        assert_eq!(done[0].tokens, want);
+    }
+
+    #[test]
+    fn admission_panic_spares_in_flight_lanes() {
+        let m = model();
+        let ps = prompts(&m, 2, 5);
+        let want0 = reference(&m, &ps[0], 8);
+        let cfg = ServeConfig { max_batch: 1, max_queued: 8, ..ServeConfig::default() };
+        let mut eng = SupervisedEngine::new(&m, cfg);
+        let a = eng.submit(&ps[0], 8, None).unwrap();
+        eng.step(); // `a` holds the lane
+        let b = eng.submit(&ps[1], 8, None).unwrap();
+        // `b` is admitted only after `a` finishes; make its admission panic.
+        fault::arm(fault::PREFILL_PANIC, 1);
+        let (done, _) = drain(&mut eng);
+        fault::disarm_all();
+        let fa = done.iter().find(|f| f.id == a).unwrap();
+        assert_eq!(fa.finish, FinishReason::Length);
+        assert_eq!(fa.tokens, want0, "in-flight lane survives admission fault");
+        let fb = done.iter().find(|f| f.id == b).unwrap();
+        assert_eq!(fb.finish, FinishReason::Failed);
+        assert_eq!(eng.restarts(), 0);
+    }
+
+    #[test]
+    fn multi_lane_panic_fail_fast_restarts_and_keeps_queued() {
+        let m = model();
+        let ps = prompts(&m, 3, 7);
+        let want2 = reference(&m, &ps[2], 5);
+        let cfg = ServeConfig { max_batch: 2, max_queued: 8, ..ServeConfig::default() };
+        let mut eng = SupervisedEngine::new(&m, cfg);
+        let a = eng.submit(&ps[0], 40, None).unwrap();
+        let b = eng.submit(&ps[1], 40, None).unwrap();
+        let c = eng.submit(&ps[2], 5, None).unwrap();
+        fault::arm(fault::STEP_PANIC, 2);
+        let (done, _) = drain(&mut eng);
+        fault::disarm_all();
+        assert_eq!(eng.restarts(), 1);
+        assert!(eng.alive());
+        for id in [a, b] {
+            let f = done.iter().find(|f| f.id == id).unwrap();
+            assert_eq!(f.finish, FinishReason::Failed, "active lanes fail fast");
+        }
+        let fc = done.iter().find(|f| f.id == c).unwrap();
+        assert_eq!(fc.finish, FinishReason::Length, "queued request survives restart");
+        assert_eq!(fc.tokens, want2);
+        assert_eq!(eng.kv_bytes(), 0);
+    }
+
+    #[test]
+    fn requeue_policy_replays_without_duplicate_tokens() {
+        let m = model();
+        let ps = prompts(&m, 3, 13);
+        let gens = [6usize, 4, 5];
+        let cfg = ServeConfig {
+            max_batch: 2,
+            max_queued: 8,
+            restart_policy: RestartPolicy::Requeue,
+            ..ServeConfig::default()
+        };
+        let mut eng = SupervisedEngine::new(&m, cfg);
+        for (p, &g) in ps.iter().zip(&gens) {
+            eng.submit(p, g, None).unwrap();
+        }
+        fault::arm(fault::STEP_PANIC, 3);
+        let (done, streamed) = drain(&mut eng);
+        fault::disarm_all();
+        assert_eq!(eng.restarts(), 1);
+        assert_eq!(done.len(), 3);
+        for (i, fr) in done.iter().enumerate() {
+            assert_eq!(fr.finish, FinishReason::Length, "request {i} must complete");
+            assert_eq!(fr.tokens, reference(&m, &ps[i], gens[i]), "request {i} diverged");
+            assert_eq!(
+                streamed[&fr.id], fr.tokens,
+                "request {i}: replay suppression must hand out each token exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn restart_budget_exhaustion_kills_the_engine() {
+        let m = model();
+        let ps = prompts(&m, 2, 21);
+        let cfg = ServeConfig {
+            max_batch: 2,
+            max_queued: 8,
+            max_engine_restarts: 0,
+            ..ServeConfig::default()
+        };
+        let mut eng = SupervisedEngine::new(&m, cfg);
+        eng.submit(&ps[0], 40, None).unwrap();
+        eng.submit(&ps[1], 40, None).unwrap();
+        fault::arm(fault::STEP_PANIC, 2);
+        let (done, _) = drain(&mut eng);
+        fault::disarm_all();
+        assert!(!eng.alive(), "budget 0 means the first restart is fatal");
+        assert_eq!(done.len(), 2);
+        assert!(done.iter().all(|f| f.finish == FinishReason::Failed));
+        assert!(eng.submit(&ps[0], 4, None).is_err(), "dead engine refuses work");
+        assert!(!eng.has_work());
+        assert!(eng.step().is_empty());
+    }
+
+    #[test]
+    fn per_request_timeout_flows_through_supervision() {
+        let m = model();
+        let mut eng = SupervisedEngine::new(&m, ServeConfig::default());
+        eng.submit(&[1, 2, 3], 1_000_000, Some(30)).unwrap();
+        let (done, _) = drain(&mut eng);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish, FinishReason::Timeout);
+        assert!(done[0].tokens.len() < 1_000_000);
+        assert_eq!(eng.kv_bytes(), 0);
+    }
+}

@@ -1,0 +1,232 @@
+//! Deterministic fault injection for chaos testing the serving stack.
+//!
+//! `GQ_FAULT=<site>:<nth>[,<site>:<nth>...]` arms named injection sites:
+//! each site fires **exactly once**, on its `nth` (1-based) hit after
+//! arming, then disarms itself. Because the engine is deterministic, the
+//! nth decode step / socket write is the same step on every run, so a
+//! chaos scenario reproduces bit-for-bit.
+//!
+//! Two arming scopes:
+//!
+//! * **Process-global** — parsed from `GQ_FAULT` at the first hit, or armed
+//!   programmatically via [`arm_global`]. Reaches every thread (the engine
+//!   thread, connection threads); used by `scripts/serve_chaos.sh` and the
+//!   HTTP-level chaos integration tests (which serialize on a lock — the
+//!   registry is shared process state).
+//! * **Thread-local** — [`arm`] affects only the calling thread, so unit
+//!   tests that drive a [`crate::serve::Scheduler`] or
+//!   [`crate::serve::SupervisedEngine`] on the test thread can inject
+//!   faults without perturbing other tests running in parallel.
+//!
+//! When nothing is armed, a hit is two relaxed atomic loads plus an empty
+//! thread-local map probe — no locks, no allocation — so injection points
+//! can sit on the zero-allocation steady-state decode path.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+/// Panic at the top of the batched decode step (`Scheduler::decode_phase`).
+pub const STEP_PANIC: &str = "step-panic";
+/// Panic at the top of the admission phase, while freshly admitted
+/// requests are mid-prefill (`Scheduler::admit_phase`).
+pub const PREFILL_PANIC: &str = "prefill-panic";
+/// Overwrite lane 0's logits with NaN after the batched step — the
+/// degenerate-output fault class (overflowed accumulation, corrupt codes).
+pub const NAN_LOGITS: &str = "nan-logits";
+/// Sleep inside the decode step: a transient engine stall, not a fault the
+/// supervisor acts on — the server must simply absorb the latency spike.
+pub const ENGINE_STALL: &str = "engine-stall";
+/// Sleep before one SSE chunk write: slow/partial socket I/O on the
+/// connection thread.
+pub const SLOW_WRITE: &str = "slow-write";
+
+/// Every site name `GQ_FAULT` accepts.
+pub const SITES: &[&str] = &[STEP_PANIC, PREFILL_PANIC, NAN_LOGITS, ENGINE_STALL, SLOW_WRITE];
+
+struct Site {
+    nth: u64,
+    hits: u64,
+    fired: bool,
+}
+
+impl Site {
+    /// Count a hit; true exactly when `hits` reaches `nth` the first time.
+    fn hit(&mut self) -> bool {
+        if self.fired {
+            return false;
+        }
+        self.hits += 1;
+        if self.hits >= self.nth {
+            self.fired = true;
+            return true;
+        }
+        false
+    }
+}
+
+/// Fast-path gate: false until the global registry holds at least one
+/// armed site (set on env parse or [`arm_global`], never cleared by
+/// firing — a fired site just stops matching).
+static GLOBAL_ARMED: AtomicBool = AtomicBool::new(false);
+/// Whether the `GQ_FAULT` env var has been parsed into the registry yet.
+static INITIALIZED: AtomicBool = AtomicBool::new(false);
+
+static REGISTRY: OnceLock<Mutex<HashMap<String, Site>>> = OnceLock::new();
+
+thread_local! {
+    static LOCAL: RefCell<HashMap<&'static str, Site>> = RefCell::new(HashMap::new());
+}
+
+fn parse_one(part: &str) -> Result<(String, u64), String> {
+    let (name, nth) = part
+        .split_once(':')
+        .ok_or_else(|| format!("expected <site>:<nth>, got `{part}`"))?;
+    let name = name.trim();
+    let nth: u64 = nth.trim().parse().map_err(|_| format!("bad nth in `{part}`"))?;
+    if nth == 0 {
+        return Err(format!("nth must be >= 1 in `{part}`"));
+    }
+    if !SITES.contains(&name) {
+        return Err(format!("unknown fault site `{name}` (known: {SITES:?})"));
+    }
+    Ok((name.to_string(), nth))
+}
+
+fn registry() -> &'static Mutex<HashMap<String, Site>> {
+    let reg = REGISTRY.get_or_init(|| Mutex::new(HashMap::new()));
+    if !INITIALIZED.load(Ordering::Acquire) {
+        let mut sites = reg.lock().unwrap();
+        if !INITIALIZED.load(Ordering::Acquire) {
+            if let Ok(spec) = std::env::var("GQ_FAULT") {
+                for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+                    match parse_one(part) {
+                        Ok((name, nth)) => {
+                            crate::log_info!("fault", "armed `{name}` to fire on hit {nth}");
+                            sites.insert(name, Site { nth, hits: 0, fired: false });
+                        }
+                        Err(e) => crate::log_warn!("fault", "ignoring GQ_FAULT entry: {e}"),
+                    }
+                }
+            }
+            if !sites.is_empty() {
+                GLOBAL_ARMED.store(true, Ordering::Release);
+            }
+            INITIALIZED.store(true, Ordering::Release);
+        }
+    }
+    reg
+}
+
+/// Count one hit of `site`; true exactly when an armed counter (thread-local
+/// first, then process-global) reaches its `nth`. Near-free when disarmed.
+pub fn hit(site: &str) -> bool {
+    let local = LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        if l.is_empty() {
+            return false;
+        }
+        l.get_mut(site).map(Site::hit).unwrap_or(false)
+    });
+    if local {
+        return true;
+    }
+    if INITIALIZED.load(Ordering::Acquire) && !GLOBAL_ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    let mut reg = registry().lock().unwrap();
+    reg.get_mut(site).map(Site::hit).unwrap_or(false)
+}
+
+/// Panic with an identifiable payload when `site` fires.
+pub fn maybe_panic(site: &str) {
+    if hit(site) {
+        panic!("injected fault: {site}");
+    }
+}
+
+/// Sleep `d` when `site` fires (stall/slow-I/O injection).
+pub fn maybe_stall(site: &str, d: Duration) {
+    if hit(site) {
+        crate::log_warn!("fault", "injected stall at `{site}` for {d:?}");
+        std::thread::sleep(d);
+    }
+}
+
+/// Arm `site` **for the calling thread only**: fires once, on the `nth`
+/// subsequent [`hit`] from this thread. Safe under parallel test execution.
+pub fn arm(site: &'static str, nth: u64) {
+    assert!(nth >= 1, "nth is 1-based");
+    LOCAL.with(|l| {
+        l.borrow_mut().insert(site, Site { nth, hits: 0, fired: false });
+    });
+}
+
+/// Clear every thread-local arming on the calling thread.
+pub fn disarm_all() {
+    LOCAL.with(|l| l.borrow_mut().clear());
+}
+
+/// Arm `site` **process-wide** (reaches the engine/connection threads).
+/// Counts from zero at arming. Callers that share a process (integration
+/// tests) must serialize chaos scenarios around this.
+pub fn arm_global(site: &str, nth: u64) {
+    assert!(nth >= 1, "nth is 1-based");
+    let mut reg = registry().lock().unwrap();
+    reg.insert(site.to_string(), Site { nth, hits: 0, fired: false });
+    GLOBAL_ARMED.store(true, Ordering::Release);
+}
+
+/// Clear every process-global arming (env-parsed and [`arm_global`]).
+pub fn disarm_all_global() {
+    let mut reg = registry().lock().unwrap();
+    reg.clear();
+    GLOBAL_ARMED.store(false, Ordering::Release);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_known_sites_and_rejects_garbage() {
+        assert_eq!(parse_one("step-panic:3").unwrap(), ("step-panic".to_string(), 3));
+        assert_eq!(parse_one(" nan-logits : 1 ").unwrap(), ("nan-logits".to_string(), 1));
+        assert!(parse_one("step-panic").is_err(), "missing nth");
+        assert!(parse_one("step-panic:0").is_err(), "nth is 1-based");
+        assert!(parse_one("step-panic:x").is_err(), "non-numeric nth");
+        assert!(parse_one("frobnicate:2").is_err(), "unknown site");
+    }
+
+    #[test]
+    fn thread_local_arm_fires_exactly_once_on_nth_hit() {
+        disarm_all();
+        arm(STEP_PANIC, 3);
+        assert!(!hit(STEP_PANIC));
+        assert!(!hit(STEP_PANIC));
+        assert!(hit(STEP_PANIC), "third hit must fire");
+        assert!(!hit(STEP_PANIC), "a fired site stays quiet");
+        assert!(!hit(NAN_LOGITS), "other sites unaffected");
+        disarm_all();
+    }
+
+    #[test]
+    fn disarmed_sites_never_fire() {
+        disarm_all();
+        for _ in 0..100 {
+            assert!(!hit(ENGINE_STALL));
+        }
+    }
+
+    #[test]
+    fn thread_local_arming_is_invisible_to_other_threads() {
+        disarm_all();
+        arm(SLOW_WRITE, 1);
+        let other = std::thread::spawn(|| hit(SLOW_WRITE));
+        assert!(!other.join().unwrap(), "arming must not leak across threads");
+        assert!(hit(SLOW_WRITE), "still armed on this thread");
+        disarm_all();
+    }
+}

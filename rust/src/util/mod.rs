@@ -3,6 +3,7 @@
 //! The offline environment has no `rand`/`log`/`humantime` crates, so these
 //! are built in-repo (DESIGN.md §1, offline constraints table).
 
+pub mod fault;
 pub mod fmt;
 pub mod half;
 pub mod json;

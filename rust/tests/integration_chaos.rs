@@ -1,0 +1,363 @@
+//! Chaos integration: deterministic fault injection (`util::fault`)
+//! against a live [`HttpServer`]. Each scenario arms a process-global
+//! fault site, drives real HTTP clients into it, and asserts the
+//! supervision contract: the poisoned request fails with a 5xx (or an SSE
+//! error event), everything else keeps streaming, KV pages return to the
+//! arena, and a fault-free follow-up request is served bit-identically to
+//! the in-process scheduler path.
+//!
+//! Global fault sites are process-wide, so every test serializes on
+//! [`SERIAL`] and disarms on entry and exit (panic included) — scenarios
+//! can never leak injected faults into each other.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use guidedquant::cfg::{preset, RestartPolicy, ServeConfig};
+use guidedquant::model::{NativeModel, ParamStore};
+use guidedquant::serve::{build_serving_model, generate_scheduled, HttpServer, ServeFormat};
+use guidedquant::util::fault;
+use guidedquant::util::json::Json;
+use guidedquant::util::Rng;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Holds the serialization lock for a scenario and guarantees the global
+/// fault registry is clean on both ends, even when an assertion panics
+/// while a site is still armed.
+struct FaultScope<'a>(#[allow(dead_code)] MutexGuard<'a, ()>);
+
+impl Drop for FaultScope<'_> {
+    fn drop(&mut self) {
+        fault::disarm_all_global();
+    }
+}
+
+fn scenario() -> FaultScope<'static> {
+    // A previous test panicking mid-scenario poisons the mutex; the lock
+    // itself is still a valid serialization token.
+    let g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    fault::disarm_all_global();
+    FaultScope(g)
+}
+
+fn model() -> Arc<NativeModel> {
+    let (cfg, _) = preset("tiny");
+    let ps = ParamStore::init(&cfg, &mut Rng::new(0));
+    Arc::new(build_serving_model(&ps, None, ServeFormat::Fp32, 4).unwrap())
+}
+
+fn serve(cfg: ServeConfig) -> (Arc<NativeModel>, HttpServer) {
+    let m = model();
+    let server = HttpServer::bind(m.clone(), cfg, "127.0.0.1:0").unwrap();
+    (m, server)
+}
+
+struct Response {
+    status: u16,
+    body: String,
+}
+
+fn request(addr: SocketAddr, raw: &str) -> Response {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    s.write_all(raw.as_bytes()).unwrap();
+    let mut r = BufReader::new(s);
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let status: u16 = line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).unwrap();
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        let (k, v) = t.split_once(':').unwrap();
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    let chunked = headers.iter().any(|(k, v)| k == "transfer-encoding" && v.contains("chunked"));
+    let body = if chunked {
+        let mut out = String::new();
+        loop {
+            let mut sz = String::new();
+            r.read_line(&mut sz).unwrap();
+            let n = usize::from_str_radix(sz.trim(), 16).unwrap();
+            let mut buf = vec![0u8; n + 2];
+            r.read_exact(&mut buf).unwrap();
+            if n == 0 {
+                break;
+            }
+            out.push_str(std::str::from_utf8(&buf[..n]).unwrap());
+        }
+        out
+    } else {
+        let cl = headers.iter().find(|(k, _)| k == "content-length").expect("content-length");
+        let n: usize = cl.1.parse().unwrap();
+        let mut buf = vec![0u8; n];
+        r.read_exact(&mut buf).unwrap();
+        String::from_utf8(buf).unwrap()
+    };
+    Response { status, body }
+}
+
+fn get(addr: SocketAddr, path: &str) -> Response {
+    request(addr, &format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n"))
+}
+
+fn post(addr: SocketAddr, path: &str, body: &str) -> Response {
+    request(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+fn completion_body(prompt: &[u32], max_tokens: usize, stream: bool) -> String {
+    let toks: Vec<Json> = prompt.iter().map(|&t| Json::from(t)).collect();
+    Json::object()
+        .with("prompt", toks)
+        .with("max_tokens", max_tokens)
+        .with("stream", stream)
+        .encode()
+}
+
+fn response_tokens(body: &str) -> Vec<u32> {
+    let doc = Json::parse(body).unwrap();
+    let arr = doc.get("tokens").unwrap().as_arr().unwrap().to_vec();
+    arr.iter().map(|t| t.as_u64().unwrap() as u32).collect()
+}
+
+fn sse_events(body: &str) -> Vec<String> {
+    body.lines().filter(|l| l.starts_with("data: ")).map(|l| l[6..].to_string()).collect()
+}
+
+/// The token payloads of a streamed body, in order.
+fn streamed_tokens(body: &str) -> Vec<u32> {
+    sse_events(body)
+        .iter()
+        .filter_map(|e| Json::parse(e).ok())
+        .filter_map(|ev| ev.get("token").and_then(|t| t.as_u64()).map(|t| t as u32))
+        .collect()
+}
+
+fn reference_tokens(m: &NativeModel, prompt: &[u32], gen: usize) -> Vec<u32> {
+    let (outs, _) =
+        generate_scheduled(m, &[prompt.to_vec()], gen, 1, ServeConfig::default()).unwrap();
+    outs.into_iter().next().unwrap()
+}
+
+fn wait_for_metrics(addr: SocketAddr, pred: impl Fn(&Json) -> bool, what: &str) {
+    let t0 = Instant::now();
+    loop {
+        let m = Json::parse(&get(addr, "/metrics").body).unwrap();
+        if pred(&m) {
+            return;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30), "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// After a fault the server must keep serving: a fresh request returns
+/// exactly the in-process scheduler tokens.
+fn assert_serves_bit_identically(addr: SocketAddr, m: &NativeModel) {
+    let prompt = [3u32, 17, 99, 5];
+    let resp = post(addr, "/v1/completions", &completion_body(&prompt, 6, false));
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    assert_eq!(
+        response_tokens(&resp.body),
+        reference_tokens(m, &prompt, 6),
+        "post-fault tokens diverged from the scheduler path"
+    );
+}
+
+#[test]
+fn step_panic_on_a_single_lane_returns_500_and_recovers() {
+    let _scope = scenario();
+    let (m, server) = serve(ServeConfig::default());
+    let addr = server.local_addr();
+
+    // Third decode step panics; with one active lane the supervisor pins
+    // the fault on that request — no engine restart.
+    fault::arm_global(fault::STEP_PANIC, 3);
+    let resp = post(addr, "/v1/completions", &completion_body(&[1, 2, 3], 8, false));
+    assert_eq!(resp.status, 500, "{}", resp.body);
+    assert!(Json::parse(&resp.body).unwrap().get("error").is_some());
+
+    let h = Json::parse(&get(addr, "/healthz").body).unwrap();
+    assert_eq!(h.get("engine_alive").unwrap().as_bool(), Some(true));
+    assert_eq!(h.get("engine_restarts").unwrap().as_u64(), Some(0));
+    wait_for_metrics(
+        addr,
+        |mx| {
+            mx.get("failed").unwrap().as_u64() == Some(1)
+                && mx.get("kv_bytes").unwrap().as_u64() == Some(0)
+        },
+        "failed counter + kv release",
+    );
+    assert_serves_bit_identically(addr, &m);
+    server.shutdown();
+}
+
+#[test]
+fn nan_logits_poison_one_request_not_the_engine() {
+    let _scope = scenario();
+    let (m, server) = serve(ServeConfig::default());
+    let addr = server.local_addr();
+
+    fault::arm_global(fault::NAN_LOGITS, 2);
+    let resp = post(addr, "/v1/completions", &completion_body(&[4, 4, 4], 8, false));
+    assert_eq!(resp.status, 500, "a poisoned logit row must not serve garbage tokens");
+    wait_for_metrics(
+        addr,
+        |mx| {
+            mx.get("failed").unwrap().as_u64() == Some(1)
+                && mx.get("kv_bytes").unwrap().as_u64() == Some(0)
+        },
+        "poisoned lane failure",
+    );
+    assert_serves_bit_identically(addr, &m);
+    server.shutdown();
+}
+
+#[test]
+fn multi_lane_panic_with_requeue_restarts_and_streams_exactly_once() {
+    let _scope = scenario();
+    let (m, server) = serve(ServeConfig {
+        max_batch: 2,
+        max_queued: 8,
+        restart_policy: RestartPolicy::Requeue,
+        ..ServeConfig::default()
+    });
+    let addr = server.local_addr();
+    let prompts = [vec![1u32, 2, 3], vec![9u32, 8]];
+    let gen = 600usize;
+
+    let handles: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            let p = p.clone();
+            std::thread::spawn(move || {
+                post(addr, "/v1/completions", &completion_body(&p, gen, true))
+            })
+        })
+        .collect();
+    wait_for_metrics(addr, |mx| mx.get("active").unwrap().as_u64() == Some(2), "both lanes live");
+
+    // Next decode step panics with two lanes active: unattributable, so
+    // the supervisor restarts and requeues both under their original ids.
+    fault::arm_global(fault::STEP_PANIC, 1);
+
+    for (p, h) in prompts.iter().zip(handles) {
+        let resp = h.join().unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        let events = sse_events(&resp.body);
+        assert_eq!(events.last().unwrap(), "[DONE]", "requeued stream must still terminate");
+        assert_eq!(
+            streamed_tokens(&resp.body),
+            reference_tokens(&m, p, gen),
+            "replay suppression must hand out each token exactly once, bit-identically"
+        );
+    }
+    let h = Json::parse(&get(addr, "/healthz").body).unwrap();
+    assert_eq!(h.get("status").unwrap().as_str(), Some("ok"), "restart is not death");
+    assert!(h.get("engine_restarts").unwrap().as_u64().unwrap() >= 1);
+    wait_for_metrics(addr, |mx| mx.get("kv_bytes").unwrap().as_u64() == Some(0), "kv drained");
+    assert_serves_bit_identically(addr, &m);
+    server.shutdown();
+}
+
+#[test]
+fn restart_budget_exhaustion_flips_healthz_to_503() {
+    let _scope = scenario();
+    let (_m, server) = serve(ServeConfig {
+        max_batch: 2,
+        max_queued: 8,
+        max_engine_restarts: 0,
+        ..ServeConfig::default()
+    });
+    let addr = server.local_addr();
+
+    let handles: Vec<_> = [vec![1u32, 2], vec![7u32, 7, 7]]
+        .into_iter()
+        .map(|p| {
+            std::thread::spawn(move || {
+                post(addr, "/v1/completions", &completion_body(&p, 600, true))
+            })
+        })
+        .collect();
+    wait_for_metrics(addr, |mx| mx.get("active").unwrap().as_u64() == Some(2), "both lanes live");
+    fault::arm_global(fault::STEP_PANIC, 1);
+
+    // Budget 0: the first unattributable panic is fatal. Both streams end
+    // with an error event instead of [DONE].
+    for h in handles {
+        let resp = h.join().unwrap();
+        let events = sse_events(&resp.body);
+        assert_ne!(events.last().map(String::as_str), Some("[DONE]"));
+        let last = Json::parse(events.last().unwrap()).unwrap();
+        assert!(last.get("error").is_some(), "dying stream must carry an error event");
+    }
+
+    // /healthz reports the truth: 503, engine not alive.
+    let t0 = Instant::now();
+    loop {
+        let h = get(addr, "/healthz");
+        if h.status == 503 {
+            let doc = Json::parse(&h.body).unwrap();
+            assert_eq!(doc.get("status").unwrap().as_str(), Some("engine dead"));
+            assert_eq!(doc.get("engine_alive").unwrap().as_bool(), Some(false));
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30), "healthz never flipped to 503");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let m = Json::parse(&get(addr, "/metrics").body).unwrap();
+    assert!(m.get("failed").unwrap().as_u64().unwrap() >= 2);
+    assert!(m.get("engine_restarts").unwrap().as_u64().unwrap() >= 1);
+
+    // New work is refused with 503, not silently queued into a dead engine.
+    let resp = post(addr, "/v1/completions", &completion_body(&[1], 4, false));
+    assert_eq!(resp.status, 503, "{}", resp.body);
+    server.shutdown();
+}
+
+#[test]
+fn engine_stall_delays_but_never_corrupts_output() {
+    let _scope = scenario();
+    let (m, server) = serve(ServeConfig::default());
+    let addr = server.local_addr();
+
+    // A 1.5s stall injected into one decode step: the request takes
+    // longer but the tokens are untouched.
+    fault::arm_global(fault::ENGINE_STALL, 2);
+    let prompt = [5u32, 1, 2];
+    let resp = post(addr, "/v1/completions", &completion_body(&prompt, 6, false));
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    assert_eq!(response_tokens(&resp.body), reference_tokens(&m, &prompt, 6));
+    assert_serves_bit_identically(addr, &m);
+    server.shutdown();
+}
+
+#[test]
+fn slow_socket_writes_do_not_corrupt_streams() {
+    let _scope = scenario();
+    let (m, server) = serve(ServeConfig::default());
+    let addr = server.local_addr();
+
+    // One SSE chunk write stalls 1s mid-stream; the client just sees a
+    // pause, then the identical token sequence.
+    fault::arm_global(fault::SLOW_WRITE, 2);
+    let prompt = [2u32, 4, 6];
+    let resp = post(addr, "/v1/completions", &completion_body(&prompt, 6, true));
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    assert_eq!(sse_events(&resp.body).last().unwrap(), "[DONE]");
+    assert_eq!(streamed_tokens(&resp.body), reference_tokens(&m, &prompt, 6));
+    server.shutdown();
+}

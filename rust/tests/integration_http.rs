@@ -142,6 +142,10 @@ fn healthz_metrics_and_routing() {
     let h = Json::parse(&h.body).unwrap();
     assert_eq!(h.get("status").unwrap().as_str(), Some("ok"));
     assert_eq!(h.get("model").unwrap().as_str(), Some("tiny"));
+    // Liveness is truthful, not hardcoded: the supervised engine reports
+    // its alive flag and restart count.
+    assert_eq!(h.get("engine_alive").unwrap().as_bool(), Some(true));
+    assert_eq!(h.get("engine_restarts").unwrap().as_u64(), Some(0));
 
     let m = get(addr, "/metrics");
     assert_eq!(m.status, 200);
@@ -155,6 +159,10 @@ fn healthz_metrics_and_routing() {
         "token_ms",
         "kv_bytes",
         "kv_allocated_bytes",
+        "cancelled",
+        "timed_out",
+        "failed",
+        "engine_restarts",
     ];
     for key in gauges {
         assert!(m.get(key).is_some(), "metrics missing `{key}`: {}", m.encode());
@@ -163,6 +171,76 @@ fn healthz_metrics_and_routing() {
 
     assert_eq!(get(addr, "/nope").status, 404);
     assert_eq!(get(addr, "/v1/completions").status, 405, "GET on a POST route");
+    server.shutdown();
+}
+
+#[test]
+fn per_request_timeout_returns_partial_output_as_timeout() {
+    let (_m, server) = serve(ServeFormat::Fp32, ServeConfig::default());
+    let addr = server.local_addr();
+    let body = Json::object()
+        .with("prompt", vec![Json::from(1u32), Json::from(2u32)])
+        .with("max_tokens", 4000usize)
+        .with("timeout_ms", 80u64)
+        .encode();
+    let resp = post(addr, "/v1/completions", &body);
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let doc = Json::parse(&resp.body).unwrap();
+    assert_eq!(doc.get("finish_reason").unwrap().as_str(), Some("timeout"));
+    let tokens = response_tokens(&resp.body);
+    assert!(!tokens.is_empty(), "deadline eviction should keep partial output");
+    assert!(tokens.len() < 4000, "the deadline must fire well before max_tokens");
+    wait_for_metrics(
+        addr,
+        |m| m.get("timed_out").unwrap().as_u64() == Some(1),
+        "timed_out counter",
+    );
+    // The expired lane released its KV pages.
+    wait_for_metrics(addr, |m| m.get("kv_bytes").unwrap().as_u64() == Some(0), "kv freed");
+    server.shutdown();
+}
+
+#[test]
+fn client_disconnect_cancels_the_lane_and_frees_kv() {
+    let (m, server) = serve(ServeFormat::Fp32, ServeConfig::default());
+    let addr = server.local_addr();
+
+    // Streamed request with a long budget; read a few bytes, then hang up.
+    {
+        let body = completion_body(&[5u32, 6, 7], 4000, true);
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        s.write_all(
+            format!(
+                "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        let mut first = [0u8; 64];
+        s.read_exact(&mut first).unwrap(); // the stream is live
+        drop(s); // mid-stream hang-up
+    }
+
+    // The failed SSE write turns into ToEngine::Cancel: the lane is
+    // evicted, counted, and its KV pages return to the arena.
+    wait_for_metrics(
+        addr,
+        |mx| {
+            mx.get("cancelled").unwrap().as_u64() == Some(1)
+                && mx.get("active").unwrap().as_u64() == Some(0)
+                && mx.get("kv_bytes").unwrap().as_u64() == Some(0)
+        },
+        "disconnect cancellation",
+    );
+
+    // A fault-free follow-up is served bit-identically: the abandoned lane
+    // left no residue in the scheduler.
+    let prompt = [5u32, 6, 7];
+    let resp = post(addr, "/v1/completions", &completion_body(&prompt, 5, false));
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    assert_eq!(response_tokens(&resp.body), reference_tokens(&m, &prompt, 5));
     server.shutdown();
 }
 

@@ -1,0 +1,209 @@
+#!/usr/bin/env bash
+# Chaos end-to-end for the fault-tolerant serving stack.
+#
+# Boots the release binary on the tiny preset with a deterministic fault
+# injected via GQ_FAULT=<site>:<nth> (see rust/src/util/fault.rs), drives
+# real HTTP traffic into the fault, and asserts the supervision contract:
+#
+#   * step-panic    - an engine-step panic on a single lane answers 500,
+#                     the engine does NOT restart, and the next request
+#                     returns bit-identical greedy tokens.
+#   * nan-logits    - a poisoned (all-NaN) logit row fails only that
+#                     request (500), never serves garbage tokens.
+#   * engine-stall  - a 1.5s stall in one decode step delays but never
+#                     corrupts output.
+#   * slow-client   - client-side trouble: a stalled SSE chunk write, a
+#                     mid-stream client hang-up (lane cancelled, KV pages
+#                     freed), and an expired per-request deadline
+#                     (finish_reason "timeout" with partial output).
+#
+# After every fault the server must keep serving tokens bit-identical to
+# the fault-free baseline, and kv_bytes must return to the idle baseline.
+#
+# All intermediate files land in ./serve-chaos/ so CI can upload them on
+# failure. Usage: scripts/serve_chaos.sh [path-to-gq]
+#   CHAOS_SCENARIO=step-panic|nan-logits|engine-stall|slow-client|all
+#   (default all) selects one scenario for CI matrix fan-out.
+
+set -euo pipefail
+
+GQ=${1:-target/release/gq}
+SCENARIO=${CHAOS_SCENARIO:-all}
+DIR=serve-chaos
+rm -rf "$DIR"
+mkdir -p "$DIR"
+LOG="$DIR/boot.log"
+
+PIDS=()
+cleanup() {
+    for p in "${PIDS[@]:-}"; do
+        kill "$p" 2>/dev/null || true
+        wait "$p" 2>/dev/null || true
+    done
+}
+trap cleanup EXIT
+
+fail() {
+    echo "FAIL: $*" >&2
+    echo "---- server log ($LOG) ----" >&2
+    cat "$LOG" >&2 || true
+    exit 1
+}
+
+[ -x "$GQ" ] || { echo "FAIL: binary $GQ not found (run cargo build --release)" >&2; exit 1; }
+
+# boot <name> [KEY=VALUE ...]: start a server (faults via env), wait for
+# its address. Sets LOG, SERVER, BASE.
+boot() {
+    local name=$1
+    shift
+    LOG="$DIR/$name.log"
+    env "$@" "$GQ" serve --model tiny --format nonuniform --bits 4 \
+        --http 127.0.0.1:0 --max-batch 2 --max-queued 4 >"$LOG" 2>&1 &
+    SERVER=$!
+    PIDS+=("$SERVER")
+    local addr=
+    for _ in $(seq 1 240); do
+        addr=$(sed -n 's/^http: listening on //p' "$LOG" | head -n 1)
+        [ -n "$addr" ] && break
+        kill -0 "$SERVER" 2>/dev/null || fail "$name server exited during startup"
+        sleep 0.25
+    done
+    [ -n "$addr" ] || fail "$name server never reported a listening address"
+    BASE="http://$addr"
+    echo "[$name] server up at $BASE"
+}
+
+stop() {
+    kill "$SERVER" 2>/dev/null || true
+    wait "$SERVER" 2>/dev/null || true
+}
+
+tokens_of() {
+    jq -r '.tokens | map(tostring) | join(",")' "$1"
+}
+
+# poll_metrics <jq-predicate> <description>
+poll_metrics() {
+    for _ in $(seq 1 120); do
+        curl -fsS "$BASE/metrics" >"$DIR/poll.json" 2>/dev/null || true
+        if jq -e "$1" "$DIR/poll.json" >/dev/null 2>&1; then
+            return 0
+        fi
+        sleep 0.25
+    done
+    fail "timed out waiting for: $2 ($(cat "$DIR/poll.json" 2>/dev/null))"
+}
+
+# The fault-free request every scenario replays to prove the server still
+# serves bit-identical greedy tokens.
+PROMPT='{"prompt": [1, 2, 3, 4], "max_tokens": 8}'
+
+assert_baseline_tokens() { # assert_baseline_tokens <name>
+    curl -fsS -X POST "$BASE/v1/completions" -d "$PROMPT" >"$DIR/$1_after.json" \
+        || fail "$1: post-fault request did not get a 200"
+    local got
+    got=$(tokens_of "$DIR/$1_after.json")
+    [ "$got" = "$REF" ] || fail "$1: post-fault tokens [$got] differ from baseline [$REF]"
+}
+
+want_scenario() {
+    [ "$SCENARIO" = all ] || [ "$SCENARIO" = "$1" ]
+}
+
+# --- baseline: fault-free reference tokens -----------------------------------
+boot baseline
+curl -fsS -X POST "$BASE/v1/completions" -d "$PROMPT" >"$DIR/baseline.json"
+REF=$(tokens_of "$DIR/baseline.json")
+[ -n "$REF" ] || fail "baseline returned no tokens"
+echo "baseline tokens: $REF"
+stop
+
+# --- step-panic: single-lane engine panic -> 500, no restart -----------------
+if want_scenario step-panic; then
+    boot step-panic GQ_FAULT=step-panic:3
+    CODE=$(curl -s -o "$DIR/step-panic_hit.json" -w '%{http_code}' \
+        -X POST "$BASE/v1/completions" -d "$PROMPT")
+    [ "$CODE" = 500 ] || fail "step-panic: poisoned request returned $CODE, want 500"
+    jq -e 'has("error")' "$DIR/step-panic_hit.json" >/dev/null \
+        || fail "step-panic: 500 body carries no error"
+    curl -fsS "$BASE/healthz" >"$DIR/step-panic_healthz.json"
+    jq -e '.status == "ok" and .engine_alive == true and .engine_restarts == 0' \
+        "$DIR/step-panic_healthz.json" >/dev/null \
+        || fail "step-panic: single-lane fault must not restart: $(cat "$DIR/step-panic_healthz.json")"
+    poll_metrics '.failed >= 1 and .kv_bytes == 0' "failed counter + kv release"
+    assert_baseline_tokens step-panic
+    stop
+    echo "[step-panic] OK"
+fi
+
+# --- nan-logits: poisoned logit row -> 500, never garbage tokens -------------
+if want_scenario nan-logits; then
+    boot nan-logits GQ_FAULT=nan-logits:4
+    CODE=$(curl -s -o "$DIR/nan-logits_hit.json" -w '%{http_code}' \
+        -X POST "$BASE/v1/completions" -d "$PROMPT")
+    [ "$CODE" = 500 ] || fail "nan-logits: poisoned request returned $CODE, want 500"
+    poll_metrics '.failed >= 1 and .kv_bytes == 0' "poisoned lane failure"
+    assert_baseline_tokens nan-logits
+    stop
+    echo "[nan-logits] OK"
+fi
+
+# --- engine-stall: delayed step, identical tokens ----------------------------
+if want_scenario engine-stall; then
+    boot engine-stall GQ_FAULT=engine-stall:4
+    curl -fsS -X POST "$BASE/v1/completions" -d "$PROMPT" >"$DIR/engine-stall_hit.json" \
+        || fail "engine-stall: stalled request must still complete"
+    GOT=$(tokens_of "$DIR/engine-stall_hit.json")
+    [ "$GOT" = "$REF" ] || fail "engine-stall: tokens [$GOT] differ from baseline [$REF]"
+    assert_baseline_tokens engine-stall
+    stop
+    echo "[engine-stall] OK"
+fi
+
+# --- slow-client: slow writes, mid-stream hang-up, expired deadline ----------
+if want_scenario slow-client; then
+    # (a) one SSE chunk write stalls 1s: the stream pauses, tokens identical.
+    boot slow-write GQ_FAULT=slow-write:2
+    curl -fsS -N -X POST "$BASE/v1/completions" \
+        -d '{"prompt": [1, 2, 3, 4], "max_tokens": 8, "stream": true}' \
+        >"$DIR/slow-write_stream.txt" \
+        || fail "slow-write: streamed request failed"
+    tail -n 2 "$DIR/slow-write_stream.txt" | grep -q '^data: \[DONE\]' \
+        || fail "slow-write: stream did not end with [DONE]"
+    STREAMED=$(grep -o '"token":[0-9]*' "$DIR/slow-write_stream.txt" | cut -d: -f2 | paste -sd, -)
+    [ "$STREAMED" = "$REF" ] \
+        || fail "slow-write: streamed tokens [$STREAMED] differ from baseline [$REF]"
+    stop
+    echo "[slow-write] OK"
+
+    # (b) the client hangs up mid-stream: the lane is cancelled and its KV
+    # pages return to the arena (no fault site needed — this is pure
+    # client-side chaos).
+    boot hangup
+    curl -s -N --max-time 1 -X POST "$BASE/v1/completions" \
+        -d '{"prompt": [5, 6, 7], "max_tokens": 4096, "stream": true}' \
+        >"$DIR/hangup_stream.txt" || true
+    poll_metrics '.cancelled >= 1 and .active == 0 and .kv_bytes == 0' \
+        "hang-up cancellation + kv release"
+    assert_baseline_tokens hangup
+    stop
+    echo "[hangup] OK"
+
+    # (c) an expired per-request deadline returns partial output flagged
+    # "timeout" and frees the lane.
+    boot deadline
+    curl -fsS -X POST "$BASE/v1/completions" \
+        -d '{"prompt": [5, 6, 7], "max_tokens": 4000, "timeout_ms": 80}' \
+        >"$DIR/deadline.json" \
+        || fail "deadline: timed-out request must still answer 200 with partial output"
+    jq -e '.finish_reason == "timeout" and (.tokens | length > 0) and (.tokens | length < 4000)' \
+        "$DIR/deadline.json" >/dev/null \
+        || fail "deadline: wrong shape: $(cat "$DIR/deadline.json")"
+    poll_metrics '.timed_out >= 1 and .kv_bytes == 0' "timeout counter + kv release"
+    assert_baseline_tokens deadline
+    stop
+    echo "[deadline] OK"
+fi
+
+echo "serve-chaos OK (scenario: $SCENARIO)"

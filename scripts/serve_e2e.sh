@@ -54,7 +54,9 @@ echo "server up at $BASE"
 
 # --- /healthz ---------------------------------------------------------------
 curl -fsS "$BASE/healthz" >"$DIR/healthz.json"
-jq -e '.status == "ok"' "$DIR/healthz.json" >/dev/null || fail "/healthz not ok"
+jq -e '.status == "ok" and .engine_alive == true and .engine_restarts == 0' \
+    "$DIR/healthz.json" >/dev/null \
+    || fail "/healthz not ok / liveness fields wrong: $(cat "$DIR/healthz.json")"
 
 # --- unknown route ----------------------------------------------------------
 CODE=$(curl -s -o /dev/null -w '%{http_code}' "$BASE/nope")
@@ -109,7 +111,9 @@ curl -fsS "$BASE/metrics" >"$DIR/metrics.json"
 jq -e ".completed >= 2 and .rejected >= $N429
        and (.ttft_ms | has(\"p50\")) and (.token_ms | has(\"p99\"))
        and .kv_dtype == \"f32\"
-       and has(\"kv_bytes\") and has(\"kv_allocated_bytes\")" \
+       and has(\"kv_bytes\") and has(\"kv_allocated_bytes\")
+       and .engine_restarts == 0 and .failed == 0
+       and has(\"cancelled\") and has(\"timed_out\")" \
     "$DIR/metrics.json" >/dev/null \
     || fail "metrics missing expected fields: $(cat "$DIR/metrics.json")"
 
