@@ -271,6 +271,16 @@ pub struct ServeConfig {
     /// Engine restarts tolerated before the supervisor declares the
     /// engine dead (`/healthz` flips to 503 and the server drains).
     pub max_engine_restarts: usize,
+    /// Hard cap on KV cache memory, in bytes (`kv_budget_mb` in TOML,
+    /// `gq serve --kv-budget-mb N`). 0 disables governance. When set,
+    /// admission estimates each request's worst-case page cost from
+    /// prompt length + `max_tokens` and refuses to start requests that
+    /// would push live KV past the high watermark; the scheduler
+    /// brownouts (clamps `max_tokens`) above the low watermark and
+    /// preempts the youngest lane above the high watermark. Watermarks
+    /// are fixed fractions of the budget (`serve::scheduler::KV_LOW_WATERMARK`
+    /// / `KV_HIGH_WATERMARK`).
+    pub kv_budget_bytes: usize,
 }
 
 impl Default for ServeConfig {
@@ -286,6 +296,7 @@ impl Default for ServeConfig {
             queue_timeout_ms: 0,
             restart_policy: RestartPolicy::FailFast,
             max_engine_restarts: 3,
+            kv_budget_bytes: 0,
         }
     }
 }
@@ -331,6 +342,12 @@ impl ServeConfig {
         }
         if let Some(v) = doc.get_int(section, "max_engine_restarts") {
             c.max_engine_restarts = v as usize;
+        }
+        if let Some(v) = doc.get_int(section, "kv_budget_mb") {
+            if v < 0 {
+                bail!("serve.kv_budget_mb must be non-negative");
+            }
+            c.kv_budget_bytes = (v as usize) * 1024 * 1024;
         }
         if c.max_batch == 0 {
             bail!("serve.max_batch must be at least 1");
@@ -528,6 +545,20 @@ mod tests {
         assert_eq!(c.restart_policy, RestartPolicy::Requeue);
         assert_eq!(c.max_engine_restarts, 1);
         let doc = TomlDoc::parse("[serve]\nrestart_policy = \"retry\"\n").unwrap();
+        assert!(ServeConfig::from_toml(&doc, "serve").is_err());
+    }
+
+    #[test]
+    fn kv_budget_from_toml_in_mb_defaults_off() {
+        let c = ServeConfig::default();
+        assert_eq!(c.kv_budget_bytes, 0, "governance must stay opt-in");
+        let doc = TomlDoc::parse("[serve]\nkv_budget_mb = 2\n").unwrap();
+        let c = ServeConfig::from_toml(&doc, "serve").unwrap();
+        assert_eq!(c.kv_budget_bytes, 2 * 1024 * 1024);
+        let doc = TomlDoc::parse("[serve]\nkv_budget_mb = 0\n").unwrap();
+        let c = ServeConfig::from_toml(&doc, "serve").unwrap();
+        assert_eq!(c.kv_budget_bytes, 0);
+        let doc = TomlDoc::parse("[serve]\nkv_budget_mb = -1\n").unwrap();
         assert!(ServeConfig::from_toml(&doc, "serve").is_err());
     }
 

@@ -60,6 +60,10 @@ const USAGE: &str = "usage: gq <pipeline|train|quantize|eval|serve|fisher|info> 
                 scheduler restart)
                 --max-engine-restarts N (restart budget before the
                 engine is declared dead and /healthz turns 503)
+                --kv-budget-mb MB (KV memory governance budget; 0 = off.
+                Admission is cost-aware under the budget: brownout above
+                the low watermark, preempt-youngest above the high one,
+                429 with a computed Retry-After as the last resort)
   env:          GQ_THREADS=N caps the shared worker pool (1 = serial)
   train:        --steps N --save FILE
   eval/quantize: --load FILE [--save FILE] --artifact fwd_loss|fwd_loss_qa4kv4|...";
@@ -98,6 +102,9 @@ fn pipeline_config(args: &Args) -> Result<PipelineConfig> {
     }
     cfg.serve.max_engine_restarts =
         args.get_usize("max-engine-restarts", cfg.serve.max_engine_restarts)?;
+    if args.has("kv-budget-mb") {
+        cfg.serve.kv_budget_bytes = args.get_usize("kv-budget-mb", 0)? * 1024 * 1024;
+    }
     cfg.quant = quant_config(args, cfg.quant)?;
     Ok(cfg)
 }
@@ -219,7 +226,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
 const SERVE_FLAGS: &str = "config model artifacts out train-steps calib-batches eval-batches \
     workers seed max-batch max-queued scalar-prefill kv-dtype method bits groups sparse-frac \
     format requests gen-tokens prompt-len per-seq stream http load request-timeout \
-    queue-timeout restart-policy max-engine-restarts";
+    queue-timeout restart-policy max-engine-restarts kv-budget-mb";
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let allowed: Vec<&str> = SERVE_FLAGS.split_whitespace().collect();

@@ -227,6 +227,17 @@ impl DecodeState {
         self.pos = 0;
     }
 
+    /// Clear for reuse, **dropping** the pages back to the system allocator
+    /// instead of pooling them. This is the memory-governance release: a
+    /// preempted lane must actually shrink the resident KV footprint
+    /// (pooled pages still count as allocated), so its pages deallocate.
+    pub fn reset_discarding(&mut self) {
+        for list in self.key_pages.iter_mut().chain(self.val_pages.iter_mut()) {
+            list.clear();
+        }
+        self.pos = 0;
+    }
+
     fn rebind(&mut self, slab: Arc<PageSlab>) {
         debug_assert_eq!(slab.page_elems, KV_PAGE_POS * self.head_dim);
         debug_assert_eq!(slab.dtype, self.dtype);
@@ -316,6 +327,49 @@ impl KvArena {
     /// system allocator (e.g. before latency-sensitive serving).
     pub fn reserve_pages(&self, pages: usize) {
         self.slab.reserve(pages);
+    }
+
+    /// Bytes of one KV page at this arena's geometry and dtype.
+    pub fn page_bytes(&self) -> usize {
+        KV_PAGE_POS * self.head_dim * self.dtype.bytes()
+    }
+
+    /// Worst-case KV pages a request occupying `total_pos` positions
+    /// (prompt length + `max_tokens`) will hold: one K and one V page per
+    /// `(layer, head)` for every started 64-position page.
+    pub fn request_cost_pages(&self, total_pos: usize) -> usize {
+        total_pos.div_ceil(KV_PAGE_POS) * 2 * self.n_layers * self.n_heads
+    }
+
+    /// Worst-case KV bytes for a request of `total_pos` positions — the
+    /// admission-time cost estimate the memory governor budgets against.
+    pub fn request_cost_bytes(&self, total_pos: usize) -> usize {
+        self.request_cost_pages(total_pos) * self.page_bytes()
+    }
+
+    /// Release a preempted lane's state with its pages **deallocated**
+    /// rather than pooled (see [`DecodeState::reset_discarding`]); the
+    /// shell is still recycled.
+    pub fn discard(&mut self, mut state: DecodeState) {
+        debug_assert_eq!(state.n_layers(), self.n_layers);
+        debug_assert_eq!(state.head_dim, self.head_dim);
+        if state.dtype != self.dtype {
+            return;
+        }
+        state.rebind(Arc::clone(&self.slab));
+        state.reset_discarding();
+        self.free.push(state);
+    }
+
+    /// Drop pooled slab pages until at most `max_bytes` of page storage
+    /// remains idle in the pool. Governance uses this to shed resident
+    /// memory that recycling would otherwise hold forever.
+    pub fn trim_pooled_to(&self, max_bytes: usize) {
+        let page = self.page_bytes().max(1);
+        let mut free = self.slab.free.lock().unwrap();
+        while free.len() * page > max_bytes {
+            free.pop();
+        }
     }
 }
 
@@ -778,6 +832,58 @@ mod tests {
         }
         st2.pos += 1;
         assert_eq!(arena.pooled_pages(), held - n_layers * h * 2);
+    }
+
+    #[test]
+    fn request_cost_matches_actual_page_growth() {
+        let (n_layers, h, hd) = (2usize, 2usize, 8usize);
+        let d = h * hd;
+        let mut arena = KvArena::new(n_layers, h, hd);
+        assert_eq!(arena.page_bytes(), KV_PAGE_POS * hd * 4);
+        // The estimate is exact for any position count: run a lane to
+        // `total_pos` and compare against what it actually holds.
+        for total_pos in [1usize, KV_PAGE_POS, KV_PAGE_POS + 1, 3 * KV_PAGE_POS] {
+            let mut st = arena.acquire();
+            let row = vec![0.5f32; d];
+            for _ in 0..total_pos {
+                for l in 0..n_layers {
+                    st.append_kv(l, &row, &row);
+                }
+                st.pos += 1;
+            }
+            assert_eq!(
+                st.kv_allocated_bytes(),
+                arena.request_cost_bytes(total_pos),
+                "cost estimate must match actual allocation at pos {total_pos}"
+            );
+            arena.release(st);
+        }
+        assert_eq!(arena.request_cost_bytes(0), 0);
+    }
+
+    #[test]
+    fn discard_drops_pages_but_recycles_the_shell() {
+        let (n_layers, h, hd) = (1usize, 2usize, 8usize);
+        let d = h * hd;
+        let mut arena = KvArena::new(n_layers, h, hd);
+        let mut st = arena.acquire();
+        let row = vec![0.5f32; d];
+        st.append_kv(0, &row, &row);
+        st.pos += 1;
+        arena.discard(st);
+        assert_eq!(arena.pooled(), 1, "shell must recycle");
+        assert_eq!(arena.pooled_pages(), 0, "pages must deallocate, not pool");
+    }
+
+    #[test]
+    fn trim_pooled_drops_idle_pages_to_the_cap() {
+        let arena = KvArena::new(1, 2, 8);
+        arena.reserve_pages(10);
+        let page = arena.page_bytes();
+        arena.trim_pooled_to(4 * page);
+        assert_eq!(arena.pooled_pages(), 4);
+        arena.trim_pooled_to(0);
+        assert_eq!(arena.pooled_pages(), 0);
     }
 
     #[test]

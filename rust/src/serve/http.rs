@@ -33,7 +33,8 @@
 //! between blocking polls) and send [`ToEngine::Cancel`], so an abandoned
 //! lane frees its KV pages instead of decoding to completion. The
 //! `GQ_FAULT` env (`util::fault`) injects deterministic step panics, NaN
-//! logits, engine stalls, and slow socket writes for the chaos suite.
+//! logits, engine stalls, slow socket writes/reads, and spurious KV
+//! exhaustion for the chaos suite.
 //!
 //! ## Endpoints
 //!
@@ -45,18 +46,37 @@
 //!   `"done":true` summary event, then the `data: [DONE]` terminator).
 //! * `GET /metrics` — queue depth, active lanes,
 //!   completion/rejection/cancellation/timeout/failure counters, engine
-//!   restarts, and TTFT / per-token / queue-wait percentiles over a
-//!   sliding sample window.
+//!   restarts, KV governance gauges (`kv_budget_bytes`, `kv_pressure`,
+//!   `brownouts`, `preemptions`, `shed_predicted_deadline`,
+//!   `predicted_wait_ms`), and TTFT / per-token / queue-wait percentiles
+//!   over a sliding sample window.
 //! * `GET /healthz` — truthful engine liveness (200 `ok` while the engine
 //!   thread serves, 503 `engine dead` once the restart budget is spent),
 //!   restart count, and the served model's shape.
 //!
 //! ## Admission control as HTTP semantics
 //!
-//! The scheduler's back-pressure maps onto status codes: a full admission
-//! queue (`ServeConfig::max_queued`) answers **429** with `Retry-After`
-//! (the request is never enqueued), malformed bodies and invalid prompts
-//! answer **400**, and a draining server answers **503**.
+//! The scheduler's back-pressure maps onto status codes — malformed
+//! bodies and invalid prompts answer **400**, a draining server answers
+//! **503** — and overload walks a ladder from mildest response to
+//! harshest (see [`super::scheduler`] for the governance mechanics):
+//!
+//! 1. **Brownout** (live KV above the low watermark): requests still
+//!    admit, but with `max_tokens` clamped — the 200 response carries
+//!    `"degraded": true` so clients can tell a voluntary `"length"`
+//!    finish from a shortened one.
+//! 2. **Preemption** (live KV above the high watermark): the supervisor
+//!    evicts the youngest lane and requeues it under its original
+//!    id/deadline; the client's connection stays open and replayed
+//!    tokens are suppressed, so it just looks slower.
+//! 3. **Shed** (last resort, the request is never enqueued): a full
+//!    admission queue (`ServeConfig::max_queued`), a request whose
+//!    worst-case KV cost can never fit under the budget's high
+//!    watermark, or a `timeout_ms` already smaller than the predicted
+//!    queue wait — each answers **429** with a `Retry-After` computed
+//!    from the measured per-step drain rate and queue depth
+//!    ([`retry_after_secs`]), never a hardcoded constant.
+//!
 //! [`HttpServer::shutdown`] stops accepting, then lets the engine drain
 //! every in-flight lane before joining it, so accepted requests always
 //! complete.
@@ -77,7 +97,7 @@ use crate::model::NativeModel;
 use crate::util::json::Json;
 use crate::util::{fault, percentile};
 
-use super::scheduler::{FinishReason, FinishedRequest};
+use super::scheduler::{retry_after_secs, FinishReason, FinishedRequest};
 use super::supervisor::SupervisedEngine;
 
 /// Request bodies beyond this are rejected before reading.
@@ -119,7 +139,9 @@ enum ToEngine {
 /// Engine thread → the submitting connection thread.
 enum SubmitOutcome {
     Accepted { id: u64, events: Receiver<TokenEvent> },
-    QueueFull(String),
+    /// Shed (queue full, KV budget, or predicted-deadline): 429 with a
+    /// `Retry-After` derived from the measured drain rate at shed time.
+    Overloaded { msg: String, retry_after_secs: u64 },
     Invalid(String),
     ShuttingDown,
     EngineDead,
@@ -145,12 +167,23 @@ struct Metrics {
     timed_out: u64,
     /// Requests killed by an attributed engine fault.
     failed: u64,
+    /// Requests shed up front because the predicted queue wait already
+    /// exceeded their `timeout_ms` (a subset of `rejected`).
+    shed_predicted_deadline: u64,
     /// Supervisor engine restarts (unattributable faults).
     engine_restarts: u64,
     /// Bytes of K/V currently stored across active lanes (gauge).
     kv_bytes: usize,
     /// Bytes of KV page storage held (active lanes + pooled arena pages).
     kv_allocated_bytes: usize,
+    /// Live KV bytes over the budget (0.0 with governance off).
+    kv_pressure: f64,
+    /// Admissions clamped to the brownout token budget.
+    brownouts: u64,
+    /// Lanes preempted under KV pressure.
+    preemptions: u64,
+    /// Predicted queue wait from the measured drain rate (gauge).
+    predicted_wait_ms: u64,
     ttft_ms: Vec<f64>,
     token_ms: Vec<f64>,
     queue_wait_ms: Vec<f64>,
@@ -177,6 +210,8 @@ struct Shared {
     max_batch: usize,
     max_queued: usize,
     kv_dtype: &'static str,
+    /// KV governance budget (0 = off); static for the server's lifetime.
+    kv_budget_bytes: usize,
     metrics: Mutex<Metrics>,
 }
 
@@ -211,6 +246,7 @@ impl Shared {
             .with("cancelled", m.cancelled)
             .with("timed_out", m.timed_out)
             .with("failed", m.failed)
+            .with("shed_predicted_deadline", m.shed_predicted_deadline)
             .with("engine_restarts", m.engine_restarts)
             .with("connections", self.conns.load(Ordering::SeqCst))
             .with("max_batch", self.max_batch)
@@ -218,6 +254,11 @@ impl Shared {
             .with("kv_dtype", self.kv_dtype)
             .with("kv_bytes", m.kv_bytes)
             .with("kv_allocated_bytes", m.kv_allocated_bytes)
+            .with("kv_budget_bytes", self.kv_budget_bytes)
+            .with("kv_pressure", m.kv_pressure)
+            .with("brownouts", m.brownouts)
+            .with("preemptions", m.preemptions)
+            .with("predicted_wait_ms", m.predicted_wait_ms)
             .with("ttft_ms", pctl(&m.ttft_ms))
             .with("token_ms", pctl(&m.token_ms))
             .with("queue_wait_ms", pctl(&m.queue_wait_ms))
@@ -250,6 +291,7 @@ impl HttpServer {
             max_batch: cfg.max_batch.max(1),
             max_queued: cfg.max_queued.max(1),
             kv_dtype: cfg.kv_dtype.name(),
+            kv_budget_bytes: cfg.kv_budget_bytes,
             metrics: Mutex::new(Metrics::default()),
         });
         let (tx, rx) = mpsc::channel();
@@ -405,11 +447,18 @@ fn engine_loop(
 fn publish_gauges(shared: &Shared, engine: &SupervisedEngine<'_>) {
     let kv_bytes = engine.kv_bytes();
     let kv_allocated = engine.kv_allocated_bytes();
+    let kv_pressure = engine.kv_pressure();
+    let predicted_wait = engine.predicted_wait_ms();
+    let (brownouts, preemptions) = (engine.brownouts(), engine.preemptions());
     let mut m = shared.metrics.lock().unwrap();
     m.queued = engine.queued();
     m.active = engine.active();
     m.kv_bytes = kv_bytes;
     m.kv_allocated_bytes = kv_allocated;
+    m.kv_pressure = kv_pressure;
+    m.predicted_wait_ms = predicted_wait;
+    m.brownouts = brownouts;
+    m.preemptions = preemptions;
     m.engine_restarts = engine.restarts() as u64;
 }
 
@@ -429,17 +478,52 @@ fn handle_msg(
             sinks.remove(&id);
         }
         ToEngine::Submit { prompt, gen_tokens, timeout_ms, reply } => {
+            // The shed ladder's last rung: all three checks answer 429
+            // with the drain-rate-derived Retry-After, before anything
+            // is enqueued or allocated.
+            let retry = retry_after_secs(engine.predicted_wait_ms());
             if *draining {
                 let _ = reply.send(SubmitOutcome::ShuttingDown);
             } else if !engine.alive() {
                 let _ = reply.send(SubmitOutcome::EngineDead);
             } else if engine.queued() >= shared.max_queued {
                 shared.metrics.lock().unwrap().rejected += 1;
-                let _ = reply.send(SubmitOutcome::QueueFull(format!(
-                    "admission queue full ({} waiting, max_queued = {})",
-                    engine.queued(),
-                    shared.max_queued
-                )));
+                let _ = reply.send(SubmitOutcome::Overloaded {
+                    msg: format!(
+                        "admission queue full ({} waiting, max_queued = {})",
+                        engine.queued(),
+                        shared.max_queued
+                    ),
+                    retry_after_secs: retry,
+                });
+            } else if engine.kv_submit_refused(prompt.len(), gen_tokens) {
+                shared.metrics.lock().unwrap().rejected += 1;
+                let _ = reply.send(SubmitOutcome::Overloaded {
+                    msg: format!(
+                        "kv budget: worst-case cost of {} bytes (prompt {} + max_tokens {}) \
+                         cannot be admitted under the budget's high watermark",
+                        engine.kv_request_cost_bytes(prompt.len() + gen_tokens),
+                        prompt.len(),
+                        gen_tokens
+                    ),
+                    retry_after_secs: retry,
+                });
+            } else if timeout_ms.is_some_and(|t| t > 0 && engine.predicted_wait_ms() > t) {
+                // Deadline-aware shed: admitting a request whose queue
+                // wait is already predicted to blow its deadline only
+                // burns a timeout later — reject it while it's cheap.
+                let mut m = shared.metrics.lock().unwrap();
+                m.rejected += 1;
+                m.shed_predicted_deadline += 1;
+                drop(m);
+                let _ = reply.send(SubmitOutcome::Overloaded {
+                    msg: format!(
+                        "predicted queue wait {} ms exceeds the request deadline {} ms",
+                        engine.predicted_wait_ms(),
+                        timeout_ms.unwrap_or(0)
+                    ),
+                    retry_after_secs: retry,
+                });
             } else {
                 match engine.submit(&prompt, gen_tokens, timeout_ms) {
                     Ok(id) => {
@@ -556,6 +640,10 @@ fn read_request(r: &mut impl BufRead, w: &mut impl Write) -> Result<Request> {
                 w.flush().context("flushing 100 Continue")?;
             }
         }
+        // Chaos site: one slow request-body read (a slowloris-style
+        // client trickling its upload); only this connection thread
+        // stalls — the engine and its siblings keep serving.
+        fault::maybe_stall(fault::SLOW_READ, Duration::from_millis(1000));
         body.resize(n, 0);
         r.read_exact(&mut body).context("reading body")?;
     }
@@ -746,8 +834,9 @@ fn handle_completion(
         Err(_) => return write_error(w, 503, "Service Unavailable", "engine stopped"),
     };
     match outcome {
-        SubmitOutcome::QueueFull(msg) => {
-            write_error_extra(w, 429, "Too Many Requests", &[("Retry-After", "1")], &msg)
+        SubmitOutcome::Overloaded { msg, retry_after_secs } => {
+            let retry = retry_after_secs.to_string();
+            write_error_extra(w, 429, "Too Many Requests", &[("Retry-After", &retry)], &msg)
         }
         SubmitOutcome::Invalid(msg) => write_error(w, 400, "Bad Request", &msg),
         SubmitOutcome::ShuttingDown => {
@@ -807,6 +896,7 @@ fn blocking_completion(
                     .with("tokens", toks)
                     .with("n_tokens", fr.tokens.len())
                     .with("finish_reason", fr.finish.name())
+                    .with("degraded", fr.degraded)
                     .with("metrics", request_metrics_json(&fr));
                 return write_json(w, 200, "OK", &doc);
             }
@@ -868,6 +958,7 @@ fn stream_completion_inner(
                     .with("done", true)
                     .with("n_tokens", fr.tokens.len())
                     .with("finish_reason", fr.finish.name())
+                    .with("degraded", fr.degraded)
                     .with("metrics", request_metrics_json(&fr));
                 write_chunk(w, &format!("data: {}\n\n", done.encode()))?;
                 write_chunk(w, "data: [DONE]\n\n")?;
@@ -997,6 +1088,47 @@ mod tests {
         ] {
             assert!(parse_completion(bad).is_err(), "{:?}", std::str::from_utf8(bad));
         }
+    }
+
+    #[test]
+    fn metric_percentiles_survive_an_empty_window() {
+        // A freshly booted server has no samples: /metrics must render
+        // quiet zeros, not NaN (which the JSON encoder cannot carry).
+        let xs: Vec<f64> = Vec::new();
+        assert_eq!(percentile(&xs, 50.0), 0.0);
+        assert_eq!(percentile(&xs, 99.0), 0.0);
+    }
+
+    #[test]
+    fn metric_percentiles_with_a_single_sample() {
+        // One completed request: every percentile is that sample.
+        let mut xs = Vec::new();
+        push_capped(&mut xs, 7.5);
+        assert_eq!(percentile(&xs, 50.0), 7.5);
+        assert_eq!(percentile(&xs, 99.0), 7.5);
+    }
+
+    #[test]
+    fn metric_window_wraps_under_sustained_load() {
+        // Sustained load far past METRIC_WINDOW: the window must stay
+        // bounded, keep insertion order, retain the newest sample, and
+        // keep percentiles well-defined over the retained suffix.
+        let mut xs = Vec::new();
+        let total = METRIC_WINDOW * 3;
+        for i in 0..total {
+            push_capped(&mut xs, i as f64);
+            assert!(xs.len() <= METRIC_WINDOW, "window exceeded its cap at sample {i}");
+        }
+        assert!(xs.len() > METRIC_WINDOW / 2, "drain must keep the newer half");
+        assert_eq!(*xs.last().unwrap(), (total - 1) as f64, "newest sample retained");
+        assert!(xs.windows(2).all(|w| w[0] < w[1]), "insertion order preserved");
+        assert!(
+            *xs.first().unwrap() >= (total - METRIC_WINDOW) as f64,
+            "wraparound must drop the oldest samples, not the newest"
+        );
+        let (p50, p99) = (percentile(&xs, 50.0), percentile(&xs, 99.0));
+        assert!(p50 <= p99, "percentiles inverted over the wrapped window");
+        assert!(p99 <= (total - 1) as f64 && p50 >= *xs.first().unwrap());
     }
 
     #[test]

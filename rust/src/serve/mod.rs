@@ -24,15 +24,22 @@
 //!   slab — and queued requests spliced in at the next step), per-request
 //!   metrics (queue wait, time-to-first-token, per-token latency
 //!   percentiles), and a streaming drain (`step_tokens`) exposing every
-//!   step's tokens as they are generated.
+//!   step's tokens as they are generated. With `kv_budget_bytes` set,
+//!   admission becomes cost-aware memory governance: worst-case KV page
+//!   cost gates admission under watermarks, brownouts clamp `max_tokens`
+//!   under pressure, and the measured drain rate feeds honest
+//!   `Retry-After`/predicted-wait backpressure.
 //! * **[`supervisor::SupervisedEngine`]** — fault isolation around the
 //!   scheduler: each step phase runs under `catch_unwind`, panics are
 //!   attributed (admission fault → fail the mid-prefill batch; single-lane
 //!   decode fault → fail that request; unattributable fault → engine
 //!   restart with a requeue-or-fail-fast policy), restarts are budgeted,
 //!   and per-request deadlines/cancellation evict lanes through the
-//!   splicing path so KV pages always return to the arena. Chaos scenarios
-//!   are driven by the deterministic `util::fault` injection sites.
+//!   splicing path so KV pages always return to the arena. Under KV
+//!   pressure the supervisor preempts the youngest lane through the same
+//!   requeue machinery (pages deallocated, tokens replay-suppressed)
+//!   before anything is shed. Chaos scenarios are driven by the
+//!   deterministic `util::fault` injection sites.
 //! * **[`engine`]** — `generate_batch` (compatibility wrapper over the
 //!   scheduler, bit-identical greedy outputs), `generate_scheduled` (with
 //!   explicit knobs), and `generate_per_sequence` (the original
@@ -62,6 +69,7 @@ pub use engine::{
 };
 pub use http::HttpServer;
 pub use scheduler::{
-    greedy_argmax, FinishReason, FinishedRequest, RequestMetrics, Scheduler, SubmitOpts,
+    greedy_argmax, retry_after_secs, FinishReason, FinishedRequest, RequestMetrics, Scheduler,
+    SubmitOpts, BROWNOUT_MAX_TOKENS, KV_HIGH_WATERMARK, KV_LOW_WATERMARK,
 };
 pub use supervisor::SupervisedEngine;

@@ -23,6 +23,21 @@
 //! its first logits. [`ServeConfig::scalar_prefill`] keeps the per-lane
 //! scalar reference path (pool-parallel across lanes) as the bit-identity
 //! baseline.
+//!
+//! When [`ServeConfig::kv_budget_bytes`] is set, admission becomes
+//! **cost-aware memory governance**: each queued request's worst-case KV
+//! page cost (prompt length + `max_tokens`) must fit under
+//! [`KV_HIGH_WATERMARK`] of the budget on top of what active lanes hold.
+//! Above [`KV_LOW_WATERMARK`] the scheduler *brownouts* — admissions are
+//! clamped to [`BROWNOUT_MAX_TOKENS`] (`degraded: true` in the response)
+//! and the prefill chunk shrinks to one lane — and above the high
+//! watermark the supervisor *preempts* the youngest lane
+//! ([`Scheduler::preempt_youngest`]: pages deallocated, request requeued
+//! under its original id with replay suppression). The measured per-step
+//! drain rate ([`Scheduler::predicted_wait_ms`]) feeds honest
+//! `Retry-After` values ([`retry_after_secs`]) and deadline-aware
+//! shedding at the HTTP layer. With the budget at 0 (the default) every
+//! governance branch is skipped and the engine behaves exactly as before.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -56,6 +71,27 @@ pub fn greedy_argmax(logits: &[f32]) -> u32 {
 /// knob appears ([`ServeConfig::request_timeout_ms`] and friends).
 fn ms_duration(ms: u64) -> Option<Duration> {
     (ms > 0).then(|| Duration::from_millis(ms))
+}
+
+/// KV pressure fraction above which the scheduler *brownouts*: new
+/// admissions have their `max_tokens` clamped (responses carry
+/// `degraded: true`) and the prefill chunk shrinks to one lane per step.
+pub const KV_LOW_WATERMARK: f64 = 0.70;
+/// KV pressure fraction above which admission refuses to start new lanes
+/// and the supervisor preempts the youngest active lane (its pages are
+/// deallocated and the request requeued under its original id/deadline).
+/// The 10% headroom above the high watermark absorbs the page-boundary
+/// growth of already-running lanes, which is how `kv_allocated_bytes`
+/// stays under the budget at all times.
+pub const KV_HIGH_WATERMARK: f64 = 0.90;
+/// Effective `max_tokens` cap while browned out.
+pub const BROWNOUT_MAX_TOKENS: usize = 32;
+
+/// Honest `Retry-After`: seconds (rounded up) of the predicted queue wait,
+/// clamped to a sane 1–60s range — never the hardcoded `1` that tells an
+/// overloaded fleet to hammer again immediately.
+pub fn retry_after_secs(predicted_wait_ms: u64) -> u64 {
+    predicted_wait_ms.div_ceil(1000).clamp(1, 60)
 }
 
 /// Per-request service metrics (milliseconds).
@@ -126,6 +162,10 @@ pub struct FinishedRequest {
     pub tokens: Vec<u32>,
     pub metrics: RequestMetrics,
     pub finish: FinishReason,
+    /// The request was admitted under brownout and its `max_tokens` was
+    /// clamped below what was asked for ([`BROWNOUT_MAX_TOKENS`]); HTTP
+    /// responses surface this as `"degraded": true`.
+    pub degraded: bool,
 }
 
 /// Per-request knobs for [`Scheduler::submit_opts`].
@@ -154,6 +194,8 @@ struct Queued {
     deadline: Option<Instant>,
     /// Admission deadline ([`ServeConfig::queue_timeout_ms`]).
     queue_deadline: Option<Instant>,
+    /// Brownout clamped `gen_tokens` below the requested budget.
+    degraded: bool,
 }
 
 struct Lane {
@@ -171,6 +213,8 @@ struct Lane {
     /// The last step produced non-finite logits for this lane; evict it
     /// with [`FinishReason::Failed`] instead of serving a garbage token.
     poisoned: bool,
+    /// Admitted under brownout with a clamped token budget.
+    degraded: bool,
 }
 
 /// The continuous-batching engine: admission queue + decode lane slab.
@@ -212,6 +256,16 @@ pub struct Scheduler<'m> {
     next_id: u64,
     steps: usize,
     lane_steps: usize,
+    /// Requests admitted with a brownout-clamped token budget.
+    brownouts: u64,
+    /// Lanes preempted under KV pressure ([`Scheduler::preempt_youngest`]).
+    preemptions: u64,
+    /// EWMA of the batched decode step's wall time (ms) — the measured
+    /// service rate behind `Retry-After` and predicted queue wait.
+    step_ms_ewma: f64,
+    /// EWMA of requests finishing per decode step (the drain rate's
+    /// numerator; pairs with `step_ms_ewma`).
+    finished_per_step_ewma: f64,
 }
 
 /// Most recycled lane shells worth keeping (covers any realistic
@@ -252,6 +306,10 @@ impl<'m> Scheduler<'m> {
             next_id: 0,
             steps: 0,
             lane_steps: 0,
+            brownouts: 0,
+            preemptions: 0,
+            step_ms_ewma: 0.0,
+            finished_per_step_ewma: 0.0,
         }
     }
 
@@ -321,8 +379,27 @@ impl<'m> Scheduler<'m> {
             submitted: self.now(),
             deadline,
             queue_deadline,
+            degraded: false,
         });
         Ok(id)
+    }
+
+    /// Should admission refuse this request outright on KV-budget grounds?
+    /// True when its worst-case page cost (prompt + `max_tokens`, see
+    /// [`KvArena::request_cost_bytes`]) exceeds the high watermark — it
+    /// could *never* be admitted, so queueing it would only wedge the
+    /// queue — or when the `kv-exhaust` fault site fires (the simulated
+    /// out-of-memory refusal chaos scenarios inject).
+    pub fn kv_submit_refused(&self, prompt_len: usize, gen_tokens: usize) -> bool {
+        if fault::hit(fault::KV_EXHAUST) {
+            return true;
+        }
+        let budget = self.cfg.kv_budget_bytes;
+        if budget == 0 {
+            return false;
+        }
+        let high = (KV_HIGH_WATERMARK * budget as f64) as usize;
+        self.arena.request_cost_bytes(prompt_len + gen_tokens) > high
     }
 
     /// Cancel a queued or in-flight request: a queued one leaves the
@@ -389,8 +466,65 @@ impl<'m> Scheduler<'m> {
     /// Bytes of KV page storage held by the engine: active lanes' pages
     /// plus pages pooled in the arena's shared slab.
     pub fn kv_allocated_bytes(&self) -> usize {
-        let live: usize = self.states.iter().map(DecodeState::kv_allocated_bytes).sum();
-        live + self.arena.pooled_page_bytes()
+        self.kv_live_bytes() + self.arena.pooled_page_bytes()
+    }
+
+    /// Bytes of KV page storage held by *active lanes* (excludes the
+    /// arena's idle pool, which growing lanes drain before allocating
+    /// fresh pages) — the quantity the memory governor budgets.
+    pub fn kv_live_bytes(&self) -> usize {
+        self.states.iter().map(DecodeState::kv_allocated_bytes).sum()
+    }
+
+    /// Worst-case KV bytes a request spanning `total_pos` positions would
+    /// hold (admission-time cost estimation, exposed for tests and the
+    /// HTTP layer's feasibility check).
+    pub fn kv_request_cost_bytes(&self, total_pos: usize) -> usize {
+        self.arena.request_cost_bytes(total_pos)
+    }
+
+    /// Live-KV pressure against the budget, 0.0 when governance is off.
+    /// Published as the `kv_pressure` gauge; crosses [`KV_LOW_WATERMARK`]
+    /// into brownout and [`KV_HIGH_WATERMARK`] into preemption.
+    pub fn kv_pressure(&self) -> f64 {
+        let budget = self.cfg.kv_budget_bytes;
+        if budget == 0 {
+            0.0
+        } else {
+            self.kv_live_bytes() as f64 / budget as f64
+        }
+    }
+
+    /// True when live KV sits above the high watermark — the supervisor's
+    /// cue to preempt the youngest lane.
+    pub fn kv_over_high(&self) -> bool {
+        let budget = self.cfg.kv_budget_bytes;
+        budget > 0 && self.kv_live_bytes() as f64 > KV_HIGH_WATERMARK * budget as f64
+    }
+
+    /// Requests admitted with a brownout-clamped token budget so far.
+    pub fn brownouts(&self) -> u64 {
+        self.brownouts
+    }
+
+    /// Lanes preempted under KV pressure so far.
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
+    }
+
+    /// Predicted wait (ms) for a request joining the queue now, from the
+    /// measured per-step drain rate: `queue depth × step time ÷ finishes
+    /// per step`. Optimistically floored at one finish per `max_batch`
+    /// steps so a cold or quiet window never predicts infinity; 0 before
+    /// any step has been measured. Feeds `Retry-After` on 429s and the
+    /// deadline-aware shed decision.
+    pub fn predicted_wait_ms(&self) -> u64 {
+        let depth = self.queue.len();
+        if depth == 0 || self.step_ms_ewma <= 0.0 {
+            return 0;
+        }
+        let rate = self.finished_per_step_ewma.max(1.0 / self.cfg.max_batch.max(1) as f64);
+        (depth as f64 * self.step_ms_ewma / rate).ceil() as u64
     }
 
     /// Splice queued requests into free lanes and prefill their prompts.
@@ -403,12 +537,60 @@ impl<'m> Scheduler<'m> {
     /// `warm_chunked_prefill_step_is_allocation_free`).
     fn admit(&mut self, finished: &mut Vec<FinishedRequest>) {
         debug_assert!(self.fresh_meta.is_empty() && self.fresh_states.is_empty());
+        // Memory governance (all of it behind `kv_budget_bytes > 0`, so the
+        // default config takes one branch and stays allocation-free):
+        // admission is cost-aware — each queued request's worst-case page
+        // bytes (prompt + max_tokens) must fit under the high watermark on
+        // top of what active lanes already hold plus what this call has
+        // admitted. Above the low watermark admissions brown out: the
+        // token budget clamps to BROWNOUT_MAX_TOKENS (the response will
+        // carry `degraded: true`) and the prefill chunk shrinks to one
+        // lane per step.
+        let budget = self.cfg.kv_budget_bytes;
+        let live = if budget > 0 { self.kv_live_bytes() } else { 0 };
+        let brownout = budget > 0 && live as f64 >= KV_LOW_WATERMARK * budget as f64;
+        let high = (KV_HIGH_WATERMARK * budget as f64) as usize;
+        let mut admitted_cost = 0usize;
         while self.lanes.len() + self.fresh_meta.len() < self.cfg.max_batch.max(1) {
-            let Some(qr) = self.queue.pop_front() else { break };
-            if qr.gen_tokens == 0 {
+            if brownout && !self.fresh_meta.is_empty() {
+                break;
+            }
+            let Some(front) = self.queue.front() else { break };
+            let (front_gen, front_prompt) = (front.gen_tokens, front.prompt.len());
+            if front_gen == 0 {
                 // Nothing to generate; completes at admission.
+                let qr = self.queue.pop_front().unwrap();
                 finished.push(self.finish_queued(qr, FinishReason::Length));
                 continue;
+            }
+            let mut eff_gen = front_gen;
+            if budget > 0 {
+                if brownout {
+                    eff_gen = eff_gen.min(BROWNOUT_MAX_TOKENS);
+                }
+                let cost = self.arena.request_cost_bytes(front_prompt + eff_gen);
+                if live + admitted_cost + cost > high {
+                    if self.lanes.is_empty() && self.fresh_meta.is_empty() {
+                        // Alone in an empty engine and still over the
+                        // watermark: this request can never run. Fail it
+                        // rather than wedge the queue head forever (the
+                        // HTTP layer refuses these before they queue;
+                        // this guards direct scheduler users).
+                        let qr = self.queue.pop_front().unwrap();
+                        finished.push(self.finish_queued(qr, FinishReason::Failed));
+                        continue;
+                    }
+                    // Over the high watermark: leave the queue intact and
+                    // let running lanes drain (or the supervisor preempt).
+                    break;
+                }
+                admitted_cost += cost;
+            }
+            let mut qr = self.queue.pop_front().unwrap();
+            if eff_gen < qr.gen_tokens {
+                qr.gen_tokens = eff_gen;
+                qr.degraded = true;
+                self.brownouts += 1;
             }
             self.fresh_meta.push(qr);
             self.fresh_states.push(self.arena.acquire());
@@ -522,6 +704,7 @@ impl<'m> Scheduler<'m> {
             token_ms: Vec::new(),
             deadline: None,
             poisoned: false,
+            degraded: false,
         });
         lane.id = qr.id;
         lane.pending = pending;
@@ -535,6 +718,7 @@ impl<'m> Scheduler<'m> {
         lane.token_ms.reserve(reserve);
         lane.deadline = qr.deadline;
         lane.poisoned = false;
+        lane.degraded = qr.degraded;
         self.lanes.push(lane);
         self.states.push(state);
     }
@@ -583,11 +767,14 @@ impl<'m> Scheduler<'m> {
             return finished;
         }
         fault::maybe_panic(fault::STEP_PANIC);
-        fault::maybe_stall(fault::ENGINE_STALL, Duration::from_millis(1500));
         debug_assert_eq!(self.lanes.len(), self.states.len());
         self.token_buf.clear();
         self.token_buf.extend(self.lanes.iter().map(|l| l.pending));
         let t0 = Instant::now();
+        // Inside the timed window: a stalled step IS a slow step, and the
+        // measured step time feeds the drain-rate EWMA behind Retry-After
+        // and predicted queue wait — the stall must be visible to both.
+        fault::maybe_stall(fault::ENGINE_STALL, Duration::from_millis(1500));
         self.model.step_batch_with(&mut self.scratch, &mut self.states, &self.token_buf);
         if fault::hit(fault::NAN_LOGITS) {
             // Corrupt lane 0's logits in place — models the degenerate
@@ -645,7 +832,51 @@ impl<'m> Scheduler<'m> {
                 None => r += 1,
             }
         }
+        // Drain-rate bookkeeping: EWMA the step's wall time and how many
+        // requests it finished. Plain float math — the steady-state step
+        // stays off the allocator.
+        const ALPHA: f64 = 0.2;
+        self.step_ms_ewma = if self.step_ms_ewma == 0.0 {
+            step_ms
+        } else {
+            (1.0 - ALPHA) * self.step_ms_ewma + ALPHA * step_ms
+        };
+        self.finished_per_step_ewma =
+            (1.0 - ALPHA) * self.finished_per_step_ewma + ALPHA * finished.len() as f64;
         finished
+    }
+
+    /// Preempt the youngest active lane (most recently admitted; ties go
+    /// to the higher id): its KV pages are **deallocated** — pooling them
+    /// would keep the bytes resident, defeating the point — and its id is
+    /// returned so the supervisor can resubmit the request under its
+    /// original id/deadline with replay suppression. Refuses when fewer
+    /// than two lanes are active: preempting the only lane could never
+    /// make progress (admission would bounce it straight back).
+    pub fn preempt_youngest(&mut self) -> Option<u64> {
+        if self.lanes.len() < 2 {
+            return None;
+        }
+        let mut idx = 0;
+        for r in 1..self.lanes.len() {
+            let (cand, best) = (&self.lanes[r], &self.lanes[idx]);
+            if cand.admitted > best.admitted
+                || (cand.admitted == best.admitted && cand.id > best.id)
+            {
+                idx = r;
+            }
+        }
+        let mut lane = self.lanes.swap_remove(idx);
+        let state = self.states.swap_remove(idx);
+        self.arena.discard(state);
+        self.preemptions += 1;
+        let id = lane.id;
+        if self.lane_pool.len() < LANE_POOL_MAX {
+            lane.out.clear();
+            lane.token_ms.clear();
+            self.lane_pool.push(lane);
+        }
+        Some(id)
     }
 
     /// Evict every request (queued or active) whose deadline has passed.
@@ -690,6 +921,7 @@ impl<'m> Scheduler<'m> {
                 ..RequestMetrics::empty()
             },
             finish,
+            degraded: qr.degraded,
         }
     }
 
@@ -719,7 +951,8 @@ impl<'m> Scheduler<'m> {
             kv_bytes,
             token_ms,
         };
-        let fr = FinishedRequest { id: lane.id, tokens, metrics, finish };
+        let fr =
+            FinishedRequest { id: lane.id, tokens, metrics, finish, degraded: lane.degraded };
         if recycle {
             lane.out.clear();
             lane.token_ms.clear();
@@ -1325,5 +1558,234 @@ mod tests {
         let done = sched.run_to_completion();
         assert_eq!(done.len(), 2);
         assert!(done.iter().any(|f| f.id == 7));
+    }
+
+    #[test]
+    fn retry_after_clamps_to_one_to_sixty_seconds() {
+        assert_eq!(retry_after_secs(0), 1, "never tell a client to retry in 0s");
+        assert_eq!(retry_after_secs(1), 1);
+        assert_eq!(retry_after_secs(999), 1);
+        assert_eq!(retry_after_secs(1000), 1);
+        assert_eq!(retry_after_secs(1001), 2, "partial seconds round up");
+        assert_eq!(retry_after_secs(59_000), 59);
+        assert_eq!(retry_after_secs(60_000), 60);
+        assert_eq!(retry_after_secs(10_000_000), 60, "clamped at a minute");
+        assert_eq!(retry_after_secs(u64::MAX), 60);
+    }
+
+    #[test]
+    fn kv_budget_defers_admission_and_stays_bit_identical() {
+        let m = model();
+        // Budget sized so one request fits under the high watermark but
+        // two do not: the second waits queued until the first drains, and
+        // total allocated bytes never exceed the budget.
+        let probe = Scheduler::new(&m, ServeConfig::default());
+        let cost = probe.kv_request_cost_bytes(4 + 8);
+        let budget = (cost as f64 / KV_HIGH_WATERMARK * 1.2) as usize;
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig {
+                max_batch: 2,
+                max_queued: 8,
+                kv_budget_bytes: budget,
+                ..ServeConfig::default()
+            },
+        );
+        let p0 = vec![1u32, 2, 3, 4];
+        let p1 = vec![5u32, 6, 7, 8];
+        sched.submit(&p0, 8).unwrap();
+        sched.submit(&p1, 8).unwrap();
+        sched.step();
+        assert_eq!((sched.active(), sched.queued()), (1, 1), "second must wait for budget");
+        assert!(sched.kv_pressure() > 0.0);
+        let mut peak = sched.kv_allocated_bytes();
+        let mut done = Vec::new();
+        while sched.has_work() {
+            done.extend(sched.step());
+            peak = peak.max(sched.kv_allocated_bytes());
+        }
+        assert!(peak <= budget, "kv_allocated_bytes {peak} exceeded budget {budget}");
+        done.sort_by_key(|f| f.id);
+        assert_eq!(done.len(), 2);
+        assert!(done.iter().all(|f| f.finish == FinishReason::Length && !f.degraded));
+        assert_eq!(done[0].tokens, reference_decode(&m, &p0, 8));
+        assert_eq!(done[1].tokens, reference_decode(&m, &p1, 8));
+        assert_eq!(sched.kv_pressure(), 0.0, "drained engine holds no live KV");
+    }
+
+    #[test]
+    fn brownout_clamps_gen_tokens_and_flags_degraded() {
+        // Geometry: one layer, two heads of dim 8 → a 64-position KV chunk
+        // is 8 KiB. Request A spans 230 positions (4 chunks, 32 KiB); the
+        // budget puts that between the watermarks, so B's admission browns
+        // out: its 100 requested tokens clamp to BROWNOUT_MAX_TOKENS and
+        // its (clamped) one-chunk cost still fits under the high watermark
+        // — unclamped, its two-chunk cost would have been refused.
+        use crate::cfg::ModelConfig;
+        let cfg = ModelConfig {
+            name: "brownout-probe".into(),
+            vocab: 64,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            rope_theta: 10000.0,
+        };
+        let ps = ParamStore::init(&cfg, &mut Rng::new(0));
+        let m = NativeModel::from_params(&ps);
+        let probe = Scheduler::new(&m, ServeConfig::default());
+        let p_a: Vec<u32> = (0..200).map(|i| (i % 60) as u32 + 1).collect();
+        let p_b = vec![7u32, 9];
+        let cost_a = probe.kv_request_cost_bytes(p_a.len() + 30);
+        let clamped = probe.kv_request_cost_bytes(p_b.len() + BROWNOUT_MAX_TOKENS);
+        let budget = ((cost_a + clamped) as f64 / KV_HIGH_WATERMARK).ceil() as usize + 1;
+        assert!(
+            (cost_a as f64) >= KV_LOW_WATERMARK * budget as f64,
+            "geometry: A alone must trip the low watermark"
+        );
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig {
+                max_batch: 2,
+                max_queued: 8,
+                kv_budget_bytes: budget,
+                ..ServeConfig::default()
+            },
+        );
+        let a = sched.submit(&p_a, 30).unwrap();
+        sched.step();
+        assert_eq!(sched.active(), 1);
+        assert!(sched.kv_pressure() >= KV_LOW_WATERMARK, "A alone is a brownout");
+        let b = sched.submit(&p_b, 100).unwrap();
+        let mut peak = sched.kv_allocated_bytes();
+        let mut done = Vec::new();
+        while sched.has_work() {
+            done.extend(sched.step());
+            peak = peak.max(sched.kv_allocated_bytes());
+        }
+        assert!(peak <= budget, "kv_allocated_bytes {peak} exceeded budget {budget}");
+        assert_eq!(sched.brownouts(), 1);
+        let fb = done.iter().find(|f| f.id == b).unwrap();
+        assert!(fb.degraded, "browned-out admission must be flagged");
+        assert_eq!(fb.finish, FinishReason::Length);
+        assert_eq!(fb.tokens.len(), BROWNOUT_MAX_TOKENS);
+        assert_eq!(
+            fb.tokens,
+            reference_decode(&m, &p_b, BROWNOUT_MAX_TOKENS),
+            "degraded output must still be bit-identical up to the clamp"
+        );
+        let fa = done.iter().find(|f| f.id == a).unwrap();
+        assert!(!fa.degraded, "A was admitted below the low watermark");
+        assert_eq!(fa.tokens, reference_decode(&m, &p_a, 30));
+    }
+
+    #[test]
+    fn preempt_youngest_drops_pages_and_requeues_bit_identically() {
+        let m = model();
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig { max_batch: 2, max_queued: 8, ..ServeConfig::default() },
+        );
+        assert!(sched.preempt_youngest().is_none(), "empty engine: nothing to preempt");
+        let a = sched.submit(&[1, 2], 50).unwrap();
+        sched.step();
+        assert!(sched.preempt_youngest().is_none(), "never preempt the only lane");
+        let b = sched.submit(&[3, 4], 50).unwrap();
+        sched.step();
+        assert_eq!(sched.active(), 2);
+        let before = sched.kv_allocated_bytes();
+        let picked = sched.preempt_youngest().expect("two lanes: youngest is preemptible");
+        assert_eq!(picked, b, "most recently admitted lane goes first");
+        assert_eq!((sched.active(), sched.preemptions()), (1, 1));
+        assert!(
+            sched.kv_allocated_bytes() < before,
+            "preempted pages must deallocate, not return to the pool"
+        );
+        // Requeue under the original id — what the supervisor does — and
+        // drain: the replayed request must be bit-identical from scratch.
+        let opts = SubmitOpts { id: Some(picked), ..SubmitOpts::default() };
+        sched.submit_opts(&[3, 4], 50, opts).unwrap();
+        let done = sched.run_to_completion();
+        assert_eq!(done.len(), 2);
+        let fb = done.iter().find(|f| f.id == b).unwrap();
+        assert_eq!(fb.finish, FinishReason::Length);
+        assert_eq!(fb.tokens, reference_decode(&m, &[3, 4], 50));
+        let fa = done.iter().find(|f| f.id == a).unwrap();
+        assert_eq!(fa.tokens, reference_decode(&m, &[1, 2], 50));
+    }
+
+    #[test]
+    fn kv_submit_refusal_feasibility_and_fault_site() {
+        let m = model();
+        let probe = Scheduler::new(&m, ServeConfig::default());
+        let budget = probe.kv_request_cost_bytes(4 + 8) * 10;
+        let governed = Scheduler::new(
+            &m,
+            ServeConfig { kv_budget_bytes: budget, ..ServeConfig::default() },
+        );
+        assert!(
+            governed.kv_submit_refused(4, 1_000_000),
+            "a request that could never fit is refused up front"
+        );
+        assert!(!governed.kv_submit_refused(4, 8), "a feasible request is not");
+        let open = Scheduler::new(&m, ServeConfig::default());
+        assert!(!open.kv_submit_refused(4, 1_000_000), "no budget, no refusal");
+        fault::arm(fault::KV_EXHAUST, 1);
+        assert!(open.kv_submit_refused(4, 8), "armed kv-exhaust refuses regardless");
+        assert!(!open.kv_submit_refused(4, 8), "fires exactly once");
+        fault::disarm_all();
+    }
+
+    #[test]
+    fn infeasible_direct_submit_fails_instead_of_wedging_the_queue() {
+        let m = model();
+        let probe = Scheduler::new(&m, ServeConfig::default());
+        let budget = probe.kv_request_cost_bytes(4 + 8) * 2;
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig {
+                max_batch: 2,
+                max_queued: 8,
+                kv_budget_bytes: budget,
+                ..ServeConfig::default()
+            },
+        );
+        // HTTP refuses infeasible requests before they queue; a direct
+        // scheduler user who sneaks one in must get Failed, not a queue
+        // head that blocks every request behind it forever.
+        let a = sched.submit(&[1, 2, 3, 4], 100_000).unwrap();
+        let b = sched.submit(&[1, 2, 3, 4], 8).unwrap();
+        let done = sched.run_to_completion();
+        assert_eq!(done.len(), 2);
+        let fa = done.iter().find(|f| f.id == a).unwrap();
+        assert_eq!(fa.finish, FinishReason::Failed);
+        assert!(fa.tokens.is_empty());
+        let fb = done.iter().find(|f| f.id == b).unwrap();
+        assert_eq!(fb.finish, FinishReason::Length);
+        assert_eq!(fb.tokens, reference_decode(&m, &[1, 2, 3, 4], 8));
+    }
+
+    #[test]
+    fn predicted_wait_follows_measured_drain_rate() {
+        let m = model();
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig { max_batch: 1, max_queued: 16, ..ServeConfig::default() },
+        );
+        assert_eq!(sched.predicted_wait_ms(), 0, "no measurements, no queue, no wait");
+        for i in 0..4u32 {
+            sched.submit(&[1 + i], 40).unwrap();
+        }
+        sched.step();
+        // One lane active, three queued, step time measured: prediction
+        // must be positive and can only shrink as the queue shallows.
+        let deep = sched.predicted_wait_ms();
+        assert!(deep > 0, "measured steps + queued work must predict a wait");
+        sched.cancel(2).unwrap();
+        sched.cancel(3).unwrap();
+        let shallow = sched.predicted_wait_ms();
+        assert!(shallow <= deep, "a shallower queue cannot predict a longer wait");
+        sched.run_to_completion();
+        assert_eq!(sched.predicted_wait_ms(), 0, "empty queue predicts no wait");
     }
 }

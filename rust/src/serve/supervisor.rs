@@ -25,6 +25,16 @@
 //! budget the engine is declared dead ([`SupervisedEngine::alive`] turns
 //! false), every tracked request fails, and new submissions are refused —
 //! the HTTP layer flips `/healthz` to 503 and drains.
+//!
+//! The supervisor is also where **KV pressure preemption** lives: when
+//! live KV bytes cross the high watermark of
+//! [`ServeConfig::kv_budget_bytes`], the step preempts the youngest
+//! active lane ([`Scheduler::preempt_youngest`] deallocates its pages)
+//! and resubmits the request through the same requeue machinery a
+//! restart uses — original id and deadline, streamed prefix marked for
+//! replay suppression — so the client keeps its connection and sees each
+//! token exactly once. Preemption reclaims memory without failing anyone;
+//! shedding (429) is the HTTP layer's last resort, not the first.
 
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -133,17 +143,19 @@ impl<'m> SupervisedEngine<'m> {
         if self.dead {
             return Vec::new();
         }
-        let mut finished = match catch_unwind(AssertUnwindSafe(|| self.sched.admit_phase())) {
-            Ok(f) => f,
+        let mut finished = Vec::new();
+        self.governance_preempt(&mut finished);
+        match catch_unwind(AssertUnwindSafe(|| self.sched.admit_phase())) {
+            Ok(f) => finished.extend(f),
             Err(payload) => {
                 crate::log_warn!(
                     "supervisor",
                     "admission panic ({}); failing mid-prefill requests",
                     panic_msg(&payload)
                 );
-                self.sched.recover_admission()
+                finished.extend(self.sched.recover_admission());
             }
-        };
+        }
         // Read attribution context BEFORE the step: lane membership only
         // changes at eviction, after the panic window.
         let single_lane = self.sched.active() == 1;
@@ -181,6 +193,33 @@ impl<'m> SupervisedEngine<'m> {
             self.tracked.remove(&fr.id);
         }
         finished
+    }
+
+    /// KV pressure response, run before admission so freed pages are
+    /// visible to the admit pass: while live KV bytes sit above the high
+    /// watermark, preempt the youngest lane and resubmit it under its
+    /// original id/deadline with its streamed prefix marked for replay
+    /// suppression — the restart requeue machinery, applied to one lane.
+    /// A no-op when `kv_budget_bytes` is 0 (`kv_over_high` is false).
+    fn governance_preempt(&mut self, finished: &mut Vec<FinishedRequest>) {
+        while self.sched.kv_over_high() {
+            let Some(id) = self.sched.preempt_youngest() else { break };
+            crate::log_warn!(
+                "supervisor",
+                "kv pressure {:.2}: preempted lane {id} for requeue",
+                self.sched.kv_pressure()
+            );
+            let Some(t) = self.tracked.get_mut(&id) else { continue };
+            t.replay_skip = t.streamed;
+            t.streamed = 0;
+            let opts = SubmitOpts { deadline: t.deadline, id: Some(id), ..SubmitOpts::default() };
+            let (prompt, gen) = (t.prompt.clone(), t.gen_tokens);
+            if let Err(e) = self.sched.submit_opts(&prompt, gen, opts) {
+                crate::log_warn!("supervisor", "requeue of preempted request {id} failed: {e}");
+                self.tracked.remove(&id);
+                finished.push(failed_event(id));
+            }
+        }
     }
 
     /// Replace the scheduler with a fresh one (freeing every KV page of
@@ -272,6 +311,41 @@ impl<'m> SupervisedEngine<'m> {
         self.sched.kv_allocated_bytes()
     }
 
+    pub fn kv_live_bytes(&self) -> usize {
+        self.sched.kv_live_bytes()
+    }
+
+    /// Live-KV pressure against the configured budget (0.0 when off).
+    pub fn kv_pressure(&self) -> f64 {
+        self.sched.kv_pressure()
+    }
+
+    /// Whether a request of this shape is refused up front by the KV
+    /// budget (or the armed `kv-exhaust` fault site).
+    pub fn kv_submit_refused(&self, prompt_len: usize, gen_tokens: usize) -> bool {
+        self.sched.kv_submit_refused(prompt_len, gen_tokens)
+    }
+
+    /// Worst-case KV bytes for a request spanning `total_pos` positions.
+    pub fn kv_request_cost_bytes(&self, total_pos: usize) -> usize {
+        self.sched.kv_request_cost_bytes(total_pos)
+    }
+
+    /// Requests admitted with a brownout-clamped token budget so far.
+    pub fn brownouts(&self) -> u64 {
+        self.sched.brownouts()
+    }
+
+    /// Lanes preempted under KV pressure so far.
+    pub fn preemptions(&self) -> u64 {
+        self.sched.preemptions()
+    }
+
+    /// Predicted queue wait (ms) from the measured per-step drain rate.
+    pub fn predicted_wait_ms(&self) -> u64 {
+        self.sched.predicted_wait_ms()
+    }
+
     pub fn kv_dtype(&self) -> crate::cfg::KvDtype {
         self.sched.kv_dtype()
     }
@@ -287,6 +361,7 @@ fn failed_event(id: u64) -> FinishedRequest {
         tokens: Vec::new(),
         metrics: RequestMetrics::empty(),
         finish: FinishReason::Failed,
+        degraded: false,
     }
 }
 
@@ -486,6 +561,69 @@ mod tests {
         assert!(eng.submit(&ps[0], 4, None).is_err(), "dead engine refuses work");
         assert!(!eng.has_work());
         assert!(eng.step().is_empty());
+    }
+
+    #[test]
+    fn kv_pressure_preempts_youngest_and_replays_bit_identically() {
+        // Geometry: one layer, two heads of dim 8 → a 64-position KV
+        // chunk is 8 KiB. A (gen 150) and B (gen 100) both fit at
+        // admission, but their combined page growth crosses the high
+        // watermark mid-decode: the supervisor must preempt B (youngest),
+        // deallocate its pages, and requeue it — B then waits for A to
+        // drain and completes bit-identically, every token seen once.
+        use crate::cfg::ModelConfig;
+        let cfg = ModelConfig {
+            name: "preempt-probe".into(),
+            vocab: 64,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            rope_theta: 10000.0,
+        };
+        let ps = ParamStore::init(&cfg, &mut Rng::new(0));
+        let m = NativeModel::from_params(&ps);
+        let (p_a, p_b) = (vec![1u32, 2], vec![3u32, 4]);
+        let (want_a, want_b) = (reference(&m, &p_a, 150), reference(&m, &p_b, 100));
+        let budget = 32 * 1024; // 4 chunks: A peaks at 3, B holds 2
+        let scfg = ServeConfig {
+            max_batch: 2,
+            max_queued: 8,
+            kv_budget_bytes: budget,
+            restart_policy: RestartPolicy::Requeue,
+            ..ServeConfig::default()
+        };
+        let mut eng = SupervisedEngine::new(&m, scfg);
+        let a = eng.submit(&p_a, 150, None).unwrap();
+        eng.step();
+        let b = eng.submit(&p_b, 100, None).unwrap();
+
+        let mut done = Vec::new();
+        let mut streamed: HashMap<u64, Vec<u32>> = HashMap::new();
+        let mut peak = eng.kv_allocated_bytes();
+        let safety = Instant::now() + Duration::from_secs(30);
+        while eng.has_work() && Instant::now() < safety {
+            done.extend(eng.step());
+            peak = peak.max(eng.kv_allocated_bytes());
+            for &(id, tok) in eng.step_tokens() {
+                streamed.entry(id).or_default().push(tok);
+            }
+        }
+        assert_eq!(eng.preemptions(), 1, "combined growth must force one preemption");
+        assert_eq!(eng.restarts(), 0, "preemption is not a restart");
+        assert!(peak <= budget, "kv_allocated_bytes {peak} exceeded budget {budget}");
+        assert_eq!(done.len(), 2);
+        let fa = done.iter().find(|f| f.id == a).unwrap();
+        assert_eq!(fa.finish, FinishReason::Length);
+        assert_eq!(fa.tokens, want_a, "survivor lane diverged");
+        let fb = done.iter().find(|f| f.id == b).unwrap();
+        assert_eq!(fb.finish, FinishReason::Length, "preempted request must complete");
+        assert!(!fb.degraded, "requeued under an empty engine, not browned out");
+        assert_eq!(fb.tokens, want_b, "preempted request diverged after replay");
+        assert_eq!(
+            streamed[&b], want_b,
+            "replay suppression must hand out each of B's tokens exactly once"
+        );
     }
 
     #[test]

@@ -42,9 +42,17 @@ pub const ENGINE_STALL: &str = "engine-stall";
 /// Sleep before one SSE chunk write: slow/partial socket I/O on the
 /// connection thread.
 pub const SLOW_WRITE: &str = "slow-write";
+/// Report the KV arena as exhausted at one admission-time budget check:
+/// the request is refused with the kv-budget 429 even though pages are
+/// actually available — the out-of-memory fault class without the OOM.
+pub const KV_EXHAUST: &str = "kv-exhaust";
+/// Sleep while reading one request body: a slow-upload (slowloris-style)
+/// client stalling its connection thread mid-read.
+pub const SLOW_READ: &str = "slow-read";
 
 /// Every site name `GQ_FAULT` accepts.
-pub const SITES: &[&str] = &[STEP_PANIC, PREFILL_PANIC, NAN_LOGITS, ENGINE_STALL, SLOW_WRITE];
+pub const SITES: &[&str] =
+    &[STEP_PANIC, PREFILL_PANIC, NAN_LOGITS, ENGINE_STALL, SLOW_WRITE, KV_EXHAUST, SLOW_READ];
 
 struct Site {
     nth: u64,
@@ -198,6 +206,8 @@ mod tests {
         assert!(parse_one("step-panic:0").is_err(), "nth is 1-based");
         assert!(parse_one("step-panic:x").is_err(), "non-numeric nth");
         assert!(parse_one("frobnicate:2").is_err(), "unknown site");
+        assert_eq!(parse_one("kv-exhaust:1").unwrap(), ("kv-exhaust".to_string(), 1));
+        assert_eq!(parse_one("slow-read:2").unwrap(), ("slow-read".to_string(), 2));
     }
 
     #[test]

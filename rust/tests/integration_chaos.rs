@@ -9,6 +9,13 @@
 //! Global fault sites are process-wide, so every test serializes on
 //! [`SERIAL`] and disarms on entry and exit (panic included) — scenarios
 //! can never leak injected faults into each other.
+//!
+//! The overload scenarios (KV budget flood, brownout, kv-exhaust,
+//! slow-read, predicted-deadline shedding) assert the PR 8 governance
+//! contract: `kv_allocated_bytes` never exceeds `kv_budget_bytes`,
+//! `/healthz` stays 200 under pressure, every request resolves (200,
+//! degraded 200, or 429 with a computed Retry-After — never a hang), and
+//! post-overload outputs are bit-identical to an unloaded engine.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -57,7 +64,14 @@ fn serve(cfg: ServeConfig) -> (Arc<NativeModel>, HttpServer) {
 
 struct Response {
     status: u16,
+    headers: Vec<(String, String)>,
     body: String,
+}
+
+impl Response {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
 }
 
 fn request(addr: SocketAddr, raw: &str) -> Response {
@@ -101,7 +115,7 @@ fn request(addr: SocketAddr, raw: &str) -> Response {
         r.read_exact(&mut buf).unwrap();
         String::from_utf8(buf).unwrap()
     };
-    Response { status, body }
+    Response { status, headers, body }
 }
 
 fn get(addr: SocketAddr, path: &str) -> Response {
@@ -125,6 +139,26 @@ fn completion_body(prompt: &[u32], max_tokens: usize, stream: bool) -> String {
         .with("max_tokens", max_tokens)
         .with("stream", stream)
         .encode()
+}
+
+fn completion_body_deadline(prompt: &[u32], max_tokens: usize, timeout_ms: u64) -> String {
+    let toks: Vec<Json> = prompt.iter().map(|&t| Json::from(t)).collect();
+    Json::object()
+        .with("prompt", toks)
+        .with("max_tokens", max_tokens)
+        .with("timeout_ms", timeout_ms)
+        .encode()
+}
+
+/// A 429 must carry a computed, in-range Retry-After — never 0, never
+/// past the 60s clamp.
+fn assert_sane_retry_after(resp: &Response) {
+    let ra: u64 = resp
+        .header("retry-after")
+        .expect("429 without Retry-After")
+        .parse()
+        .expect("non-numeric Retry-After");
+    assert!((1..=60).contains(&ra), "Retry-After {ra} outside the 1-60s clamp");
 }
 
 fn response_tokens(body: &str) -> Vec<u32> {
@@ -359,5 +393,233 @@ fn slow_socket_writes_do_not_corrupt_streams() {
     assert_eq!(resp.status, 200, "{}", resp.body);
     assert_eq!(sse_events(&resp.body).last().unwrap(), "[DONE]");
     assert_eq!(streamed_tokens(&resp.body), reference_tokens(&m, &prompt, 6));
+    server.shutdown();
+}
+
+#[test]
+fn kv_budget_flood_never_exceeds_budget_and_every_request_resolves() {
+    let _scope = scenario();
+    let m = model();
+    // Budget: two fully grown request costs. Lanes admit one at a time,
+    // combined page growth can brush the budget exactly (preemption
+    // territory), and the queue absorbs or sheds the rest.
+    let budget = {
+        let probe = guidedquant::serve::Scheduler::new(&m, ServeConfig::default());
+        probe.kv_request_cost_bytes(48 + 32) * 2
+    };
+    let cfg = ServeConfig {
+        max_batch: 2,
+        max_queued: 4,
+        kv_budget_bytes: budget,
+        ..ServeConfig::default()
+    };
+    let server = HttpServer::bind(m.clone(), cfg, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+
+    let vocab = m.cfg.vocab as u32;
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            let prompt: Vec<u32> =
+                (0..48).map(|j| ((i * 31 + j * 7) as u32) % vocab).collect();
+            std::thread::spawn(move || {
+                let resp = post(addr, "/v1/completions", &completion_body(&prompt, 32, false));
+                (prompt, resp)
+            })
+        })
+        .collect();
+
+    // While the flood is in flight: the budget is a hard ceiling and the
+    // health probe must keep answering.
+    let t0 = Instant::now();
+    while t0.elapsed() < Duration::from_millis(1500) {
+        let mx = Json::parse(&get(addr, "/metrics").body).unwrap();
+        let alloc = mx.get("kv_allocated_bytes").unwrap().as_u64().unwrap();
+        assert!(alloc <= budget as u64, "kv_allocated_bytes {alloc} exceeded budget {budget}");
+        assert_eq!(mx.get("kv_budget_bytes").unwrap().as_u64(), Some(budget as u64));
+        assert_eq!(get(addr, "/healthz").status, 200, "healthz must stay live under flood");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // Every request resolves: served bit-identically (preempted-then-
+    // completed counts — replay suppression keeps it exact) or shed with
+    // a computed Retry-After. No third outcome, no hang.
+    let mut served = 0;
+    for h in handles {
+        let (prompt, resp) = h.join().unwrap();
+        match resp.status {
+            200 => {
+                assert_eq!(
+                    response_tokens(&resp.body),
+                    reference_tokens(&m, &prompt, 32),
+                    "flooded request diverged from the unloaded reference"
+                );
+                served += 1;
+            }
+            429 => assert_sane_retry_after(&resp),
+            s => panic!("request resolved with unexpected status {s}: {}", resp.body),
+        }
+    }
+    assert!(served >= 1, "the flood must not shed everything");
+    let mx = Json::parse(&get(addr, "/metrics").body).unwrap();
+    assert!(mx.get("kv_allocated_bytes").unwrap().as_u64().unwrap() <= budget as u64);
+    assert_serves_bit_identically(addr, &m);
+    server.shutdown();
+}
+
+#[test]
+fn brownout_clamps_tokens_and_flags_degraded_over_http() {
+    let _scope = scenario();
+    let m = model();
+    // Budget ~ the long request's full cost / 0.89: the lane is admitted
+    // (cost just under the high watermark) and its page growth alone
+    // crosses the low watermark mid-decode — brownout territory.
+    let budget = {
+        let probe = guidedquant::serve::Scheduler::new(&m, ServeConfig::default());
+        (probe.kv_request_cost_bytes(2 + 600) as f64 / 0.89) as usize
+    };
+    let cfg = ServeConfig {
+        max_batch: 2,
+        max_queued: 8,
+        kv_budget_bytes: budget,
+        ..ServeConfig::default()
+    };
+    let server = HttpServer::bind(m.clone(), cfg, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+
+    // Freeze the engine for 1.5s around decode step 470 — inside the
+    // brownout window (low watermark crossed near step ~450) — so the
+    // second request deterministically lands while pressure is high.
+    fault::arm_global(fault::ENGINE_STALL, 470);
+    let p_long = vec![1u32, 2];
+    let long = {
+        let p = p_long.clone();
+        std::thread::spawn(move || post(addr, "/v1/completions", &completion_body(&p, 600, false)))
+    };
+    wait_for_metrics(
+        addr,
+        |mx| mx.get("kv_pressure").unwrap().as_f64().unwrap_or(0.0) >= 0.70,
+        "kv pressure above the low watermark",
+    );
+
+    // Asks for 600 tokens; brownout must clamp it to 32 and say so.
+    let p_short = [9u32, 1];
+    let resp = post(addr, "/v1/completions", &completion_body(&p_short, 600, false));
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let doc = Json::parse(&resp.body).unwrap();
+    assert_eq!(doc.get("degraded").unwrap().as_bool(), Some(true), "{}", resp.body);
+    assert_eq!(doc.get("finish_reason").unwrap().as_str(), Some("length"));
+    assert_eq!(doc.get("n_tokens").unwrap().as_u64(), Some(32));
+    assert_eq!(
+        response_tokens(&resp.body),
+        reference_tokens(&m, &p_short, 32),
+        "browned-out output must be bit-identical up to the clamp"
+    );
+
+    let long_resp = long.join().unwrap();
+    assert_eq!(long_resp.status, 200, "{}", long_resp.body);
+    let long_doc = Json::parse(&long_resp.body).unwrap();
+    assert_eq!(long_doc.get("degraded").unwrap().as_bool(), Some(false));
+    assert_eq!(response_tokens(&long_resp.body), reference_tokens(&m, &p_long, 600));
+    wait_for_metrics(
+        addr,
+        |mx| mx.get("brownouts").unwrap().as_u64() == Some(1),
+        "brownout counter",
+    );
+    assert_serves_bit_identically(addr, &m);
+    server.shutdown();
+}
+
+#[test]
+fn kv_exhaust_fault_sheds_once_with_computed_retry_after() {
+    let _scope = scenario();
+    let (m, server) = serve(ServeConfig::default());
+    let addr = server.local_addr();
+
+    // No budget configured: the armed site reports spurious exhaustion at
+    // exactly one admission check — the out-of-memory fault class without
+    // the OOM. One 429, then business as usual.
+    fault::arm_global(fault::KV_EXHAUST, 1);
+    let resp = post(addr, "/v1/completions", &completion_body(&[1, 2, 3], 6, false));
+    assert_eq!(resp.status, 429, "{}", resp.body);
+    assert_sane_retry_after(&resp);
+    wait_for_metrics(addr, |mx| mx.get("rejected").unwrap().as_u64() == Some(1), "shed counted");
+    assert_eq!(get(addr, "/healthz").status, 200);
+    assert_serves_bit_identically(addr, &m);
+    server.shutdown();
+}
+
+#[test]
+fn slow_read_stalls_one_connection_not_the_server() {
+    let _scope = scenario();
+    let (m, server) = serve(ServeConfig::default());
+    let addr = server.local_addr();
+
+    // The slowloris fault class: one request body read stalls 1s on its
+    // own connection thread. The response arrives late but bit-identical,
+    // and the server answers health probes throughout.
+    fault::arm_global(fault::SLOW_READ, 1);
+    let prompt = [6u32, 5, 4];
+    let t0 = Instant::now();
+    let slow = std::thread::spawn(move || {
+        post(addr, "/v1/completions", &completion_body(&prompt, 6, false))
+    });
+    assert_eq!(get(addr, "/healthz").status, 200, "health probe must not queue behind the stall");
+    let resp = slow.join().unwrap();
+    assert!(t0.elapsed() >= Duration::from_millis(900), "stall site never fired");
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    assert_eq!(response_tokens(&resp.body), reference_tokens(&m, &prompt, 6));
+    server.shutdown();
+}
+
+#[test]
+fn predicted_deadline_shedding_rejects_doomed_requests_up_front() {
+    let _scope = scenario();
+    let (m, server) = serve(ServeConfig {
+        max_batch: 1,
+        max_queued: 8,
+        ..ServeConfig::default()
+    });
+    let addr = server.local_addr();
+
+    // Stall decode step 2 for 1.5s: the EWMA step time spikes to
+    // hundreds of ms. A second long request parks in the queue during
+    // the stall, so when the probe with `timeout_ms: 1` is evaluated
+    // right after it, the predicted wait (queue depth x step EWMA)
+    // dwarfs its deadline — shed up front, never enqueued.
+    fault::arm_global(fault::ENGINE_STALL, 2);
+    let p_a = vec![1u32, 2];
+    let p_b = vec![7u32, 8];
+    let a = {
+        let p = p_a.clone();
+        std::thread::spawn(move || post(addr, "/v1/completions", &completion_body(&p, 600, false)))
+    };
+    wait_for_metrics(addr, |mx| mx.get("active").unwrap().as_u64() == Some(1), "lane occupied");
+    let b = {
+        let p = p_b.clone();
+        std::thread::spawn(move || post(addr, "/v1/completions", &completion_body(&p, 600, false)))
+    };
+    std::thread::sleep(Duration::from_millis(100)); // b enqueues before the probe
+
+    let doomed = post(addr, "/v1/completions", &completion_body_deadline(&[5], 8, 1));
+    assert_eq!(doomed.status, 429, "{}", doomed.body);
+    assert_sane_retry_after(&doomed);
+    assert!(
+        doomed.body.contains("predicted queue wait"),
+        "shed reason must name the prediction: {}",
+        doomed.body
+    );
+    wait_for_metrics(
+        addr,
+        |mx| mx.get("shed_predicted_deadline").unwrap().as_u64() == Some(1),
+        "deadline shed counter",
+    );
+
+    // The honestly admitted requests still complete bit-identically.
+    for (h, p) in [(a, &p_a), (b, &p_b)] {
+        let resp = h.join().unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        assert_eq!(response_tokens(&resp.body), reference_tokens(&m, p, 600));
+    }
+    assert_serves_bit_identically(addr, &m);
     server.shutdown();
 }

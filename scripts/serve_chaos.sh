@@ -16,14 +16,23 @@
 #                     mid-stream client hang-up (lane cancelled, KV pages
 #                     freed), and an expired per-request deadline
 #                     (finish_reason "timeout" with partial output).
+#   * kv-exhaust    - a spurious KV-exhaustion report at one admission
+#                     check sheds exactly that request with a 429 whose
+#                     Retry-After is computed (1..60s); the next request
+#                     is served normally.
+#   * slow-read     - one request body read stalls 1s on its own
+#                     connection thread; the response is late but
+#                     bit-identical and health probes never queue behind
+#                     it.
 #
 # After every fault the server must keep serving tokens bit-identical to
 # the fault-free baseline, and kv_bytes must return to the idle baseline.
 #
 # All intermediate files land in ./serve-chaos/ so CI can upload them on
 # failure. Usage: scripts/serve_chaos.sh [path-to-gq]
-#   CHAOS_SCENARIO=step-panic|nan-logits|engine-stall|slow-client|all
-#   (default all) selects one scenario for CI matrix fan-out.
+#   CHAOS_SCENARIO=step-panic|nan-logits|engine-stall|slow-client|
+#   kv-exhaust|slow-read|all (default all) selects one scenario for CI
+#   matrix fan-out.
 
 set -euo pipefail
 
@@ -204,6 +213,41 @@ if want_scenario slow-client; then
     assert_baseline_tokens deadline
     stop
     echo "[deadline] OK"
+fi
+
+# --- kv-exhaust: spurious admission-time exhaustion -> one 429, then normal --
+if want_scenario kv-exhaust; then
+    boot kv-exhaust GQ_FAULT=kv-exhaust:1
+    CODE=$(curl -s -D "$DIR/kv-exhaust_headers.txt" -o "$DIR/kv-exhaust_hit.json" \
+        -w '%{http_code}' -X POST "$BASE/v1/completions" -d "$PROMPT")
+    [ "$CODE" = 429 ] || fail "kv-exhaust: shed request returned $CODE, want 429"
+    RA=$(sed -n 's/^[Rr]etry-[Aa]fter: *//p' "$DIR/kv-exhaust_headers.txt" | head -n 1 | tr -d '\r')
+    [ -n "$RA" ] || fail "kv-exhaust: 429 without a Retry-After header"
+    { [ "$RA" -ge 1 ] && [ "$RA" -le 60 ]; } \
+        || fail "kv-exhaust: Retry-After $RA outside the 1..60s clamp"
+    poll_metrics '.rejected >= 1' "shed counter"
+    curl -fsS "$BASE/healthz" >/dev/null || fail "kv-exhaust: healthz went dark"
+    assert_baseline_tokens kv-exhaust
+    stop
+    echo "[kv-exhaust] OK"
+fi
+
+# --- slow-read: a stalled body read delays one connection, not the server ----
+if want_scenario slow-read; then
+    boot slow-read GQ_FAULT=slow-read:1
+    T0=$(date +%s%N)
+    curl -fsS --max-time 30 -X POST "$BASE/v1/completions" -d "$PROMPT" \
+        >"$DIR/slow-read_hit.json" \
+        || fail "slow-read: stalled request must still complete"
+    ELAPSED_MS=$(( ($(date +%s%N) - T0) / 1000000 ))
+    [ "$ELAPSED_MS" -ge 900 ] \
+        || fail "slow-read: stall site never fired (request took ${ELAPSED_MS}ms)"
+    GOT=$(tokens_of "$DIR/slow-read_hit.json")
+    [ "$GOT" = "$REF" ] || fail "slow-read: tokens [$GOT] differ from baseline [$REF]"
+    curl -fsS "$BASE/healthz" >/dev/null || fail "slow-read: healthz went dark"
+    assert_baseline_tokens slow-read
+    stop
+    echo "[slow-read] OK"
 fi
 
 echo "serve-chaos OK (scenario: $SCENARIO)"

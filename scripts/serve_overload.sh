@@ -1,0 +1,299 @@
+#!/usr/bin/env bash
+# Overload end-to-end for the KV-governance serving stack (PR 8).
+#
+# Boots the release binary on the tiny preset with a deliberately small
+# KV budget (--kv-budget-mb 1) and drives it past its capacity three
+# different ways:
+#
+#   * flood     - a long-prompt flood: more worst-case KV cost in flight
+#                 than the budget can hold. Admission must gate on cost,
+#                 brownouts may clamp max_tokens (degraded: true), the
+#                 supervisor may preempt-and-requeue — but
+#                 kv_allocated_bytes must NEVER exceed kv_budget_bytes,
+#                 /healthz must stay 200 throughout, and every request
+#                 must resolve as either a bit-identical 200 (a degraded
+#                 200 is a bit-identical PREFIX) or a 429 whose
+#                 Retry-After is computed (1..60s), never a hang.
+#   * slowloris - clients that trickle their request bodies byte by byte.
+#                 Each stall pins only its own connection thread: parallel
+#                 normal requests and health probes are served promptly,
+#                 and the slow bodies still complete with 200s.
+#   * burst     - a mixed-deadline burst behind a long-running request:
+#                 tight timeout_ms values are shed up front (429 with
+#                 Retry-After) or answered with partial "timeout" output;
+#                 generous ones complete. Nothing hangs.
+#
+# After every scenario the server must still serve tokens bit-identical
+# to an unloaded baseline server.
+#
+# All intermediate files land in ./serve-overload/ so CI can upload them
+# on failure. Usage: scripts/serve_overload.sh [path-to-gq]
+#   OVERLOAD_SCENARIO=flood|slowloris|burst|all (default all)
+
+set -euo pipefail
+
+GQ=${1:-target/release/gq}
+SCENARIO=${OVERLOAD_SCENARIO:-all}
+DIR=serve-overload
+rm -rf "$DIR"
+mkdir -p "$DIR"
+LOG="$DIR/boot.log"
+
+PIDS=()
+cleanup() {
+    for p in "${PIDS[@]:-}"; do
+        kill "$p" 2>/dev/null || true
+        wait "$p" 2>/dev/null || true
+    done
+}
+trap cleanup EXIT
+
+fail() {
+    echo "FAIL: $*" >&2
+    echo "---- server log ($LOG) ----" >&2
+    cat "$LOG" >&2 || true
+    exit 1
+}
+
+[ -x "$GQ" ] || { echo "FAIL: binary $GQ not found (run cargo build --release)" >&2; exit 1; }
+
+# boot <name> [extra serve flags ...]: start a server, wait for its
+# address. Sets LOG, SERVER, ADDR, BASE.
+boot() {
+    local name=$1
+    shift
+    LOG="$DIR/$name.log"
+    "$GQ" serve --model tiny --format nonuniform --bits 4 \
+        --http 127.0.0.1:0 "$@" >"$LOG" 2>&1 &
+    SERVER=$!
+    PIDS+=("$SERVER")
+    ADDR=
+    for _ in $(seq 1 240); do
+        ADDR=$(sed -n 's/^http: listening on //p' "$LOG" | head -n 1)
+        [ -n "$ADDR" ] && break
+        kill -0 "$SERVER" 2>/dev/null || fail "$name server exited during startup"
+        sleep 0.25
+    done
+    [ -n "$ADDR" ] || fail "$name server never reported a listening address"
+    BASE="http://$ADDR"
+    echo "[$name] server up at $BASE"
+}
+
+stop() {
+    kill "$SERVER" 2>/dev/null || true
+    wait "$SERVER" 2>/dev/null || true
+}
+
+tokens_of() {
+    jq -r '.tokens | map(tostring) | join(",")' "$1"
+}
+
+# A 429 must carry a computed Retry-After inside the 1..60s clamp.
+assert_retry_after() { # assert_retry_after <headers-file> <what>
+    local ra
+    ra=$(sed -n 's/^[Rr]etry-[Aa]fter: *//p' "$1" | head -n 1 | tr -d '\r')
+    [ -n "$ra" ] || fail "$2: 429 without a Retry-After header"
+    [ "$ra" -ge 1 ] && [ "$ra" -le 60 ] \
+        || fail "$2: Retry-After $ra outside the 1..60s clamp"
+}
+
+# The unloaded request every scenario replays to prove the server still
+# serves bit-identical tokens after the overload.
+PROMPT='{"prompt": [1, 2, 3, 4], "max_tokens": 8}'
+
+assert_baseline_tokens() { # assert_baseline_tokens <name>
+    curl -fsS -X POST "$BASE/v1/completions" -d "$PROMPT" >"$DIR/$1_after.json" \
+        || fail "$1: post-overload request did not get a 200"
+    local got
+    got=$(tokens_of "$DIR/$1_after.json")
+    [ "$got" = "$REF" ] || fail "$1: post-overload tokens [$got] differ from baseline [$REF]"
+}
+
+want_scenario() {
+    [ "$SCENARIO" = all ] || [ "$SCENARIO" = "$1" ]
+}
+
+flood_body() { # flood_body <i> — a distinct ~200-token prompt per client
+    jq -nc --argjson i "$1" \
+        '{prompt: [range(200) | ((. * 7 + $i * 31) % 500) + 1], max_tokens: 64}'
+}
+
+N_FLOOD=12
+
+# --- baseline: unloaded reference tokens -------------------------------------
+# No KV budget here: this server is the unloaded oracle for every
+# bit-identity assertion below, including one reference output per flood
+# prompt (served one at a time, zero pressure).
+boot baseline
+curl -fsS -X POST "$BASE/v1/completions" -d "$PROMPT" >"$DIR/baseline.json"
+REF=$(tokens_of "$DIR/baseline.json")
+[ -n "$REF" ] || fail "baseline returned no tokens"
+echo "baseline tokens: $REF"
+for i in $(seq 1 "$N_FLOOD"); do
+    flood_body "$i" >"$DIR/flood_req_$i.json"
+    curl -fsS -X POST "$BASE/v1/completions" -d @"$DIR/flood_req_$i.json" \
+        >"$DIR/flood_ref_$i.json" || fail "baseline: flood reference $i failed"
+done
+stop
+
+# --- flood: long-prompt flood against a 1 MB KV budget -----------------------
+if want_scenario flood; then
+    boot flood --kv-budget-mb 1 --max-batch 4 --max-queued 8
+    FLOOD_PIDS=()
+    for i in $(seq 1 "$N_FLOOD"); do
+        (
+            curl -s --max-time 120 -D "$DIR/flood_h_$i.txt" -o "$DIR/flood_b_$i.json" \
+                -w '%{http_code}' -X POST "$BASE/v1/completions" \
+                -d @"$DIR/flood_req_$i.json" >"$DIR/flood_c_$i.txt"
+        ) &
+        FLOOD_PIDS+=($!)
+    done
+    # While the flood is in flight: the budget is a hard ceiling and the
+    # health probe must keep answering.
+    for _ in $(seq 1 40); do
+        if curl -fsS "$BASE/metrics" >"$DIR/flood_metrics.json" 2>/dev/null; then
+            jq -e '.kv_allocated_bytes <= .kv_budget_bytes' "$DIR/flood_metrics.json" >/dev/null \
+                || fail "flood: kv_allocated_bytes exceeded kv_budget_bytes: $(cat "$DIR/flood_metrics.json")"
+        fi
+        curl -fsS -o /dev/null "$BASE/healthz" || fail "flood: healthz went dark under load"
+        sleep 0.1
+    done
+    for p in "${FLOOD_PIDS[@]}"; do
+        wait "$p" || fail "flood: a client worker exited abnormally (hung request?)"
+    done
+    SERVED=0
+    for i in $(seq 1 "$N_FLOOD"); do
+        CODE=$(cat "$DIR/flood_c_$i.txt")
+        case "$CODE" in
+        200)
+            # Under pressure a request may be browned out (degraded: true,
+            # clamped length) — but whatever was served must be an exact
+            # prefix of the unloaded reference output.
+            jq -e --slurpfile ref "$DIR/flood_ref_$i.json" \
+                '(.tokens == ($ref[0].tokens[0:(.tokens | length)]))
+                 and ((.degraded == true) or (.tokens == $ref[0].tokens))' \
+                "$DIR/flood_b_$i.json" >/dev/null \
+                || fail "flood: request $i diverged from the unloaded reference: $(cat "$DIR/flood_b_$i.json")"
+            SERVED=$((SERVED + 1))
+            ;;
+        429)
+            assert_retry_after "$DIR/flood_h_$i.txt" "flood request $i"
+            ;;
+        *)
+            fail "flood: request $i resolved with unexpected status $CODE: $(cat "$DIR/flood_b_$i.json")"
+            ;;
+        esac
+    done
+    [ "$SERVED" -ge 1 ] || fail "flood: every request was shed"
+    echo "[flood] $SERVED/$N_FLOOD served, rest shed with sane Retry-After"
+    curl -fsS "$BASE/metrics" >"$DIR/flood_final_metrics.json"
+    jq -e '.kv_allocated_bytes <= .kv_budget_bytes' "$DIR/flood_final_metrics.json" >/dev/null \
+        || fail "flood: post-flood allocation exceeds budget"
+    assert_baseline_tokens flood
+    stop
+    echo "[flood] OK"
+fi
+
+# --- slowloris: trickled request bodies don't wedge the server ---------------
+if want_scenario slowloris; then
+    boot slowloris --kv-budget-mb 1 --max-batch 2 --max-queued 4
+    HOST=${ADDR%:*}
+    PORT=${ADDR##*:}
+    SLOW_BODY='{"prompt": [1, 2, 3, 4], "max_tokens": 8}'
+    slow_writer() { # slow_writer <i> — trickle the body 4 bytes / 150 ms
+        local i=$1 out="$DIR/slowloris_resp_$1.txt"
+        exec 3<>"/dev/tcp/$HOST/$PORT" || return 1
+        printf 'POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: %d\r\nConnection: close\r\n\r\n' \
+            "${#SLOW_BODY}" >&3
+        local j
+        for ((j = 0; j < ${#SLOW_BODY}; j += 4)); do
+            printf '%s' "${SLOW_BODY:j:4}" >&3
+            sleep 0.15
+        done
+        cat <&3 >"$out"
+        exec 3>&- 3<&-
+    }
+    SLOW_PIDS=()
+    for i in 1 2 3; do
+        slow_writer "$i" &
+        SLOW_PIDS+=($!)
+    done
+    # While three connections trickle: normal traffic must be unaffected.
+    sleep 0.3
+    curl -fsS --max-time 5 "$BASE/healthz" >/dev/null \
+        || fail "slowloris: healthz queued behind trickled bodies"
+    curl -fsS --max-time 10 -X POST "$BASE/v1/completions" -d "$PROMPT" \
+        >"$DIR/slowloris_parallel.json" \
+        || fail "slowloris: a parallel normal request must be served promptly"
+    GOT=$(tokens_of "$DIR/slowloris_parallel.json")
+    [ "$GOT" = "$REF" ] || fail "slowloris: parallel tokens [$GOT] differ from baseline [$REF]"
+    for p in "${SLOW_PIDS[@]}"; do
+        wait "$p" || fail "slowloris: a slow writer failed"
+    done
+    for i in 1 2 3; do
+        head -n 1 "$DIR/slowloris_resp_$i.txt" | grep -q ' 200 ' \
+            || fail "slowloris: trickled request $i was not served: $(head -n 1 "$DIR/slowloris_resp_$i.txt")"
+        SLOW_TOKS=$(grep -o '"tokens":[^]]*]' "$DIR/slowloris_resp_$i.txt" | head -n 1 | tr -cd '0-9,')
+        [ "$SLOW_TOKS" = "$REF" ] \
+            || fail "slowloris: trickled tokens [$SLOW_TOKS] differ from baseline [$REF]"
+    done
+    assert_baseline_tokens slowloris
+    stop
+    echo "[slowloris] OK"
+fi
+
+# --- burst: mixed deadlines behind a long request — nothing hangs ------------
+if want_scenario burst; then
+    boot burst --kv-budget-mb 1 --max-batch 1 --max-queued 4
+    # Occupy the single lane with a long request. 380 tokens keeps its
+    # worst-case KV cost (3 + 380 positions = 6 chunks) under the high
+    # watermark, so it is admitted rather than refused.
+    curl -s --max-time 120 -X POST "$BASE/v1/completions" \
+        -d '{"prompt": [9, 8, 7], "max_tokens": 380}' >"$DIR/burst_long.json" &
+    LONG_PID=$!
+    sleep 0.1
+    DEADLINES=(1 5 50 200 1000 5000 0 0) # 0 => no timeout_ms field
+    BURST_PIDS=()
+    for k in "${!DEADLINES[@]}"; do
+        T=${DEADLINES[$k]}
+        if [ "$T" = 0 ]; then
+            BODY='{"prompt": [2, 4, 6], "max_tokens": 16}'
+        else
+            BODY=$(jq -nc --argjson t "$T" '{prompt: [2, 4, 6], max_tokens: 16, timeout_ms: $t}')
+        fi
+        (
+            curl -s --max-time 120 -D "$DIR/burst_h_$k.txt" -o "$DIR/burst_b_$k.json" \
+                -w '%{http_code}' -X POST "$BASE/v1/completions" -d "$BODY" \
+                >"$DIR/burst_c_$k.txt"
+        ) &
+        BURST_PIDS+=($!)
+    done
+    for p in "${BURST_PIDS[@]}" "$LONG_PID"; do
+        wait "$p" || fail "burst: a client worker exited abnormally (hung request?)"
+    done
+    for k in "${!DEADLINES[@]}"; do
+        CODE=$(cat "$DIR/burst_c_$k.txt")
+        case "$CODE" in
+        200)
+            jq -e '.finish_reason == "length" or .finish_reason == "timeout"' \
+                "$DIR/burst_b_$k.json" >/dev/null \
+                || fail "burst: request $k (timeout ${DEADLINES[$k]}ms) wrong shape: $(cat "$DIR/burst_b_$k.json")"
+            ;;
+        429)
+            assert_retry_after "$DIR/burst_h_$k.txt" "burst request $k"
+            ;;
+        *)
+            fail "burst: request $k resolved with unexpected status $CODE"
+            ;;
+        esac
+    done
+    jq -e '.tokens | length == 380' "$DIR/burst_long.json" >/dev/null \
+        || fail "burst: the long request must complete in full: $(head -c 300 "$DIR/burst_long.json")"
+    curl -fsS "$BASE/metrics" >"$DIR/burst_metrics.json"
+    echo "[burst] shed_predicted_deadline=$(jq '.shed_predicted_deadline' "$DIR/burst_metrics.json")"
+    assert_baseline_tokens burst
+    stop
+    echo "[burst] OK"
+fi
+
+echo "serve-overload OK (scenario: $SCENARIO)"
