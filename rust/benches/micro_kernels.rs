@@ -1,7 +1,9 @@
 //! Micro-benchmarks of the hot paths: serving-format matvec kernels
 //! (the Table 2 inner loop), the native matmul, serial-vs-pool rows for
 //! the parallel kernels (tiled `matmul_tn`, the column-sharded batched
-//! decode step, and batch-8 long-context paged attention), and the L1
+//! decode step, and batch-8 long-context paged attention), cold-prefill
+//! vs prefix-hit prefill through the scheduler's shared-prefix KV index,
+//! and the L1
 //! xtsx Pallas kernel executed through its demo artifact vs a native Rust
 //! reduction (skipped when no AOT artifacts are present, so CI smoke runs
 //! work from a bare checkout).
@@ -17,14 +19,15 @@
 mod common;
 
 use guidedquant::bench::bench;
-use guidedquant::cfg::{KvDtype, TrellisVariant};
+use guidedquant::cfg::{preset, KvDtype, ServeConfig, TrellisVariant};
 use guidedquant::model::attention::attention_batch_with;
 use guidedquant::model::forward::{matmul_col_sharded_with, LinearOp};
-use guidedquant::model::DecodeState;
+use guidedquant::model::{DecodeState, NativeModel, ParamStore};
 use guidedquant::quant::formats::{LutLinear, TrellisLinear, UniformScalarLinear, VqLinear};
 use guidedquant::quant::grid::{round_all, rtn_quantize, UniformGrid};
 use guidedquant::quant::trellis::{Generator, Trellis, TrellisCode};
 use guidedquant::runtime::Value;
+use guidedquant::serve::{random_prompts, Scheduler};
 use guidedquant::tensor::gemm::{self, ColWindow};
 use guidedquant::tensor::ops::{matmul, matmul_tn, matmul_tn_with, num_threads};
 use guidedquant::tensor::simd;
@@ -298,6 +301,70 @@ fn main() {
             .with("kv_bytes_per_token_f32", tok_bytes_f32)
             .with("kv_bytes_per_token_f16", tok_bytes_f16),
     );
+
+    // -- prefill: cold vs prefix-hit over the shared-prefix KV index ------
+    // A finished request donates its prompt's page-aligned (64-position)
+    // KV chunks to the scheduler's prefix index; later requests with the
+    // same prompt map those pages copy-on-write and start prefill after
+    // the cached positions. The cold rows rerun the identical prompts
+    // against a `prefix_cache: false` scheduler — tokens out are
+    // bit-identical by contract, only the prefill compute changes, so the
+    // ratio is the prefill work a cache hit skips. Ungated: the speedup
+    // scales with prefix length, which makes a fixed floor meaningless.
+    println!("-- prefill: cold vs prefix-hit (tiny preset) --");
+    let (mcfg, _) = preset("tiny");
+    let ps = ParamStore::init(&mcfg, &mut Rng::new(5));
+    let nm = NativeModel::from_params(&ps);
+    fn drive(s: &mut Scheduler<'_>, prompt: &[u32], batch: usize) -> usize {
+        for _ in 0..batch {
+            s.submit(prompt, 1).unwrap();
+        }
+        s.run_to_completion().len()
+    }
+    let pf_reps = if fast { 2 } else { 5 };
+    for prefix in [64usize, 256] {
+        // `prefix + 2` tokens: usable cached chunks are capped at
+        // (prompt_len - 1) / 64, so the hit covers exactly `prefix`
+        // positions and prefill still has real work (2 positions) to do.
+        let prompt =
+            random_prompts(mcfg.vocab, 1, prefix + 2, 40 + prefix as u64).pop().unwrap();
+        for batch in [1usize, 8] {
+            let scfg = |on: bool| ServeConfig {
+                max_batch: 8,
+                max_queued: 16,
+                prefix_cache: on,
+                ..ServeConfig::default()
+            };
+            let mut cold = Scheduler::new(&nm, scfg(false));
+            let mut warm = Scheduler::new(&nm, scfg(true));
+            // Donate the prompt's chunks once, outside the timed region.
+            drive(&mut warm, &prompt, 1);
+            let c = bench(&format!("prefill cold b={batch} prefix={prefix}"), 1, pf_reps, || {
+                drive(&mut cold, &prompt, batch)
+            });
+            let h =
+                bench(&format!("prefill prefix-hit b={batch} prefix={prefix}"), 1, pf_reps, || {
+                    drive(&mut warm, &prompt, batch)
+                });
+            println!(
+                "   prefill b={batch} prefix={prefix} hit speedup ×{:.2} ({} hits, {} prefill tokens saved)",
+                c.mean_secs / h.mean_secs.max(1e-12),
+                warm.prefix_hits(),
+                warm.prefill_tokens_saved()
+            );
+            rows.push(
+                speedup_row("prefix_prefill", c.mean_secs * 1e3, h.mean_secs * 1e3)
+                    .with("batch", batch)
+                    .with("ctx", prefix),
+            );
+            // The on/off bit-identity contract, spot-checked in situ.
+            cold.submit(&prompt, 4).unwrap();
+            warm.submit(&prompt, 4).unwrap();
+            let (cf, wf) = (cold.run_to_completion(), warm.run_to_completion());
+            assert_eq!(cf[0].tokens, wf[0].tokens, "prefix-cache on/off diverged");
+            assert!(warm.prefix_hits() > 0, "prefix index never hit");
+        }
+    }
 
     // Machine-readable artifact (CI uploads BENCH_micro_kernels.json) —
     // written before the artifact-gated L1 section so it exists even on a

@@ -281,6 +281,13 @@ pub struct ServeConfig {
     /// are fixed fractions of the budget (`serve::scheduler::KV_LOW_WATERMARK`
     /// / `KV_HIGH_WATERMARK`).
     pub kv_budget_bytes: usize,
+    /// Copy-on-write prefix-sharing KV cache (`prefix_cache = false` in
+    /// TOML, `gq serve --prefix-cache off`). Defaults to on. When enabled
+    /// the scheduler keeps a radix index of finished lanes' page-aligned
+    /// prompt prefixes; new requests that share a cached prefix map those
+    /// pages read-only and skip prefill over the cached positions. Greedy
+    /// outputs are bit-identical either way.
+    pub prefix_cache: bool,
 }
 
 impl Default for ServeConfig {
@@ -297,6 +304,7 @@ impl Default for ServeConfig {
             restart_policy: RestartPolicy::FailFast,
             max_engine_restarts: 3,
             kv_budget_bytes: 0,
+            prefix_cache: true,
         }
     }
 }
@@ -348,6 +356,9 @@ impl ServeConfig {
                 bail!("serve.kv_budget_mb must be non-negative");
             }
             c.kv_budget_bytes = (v as usize) * 1024 * 1024;
+        }
+        if let Some(v) = doc.get_bool(section, "prefix_cache") {
+            c.prefix_cache = v;
         }
         if c.max_batch == 0 {
             bail!("serve.max_batch must be at least 1");
@@ -560,6 +571,18 @@ mod tests {
         assert_eq!(c.kv_budget_bytes, 0);
         let doc = TomlDoc::parse("[serve]\nkv_budget_mb = -1\n").unwrap();
         assert!(ServeConfig::from_toml(&doc, "serve").is_err());
+    }
+
+    #[test]
+    fn prefix_cache_defaults_on_and_toml_disables() {
+        let c = ServeConfig::default();
+        assert!(c.prefix_cache, "prefix sharing is free — on by default");
+        let doc = TomlDoc::parse("[serve]\nprefix_cache = false\n").unwrap();
+        let c = ServeConfig::from_toml(&doc, "serve").unwrap();
+        assert!(!c.prefix_cache);
+        let doc = TomlDoc::parse("[serve]\nprefix_cache = true\n").unwrap();
+        let c = ServeConfig::from_toml(&doc, "serve").unwrap();
+        assert!(c.prefix_cache);
     }
 
     #[test]

@@ -61,9 +61,14 @@ const USAGE: &str = "usage: gq <pipeline|train|quantize|eval|serve|fisher|info> 
                 --max-engine-restarts N (restart budget before the
                 engine is declared dead and /healthz turns 503)
                 --kv-budget-mb MB (KV memory governance budget; 0 = off.
-                Admission is cost-aware under the budget: brownout above
-                the low watermark, preempt-youngest above the high one,
-                429 with a computed Retry-After as the last resort)
+                Admission is cost-aware under the budget: cached prefix
+                pages shed first, brownout above the low watermark,
+                preempt-youngest above the high one, 429 with a computed
+                Retry-After as the last resort)
+                --prefix-cache on|off (copy-on-write prefix-sharing KV
+                cache: finished lanes donate page-aligned prompt prefixes
+                and later requests skip prefill over cached positions;
+                greedy tokens are bit-identical either way. Default on)
   env:          GQ_THREADS=N caps the shared worker pool (1 = serial)
   train:        --steps N --save FILE
   eval/quantize: --load FILE [--save FILE] --artifact fwd_loss|fwd_loss_qa4kv4|...";
@@ -104,6 +109,13 @@ fn pipeline_config(args: &Args) -> Result<PipelineConfig> {
         args.get_usize("max-engine-restarts", cfg.serve.max_engine_restarts)?;
     if args.has("kv-budget-mb") {
         cfg.serve.kv_budget_bytes = args.get_usize("kv-budget-mb", 0)? * 1024 * 1024;
+    }
+    if let Some(v) = args.get("prefix-cache") {
+        cfg.serve.prefix_cache = match v {
+            "on" => true,
+            "off" => false,
+            other => bail!("--prefix-cache expects on|off, got `{other}`"),
+        };
     }
     cfg.quant = quant_config(args, cfg.quant)?;
     Ok(cfg)
@@ -226,7 +238,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
 const SERVE_FLAGS: &str = "config model artifacts out train-steps calib-batches eval-batches \
     workers seed max-batch max-queued scalar-prefill kv-dtype method bits groups sparse-frac \
     format requests gen-tokens prompt-len per-seq stream http load request-timeout \
-    queue-timeout restart-policy max-engine-restarts kv-budget-mb";
+    queue-timeout restart-policy max-engine-restarts kv-budget-mb prefix-cache";
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let allowed: Vec<&str> = SERVE_FLAGS.split_whitespace().collect();

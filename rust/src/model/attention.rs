@@ -36,6 +36,21 @@
 //! bit-stable across SIMD levels and thread counts as the f32 path; only
 //! the *store* rounds (to nearest even), which is why f32 outputs and f16
 //! outputs are ULP-close rather than bit-equal.
+//!
+//! ## Sharing and copy-on-write
+//!
+//! Page storage is refcounted (`Arc`), so the *same* physical page can sit
+//! in any number of lanes' page lists at once — the substrate of the
+//! scheduler's prefix cache: a finished lane's prompt pages are donated to
+//! a prefix index and mapped read-only into later lanes that share the
+//! prompt prefix. Writes go through [`DecodeState::append_kv`], which only
+//! ever touches the *tail* page of each list; appending into a shared tail
+//! forks it first (copy-on-write: the already-written rows are copied into
+//! a fresh page from the slab and the lane's reference is swapped), so a
+//! donor lane's pages are never mutated by a borrower. Full shared pages
+//! are never written at all — a page-aligned append opens a fresh page.
+//! [`DecodeState::reset`] pools only uniquely-owned pages; shared pages
+//! just drop the lane's reference and live on wherever else they are held.
 
 use std::cell::RefCell;
 use std::sync::{Arc, Mutex};
@@ -51,10 +66,13 @@ use crate::util::half::narrow_slice;
 pub const KV_PAGE_POS: usize = 64;
 
 /// One KV page: `KV_PAGE_POS * head_dim` elements in `[pos][head_dim]`
-/// rows, stored at the cache's dtype.
+/// rows, stored at the cache's dtype. Storage is refcounted so the same
+/// physical page can back any number of lanes (prefix sharing); writers
+/// must hold the only reference — [`DecodeState::append_kv`] forks shared
+/// tails before writing (copy-on-write).
 pub(crate) enum Page {
-    F32(Box<[f32]>),
-    F16(Box<[u16]>),
+    F32(Arc<[f32]>),
+    F16(Arc<[u16]>),
 }
 
 impl Page {
@@ -65,11 +83,52 @@ impl Page {
         }
     }
 
-    /// Write one position row, narrowing if the page is f16.
+    /// Another reference to the same physical page (refcount bump, no copy).
+    pub(crate) fn clone_ref(&self) -> Page {
+        match self {
+            Page::F32(p) => Page::F32(Arc::clone(p)),
+            Page::F16(p) => Page::F16(Arc::clone(p)),
+        }
+    }
+
+    /// Sole owner of the storage? Only unique pages may be written or
+    /// returned to the slab pool; the prefix index evicts only nodes
+    /// whose pages are unique (nobody borrows them anymore).
+    pub(crate) fn is_unique(&mut self) -> bool {
+        match self {
+            Page::F32(p) => Arc::get_mut(p).is_some(),
+            Page::F16(p) => Arc::get_mut(p).is_some(),
+        }
+    }
+
+    /// Write one position row, narrowing if the page is f16. The page must
+    /// be uniquely owned (append forks shared tails before storing).
     fn store_row(&mut self, slot: usize, hd: usize, row: &[f32]) {
         match self {
-            Page::F32(p) => p[slot * hd..(slot + 1) * hd].copy_from_slice(row),
-            Page::F16(p) => narrow_slice(row, &mut p[slot * hd..(slot + 1) * hd]),
+            Page::F32(p) => {
+                let p = Arc::get_mut(p).expect("COW invariant: writing a shared page");
+                p[slot * hd..(slot + 1) * hd].copy_from_slice(row);
+            }
+            Page::F16(p) => {
+                let p = Arc::get_mut(p).expect("COW invariant: writing a shared page");
+                narrow_slice(row, &mut p[slot * hd..(slot + 1) * hd]);
+            }
+        }
+    }
+
+    /// Copy the first `elems` elements of `src` into this (uniquely owned)
+    /// page — the copy half of a copy-on-write fork.
+    fn copy_prefix_from(&mut self, src: &Page, elems: usize) {
+        match (self, src) {
+            (Page::F32(dst), Page::F32(src)) => {
+                let dst = Arc::get_mut(dst).expect("COW fork target must be unique");
+                dst[..elems].copy_from_slice(&src[..elems]);
+            }
+            (Page::F16(dst), Page::F16(src)) => {
+                let dst = Arc::get_mut(dst).expect("COW fork target must be unique");
+                dst[..elems].copy_from_slice(&src[..elems]);
+            }
+            _ => unreachable!("a slab's pages share one dtype"),
         }
     }
 }
@@ -90,8 +149,8 @@ impl PageSlab {
 
     fn fresh(&self) -> Page {
         match self.dtype {
-            KvDtype::F32 => Page::F32(vec![0.0f32; self.page_elems].into_boxed_slice()),
-            KvDtype::F16 => Page::F16(vec![0u16; self.page_elems].into_boxed_slice()),
+            KvDtype::F32 => Page::F32(vec![0.0f32; self.page_elems].into()),
+            KvDtype::F16 => Page::F16(vec![0u16; self.page_elems].into()),
         }
     }
 
@@ -124,6 +183,11 @@ pub struct DecodeState {
     /// Number of completed decode steps (the next append writes slot
     /// `pos % KV_PAGE_POS` of page `pos / KV_PAGE_POS`).
     pub pos: usize,
+    /// Leading pages (per list) borrowed from a shared prefix rather than
+    /// owned: [`DecodeState::kv_owned_bytes`] excludes them so the memory
+    /// governor charges shared pages once (to their cache), and the count
+    /// drops by one when a borrowed partial tail is forked on write.
+    borrowed_pages: usize,
     slab: Arc<PageSlab>,
 }
 
@@ -150,6 +214,7 @@ impl DecodeState {
             key_pages: (0..lists).map(|_| Vec::new()).collect(),
             val_pages: (0..lists).map(|_| Vec::new()).collect(),
             pos: 0,
+            borrowed_pages: 0,
             slab,
         }
     }
@@ -178,15 +243,48 @@ impl DecodeState {
         2 * self.key_pages.len() * self.head_dim * self.pos * self.dtype.bytes()
     }
 
-    /// Bytes of page storage currently held (a multiple of the page size).
+    /// Bytes of page storage this state references (a multiple of the page
+    /// size). Shared prefix pages count here too — see
+    /// [`DecodeState::kv_owned_bytes`] for the governor's charged-once view.
     pub fn kv_allocated_bytes(&self) -> usize {
         let pages: usize = self.key_pages.iter().chain(&self.val_pages).map(Vec::len).sum();
         pages * KV_PAGE_POS * self.head_dim * self.dtype.bytes()
     }
 
+    /// Bytes of page storage this lane *owns*: referenced pages minus the
+    /// leading pages borrowed from a shared prefix (those are charged once,
+    /// to the cache that holds them). Falls back to the full count when
+    /// nothing is borrowed, so non-sharing callers see no change.
+    pub fn kv_owned_bytes(&self) -> usize {
+        let pages: usize = self.key_pages.iter().chain(&self.val_pages).map(Vec::len).sum();
+        let borrowed = 2 * self.key_pages.len() * self.borrowed_pages;
+        pages.saturating_sub(borrowed) * KV_PAGE_POS * self.head_dim * self.dtype.bytes()
+    }
+
+    /// Leading pages (per list) currently borrowed from a shared prefix.
+    pub fn borrowed_prefix_pages(&self) -> usize {
+        self.borrowed_pages
+    }
+
+    /// Fork `list`'s tail page if it is shared: copy the `elems` elements
+    /// already written into a fresh page from the slab and swap the lane's
+    /// reference to it. No-op (and no copy) when the tail is already
+    /// uniquely owned — the steady-state decode path.
+    fn fork_shared_tail(list: &mut [Page], elems: usize, slab: &PageSlab) {
+        let tail = list.last_mut().expect("fork target list is non-empty");
+        if tail.is_unique() {
+            return;
+        }
+        let mut fresh = slab.take();
+        fresh.copy_prefix_from(tail, elems);
+        *tail = fresh;
+    }
+
     /// Append one step's K/V rows (`d_model` floats each) for `layer` at
     /// the current position, splitting them per head into the page tails.
-    /// Grabs a page from the slab when the position opens a new page.
+    /// Grabs a page from the slab when the position opens a new page, and
+    /// copy-on-write-forks a shared tail page before writing into it — a
+    /// lane extending a borrowed prefix never mutates the donor's pages.
     pub fn append_kv(&mut self, layer: usize, k: &[f32], v: &[f32]) {
         let hd = self.head_dim;
         debug_assert_eq!(k.len(), self.n_heads * hd);
@@ -198,12 +296,80 @@ impl DecodeState {
             if slot == 0 {
                 self.key_pages[idx].push(self.slab.take());
                 self.val_pages[idx].push(self.slab.take());
+            } else {
+                Self::fork_shared_tail(&mut self.key_pages[idx], slot * hd, &self.slab);
+                Self::fork_shared_tail(&mut self.val_pages[idx], slot * hd, &self.slab);
             }
             let seg = &k[head * hd..(head + 1) * hd];
             self.key_pages[idx].last_mut().unwrap().store_row(slot, hd, seg);
             let seg = &v[head * hd..(head + 1) * hd];
             self.val_pages[idx].last_mut().unwrap().store_row(slot, hd, seg);
         }
+        // Writing into the last borrowed page claims it for this lane
+        // (fork_shared_tail above made it unique, or the last outside
+        // reference was already gone): account it once, at the first layer
+        // — every layer's lists fork at the same position within one step.
+        if layer == 0
+            && slot != 0
+            && self.borrowed_pages > 0
+            && self.key_pages[0].len() == self.borrowed_pages
+        {
+            self.borrowed_pages -= 1;
+        }
+    }
+
+    /// Map one full shared page per (list, K/V) onto the tail of this
+    /// state — the prefix-cache admission path. The state must be
+    /// page-aligned and fully borrowed so far (a fresh lane absorbing
+    /// cached chunks front-to-back); `pos` advances by a whole page.
+    pub(crate) fn borrow_prefix_chunk(&mut self, keys: &[Page], vals: &[Page]) {
+        debug_assert_eq!(self.pos % KV_PAGE_POS, 0, "chunk borrow must be page-aligned");
+        debug_assert_eq!(self.pos / KV_PAGE_POS, self.borrowed_pages);
+        debug_assert_eq!(keys.len(), self.key_pages.len());
+        debug_assert_eq!(vals.len(), self.val_pages.len());
+        for (list, page) in self.key_pages.iter_mut().zip(keys) {
+            list.push(page.clone_ref());
+        }
+        for (list, page) in self.val_pages.iter_mut().zip(vals) {
+            list.push(page.clone_ref());
+        }
+        self.pos += KV_PAGE_POS;
+        self.borrowed_pages += 1;
+    }
+
+    /// Clone the K/V page references at page index `page_idx` of every
+    /// list — the donation path (a finished lane handing one prompt chunk
+    /// to the prefix index). Refcount bumps only; no page data is copied.
+    pub(crate) fn clone_prefix_chunk(&self, page_idx: usize) -> (Vec<Page>, Vec<Page>) {
+        let keys = self.key_pages.iter().map(|l| l[page_idx].clone_ref()).collect();
+        let vals = self.val_pages.iter().map(|l| l[page_idx].clone_ref()).collect();
+        (keys, vals)
+    }
+
+    /// Share the first `positions` positions of `donor`'s cache into this
+    /// (fresh) state by reference: the covering pages are mapped in and
+    /// `pos` jumps past them. A non-page-aligned share leaves the tail
+    /// page partially borrowed — the first append into it forks it
+    /// (copy-on-write), never mutating the donor. Exposed for the COW
+    /// tests; the scheduler shares page-aligned chunks via the prefix
+    /// index instead.
+    pub fn share_prefix_from(&mut self, donor: &DecodeState, positions: usize) {
+        assert_eq!(self.pos, 0, "share target must be a fresh state");
+        assert_eq!(self.dtype, donor.dtype, "shared pages must agree on dtype");
+        assert_eq!(self.key_pages.len(), donor.key_pages.len());
+        assert_eq!(self.head_dim, donor.head_dim);
+        let pages = positions.div_ceil(KV_PAGE_POS);
+        for (dst, src) in self
+            .key_pages
+            .iter_mut()
+            .zip(&donor.key_pages)
+            .chain(self.val_pages.iter_mut().zip(&donor.val_pages))
+        {
+            debug_assert!(dst.is_empty());
+            dst.extend(src[..pages].iter().map(Page::clone_ref));
+        }
+        self.pos = positions;
+        self.borrowed_pages = pages;
     }
 
     #[inline]
@@ -216,26 +382,37 @@ impl DecodeState {
         &self.val_pages[layer * self.n_heads + head]
     }
 
-    /// Clear for reuse: every page returns to the slab (the per-list `Vec`s
-    /// keep their capacity, so a recycled lane re-pages without allocating).
+    /// Clear for reuse: every *uniquely owned* page returns to the slab
+    /// (the per-list `Vec`s keep their capacity, so a recycled lane
+    /// re-pages without allocating). Shared pages — donated to the prefix
+    /// index, or still borrowed by another lane — just drop this state's
+    /// reference; pooling them would hand out writable aliases.
     pub fn reset(&mut self) {
         let mut free = self.slab.free.lock().unwrap();
         for list in self.key_pages.iter_mut().chain(self.val_pages.iter_mut()) {
-            free.extend(list.drain(..));
+            for mut page in list.drain(..) {
+                if page.is_unique() {
+                    free.push(page);
+                }
+            }
         }
         drop(free);
         self.pos = 0;
+        self.borrowed_pages = 0;
     }
 
     /// Clear for reuse, **dropping** the pages back to the system allocator
     /// instead of pooling them. This is the memory-governance release: a
     /// preempted lane must actually shrink the resident KV footprint
     /// (pooled pages still count as allocated), so its pages deallocate.
+    /// (Shared pages only drop this reference and deallocate when the last
+    /// holder lets go.)
     pub fn reset_discarding(&mut self) {
         for list in self.key_pages.iter_mut().chain(self.val_pages.iter_mut()) {
             list.clear();
         }
         self.pos = 0;
+        self.borrowed_pages = 0;
     }
 
     fn rebind(&mut self, slab: Arc<PageSlab>) {
@@ -324,8 +501,24 @@ impl KvArena {
     }
 
     /// Pre-allocate slab pages so decode-time page grabs never hit the
-    /// system allocator (e.g. before latency-sensitive serving).
+    /// system allocator (e.g. before latency-sensitive serving). Callers
+    /// under a KV budget should go through
+    /// [`KvArena::reserve_pages_capped`] so pre-warm respects the same
+    /// ceiling admission enforces.
     pub fn reserve_pages(&self, pages: usize) {
+        self.slab.reserve(pages);
+    }
+
+    /// [`KvArena::reserve_pages`], clamped so the pooled pre-warm can
+    /// never allocate past `budget_bytes` of page storage (0 = no budget).
+    /// Pooled pages count against `kv_allocated_bytes`, so an ungoverned
+    /// pre-warm could exceed the budget the admission path enforces.
+    pub fn reserve_pages_capped(&self, pages: usize, budget_bytes: usize) {
+        let pages = if budget_bytes == 0 {
+            pages
+        } else {
+            pages.min(budget_bytes / self.page_bytes().max(1))
+        };
         self.slab.reserve(pages);
     }
 
@@ -345,6 +538,16 @@ impl KvArena {
     /// admission-time cost estimate the memory governor budgets against.
     pub fn request_cost_bytes(&self, total_pos: usize) -> usize {
         self.request_cost_pages(total_pos) * self.page_bytes()
+    }
+
+    /// [`KvArena::request_cost_bytes`] for a request whose first
+    /// `cached_pos` positions (page-aligned) are borrowed from the prefix
+    /// cache: the covering pages are already charged once — to the cache —
+    /// so admission must not charge them again.
+    pub fn request_cost_bytes_shared(&self, total_pos: usize, cached_pos: usize) -> usize {
+        debug_assert_eq!(cached_pos % KV_PAGE_POS, 0, "prefix shares are page-aligned");
+        let cached = (cached_pos / KV_PAGE_POS) * 2 * self.n_layers * self.n_heads;
+        self.request_cost_pages(total_pos).saturating_sub(cached) * self.page_bytes()
     }
 
     /// Release a preempted lane's state with its pages **deallocated**
@@ -993,6 +1196,181 @@ mod tests {
         simd::force(None);
         assert_eq!(scalar.data, vector.data, "SIMD level must not change f16 reads");
         assert_eq!(scalar.data, pooled.data, "thread count must not change f16 reads");
+    }
+
+    /// Bit-exact snapshot of one page's storage (f32 bits widened to u32,
+    /// f16 bits zero-extended) — the donor-never-mutated oracle.
+    fn page_bits(page: &Page) -> Vec<u32> {
+        match page {
+            Page::F32(p) => p.iter().map(|v| v.to_bits()).collect(),
+            Page::F16(p) => p.iter().map(|&v| v as u32).collect(),
+        }
+    }
+
+    /// Snapshot every page of every list, in list order.
+    fn state_bits(st: &DecodeState) -> Vec<Vec<u32>> {
+        st.key_pages
+            .iter()
+            .chain(&st.val_pages)
+            .flat_map(|l| l.iter().map(page_bits))
+            .collect()
+    }
+
+    /// Deterministic per-position row (distinct across positions and the
+    /// k/v halves) so forked copies are distinguishable bitwise.
+    fn row(tag: f32, p: usize, d: usize) -> Vec<f32> {
+        (0..d).map(|i| tag + p as f32 + i as f32 * 0.125).collect()
+    }
+
+    /// Append positions `[st.pos, until)` with the deterministic rows.
+    fn extend_state(st: &mut DecodeState, n_layers: usize, d: usize, until: usize) {
+        while st.pos < until {
+            let p = st.pos;
+            for l in 0..n_layers {
+                st.append_kv(l, &row(1.0, p, d), &row(-2.0, p, d));
+            }
+            st.pos += 1;
+        }
+    }
+
+    fn cow_fork_on_partial_page_case(dtype: KvDtype) {
+        let (n_layers, h, hd) = (2usize, 2usize, 8usize);
+        let d = h * hd;
+        let mut donor = DecodeState::with_dtype(n_layers, h, hd, dtype);
+        extend_state(&mut donor, n_layers, d, 10);
+        let donor_before = state_bits(&donor);
+
+        let mut lane = DecodeState::with_dtype(n_layers, h, hd, dtype);
+        lane.share_prefix_from(&donor, 5);
+        assert_eq!(lane.pos, 5);
+        assert_eq!(lane.borrowed_prefix_pages(), 1);
+        assert_eq!(lane.kv_owned_bytes(), 0, "a fully borrowed lane owns nothing");
+        assert!(lane.kv_allocated_bytes() > 0);
+
+        // First append lands mid-page: the shared tail must fork, and the
+        // write must land in the lane's copy only.
+        extend_state(&mut lane, n_layers, d, 9);
+        assert_eq!(state_bits(&donor), donor_before, "donor pages were mutated");
+        assert_eq!(lane.borrowed_prefix_pages(), 0, "forked tail is owned now");
+        assert!(lane.kv_owned_bytes() > 0);
+
+        // The lane must be indistinguishable from one built from scratch
+        // with the same rows: attention over both is bit-identical.
+        let mut scratch = DecodeState::with_dtype(n_layers, h, hd, dtype);
+        extend_state(&mut scratch, n_layers, d, 9);
+        lane.pos -= 1; // attention reads pos + 1 rows
+        scratch.pos -= 1;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let q = row(0.5, 3, d);
+        for l in 0..n_layers {
+            let mut got = vec![0.0f32; d];
+            let mut want = vec![0.0f32; d];
+            attention_single(l, h, hd, scale, &q, &lane, &mut got);
+            attention_single(l, h, hd, scale, &q, &scratch, &mut want);
+            assert_eq!(got, want, "layer {l}: forked lane diverged from scratch build");
+        }
+    }
+
+    #[test]
+    fn cow_fork_on_partial_page_never_mutates_donor() {
+        cow_fork_on_partial_page_case(KvDtype::F32);
+    }
+
+    #[test]
+    fn cow_fork_on_partial_page_never_mutates_donor_f16() {
+        cow_fork_on_partial_page_case(KvDtype::F16);
+    }
+
+    #[test]
+    fn cow_share_at_exact_page_edge_opens_fresh_page_without_forking() {
+        let (n_layers, h, hd) = (1usize, 2usize, 8usize);
+        let d = h * hd;
+        let mut donor = DecodeState::new(n_layers, h, hd);
+        extend_state(&mut donor, n_layers, d, KV_PAGE_POS);
+        let donor_before = state_bits(&donor);
+
+        let mut lane = DecodeState::new(n_layers, h, hd);
+        lane.share_prefix_from(&donor, KV_PAGE_POS);
+        assert_eq!(lane.borrowed_prefix_pages(), 1);
+        extend_state(&mut lane, n_layers, d, KV_PAGE_POS + 3);
+        // A page-aligned append opens a fresh page: the borrowed full page
+        // stays borrowed (and shared) forever.
+        assert_eq!(lane.borrowed_prefix_pages(), 1);
+        assert_eq!(state_bits(&donor), donor_before, "donor pages were mutated");
+        // Owned = one fresh K and V page per list; borrowed page excluded.
+        let lists = n_layers * h;
+        assert_eq!(lane.kv_owned_bytes(), 2 * lists * KV_PAGE_POS * hd * 4);
+        assert_eq!(lane.kv_allocated_bytes(), 2 * 2 * lists * KV_PAGE_POS * hd * 4);
+    }
+
+    #[test]
+    fn cow_two_lanes_fork_the_same_shared_page_independently() {
+        let (n_layers, h, hd) = (1usize, 2usize, 8usize);
+        let d = h * hd;
+        let mut donor = DecodeState::new(n_layers, h, hd);
+        extend_state(&mut donor, n_layers, d, 10);
+        let donor_before = state_bits(&donor);
+
+        let mut lane_a = DecodeState::new(n_layers, h, hd);
+        let mut lane_b = DecodeState::new(n_layers, h, hd);
+        lane_a.share_prefix_from(&donor, 6);
+        lane_b.share_prefix_from(&donor, 6);
+        // Divergent continuations off the same shared page.
+        while lane_a.pos < 8 {
+            let p = lane_a.pos;
+            lane_a.append_kv(0, &row(10.0, p, d), &row(-10.0, p, d));
+            lane_a.pos += 1;
+        }
+        while lane_b.pos < 8 {
+            let p = lane_b.pos;
+            lane_b.append_kv(0, &row(20.0, p, d), &row(-20.0, p, d));
+            lane_b.pos += 1;
+        }
+        assert_eq!(state_bits(&donor), donor_before, "donor pages were mutated");
+        let bits_a = state_bits(&lane_a);
+        let bits_b = state_bits(&lane_b);
+        assert_ne!(bits_a, bits_b, "each lane must own its fork");
+        // Both forks kept the shared first 6 rows bitwise.
+        for (list, donor_list) in
+            lane_a.key_pages.iter().chain(&lane_a.val_pages).zip(
+                donor.key_pages.iter().chain(&donor.val_pages),
+            )
+        {
+            let got = page_bits(&list[0]);
+            let want = page_bits(&donor_list[0]);
+            assert_eq!(&got[..6 * hd], &want[..6 * hd], "shared prefix rows must survive");
+        }
+    }
+
+    #[test]
+    fn shared_pages_are_never_pooled_by_reset() {
+        let (n_layers, h, hd) = (1usize, 2usize, 8usize);
+        let d = h * hd;
+        let mut arena = KvArena::new(n_layers, h, hd);
+        let mut donor = arena.acquire();
+        extend_state(&mut donor, n_layers, d, KV_PAGE_POS + 2);
+        let mut lane = arena.acquire();
+        lane.share_prefix_from(&donor, KV_PAGE_POS);
+        // Donor holds 2 pages per list (K and V); the first page of each
+        // list is shared with `lane`, so release must pool only the
+        // unique second pages.
+        let lists = n_layers * h;
+        arena.release(donor);
+        assert_eq!(arena.pooled_pages(), 2 * lists, "only unique pages may pool");
+        // Once the lane lets go too, the pages are unique again and pool.
+        arena.release(lane);
+        assert_eq!(arena.pooled_pages(), 2 * lists + 2 * lists);
+    }
+
+    #[test]
+    fn reserve_pages_capped_respects_the_byte_budget() {
+        let arena = KvArena::new(1, 2, 8);
+        let page = arena.page_bytes();
+        arena.reserve_pages_capped(100, 5 * page);
+        assert_eq!(arena.pooled_pages(), 5, "pre-warm must clamp to the budget");
+        // No budget: the full reservation goes through.
+        arena.reserve_pages_capped(8, 0);
+        assert_eq!(arena.pooled_pages(), 8);
     }
 
     #[test]

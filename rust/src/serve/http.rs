@@ -48,8 +48,9 @@
 //!   completion/rejection/cancellation/timeout/failure counters, engine
 //!   restarts, KV governance gauges (`kv_budget_bytes`, `kv_pressure`,
 //!   `brownouts`, `preemptions`, `shed_predicted_deadline`,
-//!   `predicted_wait_ms`), and TTFT / per-token / queue-wait percentiles
-//!   over a sliding sample window.
+//!   `predicted_wait_ms`), prefix-cache gauges (`prefix_hits`,
+//!   `prefill_tokens_saved`, `prefix_cached_pages`), and TTFT /
+//!   per-token / queue-wait percentiles over a sliding sample window.
 //! * `GET /healthz` — truthful engine liveness (200 `ok` while the engine
 //!   thread serves, 503 `engine dead` once the restart budget is spent),
 //!   restart count, and the served model's shape.
@@ -61,6 +62,9 @@
 //! **503** — and overload walks a ladder from mildest response to
 //! harshest (see [`super::scheduler`] for the governance mechanics):
 //!
+//! 0. **Cache shed** (free): cached-but-unreferenced prefix pages are
+//!    trimmed first — no client notices the engine giving back memory
+//!    that only made *future* requests faster.
 //! 1. **Brownout** (live KV above the low watermark): requests still
 //!    admit, but with `max_tokens` clamped — the 200 response carries
 //!    `"degraded": true` so clients can tell a voluntary `"length"`
@@ -182,6 +186,12 @@ struct Metrics {
     brownouts: u64,
     /// Lanes preempted under KV pressure.
     preemptions: u64,
+    /// Admissions that mapped at least one cached prefix chunk.
+    prefix_hits: u64,
+    /// Prompt positions whose prefill compute was skipped, cumulative.
+    prefill_tokens_saved: u64,
+    /// KV pages currently held by the prefix cache (gauge).
+    prefix_cached_pages: usize,
     /// Predicted queue wait from the measured drain rate (gauge).
     predicted_wait_ms: u64,
     ttft_ms: Vec<f64>,
@@ -258,6 +268,9 @@ impl Shared {
             .with("kv_pressure", m.kv_pressure)
             .with("brownouts", m.brownouts)
             .with("preemptions", m.preemptions)
+            .with("prefix_hits", m.prefix_hits)
+            .with("prefill_tokens_saved", m.prefill_tokens_saved)
+            .with("prefix_cached_pages", m.prefix_cached_pages)
             .with("predicted_wait_ms", m.predicted_wait_ms)
             .with("ttft_ms", pctl(&m.ttft_ms))
             .with("token_ms", pctl(&m.token_ms))
@@ -459,6 +472,9 @@ fn publish_gauges(shared: &Shared, engine: &SupervisedEngine<'_>) {
     m.predicted_wait_ms = predicted_wait;
     m.brownouts = brownouts;
     m.preemptions = preemptions;
+    m.prefix_hits = engine.prefix_hits();
+    m.prefill_tokens_saved = engine.prefill_tokens_saved();
+    m.prefix_cached_pages = engine.prefix_cached_pages();
     m.engine_restarts = engine.restarts() as u64;
 }
 
@@ -496,7 +512,7 @@ fn handle_msg(
                     ),
                     retry_after_secs: retry,
                 });
-            } else if engine.kv_submit_refused(prompt.len(), gen_tokens) {
+            } else if engine.kv_submit_refused_for(&prompt, gen_tokens) {
                 shared.metrics.lock().unwrap().rejected += 1;
                 let _ = reply.send(SubmitOutcome::Overloaded {
                     msg: format!(

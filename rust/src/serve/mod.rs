@@ -28,7 +28,10 @@
 //!   admission becomes cost-aware memory governance: worst-case KV page
 //!   cost gates admission under watermarks, brownouts clamp `max_tokens`
 //!   under pressure, and the measured drain rate feeds honest
-//!   `Retry-After`/predicted-wait backpressure.
+//!   `Retry-After`/predicted-wait backpressure. The [`prefix`] index
+//!   shares page-aligned prompt-prefix KV pages across requests
+//!   (copy-on-write; prefix hits skip their prefill compute), with
+//!   cached-unreferenced pages the first thing trimmed under pressure.
 //! * **[`supervisor::SupervisedEngine`]** — fault isolation around the
 //!   scheduler: each step phase runs under `catch_unwind`, panics are
 //!   attributed (admission fault → fail the mid-prefill batch; single-lane
@@ -59,6 +62,7 @@
 pub mod builder;
 pub mod engine;
 pub mod http;
+pub(crate) mod prefix;
 pub mod scheduler;
 pub mod supervisor;
 

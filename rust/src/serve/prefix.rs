@@ -1,0 +1,404 @@
+//! Radix prefix index over shared KV pages — the scheduler's prompt cache.
+//!
+//! Most production traffic shares a long system-prompt / few-shot-template
+//! prefix, so the engine used to re-prefill and re-store identical KV pages
+//! for every request. This index keys *page-aligned* 64-token prompt chunks
+//! ([`KV_PAGE_POS`]) to the refcounted KV pages a finished lane computed
+//! for them: admission walks the trie chunk-by-chunk, maps every matched
+//! chunk's pages read-only into the new lane
+//! ([`DecodeState::borrow_prefix_chunk`]), and chunked prefill starts
+//! *after* the cached positions — a warm-template hit skips its prefill
+//! compute entirely and TTFT drops to near-decode latency.
+//!
+//! Structure: a chunk trie. Each edge is labelled by exactly one
+//! [`KV_PAGE_POS`]-token chunk of prompt ids, and the node it leads to
+//! holds that chunk's K and V pages (one per `(layer, head)` list, shared
+//! by refcount with every borrower). The longest-cached-prefix walk is
+//! `O(prefix pages)` and allocation-free — `HashMap<Vec<u32>, _>` lookups
+//! borrow the prompt slice (`Vec<u32>: Borrow<[u32]>`) — so admission
+//! stays off the heap on the warm path. Donation (insertions) happens only
+//! when a lane finishes, off the steady-state decode path.
+//!
+//! Eviction is LRU-leaf-first and refcount-aware: only nodes whose pages
+//! nobody else references (`strong_count == 1`) are trimmed under KV
+//! pressure, and the governance ladder trims them *before* any brownout,
+//! preemption, or 429 — cached-but-unreferenced pages are the cheapest
+//! memory in the engine. [`PrefixIndex::clear`] (the `prefix-evict` chaos
+//! site) force-drops every node regardless; dependent lanes survive
+//! because their own page references keep the storage alive.
+//!
+//! Correctness: greedy decode is deterministic, so the pages a donor
+//! computed for a prompt chunk are bit-identical to the pages any later
+//! lane would compute for the same chunk (per dtype — f16 stores round the
+//! same way every time). Mapping them by reference therefore preserves the
+//! house rule: outputs are bit-identical with the cache on or off.
+
+use std::collections::HashMap;
+
+use crate::model::attention::Page;
+use crate::model::{DecodeState, KV_PAGE_POS};
+
+/// One trie node: the KV pages of the chunk leading here, plus children
+/// keyed by the next 64-token chunk. The root holds no pages.
+struct Node {
+    /// Outgoing edges: exactly-[`KV_PAGE_POS`]-token chunks.
+    children: HashMap<Vec<u32>, Node>,
+    /// This chunk's key pages, one per `(layer, head)` list (empty at the
+    /// root).
+    keys: Vec<Page>,
+    /// This chunk's value pages, one per `(layer, head)` list.
+    vals: Vec<Page>,
+    /// Logical timestamp of the last lookup or donation touching this
+    /// node (LRU eviction order).
+    last_used: u64,
+}
+
+impl Node {
+    fn new(keys: Vec<Page>, vals: Vec<Page>, now: u64) -> Self {
+        Node { children: HashMap::new(), keys, vals, last_used: now }
+    }
+
+    /// No lane or donor holds these pages anymore: every page reference
+    /// is ours alone, so dropping the node actually frees the memory.
+    fn unreferenced(&mut self) -> bool {
+        self.keys.iter_mut().chain(self.vals.iter_mut()).all(Page::is_unique)
+    }
+}
+
+/// The prefix cache: chunk trie + hit counters (see module docs).
+pub(crate) struct PrefixIndex {
+    root: Node,
+    /// KV pages held by the index (2 × lists per node).
+    pages: usize,
+    /// Monotonic logical clock driving LRU order.
+    clock: u64,
+    /// Admissions that matched at least one cached chunk.
+    hits: u64,
+    /// Prompt positions whose prefill compute was skipped, cumulative.
+    tokens_saved: u64,
+}
+
+impl PrefixIndex {
+    pub fn new() -> Self {
+        PrefixIndex {
+            root: Node::new(Vec::new(), Vec::new(), 0),
+            pages: 0,
+            clock: 0,
+            hits: 0,
+            tokens_saved: 0,
+        }
+    }
+
+    /// Admissions that matched at least one cached chunk.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Cumulative prompt positions skipped by prefix hits.
+    pub fn tokens_saved(&self) -> u64 {
+        self.tokens_saved
+    }
+
+    /// KV pages currently held by the index.
+    pub fn cached_pages(&self) -> usize {
+        self.pages
+    }
+
+    /// Longest cached page-aligned prefix of `prompt`, in positions,
+    /// without touching the trie's LRU state. Admission uses this to price
+    /// a request (shared pages are charged once, to the cache) before
+    /// committing to admit it. Allocation-free.
+    pub fn matched_positions(&self, prompt: &[u32]) -> usize {
+        let max_chunks = prompt.len().saturating_sub(1) / KV_PAGE_POS;
+        let mut node = &self.root;
+        let mut matched = 0;
+        while matched < max_chunks {
+            let chunk = &prompt[matched * KV_PAGE_POS..(matched + 1) * KV_PAGE_POS];
+            match node.children.get(chunk) {
+                Some(child) => {
+                    node = child;
+                    matched += 1;
+                }
+                None => break,
+            }
+        }
+        matched * KV_PAGE_POS
+    }
+
+    /// Walk the longest cached prefix of `prompt` and map every matched
+    /// chunk's pages into `state` (which must be fresh). Returns the
+    /// number of cached positions mapped; prefill then starts after them.
+    /// At least one prompt token always remains un-cached — the last
+    /// prompt token must run through the model to produce first logits —
+    /// so the walk is capped at `(len - 1) / KV_PAGE_POS` chunks.
+    /// Allocation-free (refcount bumps into the state's pre-sized lists).
+    pub fn lookup_into(&mut self, prompt: &[u32], state: &mut DecodeState) -> usize {
+        let max_chunks = prompt.len().saturating_sub(1) / KV_PAGE_POS;
+        self.clock += 1;
+        let now = self.clock;
+        let mut node = &mut self.root;
+        let mut matched = 0;
+        while matched < max_chunks {
+            let chunk = &prompt[matched * KV_PAGE_POS..(matched + 1) * KV_PAGE_POS];
+            match node.children.get_mut(chunk) {
+                Some(child) => {
+                    child.last_used = now;
+                    state.borrow_prefix_chunk(&child.keys, &child.vals);
+                    node = child;
+                    matched += 1;
+                }
+                None => break,
+            }
+        }
+        if matched > 0 {
+            self.hits += 1;
+            self.tokens_saved += (matched * KV_PAGE_POS) as u64;
+        }
+        matched * KV_PAGE_POS
+    }
+
+    /// Donate the full prompt chunks a finished lane computed: each chunk
+    /// not yet in the trie gets the lane's pages by reference (no copy —
+    /// the lane's release then drops its own refs and the index keeps the
+    /// pages alive). `stored_pos` caps donation at what the lane actually
+    /// wrote (a lane that failed early may not have finished its prompt).
+    pub fn donate(&mut self, prompt: &[u32], stored_pos: usize, state: &DecodeState) {
+        let chunks = prompt.len().min(stored_pos) / KV_PAGE_POS;
+        if chunks == 0 {
+            return;
+        }
+        self.clock += 1;
+        let now = self.clock;
+        let mut node = &mut self.root;
+        for c in 0..chunks {
+            let chunk = &prompt[c * KV_PAGE_POS..(c + 1) * KV_PAGE_POS];
+            if !node.children.contains_key(chunk) {
+                let (keys, vals) = state.clone_prefix_chunk(c);
+                self.pages += keys.len() + vals.len();
+                node.children.insert(chunk.to_vec(), Node::new(keys, vals, now));
+            }
+            node = node.children.get_mut(chunk).unwrap();
+            node.last_used = now;
+        }
+    }
+
+    /// Evict unreferenced leaves, least-recently-used first, until at most
+    /// `max_pages` pages remain cached (referenced nodes are pinned by
+    /// their borrowers and never trimmed here). Returns pages evicted.
+    pub fn trim_to(&mut self, max_pages: usize) -> usize {
+        let before = self.pages;
+        while self.pages > max_pages {
+            let Some(lru) = Self::lru_evictable_leaf(&mut self.root) else { break };
+            let freed = Self::remove_leaf(&mut self.root, lru).expect("leaf found above");
+            self.pages -= freed;
+        }
+        before - self.pages
+    }
+
+    /// `last_used` of the least-recently-used evictable leaf, if any.
+    fn lru_evictable_leaf(node: &mut Node) -> Option<u64> {
+        let mut best: Option<u64> = None;
+        for child in node.children.values_mut() {
+            let cand = if child.children.is_empty() {
+                if child.unreferenced() {
+                    Some(child.last_used)
+                } else {
+                    None
+                }
+            } else {
+                Self::lru_evictable_leaf(child)
+            };
+            best = match (best, cand) {
+                (Some(b), Some(c)) => Some(b.min(c)),
+                (b, c) => b.or(c),
+            };
+        }
+        best
+    }
+
+    /// Remove the (unique) evictable leaf stamped `last_used`; returns the
+    /// number of pages it held.
+    fn remove_leaf(node: &mut Node, last_used: u64) -> Option<usize> {
+        let mut hit_key: Option<Vec<u32>> = None;
+        for (key, child) in node.children.iter_mut() {
+            if child.children.is_empty() && child.last_used == last_used && child.unreferenced()
+            {
+                hit_key = Some(key.clone());
+                break;
+            }
+            if let Some(freed) = Self::remove_leaf(child, last_used) {
+                return Some(freed);
+            }
+        }
+        let key = hit_key?;
+        let child = node.children.remove(&key).expect("key found above");
+        Some(child.keys.len() + child.vals.len())
+    }
+
+    /// Drop every cached node unconditionally (the `prefix-evict` chaos
+    /// site). Lanes currently borrowing cached pages are unaffected: their
+    /// own references keep the page storage alive, so a dependent
+    /// mid-decode lane completes bit-identically.
+    pub fn clear(&mut self) {
+        self.root.children.clear();
+        self.pages = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::DecodeState;
+
+    fn filled_state(n_layers: usize, h: usize, hd: usize, n_pos: usize) -> DecodeState {
+        let d = h * hd;
+        let mut st = DecodeState::new(n_layers, h, hd);
+        while st.pos < n_pos {
+            let p = st.pos;
+            let k: Vec<f32> = (0..d).map(|i| (p * d + i) as f32).collect();
+            let v: Vec<f32> = (0..d).map(|i| -((p * d + i) as f32)).collect();
+            st.append_kv(0, &k, &v);
+            st.pos += 1;
+        }
+        st
+    }
+
+    fn prompt(len: usize, salt: u32) -> Vec<u32> {
+        (0..len as u32).map(|i| i * 3 + salt).collect()
+    }
+
+    #[test]
+    fn donate_then_lookup_maps_page_aligned_prefix() {
+        let (h, hd) = (2usize, 8usize);
+        let mut idx = PrefixIndex::new();
+        // 130-position prompt: two full chunks donatable; lookups on the
+        // same prompt can use both (2 * 64 = 128 <= 129 = len - 1).
+        let p = prompt(130, 1);
+        let donor = filled_state(1, h, hd, 130);
+        idx.donate(&p, donor.pos, &donor);
+        assert_eq!(idx.cached_pages(), 2 * 2 * h, "2 chunks x (K+V) x lists");
+
+        let mut lane = DecodeState::new(1, h, hd);
+        let cached = idx.lookup_into(&p, &mut lane);
+        assert_eq!(cached, 128, "two page-aligned chunks hit");
+        assert_eq!(lane.pos, 128);
+        assert_eq!(lane.borrowed_prefix_pages(), 2);
+        assert_eq!(idx.hits(), 1);
+        assert_eq!(idx.tokens_saved(), 128);
+
+        // A diverging prompt shares only the first chunk.
+        let mut other = p.clone();
+        other[100] ^= 1;
+        let mut lane2 = DecodeState::new(1, h, hd);
+        assert_eq!(idx.lookup_into(&other, &mut lane2), 64);
+
+        // A prompt of exactly one page can use no cached chunk (its last
+        // token must still run to produce logits).
+        let mut lane3 = DecodeState::new(1, h, hd);
+        assert_eq!(idx.lookup_into(&p[..64], &mut lane3), 0);
+        assert_eq!(idx.hits(), 2, "a zero-chunk walk is not a hit");
+    }
+
+    #[test]
+    fn matched_positions_probe_agrees_with_lookup() {
+        let (h, hd) = (2usize, 8usize);
+        let mut idx = PrefixIndex::new();
+        let p = prompt(200, 5);
+        let donor = filled_state(1, h, hd, 200);
+        idx.donate(&p, donor.pos, &donor);
+        assert_eq!(idx.matched_positions(&p), 192, "3 full chunks cached and usable");
+        let mut lane = DecodeState::new(1, h, hd);
+        assert_eq!(idx.lookup_into(&p, &mut lane), idx.matched_positions(&p));
+        assert_eq!(idx.matched_positions(&prompt(200, 99)), 0);
+    }
+
+    #[test]
+    fn donation_is_idempotent_and_capped_by_stored_positions() {
+        let (h, hd) = (2usize, 8usize);
+        let mut idx = PrefixIndex::new();
+        let p = prompt(130, 2);
+        let donor = filled_state(1, h, hd, 130);
+        idx.donate(&p, donor.pos, &donor);
+        let pages = idx.cached_pages();
+        idx.donate(&p, donor.pos, &donor);
+        assert_eq!(idx.cached_pages(), pages, "re-donation must not duplicate");
+        // A lane that only stored 70 positions donates one chunk.
+        let mut idx2 = PrefixIndex::new();
+        let partial = filled_state(1, h, hd, 70);
+        idx2.donate(&p, partial.pos, &partial);
+        assert_eq!(idx2.cached_pages(), 2 * h);
+        // Too short for even one chunk: nothing to donate.
+        let mut idx3 = PrefixIndex::new();
+        let short = filled_state(1, h, hd, 10);
+        idx3.donate(&p[..10], short.pos, &short);
+        assert_eq!(idx3.cached_pages(), 0);
+    }
+
+    #[test]
+    fn trim_evicts_lru_unreferenced_leaves_first() {
+        let (h, hd) = (1usize, 4usize);
+        let per_chunk = 2 * h; // K+V pages per chunk
+        let mut idx = PrefixIndex::new();
+        let p_old = prompt(65, 1);
+        let p_new = prompt(65, 2);
+        let donor_old = filled_state(1, h, hd, 65);
+        let donor_new = filled_state(1, h, hd, 65);
+        idx.donate(&p_old, donor_old.pos, &donor_old);
+        idx.donate(&p_new, donor_new.pos, &donor_new);
+        assert_eq!(idx.cached_pages(), 2 * per_chunk);
+        // While the donors are alive their refs pin both nodes.
+        assert_eq!(idx.trim_to(0), 0, "donor refs pin the nodes");
+        drop(donor_old);
+        drop(donor_new);
+        // One page over target: the older donation goes first.
+        let evicted = idx.trim_to(per_chunk);
+        assert_eq!(evicted, per_chunk);
+        let mut lane = DecodeState::new(1, h, hd);
+        assert_eq!(idx.lookup_into(&p_old, &mut lane), 0, "older entry evicted");
+        let mut lane2 = DecodeState::new(1, h, hd);
+        assert_eq!(idx.lookup_into(&p_new, &mut lane2), 64, "newer entry survives");
+
+        // `lane2` still borrows p_new's pages: the node is referenced and
+        // must be pinned even under a trim-to-zero.
+        assert_eq!(idx.trim_to(0), 0, "referenced nodes are pinned");
+        drop(lane2);
+        assert_eq!(idx.trim_to(0), per_chunk, "unreferenced again: evictable");
+        assert_eq!(idx.cached_pages(), 0);
+    }
+
+    #[test]
+    fn trim_evicts_leaves_before_their_parents() {
+        let (h, hd) = (1usize, 4usize);
+        let per_chunk = 2 * h;
+        let mut idx = PrefixIndex::new();
+        let p = prompt(200, 3);
+        let donor = filled_state(1, h, hd, 200);
+        idx.donate(&p, donor.pos, &donor); // chunks at depth 1, 2, 3
+        assert_eq!(idx.cached_pages(), 3 * per_chunk);
+        drop(donor);
+        idx.trim_to(2 * per_chunk);
+        // The deepest chunk is the only leaf; the 128-position prefix
+        // must survive and still serve hits.
+        let mut lane = DecodeState::new(1, h, hd);
+        assert_eq!(idx.lookup_into(&p, &mut lane), 128);
+    }
+
+    #[test]
+    fn clear_drops_everything_but_borrowers_keep_their_pages() {
+        let (h, hd) = (1usize, 4usize);
+        let mut idx = PrefixIndex::new();
+        let p = prompt(65, 4);
+        let donor = filled_state(1, h, hd, 65);
+        idx.donate(&p, donor.pos, &donor);
+        let mut lane = DecodeState::new(1, h, hd);
+        assert_eq!(idx.lookup_into(&p, &mut lane), 64);
+        idx.clear();
+        assert_eq!(idx.cached_pages(), 0);
+        assert_eq!(idx.matched_positions(&p), 0);
+        // The borrower still reads its pages (they are alive through its
+        // own refs): kv accounting still sees a borrowed page.
+        assert_eq!(lane.pos, 64);
+        assert_eq!(lane.borrowed_prefix_pages(), 1);
+        assert!(lane.kv_allocated_bytes() > 0);
+    }
+}

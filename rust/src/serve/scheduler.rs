@@ -38,6 +38,19 @@
 //! `Retry-After` values ([`retry_after_secs`]) and deadline-aware
 //! shedding at the HTTP layer. With the budget at 0 (the default) every
 //! governance branch is skipped and the engine behaves exactly as before.
+//!
+//! With [`ServeConfig::prefix_cache`] on (the default), finished lanes
+//! donate their page-aligned prompt-prefix KV pages to a
+//! [`PrefixIndex`] instead of just releasing them, and admission maps
+//! the longest cached prefix of each new prompt read-only into the fresh
+//! lane (copy-on-write pages, charged once to the cache in the
+//! governance cost model) so chunked prefill starts *after* the cached
+//! positions — a warm-template hit skips its prefill compute entirely.
+//! Under KV pressure, cached-but-unreferenced pages are the first thing
+//! shed ([`Scheduler::shed_cached_prefixes`]), before any brownout,
+//! preemption, or 429. Greedy outputs are bit-identical with the cache
+//! on or off: cached pages hold exactly the values the lane's own
+//! prefill would have produced (deterministic arithmetic, per dtype).
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -47,6 +60,7 @@ use anyhow::{bail, Result};
 use crate::cfg::ServeConfig;
 use crate::coordinator::run_jobs;
 use crate::model::{BatchScratch, DecodeState, KvArena, NativeModel};
+use crate::serve::prefix::PrefixIndex;
 use crate::util::{fault, percentile};
 
 /// Greedy sampling: index of the max logit under IEEE total order
@@ -196,10 +210,16 @@ struct Queued {
     queue_deadline: Option<Instant>,
     /// Brownout clamped `gen_tokens` below the requested budget.
     degraded: bool,
+    /// Prompt positions covered by cached prefix pages mapped at
+    /// admission ([`PrefixIndex::lookup_into`]); prefill starts here.
+    cached: usize,
 }
 
 struct Lane {
     id: u64,
+    /// The request's prompt, kept so the finished lane can donate its
+    /// page-aligned prefix KV pages to the [`PrefixIndex`].
+    prompt: Vec<u32>,
     /// Next token to feed (last prompt token, then each generated token).
     pending: u32,
     out: Vec<u32>,
@@ -253,6 +273,10 @@ pub struct Scheduler<'m> {
     /// token/latency buffer capacity intact, so a warm admission performs
     /// no heap allocation (bounded — see [`LANE_POOL_MAX`]).
     lane_pool: Vec<Lane>,
+    /// Prompt-prefix KV page cache ([`ServeConfig::prefix_cache`];
+    /// `None` when disabled — every prefix branch collapses to the
+    /// uncached path).
+    prefix: Option<PrefixIndex>,
     next_id: u64,
     steps: usize,
     lane_steps: usize,
@@ -289,6 +313,7 @@ impl<'m> Scheduler<'m> {
         cfg.max_queued = cfg.max_queued.max(1);
         Scheduler {
             arena: model.new_arena_with(cfg.kv_dtype),
+            prefix: cfg.prefix_cache.then(PrefixIndex::new),
             model,
             cfg,
             workers: workers.max(1),
@@ -315,9 +340,11 @@ impl<'m> Scheduler<'m> {
 
     /// Pre-allocate `pages` KV pages in the arena's shared slab so decode
     /// page grabs (one per lane per [`crate::model::KV_PAGE_POS`] tokens)
-    /// never hit the system allocator mid-serve.
+    /// never hit the system allocator mid-serve. Clamped to the
+    /// `kv_budget_bytes` ceiling: pre-warm must not allocate past the
+    /// budget the admission path enforces.
     pub fn reserve_kv_pages(&self, pages: usize) {
-        self.arena.reserve_pages(pages);
+        self.arena.reserve_pages_capped(pages, self.cfg.kv_budget_bytes);
     }
 
     /// Worker threads backing the scalar-prefill reference path.
@@ -380,6 +407,7 @@ impl<'m> Scheduler<'m> {
             deadline,
             queue_deadline,
             degraded: false,
+            cached: 0,
         });
         Ok(id)
     }
@@ -390,6 +418,12 @@ impl<'m> Scheduler<'m> {
     /// could *never* be admitted, so queueing it would only wedge the
     /// queue — or when the `kv-exhaust` fault site fires (the simulated
     /// out-of-memory refusal chaos scenarios inject).
+    ///
+    /// The prompt variant ([`Scheduler::kv_submit_refused_for`]) discounts
+    /// a cached prefix — a warm-template request whose shared pages make
+    /// it feasible must not 429. (If those pages are evicted before the
+    /// request reaches admission, the infeasible-head path fails it there
+    /// instead of wedging the queue.)
     pub fn kv_submit_refused(&self, prompt_len: usize, gen_tokens: usize) -> bool {
         if fault::hit(fault::KV_EXHAUST) {
             return true;
@@ -400,6 +434,22 @@ impl<'m> Scheduler<'m> {
         }
         let high = (KV_HIGH_WATERMARK * budget as f64) as usize;
         self.arena.request_cost_bytes(prompt_len + gen_tokens) > high
+    }
+
+    /// [`Scheduler::kv_submit_refused`] with the prefix-cache discount:
+    /// pages the prompt would borrow from the cache are charged once (to
+    /// the cache), so they don't count against this request's cost.
+    pub fn kv_submit_refused_for(&self, prompt: &[u32], gen_tokens: usize) -> bool {
+        if fault::hit(fault::KV_EXHAUST) {
+            return true;
+        }
+        let budget = self.cfg.kv_budget_bytes;
+        if budget == 0 {
+            return false;
+        }
+        let cached = self.prefix.as_ref().map_or(0, |pi| pi.matched_positions(prompt));
+        let high = (KV_HIGH_WATERMARK * budget as f64) as usize;
+        self.arena.request_cost_bytes_shared(prompt.len() + gen_tokens, cached) > high
     }
 
     /// Cancel a queued or in-flight request: a queued one leaves the
@@ -469,11 +519,63 @@ impl<'m> Scheduler<'m> {
         self.kv_live_bytes() + self.arena.pooled_page_bytes()
     }
 
-    /// Bytes of KV page storage held by *active lanes* (excludes the
-    /// arena's idle pool, which growing lanes drain before allocating
-    /// fresh pages) — the quantity the memory governor budgets.
+    /// Bytes of KV page storage held by *active lanes* plus the prefix
+    /// cache (excludes the arena's idle pool, which growing lanes drain
+    /// before allocating fresh pages) — the quantity the memory governor
+    /// budgets. Shared pages are charged ONCE: each lane counts only the
+    /// pages it owns ([`DecodeState::kv_owned_bytes`]); pages it borrows
+    /// from the prefix index are counted by the cache term. (Pages still
+    /// borrowed after a forced cache clear — the `prefix-evict` chaos
+    /// site — are charged to nobody until their lanes finish; the window
+    /// is one lane lifetime and only ever *under*-counts.)
     pub fn kv_live_bytes(&self) -> usize {
-        self.states.iter().map(DecodeState::kv_allocated_bytes).sum()
+        self.states.iter().map(DecodeState::kv_owned_bytes).sum::<usize>()
+            + self.prefix_cached_bytes()
+    }
+
+    /// Admissions that mapped at least one cached prefix chunk.
+    pub fn prefix_hits(&self) -> u64 {
+        self.prefix.as_ref().map_or(0, PrefixIndex::hits)
+    }
+
+    /// Prompt positions whose prefill compute was skipped by prefix
+    /// hits, cumulative.
+    pub fn prefill_tokens_saved(&self) -> u64 {
+        self.prefix.as_ref().map_or(0, PrefixIndex::tokens_saved)
+    }
+
+    /// KV pages currently held by the prefix cache.
+    pub fn prefix_cached_pages(&self) -> usize {
+        self.prefix.as_ref().map_or(0, PrefixIndex::cached_pages)
+    }
+
+    /// Bytes of KV page storage held by the prefix cache (the charged-once
+    /// term of [`Scheduler::kv_live_bytes`]).
+    pub fn prefix_cached_bytes(&self) -> usize {
+        self.prefix_cached_pages() * self.arena.page_bytes()
+    }
+
+    /// Shed cached-but-unreferenced prefix pages until live KV is back
+    /// under the low watermark — the FIRST rung of the pressure ladder,
+    /// tried before any brownout, preemption, or 429 (cached pages nobody
+    /// references are the cheapest memory in the engine). Runs at the top
+    /// of every governed admission and from the supervisor's governance
+    /// sweep. Returns pages evicted; no-op when governance or the cache
+    /// is off, or pressure is below the low watermark.
+    pub fn shed_cached_prefixes(&mut self) -> usize {
+        let budget = self.cfg.kv_budget_bytes;
+        if budget == 0 || self.prefix.is_none() {
+            return 0;
+        }
+        let low = (KV_LOW_WATERMARK * budget as f64) as usize;
+        let live = self.kv_live_bytes();
+        if live <= low {
+            return 0;
+        }
+        let page_bytes = self.arena.page_bytes().max(1);
+        let pi = self.prefix.as_mut().expect("checked above");
+        let target = pi.cached_pages().saturating_sub((live - low).div_ceil(page_bytes));
+        pi.trim_to(target)
     }
 
     /// Worst-case KV bytes a request spanning `total_pos` positions would
@@ -547,7 +649,13 @@ impl<'m> Scheduler<'m> {
         // carry `degraded: true`) and the prefill chunk shrinks to one
         // lane per step.
         let budget = self.cfg.kv_budget_bytes;
-        let live = if budget > 0 { self.kv_live_bytes() } else { 0 };
+        if budget > 0 {
+            // Mildest relief first: cached-unreferenced prefix pages are
+            // shed BEFORE the live reading that decides brownout, so a
+            // page the cache can give back never degrades an admission.
+            self.shed_cached_prefixes();
+        }
+        let mut live = if budget > 0 { self.kv_live_bytes() } else { 0 };
         let brownout = budget > 0 && live as f64 >= KV_LOW_WATERMARK * budget as f64;
         let high = (KV_HIGH_WATERMARK * budget as f64) as usize;
         let mut admitted_cost = 0usize;
@@ -568,7 +676,37 @@ impl<'m> Scheduler<'m> {
                 if brownout {
                     eff_gen = eff_gen.min(BROWNOUT_MAX_TOKENS);
                 }
-                let cost = self.arena.request_cost_bytes(front_prompt + eff_gen);
+                // Shared pages are charged once: the cached-prefix pages
+                // this request would borrow are already counted in `live`
+                // (the cache term), so its marginal cost excludes them.
+                let cached =
+                    self.prefix.as_ref().map_or(0, |pi| pi.matched_positions(&front.prompt));
+                let mut cost =
+                    self.arena.request_cost_bytes_shared(front_prompt + eff_gen, cached);
+                if live + admitted_cost + cost > high {
+                    // Rung 0 again, at request grain: memory the cache
+                    // could give back must never cause a deferral or
+                    // refusal, so evict just enough cached-unreferenced
+                    // pages for this request to fit. Trimming may take the
+                    // request's own matched prefix (its donor node can be
+                    // the LRU victim), so the discount is re-derived.
+                    let page_bytes = self.arena.page_bytes().max(1);
+                    let need = (live + admitted_cost + cost - high).div_ceil(page_bytes);
+                    let evicted = match self.prefix.as_mut() {
+                        Some(pi) => pi.trim_to(pi.cached_pages().saturating_sub(need)),
+                        None => 0,
+                    };
+                    if evicted > 0 {
+                        live = self.kv_live_bytes();
+                        let cached = self
+                            .prefix
+                            .as_ref()
+                            .map_or(0, |pi| pi.matched_positions(&front.prompt));
+                        cost = self
+                            .arena
+                            .request_cost_bytes_shared(front_prompt + eff_gen, cached);
+                    }
+                }
                 if live + admitted_cost + cost > high {
                     if self.lanes.is_empty() && self.fresh_meta.is_empty() {
                         // Alone in an empty engine and still over the
@@ -592,8 +730,18 @@ impl<'m> Scheduler<'m> {
                 qr.degraded = true;
                 self.brownouts += 1;
             }
+            // Map the longest cached page-aligned prefix read-only into
+            // the fresh lane (refcount bumps, no copy); prefill below
+            // starts after the mapped positions. A zero-match walk is
+            // allocation-free, so the uncached warm path stays off the
+            // heap.
+            let mut state = self.arena.acquire();
+            qr.cached = match self.prefix.as_mut() {
+                Some(pi) => pi.lookup_into(&qr.prompt, &mut state),
+                None => 0,
+            };
             self.fresh_meta.push(qr);
-            self.fresh_states.push(self.arena.acquire());
+            self.fresh_states.push(state);
         }
         if self.fresh_meta.is_empty() {
             return;
@@ -617,7 +765,10 @@ impl<'m> Scheduler<'m> {
                 .zip(self.fresh_states.iter_mut())
                 .map(|(qr, state)| {
                     move || {
-                        for &t in &qr.prompt[..qr.prompt.len() - 1] {
+                        // Cached positions are already in the state's
+                        // borrowed pages; scalar prefill resumes after
+                        // them (rope comes from the state's position).
+                        for &t in &qr.prompt[qr.cached..qr.prompt.len() - 1] {
                             model.step(state, t);
                         }
                     }
@@ -641,29 +792,33 @@ impl<'m> Scheduler<'m> {
         // discarded. Per-lane arithmetic is bit-identical to scalar
         // `step` prefill because `step_batch` is bit-identical per lane.
         //
-        // Longest prompts first, via an in-place stable insertion co-sort
-        // of the two parallel scratch vectors (admissions are
+        // Longest REMAINING prefill first (prompt length minus cached
+        // prefix positions), via an in-place stable insertion co-sort of
+        // the two parallel scratch vectors (admissions are
         // max_batch-bounded, and equal lengths keep submission order): the
         // lanes still in the chunk at any depth are then a PREFIX of the
         // state slab, so each depth passes a contiguous sub-slice and the
         // reused token buffer — no per-depth gathering of `&mut` refs.
+        // Lanes at mixed start depths batch naturally: each lane's rope
+        // position comes from its own state, so a prefix-hit lane that
+        // resumes at position 64 steps next to a cold lane at position 0.
         // Lane order never affects per-lane results.
+        let remaining = |q: &Queued| q.prompt.len() - 1 - q.cached;
         for k in 1..self.fresh_meta.len() {
             let mut i = k;
-            while i > 0
-                && self.fresh_meta[i - 1].prompt.len() < self.fresh_meta[i].prompt.len()
+            while i > 0 && remaining(&self.fresh_meta[i - 1]) < remaining(&self.fresh_meta[i])
             {
                 self.fresh_meta.swap(i - 1, i);
                 self.fresh_states.swap(i - 1, i);
                 i -= 1;
             }
         }
-        let max_pre = self.fresh_meta.first().map(|q| q.prompt.len() - 1).unwrap_or(0);
+        let max_pre = self.fresh_meta.first().map(remaining).unwrap_or(0);
         for t in 0..max_pre {
             self.token_buf.clear();
             for q in &self.fresh_meta {
-                if t + 1 < q.prompt.len() {
-                    self.token_buf.push(q.prompt[t]);
+                if q.cached + t + 1 < q.prompt.len() {
+                    self.token_buf.push(q.prompt[q.cached + t]);
                 } else {
                     break;
                 }
@@ -695,6 +850,7 @@ impl<'m> Scheduler<'m> {
         let reserve = qr.gen_tokens.min(1 << 16);
         let mut lane = self.lane_pool.pop().unwrap_or_else(|| Lane {
             id: 0,
+            prompt: Vec::new(),
             pending: 0,
             out: Vec::new(),
             gen_tokens: 0,
@@ -707,6 +863,10 @@ impl<'m> Scheduler<'m> {
             degraded: false,
         });
         lane.id = qr.id;
+        // Moved, not cloned: the prompt buffer rides along for the
+        // finished lane's prefix donation (replacing a recycled shell's
+        // old prompt only deallocates).
+        lane.prompt = qr.prompt;
         lane.pending = pending;
         lane.out.clear();
         lane.out.reserve(reserve);
@@ -767,6 +927,15 @@ impl<'m> Scheduler<'m> {
             return finished;
         }
         fault::maybe_panic(fault::STEP_PANIC);
+        if fault::hit(fault::PREFIX_EVICT) {
+            // Chaos: force-drop the whole prefix cache while dependent
+            // lanes are mid-decode. Their own page references keep the
+            // shared storage alive, so they must complete bit-identically
+            // — this site proves eviction can never corrupt a borrower.
+            if let Some(pi) = self.prefix.as_mut() {
+                pi.clear();
+            }
+        }
         debug_assert_eq!(self.lanes.len(), self.states.len());
         self.token_buf.clear();
         self.token_buf.extend(self.lanes.iter().map(|l| l.pending));
@@ -932,6 +1101,16 @@ impl<'m> Scheduler<'m> {
         finish: FinishReason,
     ) -> FinishedRequest {
         let kv_bytes = state.kv_bytes();
+        // Donate the lane's page-aligned prompt-prefix pages to the
+        // prefix index before releasing the state (release pools only
+        // pages nobody else references, so donated pages stay alive in
+        // the cache). Failed lanes don't donate — their numerics are
+        // suspect by definition.
+        if finish != FinishReason::Failed {
+            if let Some(pi) = self.prefix.as_mut() {
+                pi.donate(&lane.prompt, state.pos, &state);
+            }
+        }
         self.arena.release(state);
         // When the shell is recycled, the result takes copies so the
         // shell keeps its buffers (and their capacity) for the next
@@ -1763,6 +1942,330 @@ mod tests {
         let fb = done.iter().find(|f| f.id == b).unwrap();
         assert_eq!(fb.finish, FinishReason::Length);
         assert_eq!(fb.tokens, reference_decode(&m, &[1, 2, 3, 4], 8));
+    }
+
+    #[test]
+    fn prefix_hit_skips_prefill_and_stays_bit_identical() {
+        // A 130-token prompt donates two page-aligned chunks on finish; a
+        // resubmission maps 128 cached positions, a prompt diverging in
+        // the second chunk maps 64 — and every generation must equal both
+        // the scalar reference and a cache-off scheduler token-for-token.
+        let m = model();
+        let mut rng = Rng::new(23);
+        let p: Vec<u32> = (0..130).map(|_| rng.below(m.cfg.vocab) as u32).collect();
+        let mut divergent = p.clone();
+        divergent[100] = (divergent[100] + 1) % m.cfg.vocab as u32;
+        let run = |prefix_cache: bool| {
+            let cfg = ServeConfig {
+                max_batch: 2,
+                max_queued: 8,
+                prefix_cache,
+                ..ServeConfig::default()
+            };
+            let mut sched = Scheduler::new(&m, cfg);
+            sched.submit(&p, 6).unwrap();
+            assert_eq!(sched.run_to_completion().len(), 1);
+            sched.submit(&p, 6).unwrap();
+            sched.submit(&divergent, 6).unwrap();
+            let mut done = sched.run_to_completion();
+            done.sort_by_key(|f| f.id);
+            let toks: Vec<Vec<u32>> = done.into_iter().map(|f| f.tokens).collect();
+            (toks, sched.prefix_hits(), sched.prefill_tokens_saved())
+        };
+        let (on, hits, saved) = run(true);
+        let (off, off_hits, off_saved) = run(false);
+        assert_eq!(on, off, "prefix cache changed greedy tokens");
+        assert_eq!(on[0], reference_decode(&m, &p, 6));
+        assert_eq!(on[1], reference_decode(&m, &p, 6));
+        assert_eq!(on[2], reference_decode(&m, &divergent, 6));
+        assert_eq!(hits, 2, "both warm submissions must hit");
+        assert_eq!(saved, 128 + 64, "cached positions skip prefill");
+        assert_eq!((off_hits, off_saved), (0, 0), "cache off records nothing");
+    }
+
+    #[test]
+    fn f16_prefix_hits_stay_bit_identical() {
+        // The on/off contract must hold for f16 KV pages too: a cached
+        // chunk stores the same rounded values cold prefill would write,
+        // so sharing cannot move a single bit.
+        use crate::cfg::KvDtype;
+        let m = model();
+        let mut rng = Rng::new(31);
+        let p: Vec<u32> = (0..70).map(|_| rng.below(m.cfg.vocab) as u32).collect();
+        let run = |prefix_cache: bool| {
+            let cfg = ServeConfig {
+                max_batch: 2,
+                max_queued: 8,
+                kv_dtype: KvDtype::F16,
+                prefix_cache,
+                ..ServeConfig::default()
+            };
+            let mut sched = Scheduler::new(&m, cfg);
+            sched.submit(&p, 5).unwrap();
+            assert_eq!(sched.run_to_completion().len(), 1);
+            sched.submit(&p, 5).unwrap();
+            let done = sched.run_to_completion();
+            (done[0].tokens.clone(), sched.prefix_hits())
+        };
+        let (on, hits) = run(true);
+        let (off, _) = run(false);
+        assert_eq!(on, off, "f16 prefix hit diverged from cold prefill");
+        assert_eq!(hits, 1);
+    }
+
+    #[test]
+    fn warm_decode_over_shared_prefix_is_allocation_free() {
+        // Tentpole acceptance: prefix hits resume page-aligned, so a
+        // borrowing lane's first append opens a FRESH page — never a COW
+        // fork — and the zero-allocation steady state survives sharing.
+        use crate::cfg::ModelConfig;
+        use crate::testing::alloc_count::count_allocs;
+        let cfg = ModelConfig {
+            name: "alloc-probe-prefix".into(),
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 64,
+            rope_theta: 10000.0,
+        };
+        let ps = ParamStore::init(&cfg, &mut Rng::new(0));
+        let m = NativeModel::from_params(&ps);
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig { max_batch: 2, max_queued: 8, ..ServeConfig::default() },
+        );
+        let p: Vec<u32> = (0..65).map(|i| (i % 60) as u32 + 1).collect();
+        sched.submit(&p, 4).unwrap();
+        assert_eq!(sched.run_to_completion().len(), 1);
+        assert!(sched.prefix_cached_pages() > 0, "finished lane must donate");
+        // Two lanes borrow the donated 64-position chunk; warm-up opens
+        // their fresh tail pages and grows scratch past the probe horizon.
+        sched.submit(&p, 64).unwrap();
+        sched.submit(&p, 64).unwrap();
+        for _ in 0..20 {
+            let fin = sched.step();
+            assert!(fin.is_empty());
+        }
+        assert_eq!(sched.prefix_hits(), 2);
+        let ((), allocs) = count_allocs(|| {
+            for _ in 0..3 {
+                let fin = sched.step();
+                debug_assert!(fin.is_empty());
+            }
+        });
+        assert_eq!(allocs, 0, "shared-prefix decode step hit the heap {allocs} time(s)");
+    }
+
+    #[test]
+    fn shared_prefix_pages_are_charged_once_against_the_budget() {
+        // Geometry (1 layer × 2 heads of dim 8): a 64-position chunk is 4
+        // pages = 8 KiB. A spans 65+8 = 73 positions → 16 KiB cost; with a
+        // 20 KB budget (high watermark 18 KB) it admits alone and donates
+        // one chunk. B shares the prompt: undiscounted, cache (8 KiB) +
+        // cost (16 KiB) would cross the watermark — the 64 cached
+        // positions discount B to 8 KiB, so it must admit immediately,
+        // keep the cache intact, and never break the budget invariant.
+        use crate::cfg::ModelConfig;
+        let cfg = ModelConfig {
+            name: "charge-once-probe".into(),
+            vocab: 64,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            rope_theta: 10000.0,
+        };
+        let ps = ParamStore::init(&cfg, &mut Rng::new(0));
+        let m = NativeModel::from_params(&ps);
+        let p: Vec<u32> = (0..65).map(|i| (i % 60) as u32 + 1).collect();
+        let budget = 20_000;
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig {
+                max_batch: 2,
+                max_queued: 8,
+                kv_budget_bytes: budget,
+                ..ServeConfig::default()
+            },
+        );
+        sched.submit(&p, 8).unwrap();
+        assert_eq!(sched.run_to_completion().len(), 1);
+        assert_eq!(sched.prefix_cached_pages(), 4, "one 64-position chunk donated");
+        assert!(!sched.kv_submit_refused_for(&p, 8), "discounted request is feasible");
+        sched.submit(&p, 8).unwrap();
+        sched.step();
+        assert_eq!((sched.active(), sched.queued()), (1, 0), "B must admit immediately");
+        let mut peak = sched.kv_allocated_bytes();
+        let mut done = Vec::new();
+        while sched.has_work() {
+            done.extend(sched.step());
+            peak = peak.max(sched.kv_allocated_bytes());
+        }
+        assert!(peak <= budget, "kv_allocated_bytes {peak} exceeded budget {budget}");
+        assert_eq!(sched.brownouts(), 0, "cache pressure must not brown out B");
+        assert_eq!(sched.prefix_hits(), 1);
+        assert_eq!(sched.prefix_cached_pages(), 4, "hit admission must not shed the cache");
+        assert_eq!(done.len(), 1);
+        assert!(!done[0].degraded);
+        assert_eq!(done[0].tokens, reference_decode(&m, &p, 8));
+    }
+
+    #[test]
+    fn cached_prefixes_shed_before_brownout() {
+        // A 256-token donor leaves 16 cached pages (32 KiB) — above the
+        // 70% low watermark of a 46 KB budget on its own. The next,
+        // unrelated admission must trim the cache back under the
+        // watermark and admit ungoverned: cached pages nobody references
+        // are shed before any request is degraded.
+        use crate::cfg::ModelConfig;
+        let cfg = ModelConfig {
+            name: "shed-probe".into(),
+            vocab: 64,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            rope_theta: 10000.0,
+        };
+        let ps = ParamStore::init(&cfg, &mut Rng::new(0));
+        let m = NativeModel::from_params(&ps);
+        let p: Vec<u32> = (0..256).map(|i| (i % 60) as u32 + 1).collect();
+        let budget = 46_000;
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig {
+                max_batch: 2,
+                max_queued: 8,
+                kv_budget_bytes: budget,
+                ..ServeConfig::default()
+            },
+        );
+        sched.submit(&p, 1).unwrap();
+        assert_eq!(sched.run_to_completion().len(), 1);
+        assert_eq!(sched.prefix_cached_pages(), 16, "four chunks donated");
+        assert!(sched.kv_pressure() > KV_LOW_WATERMARK, "cache alone trips the watermark");
+        let b = sched.submit(&[7, 9], 8).unwrap();
+        let mut peak = sched.kv_allocated_bytes();
+        let mut done = Vec::new();
+        while sched.has_work() {
+            done.extend(sched.step());
+            peak = peak.max(sched.kv_allocated_bytes());
+        }
+        assert!(peak <= budget, "kv_allocated_bytes {peak} exceeded budget {budget}");
+        assert_eq!(sched.brownouts(), 0, "sheddable cache must never cause a brownout");
+        assert!(sched.prefix_cached_pages() < 16, "admission must have shed cache");
+        let fb = done.iter().find(|f| f.id == b).unwrap();
+        assert!(!fb.degraded);
+        assert_eq!(fb.finish, FinishReason::Length);
+        assert_eq!(fb.tokens, reference_decode(&m, &[7, 9], 8));
+    }
+
+    #[test]
+    fn cached_prefixes_shed_before_refusing_admission() {
+        // Cache from a 200-token donor (24 KiB) sits BELOW the low
+        // watermark of a 40 KB budget, so the wholesale shed stays idle —
+        // but a 16 KiB request on top would cross the high watermark and,
+        // alone in an empty engine, be failed outright. Rung 0 must also
+        // run at request grain: evict just enough cached pages to fit the
+        // request instead of refusing it.
+        use crate::cfg::ModelConfig;
+        let cfg = ModelConfig {
+            name: "shed-fit-probe".into(),
+            vocab: 64,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            rope_theta: 10000.0,
+        };
+        let ps = ParamStore::init(&cfg, &mut Rng::new(0));
+        let m = NativeModel::from_params(&ps);
+        let donor: Vec<u32> = (0..200).map(|i| (i % 60) as u32 + 1).collect();
+        let other: Vec<u32> = (0..65).map(|i| (i % 50) as u32 + 2).collect();
+        let budget = 40_000;
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig {
+                max_batch: 2,
+                max_queued: 8,
+                kv_budget_bytes: budget,
+                ..ServeConfig::default()
+            },
+        );
+        sched.submit(&donor, 8).unwrap();
+        assert_eq!(sched.run_to_completion().len(), 1);
+        assert_eq!(sched.prefix_cached_pages(), 12, "three chunks donated");
+        assert!(sched.kv_pressure() < KV_LOW_WATERMARK, "below the wholesale-shed bar");
+        let b = sched.submit(&other, 8).unwrap();
+        let mut peak = sched.kv_allocated_bytes();
+        let mut done = sched.step();
+        peak = peak.max(sched.kv_allocated_bytes());
+        assert_eq!((sched.active(), sched.queued()), (1, 0), "shed must rescue the admission");
+        assert_eq!(sched.prefix_cached_pages(), 8, "one donor chunk evicted to make room");
+        while sched.has_work() {
+            done.extend(sched.step());
+            peak = peak.max(sched.kv_allocated_bytes());
+        }
+        assert!(peak <= budget, "kv_allocated_bytes {peak} exceeded budget {budget}");
+        let fb = done.iter().find(|f| f.id == b).unwrap();
+        assert_eq!(fb.finish, FinishReason::Length, "a refusal would read Failed here");
+        assert_eq!(fb.tokens, reference_decode(&m, &other, 8));
+        assert_eq!(sched.brownouts(), 0);
+    }
+
+    #[test]
+    fn prefix_evict_fault_drops_cache_but_lanes_decode_on() {
+        // Chaos: the prefix-evict site force-clears the index while a
+        // dependent lane is mid-decode. The lane's own page refs keep the
+        // shared storage alive — generation must stay bit-identical, and
+        // the finished lane re-donates into the emptied index.
+        let m = model();
+        let mut rng = Rng::new(41);
+        let p: Vec<u32> = (0..130).map(|_| rng.below(m.cfg.vocab) as u32).collect();
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig { max_batch: 2, max_queued: 8, ..ServeConfig::default() },
+        );
+        sched.submit(&p, 4).unwrap();
+        assert_eq!(sched.run_to_completion().len(), 1);
+        assert!(sched.prefix_cached_pages() > 0);
+        fault::arm(fault::PREFIX_EVICT, 1);
+        sched.submit(&p, 6).unwrap();
+        // One step: admission maps the 128 cached positions, then the
+        // armed fault clears the whole index mid-decode.
+        sched.step();
+        fault::disarm_all();
+        assert_eq!(sched.prefix_cached_pages(), 0, "fault must empty the cache");
+        assert_eq!(sched.prefix_hits(), 1);
+        let done = sched.run_to_completion();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish, FinishReason::Length);
+        assert_eq!(
+            done[0].tokens,
+            reference_decode(&m, &p, 6),
+            "borrowed pages must survive forced eviction"
+        );
+        assert!(sched.prefix_cached_pages() > 0, "finished lane re-donates");
+    }
+
+    #[test]
+    fn kv_prewarm_clamps_to_the_budget() {
+        let m = model();
+        let mut open = Scheduler::new(&m, ServeConfig::default());
+        open.reserve_kv_pages(8);
+        assert!(open.pooled_kv_pages() >= 8, "ungoverned pre-warm honors the request");
+        let budget = 256 * 1024;
+        let mut sched = Scheduler::new(
+            &m,
+            ServeConfig { kv_budget_bytes: budget, ..ServeConfig::default() },
+        );
+        sched.reserve_kv_pages(1_000_000);
+        assert!(
+            sched.kv_allocated_bytes() <= budget,
+            "pre-warm must clamp to the KV budget ceiling"
+        );
+        assert!(sched.pooled_kv_pages() > 0, "clamp still pre-warms up to the ceiling");
     }
 
     #[test]

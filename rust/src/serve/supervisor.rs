@@ -202,6 +202,10 @@ impl<'m> SupervisedEngine<'m> {
     /// suppression — the restart requeue machinery, applied to one lane.
     /// A no-op when `kv_budget_bytes` is 0 (`kv_over_high` is false).
     fn governance_preempt(&mut self, finished: &mut Vec<FinishedRequest>) {
+        // Mildest relief first: cached-but-unreferenced prefix pages are
+        // shed before any lane is preempted — giving back cache memory
+        // costs nobody anything.
+        self.sched.shed_cached_prefixes();
         while self.sched.kv_over_high() {
             let Some(id) = self.sched.preempt_youngest() else { break };
             crate::log_warn!(
@@ -329,6 +333,26 @@ impl<'m> SupervisedEngine<'m> {
     /// Worst-case KV bytes for a request spanning `total_pos` positions.
     pub fn kv_request_cost_bytes(&self, total_pos: usize) -> usize {
         self.sched.kv_request_cost_bytes(total_pos)
+    }
+
+    /// [`Scheduler::kv_submit_refused`] with the prefix-cache discount.
+    pub fn kv_submit_refused_for(&self, prompt: &[u32], gen_tokens: usize) -> bool {
+        self.sched.kv_submit_refused_for(prompt, gen_tokens)
+    }
+
+    /// Admissions that mapped at least one cached prefix chunk so far.
+    pub fn prefix_hits(&self) -> u64 {
+        self.sched.prefix_hits()
+    }
+
+    /// Prompt positions whose prefill compute was skipped, cumulative.
+    pub fn prefill_tokens_saved(&self) -> u64 {
+        self.sched.prefill_tokens_saved()
+    }
+
+    /// KV pages currently held by the prefix cache.
+    pub fn prefix_cached_pages(&self) -> usize {
+        self.sched.prefix_cached_pages()
     }
 
     /// Requests admitted with a brownout-clamped token budget so far.

@@ -49,10 +49,23 @@ pub const KV_EXHAUST: &str = "kv-exhaust";
 /// Sleep while reading one request body: a slow-upload (slowloris-style)
 /// client stalling its connection thread mid-read.
 pub const SLOW_READ: &str = "slow-read";
+/// Force-clear the shared-prefix index at the top of one decode step,
+/// dropping every cached page while dependent lanes are mid-decode — the
+/// eviction-race fault class. Lanes must keep decoding bit-identically
+/// (they hold their own refs on borrowed pages).
+pub const PREFIX_EVICT: &str = "prefix-evict";
 
 /// Every site name `GQ_FAULT` accepts.
-pub const SITES: &[&str] =
-    &[STEP_PANIC, PREFILL_PANIC, NAN_LOGITS, ENGINE_STALL, SLOW_WRITE, KV_EXHAUST, SLOW_READ];
+pub const SITES: &[&str] = &[
+    STEP_PANIC,
+    PREFILL_PANIC,
+    NAN_LOGITS,
+    ENGINE_STALL,
+    SLOW_WRITE,
+    KV_EXHAUST,
+    SLOW_READ,
+    PREFIX_EVICT,
+];
 
 struct Site {
     nth: u64,
@@ -208,6 +221,7 @@ mod tests {
         assert!(parse_one("frobnicate:2").is_err(), "unknown site");
         assert_eq!(parse_one("kv-exhaust:1").unwrap(), ("kv-exhaust".to_string(), 1));
         assert_eq!(parse_one("slow-read:2").unwrap(), ("slow-read".to_string(), 2));
+        assert_eq!(parse_one("prefix-evict:1").unwrap(), ("prefix-evict".to_string(), 1));
     }
 
     #[test]

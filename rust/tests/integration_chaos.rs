@@ -572,6 +572,45 @@ fn slow_read_stalls_one_connection_not_the_server() {
 }
 
 #[test]
+fn prefix_evict_mid_decode_keeps_borrowers_bit_identical() {
+    let _scope = scenario();
+    let (m, server) = serve(ServeConfig::default());
+    let addr = server.local_addr();
+
+    // Warm the cache: a 130-token prompt donates two page-aligned chunks
+    // into the prefix index when it finishes.
+    let vocab = m.cfg.vocab as u32;
+    let prompt: Vec<u32> = (0..130).map(|i| ((i * 13 + 7) as u32) % vocab).collect();
+    let warm = post(addr, "/v1/completions", &completion_body(&prompt, 4, false));
+    assert_eq!(warm.status, 200, "{}", warm.body);
+    wait_for_metrics(
+        addr,
+        |mx| mx.get("prefix_cached_pages").unwrap().as_u64().unwrap_or(0) > 0,
+        "prefix donation",
+    );
+
+    // A sharing request maps the cached prefix; the armed site then
+    // force-clears the whole index on its next decode step, while that
+    // borrower is mid-decode. The lane's own page references must carry
+    // it to a bit-identical completion — eviction can never corrupt a
+    // borrower.
+    fault::arm_global(fault::PREFIX_EVICT, 1);
+    let resp = post(addr, "/v1/completions", &completion_body(&prompt, 8, false));
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    assert_eq!(
+        response_tokens(&resp.body),
+        reference_tokens(&m, &prompt, 8),
+        "forced eviction corrupted a borrowing lane"
+    );
+    let mx = Json::parse(&get(addr, "/metrics").body).unwrap();
+    assert!(mx.get("prefix_hits").unwrap().as_u64().unwrap() >= 1, "share must have hit");
+    assert!(mx.get("prefill_tokens_saved").unwrap().as_u64().unwrap() >= 128);
+    assert_eq!(get(addr, "/healthz").status, 200);
+    assert_serves_bit_identically(addr, &m);
+    server.shutdown();
+}
+
+#[test]
 fn predicted_deadline_shedding_rejects_doomed_requests_up_front() {
     let _scope = scenario();
     let (m, server) = serve(ServeConfig {

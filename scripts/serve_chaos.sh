@@ -24,6 +24,10 @@
 #                     connection thread; the response is late but
 #                     bit-identical and health probes never queue behind
 #                     it.
+#   * prefix-evict  - the shared-prefix index is force-cleared while a
+#                     lane borrowing cached pages is mid-decode; the
+#                     borrower's own page refs keep it bit-identical and
+#                     the server stays healthy.
 #
 # After every fault the server must keep serving tokens bit-identical to
 # the fault-free baseline, and kv_bytes must return to the idle baseline.
@@ -31,8 +35,8 @@
 # All intermediate files land in ./serve-chaos/ so CI can upload them on
 # failure. Usage: scripts/serve_chaos.sh [path-to-gq]
 #   CHAOS_SCENARIO=step-panic|nan-logits|engine-stall|slow-client|
-#   kv-exhaust|slow-read|all (default all) selects one scenario for CI
-#   matrix fan-out.
+#   kv-exhaust|slow-read|prefix-evict|all (default all) selects one
+#   scenario for CI matrix fan-out.
 
 set -euo pipefail
 
@@ -248,6 +252,34 @@ if want_scenario slow-read; then
     assert_baseline_tokens slow-read
     stop
     echo "[slow-read] OK"
+fi
+
+# --- prefix-evict: forced cache clear never corrupts a borrowing lane --------
+if want_scenario prefix-evict; then
+    # A >64-token prompt so a finished lane donates page-aligned chunks;
+    # the resubmission borrows them. The warm request runs exactly 8
+    # decode steps (one per generated token), so hit 9 of the site lands
+    # on the borrower's FIRST decode step — the index is cleared while it
+    # decodes over borrowed pages.
+    LONG="[$(for i in $(seq 0 129); do printf '%s,' $((i % 50 + 1)); done | sed 's/,$//')]"
+    LONG_PROMPT="{\"prompt\": $LONG, \"max_tokens\": 8}"
+    boot prefix-evict GQ_FAULT=prefix-evict:9
+    curl -fsS -X POST "$BASE/v1/completions" -d "$LONG_PROMPT" \
+        >"$DIR/prefix-evict_warm.json" \
+        || fail "prefix-evict: warm-up request failed"
+    WARM=$(tokens_of "$DIR/prefix-evict_warm.json")
+    poll_metrics '.prefix_cached_pages > 0' "prefix donation"
+    curl -fsS -X POST "$BASE/v1/completions" -d "$LONG_PROMPT" \
+        >"$DIR/prefix-evict_hit.json" \
+        || fail "prefix-evict: borrowing request must still complete"
+    GOT=$(tokens_of "$DIR/prefix-evict_hit.json")
+    [ "$GOT" = "$WARM" ] \
+        || fail "prefix-evict: tokens [$GOT] differ from warm-up [$WARM] — eviction corrupted a borrower"
+    poll_metrics '.prefix_hits >= 1 and .prefill_tokens_saved >= 128' "prefix hit gauges"
+    curl -fsS "$BASE/healthz" >/dev/null || fail "prefix-evict: healthz went dark"
+    assert_baseline_tokens prefix-evict
+    stop
+    echo "[prefix-evict] OK"
 fi
 
 echo "serve-chaos OK (scenario: $SCENARIO)"

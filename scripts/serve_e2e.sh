@@ -14,7 +14,12 @@
 #     must be token-for-token identical to the f32 one (greedy argmax is
 #     validated ULP-close in unit tests; here the end-to-end tokens must
 #     agree) and its /metrics must report kv_dtype "f16" with halved
-#     kv_bytes gauges relative to page capacity.
+#     kv_bytes gauges relative to page capacity,
+#   * a shared-prefix burst: a warm request donates its prompt's KV chunks,
+#     a burst of same-prompt requests must answer token-for-token identical
+#     with /metrics showing prefix_hits > 0 and prefill_tokens_saved > 0,
+#     and a fourth server booted with --prefix-cache off must return the
+#     same tokens (cache on/off bit-identity) with both gauges at 0.
 #
 # All intermediate files land in ./serve-e2e/ so CI can upload them as an
 # artifact when a step fails. Usage: scripts/serve_e2e.sh [path-to-gq]
@@ -148,5 +153,76 @@ jq -e '.kv_dtype == "f16" and .completed >= 1
        and has("kv_bytes") and has("kv_allocated_bytes")' \
     "$DIR/metrics_f16.json" >/dev/null \
     || { LOG="$LOG16"; fail "f16 metrics wrong: $(cat "$DIR/metrics_f16.json")"; }
+
+# --- shared-prefix burst: prefix hits, prefill savings, on/off identity -----
+# A 130-token prompt spans two page-aligned 64-position chunks; the warm
+# request donates them on finish, so every burst request maps 128 cached
+# positions copy-on-write and skips that much prefill. The off server is
+# the control: same tokens, gauges pinned at zero.
+boot_server() { # <logfile> <extra args...>; sets BOOT_ADDR and BOOTED_PID
+    local log=$1
+    shift
+    "$GQ" serve --model tiny --format nonuniform --bits 4 \
+        --http 127.0.0.1:0 --max-batch 4 --max-queued 8 "$@" >"$log" 2>&1 &
+    BOOTED_PID=$!
+    BOOT_ADDR=
+    for _ in $(seq 1 240); do
+        BOOT_ADDR=$(sed -n 's/^http: listening on //p' "$log" | head -n 1)
+        [ -n "$BOOT_ADDR" ] && break
+        kill -0 "$BOOTED_PID" 2>/dev/null \
+            || { LOG="$log"; fail "server ($log) exited during startup"; }
+        sleep 0.25
+    done
+    [ -n "$BOOT_ADDR" ] || { LOG="$log"; fail "server ($log) never reported an address"; }
+}
+
+LOGPC="$DIR/server_prefix.log"
+LOGOFF="$DIR/server_prefix_off.log"
+boot_server "$LOGPC"
+SERVERPC=$BOOTED_PID
+BASEPC="http://$BOOT_ADDR"
+boot_server "$LOGOFF" --prefix-cache off
+SERVEROFF=$BOOTED_PID
+BASEOFF="http://$BOOT_ADDR"
+trap 'kill "$SERVER" "$SERVER16" "$SERVERPC" "$SERVEROFF" 2>/dev/null || true
+      wait 2>/dev/null || true' EXIT
+echo "prefix servers up at $BASEPC (on) and $BASEOFF (off)"
+
+PLONG="[$(for i in $(seq 0 129); do printf '%s,' $((i % 50 + 1)); done | sed 's/,$//')]"
+PBODY="{\"prompt\": $PLONG, \"max_tokens\": 4}"
+
+curl -fsS -X POST "$BASEPC/v1/completions" -d "$PBODY" >"$DIR/prefix_warm.json"
+PWARM=$(jq -r '.tokens | map(tostring) | join(",")' "$DIR/prefix_warm.json")
+[ -n "$PWARM" ] || { LOG="$LOGPC"; fail "prefix warm request returned no tokens"; }
+
+PIDS=()
+for i in $(seq 1 6); do
+    curl -fsS -X POST "$BASEPC/v1/completions" -d "$PBODY" >"$DIR/prefix_burst_$i.json" &
+    PIDS+=("$!")
+done
+for p in "${PIDS[@]}"; do
+    wait "$p" || { LOG="$LOGPC"; fail "shared-prefix burst request failed"; }
+done
+for i in $(seq 1 6); do
+    GOT=$(jq -r '.tokens | map(tostring) | join(",")' "$DIR/prefix_burst_$i.json")
+    [ "$GOT" = "$PWARM" ] \
+        || { LOG="$LOGPC"; fail "burst request $i tokens [$GOT] differ from warm [$PWARM]"; }
+done
+
+curl -fsS "$BASEPC/metrics" >"$DIR/metrics_prefix.json"
+jq -e '.prefix_hits > 0 and .prefill_tokens_saved > 0 and .completed >= 7' \
+    "$DIR/metrics_prefix.json" >/dev/null \
+    || { LOG="$LOGPC"; fail "prefix gauges flat after burst: $(cat "$DIR/metrics_prefix.json")"; }
+echo "prefix burst: $(jq -r '"\(.prefix_hits) hits, \(.prefill_tokens_saved) prefill tokens saved"' \
+    "$DIR/metrics_prefix.json")"
+
+curl -fsS -X POST "$BASEOFF/v1/completions" -d "$PBODY" >"$DIR/prefix_off.json"
+POFF=$(jq -r '.tokens | map(tostring) | join(",")' "$DIR/prefix_off.json")
+[ "$POFF" = "$PWARM" ] \
+    || { LOG="$LOGOFF"; fail "--prefix-cache off tokens [$POFF] differ from on [$PWARM]"; }
+curl -fsS "$BASEOFF/metrics" >"$DIR/metrics_prefix_off.json"
+jq -e '.prefix_hits == 0 and .prefill_tokens_saved == 0 and .prefix_cached_pages == 0' \
+    "$DIR/metrics_prefix_off.json" >/dev/null \
+    || { LOG="$LOGOFF"; fail "off-server prefix gauges nonzero: $(cat "$DIR/metrics_prefix_off.json")"; }
 
 echo "serve-e2e OK"
