@@ -288,6 +288,20 @@ pub struct ServeConfig {
     /// pages read-only and skip prefill over the cached positions. Greedy
     /// outputs are bit-identical either way.
     pub prefix_cache: bool,
+    /// Default decode precision (planes read per weight) for requests
+    /// that don't ask for one (`precision = 3` in TOML, `gq serve
+    /// --precision 3`). Only meaningful with `--format anyprec`, whose
+    /// bit-plane artifact serves any prefix of its stored planes; 0 (the
+    /// default) means "the format's native full precision".
+    pub default_precision: u8,
+    /// Load-shed floor precision (`precision_floor` in TOML, `gq serve
+    /// --precision-floor 2`). When set (non-zero) and the KV budget is
+    /// above the brownout low watermark, new admissions are downshifted
+    /// to this precision instead of having their `max_tokens` browned
+    /// out — a milder governance rung that trades decode quality for
+    /// full-length, non-degraded answers. 0 (the default) disables the
+    /// rung.
+    pub precision_floor: u8,
 }
 
 impl Default for ServeConfig {
@@ -305,6 +319,8 @@ impl Default for ServeConfig {
             max_engine_restarts: 3,
             kv_budget_bytes: 0,
             prefix_cache: true,
+            default_precision: 0,
+            precision_floor: 0,
         }
     }
 }
@@ -359,6 +375,24 @@ impl ServeConfig {
         }
         if let Some(v) = doc.get_bool(section, "prefix_cache") {
             c.prefix_cache = v;
+        }
+        if let Some(v) = doc.get_int(section, "precision") {
+            if !(0..=16).contains(&v) {
+                bail!("serve.precision must be in 0..=16 (0 = native)");
+            }
+            c.default_precision = v as u8;
+        }
+        if let Some(v) = doc.get_int(section, "precision_floor") {
+            if !(0..=16).contains(&v) {
+                bail!("serve.precision_floor must be in 0..=16 (0 = off)");
+            }
+            c.precision_floor = v as u8;
+        }
+        if c.default_precision != 0
+            && c.precision_floor != 0
+            && c.precision_floor > c.default_precision
+        {
+            bail!("serve.precision_floor must not exceed serve.precision");
         }
         if c.max_batch == 0 {
             bail!("serve.max_batch must be at least 1");
@@ -583,6 +617,30 @@ mod tests {
         let doc = TomlDoc::parse("[serve]\nprefix_cache = true\n").unwrap();
         let c = ServeConfig::from_toml(&doc, "serve").unwrap();
         assert!(c.prefix_cache);
+    }
+
+    #[test]
+    fn precision_knobs_from_toml_default_native() {
+        let c = ServeConfig::default();
+        assert_eq!(c.default_precision, 0, "0 = the format's native precision");
+        assert_eq!(c.precision_floor, 0, "downshift rung must stay opt-in");
+        let doc = TomlDoc::parse("[serve]\nprecision = 4\nprecision_floor = 2\n").unwrap();
+        let c = ServeConfig::from_toml(&doc, "serve").unwrap();
+        assert_eq!(c.default_precision, 4);
+        assert_eq!(c.precision_floor, 2);
+        // Floor above the default is a misconfiguration.
+        let doc = TomlDoc::parse("[serve]\nprecision = 2\nprecision_floor = 3\n").unwrap();
+        assert!(ServeConfig::from_toml(&doc, "serve").is_err());
+        // A floor with a native (0) default is fine: the floor only has
+        // to be ≤ the artifact's bits, checked at serve start.
+        let doc = TomlDoc::parse("[serve]\nprecision_floor = 2\n").unwrap();
+        let c = ServeConfig::from_toml(&doc, "serve").unwrap();
+        assert_eq!(c.default_precision, 0);
+        assert_eq!(c.precision_floor, 2);
+        let doc = TomlDoc::parse("[serve]\nprecision = 17\n").unwrap();
+        assert!(ServeConfig::from_toml(&doc, "serve").is_err());
+        let doc = TomlDoc::parse("[serve]\nprecision = -1\n").unwrap();
+        assert!(ServeConfig::from_toml(&doc, "serve").is_err());
     }
 
     #[test]

@@ -29,7 +29,7 @@ use guidedquant::coordinator::Pipeline;
 use guidedquant::data::Split;
 use guidedquant::model::ParamStore;
 use guidedquant::serve::{
-    build_serving_model, generate_per_sequence, generate_scheduled_streaming, HttpServer,
+    build_serving_set, generate_per_sequence, generate_scheduled_streaming, HttpServer,
     ServeFormat,
 };
 
@@ -38,13 +38,23 @@ const USAGE: &str = "usage: gq <pipeline|train|quantize|eval|serve|fisher|info> 
   quant flags:  --method rtn|gptq|squeezellm|gptvq1d|gptvq2d|lnq|trellis
                 --bits N --groups G --sparse-frac F --seed S
   pipeline:     --train-steps N --calib-batches N --eval-batches N --workers N
-  serve:        --format fp32|uniform|nonuniform|vector|trellis --requests N
-                --gen-tokens N --prompt-len N --max-batch N --max-queued N
+  serve:        --format fp32|uniform|nonuniform|vector|trellis|anyprec
+                --requests N --gen-tokens N --prompt-len N
+                --max-batch N --max-queued N
                 --kv-dtype f32|f16 (f16 halves KV cache bytes; greedy
                 tokens are validated ULP-close to f32, not bit-equal)
                 --http ADDR (HTTP front-end: POST /v1/completions,
-                GET /metrics, GET /healthz — instead of the stdout
-                benchmark; port 0 picks a free port, e.g. 127.0.0.1:0)
+                GET /v1/capabilities, GET /metrics, GET /healthz —
+                instead of the stdout benchmark; port 0 picks a free
+                port, e.g. 127.0.0.1:0)
+                --precision N (default decode precision; 0 = native.
+                anyprec serves every precision 2..=bits from ONE stored
+                bit-plane artifact; requests pick theirs per call with
+                the body's "precision" field)
+                --precision-floor N (load-adaptive downshift: above the
+                KV low watermark, admissions that did not pin a
+                precision decode at this floor before any brownout or
+                429; 0 = off)
                 --per-seq (thread-per-sequence baseline instead of the
                 continuous-batching scheduler)
                 --scalar-prefill (per-lane scalar prefill instead of
@@ -116,6 +126,20 @@ fn pipeline_config(args: &Args) -> Result<PipelineConfig> {
             "off" => false,
             other => bail!("--prefix-cache expects on|off, got `{other}`"),
         };
+    }
+    cfg.serve.default_precision =
+        args.get_usize("precision", cfg.serve.default_precision as usize)? as u8;
+    cfg.serve.precision_floor =
+        args.get_usize("precision-floor", cfg.serve.precision_floor as usize)? as u8;
+    if cfg.serve.precision_floor != 0
+        && cfg.serve.default_precision != 0
+        && cfg.serve.precision_floor > cfg.serve.default_precision
+    {
+        bail!(
+            "--precision-floor {} exceeds the default --precision {}",
+            cfg.serve.precision_floor,
+            cfg.serve.default_precision
+        );
     }
     cfg.quant = quant_config(args, cfg.quant)?;
     Ok(cfg)
@@ -238,20 +262,14 @@ fn cmd_eval(args: &Args) -> Result<()> {
 const SERVE_FLAGS: &str = "config model artifacts out train-steps calib-batches eval-batches \
     workers seed max-batch max-queued scalar-prefill kv-dtype method bits groups sparse-frac \
     format requests gen-tokens prompt-len per-seq stream http load request-timeout \
-    queue-timeout restart-policy max-engine-restarts kv-budget-mb prefix-cache";
+    queue-timeout restart-policy max-engine-restarts kv-budget-mb prefix-cache \
+    precision precision-floor";
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let allowed: Vec<&str> = SERVE_FLAGS.split_whitespace().collect();
     args.ensure_known("gq serve", &allowed)?;
     let cfg = pipeline_config(args)?;
-    let format = match args.get_or("format", "nonuniform") {
-        "fp32" => ServeFormat::Fp32,
-        "uniform" => ServeFormat::UniformScalar,
-        "nonuniform" => ServeFormat::NonUniformScalar,
-        "vector" => ServeFormat::Vector,
-        "trellis" => ServeFormat::Trellis,
-        other => bail!("unknown serve format `{other}`"),
-    };
+    let format = ServeFormat::parse(args.get_or("format", "nonuniform"))?;
     let bits = args.get_usize("bits", 4)? as u32;
     let requests = args.get_usize("requests", 4)?;
     let gen_tokens = args.get_usize("gen-tokens", 32)?;
@@ -284,23 +302,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let ps = load_or_init(&cfg.model, cfg.seed, args)?;
     println!("building {} serving model at {bits} bits ...", format.name());
-    let model = build_serving_model(&ps, None, format, bits)?;
+    let set = Arc::new(build_serving_set(&ps, None, format, bits)?);
 
     if let Some(addr) = http_addr {
-        let server = HttpServer::bind(Arc::new(model), cfg.serve.clone(), &addr)?;
+        let precisions = set.precisions();
+        let default_prec = set.resolve(cfg.serve.default_precision)?;
+        let server = HttpServer::bind(set, cfg.serve.clone(), &addr)?;
         println!("http: listening on {}", server.local_addr());
-        println!("http: POST /v1/completions | GET /metrics | GET /healthz (Ctrl-C stops)");
+        println!(
+            "http: format={} precisions={:?} default={} floor={}",
+            format.name(),
+            precisions,
+            default_prec,
+            cfg.serve.precision_floor
+        );
+        println!(
+            "http: POST /v1/completions | GET /v1/capabilities | GET /metrics | GET /healthz (Ctrl-C stops)"
+        );
         server.join();
         return Ok(());
     }
 
+    // Benchmark mode measures the native (highest-precision) entry.
+    let model = set.native_model();
     let prompts = guidedquant::serve::random_prompts(model.cfg.vocab, requests, prompt_len, 7);
     let stream = args.switch("stream");
     let (_, stats) = if args.switch("per-seq") {
-        generate_per_sequence(&model, &prompts, gen_tokens, cfg.workers)?
+        generate_per_sequence(model, &prompts, gen_tokens, cfg.workers)?
     } else {
         generate_scheduled_streaming(
-            &model,
+            model,
             &prompts,
             gen_tokens,
             cfg.workers,

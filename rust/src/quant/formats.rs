@@ -5,6 +5,12 @@
 //! * [`UniformScalarLinear`] — LUT-GEMM-style: packed codes + affine grid,
 //! * [`LutLinear`]           — Any-Precision-LLM-style: packed codes +
 //!                             per-channel codebook gather,
+//! * [`AnyPrecisionLinear`]  — bit-plane codes ([`BitPlanes`]) + per-
+//!                             precision LUT slices: ONE stored artifact
+//!                             ([`AnyPrecArtifact`], `Arc`-shared between
+//!                             views) decodes at any requested precision
+//!                             `1..=bits`; the full-precision view is
+//!                             bit-identical to [`LutLinear`],
 //! * [`VqLinear`]            — vector codebook decode per dim-point,
 //! * [`TrellisLinear`]       — QTIP-style stateful decode (extra ALU work
 //!                             per weight → the paper's vector-quant decode
@@ -31,13 +37,15 @@
 //! other*, while its outputs are ULP-close — one RNE rounding of each
 //! table entry — to the f32-table variant's.
 
+use std::sync::Arc;
+
 use crate::model::forward::{matmul_col_sharded, LinearOp};
 use crate::tensor::gemm::{with_f32_scratch, with_u16_scratch, ColWindow};
 use crate::tensor::{simd, Mat};
 use crate::util::half::{f16_to_f32, narrow_slice};
 
 use super::grid::UniformGrid;
-use super::packing::PackedCodes;
+use super::packing::{BitPlanes, PackedCodes};
 use super::trellis::{Generator, Trellis, TrellisCode};
 
 /// Gather one code row through an f16-stored per-channel table, widening on
@@ -372,6 +380,259 @@ impl LinearOp for LutLinear {
         // fp16 LUT either way: the f32 copy models a table that deploys as
         // half-precision, the f16 copy *is* one.
         self.codes.storage_bytes() + self.codebooks.rows * self.codebooks.cols * 2
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Any-precision (bit-plane codes, one artifact for every width)
+// ---------------------------------------------------------------------------
+
+/// The shared any-precision weight artifact: bit-plane packed codes plus
+/// one per-channel decode table per precision. Built ONCE per layer from
+/// the same `(codes, codebooks)` a [`LutLinear`] takes, then shared
+/// (`Arc`) by every [`AnyPrecisionLinear`] view — a 2-bit and a 4-bit
+/// serving model of the same layer hold the same artifact.
+///
+/// Construction sorts each channel's codebook ascending and remaps the
+/// codes through the sort permutation. Sorting changes nothing at full
+/// precision (a gather through a permuted table with permuted indices
+/// returns the same f32s, so the full-precision view stays bit-identical
+/// to [`LutLinear`]), and it makes code *prefixes* meaningful: after
+/// sorting, the codes whose top `p` bits equal `c` form a contiguous run
+/// of neighboring codebook entries, so the precision-`p` table entry is
+/// the (deterministic, f32) mean of its `2^(bits-p)` children — coarser
+/// precisions collapse neighboring reconstruction levels, the
+/// Any-Precision-LLM parent/child scheme.
+pub struct AnyPrecArtifact {
+    pub d_in: usize,
+    pub d_out: usize,
+    /// Full stored precision (number of planes).
+    pub bits: u32,
+    /// Bit-plane codes, row-major `d_in × d_out`, remapped to the sorted
+    /// tables.
+    planes: BitPlanes,
+    /// `luts[p - 1]` is the `d_out × 2^p` decode table for precision `p`;
+    /// `luts[bits - 1]` is the sorted parent codebook (exact).
+    luts: Vec<Mat>,
+}
+
+impl AnyPrecArtifact {
+    pub fn new(codes: &[u16], codebooks: &Mat, bits: u32, d_in: usize, d_out: usize) -> Self {
+        assert!(bits >= 1 && bits <= 8, "anyprec format: bits {bits} outside 1..=8");
+        assert_eq!(
+            codes.len(),
+            d_in * d_out,
+            "anyprec format: {} codes for a {d_in}x{d_out} weight",
+            codes.len()
+        );
+        assert_eq!(
+            codebooks.rows, d_out,
+            "anyprec format: {} codebook channels, weight has {d_out}",
+            codebooks.rows
+        );
+        let m = 1usize << bits;
+        assert_eq!(
+            codebooks.cols, m,
+            "anyprec format: {}-entry codebook for {bits}-bit codes",
+            codebooks.cols
+        );
+        if let Some(&c) = codes.iter().find(|&&c| c as usize >= m) {
+            panic!("anyprec format: code {c} indexes past the {m}-entry per-channel codebook");
+        }
+        // Per channel: sort the codebook ascending (total order — ties and
+        // any degenerate values stay deterministic) and build the inverse
+        // permutation that remaps old codes to sorted positions.
+        let mut sorted = Mat::zeros(d_out, m);
+        let mut inv = vec![0u16; d_out * m];
+        let mut order: Vec<usize> = Vec::with_capacity(m);
+        for j in 0..d_out {
+            order.clear();
+            order.extend(0..m);
+            let row = codebooks.row(j);
+            order.sort_by(|&a, &b| row[a].total_cmp(&row[b]));
+            let srow = sorted.row_mut(j);
+            for (k, &o) in order.iter().enumerate() {
+                srow[k] = row[o];
+                inv[j * m + o] = k as u16;
+            }
+        }
+        let remapped: Vec<u16> = codes
+            .iter()
+            .enumerate()
+            .map(|(idx, &c)| inv[(idx % d_out) * m + c as usize])
+            .collect();
+        // Per-precision tables: precision `bits` is the sorted codebook
+        // itself; precision `p` averages each entry's 2^(bits-p) children.
+        let mut luts = Vec::with_capacity(bits as usize);
+        for p in 1..=bits {
+            if p == bits {
+                luts.push(sorted.clone());
+                continue;
+            }
+            let group = 1usize << (bits - p);
+            let mp = 1usize << p;
+            let mut t = Mat::zeros(d_out, mp);
+            for j in 0..d_out {
+                let srow = sorted.row(j);
+                let trow = t.row_mut(j);
+                for c in 0..mp {
+                    let kids = &srow[c * group..(c + 1) * group];
+                    trow[c] = kids.iter().sum::<f32>() / group as f32;
+                }
+            }
+            luts.push(t);
+        }
+        AnyPrecArtifact { d_in, d_out, bits, planes: BitPlanes::pack(&remapped, bits), luts }
+    }
+
+    /// The `d_out × 2^prec` decode table for one precision.
+    pub fn lut(&self, prec: u32) -> &Mat {
+        assert!(prec >= 1 && prec <= self.bits, "anyprec: precision {prec} outside stored planes");
+        &self.luts[prec as usize - 1]
+    }
+
+    /// Bit-plane codes (all planes).
+    pub fn planes(&self) -> &BitPlanes {
+        &self.planes
+    }
+
+    /// Bytes of the full shared artifact: every code plane plus every
+    /// precision's table at fp16 deployment width (matching the other
+    /// formats' table accounting).
+    pub fn storage_bytes(&self) -> usize {
+        let table_entries: usize = self.luts.iter().map(|t| t.rows * t.cols).sum();
+        self.planes.storage_bytes() + table_entries * 2
+    }
+}
+
+/// A serving view of an [`AnyPrecArtifact`] at one requested precision.
+/// Cheap to construct (an `Arc` clone + an integer), so a model set keeps
+/// one view per supported precision over the same weights. Kernels mirror
+/// [`LutLinear`]'s staged path — unpack a code run at the view's
+/// precision, gather through that precision's table, FMA — and satisfy
+/// the same tile contract (`matvec` ≡ `matmul` ≡ tiled GEMM per element
+/// at every SIMD/shard/tile setting). At `precision == bits` the decode
+/// table holds exactly the (sorted) [`LutLinear`] codebook values, so
+/// outputs are bit-identical to the fixed-precision format.
+pub struct AnyPrecisionLinear {
+    art: Arc<AnyPrecArtifact>,
+    precision: u32,
+}
+
+impl AnyPrecisionLinear {
+    /// Build the artifact and return its full-precision view.
+    pub fn new(codes: &[u16], codebooks: Mat, bits: u32, d_in: usize, d_out: usize) -> Self {
+        let art = Arc::new(AnyPrecArtifact::new(codes, &codebooks, bits, d_in, d_out));
+        AnyPrecisionLinear { precision: bits, art }
+    }
+
+    /// A view of an existing artifact at `precision` planes.
+    pub fn from_artifact(art: Arc<AnyPrecArtifact>, precision: u32) -> Self {
+        assert!(
+            precision >= 1 && precision <= art.bits,
+            "anyprec: precision {precision} outside the artifact's 1..={} planes",
+            art.bits
+        );
+        AnyPrecisionLinear { art, precision }
+    }
+
+    /// The shared artifact (clone the `Arc` to build sibling views).
+    pub fn artifact(&self) -> &Arc<AnyPrecArtifact> {
+        &self.art
+    }
+
+    /// Decode precision of this view.
+    pub fn precision(&self) -> u32 {
+        self.precision
+    }
+}
+
+impl LinearOp for AnyPrecisionLinear {
+    fn d_in(&self) -> usize {
+        self.art.d_in
+    }
+
+    fn d_out(&self) -> usize {
+        self.art.d_out
+    }
+
+    fn matvec(&self, x: &[f32], out: &mut [f32]) {
+        out.fill(0.0);
+        let d_out = self.art.d_out;
+        let lut = self.art.lut(self.precision);
+        let m = lut.cols;
+        with_u16_scratch(d_out, |row| {
+            with_f32_scratch(d_out, |wrow| {
+                for (i, &xi) in x.iter().enumerate() {
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    self.art.planes.unpack_range(i * d_out, self.precision, row);
+                    simd::lut_gather(&lut.data, m, 0, row, wrow);
+                    simd::axpy(out, xi, wrow);
+                }
+            })
+        });
+    }
+
+    fn matmul(&self, xs: &Mat, out: &mut Mat) {
+        matmul_col_sharded(self, xs, out);
+    }
+
+    fn matmul_cols(&self, xs: &Mat, out: &mut ColWindow) {
+        debug_assert_eq!(xs.cols, self.art.d_in);
+        debug_assert_eq!(xs.rows, out.rows());
+        let (lo, w) = (out.lo(), out.width());
+        let b = xs.rows;
+        out.fill(0.0);
+        let d_out = self.art.d_out;
+        let lut = self.art.lut(self.precision);
+        let m = lut.cols;
+        with_u16_scratch(w, |row| {
+            with_f32_scratch(w, |wrow| {
+                for i in 0..self.art.d_in {
+                    if (0..b).all(|r| xs.at(r, i) == 0.0) {
+                        continue;
+                    }
+                    // One plane-prefix unpack + gather per code row, shared
+                    // by every lane of the batch.
+                    self.art.planes.unpack_range(i * d_out + lo, self.precision, row);
+                    simd::lut_gather(&lut.data, m, lo, row, wrow);
+                    for r in 0..b {
+                        let xi = xs.at(r, i);
+                        if xi == 0.0 {
+                            continue;
+                        }
+                        simd::axpy(out.row_mut(r), xi, wrow);
+                    }
+                }
+            })
+        });
+    }
+
+    fn supports_decode_tile(&self) -> bool {
+        true
+    }
+
+    fn decode_tile(&self, i0: usize, i1: usize, lo: usize, hi: usize, tile: &mut [f32]) {
+        let w = hi - lo;
+        let d_out = self.art.d_out;
+        let lut = self.art.lut(self.precision);
+        let m = lut.cols;
+        with_u16_scratch(w, |row| {
+            for (i, trow) in (i0..i1).zip(tile.chunks_exact_mut(w)) {
+                self.art.planes.unpack_range(i * d_out + lo, self.precision, row);
+                simd::lut_gather(&lut.data, m, lo, row, trow);
+            }
+        });
+    }
+
+    /// Full shared-artifact bytes (every plane + every precision's fp16
+    /// table). Views over one artifact each report the whole thing — the
+    /// artifact IS the deployable unit; a per-view prefix figure is
+    /// available as `artifact().planes().prefix_storage_bytes(prec)`.
+    fn storage_bytes(&self) -> usize {
+        self.art.storage_bytes()
     }
 }
 
@@ -992,7 +1253,11 @@ mod tests {
         let lut = LutLinear::new(&res.codes.unwrap(), res.codebooks.unwrap(), 3, 24, 10);
         let (vq, _) = vq_fixture(42);
         let (tre, _) = trellis_fixture(43);
-        for lin in [&uni as &dyn LinearOp, &lut, &vq, &tre] {
+        let res4 = rtn_quantize(&w, 4);
+        let anyp =
+            AnyPrecisionLinear::new(&res4.codes.unwrap(), res4.codebooks.unwrap(), 4, 24, 10);
+        let anyp2 = AnyPrecisionLinear::from_artifact(anyp.artifact().clone(), 2);
+        for lin in [&uni as &dyn LinearOp, &lut, &vq, &tre, &anyp, &anyp2] {
             let xs = Mat::randn(3, lin.d_in(), 1.0, &mut rng);
             let mut out = Mat::zeros(3, lin.d_out());
             let mut y = vec![0.0f32; lin.d_out()];
@@ -1042,7 +1307,11 @@ mod tests {
         let lut = LutLinear::new(&res.codes.unwrap(), res.codebooks.unwrap(), 3, 24, 10);
         let (vq, _) = vq_fixture(51);
         let (tre, _) = trellis_fixture(52);
-        for lin in [&uni as &dyn LinearOp, &lut, &vq, &tre] {
+        let res4 = rtn_quantize(&w, 4);
+        let anyp =
+            AnyPrecisionLinear::new(&res4.codes.unwrap(), res4.codebooks.unwrap(), 4, 24, 10);
+        let anyp3 = AnyPrecisionLinear::from_artifact(anyp.artifact().clone(), 3);
+        for lin in [&uni as &dyn LinearOp, &lut, &vq, &tre, &anyp, &anyp3] {
             let xs = Mat::randn(5, lin.d_in(), 1.0, &mut rng);
             let mut run = |simd_on: bool| {
                 simd::force(Some(simd_on));
@@ -1105,6 +1374,93 @@ mod tests {
         testing::assert_close_ulp(&got, &want, 1 << 14, 1e-3).unwrap();
         assert_ne!(got, want, "f16 narrowing should round at least one centroid");
         assert_matmul_is_looped_matvec(&f16_lin, 5, 108);
+    }
+
+    #[test]
+    fn anyprec_full_precision_is_bit_identical_to_lut() {
+        // Tentpole acceptance: the full-precision view of the shared
+        // artifact must reproduce LutLinear EXACTLY on the same codes —
+        // sorting the tables and remapping the codes is a pure
+        // permutation of the gather, and FMA order is unchanged. Checked
+        // on a word-aligned shape (LutLinear's fused matvec path) and an
+        // unaligned one (its staged path).
+        let mut rng = Rng::new(70);
+        for (d_in, d_out, bits) in [(16usize, 8usize, 4u32), (12, 10, 3)] {
+            let w = Mat::randn(d_in, d_out, 1.0, &mut rng);
+            let res = rtn_quantize(&w, bits);
+            let codes = res.codes.unwrap();
+            let cbs = res.codebooks.unwrap();
+            let lut = LutLinear::new(&codes, cbs.clone(), bits, d_in, d_out);
+            let anyp = AnyPrecisionLinear::new(&codes, cbs, bits, d_in, d_out);
+            assert_eq!(anyp.precision(), bits);
+            let xs = Mat::randn(4, d_in, 1.0, &mut rng);
+            let mut want = vec![0.0f32; d_out];
+            let mut got = vec![0.0f32; d_out];
+            lut.matvec(xs.row(0), &mut want);
+            anyp.matvec(xs.row(0), &mut got);
+            assert_eq!(got, want, "full-precision matvec != LutLinear");
+            let mut want_mm = Mat::zeros(4, d_out);
+            let mut got_mm = Mat::zeros(4, d_out);
+            lut.matmul(&xs, &mut want_mm);
+            anyp.matmul(&xs, &mut got_mm);
+            assert_eq!(got_mm.data, want_mm.data, "full-precision matmul != LutLinear");
+        }
+    }
+
+    #[test]
+    fn anyprec_matmul_exactly_matches_matvec_at_every_precision() {
+        // Every view of one artifact satisfies the full serving-kernel
+        // contract (matvec ≡ matmul ≡ tiled GEMM ≡ sharded, exactly).
+        let mut rng = Rng::new(71);
+        let w = Mat::randn(12, 10, 1.0, &mut rng);
+        let res = rtn_quantize(&w, 4);
+        let anyp = AnyPrecisionLinear::new(&res.codes.unwrap(), res.codebooks.unwrap(), 4, 12, 10);
+        let art = anyp.artifact().clone();
+        for prec in 1..=4u32 {
+            let view = AnyPrecisionLinear::from_artifact(art.clone(), prec);
+            assert!(Arc::ptr_eq(view.artifact(), &art), "views must share one artifact");
+            // Every view reports the whole deployable artifact.
+            assert_eq!(view.storage_bytes(), art.storage_bytes());
+            assert_matmul_is_looped_matvec(&view, 5, 112 + prec as u64);
+        }
+        // Coarser views decode through smaller tables but the SAME planes:
+        // a 2-bit decode reads a strict prefix of the 4-bit plane bytes.
+        assert!(art.planes().prefix_storage_bytes(2) < art.planes().storage_bytes());
+    }
+
+    #[test]
+    fn anyprec_coarse_tables_are_sorted_prefix_means() {
+        // Hand-checkable construction: one channel, bits = 2, codebook
+        // [0.5, -1.0, 2.0, 0.0] sorts to [-1.0, 0.0, 0.5, 2.0]; the 1-bit
+        // table averages adjacent pairs. Codes remap through the sort.
+        let mut cbs = Mat::zeros(1, 4);
+        cbs.row_mut(0).copy_from_slice(&[0.5, -1.0, 2.0, 0.0]);
+        let codes = [0u16, 1, 2, 3]; // d_in = 4, d_out = 1
+        let art = AnyPrecArtifact::new(&codes, &cbs, 2, 4, 1);
+        assert_eq!(art.lut(2).row(0), &[-1.0, 0.0, 0.5, 2.0]);
+        assert_eq!(art.lut(1).row(0), &[-0.5, 1.25]);
+        // Remap: 0.5 → slot 2, -1.0 → 0, 2.0 → 3, 0.0 → 1.
+        assert_eq!(art.planes().to_vec(2), vec![2, 0, 3, 1]);
+        // 1-bit prefix keeps the high plane: codes >> 1.
+        assert_eq!(art.planes().to_vec(1), vec![1, 0, 1, 0]);
+        // End to end: x = e0 picks element (0,0) → code 2 → 0.5 at full
+        // precision, prefix 1 → 1.25 at 1 bit.
+        let full = AnyPrecisionLinear::from_artifact(Arc::new(art), 2);
+        let coarse = AnyPrecisionLinear::from_artifact(full.artifact().clone(), 1);
+        let x = [1.0f32, 0.0, 0.0, 0.0];
+        let mut y = [0.0f32];
+        full.matvec(&x, &mut y);
+        assert_eq!(y, [0.5]);
+        coarse.matvec(&x, &mut y);
+        assert_eq!(y, [1.25]);
+    }
+
+    #[test]
+    #[should_panic(expected = "indexes past")]
+    fn anyprec_rejects_out_of_table_codes() {
+        let mut rng = Rng::new(72);
+        let codebooks = Mat::randn(4, 16, 1.0, &mut rng);
+        AnyPrecisionLinear::new(&[16u16; 8], codebooks, 4, 2, 4);
     }
 
     #[test]

@@ -1,5 +1,14 @@
 //! Bit-packing of code indices into u32 words — the storage format behind
 //! the serving-engine formats (Table 2's bits accounting is real bytes).
+//!
+//! Two layouts live here:
+//! * [`PackedCodes`] — element-major: each code's bits sit contiguously
+//!   inside one word (the fixed-precision serving formats).
+//! * [`BitPlanes`] — plane-major (Any-Precision-LLM layout): bit plane 0
+//!   holds every code's most-significant bit, plane 1 the next one down,
+//!   and so on. Reading a PREFIX of the planes reconstructs each code's
+//!   high-order bits, so one stored artifact decodes at any precision
+//!   `1..=bits` by touching only the planes that precision needs.
 
 /// Codes packed `bits` per element into u32 words, row-major.
 #[derive(Debug, Clone)]
@@ -30,6 +39,21 @@ impl PackedCodes {
         PackedCodes { bits, len: codes.len(), words }
     }
 
+    /// Random-access decode of one code.
+    ///
+    /// The div/mod pair here is fine — and a cached-word fast path is
+    /// unnecessary — because the serving tile paths NEVER call `get`:
+    /// every hot decode loop goes through [`PackedCodes::unpack_range`] /
+    /// [`PackedCodes::unpack_map_f32`], which walk words directly (one
+    /// shift/mask per element). `get` serves only cold paths
+    /// ([`PackedCodes::to_vec`], tests, one-off probes).
+    ///
+    /// A code also never straddles two words: `pack` places code `idx` at
+    /// bit offset `(idx % per_word) * bits` with `per_word = 32 / bits`
+    /// (integer division), so `off + bits <= 32` always holds — widths
+    /// that don't divide 32 simply leave `32 % bits` pad bits at the top
+    /// of each word (e.g. 3-bit packing stores 10 codes per word with 2
+    /// dead bits). The single-word read below is therefore complete.
     #[inline]
     pub fn get(&self, idx: usize) -> u16 {
         debug_assert!(idx < self.len);
@@ -147,6 +171,140 @@ impl PackedCodes {
     }
 }
 
+/// Codes stored as `bits` independent one-bit planes (the Any-Precision
+/// layout). Plane 0 is every code's most-significant bit; plane `p` holds
+/// bit `bits - 1 - p`. Decoding at precision `P <= bits` reads planes
+/// `0..P` and reconstructs `code >> (bits - P)` — the code's top `P` bits
+/// — so a single artifact serves every precision from a prefix of its
+/// storage, and full-precision decode recovers the original codes exactly.
+///
+/// Planes are plane-major: plane `p` occupies words
+/// `[p * words_per_plane, (p + 1) * words_per_plane)`, each word covering
+/// 32 consecutive elements (element `i` at bit `i % 32`). A precision-`P`
+/// decode therefore touches exactly the first `P * words_per_plane` words.
+#[derive(Debug, Clone)]
+pub struct BitPlanes {
+    /// Planes stored — the artifact's full precision.
+    pub bits: u32,
+    /// Number of codes.
+    pub len: usize,
+    words_per_plane: usize,
+    words: Vec<u32>,
+}
+
+impl BitPlanes {
+    pub fn pack(codes: &[u16], bits: u32) -> Self {
+        assert!(bits >= 1 && bits <= 16, "bitplanes: bit width {bits} outside 1..=16");
+        let words_per_plane = codes.len().div_ceil(32);
+        let mask = (1u32 << bits) - 1;
+        let mut words = vec![0u32; bits as usize * words_per_plane];
+        for (idx, &c) in codes.iter().enumerate() {
+            assert!(
+                (c as u32) <= mask,
+                "bitplanes: code {c} at index {idx} does not fit in {bits} bits"
+            );
+            for p in 0..bits {
+                let bit = (c as u32 >> (bits - 1 - p)) & 1;
+                words[p as usize * words_per_plane + idx / 32] |= bit << (idx % 32);
+            }
+        }
+        BitPlanes { bits, len: codes.len(), words_per_plane, words }
+    }
+
+    /// Random-access decode of one code's top `prec` bits (cold paths and
+    /// tests; hot loops use the range decoders below).
+    #[inline]
+    pub fn get(&self, idx: usize, prec: u32) -> u16 {
+        debug_assert!(idx < self.len);
+        debug_assert!(prec >= 1 && prec <= self.bits);
+        let (w, bit) = (idx / 32, (idx % 32) as u32);
+        let mut code = 0u16;
+        for p in 0..prec as usize {
+            code = (code << 1) | ((self.words[p * self.words_per_plane + w] >> bit) & 1) as u16;
+        }
+        code
+    }
+
+    /// Unpack a contiguous range at precision `prec`:
+    /// `out[k] = code(start + k) >> (bits - prec)`. Walks each 32-element
+    /// word column once per plane of the prefix — `prec` shift/mask ops
+    /// per element, no per-element division.
+    pub fn unpack_range(&self, start: usize, prec: u32, out: &mut [u16]) {
+        debug_assert!(start + out.len() <= self.len);
+        debug_assert!(prec >= 1 && prec <= self.bits);
+        let wpp = self.words_per_plane;
+        let mut idx = start;
+        let mut o = 0usize;
+        while o < out.len() {
+            let (w, bit0) = (idx / 32, idx % 32);
+            let take = (32 - bit0).min(out.len() - o);
+            let run = &mut out[o..o + take];
+            run.fill(0);
+            for p in 0..prec as usize {
+                let word = self.words[p * wpp + w] >> bit0;
+                for (j, c) in run.iter_mut().enumerate() {
+                    *c = (*c << 1) | ((word >> j) & 1) as u16;
+                }
+            }
+            idx += take;
+            o += take;
+        }
+    }
+
+    /// Decode a contiguous range at precision `prec` through an f32 LUT:
+    /// `out[k] = lut[code(start + k) >> (bits - prec)]`, where `lut` is the
+    /// `2^prec`-entry table for that precision. Codes stage through a
+    /// fixed stack buffer (one word column at a time), so the call is
+    /// allocation-free — the plane-prefix analog of
+    /// [`PackedCodes::unpack_map_f32`].
+    pub fn unpack_map_f32(&self, start: usize, prec: u32, lut: &[f32], out: &mut [f32]) {
+        debug_assert!(start + out.len() <= self.len);
+        debug_assert!(prec >= 1 && prec <= self.bits);
+        debug_assert!(lut.len() >= 1usize << prec);
+        let wpp = self.words_per_plane;
+        let mut codes = [0u16; 32];
+        let mut idx = start;
+        let mut o = 0usize;
+        while o < out.len() {
+            let (w, bit0) = (idx / 32, idx % 32);
+            let take = (32 - bit0).min(out.len() - o);
+            let staged = &mut codes[..take];
+            staged.fill(0);
+            for p in 0..prec as usize {
+                let word = self.words[p * wpp + w] >> bit0;
+                for (j, c) in staged.iter_mut().enumerate() {
+                    *c = (*c << 1) | ((word >> j) & 1) as u16;
+                }
+            }
+            for (ov, &c) in out[o..o + take].iter_mut().zip(staged.iter()) {
+                *ov = lut[c as usize];
+            }
+            idx += take;
+            o += take;
+        }
+    }
+
+    /// Bytes of the full artifact (all planes).
+    pub fn storage_bytes(&self) -> usize {
+        self.words.len() * 4
+    }
+
+    /// Bytes a precision-`prec` decode actually touches (its plane prefix).
+    pub fn prefix_storage_bytes(&self, prec: u32) -> usize {
+        debug_assert!(prec <= self.bits);
+        prec as usize * self.words_per_plane * 4
+    }
+
+    /// All codes at precision `prec` (cold path).
+    pub fn to_vec(&self, prec: u32) -> Vec<u16> {
+        let mut out = vec![0u16; self.len];
+        if self.len > 0 {
+            self.unpack_range(0, prec, &mut out);
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -213,5 +371,106 @@ mod tests {
         let codes: Vec<u16> = (0..25).map(|i| (i % 8) as u16).collect();
         let p = PackedCodes::pack(&codes, 3);
         assert_eq!(p.to_vec(), codes);
+    }
+
+    #[test]
+    fn get_at_word_boundaries_never_straddles() {
+        // The no-straddle invariant `get` documents: at 3 bits, code 9 is
+        // the last in word 0 (bits 27..30, with 30..32 pad) and code 10 is
+        // the first in word 1 (bits 0..3). Both must decode whole from a
+        // single-word read, with distinctive adjacent values so a straddle
+        // (mixing word 0's pad bits into code 10, or truncating code 9)
+        // cannot go unnoticed.
+        let mut codes = vec![0u16; 25];
+        codes[9] = 0b101; // last slot of word 0
+        codes[10] = 0b110; // first slot of word 1
+        codes[19] = 0b011; // last slot of word 1
+        codes[20] = 0b111; // first slot of word 2
+        let p = PackedCodes::pack(&codes, 3);
+        for (i, &c) in codes.iter().enumerate() {
+            assert_eq!(p.get(i), c, "code {i}");
+        }
+        // Every stored width keeps off + bits <= 32 for the last slot of a
+        // word — the arithmetic fact behind the single-word read.
+        for bits in 1..=16u32 {
+            let per_word = 32 / bits;
+            assert!((per_word - 1) * bits + bits <= 32, "bits={bits} would straddle");
+        }
+        // The range decoders cross the same boundary identically.
+        let mut out = vec![0u16; 4];
+        p.unpack_range(8, &mut out);
+        assert_eq!(out, codes[8..12]);
+    }
+
+    #[test]
+    fn bitplane_round_trip_property() {
+        // Full-precision decode recovers the codes exactly; every prefix
+        // precision yields the codes' top bits (`code >> (bits - prec)`).
+        // Lengths are deliberately non-word-aligned (the `+ 1 + below`
+        // draw makes multiples of 32 rare), exercising the partial final
+        // word column of every plane.
+        testing::check("bitplane-roundtrip", 24, |rng| {
+            let bits = 2 + rng.below(3) as u32; // 2, 3, 4
+            let n = 1 + rng.below(300);
+            let max = 1usize << bits;
+            let codes: Vec<u16> = (0..n).map(|_| rng.below(max) as u16).collect();
+            let planes = BitPlanes::pack(&codes, bits);
+            testing::ensure(planes.to_vec(bits) == codes, "full-precision roundtrip")?;
+            for prec in 1..=bits {
+                let want: Vec<u16> = codes.iter().map(|&c| c >> (bits - prec)).collect();
+                testing::ensure(
+                    planes.to_vec(prec) == want,
+                    format!("prefix decode bits={bits} prec={prec} n={n}"),
+                )?;
+                let idx = rng.below(n);
+                testing::ensure(
+                    planes.get(idx, prec) == want[idx],
+                    format!("get({idx}, {prec})"),
+                )?;
+            }
+            testing::ensure(
+                planes.prefix_storage_bytes(1) * bits as usize == planes.storage_bytes(),
+                "plane prefix bytes",
+            )
+        });
+    }
+
+    #[test]
+    fn bitplane_unpack_map_f32_matches_staged_decode_property() {
+        // The fused LUT decode must agree with unpack_range + gather at
+        // every precision, start offset, and length — including runs that
+        // start mid-word-column and spill across columns.
+        testing::check("bitplane-map-f32", 30, |rng| {
+            let bits = 2 + rng.below(3) as u32;
+            let n = 8 + rng.below(300);
+            let codes: Vec<u16> = (0..n).map(|_| rng.below(1usize << bits) as u16).collect();
+            let planes = BitPlanes::pack(&codes, bits);
+            let prec = 1 + rng.below(bits as usize) as u32;
+            let lut: Vec<f32> = (0..1usize << prec).map(|_| rng.normal_f32()).collect();
+            let start = rng.below(n);
+            let len = rng.below(n - start + 1);
+            let mut staged = vec![0u16; len];
+            planes.unpack_range(start, prec, &mut staged);
+            let want: Vec<f32> = staged.iter().map(|&c| lut[c as usize]).collect();
+            let mut got = vec![0.0f32; len];
+            planes.unpack_map_f32(start, prec, &lut, &mut got);
+            testing::ensure(got == want, format!("bits={bits} prec={prec} start={start} len={len}"))
+        });
+    }
+
+    #[test]
+    fn bitplane_storage_matches_element_packing_at_full_width() {
+        // Plane-major storage costs the same bits as element-major packing
+        // (modulo per-word padding): 64 4-bit codes = 32 bytes either way.
+        let codes: Vec<u16> = (0..64).map(|i| (i % 16) as u16).collect();
+        let planes = BitPlanes::pack(&codes, 4);
+        assert_eq!(planes.storage_bytes(), PackedCodes::pack(&codes, 4).storage_bytes());
+        assert_eq!(planes.prefix_storage_bytes(2), 16, "2-bit reads touch half the words");
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit in 2 bits")]
+    fn bitplane_pack_rejects_out_of_range_codes() {
+        BitPlanes::pack(&[1, 2, 7], 2);
     }
 }

@@ -2,12 +2,16 @@
 //! format. Embedding / norms / head stay fp32 (as in all the paper's
 //! weight-only kernels).
 
-use anyhow::{Context, Result};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
 
 use crate::fisher::CalibStats;
 use crate::model::forward::{Block, LinearOp, NativeModel};
 use crate::model::ParamStore;
-use crate::quant::formats::{LutLinear, TrellisLinear, UniformScalarLinear, VqLinear};
+use crate::quant::formats::{
+    AnyPrecArtifact, AnyPrecisionLinear, LutLinear, TrellisLinear, UniformScalarLinear, VqLinear,
+};
 use crate::quant::gptq::gptq_with_grid;
 use crate::quant::gptvq::{gptvq_vq_quantize, GptvqVq};
 use crate::quant::grid::UniformGrid;
@@ -28,6 +32,9 @@ pub enum ServeFormat {
     Vector,
     /// QTIP-style trellis decode.
     Trellis,
+    /// Bit-plane non-uniform LUT (Any-Precision-LLM): one stored artifact
+    /// serves every precision 2..=bits by reading a plane prefix.
+    AnyPrecision,
 }
 
 impl ServeFormat {
@@ -38,7 +45,22 @@ impl ServeFormat {
             ServeFormat::NonUniformScalar => "nonuniform",
             ServeFormat::Vector => "vector",
             ServeFormat::Trellis => "trellis",
+            ServeFormat::AnyPrecision => "anyprec",
         }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fp32" => Self::Fp32,
+            "uniform" => Self::UniformScalar,
+            "nonuniform" => Self::NonUniformScalar,
+            "vector" => Self::Vector,
+            "trellis" => Self::Trellis,
+            "anyprec" => Self::AnyPrecision,
+            other => bail!(
+                "unknown serve format `{other}` (expected fp32|uniform|nonuniform|vector|trellis|anyprec)"
+            ),
+        })
     }
 }
 
@@ -95,6 +117,18 @@ pub fn build_serving_model(
                 let (_, codes, gen) = trellis_quantize(&h, w, &tcfg)?;
                 Box::new(TrellisLinear::new(&codes, gen, tcfg, w.rows))
             }
+            ServeFormat::AnyPrecision => {
+                // Full-precision view; `build_serving_set` is the
+                // multi-precision entry point that shares artifacts.
+                let res = lnq_quantize(&h, w, &Lnq { t_iters: 1, ..Lnq::new(bits) })?;
+                Box::new(AnyPrecisionLinear::new(
+                    &res.codes.context("lnq codes")?,
+                    res.codebooks.context("lnq codebooks")?,
+                    bits,
+                    w.rows,
+                    w.cols,
+                ))
+            }
         })
     };
 
@@ -121,6 +155,154 @@ pub fn build_serving_model(
         cfg,
         blocks,
     })
+}
+
+/// The set of serving models one `gq serve` process exposes: one
+/// `(precision, NativeModel)` entry per supported decode precision,
+/// ascending. Fixed-precision formats have exactly one entry; the
+/// `anyprec` format has one per precision 2..=bits, all of whose linears
+/// share the SAME `Arc<AnyPrecArtifact>` weight storage — the set costs
+/// one artifact plus per-view structs, not N quantized models.
+pub struct ModelSet {
+    format: ServeFormat,
+    models: Vec<(u8, NativeModel)>,
+}
+
+impl ModelSet {
+    /// Wrap a single fixed-precision model (also used by tests that need
+    /// a set without running a quantizer).
+    pub fn single(format: ServeFormat, precision: u8, model: NativeModel) -> Self {
+        ModelSet { format, models: vec![(precision, model)] }
+    }
+
+    pub fn format(&self) -> ServeFormat {
+        self.format
+    }
+
+    /// Supported precisions, ascending; the last is the native one.
+    pub fn precisions(&self) -> Vec<u8> {
+        self.models.iter().map(|(p, _)| *p).collect()
+    }
+
+    pub fn supports(&self, prec: u8) -> bool {
+        self.models.iter().any(|(p, _)| *p == prec)
+    }
+
+    pub fn get(&self, prec: u8) -> Option<&NativeModel> {
+        self.models.iter().find(|(p, _)| *p == prec).map(|(_, m)| m)
+    }
+
+    /// The highest (native) precision in the set.
+    pub fn native_precision(&self) -> u8 {
+        self.models.last().expect("ModelSet is never empty").0
+    }
+
+    /// The native-precision model — the default when no precision is
+    /// requested and the benchmark-mode model.
+    pub fn native_model(&self) -> &NativeModel {
+        &self.models.last().expect("ModelSet is never empty").1
+    }
+
+    /// Borrowed `(precision, model)` bank for `Scheduler::with_bank`.
+    pub fn bank(&self) -> Vec<(u8, &NativeModel)> {
+        self.models.iter().map(|(p, m)| (*p, m)).collect()
+    }
+
+    /// Resolve a configured precision knob (0 = native) against the set.
+    pub fn resolve(&self, prec: u8) -> Result<u8> {
+        if prec == 0 {
+            return Ok(self.native_precision());
+        }
+        if !self.supports(prec) {
+            bail!(
+                "precision {prec} not served by format `{}` (supported: {:?})",
+                self.format.name(),
+                self.precisions()
+            );
+        }
+        Ok(prec)
+    }
+}
+
+/// Build the full serving set for a format. Fixed-precision formats wrap
+/// `build_serving_model` in a one-entry set; `anyprec` quantizes each
+/// linear ONCE, wraps the codes in a shared bit-plane artifact, and
+/// assembles one model per precision 2..=bits whose views alias it.
+pub fn build_serving_set(
+    ps: &ParamStore,
+    stats: Option<&CalibStats>,
+    format: ServeFormat,
+    bits: u32,
+) -> Result<ModelSet> {
+    if format != ServeFormat::AnyPrecision {
+        let prec = if format == ServeFormat::Fp32 { 32 } else { bits as u8 };
+        let model = build_serving_model(ps, stats, format, bits)?;
+        return Ok(ModelSet::single(format, prec, model));
+    }
+    if !(2..=8).contains(&bits) {
+        bail!("anyprec serving needs bits in 2..=8, got {bits}");
+    }
+    let cfg = ps.cfg.clone();
+    let quantize = |name: &str| -> Result<Arc<AnyPrecArtifact>> {
+        let w = ps.get(name);
+        let h = match stats.and_then(|s| s.layer(name)) {
+            Some(ls) => ls.plain_hessian().clone(),
+            None => Mat::eye(w.rows),
+        };
+        let res = lnq_quantize(&h, w, &Lnq { t_iters: 1, ..Lnq::new(bits) })?;
+        let cbs = res.codebooks.context("lnq codebooks")?;
+        Ok(Arc::new(AnyPrecArtifact::new(
+            &res.codes.context("lnq codes")?,
+            &cbs,
+            bits,
+            w.rows,
+            w.cols,
+        )))
+    };
+    let precs: Vec<u8> = (2..=bits as u8).collect();
+    let mut blocks: Vec<Vec<Block>> =
+        precs.iter().map(|_| Vec::with_capacity(cfg.n_layers)).collect();
+    const LINEARS: [&str; 7] = ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"];
+    for l in 0..cfg.n_layers {
+        let p = format!("layers.{l}.");
+        let arts = LINEARS
+            .iter()
+            .map(|n| quantize(&format!("{p}{n}")))
+            .collect::<Result<Vec<_>>>()?;
+        for (bi, &prec) in precs.iter().enumerate() {
+            let view = |k: usize| -> Box<dyn LinearOp> {
+                Box::new(AnyPrecisionLinear::from_artifact(arts[k].clone(), prec as u32))
+            };
+            blocks[bi].push(Block {
+                attn_norm: ps.get(&format!("{p}attn_norm")).data.clone(),
+                mlp_norm: ps.get(&format!("{p}mlp_norm")).data.clone(),
+                wq: view(0),
+                wk: view(1),
+                wv: view(2),
+                wo: view(3),
+                wgate: view(4),
+                wup: view(5),
+                wdown: view(6),
+            });
+        }
+    }
+    let models = precs
+        .iter()
+        .zip(blocks)
+        .map(|(&prec, blocks)| {
+            (
+                prec,
+                NativeModel {
+                    tok_emb: ps.get("tok_emb").clone(),
+                    head: Box::new(ps.get("head").clone()),
+                    final_norm: ps.get("final_norm").data.clone(),
+                    cfg: cfg.clone(),
+                    blocks,
+                },
+            )
+        })
+        .collect();
+    Ok(ModelSet { format, models })
 }
 
 #[cfg(test)]
@@ -162,6 +344,70 @@ mod tests {
         let fp = build_serving_model(&ps, None, ServeFormat::Fp32, 16).unwrap();
         let q = build_serving_model(&ps, None, ServeFormat::UniformScalar, 2).unwrap();
         assert!(q.linear_storage_bytes() * 8 < fp.linear_storage_bytes());
+    }
+
+    #[test]
+    fn anyprec_set_shares_artifacts_and_matches_lut_at_full_precision() {
+        let ps = params();
+        let toks = [1u32, 5, 9, 2];
+        let set = build_serving_set(&ps, None, ServeFormat::AnyPrecision, 4).unwrap();
+        assert_eq!(set.precisions(), vec![2, 3, 4]);
+        assert_eq!(set.native_precision(), 4);
+        assert!(set.supports(3) && !set.supports(5));
+        // Acceptance: the 4-bit view is bit-identical to the fixed
+        // NonUniformScalar model (same lnq run, permuted-gather tables).
+        let lut = build_serving_model(&ps, None, ServeFormat::NonUniformScalar, 4).unwrap();
+        let want = lut.forward_sequence(&toks);
+        let got = set.get(4).unwrap().forward_sequence(&toks);
+        assert_eq!(got.data, want.data, "anyprec@4 logits != LutLinear logits");
+        // Coarser views decode (finite), differ from the full view, and
+        // cost no extra weight storage (views alias one artifact).
+        for prec in [2u8, 3] {
+            let logits = set.get(prec).unwrap().forward_sequence(&toks);
+            assert!(logits.data.iter().all(|v| v.is_finite()), "{prec}-bit non-finite");
+            assert_ne!(logits.data, want.data, "{prec}-bit view should be coarser");
+            assert_eq!(
+                set.get(prec).unwrap().linear_storage_bytes(),
+                lut_storage_of(&set),
+                "every view reports the one shared artifact"
+            );
+        }
+        // Precision resolution: 0 = native, unsupported is an error.
+        assert_eq!(set.resolve(0).unwrap(), 4);
+        assert_eq!(set.resolve(2).unwrap(), 2);
+        assert!(set.resolve(5).is_err());
+    }
+
+    fn lut_storage_of(set: &ModelSet) -> usize {
+        set.native_model().linear_storage_bytes()
+    }
+
+    #[test]
+    fn fixed_formats_build_single_entry_sets() {
+        let ps = params();
+        let set = build_serving_set(&ps, None, ServeFormat::Fp32, 16).unwrap();
+        assert_eq!(set.precisions(), vec![32]);
+        assert_eq!(set.format().name(), "fp32");
+        let set = build_serving_set(&ps, None, ServeFormat::UniformScalar, 3).unwrap();
+        assert_eq!(set.precisions(), vec![3]);
+        assert_eq!(set.resolve(0).unwrap(), 3);
+        assert!(set.resolve(2).is_err());
+        assert!(build_serving_set(&ps, None, ServeFormat::AnyPrecision, 1).is_err());
+    }
+
+    #[test]
+    fn serve_format_parse_round_trips() {
+        for f in [
+            ServeFormat::Fp32,
+            ServeFormat::UniformScalar,
+            ServeFormat::NonUniformScalar,
+            ServeFormat::Vector,
+            ServeFormat::Trellis,
+            ServeFormat::AnyPrecision,
+        ] {
+            assert_eq!(ServeFormat::parse(f.name()).unwrap(), f);
+        }
+        assert!(ServeFormat::parse("int8").is_err());
     }
 
     #[test]

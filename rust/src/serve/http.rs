@@ -36,24 +36,45 @@
 //! logits, engine stalls, slow socket writes/reads, and spurious KV
 //! exhaustion for the chaos suite.
 //!
-//! ## Endpoints
+//! ## v1 endpoints
 //!
 //! * `POST /v1/completions` — body `{"prompt": [u32 token ids],
-//!   "max_tokens": n, "stream": bool, "timeout_ms": n}`. Non-streaming
-//!   responses return the full token list plus per-request metrics;
-//!   `"stream": true` switches to chunked transfer encoding carrying SSE
-//!   events (`data: {"id":.., "token":..}` per generated token, then a
-//!   `"done":true` summary event, then the `data: [DONE]` terminator).
+//!   "max_tokens": n, "stream": bool, "timeout_ms": n, "precision": bits}`.
+//!   The server binds to a [`super::builder::ModelSet`]: `"precision"`
+//!   picks which bank entry decodes the request (omit it, or send 0, for
+//!   the server default; an unsupported value answers 400 listing the
+//!   supported set). Non-streaming responses return the full token list,
+//!   the effective `"precision"`, and per-request metrics; `"stream":
+//!   true` switches to chunked transfer encoding carrying SSE events
+//!   (`data: {"id":.., "token":..}` per generated token, then a
+//!   `"done":true` summary event — which also carries `"precision"` —
+//!   then the `data: [DONE]` terminator).
+//! * `GET /v1/capabilities` — what this server can do before the first
+//!   completion is sent: loaded serving format, supported precisions with
+//!   the default and downshift floor, KV dtype, and the active admission
+//!   knobs (prefix cache, KV budget, batch/queue caps, request caps).
 //! * `GET /metrics` — queue depth, active lanes,
-//!   completion/rejection/cancellation/timeout/failure counters, engine
-//!   restarts, KV governance gauges (`kv_budget_bytes`, `kv_pressure`,
-//!   `brownouts`, `preemptions`, `shed_predicted_deadline`,
+//!   completion/rejection/cancellation/timeout/failure counters (plus
+//!   `completed_by_precision`, keyed by bank label), engine restarts, KV
+//!   governance gauges (`kv_budget_bytes`, `kv_pressure`, `brownouts`,
+//!   `precision_downshifts`, `preemptions`, `shed_predicted_deadline`,
 //!   `predicted_wait_ms`), prefix-cache gauges (`prefix_hits`,
 //!   `prefill_tokens_saved`, `prefix_cached_pages`), and TTFT /
 //!   per-token / queue-wait percentiles over a sliding sample window.
 //! * `GET /healthz` — truthful engine liveness (200 `ok` while the engine
 //!   thread serves, 503 `engine dead` once the restart budget is spent),
 //!   restart count, and the served model's shape.
+//!
+//! ## Error schema and the legacy fallback
+//!
+//! Every error status (400/404/405/429/500/503) carries one body shape:
+//! `{"error": {"type": .., "message": .., "retry_after_s": n}}`, where
+//! `type` is a stable machine-readable tag (`invalid_request`,
+//! `overloaded`, `unavailable`, `engine_fault`, ...) and `retry_after_s`
+//! is nonzero exactly when a `Retry-After` header accompanies it. Clients
+//! written against the pre-v1 plain-string body opt back into it per
+//! request with `Accept: application/vnd.gq.v0+json`, which selects the
+//! legacy `{"error": "message"}` rendering of the same information.
 //!
 //! ## Admission control as HTTP semantics
 //!
@@ -65,15 +86,20 @@
 //! 0. **Cache shed** (free): cached-but-unreferenced prefix pages are
 //!    trimmed first — no client notices the engine giving back memory
 //!    that only made *future* requests faster.
-//! 1. **Brownout** (live KV above the low watermark): requests still
-//!    admit, but with `max_tokens` clamped — the 200 response carries
-//!    `"degraded": true` so clients can tell a voluntary `"length"`
-//!    finish from a shortened one.
-//! 2. **Preemption** (live KV above the high watermark): the supervisor
+//! 1. **Precision downshift** (live KV above the low watermark, floor
+//!    configured): admissions that did not pin a `"precision"` decode at
+//!    the floor precision instead — full `max_tokens`, not `degraded`,
+//!    visible only in the response's `"precision"` field and the
+//!    `precision_downshifts` counter.
+//! 2. **Brownout** (pressure persists, or the request pinned its
+//!    precision): requests still admit, but with `max_tokens` clamped —
+//!    the 200 response carries `"degraded": true` so clients can tell a
+//!    voluntary `"length"` finish from a shortened one.
+//! 3. **Preemption** (live KV above the high watermark): the supervisor
 //!    evicts the youngest lane and requeues it under its original
 //!    id/deadline; the client's connection stays open and replayed
 //!    tokens are suppressed, so it just looks slower.
-//! 3. **Shed** (last resort, the request is never enqueued): a full
+//! 4. **Shed** (last resort, the request is never enqueued): a full
 //!    admission queue (`ServeConfig::max_queued`), a request whose
 //!    worst-case KV cost can never fit under the budget's high
 //!    watermark, or a `timeout_ms` already smaller than the predicted
@@ -97,10 +123,10 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::cfg::ServeConfig;
-use crate::model::NativeModel;
 use crate::util::json::Json;
 use crate::util::{fault, percentile};
 
+use super::builder::ModelSet;
 use super::scheduler::{retry_after_secs, FinishReason, FinishedRequest};
 use super::supervisor::SupervisedEngine;
 
@@ -132,6 +158,9 @@ enum ToEngine {
         prompt: Vec<u32>,
         gen_tokens: usize,
         timeout_ms: Option<u64>,
+        /// Requested decode precision (`None`/`Some(0)` = server default;
+        /// an explicit bank label is pinned against the downshift rung).
+        precision: Option<u8>,
         reply: Sender<SubmitOutcome>,
     },
     /// Client disconnected (or explicitly aborted): evict the request and
@@ -184,6 +213,11 @@ struct Metrics {
     kv_pressure: f64,
     /// Admissions clamped to the brownout token budget.
     brownouts: u64,
+    /// Admissions moved to the floor precision under KV pressure.
+    precision_downshifts: u64,
+    /// Completions per effective decode precision (bank label → count);
+    /// the values sum to `completed`.
+    completed_by_precision: Vec<(u8, u64)>,
     /// Lanes preempted under KV pressure.
     preemptions: u64,
     /// Admissions that mapped at least one cached prefix chunk.
@@ -222,6 +256,15 @@ struct Shared {
     kv_dtype: &'static str,
     /// KV governance budget (0 = off); static for the server's lifetime.
     kv_budget_bytes: usize,
+    /// Loaded serving format (capabilities report).
+    format_name: &'static str,
+    /// Supported decode precisions (bank labels, ascending).
+    precisions: Vec<u8>,
+    /// Bank label unspecified requests decode at.
+    default_precision: u8,
+    /// Downshift floor (0 = rung disabled).
+    floor_precision: u8,
+    prefix_cache: bool,
     metrics: Mutex<Metrics>,
 }
 
@@ -237,6 +280,26 @@ impl Shared {
             .with("vocab", self.vocab)
     }
 
+    /// `GET /v1/capabilities`: everything a client needs to know before
+    /// its first completion — all static for the server's lifetime.
+    fn capabilities_json(&self) -> Json {
+        let precs: Vec<Json> = self.precisions.iter().map(|&p| Json::from(p as u32)).collect();
+        Json::object()
+            .with("api", "v1")
+            .with("model", self.model_name.as_str())
+            .with("format", self.format_name)
+            .with("precisions", precs)
+            .with("default_precision", self.default_precision as u32)
+            .with("precision_floor", self.floor_precision as u32)
+            .with("kv_dtype", self.kv_dtype)
+            .with("kv_budget_bytes", self.kv_budget_bytes)
+            .with("prefix_cache", self.prefix_cache)
+            .with("max_batch", self.max_batch)
+            .with("max_queued", self.max_queued)
+            .with("max_gen_tokens", MAX_GEN_TOKENS)
+            .with("max_timeout_ms", MAX_TIMEOUT_MS)
+    }
+
     fn metrics_json(&self) -> Json {
         fn pctl(xs: &[f64]) -> Json {
             Json::object()
@@ -248,10 +311,17 @@ impl Shared {
         // over 4096-sample windows happens outside it, so a /metrics
         // poller cannot stall the engine thread's per-step lock takes.
         let m = self.metrics.lock().unwrap().clone();
+        let mut by_prec = Json::object();
+        let mut pairs = m.completed_by_precision.clone();
+        pairs.sort_unstable();
+        for (p, c) in pairs {
+            by_prec = by_prec.with(&p.to_string(), c);
+        }
         Json::object()
             .with("queued", m.queued)
             .with("active", m.active)
             .with("completed", m.completed)
+            .with("completed_by_precision", by_prec)
             .with("rejected", m.rejected)
             .with("cancelled", m.cancelled)
             .with("timed_out", m.timed_out)
@@ -267,6 +337,7 @@ impl Shared {
             .with("kv_budget_bytes", self.kv_budget_bytes)
             .with("kv_pressure", m.kv_pressure)
             .with("brownouts", m.brownouts)
+            .with("precision_downshifts", m.precision_downshifts)
             .with("preemptions", m.preemptions)
             .with("prefix_hits", m.prefix_hits)
             .with("prefill_tokens_saved", m.prefill_tokens_saved)
@@ -290,21 +361,35 @@ pub struct HttpServer {
 
 impl HttpServer {
     /// Bind `addr` (e.g. `127.0.0.1:8080`; port 0 picks a free port — read
-    /// it back from [`HttpServer::local_addr`]) and start serving `model`
-    /// under the scheduler knobs in `cfg`.
-    pub fn bind(model: Arc<NativeModel>, cfg: ServeConfig, addr: &str) -> Result<HttpServer> {
+    /// it back from [`HttpServer::local_addr`]) and start serving the
+    /// model set under the scheduler knobs in `cfg`. Every precision in
+    /// `set` is servable per request; `cfg.default_precision` (0 = the
+    /// set's native precision) picks the default and
+    /// `cfg.precision_floor` arms the load-adaptive downshift rung.
+    pub fn bind(set: Arc<ModelSet>, cfg: ServeConfig, addr: &str) -> Result<HttpServer> {
+        let default_prec = set.resolve(cfg.default_precision).context("serve.precision")?;
+        let floor_prec = match cfg.precision_floor {
+            0 => 0,
+            p => set.resolve(p).context("serve.precision_floor")?,
+        };
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let addr = listener.local_addr().context("reading bound address")?;
+        let native = set.native_model();
         let shared = Arc::new(Shared {
             shutdown: AtomicBool::new(false),
             engine_dead: AtomicBool::new(false),
             conns: AtomicUsize::new(0),
-            model_name: model.cfg.name.clone(),
-            vocab: model.cfg.vocab,
+            model_name: native.cfg.name.clone(),
+            vocab: native.cfg.vocab,
             max_batch: cfg.max_batch.max(1),
             max_queued: cfg.max_queued.max(1),
             kv_dtype: cfg.kv_dtype.name(),
             kv_budget_bytes: cfg.kv_budget_bytes,
+            format_name: set.format().name(),
+            precisions: set.precisions(),
+            default_precision: default_prec,
+            floor_precision: floor_prec,
+            prefix_cache: cfg.prefix_cache,
             metrics: Mutex::new(Metrics::default()),
         });
         let (tx, rx) = mpsc::channel();
@@ -312,7 +397,7 @@ impl HttpServer {
             let shared = shared.clone();
             std::thread::Builder::new()
                 .name("gq-http-engine".into())
-                .spawn(move || engine_loop(model, cfg, rx, shared))
+                .spawn(move || engine_loop(set, cfg, default_prec, floor_prec, rx, shared))
                 .context("spawning engine thread")?
         };
         let accept = {
@@ -363,12 +448,14 @@ impl HttpServer {
 // Engine thread
 
 fn engine_loop(
-    model: Arc<NativeModel>,
+    set: Arc<ModelSet>,
     cfg: ServeConfig,
+    default_prec: u8,
+    floor_prec: u8,
     rx: Receiver<ToEngine>,
     shared: Arc<Shared>,
 ) {
-    let mut engine = SupervisedEngine::new(&model, cfg);
+    let mut engine = SupervisedEngine::with_bank(set.bank(), cfg, default_prec, floor_prec);
     let mut sinks: HashMap<u64, Sender<TokenEvent>> = HashMap::new();
     // Reused scratch for ids whose consumers hung up mid-stream.
     let mut hangups: Vec<u64> = Vec::new();
@@ -431,6 +518,11 @@ fn engine_loop(
                 match fr.finish {
                     FinishReason::Length => {
                         m.completed += 1;
+                        match m.completed_by_precision.iter_mut().find(|(p, _)| *p == fr.precision)
+                        {
+                            Some((_, c)) => *c += 1,
+                            None => m.completed_by_precision.push((fr.precision, 1)),
+                        }
                         push_capped(&mut m.ttft_ms, fr.metrics.ttft_ms);
                         push_capped(&mut m.queue_wait_ms, fr.metrics.queue_wait_ms);
                         for &t in &fr.metrics.token_ms {
@@ -471,6 +563,7 @@ fn publish_gauges(shared: &Shared, engine: &SupervisedEngine<'_>) {
     m.kv_pressure = kv_pressure;
     m.predicted_wait_ms = predicted_wait;
     m.brownouts = brownouts;
+    m.precision_downshifts = engine.precision_downshifts();
     m.preemptions = preemptions;
     m.prefix_hits = engine.prefix_hits();
     m.prefill_tokens_saved = engine.prefill_tokens_saved();
@@ -493,7 +586,7 @@ fn handle_msg(
             }
             sinks.remove(&id);
         }
-        ToEngine::Submit { prompt, gen_tokens, timeout_ms, reply } => {
+        ToEngine::Submit { prompt, gen_tokens, timeout_ms, precision, reply } => {
             // The shed ladder's last rung: all three checks answer 429
             // with the drain-rate-derived Retry-After, before anything
             // is enqueued or allocated.
@@ -502,6 +595,15 @@ fn handle_msg(
                 let _ = reply.send(SubmitOutcome::ShuttingDown);
             } else if !engine.alive() {
                 let _ = reply.send(SubmitOutcome::EngineDead);
+            } else if precision.is_some_and(|p| p != 0 && !engine.precisions().contains(&p)) {
+                // An unservable precision is a client bug (400), not
+                // overload: check it before the shed ladder so it cannot
+                // masquerade as a 429 under pressure.
+                let _ = reply.send(SubmitOutcome::Invalid(format!(
+                    "precision {} not served (supported: {:?})",
+                    precision.unwrap_or(0),
+                    engine.precisions()
+                )));
             } else if engine.queued() >= shared.max_queued {
                 shared.metrics.lock().unwrap().rejected += 1;
                 let _ = reply.send(SubmitOutcome::Overloaded {
@@ -512,7 +614,7 @@ fn handle_msg(
                     ),
                     retry_after_secs: retry,
                 });
-            } else if engine.kv_submit_refused_for(&prompt, gen_tokens) {
+            } else if engine.kv_submit_refused_for(&prompt, gen_tokens, precision) {
                 shared.metrics.lock().unwrap().rejected += 1;
                 let _ = reply.send(SubmitOutcome::Overloaded {
                     msg: format!(
@@ -541,7 +643,7 @@ fn handle_msg(
                     retry_after_secs: retry,
                 });
             } else {
-                match engine.submit(&prompt, gen_tokens, timeout_ms) {
+                match engine.submit_prec(&prompt, gen_tokens, timeout_ms, precision) {
                     Ok(id) => {
                         let (etx, erx) = mpsc::channel();
                         sinks.insert(id, etx);
@@ -689,19 +791,74 @@ fn write_json(w: &mut impl Write, status: u16, reason: &str, doc: &Json) -> std:
     write_response(w, status, reason, "application/json", &[], &doc.encode())
 }
 
-fn write_error_extra(
+/// Error-body wire format, selected per request from the `Accept` header.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Wire {
+    /// v1 (default): structured `{"error": {"type", "message",
+    /// "retry_after_s"}}` envelope.
+    V1,
+    /// Pre-v1 plain-string body `{"error": "message"}`, kept for old
+    /// clients behind `Accept: application/vnd.gq.v0+json`.
+    V0,
+}
+
+fn wire_of(headers: &[(String, String)]) -> Wire {
+    match header(headers, "accept") {
+        Some(a) if a.contains("application/vnd.gq.v0+json") => Wire::V0,
+        _ => Wire::V1,
+    }
+}
+
+/// One rendering path for every error status: the same `(type, message,
+/// retry_after_s)` triple rendered as the v1 envelope or the legacy
+/// string. `retry_after_s` is nonzero exactly when the response carries a
+/// `Retry-After` header.
+fn error_body(wire: Wire, etype: &str, msg: &str, retry_after_s: u64) -> String {
+    match wire {
+        Wire::V0 => Json::object().with("error", msg).encode(),
+        Wire::V1 => Json::object()
+            .with(
+                "error",
+                Json::object()
+                    .with("type", etype)
+                    .with("message", msg)
+                    .with("retry_after_s", retry_after_s),
+            )
+            .encode(),
+    }
+}
+
+fn write_error(
     w: &mut impl Write,
     status: u16,
     reason: &str,
-    extra: &[(&str, &str)],
+    wire: Wire,
+    etype: &str,
     msg: &str,
 ) -> std::io::Result<()> {
-    let body = Json::object().with("error", msg).encode();
-    write_response(w, status, reason, "application/json", extra, &body)
+    write_response(w, status, reason, "application/json", &[], &error_body(wire, etype, msg, 0))
 }
 
-fn write_error(w: &mut impl Write, status: u16, reason: &str, msg: &str) -> std::io::Result<()> {
-    write_error_extra(w, status, reason, &[], msg)
+/// The 429 path: the computed Retry-After rides both as the header and as
+/// `retry_after_s` inside the v1 envelope.
+fn write_error_retry(
+    w: &mut impl Write,
+    status: u16,
+    reason: &str,
+    wire: Wire,
+    etype: &str,
+    retry_after_s: u64,
+    msg: &str,
+) -> std::io::Result<()> {
+    let retry = retry_after_s.to_string();
+    write_response(
+        w,
+        status,
+        reason,
+        "application/json",
+        &[("Retry-After", &retry)],
+        &error_body(wire, etype, msg, retry_after_s),
+    )
 }
 
 fn write_chunk(w: &mut impl Write, payload: &str) -> std::io::Result<()> {
@@ -729,10 +886,14 @@ fn handle_conn(stream: TcpStream, tx: Sender<ToEngine>, shared: Arc<Shared>) {
     let req = match read_request(&mut reader, &mut writer) {
         Ok(r) => r,
         Err(e) => {
-            let _ = write_error(&mut writer, 400, "Bad Request", &e.to_string());
+            // No parsed headers to negotiate against: the v1 envelope is
+            // the default wire format.
+            let _ =
+                write_error(&mut writer, 400, "Bad Request", Wire::V1, "invalid_request", &e.to_string());
             return;
         }
     };
+    let wire = wire_of(&req.headers);
     let _ = match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             let doc = shared.health_json();
@@ -743,17 +904,26 @@ fn handle_conn(stream: TcpStream, tx: Sender<ToEngine>, shared: Arc<Shared>) {
             }
         }
         ("GET", "/metrics") => write_json(&mut writer, 200, "OK", &shared.metrics_json()),
-        ("POST", "/v1/completions") => handle_completion(&mut writer, &req.body, &tx),
-        (_, "/healthz") | (_, "/metrics") | (_, "/v1/completions") => write_error(
-            &mut writer,
-            405,
-            "Method Not Allowed",
-            &format!("{} not supported on {}", req.method, req.path),
-        ),
+        ("GET", "/v1/capabilities") => {
+            write_json(&mut writer, 200, "OK", &shared.capabilities_json())
+        }
+        ("POST", "/v1/completions") => handle_completion(&mut writer, &req.body, &tx, wire),
+        (_, "/healthz") | (_, "/metrics") | (_, "/v1/completions") | (_, "/v1/capabilities") => {
+            write_error(
+                &mut writer,
+                405,
+                "Method Not Allowed",
+                wire,
+                "method_not_allowed",
+                &format!("{} not supported on {}", req.method, req.path),
+            )
+        }
         _ => write_error(
             &mut writer,
             404,
             "Not Found",
+            wire,
+            "not_found",
             &format!("no route for {} {}", req.method, req.path),
         ),
     };
@@ -766,6 +936,9 @@ struct CompletionReq {
     /// Per-request wall-clock budget; overrides the server's
     /// `request_timeout_ms` default.
     timeout_ms: Option<u64>,
+    /// Requested decode precision in bits (`None`/`Some(0)` = server
+    /// default). Validated against the served bank at submit time.
+    precision: Option<u8>,
 }
 
 /// Longest accepted per-request `timeout_ms` (24h) — anything larger is a
@@ -814,7 +987,17 @@ fn parse_completion(body: &[u8]) -> Result<CompletionReq> {
             Some(n)
         }
     };
-    Ok(CompletionReq { prompt: toks, max_tokens, stream, timeout_ms })
+    let precision = match doc.get("precision") {
+        None => None,
+        Some(p) => {
+            let n = p.as_u64().context("`precision` must be a non-negative integer (bits)")?;
+            if n > 32 {
+                bail!("precision {n} out of range (bits, 0 = server default)");
+            }
+            Some(n as u8)
+        }
+    };
+    Ok(CompletionReq { prompt: toks, max_tokens, stream, timeout_ms, precision })
 }
 
 fn request_metrics_json(fr: &FinishedRequest) -> Json {
@@ -830,42 +1013,63 @@ fn handle_completion(
     w: &mut TcpStream,
     body: &[u8],
     tx: &Sender<ToEngine>,
+    wire: Wire,
 ) -> std::io::Result<()> {
     let req = match parse_completion(body) {
         Ok(r) => r,
-        Err(e) => return write_error(w, 400, "Bad Request", &e.to_string()),
+        Err(e) => return write_error(w, 400, "Bad Request", wire, "invalid_request", &e.to_string()),
     };
     let (rtx, rrx) = mpsc::channel();
     let submit = ToEngine::Submit {
         prompt: req.prompt,
         gen_tokens: req.max_tokens,
         timeout_ms: req.timeout_ms,
+        precision: req.precision,
         reply: rtx,
     };
     if tx.send(submit).is_err() {
-        return write_error(w, 503, "Service Unavailable", "engine stopped");
+        return write_error(w, 503, "Service Unavailable", wire, "unavailable", "engine stopped");
     }
     let outcome = match rrx.recv() {
         Ok(o) => o,
-        Err(_) => return write_error(w, 503, "Service Unavailable", "engine stopped"),
+        Err(_) => {
+            return write_error(w, 503, "Service Unavailable", wire, "unavailable", "engine stopped")
+        }
     };
     match outcome {
-        SubmitOutcome::Overloaded { msg, retry_after_secs } => {
-            let retry = retry_after_secs.to_string();
-            write_error_extra(w, 429, "Too Many Requests", &[("Retry-After", &retry)], &msg)
+        SubmitOutcome::Overloaded { msg, retry_after_secs } => write_error_retry(
+            w,
+            429,
+            "Too Many Requests",
+            wire,
+            "overloaded",
+            retry_after_secs,
+            &msg,
+        ),
+        SubmitOutcome::Invalid(msg) => {
+            write_error(w, 400, "Bad Request", wire, "invalid_request", &msg)
         }
-        SubmitOutcome::Invalid(msg) => write_error(w, 400, "Bad Request", &msg),
-        SubmitOutcome::ShuttingDown => {
-            write_error(w, 503, "Service Unavailable", "server is shutting down")
-        }
-        SubmitOutcome::EngineDead => {
-            write_error(w, 503, "Service Unavailable", "engine dead: restart budget exhausted")
-        }
+        SubmitOutcome::ShuttingDown => write_error(
+            w,
+            503,
+            "Service Unavailable",
+            wire,
+            "unavailable",
+            "server is shutting down",
+        ),
+        SubmitOutcome::EngineDead => write_error(
+            w,
+            503,
+            "Service Unavailable",
+            wire,
+            "unavailable",
+            "engine dead: restart budget exhausted",
+        ),
         SubmitOutcome::Accepted { id, events } => {
             if req.stream {
                 stream_completion(w, id, events, tx)
             } else {
-                blocking_completion(w, id, events, tx)
+                blocking_completion(w, id, events, tx, wire)
             }
         }
     }
@@ -901,6 +1105,7 @@ fn blocking_completion(
     id: u64,
     events: Receiver<TokenEvent>,
     tx: &Sender<ToEngine>,
+    wire: Wire,
 ) -> std::io::Result<()> {
     loop {
         match events.recv_timeout(DISCONNECT_POLL) {
@@ -912,12 +1117,13 @@ fn blocking_completion(
                     .with("tokens", toks)
                     .with("n_tokens", fr.tokens.len())
                     .with("finish_reason", fr.finish.name())
+                    .with("precision", fr.precision as u32)
                     .with("degraded", fr.degraded)
                     .with("metrics", request_metrics_json(&fr));
                 return write_json(w, 200, "OK", &doc);
             }
             Ok(TokenEvent::Failed(msg)) => {
-                return write_error(w, 500, "Internal Server Error", &msg);
+                return write_error(w, 500, "Internal Server Error", wire, "engine_fault", &msg);
             }
             Err(RecvTimeoutError::Timeout) => {
                 // No tokens yet: probe the socket so an abandoned request
@@ -928,7 +1134,14 @@ fn blocking_completion(
                 }
             }
             Err(RecvTimeoutError::Disconnected) => {
-                return write_error(w, 500, "Internal Server Error", "engine dropped request");
+                return write_error(
+                    w,
+                    500,
+                    "Internal Server Error",
+                    wire,
+                    "engine_fault",
+                    "engine dropped request",
+                );
             }
         }
     }
@@ -974,6 +1187,7 @@ fn stream_completion_inner(
                     .with("done", true)
                     .with("n_tokens", fr.tokens.len())
                     .with("finish_reason", fr.finish.name())
+                    .with("precision", fr.precision as u32)
                     .with("degraded", fr.degraded)
                     .with("metrics", request_metrics_json(&fr));
                 write_chunk(w, &format!("data: {}\n\n", done.encode()))?;
@@ -1149,18 +1363,61 @@ mod tests {
 
     #[test]
     fn response_writers_produce_wellformed_http() {
+        // v1 default: the structured envelope, with the Retry-After value
+        // mirrored into the body.
         let mut buf = Vec::new();
-        write_error(&mut buf, 429, "Too Many Requests", "queue full").unwrap();
+        write_error_retry(&mut buf, 429, "Too Many Requests", Wire::V1, "overloaded", 7, "queue full")
+            .unwrap();
         let text = String::from_utf8(buf).unwrap();
         assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
         assert!(text.contains("Content-Type: application/json\r\n"));
-        assert!(text.ends_with("{\"error\":\"queue full\"}"));
-        let body_len = "{\"error\":\"queue full\"}".len();
-        assert!(text.contains(&format!("Content-Length: {body_len}\r\n")));
+        assert!(text.contains("Retry-After: 7\r\n"));
+        let body =
+            "{\"error\":{\"type\":\"overloaded\",\"message\":\"queue full\",\"retry_after_s\":7}}";
+        assert!(text.ends_with(body), "{text}");
+        assert!(text.contains(&format!("Content-Length: {}\r\n", body.len())));
+
+        // Legacy wire: same information, pre-v1 plain-string body.
+        let mut buf = Vec::new();
+        write_error(&mut buf, 429, "Too Many Requests", Wire::V0, "overloaded", "queue full")
+            .unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.ends_with("{\"error\":\"queue full\"}"), "{text}");
 
         let mut buf = Vec::new();
         write_chunk(&mut buf, "data: hi\n\n").unwrap();
         finish_chunks(&mut buf).unwrap();
         assert_eq!(buf, b"a\r\ndata: hi\n\n\r\n0\r\n\r\n");
+    }
+
+    #[test]
+    fn accept_header_selects_the_error_wire() {
+        let v0 = vec![("accept".to_string(), "application/vnd.gq.v0+json".to_string())];
+        assert_eq!(wire_of(&v0), Wire::V0);
+        let v1 = vec![("accept".to_string(), "application/json".to_string())];
+        assert_eq!(wire_of(&v1), Wire::V1);
+        assert_eq!(wire_of(&[]), Wire::V1, "no Accept header means v1");
+        // A list mentioning the legacy type anywhere opts in.
+        let list =
+            vec![("accept".to_string(), "text/html, application/vnd.gq.v0+json".to_string())];
+        assert_eq!(wire_of(&list), Wire::V0);
+    }
+
+    #[test]
+    fn completion_precision_validation() {
+        let none = parse_completion(br#"{"prompt": [1]}"#).unwrap();
+        assert_eq!(none.precision, None, "absent means server default");
+        let zero = parse_completion(br#"{"prompt": [1], "precision": 0}"#).unwrap();
+        assert_eq!(zero.precision, Some(0), "0 is the explicit server-default spelling");
+        let some = parse_completion(br#"{"prompt": [1], "precision": 2}"#).unwrap();
+        assert_eq!(some.precision, Some(2));
+        for bad in [
+            &br#"{"prompt": [1], "precision": -3}"#[..],
+            &br#"{"prompt": [1], "precision": 33}"#[..],
+            &br#"{"prompt": [1], "precision": "4bit"}"#[..],
+            &br#"{"prompt": [1], "precision": 2.5}"#[..],
+        ] {
+            assert!(parse_completion(bad).is_err(), "{:?}", std::str::from_utf8(bad));
+        }
     }
 }

@@ -26,8 +26,10 @@
 //!   percentiles), and a streaming drain (`step_tokens`) exposing every
 //!   step's tokens as they are generated. With `kv_budget_bytes` set,
 //!   admission becomes cost-aware memory governance: worst-case KV page
-//!   cost gates admission under watermarks, brownouts clamp `max_tokens`
-//!   under pressure, and the measured drain rate feeds honest
+//!   cost gates admission under watermarks; under pressure, un-pinned
+//!   admissions first downshift to the floor decode precision (full
+//!   output, milder than any clamp), then brownouts clamp `max_tokens`,
+//!   and the measured drain rate feeds honest
 //!   `Retry-After`/predicted-wait backpressure. The [`prefix`] index
 //!   shares page-aligned prompt-prefix KV pages across requests
 //!   (copy-on-write; prefix hits skip their prefill compute), with
@@ -51,13 +53,20 @@
 //!   dependency-free HTTP/1.1 server whose connection threads feed a single
 //!   scheduler-owning engine thread over an mpsc channel. `POST
 //!   /v1/completions` serves blocking and SSE-streamed completions (greedy
-//!   tokens bit-identical to `generate_scheduled`), `GET /metrics` exposes
-//!   queue depth and TTFT/per-token percentiles, `GET /healthz` is the
-//!   liveness probe. Admission control maps to HTTP status codes: a full
-//!   `max_queued` queue answers 429, malformed bodies 400, and graceful
-//!   shutdown drains every in-flight lane before the threads join. CI's
-//!   `serve-e2e` job exercises all of this against the release binary.
-//! * **[`builder`]** — quantizes a checkpoint into any serving format.
+//!   tokens bit-identical to `generate_scheduled`) at a per-request
+//!   `"precision"`, `GET /v1/capabilities` reports the loaded format and
+//!   the supported precision set, `GET /metrics` exposes queue depth and
+//!   TTFT/per-token percentiles, `GET /healthz` is the liveness probe.
+//!   Admission control maps to HTTP status codes: a full `max_queued`
+//!   queue answers 429, malformed bodies 400 — all errors in a structured
+//!   v1 envelope (legacy plain-string bodies behind an `Accept`
+//!   fallback) — and graceful shutdown drains every in-flight lane before
+//!   the threads join. CI's `serve-e2e` job exercises all of this against
+//!   the release binary.
+//! * **[`builder`]** — quantizes a checkpoint into any serving format;
+//!   [`builder::ModelSet`] is the unit a server binds: one model per
+//!   served precision (the `anyprec` format's entries share one bit-plane
+//!   artifact, so 2/3/4-bit views cost one quantized model's storage).
 
 pub mod builder;
 pub mod engine;
@@ -66,7 +75,7 @@ pub(crate) mod prefix;
 pub mod scheduler;
 pub mod supervisor;
 
-pub use builder::{build_serving_model, ServeFormat};
+pub use builder::{build_serving_model, build_serving_set, ModelSet, ServeFormat};
 pub use engine::{
     generate_batch, generate_per_sequence, generate_scheduled, generate_scheduled_streaming,
     random_prompts, ServeStats,

@@ -51,6 +51,21 @@
 //! preemption, or 429. Greedy outputs are bit-identical with the cache
 //! on or off: cached pages hold exactly the values the lane's own
 //! prefill would have produced (deterministic arithmetic, per dtype).
+//!
+//! **Per-request precision.** [`Scheduler::with_bank`] accepts a bank of
+//! `(precision, model)` pairs — e.g. the 2/3/4-bit views of one
+//! any-precision artifact — and every request carries a decode precision
+//! (its lane steps through that precision's model). Uniform-precision
+//! steps keep the contiguous zero-allocation slab path; a mixed batch
+//! decodes per precision group (gathered `&mut` refs — the documented
+//! allocation cost of mixing). Between prefix-cache shedding and
+//! brownout sits a milder governance rung: above the low watermark,
+//! un-pinned admissions are *downshifted* to
+//! [`ServeConfig::precision_floor`] — full token budget, no `degraded`
+//! flag, counted in [`Scheduler::precision_downshifts`] — trading decode
+//! quality for full-length answers before any clamping. Prefix caches
+//! are kept per precision: KV pages produced by different-precision
+//! models never mix, so bit-identity holds per precision.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -180,6 +195,10 @@ pub struct FinishedRequest {
     /// clamped below what was asked for ([`BROWNOUT_MAX_TOKENS`]); HTTP
     /// responses surface this as `"degraded": true`.
     pub degraded: bool,
+    /// Decode precision the request was actually served at (bank label;
+    /// 0 on a single-model engine = the native model). Differs from the
+    /// requested precision when the downshift rung fired.
+    pub precision: u8,
 }
 
 /// Per-request knobs for [`Scheduler::submit_opts`].
@@ -197,6 +216,12 @@ pub struct SubmitOpts {
     /// queue-full check — they were admitted once already — and bump
     /// `next_id` past the id so fresh submissions never collide.
     pub id: Option<u64>,
+    /// Decode precision (a bank label from [`Scheduler::with_bank`]).
+    /// `None` or `Some(0)` takes the engine default. An explicit nonzero
+    /// precision is *pinned*: the adaptive downshift rung never moves it
+    /// (per-request choice is honored, and the supervisor's requeue path
+    /// relies on pinning for bit-identical replay after a preemption).
+    pub precision: Option<u8>,
 }
 
 struct Queued {
@@ -213,6 +238,10 @@ struct Queued {
     /// Prompt positions covered by cached prefix pages mapped at
     /// admission ([`PrefixIndex::lookup_into`]); prefill starts here.
     cached: usize,
+    /// Decode precision this request will be served at (bank label).
+    precision: u8,
+    /// Explicitly requested precision — exempt from the downshift rung.
+    pinned: bool,
 }
 
 struct Lane {
@@ -235,6 +264,10 @@ struct Lane {
     poisoned: bool,
     /// Admitted under brownout with a clamped token budget.
     degraded: bool,
+    /// Decode precision: this lane steps through the bank model carrying
+    /// this label (and donates its prefix KV only to that precision's
+    /// cache).
+    precision: u8,
 }
 
 /// The continuous-batching engine: admission queue + decode lane slab.
@@ -246,7 +279,17 @@ struct Lane {
 /// per-step reference vector and performs no heap allocation once the
 /// token/emission buffers are warm.
 pub struct Scheduler<'m> {
+    /// The default-precision model (vocab checks, arena geometry — every
+    /// bank entry shares the same `ModelConfig`).
     model: &'m NativeModel,
+    /// Precision bank, ascending by label. Single-model engines hold one
+    /// entry labelled 0 ("native"); any-precision engines hold the
+    /// 2/3/4-bit views of one shared artifact.
+    models: Vec<(u8, &'m NativeModel)>,
+    /// Bank label requests decode at when they don't ask for one.
+    default_prec: u8,
+    /// Downshift target under KV pressure (0 = rung disabled).
+    floor_prec: u8,
     pub cfg: ServeConfig,
     /// Worker threads for the scalar-prefill reference path (chunked
     /// prefill and decode steps are batched and column-shard on the pool
@@ -273,10 +316,12 @@ pub struct Scheduler<'m> {
     /// token/latency buffer capacity intact, so a warm admission performs
     /// no heap allocation (bounded — see [`LANE_POOL_MAX`]).
     lane_pool: Vec<Lane>,
-    /// Prompt-prefix KV page cache ([`ServeConfig::prefix_cache`];
-    /// `None` when disabled — every prefix branch collapses to the
-    /// uncached path).
-    prefix: Option<PrefixIndex>,
+    /// Prompt-prefix KV page caches, one per bank precision (KV pages
+    /// produced by different-precision models hold different values, so
+    /// they must never be mapped across precisions). Empty when
+    /// [`ServeConfig::prefix_cache`] is off — every prefix branch
+    /// collapses to the uncached path.
+    prefix: Vec<(u8, PrefixIndex)>,
     next_id: u64,
     steps: usize,
     lane_steps: usize,
@@ -284,6 +329,8 @@ pub struct Scheduler<'m> {
     brownouts: u64,
     /// Lanes preempted under KV pressure ([`Scheduler::preempt_youngest`]).
     preemptions: u64,
+    /// Admissions downshifted to the floor precision under pressure.
+    precision_downshifts: u64,
     /// EWMA of the batched decode step's wall time (ms) — the measured
     /// service rate behind `Retry-After` and predicted queue wait.
     step_ms_ewma: f64,
@@ -304,17 +351,69 @@ impl<'m> Scheduler<'m> {
         Self::with_workers(model, cfg, workers)
     }
 
-    pub fn with_workers(model: &'m NativeModel, mut cfg: ServeConfig, workers: usize) -> Self {
+    pub fn with_workers(model: &'m NativeModel, cfg: ServeConfig, workers: usize) -> Self {
+        // Single-model engine: one bank entry labelled 0 ("native"), no
+        // downshift floor — precision is a no-op and every path behaves
+        // exactly as before the bank existed.
+        Self::build(vec![(0, model)], cfg, workers, 0, 0)
+    }
+
+    /// Engine over a precision bank: `(label, model)` pairs — typically
+    /// the 2/3/4-bit views of one any-precision artifact. Requests decode
+    /// at `default_prec` unless they ask for another bank label; under KV
+    /// pressure un-pinned admissions downshift to `floor_prec` (0
+    /// disables the rung). Every bank model must share the default
+    /// model's config (same vocab / KV geometry — one arena serves all
+    /// lanes).
+    ///
+    /// Panics on an empty bank or on a default/floor label absent from
+    /// the bank — programmer errors the config layer rejects earlier.
+    pub fn with_bank(
+        bank: Vec<(u8, &'m NativeModel)>,
+        cfg: ServeConfig,
+        default_prec: u8,
+        floor_prec: u8,
+    ) -> Self {
+        let workers = cfg.resolved_workers();
+        Self::build(bank, cfg, workers, default_prec, floor_prec)
+    }
+
+    fn build(
+        mut models: Vec<(u8, &'m NativeModel)>,
+        mut cfg: ServeConfig,
+        workers: usize,
+        default_prec: u8,
+        floor_prec: u8,
+    ) -> Self {
+        assert!(!models.is_empty(), "scheduler needs at least one model");
+        models.sort_by_key(|(p, _)| *p);
+        let model = models
+            .iter()
+            .find(|(p, _)| *p == default_prec)
+            .map(|(_, m)| *m)
+            .expect("default precision must be a bank label");
+        assert!(
+            floor_prec == 0 || models.iter().any(|(p, _)| *p == floor_prec),
+            "floor precision must be a bank label"
+        );
         // Zero-width knobs are meaningless and (for max_queued) would make
         // every submit fail; config file / CLI layers reject them, and the
         // library layer clamps so a hand-built ServeConfig cannot wedge the
         // engine.
         cfg.max_batch = cfg.max_batch.max(1);
         cfg.max_queued = cfg.max_queued.max(1);
+        let prefix = if cfg.prefix_cache {
+            models.iter().map(|(p, _)| (*p, PrefixIndex::new())).collect()
+        } else {
+            Vec::new()
+        };
         Scheduler {
             arena: model.new_arena_with(cfg.kv_dtype),
-            prefix: cfg.prefix_cache.then(PrefixIndex::new),
+            prefix,
             model,
+            models,
+            default_prec,
+            floor_prec,
             cfg,
             workers: workers.max(1),
             epoch: Instant::now(),
@@ -333,6 +432,7 @@ impl<'m> Scheduler<'m> {
             lane_steps: 0,
             brownouts: 0,
             preemptions: 0,
+            precision_downshifts: 0,
             step_ms_ewma: 0.0,
             finished_per_step_ewma: 0.0,
         }
@@ -356,6 +456,66 @@ impl<'m> Scheduler<'m> {
         self.epoch.elapsed().as_secs_f64()
     }
 
+    /// Bank lookup as an associated fn so call sites can borrow just the
+    /// `models` field while other fields are mutably borrowed. The `&'m`
+    /// refs are `Copy`, so the returned model outlives the field borrow.
+    fn model_in(models: &[(u8, &'m NativeModel)], prec: u8) -> &'m NativeModel {
+        models
+            .iter()
+            .find(|(p, _)| *p == prec)
+            .map(|(_, m)| *m)
+            .unwrap_or_else(|| models.last().expect("bank is never empty").1)
+    }
+
+    fn model_for(&self, prec: u8) -> &'m NativeModel {
+        Self::model_in(&self.models, prec)
+    }
+
+    /// Bank labels served by this engine, ascending.
+    pub fn precisions(&self) -> Vec<u8> {
+        self.models.iter().map(|(p, _)| *p).collect()
+    }
+
+    /// The bank label unspecified requests decode at.
+    pub fn default_precision(&self) -> u8 {
+        self.default_prec
+    }
+
+    /// The downshift target (0 = rung disabled).
+    pub fn floor_precision(&self) -> u8 {
+        self.floor_prec
+    }
+
+    /// Cached-prefix positions matched for `prompt` in `prec`'s cache.
+    /// Associated fn for the same disjoint-borrow reason as `model_in`.
+    fn matched_in(prefix: &[(u8, PrefixIndex)], prec: u8, prompt: &[u32]) -> usize {
+        prefix
+            .iter()
+            .find(|(p, _)| *p == prec)
+            .map_or(0, |(_, pi)| pi.matched_positions(prompt))
+    }
+
+    fn prefix_idx_mut(&mut self, prec: u8) -> Option<&mut PrefixIndex> {
+        self.prefix.iter_mut().find(|(p, _)| *p == prec).map(|(_, pi)| pi)
+    }
+
+    /// Evict up to `need` cached pages, walking the per-precision caches
+    /// in bank order. Returns pages actually evicted (node granularity
+    /// can overshoot `need` slightly, never undershoot while pages
+    /// remain).
+    fn trim_caches(prefix: &mut [(u8, PrefixIndex)], need: usize) -> usize {
+        let mut evicted = 0;
+        for (_, pi) in prefix.iter_mut() {
+            if evicted >= need {
+                break;
+            }
+            let have = pi.cached_pages();
+            let take = (need - evicted).min(have);
+            evicted += pi.trim_to(have - take);
+        }
+        evicted
+    }
+
     /// Enqueue a request. Errors on an empty prompt (prefill needs at least
     /// one token — the old engine silently decoded token 0 from zeroed
     /// logits), on out-of-vocab tokens, and when the queue is full.
@@ -373,6 +533,18 @@ impl<'m> Scheduler<'m> {
         if prompt.is_empty() {
             bail!("empty prompt: prefill needs at least one (BOS) token");
         }
+        let (precision, pinned) = match opts.precision {
+            Some(p) if p != 0 => {
+                if !self.models.iter().any(|(bp, _)| *bp == p) {
+                    bail!(
+                        "precision {p} not served (supported: {:?})",
+                        self.precisions()
+                    );
+                }
+                (p, true)
+            }
+            _ => (self.default_prec, false),
+        };
         let vocab = self.model.cfg.vocab;
         if let Some(&t) = prompt.iter().find(|&&t| t as usize >= vocab) {
             bail!("prompt token {t} out of range for vocab {vocab}");
@@ -408,6 +580,8 @@ impl<'m> Scheduler<'m> {
             queue_deadline,
             degraded: false,
             cached: 0,
+            precision,
+            pinned,
         });
         Ok(id)
     }
@@ -438,8 +612,15 @@ impl<'m> Scheduler<'m> {
 
     /// [`Scheduler::kv_submit_refused`] with the prefix-cache discount:
     /// pages the prompt would borrow from the cache are charged once (to
-    /// the cache), so they don't count against this request's cost.
-    pub fn kv_submit_refused_for(&self, prompt: &[u32], gen_tokens: usize) -> bool {
+    /// the cache), so they don't count against this request's cost. The
+    /// discount reads the cache of the precision the request would decode
+    /// at (`None`/`Some(0)` = the engine default).
+    pub fn kv_submit_refused_for(
+        &self,
+        prompt: &[u32],
+        gen_tokens: usize,
+        precision: Option<u8>,
+    ) -> bool {
         if fault::hit(fault::KV_EXHAUST) {
             return true;
         }
@@ -447,7 +628,11 @@ impl<'m> Scheduler<'m> {
         if budget == 0 {
             return false;
         }
-        let cached = self.prefix.as_ref().map_or(0, |pi| pi.matched_positions(prompt));
+        let prec = match precision {
+            Some(p) if p != 0 => p,
+            _ => self.default_prec,
+        };
+        let cached = Self::matched_in(&self.prefix, prec, prompt);
         let high = (KV_HIGH_WATERMARK * budget as f64) as usize;
         self.arena.request_cost_bytes_shared(prompt.len() + gen_tokens, cached) > high
     }
@@ -533,20 +718,21 @@ impl<'m> Scheduler<'m> {
             + self.prefix_cached_bytes()
     }
 
-    /// Admissions that mapped at least one cached prefix chunk.
+    /// Admissions that mapped at least one cached prefix chunk (summed
+    /// over the per-precision caches).
     pub fn prefix_hits(&self) -> u64 {
-        self.prefix.as_ref().map_or(0, PrefixIndex::hits)
+        self.prefix.iter().map(|(_, pi)| pi.hits()).sum()
     }
 
     /// Prompt positions whose prefill compute was skipped by prefix
-    /// hits, cumulative.
+    /// hits, cumulative over the per-precision caches.
     pub fn prefill_tokens_saved(&self) -> u64 {
-        self.prefix.as_ref().map_or(0, PrefixIndex::tokens_saved)
+        self.prefix.iter().map(|(_, pi)| pi.tokens_saved()).sum()
     }
 
-    /// KV pages currently held by the prefix cache.
+    /// KV pages currently held across the per-precision prefix caches.
     pub fn prefix_cached_pages(&self) -> usize {
-        self.prefix.as_ref().map_or(0, PrefixIndex::cached_pages)
+        self.prefix.iter().map(|(_, pi)| pi.cached_pages()).sum()
     }
 
     /// Bytes of KV page storage held by the prefix cache (the charged-once
@@ -564,7 +750,7 @@ impl<'m> Scheduler<'m> {
     /// is off, or pressure is below the low watermark.
     pub fn shed_cached_prefixes(&mut self) -> usize {
         let budget = self.cfg.kv_budget_bytes;
-        if budget == 0 || self.prefix.is_none() {
+        if budget == 0 || self.prefix.is_empty() {
             return 0;
         }
         let low = (KV_LOW_WATERMARK * budget as f64) as usize;
@@ -573,9 +759,7 @@ impl<'m> Scheduler<'m> {
             return 0;
         }
         let page_bytes = self.arena.page_bytes().max(1);
-        let pi = self.prefix.as_mut().expect("checked above");
-        let target = pi.cached_pages().saturating_sub((live - low).div_ceil(page_bytes));
-        pi.trim_to(target)
+        Self::trim_caches(&mut self.prefix, (live - low).div_ceil(page_bytes))
     }
 
     /// Worst-case KV bytes a request spanning `total_pos` positions would
@@ -612,6 +796,12 @@ impl<'m> Scheduler<'m> {
     /// Lanes preempted under KV pressure so far.
     pub fn preemptions(&self) -> u64 {
         self.preemptions
+    }
+
+    /// Admissions downshifted to the floor precision so far — the rung
+    /// between prefix-cache shedding and brownout.
+    pub fn precision_downshifts(&self) -> u64 {
+        self.precision_downshifts
     }
 
     /// Predicted wait (ms) for a request joining the queue now, from the
@@ -665,6 +855,7 @@ impl<'m> Scheduler<'m> {
             }
             let Some(front) = self.queue.front() else { break };
             let (front_gen, front_prompt) = (front.gen_tokens, front.prompt.len());
+            let (front_prec, front_pinned) = (front.precision, front.pinned);
             if front_gen == 0 {
                 // Nothing to generate; completes at admission.
                 let qr = self.queue.pop_front().unwrap();
@@ -672,15 +863,28 @@ impl<'m> Scheduler<'m> {
                 continue;
             }
             let mut eff_gen = front_gen;
+            let mut eff_prec = front_prec;
             if budget > 0 {
                 if brownout {
-                    eff_gen = eff_gen.min(BROWNOUT_MAX_TOKENS);
+                    // The rung between prefix shedding and brownout:
+                    // downshift an un-pinned admission to the floor
+                    // precision — full token budget, no `degraded` flag —
+                    // trading decode quality for a full-length answer.
+                    // Pinned (explicitly requested) precisions and
+                    // requests already at/below the floor fall through to
+                    // the brownout clamp.
+                    if self.floor_prec != 0 && !front_pinned && eff_prec > self.floor_prec {
+                        eff_prec = self.floor_prec;
+                    } else {
+                        eff_gen = eff_gen.min(BROWNOUT_MAX_TOKENS);
+                    }
                 }
                 // Shared pages are charged once: the cached-prefix pages
                 // this request would borrow are already counted in `live`
                 // (the cache term), so its marginal cost excludes them.
-                let cached =
-                    self.prefix.as_ref().map_or(0, |pi| pi.matched_positions(&front.prompt));
+                // The discount reads the cache of the precision the lane
+                // will decode at.
+                let cached = Self::matched_in(&self.prefix, eff_prec, &front.prompt);
                 let mut cost =
                     self.arena.request_cost_bytes_shared(front_prompt + eff_gen, cached);
                 if live + admitted_cost + cost > high {
@@ -692,20 +896,23 @@ impl<'m> Scheduler<'m> {
                     // the LRU victim), so the discount is re-derived.
                     let page_bytes = self.arena.page_bytes().max(1);
                     let need = (live + admitted_cost + cost - high).div_ceil(page_bytes);
-                    let evicted = match self.prefix.as_mut() {
-                        Some(pi) => pi.trim_to(pi.cached_pages().saturating_sub(need)),
-                        None => 0,
-                    };
+                    let evicted = Self::trim_caches(&mut self.prefix, need);
                     if evicted > 0 {
                         live = self.kv_live_bytes();
-                        let cached = self
-                            .prefix
-                            .as_ref()
-                            .map_or(0, |pi| pi.matched_positions(&front.prompt));
+                        let cached = Self::matched_in(&self.prefix, eff_prec, &front.prompt);
                         cost = self
                             .arena
                             .request_cost_bytes_shared(front_prompt + eff_gen, cached);
                     }
+                }
+                if live + admitted_cost + cost > high && eff_prec != front_prec {
+                    // The downshift alone doesn't fit under the high
+                    // watermark: escalate to brownout on top of it (the
+                    // rungs stack rather than one masking the next).
+                    eff_gen = eff_gen.min(BROWNOUT_MAX_TOKENS);
+                    let cached = Self::matched_in(&self.prefix, eff_prec, &front.prompt);
+                    cost =
+                        self.arena.request_cost_bytes_shared(front_prompt + eff_gen, cached);
                 }
                 if live + admitted_cost + cost > high {
                     if self.lanes.is_empty() && self.fresh_meta.is_empty() {
@@ -725,6 +932,10 @@ impl<'m> Scheduler<'m> {
                 admitted_cost += cost;
             }
             let mut qr = self.queue.pop_front().unwrap();
+            if eff_prec != qr.precision {
+                qr.precision = eff_prec;
+                self.precision_downshifts += 1;
+            }
             if eff_gen < qr.gen_tokens {
                 qr.gen_tokens = eff_gen;
                 qr.degraded = true;
@@ -734,9 +945,10 @@ impl<'m> Scheduler<'m> {
             // the fresh lane (refcount bumps, no copy); prefill below
             // starts after the mapped positions. A zero-match walk is
             // allocation-free, so the uncached warm path stays off the
-            // heap.
+            // heap. Only the lane's own precision's cache is consulted —
+            // pages from another precision's model hold different values.
             let mut state = self.arena.acquire();
-            qr.cached = match self.prefix.as_mut() {
+            qr.cached = match self.prefix_idx_mut(eff_prec) {
                 Some(pi) => pi.lookup_into(&qr.prompt, &mut state),
                 None => 0,
             };
@@ -758,12 +970,16 @@ impl<'m> Scheduler<'m> {
             // rather than moving requests into closures, so a panicking
             // prefill leaves every admitted request identifiable in
             // `fresh_meta` for [`Scheduler::recover_admission`].
-            let model = self.model;
+            let models = &self.models;
             let jobs: Vec<_> = self
                 .fresh_meta
                 .iter()
                 .zip(self.fresh_states.iter_mut())
                 .map(|(qr, state)| {
+                    // Each job prefills through its request's own
+                    // precision model (`&'m` refs are Copy, so the move
+                    // closure captures the model, not the bank borrow).
+                    let model = Self::model_in(models, qr.precision);
                     move || {
                         // Cached positions are already in the state's
                         // borrowed pages; scalar prefill resumes after
@@ -792,43 +1008,59 @@ impl<'m> Scheduler<'m> {
         // discarded. Per-lane arithmetic is bit-identical to scalar
         // `step` prefill because `step_batch` is bit-identical per lane.
         //
-        // Longest REMAINING prefill first (prompt length minus cached
-        // prefix positions), via an in-place stable insertion co-sort of
-        // the two parallel scratch vectors (admissions are
-        // max_batch-bounded, and equal lengths keep submission order): the
-        // lanes still in the chunk at any depth are then a PREFIX of the
-        // state slab, so each depth passes a contiguous sub-slice and the
-        // reused token buffer — no per-depth gathering of `&mut` refs.
-        // Lanes at mixed start depths batch naturally: each lane's rope
-        // position comes from its own state, so a prefix-hit lane that
-        // resumes at position 64 steps next to a cold lane at position 0.
-        // Lane order never affects per-lane results.
+        // Grouped by precision (ascending bank label), then longest
+        // REMAINING prefill first within each group (prompt length minus
+        // cached prefix positions), via an in-place stable insertion
+        // co-sort of the two parallel scratch vectors (admissions are
+        // max_batch-bounded, and equal keys keep submission order): each
+        // precision group is then a CONTIGUOUS RANGE of the state slab,
+        // and the lanes still in a group's chunk at any depth are a
+        // prefix of that range — so each depth passes a contiguous
+        // sub-slice and the reused token buffer to the group's own model,
+        // with no per-depth gathering of `&mut` refs (the mixed-precision
+        // prefill stays allocation-free). On a uniform-precision batch
+        // the key reduces to remaining-descending and this is exactly the
+        // single-group behavior the engine always had. Lanes at mixed
+        // start depths batch naturally: each lane's rope position comes
+        // from its own state, so a prefix-hit lane that resumes at
+        // position 64 steps next to a cold lane at position 0. Lane order
+        // never affects per-lane results.
         let remaining = |q: &Queued| q.prompt.len() - 1 - q.cached;
+        let key = |q: &Queued| (q.precision, usize::MAX - remaining(q));
         for k in 1..self.fresh_meta.len() {
             let mut i = k;
-            while i > 0 && remaining(&self.fresh_meta[i - 1]) < remaining(&self.fresh_meta[i])
-            {
+            while i > 0 && key(&self.fresh_meta[i - 1]) > key(&self.fresh_meta[i]) {
                 self.fresh_meta.swap(i - 1, i);
                 self.fresh_states.swap(i - 1, i);
                 i -= 1;
             }
         }
-        let max_pre = self.fresh_meta.first().map(remaining).unwrap_or(0);
-        for t in 0..max_pre {
-            self.token_buf.clear();
-            for q in &self.fresh_meta {
-                if q.cached + t + 1 < q.prompt.len() {
-                    self.token_buf.push(q.prompt[q.cached + t]);
-                } else {
-                    break;
-                }
+        let mut g0 = 0;
+        while g0 < self.fresh_meta.len() {
+            let prec = self.fresh_meta[g0].precision;
+            let mut g1 = g0 + 1;
+            while g1 < self.fresh_meta.len() && self.fresh_meta[g1].precision == prec {
+                g1 += 1;
             }
-            let active = self.token_buf.len();
-            self.model.step_batch_with(
-                &mut self.prefill_scratch,
-                &mut self.fresh_states[..active],
-                &self.token_buf,
-            );
+            let model = Self::model_in(&self.models, prec);
+            let max_pre = remaining(&self.fresh_meta[g0]);
+            for t in 0..max_pre {
+                self.token_buf.clear();
+                for q in &self.fresh_meta[g0..g1] {
+                    if q.cached + t + 1 < q.prompt.len() {
+                        self.token_buf.push(q.prompt[q.cached + t]);
+                    } else {
+                        break;
+                    }
+                }
+                let active = self.token_buf.len();
+                model.step_batch_with(
+                    &mut self.prefill_scratch,
+                    &mut self.fresh_states[g0..g0 + active],
+                    &self.token_buf,
+                );
+            }
+            g0 = g1;
         }
         // Drain the scratch into live lanes, handing capacity back to the
         // fields afterwards (`mem::take` + restore keeps the buffers warm).
@@ -861,6 +1093,7 @@ impl<'m> Scheduler<'m> {
             deadline: None,
             poisoned: false,
             degraded: false,
+            precision: 0,
         });
         lane.id = qr.id;
         // Moved, not cloned: the prompt buffer rides along for the
@@ -879,15 +1112,17 @@ impl<'m> Scheduler<'m> {
         lane.deadline = qr.deadline;
         lane.poisoned = false;
         lane.degraded = qr.degraded;
+        lane.precision = qr.precision;
         self.lanes.push(lane);
         self.states.push(state);
     }
 
     /// Tokens generated by the most recent [`Scheduler::step`], one
     /// `(request id, token)` per lane that decoded (including lanes that
-    /// finished during that step), in lane order. This is the streaming
-    /// drain: callers can forward tokens after every step instead of
-    /// waiting for sequence completion.
+    /// finished during that step), in lane order (precision-group order
+    /// for a mixed-precision step — consumers key on the id, never the
+    /// position). This is the streaming drain: callers can forward tokens
+    /// after every step instead of waiting for sequence completion.
     pub fn step_tokens(&self) -> &[(u64, u32)] {
         &self.emitted
     }
@@ -932,44 +1167,42 @@ impl<'m> Scheduler<'m> {
             // lanes are mid-decode. Their own page references keep the
             // shared storage alive, so they must complete bit-identically
             // — this site proves eviction can never corrupt a borrower.
-            if let Some(pi) = self.prefix.as_mut() {
+            for (_, pi) in self.prefix.iter_mut() {
                 pi.clear();
             }
         }
         debug_assert_eq!(self.lanes.len(), self.states.len());
-        self.token_buf.clear();
-        self.token_buf.extend(self.lanes.iter().map(|l| l.pending));
         let t0 = Instant::now();
         // Inside the timed window: a stalled step IS a slow step, and the
         // measured step time feeds the drain-rate EWMA behind Retry-After
         // and predicted queue wait — the stall must be visible to both.
         fault::maybe_stall(fault::ENGINE_STALL, Duration::from_millis(1500));
-        self.model.step_batch_with(&mut self.scratch, &mut self.states, &self.token_buf);
-        if fault::hit(fault::NAN_LOGITS) {
-            // Corrupt lane 0's logits in place — models the degenerate
-            // outputs extreme quantization can produce.
-            for v in self.scratch.logits_mut().row_mut(0) {
-                *v = f32::NAN;
+        match self.uniform_precision() {
+            Some(prec) => {
+                // Uniform-precision batch (every single-model engine and
+                // the common bank case): the contiguous state slab goes
+                // straight to one model — no gathering, no allocation.
+                self.token_buf.clear();
+                self.token_buf.extend(self.lanes.iter().map(|l| l.pending));
+                let model = Self::model_in(&self.models, prec);
+                model.step_batch_with(&mut self.scratch, &mut self.states, &self.token_buf);
+                if fault::hit(fault::NAN_LOGITS) {
+                    // Corrupt lane 0's logits in place — models the
+                    // degenerate outputs extreme quantization can produce.
+                    for v in self.scratch.logits_mut().row_mut(0) {
+                        *v = f32::NAN;
+                    }
+                }
+                let scratch = &self.scratch;
+                let emitted = &mut self.emitted;
+                for (r, lane) in self.lanes.iter_mut().enumerate() {
+                    Self::emit_lane(scratch.logits().row(r), lane, emitted);
+                }
             }
+            None => self.decode_mixed(),
         }
         self.steps += 1;
         self.lane_steps += self.lanes.len();
-        let scratch = &self.scratch;
-        let emitted = &mut self.emitted;
-        for (r, lane) in self.lanes.iter_mut().enumerate() {
-            let row = scratch.logits().row(r);
-            let next = greedy_argmax(row);
-            if !row[next as usize].is_finite() {
-                // The max logit is NaN/±inf: this lane's numerics are
-                // poisoned. Don't emit the garbage token — mark the lane
-                // for Failed eviction below.
-                lane.poisoned = true;
-                continue;
-            }
-            lane.out.push(next);
-            lane.pending = next;
-            emitted.push((lane.id, next));
-        }
         // Per-token latency covers step + sampling, matching what the
         // per-sequence path times per token.
         let step_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -1015,14 +1248,76 @@ impl<'m> Scheduler<'m> {
         finished
     }
 
+    /// The single precision every active lane shares, or `None` for a
+    /// mixed batch. O(lanes), allocation-free — the steady-state check.
+    fn uniform_precision(&self) -> Option<u8> {
+        let p0 = self.lanes.first()?.precision;
+        self.lanes.iter().all(|l| l.precision == p0).then_some(p0)
+    }
+
+    /// Greedy-sample one lane from its logits row. A non-finite max logit
+    /// poisons the lane (Failed eviction below) instead of emitting the
+    /// garbage token.
+    fn emit_lane(row: &[f32], lane: &mut Lane, emitted: &mut Vec<(u64, u32)>) {
+        let next = greedy_argmax(row);
+        if !row[next as usize].is_finite() {
+            lane.poisoned = true;
+            return;
+        }
+        lane.out.push(next);
+        lane.pending = next;
+        emitted.push((lane.id, next));
+    }
+
+    /// Mixed-precision decode: one batched sub-step per precision group
+    /// (bank order), gathering `&mut` state refs per group — the
+    /// documented allocation cost of mixing precisions in one batch;
+    /// uniform batches never come here. Per-lane arithmetic is identical
+    /// to a uniform batch at the same precision: grouping only changes
+    /// which lanes share a step, never what any lane computes.
+    fn decode_mixed(&mut self) {
+        for bi in 0..self.models.len() {
+            let (prec, model) = self.models[bi];
+            self.token_buf.clear();
+            self.token_buf
+                .extend(self.lanes.iter().filter(|l| l.precision == prec).map(|l| l.pending));
+            if self.token_buf.is_empty() {
+                continue;
+            }
+            {
+                // Both filters run the same predicate over the same
+                // index-aligned vectors, so group row g lines up with the
+                // g-th matching lane in the emit loop below.
+                let lanes = &self.lanes;
+                let mut group: Vec<&mut DecodeState> = self
+                    .states
+                    .iter_mut()
+                    .zip(lanes.iter())
+                    .filter(|(_, l)| l.precision == prec)
+                    .map(|(s, _)| s)
+                    .collect();
+                model.step_batch_with(&mut self.scratch, &mut group, &self.token_buf);
+            }
+            let scratch = &self.scratch;
+            let emitted = &mut self.emitted;
+            for (g, lane) in self.lanes.iter_mut().filter(|l| l.precision == prec).enumerate()
+            {
+                Self::emit_lane(scratch.logits().row(g), lane, emitted);
+            }
+        }
+    }
+
     /// Preempt the youngest active lane (most recently admitted; ties go
     /// to the higher id): its KV pages are **deallocated** — pooling them
-    /// would keep the bytes resident, defeating the point — and its id is
-    /// returned so the supervisor can resubmit the request under its
-    /// original id/deadline with replay suppression. Refuses when fewer
-    /// than two lanes are active: preempting the only lane could never
-    /// make progress (admission would bounce it straight back).
-    pub fn preempt_youngest(&mut self) -> Option<u64> {
+    /// would keep the bytes resident, defeating the point — and its
+    /// `(id, precision)` is returned so the supervisor can resubmit the
+    /// request under its original id/deadline — and pinned to the
+    /// precision it was serving at, so replay suppression stays
+    /// bit-identical even if the downshift rung had moved it. Refuses
+    /// when fewer than two lanes are active: preempting the only lane
+    /// could never make progress (admission would bounce it straight
+    /// back).
+    pub fn preempt_youngest(&mut self) -> Option<(u64, u8)> {
         if self.lanes.len() < 2 {
             return None;
         }
@@ -1039,13 +1334,13 @@ impl<'m> Scheduler<'m> {
         let state = self.states.swap_remove(idx);
         self.arena.discard(state);
         self.preemptions += 1;
-        let id = lane.id;
+        let (id, precision) = (lane.id, lane.precision);
         if self.lane_pool.len() < LANE_POOL_MAX {
             lane.out.clear();
             lane.token_ms.clear();
             self.lane_pool.push(lane);
         }
-        Some(id)
+        Some((id, precision))
     }
 
     /// Evict every request (queued or active) whose deadline has passed.
@@ -1091,6 +1386,7 @@ impl<'m> Scheduler<'m> {
             },
             finish,
             degraded: qr.degraded,
+            precision: qr.precision,
         }
     }
 
@@ -1101,13 +1397,14 @@ impl<'m> Scheduler<'m> {
         finish: FinishReason,
     ) -> FinishedRequest {
         let kv_bytes = state.kv_bytes();
-        // Donate the lane's page-aligned prompt-prefix pages to the
-        // prefix index before releasing the state (release pools only
-        // pages nobody else references, so donated pages stay alive in
-        // the cache). Failed lanes don't donate — their numerics are
-        // suspect by definition.
+        // Donate the lane's page-aligned prompt-prefix pages to its OWN
+        // precision's prefix index before releasing the state (release
+        // pools only pages nobody else references, so donated pages stay
+        // alive in the cache); a different-precision model's pages would
+        // hold different values. Failed lanes don't donate — their
+        // numerics are suspect by definition.
         if finish != FinishReason::Failed {
-            if let Some(pi) = self.prefix.as_mut() {
+            if let Some(pi) = self.prefix_idx_mut(lane.precision) {
                 pi.donate(&lane.prompt, state.pos, &state);
             }
         }
@@ -1130,8 +1427,14 @@ impl<'m> Scheduler<'m> {
             kv_bytes,
             token_ms,
         };
-        let fr =
-            FinishedRequest { id: lane.id, tokens, metrics, finish, degraded: lane.degraded };
+        let fr = FinishedRequest {
+            id: lane.id,
+            tokens,
+            metrics,
+            finish,
+            degraded: lane.degraded,
+            precision: lane.precision,
+        };
         if recycle {
             lane.out.clear();
             lane.token_ms.clear();
@@ -1173,6 +1476,13 @@ impl<'m> Scheduler<'m> {
     /// Ids of the currently active (decoding) lanes.
     pub fn lane_ids(&self) -> Vec<u64> {
         self.lanes.iter().map(|l| l.id).collect()
+    }
+
+    /// `(id, precision)` of the currently active lanes — the supervisor's
+    /// restart path snapshots these so requeued lanes replay at the
+    /// precision they were serving at.
+    pub fn lane_infos(&self) -> Vec<(u64, u8)> {
+        self.lanes.iter().map(|l| (l.id, l.precision)).collect()
     }
 
     /// The id the next plain [`Scheduler::submit`] would take.
@@ -1873,8 +2183,10 @@ mod tests {
         sched.step();
         assert_eq!(sched.active(), 2);
         let before = sched.kv_allocated_bytes();
-        let picked = sched.preempt_youngest().expect("two lanes: youngest is preemptible");
+        let (picked, picked_prec) =
+            sched.preempt_youngest().expect("two lanes: youngest is preemptible");
         assert_eq!(picked, b, "most recently admitted lane goes first");
+        assert_eq!(picked_prec, 0, "single-model engine serves the native label");
         assert_eq!((sched.active(), sched.preemptions()), (1, 1));
         assert!(
             sched.kv_allocated_bytes() < before,
@@ -2092,7 +2404,7 @@ mod tests {
         sched.submit(&p, 8).unwrap();
         assert_eq!(sched.run_to_completion().len(), 1);
         assert_eq!(sched.prefix_cached_pages(), 4, "one 64-position chunk donated");
-        assert!(!sched.kv_submit_refused_for(&p, 8), "discounted request is feasible");
+        assert!(!sched.kv_submit_refused_for(&p, 8, None), "discounted request is feasible");
         sched.submit(&p, 8).unwrap();
         sched.step();
         assert_eq!((sched.active(), sched.queued()), (1, 0), "B must admit immediately");
@@ -2290,5 +2602,187 @@ mod tests {
         assert!(shallow <= deep, "a shallower queue cannot predict a longer wait");
         sched.run_to_completion();
         assert_eq!(sched.predicted_wait_ms(), 0, "empty queue predicts no wait");
+    }
+
+    /// Two same-shape models under different bank labels. Their weights
+    /// differ (seeds 0 and 1), so a lane's token stream proves WHICH
+    /// model served it — the strongest possible precision-routing check.
+    fn bank_pair() -> (NativeModel, NativeModel) {
+        let (cfg, _) = preset("tiny");
+        let m4 = NativeModel::from_params(&ParamStore::init(&cfg, &mut Rng::new(0)));
+        let m2 = NativeModel::from_params(&ParamStore::init(&cfg, &mut Rng::new(1)));
+        (m2, m4)
+    }
+
+    #[test]
+    fn mixed_precision_lanes_decode_bit_identically() {
+        let (m2, m4) = bank_pair();
+        let cfg = ServeConfig { max_batch: 3, max_queued: 8, ..ServeConfig::default() };
+        let mut sched = Scheduler::with_bank(vec![(4, &m4), (2, &m2)], cfg, 4, 0);
+        assert_eq!(sched.precisions(), vec![2, 4], "bank sorts ascending");
+        assert_eq!((sched.default_precision(), sched.floor_precision()), (4, 0));
+        let bad = SubmitOpts { precision: Some(3), ..SubmitOpts::default() };
+        assert!(
+            sched.submit_opts(&[1], 4, bad).is_err(),
+            "a precision outside the bank is rejected at submit"
+        );
+        let a = sched.submit(&[1, 2, 3], 20).unwrap();
+        let two = SubmitOpts { precision: Some(2), ..SubmitOpts::default() };
+        let b = sched.submit_opts(&[4, 5], 24, two).unwrap();
+        let c = sched.submit_opts(&[1, 2, 3], 20, two).unwrap();
+        let done = sched.run_to_completion();
+        assert_eq!(done.len(), 3);
+        let f = |id: u64| done.iter().find(|f| f.id == id).unwrap();
+        assert_eq!((f(a).precision, f(b).precision, f(c).precision), (4, 2, 2));
+        assert_eq!(f(a).tokens, reference_decode(&m4, &[1, 2, 3], 20), "default lane → label 4");
+        assert_eq!(f(b).tokens, reference_decode(&m2, &[4, 5], 24), "explicit label 2 honored");
+        assert_eq!(
+            f(c).tokens,
+            reference_decode(&m2, &[1, 2, 3], 20),
+            "same prompt at the other precision follows the other model"
+        );
+        assert_ne!(f(a).tokens, f(c).tokens, "geometry: the two bank models must disagree");
+        assert_eq!(sched.precision_downshifts(), 0, "no pressure, no downshift");
+    }
+
+    /// Brownout-probe pressure geometry over a two-label bank: request A
+    /// parks live KV between the watermarks, so B's admission happens
+    /// under pressure. Returns `(m2, m4, serve_cfg, p_a, p_b)`; B asks
+    /// for [`PRESSURE_GEN_B`] tokens — more than the brownout clamp, but
+    /// within the same KV chunk, so the downshifted (unclamped) cost
+    /// equals the clamped cost and the budget arithmetic of
+    /// `brownout_clamps_gen_tokens_and_flags_degraded` carries over.
+    const PRESSURE_GEN_B: usize = 40;
+    fn pressure_bank() -> (NativeModel, NativeModel, ServeConfig, Vec<u32>, Vec<u32>) {
+        use crate::cfg::ModelConfig;
+        let cfg = ModelConfig {
+            name: "downshift-probe".into(),
+            vocab: 64,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            rope_theta: 10000.0,
+        };
+        let m4 = NativeModel::from_params(&ParamStore::init(&cfg, &mut Rng::new(0)));
+        let m2 = NativeModel::from_params(&ParamStore::init(&cfg, &mut Rng::new(1)));
+        let p_a: Vec<u32> = (0..200).map(|i| (i % 60) as u32 + 1).collect();
+        let p_b = vec![7u32, 9];
+        let probe = Scheduler::new(&m4, ServeConfig::default());
+        let cost_a = probe.kv_request_cost_bytes(p_a.len() + 30);
+        let cost_b = probe.kv_request_cost_bytes(p_b.len() + PRESSURE_GEN_B);
+        assert!(PRESSURE_GEN_B > BROWNOUT_MAX_TOKENS);
+        assert_eq!(
+            cost_b,
+            probe.kv_request_cost_bytes(p_b.len() + BROWNOUT_MAX_TOKENS),
+            "geometry: clamped and unclamped B must cost the same chunk"
+        );
+        let budget = ((cost_a + cost_b) as f64 / KV_HIGH_WATERMARK).ceil() as usize + 1;
+        assert!(
+            (cost_a as f64) >= KV_LOW_WATERMARK * budget as f64,
+            "geometry: A alone must trip the low watermark"
+        );
+        let serve = ServeConfig {
+            max_batch: 2,
+            max_queued: 8,
+            kv_budget_bytes: budget,
+            ..ServeConfig::default()
+        };
+        (m2, m4, serve, p_a, p_b)
+    }
+
+    #[test]
+    fn pressure_downshifts_admissions_to_the_floor_precision() {
+        let (m2, m4, serve, p_a, p_b) = pressure_bank();
+        let budget = serve.kv_budget_bytes;
+        let mut sched = Scheduler::with_bank(vec![(2, &m2), (4, &m4)], serve, 4, 2);
+        let a = sched.submit(&p_a, 30).unwrap();
+        sched.step();
+        assert!(sched.kv_pressure() >= KV_LOW_WATERMARK, "A alone trips the low watermark");
+        let b = sched.submit(&p_b, PRESSURE_GEN_B).unwrap();
+        let mut peak = sched.kv_allocated_bytes();
+        let mut done = Vec::new();
+        while sched.has_work() {
+            done.extend(sched.step());
+            peak = peak.max(sched.kv_allocated_bytes());
+        }
+        assert!(peak <= budget, "kv_allocated_bytes {peak} exceeded budget {budget}");
+        assert_eq!(
+            (sched.precision_downshifts(), sched.brownouts()),
+            (1, 0),
+            "the downshift rung must fire INSTEAD of a brownout"
+        );
+        let fb = done.iter().find(|f| f.id == b).unwrap();
+        assert!(!fb.degraded, "downshifted admissions are not degraded");
+        assert_eq!(fb.precision, 2, "B was served at the floor");
+        assert_eq!(fb.finish, FinishReason::Length);
+        assert_eq!(fb.tokens.len(), PRESSURE_GEN_B, "full token budget, no clamp");
+        assert_eq!(
+            fb.tokens,
+            reference_decode(&m2, &p_b, PRESSURE_GEN_B),
+            "B must have decoded through the floor model end to end"
+        );
+        let fa = done.iter().find(|f| f.id == a).unwrap();
+        assert!(!fa.degraded && fa.precision == 4, "A stays on the default label");
+        assert_eq!(fa.tokens, reference_decode(&m4, &p_a, 30));
+    }
+
+    #[test]
+    fn pinned_precision_rides_out_pressure_with_a_brownout_clamp() {
+        // Same pressure geometry, but B *explicitly* asks for label 4:
+        // per-request precision is honored — the downshift rung skips
+        // pinned admissions, so the next rung (the brownout clamp)
+        // applies instead.
+        let (m2, m4, serve, p_a, p_b) = pressure_bank();
+        let mut sched = Scheduler::with_bank(vec![(2, &m2), (4, &m4)], serve, 4, 2);
+        let a = sched.submit(&p_a, 30).unwrap();
+        sched.step();
+        let four = SubmitOpts { precision: Some(4), ..SubmitOpts::default() };
+        let b = sched.submit_opts(&p_b, PRESSURE_GEN_B, four).unwrap();
+        let done = sched.run_to_completion();
+        assert_eq!(
+            (sched.precision_downshifts(), sched.brownouts()),
+            (0, 1),
+            "a pinned admission browns out instead of downshifting"
+        );
+        let fb = done.iter().find(|f| f.id == b).unwrap();
+        assert!(fb.degraded && fb.precision == 4);
+        assert_eq!(fb.tokens.len(), BROWNOUT_MAX_TOKENS);
+        assert_eq!(fb.tokens, reference_decode(&m4, &p_b, BROWNOUT_MAX_TOKENS));
+        let fa = done.iter().find(|f| f.id == a).unwrap();
+        assert_eq!(fa.tokens, reference_decode(&m4, &p_a, 30));
+    }
+
+    #[test]
+    fn prefix_caches_are_isolated_per_precision() {
+        // KV pages decoded by different-precision models hold different
+        // values: a warm prefix under one label must never be mapped into
+        // a lane decoding under another, and every lane's stream must
+        // stay bit-identical to its own model's scalar reference.
+        let (m2, m4) = bank_pair();
+        let mut rng = Rng::new(23);
+        let p: Vec<u32> = (0..130).map(|_| rng.below(m4.cfg.vocab) as u32).collect();
+        let cfg = ServeConfig { max_batch: 2, max_queued: 8, ..ServeConfig::default() };
+        let mut sched = Scheduler::with_bank(vec![(2, &m2), (4, &m4)], cfg, 4, 0);
+        let two = SubmitOpts { precision: Some(2), ..SubmitOpts::default() };
+        // Warm label 4's cache.
+        let a = sched.submit(&p, 6).unwrap();
+        let done = sched.run_to_completion();
+        assert_eq!(done.iter().find(|f| f.id == a).unwrap().tokens, reference_decode(&m4, &p, 6));
+        assert!(sched.prefix_cached_pages() > 0, "finished lane donated its prefix");
+        // The same prompt at label 2 must MISS label 4's entry.
+        let b = sched.submit_opts(&p, 6, two).unwrap();
+        let done = sched.run_to_completion();
+        assert_eq!(sched.prefix_hits(), 0, "no cross-precision prefix reuse");
+        assert_eq!(done.iter().find(|f| f.id == b).unwrap().tokens, reference_decode(&m2, &p, 6));
+        // Each label now re-hits its OWN warm entry, bit-identically.
+        let c = sched.submit(&p, 6).unwrap();
+        let done = sched.run_to_completion();
+        assert_eq!(sched.prefix_hits(), 1, "label 4 hits its own entry");
+        assert_eq!(done.iter().find(|f| f.id == c).unwrap().tokens, reference_decode(&m4, &p, 6));
+        let d = sched.submit_opts(&p, 6, two).unwrap();
+        let done = sched.run_to_completion();
+        assert_eq!(sched.prefix_hits(), 2, "label 2 hits its own entry");
+        assert_eq!(done.iter().find(|f| f.id == d).unwrap().tokens, reference_decode(&m2, &p, 6));
     }
 }

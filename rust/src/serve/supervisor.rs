@@ -62,6 +62,11 @@ struct Tracked {
     /// Replayed tokens still to swallow after a requeue (deterministic
     /// decode re-emits exactly the `streamed` prefix, bit-identical).
     replay_skip: usize,
+    /// Precision the request was submitted with (`None` = engine
+    /// default). Requeues with streamed tokens override this with the
+    /// precision the lane was *serving* at, pinning the replay to the
+    /// same bank model so suppression stays bit-identical.
+    precision: Option<u8>,
 }
 
 /// A [`Scheduler`] under `catch_unwind` supervision with fault
@@ -69,7 +74,11 @@ struct Tracked {
 /// the engine loop: `submit` / `step` / `step_tokens` mirror the
 /// scheduler's surface.
 pub struct SupervisedEngine<'m> {
-    model: &'m NativeModel,
+    /// Precision bank a fresh post-restart scheduler is rebuilt from
+    /// (single-model engines hold one entry labelled 0).
+    bank: Vec<(u8, &'m NativeModel)>,
+    default_prec: u8,
+    floor_prec: u8,
     cfg: ServeConfig,
     sched: Scheduler<'m>,
     tracked: HashMap<u64, Tracked>,
@@ -81,9 +90,23 @@ pub struct SupervisedEngine<'m> {
 
 impl<'m> SupervisedEngine<'m> {
     pub fn new(model: &'m NativeModel, cfg: ServeConfig) -> Self {
+        Self::with_bank(vec![(0, model)], cfg, 0, 0)
+    }
+
+    /// Supervised engine over a precision bank (see
+    /// [`Scheduler::with_bank`]); restarts rebuild the scheduler from the
+    /// same bank, default, and floor.
+    pub fn with_bank(
+        bank: Vec<(u8, &'m NativeModel)>,
+        cfg: ServeConfig,
+        default_prec: u8,
+        floor_prec: u8,
+    ) -> Self {
         SupervisedEngine {
-            sched: Scheduler::new(model, cfg.clone()),
-            model,
+            sched: Scheduler::with_bank(bank.clone(), cfg.clone(), default_prec, floor_prec),
+            bank,
+            default_prec,
+            floor_prec,
             cfg,
             tracked: HashMap::new(),
             restarts: 0,
@@ -101,6 +124,19 @@ impl<'m> SupervisedEngine<'m> {
         gen_tokens: usize,
         timeout_ms: Option<u64>,
     ) -> Result<u64> {
+        self.submit_prec(prompt, gen_tokens, timeout_ms, None)
+    }
+
+    /// [`SupervisedEngine::submit`] with an explicit decode precision
+    /// (`None`/`Some(0)` = engine default; an explicit bank label is
+    /// pinned — the downshift rung never moves it).
+    pub fn submit_prec(
+        &mut self,
+        prompt: &[u32],
+        gen_tokens: usize,
+        timeout_ms: Option<u64>,
+        precision: Option<u8>,
+    ) -> Result<u64> {
         if self.dead {
             bail!("engine dead: restart budget exhausted");
         }
@@ -111,7 +147,7 @@ impl<'m> SupervisedEngine<'m> {
         let id = self.sched.submit_opts(
             prompt,
             gen_tokens,
-            SubmitOpts { deadline, ..SubmitOpts::default() },
+            SubmitOpts { deadline, precision, ..SubmitOpts::default() },
         )?;
         self.tracked.insert(
             id,
@@ -121,6 +157,7 @@ impl<'m> SupervisedEngine<'m> {
                 deadline,
                 streamed: 0,
                 replay_skip: 0,
+                precision,
             },
         );
         Ok(id)
@@ -207,7 +244,7 @@ impl<'m> SupervisedEngine<'m> {
         // costs nobody anything.
         self.sched.shed_cached_prefixes();
         while self.sched.kv_over_high() {
-            let Some(id) = self.sched.preempt_youngest() else { break };
+            let Some((id, served_prec)) = self.sched.preempt_youngest() else { break };
             crate::log_warn!(
                 "supervisor",
                 "kv pressure {:.2}: preempted lane {id} for requeue",
@@ -216,14 +253,34 @@ impl<'m> SupervisedEngine<'m> {
             let Some(t) = self.tracked.get_mut(&id) else { continue };
             t.replay_skip = t.streamed;
             t.streamed = 0;
-            let opts = SubmitOpts { deadline: t.deadline, id: Some(id), ..SubmitOpts::default() };
+            // Tokens already streamed were decoded at `served_prec`
+            // (possibly a downshift); pin the requeue there so the replay
+            // is bit-identical. With nothing streamed the original
+            // request stands — the adaptive policy stays free to act.
+            let precision = if t.replay_skip > 0 { Some(served_prec) } else { t.precision };
+            let opts = SubmitOpts {
+                deadline: t.deadline,
+                id: Some(id),
+                precision,
+                ..SubmitOpts::default()
+            };
             let (prompt, gen) = (t.prompt.clone(), t.gen_tokens);
             if let Err(e) = self.sched.submit_opts(&prompt, gen, opts) {
                 crate::log_warn!("supervisor", "requeue of preempted request {id} failed: {e}");
+                let prec = self.effective_prec(id);
                 self.tracked.remove(&id);
-                finished.push(failed_event(id));
+                finished.push(failed_event(id, prec));
             }
         }
+    }
+
+    /// The bank label a tracked request would report if it failed before
+    /// serving (its explicit pin, else the engine default).
+    fn effective_prec(&self, id: u64) -> u8 {
+        self.tracked
+            .get(&id)
+            .and_then(|t| t.precision.filter(|&p| p != 0))
+            .unwrap_or(self.default_prec)
     }
 
     /// Replace the scheduler with a fresh one (freeing every KV page of
@@ -231,10 +288,18 @@ impl<'m> SupervisedEngine<'m> {
     /// the engine dead past the restart budget.
     fn restart(&mut self) -> Vec<FinishedRequest> {
         self.restarts += 1;
-        let was_active: Vec<u64> = self.sched.lane_ids();
+        // Snapshot (id, served precision) of active lanes before the old
+        // scheduler drops: a requeued lane with streamed tokens must
+        // replay through the same bank model.
+        let was_active: Vec<(u64, u8)> = self.sched.lane_infos();
         let next_id = self.sched.next_request_id();
         // Dropping the old scheduler releases all lanes' KV pages.
-        self.sched = Scheduler::new(self.model, self.cfg.clone());
+        self.sched = Scheduler::with_bank(
+            self.bank.clone(),
+            self.cfg.clone(),
+            self.default_prec,
+            self.floor_prec,
+        );
         self.sched.set_next_id(next_id);
 
         let mut ids: Vec<u64> = self.tracked.keys().copied().collect();
@@ -249,30 +314,44 @@ impl<'m> SupervisedEngine<'m> {
             );
             self.dead = true;
             for id in ids {
-                events.push(failed_event(id));
+                let prec = self.effective_prec(id);
+                events.push(failed_event(id, prec));
             }
             self.tracked.clear();
             return events;
         }
         for id in ids {
-            let active = was_active.contains(&id);
-            if active && self.cfg.restart_policy == RestartPolicy::FailFast {
+            let active = was_active.iter().find(|(lid, _)| *lid == id).copied();
+            if active.is_some() && self.cfg.restart_policy == RestartPolicy::FailFast {
+                let prec = self.effective_prec(id);
                 self.tracked.remove(&id);
-                events.push(failed_event(id));
+                events.push(failed_event(id, prec));
                 continue;
             }
             // Queued requests (no output yet) are requeued under either
             // policy; active ones only under Requeue, with their already
-            // streamed prefix marked for replay suppression.
+            // streamed prefix marked for replay suppression — pinned to
+            // the precision they were serving at, so the replay is
+            // bit-identical even after a pressure downshift.
             let t = self.tracked.get_mut(&id).expect("tracked id");
-            t.replay_skip = if active { t.streamed } else { 0 };
+            t.replay_skip = if active.is_some() { t.streamed } else { 0 };
             t.streamed = 0;
-            let opts = SubmitOpts { deadline: t.deadline, id: Some(id), ..SubmitOpts::default() };
+            let precision = match active {
+                Some((_, served_prec)) if t.replay_skip > 0 => Some(served_prec),
+                _ => t.precision,
+            };
+            let opts = SubmitOpts {
+                deadline: t.deadline,
+                id: Some(id),
+                precision,
+                ..SubmitOpts::default()
+            };
             let (prompt, gen) = (t.prompt.clone(), t.gen_tokens);
             if let Err(e) = self.sched.submit_opts(&prompt, gen, opts) {
                 crate::log_warn!("supervisor", "requeue of request {id} failed: {e}");
+                let prec = self.effective_prec(id);
                 self.tracked.remove(&id);
-                events.push(failed_event(id));
+                events.push(failed_event(id, prec));
             }
         }
         events
@@ -335,9 +414,35 @@ impl<'m> SupervisedEngine<'m> {
         self.sched.kv_request_cost_bytes(total_pos)
     }
 
-    /// [`Scheduler::kv_submit_refused`] with the prefix-cache discount.
-    pub fn kv_submit_refused_for(&self, prompt: &[u32], gen_tokens: usize) -> bool {
-        self.sched.kv_submit_refused_for(prompt, gen_tokens)
+    /// [`Scheduler::kv_submit_refused`] with the prefix-cache discount
+    /// (read from the cache of the precision the request would decode at).
+    pub fn kv_submit_refused_for(
+        &self,
+        prompt: &[u32],
+        gen_tokens: usize,
+        precision: Option<u8>,
+    ) -> bool {
+        self.sched.kv_submit_refused_for(prompt, gen_tokens, precision)
+    }
+
+    /// Bank labels served by this engine, ascending.
+    pub fn precisions(&self) -> Vec<u8> {
+        self.sched.precisions()
+    }
+
+    /// The bank label unspecified requests decode at.
+    pub fn default_precision(&self) -> u8 {
+        self.default_prec
+    }
+
+    /// The downshift target (0 = rung disabled).
+    pub fn floor_precision(&self) -> u8 {
+        self.floor_prec
+    }
+
+    /// Admissions downshifted to the floor precision so far.
+    pub fn precision_downshifts(&self) -> u64 {
+        self.sched.precision_downshifts()
     }
 
     /// Admissions that mapped at least one cached prefix chunk so far.
@@ -379,13 +484,14 @@ impl<'m> SupervisedEngine<'m> {
     }
 }
 
-fn failed_event(id: u64) -> FinishedRequest {
+fn failed_event(id: u64, precision: u8) -> FinishedRequest {
     FinishedRequest {
         id,
         tokens: Vec::new(),
         metrics: RequestMetrics::empty(),
         finish: FinishReason::Failed,
         degraded: false,
+        precision,
     }
 }
 
@@ -648,6 +754,43 @@ mod tests {
             streamed[&b], want_b,
             "replay suppression must hand out each of B's tokens exactly once"
         );
+    }
+
+    #[test]
+    fn bank_engine_routes_precisions_and_survives_restart() {
+        // Two different models under bank labels 2 and 4 (weights differ,
+        // so streams prove which model served a lane). An unattributable
+        // two-lane panic forces a restart; the Requeue policy must rebuild
+        // the bank scheduler and replay each lane through the SAME bank
+        // model it was serving at, every token seen exactly once.
+        let (cfg, _) = preset("tiny");
+        let m4 = NativeModel::from_params(&ParamStore::init(&cfg, &mut Rng::new(0)));
+        let m2 = NativeModel::from_params(&ParamStore::init(&cfg, &mut Rng::new(1)));
+        let scfg = ServeConfig {
+            max_batch: 2,
+            max_queued: 8,
+            restart_policy: RestartPolicy::Requeue,
+            ..ServeConfig::default()
+        };
+        let mut eng = SupervisedEngine::with_bank(vec![(2, &m2), (4, &m4)], scfg, 4, 2);
+        assert_eq!(eng.precisions(), vec![2, 4]);
+        assert_eq!((eng.default_precision(), eng.floor_precision()), (4, 2));
+        let a = eng.submit(&[1, 2], 6, None).unwrap();
+        let b = eng.submit_prec(&[1, 2], 6, None, Some(2)).unwrap();
+        fault::arm(fault::STEP_PANIC, 2);
+        let (done, streamed) = drain(&mut eng);
+        fault::disarm_all();
+        assert_eq!(eng.restarts(), 1, "two-lane panic is unattributable");
+        assert_eq!(eng.precision_downshifts(), 0, "no pressure, no downshift");
+        let fa = done.iter().find(|f| f.id == a).unwrap();
+        let fb = done.iter().find(|f| f.id == b).unwrap();
+        assert_eq!((fa.precision, fb.precision), (4, 2));
+        assert_eq!(fa.finish, FinishReason::Length);
+        assert_eq!(fb.finish, FinishReason::Length);
+        assert_eq!(fa.tokens, reference(&m4, &[1, 2], 6), "default lane replays on label 4");
+        assert_eq!(fb.tokens, reference(&m2, &[1, 2], 6), "pinned lane replays on label 2");
+        assert_eq!(streamed[&a], fa.tokens, "replay suppression on the restarted bank");
+        assert_eq!(streamed[&b], fb.tokens);
     }
 
     #[test]

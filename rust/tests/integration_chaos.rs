@@ -24,7 +24,7 @@ use std::time::{Duration, Instant};
 
 use guidedquant::cfg::{preset, RestartPolicy, ServeConfig};
 use guidedquant::model::{NativeModel, ParamStore};
-use guidedquant::serve::{build_serving_model, generate_scheduled, HttpServer, ServeFormat};
+use guidedquant::serve::{build_serving_set, generate_scheduled, HttpServer, ModelSet, ServeFormat};
 use guidedquant::util::fault;
 use guidedquant::util::json::Json;
 use guidedquant::util::Rng;
@@ -50,13 +50,13 @@ fn scenario() -> FaultScope<'static> {
     FaultScope(g)
 }
 
-fn model() -> Arc<NativeModel> {
+fn model() -> Arc<ModelSet> {
     let (cfg, _) = preset("tiny");
     let ps = ParamStore::init(&cfg, &mut Rng::new(0));
-    Arc::new(build_serving_model(&ps, None, ServeFormat::Fp32, 4).unwrap())
+    Arc::new(build_serving_set(&ps, None, ServeFormat::Fp32, 4).unwrap())
 }
 
-fn serve(cfg: ServeConfig) -> (Arc<NativeModel>, HttpServer) {
+fn serve(cfg: ServeConfig) -> (Arc<ModelSet>, HttpServer) {
     let m = model();
     let server = HttpServer::bind(m.clone(), cfg, "127.0.0.1:0").unwrap();
     (m, server)
@@ -235,7 +235,7 @@ fn step_panic_on_a_single_lane_returns_500_and_recovers() {
         },
         "failed counter + kv release",
     );
-    assert_serves_bit_identically(addr, &m);
+    assert_serves_bit_identically(addr, m.native_model());
     server.shutdown();
 }
 
@@ -256,7 +256,7 @@ fn nan_logits_poison_one_request_not_the_engine() {
         },
         "poisoned lane failure",
     );
-    assert_serves_bit_identically(addr, &m);
+    assert_serves_bit_identically(addr, m.native_model());
     server.shutdown();
 }
 
@@ -295,7 +295,7 @@ fn multi_lane_panic_with_requeue_restarts_and_streams_exactly_once() {
         assert_eq!(events.last().unwrap(), "[DONE]", "requeued stream must still terminate");
         assert_eq!(
             streamed_tokens(&resp.body),
-            reference_tokens(&m, p, gen),
+            reference_tokens(m.native_model(), p, gen),
             "replay suppression must hand out each token exactly once, bit-identically"
         );
     }
@@ -303,7 +303,7 @@ fn multi_lane_panic_with_requeue_restarts_and_streams_exactly_once() {
     assert_eq!(h.get("status").unwrap().as_str(), Some("ok"), "restart is not death");
     assert!(h.get("engine_restarts").unwrap().as_u64().unwrap() >= 1);
     wait_for_metrics(addr, |mx| mx.get("kv_bytes").unwrap().as_u64() == Some(0), "kv drained");
-    assert_serves_bit_identically(addr, &m);
+    assert_serves_bit_identically(addr, m.native_model());
     server.shutdown();
 }
 
@@ -374,8 +374,8 @@ fn engine_stall_delays_but_never_corrupts_output() {
     let prompt = [5u32, 1, 2];
     let resp = post(addr, "/v1/completions", &completion_body(&prompt, 6, false));
     assert_eq!(resp.status, 200, "{}", resp.body);
-    assert_eq!(response_tokens(&resp.body), reference_tokens(&m, &prompt, 6));
-    assert_serves_bit_identically(addr, &m);
+    assert_eq!(response_tokens(&resp.body), reference_tokens(m.native_model(), &prompt, 6));
+    assert_serves_bit_identically(addr, m.native_model());
     server.shutdown();
 }
 
@@ -392,7 +392,7 @@ fn slow_socket_writes_do_not_corrupt_streams() {
     let resp = post(addr, "/v1/completions", &completion_body(&prompt, 6, true));
     assert_eq!(resp.status, 200, "{}", resp.body);
     assert_eq!(sse_events(&resp.body).last().unwrap(), "[DONE]");
-    assert_eq!(streamed_tokens(&resp.body), reference_tokens(&m, &prompt, 6));
+    assert_eq!(streamed_tokens(&resp.body), reference_tokens(m.native_model(), &prompt, 6));
     server.shutdown();
 }
 
@@ -404,7 +404,7 @@ fn kv_budget_flood_never_exceeds_budget_and_every_request_resolves() {
     // combined page growth can brush the budget exactly (preemption
     // territory), and the queue absorbs or sheds the rest.
     let budget = {
-        let probe = guidedquant::serve::Scheduler::new(&m, ServeConfig::default());
+        let probe = guidedquant::serve::Scheduler::new(m.native_model(), ServeConfig::default());
         probe.kv_request_cost_bytes(48 + 32) * 2
     };
     let cfg = ServeConfig {
@@ -416,7 +416,7 @@ fn kv_budget_flood_never_exceeds_budget_and_every_request_resolves() {
     let server = HttpServer::bind(m.clone(), cfg, "127.0.0.1:0").unwrap();
     let addr = server.local_addr();
 
-    let vocab = m.cfg.vocab as u32;
+    let vocab = m.native_model().cfg.vocab as u32;
     let handles: Vec<_> = (0..6)
         .map(|i| {
             let prompt: Vec<u32> =
@@ -450,7 +450,7 @@ fn kv_budget_flood_never_exceeds_budget_and_every_request_resolves() {
             200 => {
                 assert_eq!(
                     response_tokens(&resp.body),
-                    reference_tokens(&m, &prompt, 32),
+                    reference_tokens(m.native_model(), &prompt, 32),
                     "flooded request diverged from the unloaded reference"
                 );
                 served += 1;
@@ -462,7 +462,7 @@ fn kv_budget_flood_never_exceeds_budget_and_every_request_resolves() {
     assert!(served >= 1, "the flood must not shed everything");
     let mx = Json::parse(&get(addr, "/metrics").body).unwrap();
     assert!(mx.get("kv_allocated_bytes").unwrap().as_u64().unwrap() <= budget as u64);
-    assert_serves_bit_identically(addr, &m);
+    assert_serves_bit_identically(addr, m.native_model());
     server.shutdown();
 }
 
@@ -474,7 +474,7 @@ fn brownout_clamps_tokens_and_flags_degraded_over_http() {
     // (cost just under the high watermark) and its page growth alone
     // crosses the low watermark mid-decode — brownout territory.
     let budget = {
-        let probe = guidedquant::serve::Scheduler::new(&m, ServeConfig::default());
+        let probe = guidedquant::serve::Scheduler::new(m.native_model(), ServeConfig::default());
         (probe.kv_request_cost_bytes(2 + 600) as f64 / 0.89) as usize
     };
     let cfg = ServeConfig {
@@ -511,7 +511,7 @@ fn brownout_clamps_tokens_and_flags_degraded_over_http() {
     assert_eq!(doc.get("n_tokens").unwrap().as_u64(), Some(32));
     assert_eq!(
         response_tokens(&resp.body),
-        reference_tokens(&m, &p_short, 32),
+        reference_tokens(m.native_model(), &p_short, 32),
         "browned-out output must be bit-identical up to the clamp"
     );
 
@@ -519,13 +519,13 @@ fn brownout_clamps_tokens_and_flags_degraded_over_http() {
     assert_eq!(long_resp.status, 200, "{}", long_resp.body);
     let long_doc = Json::parse(&long_resp.body).unwrap();
     assert_eq!(long_doc.get("degraded").unwrap().as_bool(), Some(false));
-    assert_eq!(response_tokens(&long_resp.body), reference_tokens(&m, &p_long, 600));
+    assert_eq!(response_tokens(&long_resp.body), reference_tokens(m.native_model(), &p_long, 600));
     wait_for_metrics(
         addr,
         |mx| mx.get("brownouts").unwrap().as_u64() == Some(1),
         "brownout counter",
     );
-    assert_serves_bit_identically(addr, &m);
+    assert_serves_bit_identically(addr, m.native_model());
     server.shutdown();
 }
 
@@ -544,7 +544,7 @@ fn kv_exhaust_fault_sheds_once_with_computed_retry_after() {
     assert_sane_retry_after(&resp);
     wait_for_metrics(addr, |mx| mx.get("rejected").unwrap().as_u64() == Some(1), "shed counted");
     assert_eq!(get(addr, "/healthz").status, 200);
-    assert_serves_bit_identically(addr, &m);
+    assert_serves_bit_identically(addr, m.native_model());
     server.shutdown();
 }
 
@@ -567,7 +567,7 @@ fn slow_read_stalls_one_connection_not_the_server() {
     let resp = slow.join().unwrap();
     assert!(t0.elapsed() >= Duration::from_millis(900), "stall site never fired");
     assert_eq!(resp.status, 200, "{}", resp.body);
-    assert_eq!(response_tokens(&resp.body), reference_tokens(&m, &prompt, 6));
+    assert_eq!(response_tokens(&resp.body), reference_tokens(m.native_model(), &prompt, 6));
     server.shutdown();
 }
 
@@ -579,7 +579,7 @@ fn prefix_evict_mid_decode_keeps_borrowers_bit_identical() {
 
     // Warm the cache: a 130-token prompt donates two page-aligned chunks
     // into the prefix index when it finishes.
-    let vocab = m.cfg.vocab as u32;
+    let vocab = m.native_model().cfg.vocab as u32;
     let prompt: Vec<u32> = (0..130).map(|i| ((i * 13 + 7) as u32) % vocab).collect();
     let warm = post(addr, "/v1/completions", &completion_body(&prompt, 4, false));
     assert_eq!(warm.status, 200, "{}", warm.body);
@@ -599,14 +599,14 @@ fn prefix_evict_mid_decode_keeps_borrowers_bit_identical() {
     assert_eq!(resp.status, 200, "{}", resp.body);
     assert_eq!(
         response_tokens(&resp.body),
-        reference_tokens(&m, &prompt, 8),
+        reference_tokens(m.native_model(), &prompt, 8),
         "forced eviction corrupted a borrowing lane"
     );
     let mx = Json::parse(&get(addr, "/metrics").body).unwrap();
     assert!(mx.get("prefix_hits").unwrap().as_u64().unwrap() >= 1, "share must have hit");
     assert!(mx.get("prefill_tokens_saved").unwrap().as_u64().unwrap() >= 128);
     assert_eq!(get(addr, "/healthz").status, 200);
-    assert_serves_bit_identically(addr, &m);
+    assert_serves_bit_identically(addr, m.native_model());
     server.shutdown();
 }
 
@@ -657,8 +657,8 @@ fn predicted_deadline_shedding_rejects_doomed_requests_up_front() {
     for (h, p) in [(a, &p_a), (b, &p_b)] {
         let resp = h.join().unwrap();
         assert_eq!(resp.status, 200, "{}", resp.body);
-        assert_eq!(response_tokens(&resp.body), reference_tokens(&m, p, 600));
+        assert_eq!(response_tokens(&resp.body), reference_tokens(m.native_model(), p, 600));
     }
-    assert_serves_bit_identically(addr, &m);
+    assert_serves_bit_identically(addr, m.native_model());
     server.shutdown();
 }

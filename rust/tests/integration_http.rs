@@ -11,17 +11,19 @@ use std::time::{Duration, Instant};
 
 use guidedquant::cfg::{preset, ServeConfig};
 use guidedquant::model::{NativeModel, ParamStore};
-use guidedquant::serve::{build_serving_model, generate_scheduled, HttpServer, ServeFormat};
+use guidedquant::serve::{
+    build_serving_set, generate_scheduled, HttpServer, ModelSet, ServeFormat,
+};
 use guidedquant::util::json::Json;
 use guidedquant::util::Rng;
 
-fn model(format: ServeFormat) -> Arc<NativeModel> {
+fn model(format: ServeFormat) -> Arc<ModelSet> {
     let (cfg, _) = preset("tiny");
     let ps = ParamStore::init(&cfg, &mut Rng::new(0));
-    Arc::new(build_serving_model(&ps, None, format, 4).unwrap())
+    Arc::new(build_serving_set(&ps, None, format, 4).unwrap())
 }
 
-fn serve(format: ServeFormat, cfg: ServeConfig) -> (Arc<NativeModel>, HttpServer) {
+fn serve(format: ServeFormat, cfg: ServeConfig) -> (Arc<ModelSet>, HttpServer) {
     let m = model(format);
     let server = HttpServer::bind(m.clone(), cfg, "127.0.0.1:0").unwrap();
     (m, server)
@@ -163,6 +165,8 @@ fn healthz_metrics_and_routing() {
         "timed_out",
         "failed",
         "engine_restarts",
+        "precision_downshifts",
+        "completed_by_precision",
     ];
     for key in gauges {
         assert!(m.get(key).is_some(), "metrics missing `{key}`: {}", m.encode());
@@ -240,7 +244,7 @@ fn client_disconnect_cancels_the_lane_and_frees_kv() {
     let prompt = [5u32, 6, 7];
     let resp = post(addr, "/v1/completions", &completion_body(&prompt, 5, false));
     assert_eq!(resp.status, 200, "{}", resp.body);
-    assert_eq!(response_tokens(&resp.body), reference_tokens(&m, &prompt, 5));
+    assert_eq!(response_tokens(&resp.body), reference_tokens(m.native_model(), &prompt, 5));
     server.shutdown();
 }
 
@@ -249,7 +253,7 @@ fn blocking_completion_is_bit_identical_to_generate_scheduled() {
     let (m, server) = serve(ServeFormat::NonUniformScalar, ServeConfig::default());
     let addr = server.local_addr();
     let prompt = [3u32, 17, 99, 5];
-    let want = reference_tokens(&m, &prompt, 6);
+    let want = reference_tokens(m.native_model(), &prompt, 6);
 
     let resp = post(addr, "/v1/completions", &completion_body(&prompt, 6, false));
     assert_eq!(resp.status, 200, "{}", resp.body);
@@ -267,7 +271,7 @@ fn streamed_completion_matches_blocking_and_terminates() {
     let (m, server) = serve(ServeFormat::NonUniformScalar, ServeConfig::default());
     let addr = server.local_addr();
     let prompt = [1u32, 2, 3, 4];
-    let want = reference_tokens(&m, &prompt, 8);
+    let want = reference_tokens(m.native_model(), &prompt, 8);
 
     let resp = post(addr, "/v1/completions", &completion_body(&prompt, 8, true));
     assert_eq!(resp.status, 200);
@@ -304,7 +308,7 @@ fn concurrent_clients_are_all_served_bit_identically() {
     let addr = server.local_addr();
     let mut rng = Rng::new(11);
     let prompts: Vec<Vec<u32>> = (0..4)
-        .map(|i| (0..(2 + i % 3)).map(|_| rng.below(m.cfg.vocab) as u32).collect())
+        .map(|i| (0..(2 + i % 3)).map(|_| rng.below(m.native_model().cfg.vocab) as u32).collect())
         .collect();
     let handles: Vec<_> = prompts
         .iter()
@@ -319,7 +323,7 @@ fn concurrent_clients_are_all_served_bit_identically() {
         .collect();
     let got: Vec<Vec<u32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
     for (p, tokens) in prompts.iter().zip(&got) {
-        assert_eq!(tokens, &reference_tokens(&m, p, 5), "prompt {p:?}");
+        assert_eq!(tokens, &reference_tokens(m.native_model(), p, 5), "prompt {p:?}");
     }
     server.shutdown();
 }
@@ -387,4 +391,140 @@ fn full_queue_gets_429_and_shutdown_drains_in_flight_lanes() {
     let b = b.join().unwrap();
     assert_eq!(b.status, 200);
     assert_eq!(response_tokens(&b.body).len(), 4, "queued request must drain");
+}
+
+fn precision_body(prompt: &[u32], max_tokens: usize, stream: bool, precision: u8) -> String {
+    let toks: Vec<Json> = prompt.iter().map(|&t| Json::from(t)).collect();
+    Json::object()
+        .with("prompt", toks)
+        .with("max_tokens", max_tokens)
+        .with("stream", stream)
+        .with("precision", precision as u32)
+        .encode()
+}
+
+#[test]
+fn v1_capabilities_reports_format_and_precisions() {
+    let (_m, server) = serve(ServeFormat::AnyPrecision, ServeConfig::default());
+    let addr = server.local_addr();
+    let c = get(addr, "/v1/capabilities");
+    assert_eq!(c.status, 200, "{}", c.body);
+    let c = Json::parse(&c.body).unwrap();
+    assert_eq!(c.get("api").unwrap().as_str(), Some("v1"));
+    assert_eq!(c.get("format").unwrap().as_str(), Some("anyprec"));
+    let precs: Vec<u64> = c
+        .get("precisions")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|p| p.as_u64().unwrap())
+        .collect();
+    assert_eq!(precs, vec![2, 3, 4], "one anyprec artifact serves every plane prefix");
+    assert_eq!(c.get("default_precision").unwrap().as_u64(), Some(4), "0 resolves to native");
+    assert_eq!(c.get("precision_floor").unwrap().as_u64(), Some(0), "downshift rung off");
+    assert_eq!(c.get("kv_dtype").unwrap().as_str(), Some("f32"));
+    assert_eq!(c.get("prefix_cache").unwrap().as_bool(), Some(true));
+    assert_eq!(c.get("kv_budget_bytes").unwrap().as_u64(), Some(0));
+    assert!(c.get("max_batch").unwrap().as_u64().unwrap() >= 1);
+    assert!(c.get("max_gen_tokens").unwrap().as_u64().unwrap() >= 1);
+    assert_eq!(post(addr, "/v1/capabilities", "{}").status, 405);
+    server.shutdown();
+}
+
+#[test]
+fn per_request_precision_is_honored_and_reported() {
+    let (m, server) = serve(ServeFormat::AnyPrecision, ServeConfig::default());
+    let addr = server.local_addr();
+    let prompt = [3u32, 17, 9];
+    // References decode through the per-precision views directly: the
+    // serving contract is bit-identity to the model the label names.
+    let want4 = reference_tokens(m.get(4).unwrap(), &prompt, 6);
+    let want2 = reference_tokens(m.get(2).unwrap(), &prompt, 6);
+
+    // No "precision" field: the server default (native 4-bit).
+    let resp = post(addr, "/v1/completions", &completion_body(&prompt, 6, false));
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let doc = Json::parse(&resp.body).unwrap();
+    assert_eq!(doc.get("precision").unwrap().as_u64(), Some(4));
+    assert_eq!(response_tokens(&resp.body), want4);
+
+    // Explicit 2-bit: the coarse plane-prefix view of the same artifact.
+    let resp = post(addr, "/v1/completions", &precision_body(&prompt, 6, false, 2));
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let doc = Json::parse(&resp.body).unwrap();
+    assert_eq!(doc.get("precision").unwrap().as_u64(), Some(2));
+    assert_eq!(response_tokens(&resp.body), want2, "2-bit request served by the wrong view");
+
+    // Streamed 2-bit: the done event reports the effective precision and
+    // the streamed tokens match the blocking path.
+    let resp = post(addr, "/v1/completions", &precision_body(&prompt, 6, true, 2));
+    assert_eq!(resp.status, 200);
+    let events = sse_events(&resp.body);
+    let done = Json::parse(&events[events.len() - 2]).unwrap();
+    assert_eq!(done.get("precision").unwrap().as_u64(), Some(2));
+    let streamed: Vec<u32> = events[..events.len() - 2]
+        .iter()
+        .map(|e| Json::parse(e).unwrap().get("token").unwrap().as_u64().unwrap() as u32)
+        .collect();
+    assert_eq!(streamed, want2);
+
+    // An unsupported precision is a client error listing the bank.
+    let resp = post(addr, "/v1/completions", &precision_body(&prompt, 6, false, 7));
+    assert_eq!(resp.status, 400, "{}", resp.body);
+    let err = Json::parse(&resp.body).unwrap();
+    let err = err.get("error").unwrap();
+    assert_eq!(err.get("type").unwrap().as_str(), Some("invalid_request"));
+    assert!(err.get("message").unwrap().as_str().unwrap().contains('2'), "{}", resp.body);
+
+    // Per-precision completion counters add up; nothing was downshifted.
+    wait_for_metrics(addr, |mx| mx.get("completed").unwrap().as_u64() == Some(3), "completions");
+    let mx = Json::parse(&get(addr, "/metrics").body).unwrap();
+    let by = mx.get("completed_by_precision").unwrap();
+    assert_eq!(by.get("4").unwrap().as_u64(), Some(1), "{}", mx.encode());
+    assert_eq!(by.get("2").unwrap().as_u64(), Some(2), "{}", mx.encode());
+    assert_eq!(mx.get("precision_downshifts").unwrap().as_u64(), Some(0));
+    server.shutdown();
+}
+
+#[test]
+fn error_envelope_v1_and_legacy_accept_fallback() {
+    let (_m, server) = serve(ServeFormat::Fp32, ServeConfig::default());
+    let addr = server.local_addr();
+
+    // v1 default: every error status carries the structured envelope.
+    let resp = post(addr, "/v1/completions", "{oops");
+    assert_eq!(resp.status, 400);
+    let err = Json::parse(&resp.body).unwrap();
+    let err = err.get("error").unwrap();
+    assert_eq!(err.get("type").unwrap().as_str(), Some("invalid_request"), "{}", resp.body);
+    assert!(err.get("message").unwrap().as_str().is_some());
+    assert_eq!(err.get("retry_after_s").unwrap().as_u64(), Some(0));
+
+    let nf = Json::parse(&get(addr, "/nope").body).unwrap();
+    assert_eq!(nf.get("error").unwrap().get("type").unwrap().as_str(), Some("not_found"));
+    let mna = Json::parse(&get(addr, "/v1/completions").body).unwrap();
+    assert_eq!(
+        mna.get("error").unwrap().get("type").unwrap().as_str(),
+        Some("method_not_allowed")
+    );
+
+    // Pre-v1 clients opt back into the plain-string body per request.
+    let body = "{oops";
+    let resp = request(
+        addr,
+        &format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: t\r\nAccept: application/vnd.gq.v0+json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        ),
+    );
+    assert_eq!(resp.status, 400);
+    let doc = Json::parse(&resp.body).unwrap();
+    assert!(
+        doc.get("error").unwrap().as_str().is_some(),
+        "legacy body must be a plain string: {}",
+        resp.body
+    );
+    server.shutdown();
 }

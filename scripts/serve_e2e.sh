@@ -19,7 +19,13 @@
 #     a burst of same-prompt requests must answer token-for-token identical
 #     with /metrics showing prefix_hits > 0 and prefill_tokens_saved > 0,
 #     and a fourth server booted with --prefix-cache off must return the
-#     same tokens (cache on/off bit-identity) with both gauges at 0.
+#     same tokens (cache on/off bit-identity) with both gauges at 0,
+#   * a mixed-precision burst against one --format anyprec server:
+#     /v1/capabilities advertises precisions [2,3,4], per-request
+#     "precision" is honored (responses echo the effective precision,
+#     repeat requests at each precision are deterministic), an unsupported
+#     precision answers a 400 with the structured v1 error envelope, and
+#     /metrics' completed_by_precision counters sum to completed.
 #
 # All intermediate files land in ./serve-e2e/ so CI can upload them as an
 # artifact when a step fails. Usage: scripts/serve_e2e.sh [path-to-gq]
@@ -224,5 +230,101 @@ curl -fsS "$BASEOFF/metrics" >"$DIR/metrics_prefix_off.json"
 jq -e '.prefix_hits == 0 and .prefill_tokens_saved == 0 and .prefix_cached_pages == 0' \
     "$DIR/metrics_prefix_off.json" >/dev/null \
     || { LOG="$LOGOFF"; fail "off-server prefix gauges nonzero: $(cat "$DIR/metrics_prefix_off.json")"; }
+
+# --- mixed-precision burst: one anyprec artifact serves 2/3/4-bit -----------
+# One server, one bit-plane weight artifact; every request picks its own
+# decode precision. Repeat requests at the same precision must be
+# deterministic (greedy), the response must echo the effective precision,
+# and the per-precision completion counters must add up to the total.
+LOGAP="$DIR/server_anyprec.log"
+boot_server_fmt() { # <logfile> <format> <extra args...>; sets BOOT_ADDR/BOOTED_PID
+    local log=$1 fmt=$2
+    shift 2
+    "$GQ" serve --model tiny --format "$fmt" --bits 4 \
+        --http 127.0.0.1:0 --max-batch 4 --max-queued 8 "$@" >"$log" 2>&1 &
+    BOOTED_PID=$!
+    BOOT_ADDR=
+    for _ in $(seq 1 240); do
+        BOOT_ADDR=$(sed -n 's/^http: listening on //p' "$log" | head -n 1)
+        [ -n "$BOOT_ADDR" ] && break
+        kill -0 "$BOOTED_PID" 2>/dev/null \
+            || { LOG="$log"; fail "server ($log) exited during startup"; }
+        sleep 0.25
+    done
+    [ -n "$BOOT_ADDR" ] || { LOG="$log"; fail "server ($log) never reported an address"; }
+}
+boot_server_fmt "$LOGAP" anyprec
+SERVERAP=$BOOTED_PID
+BASEAP="http://$BOOT_ADDR"
+trap 'kill "$SERVER" "$SERVER16" "$SERVERPC" "$SERVEROFF" "$SERVERAP" 2>/dev/null || true
+      wait 2>/dev/null || true' EXIT
+echo "anyprec server up at $BASEAP"
+
+curl -fsS "$BASEAP/v1/capabilities" >"$DIR/capabilities.json"
+jq -e '.api == "v1" and .format == "anyprec"
+       and .precisions == [2, 3, 4] and .default_precision == 4' \
+    "$DIR/capabilities.json" >/dev/null \
+    || { LOG="$LOGAP"; fail "capabilities wrong: $(cat "$DIR/capabilities.json")"; }
+
+PIDS=()
+for prec in 2 3 4; do
+    for rep in 1 2; do
+        curl -fsS -X POST "$BASEAP/v1/completions" \
+            -d "{\"prompt\": [1, 2, 3, 4], \"max_tokens\": 8, \"precision\": $prec}" \
+            >"$DIR/anyprec_p${prec}_$rep.json" &
+        PIDS+=("$!")
+    done
+done
+curl -fsS -X POST "$BASEAP/v1/completions" \
+    -d '{"prompt": [1, 2, 3, 4], "max_tokens": 8}' >"$DIR/anyprec_default.json" &
+PIDS+=("$!")
+for p in "${PIDS[@]}"; do
+    wait "$p" || { LOG="$LOGAP"; fail "mixed-precision burst request failed"; }
+done
+for prec in 2 3 4; do
+    jq -e ".precision == $prec and (.tokens | length == 8)" \
+        "$DIR/anyprec_p${prec}_1.json" >/dev/null \
+        || { LOG="$LOGAP"; fail "precision $prec response wrong: $(cat "$DIR/anyprec_p${prec}_1.json")"; }
+    T1=$(jq -r '.tokens | map(tostring) | join(",")' "$DIR/anyprec_p${prec}_1.json")
+    T2=$(jq -r '.tokens | map(tostring) | join(",")' "$DIR/anyprec_p${prec}_2.json")
+    [ "$T1" = "$T2" ] \
+        || { LOG="$LOGAP"; fail "precision $prec nondeterministic: [$T1] vs [$T2]"; }
+done
+# The default request runs at the native 4-bit precision — bit-identical to
+# an explicit precision=4 request and to the nonuniform LUT server's output.
+TDEF=$(jq -r '.tokens | map(tostring) | join(",")' "$DIR/anyprec_default.json")
+T4=$(jq -r '.tokens | map(tostring) | join(",")' "$DIR/anyprec_p4_1.json")
+jq -e '.precision == 4' "$DIR/anyprec_default.json" >/dev/null \
+    || { LOG="$LOGAP"; fail "default request did not run at native precision: $(cat "$DIR/anyprec_default.json")"; }
+[ "$TDEF" = "$T4" ] \
+    || { LOG="$LOGAP"; fail "default tokens [$TDEF] differ from explicit 4-bit [$T4]"; }
+[ "$T4" = "$BLOCKING" ] \
+    || { LOG="$LOGAP"; fail "anyprec 4-bit tokens [$T4] differ from lut server [$BLOCKING]"; }
+
+# Unsupported precision: a 400 with the structured v1 envelope, and the
+# legacy plain-string body behind the Accept fallback.
+CODE=$(curl -s -o "$DIR/anyprec_bad.json" -w '%{http_code}' -X POST "$BASEAP/v1/completions" \
+    -d '{"prompt": [1, 2], "max_tokens": 4, "precision": 7}')
+[ "$CODE" = 400 ] || { LOG="$LOGAP"; fail "unsupported precision returned $CODE, want 400"; }
+jq -e '.error.type == "invalid_request" and (.error.message | test("7"))
+       and .error.retry_after_s == 0' "$DIR/anyprec_bad.json" >/dev/null \
+    || { LOG="$LOGAP"; fail "400 body is not the v1 envelope: $(cat "$DIR/anyprec_bad.json")"; }
+curl -s -o "$DIR/anyprec_bad_v0.json" -H 'Accept: application/vnd.gq.v0+json' \
+    -X POST "$BASEAP/v1/completions" \
+    -d '{"prompt": [1, 2], "max_tokens": 4, "precision": 7}'
+jq -e '.error | type == "string"' "$DIR/anyprec_bad_v0.json" >/dev/null \
+    || { LOG="$LOGAP"; fail "legacy Accept did not get a plain-string error: $(cat "$DIR/anyprec_bad_v0.json")"; }
+
+# Per-precision completion counters add up to the total.
+curl -fsS "$BASEAP/metrics" >"$DIR/metrics_anyprec.json"
+jq -e '.completed == 7
+       and .completed_by_precision["2"] == 2
+       and .completed_by_precision["3"] == 2
+       and .completed_by_precision["4"] == 3
+       and ([.completed_by_precision[]] | add) == .completed
+       and .precision_downshifts == 0' \
+    "$DIR/metrics_anyprec.json" >/dev/null \
+    || { LOG="$LOGAP"; fail "anyprec metrics wrong: $(cat "$DIR/metrics_anyprec.json")"; }
+echo "mixed-precision burst: $(jq -c '.completed_by_precision' "$DIR/metrics_anyprec.json") of $(jq -r .completed "$DIR/metrics_anyprec.json") completions"
 
 echo "serve-e2e OK"
